@@ -1,0 +1,81 @@
+//! Code-RL scenario (paper §5.2 analog): DeepCoder-style training where the
+//! reward is the unit-test pass fraction of generated token-programs,
+//! executed on the stack VM — run at paper-shaped scale on the simulated
+//! policy with the calibrated virtual clock.
+//!
+//! Compares the VeRL-baseline, DAS, and DAS-with-unlimited-budget (the
+//! Fig. 12 ablation) in one run.
+//!
+//! Run: `cargo run --release --example code_rl [-- steps]`
+
+use das::config::preset;
+use das::model::sim::{SimModel, SimModelConfig};
+use das::rl::Trainer;
+use das::telemetry::Table;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let variants: [(&str, &str, &str); 3] = [
+        ("baseline", "none", "length_aware"),
+        ("das", "das", "length_aware"),
+        ("das_unlimited", "das", "unlimited"),
+    ];
+    let mut table = Table::new(
+        "code_rl_e2e",
+        &["step", "variant", "reward", "gen_time_s", "accept_rate"],
+    );
+    let mut summary = Vec::new();
+    for (name, drafter, policy) in variants {
+        let mut cfg = preset("code_rl").unwrap();
+        cfg.spec.drafter = drafter.into();
+        cfg.spec.budget_policy = policy.into();
+        cfg.workload.n_problems = 16;
+        cfg.workload.len_mu = 4.6; // visible reward dynamics within a short demo
+        cfg.rollout.max_new_tokens = 768;
+        println!("\n=== {name} ===");
+        let mut model = SimModel::new(SimModelConfig::from_das(&cfg));
+        let mut trainer = Trainer::new(cfg);
+        let mut total = 0.0;
+        let mut last_reward = 0.0;
+        for step in 0..steps {
+            let s = trainer.step_sim(&mut model, step as u32);
+            total += s.metrics.gen_time;
+            last_reward = s.reward;
+            if step % 4 == 0 || step + 1 == steps {
+                println!(
+                    "step {:>3}  unit-test reward {:.3}  gen {:.3}s  accept {:.0}%",
+                    step,
+                    s.reward,
+                    s.metrics.gen_time,
+                    100.0 * s.metrics.accept_rate()
+                );
+            }
+            table.row(vec![
+                step.to_string(),
+                name.to_string(),
+                format!("{:.4}", s.reward),
+                format!("{:.4}", s.metrics.gen_time),
+                format!("{:.3}", s.metrics.accept_rate()),
+            ]);
+        }
+        println!("total rollout time: {total:.2}s (model clock)");
+        summary.push((name, total, last_reward));
+    }
+    let path = table.write_csv(std::path::Path::new("results"))?;
+    println!("\nwrote {}", path.display());
+    let base = summary[0].1;
+    println!("\nSummary ({} steps):", steps);
+    for (name, total, reward) in &summary {
+        println!(
+            "  {name:<14} rollout {total:>7.2}s  ({:+5.1}% vs baseline)  final reward {reward:.3}",
+            100.0 * (total / base - 1.0)
+        );
+    }
+    println!(
+        "(paper: DAS ≈ −25% on code; unlimited budget gives back ~15% of the gain)"
+    );
+    Ok(())
+}

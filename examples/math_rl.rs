@@ -1,0 +1,104 @@
+//! END-TO-END driver (EXPERIMENTS.md §E2E): GRPO-train the REAL
+//! AOT-compiled transformer on a verifiable math task, with rollouts served
+//! by the full DAS stack over PJRT — and compare against the no-speculation
+//! baseline.
+//!
+//! This is the "all layers compose" proof: Pallas kernels (L1) → JAX model
+//! lowered to HLO (L2) → Rust coordinator decoding speculatively and
+//! training through the `train_step` executable (L3). Python is not running
+//! anywhere in this binary.
+//!
+//! Requires: `make artifacts`. Run:
+//! `cargo run --release --example math_rl [-- steps]`
+
+use std::path::Path;
+
+use das::config::preset;
+use das::rl::Trainer;
+use das::runtime::PjrtModel;
+use das::telemetry::Table;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    anyhow::ensure!(
+        Path::new("artifacts/meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let mut table = Table::new(
+        "math_rl_e2e",
+        &[
+            "step", "variant", "reward", "loss", "gen_wall_s", "rounds", "tok_per_pass",
+            "accept_rate",
+        ],
+    );
+    let mut totals = Vec::new();
+    for variant in ["none", "das"] {
+        let mut cfg = preset("tiny_pjrt").unwrap();
+        cfg.spec.drafter = variant.into();
+        cfg.rollout.temperature = 0.9;
+        println!("\n=== variant: {variant} ===");
+        let mut model = PjrtModel::load(Path::new("artifacts"))?;
+        let rep = model.calibrate(3)?;
+        println!(
+            "calibrated: t_fwd = {:.4}s + {:.2}µs/tok (R²={:.3})",
+            rep.model.c_base,
+            rep.model.c_tok * 1e6,
+            rep.r_squared
+        );
+        let mut trainer = Trainer::new(cfg);
+        let mut gen_total = 0.0;
+        let mut reward_curve = Vec::new();
+        for step in 0..steps {
+            let s = trainer.step_pjrt(&mut model, step as u32);
+            gen_total += s.metrics.gen_time;
+            reward_curve.push(s.reward);
+            if step % 5 == 0 || step + 1 == steps {
+                println!(
+                    "step {:>3}  reward {:.3}  loss {:+.4}  gen {:.3}s  \
+                     tok/pass {:.2}  accept {:.0}%",
+                    step,
+                    s.reward,
+                    s.loss,
+                    s.metrics.gen_time,
+                    s.metrics.tokens_per_pass(),
+                    100.0 * s.metrics.accept_rate()
+                );
+            }
+            table.row(vec![
+                step.to_string(),
+                variant.to_string(),
+                format!("{:.4}", s.reward),
+                format!("{:.4}", s.loss),
+                format!("{:.4}", s.metrics.gen_time),
+                s.metrics.rounds.to_string(),
+                format!("{:.3}", s.metrics.tokens_per_pass()),
+                format!("{:.3}", s.metrics.accept_rate()),
+            ]);
+        }
+        let k = (steps / 4).max(1);
+        let late_reward: f64 = reward_curve[steps - k..].iter().sum::<f64>() / k as f64;
+        let early_reward: f64 = reward_curve[..k].iter().sum::<f64>() / k as f64;
+        println!(
+            "total generation wall time: {gen_total:.2}s; reward {early_reward:.3} → {late_reward:.3}"
+        );
+        totals.push((variant, gen_total, early_reward, late_reward));
+    }
+    let path = table.write_csv(Path::new("results"))?;
+    println!("\nwrote {}", path.display());
+    let (_, t_base, _, r_base) = totals[0];
+    let (_, t_das, _, r_das) = totals[1];
+    println!(
+        "\nE2E summary (real PJRT model, {steps} steps):\n\
+         rollout wall time  baseline {t_base:.2}s → DAS {t_das:.2}s  ({:+.0}%)\n\
+         late-training reward  baseline {r_base:.3} vs DAS {r_das:.3}\n\
+         (paper Fig. 10: >50% rollout-time cut at 7B/H100 scale; at this \
+         tiny scale c_base dominates and the achievable cut tracks the \
+         acceptance rate)",
+        100.0 * (t_das / t_base - 1.0),
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the DAS public API in ~60 lines.
+//!
+//! Builds a rollout engine with the adaptive suffix drafter, generates a
+//! few batches of rollouts against the simulated policy, and prints what
+//! speculation is doing. No artifacts required.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use das::config::DasConfig;
+use das::drafter;
+use das::model::sim::{SimModel, SimModelConfig};
+use das::rollout::{GenJob, RolloutEngine};
+
+fn main() {
+    // 1. Configure. Presets mirror the paper's setups; everything is a
+    //    plain struct you can override.
+    let mut cfg = DasConfig::default(); // math_rl preset
+    cfg.workload.n_problems = 8;
+    cfg.rollout.max_new_tokens = 256;
+    cfg.rollout.max_batch = 8;
+    cfg.workload.len_mu = 4.5;
+
+    // 2. A target model. `SimModel` is the calibrated synthetic policy;
+    //    swap in `das::runtime::PjrtModel::load("artifacts")` for the real
+    //    AOT-compiled transformer.
+    let mut model = SimModel::new(SimModelConfig::from_das(&cfg));
+
+    // 3. The engine: continuous batcher + drafter + length-aware budgets +
+    //    lossless verification.
+    let mut engine = RolloutEngine::new(&cfg, drafter::from_config(&cfg));
+
+    let jobs: Vec<GenJob> = (0..8)
+        .map(|p| GenJob {
+            problem: p,
+            prompt: vec![p + 1, 17, 3],
+            samples: 4,
+        })
+        .collect();
+
+    println!("step | gen_time | rounds | tok/pass | accept | drafts");
+    for step in 0..6 {
+        engine.roll_epoch(step); // window maintenance
+        let report = engine.generate_step(&mut model, &jobs, step);
+        let m = &report.metrics;
+        println!(
+            "{:>4} | {:>7.3}s | {:>6} | {:>8.2} | {:>5.1}% | {} proposed / {} accepted",
+            step,
+            m.gen_time,
+            m.rounds,
+            m.tokens_per_pass(),
+            100.0 * m.accept_rate(),
+            m.proposed,
+            m.accepted,
+        );
+        // The policy updates between steps (this is what breaks static
+        // drafters — and what the sliding window absorbs).
+        model.policy_update(1.0);
+    }
+    println!(
+        "\nAfter warmup the drafter retrieves most continuations from recent \
+         rollouts:\ntokens-per-forward-pass climbs well above 1.0 while outputs \
+         remain exactly the target model's (lossless verification)."
+    );
+}

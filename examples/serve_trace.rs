@@ -1,0 +1,70 @@
+//! Rollout-only serving over a trace workload: exercises the continuous
+//! batcher + drafter without any training loop — the shape of a standalone
+//! "rollout worker" process in a disaggregated RL system.
+//!
+//! Prints per-step throughput and the effective-batch trace (the Fig. 1
+//! collapse is visible directly in the output).
+//!
+//! Run: `cargo run --release --example serve_trace`
+
+use das::config::preset;
+use das::drafter;
+use das::model::sim::{SimModel, SimModelConfig};
+use das::model::TargetModel;
+use das::rollout::{GenJob, RolloutEngine};
+use das::util::rng::Rng;
+
+fn sparkline(trace: &[u32]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = trace.iter().copied().max().unwrap_or(1).max(1) as f64;
+    // Downsample to ~60 chars.
+    let stride = (trace.len() / 60).max(1);
+    trace
+        .iter()
+        .step_by(stride)
+        .map(|&v| BARS[((v as f64 / max) * 7.0).round() as usize])
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = preset("trace").unwrap();
+    cfg.rollout.max_batch = 32;
+    cfg.rollout.max_new_tokens = 768;
+    cfg.workload.n_problems = 64;
+    let mut model = SimModel::new(SimModelConfig::from_das(&cfg));
+    let mut engine = RolloutEngine::new(&cfg, drafter::from_config(&cfg));
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+
+    println!("serving trace batches (batch cap {}):", cfg.rollout.max_batch);
+    for step in 0..6u32 {
+        engine.roll_epoch(step);
+        // A trace batch: random subset of problems, 2 samples each.
+        let jobs: Vec<GenJob> = (0..16)
+            .map(|_| {
+                let p = rng.below(cfg.workload.n_problems) as u32;
+                GenJob {
+                    problem: p,
+                    prompt: vec![p % 60, (p / 7) % 60, 11],
+                    samples: 2,
+                }
+            })
+            .collect();
+        let rep = engine.generate_step(&mut model, &jobs, step);
+        let m = &rep.metrics;
+        println!(
+            "step {step}: {:>6} toks in {:>6.2}s model-time ({:>6.0} tok/s) \
+             accept {:>4.1}%  eff-batch {}",
+            m.generated,
+            m.gen_time,
+            m.generated as f64 / m.gen_time.max(1e-9),
+            100.0 * m.accept_rate(),
+            sparkline(&m.eff_batch),
+        );
+        model.policy_update(0.5);
+    }
+    println!(
+        "\nThe sparkline is the Fig. 1 story: full parallelism, then collapse \
+         to a straggler tail. With the DAS drafter warm, the tail shortens."
+    );
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT export: lower the JAX/Pallas model to HLO text for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (default `artifacts/`):
+
+* ``decode.hlo.txt``          — verify pass at max_seq_len
+* ``decode_len{S}.hlo.txt``   — shorter-context variants for the Fig. 8
+                                latency-vs-tokens calibration sweep
+* ``train_step.hlo.txt``      — GRPO SGD step
+* ``params/<name>.bin``       — initial parameters (f32 little-endian)
+* ``meta.json``               — geometry + flattened param inventory
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from `python/`
+(or via ``make artifacts``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    decode_block,
+    grpo_train_step,
+    init_params,
+    param_names,
+    param_shapes,
+)
+
+CALIBRATION_LENS = (32, 64, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: ModelConfig, seq_len: int):
+    def fn(*args):
+        params = list(args[: -2])
+        tokens, q_start = args[-2], args[-1]
+        return (decode_block(params, tokens, q_start, cfg),)
+
+    specs = [
+        jax.ShapeDtypeStruct(param_shapes(cfg)[n], jnp.float32) for n in param_names(cfg)
+    ]
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, seq_len), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_train(cfg: ModelConfig):
+    def fn(*args):
+        params = list(args[: -4])
+        tokens, mask, adv, lr = args[-4], args[-3], args[-2], args[-1]
+        return grpo_train_step(params, tokens, mask, adv, lr, cfg)
+
+    specs = [
+        jax.ShapeDtypeStruct(param_shapes(cfg)[n], jnp.float32) for n in param_names(cfg)
+    ]
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq_len), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq_len), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch,), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((), jnp.float32))
+    return jax.jit(fn).lower(*specs)
+
+
+def export(cfg: ModelConfig, out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params_dir = os.path.join(out_dir, "params")
+    os.makedirs(params_dir, exist_ok=True)
+
+    # 1. Initial parameters.
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    names = param_names(cfg)
+    for name, arr in zip(names, params):
+        path = os.path.join(params_dir, name.replace("/", "_") + ".bin")
+        with open(path, "wb") as f:
+            f.write(bytes(jnp.asarray(arr, jnp.float32).tobytes()))
+
+    # 2. Executables.
+    artifacts = {}
+    text = to_hlo_text(lower_decode(cfg, cfg.max_seq_len))
+    with open(os.path.join(out_dir, "decode.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts["decode"] = "decode.hlo.txt"
+    for s in CALIBRATION_LENS:
+        if s > cfg.max_seq_len:
+            continue
+        text = to_hlo_text(lower_decode(cfg, s))
+        fname = f"decode_len{s}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[f"decode_len{s}"] = fname
+    text = to_hlo_text(lower_train(cfg))
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts["train_step"] = "train_step.hlo.txt"
+
+    # 3. Metadata for the Rust loader.
+    meta = {
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "max_seq_len": cfg.max_seq_len,
+            "batch": cfg.batch,
+            "spec_block": cfg.spec_block,
+        },
+        "params": [
+            {"name": n, "shape": list(param_shapes(cfg)[n]),
+             "file": "params/" + n.replace("/", "_") + ".bin"}
+            for n in names
+        ],
+        "artifacts": artifacts,
+        "calibration_lens": [s for s in CALIBRATION_LENS if s <= cfg.max_seq_len],
+        "seed": seed,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab-size", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--max-seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--spec-block", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = ModelConfig(
+        vocab_size=args.vocab_size,
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        max_seq_len=args.max_seq_len,
+        batch=args.batch,
+        spec_block=args.spec_block,
+    )
+    meta = export(cfg, args.out_dir, args.seed)
+    n_arrays = len(meta["params"])
+    print(f"exported {len(meta['artifacts'])} executables + {n_arrays} param arrays "
+          f"to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Layer-1 Pallas kernels: causal flash-attention for draft-block verification.
+
+The DAS verify pass is attention where a block of K+1 query positions (the
+draft block) attends causally over the full context. On GPU the paper's
+substrate (vLLM) does this with custom masked kernels over threadblocks; the
+TPU-style rethink here (DESIGN.md §Hardware-Adaptation) expresses the same
+schedule with a Pallas BlockSpec grid:
+
+* the grid iterates ``(batch·heads, q_blocks)``;
+* each program keeps one ``(block_q, head_dim)`` query tile VMEM-resident
+  and streams ``(block_k, head_dim)`` key/value tiles HBM→VMEM;
+* softmax is computed online (running max + running sum), so the full
+  ``(S, S)`` score matrix never materializes — the FlashAttention trick,
+  which on TPU is what keeps the working set inside ~16 MB of VMEM;
+* the causal mask is applied per tile from absolute position indices.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both the pytest
+oracle checks and the AOT artifacts. Real-TPU tiling estimates live in
+DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_k: int,
+                      seq_len: int, block_q: int):
+    """One (batch·head, q-block) program of causal flash attention.
+
+    q_ref: [block_q, head_dim] — resident query tile.
+    k_ref/v_ref: [seq_len, head_dim] — full K/V for this head; the kernel
+        walks them in ``block_k`` tiles (the HBM→VMEM stream).
+    o_ref: [block_q, head_dim] — output tile.
+    """
+    q_blk = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    head_dim = q.shape[-1]
+
+    q_pos = q_blk * block_q + jax.lax.iota(jnp.int32, block_q)  # absolute q rows
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k_ref[...], kb * block_k, block_k, 0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_ref[...], kb * block_k, block_k, 0)
+        k_tile = k_tile.astype(jnp.float32)
+        v_tile = v_tile.astype(jnp.float32)
+        # (block_q, head_dim) @ (head_dim, block_k) — the MXU-shaped matmul.
+        s = q @ k_tile.T
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        # Online softmax update.
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + p.sum(axis=-1)
+        acc = acc * correction[:, None] + p @ v_tile
+        return acc, m_cur, l_cur
+
+    n_kb = seq_len // block_k
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q: int = 32, block_k: int = 32):
+    """Causal multi-head attention via the Pallas kernel (differentiable).
+
+    Forward runs the Pallas kernel; backward is the analytic VJP of the
+    reference attention (`jax.custom_vjp` — interpret-mode `pallas_call`
+    does not support reverse-mode AD, and a hand-rolled backward kernel
+    would be re-deriving what XLA already fuses well on the train path).
+
+    Args:
+        q, k, v: ``[batch, heads, seq, head_dim]`` (same shape).
+    Returns:
+        ``[batch, heads, seq, head_dim]`` attention output, q's dtype.
+    """
+    return _flash_attention_vjp(q, k, v, block_q, block_k)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attention_vjp(q, k, v, block_q, block_k):
+    return _flash_attention_fwd_only(q, k, v, block_q=block_q, block_k=block_k)
+
+
+def _flash_attention_fwd(q, k, v, block_q, block_k):
+    out = _flash_attention_fwd_only(q, k, v, block_q=block_q, block_k=block_k)
+    return out, (q, k, v)
+
+
+def _flash_attention_bwd(block_q, block_k, res, g):
+    from . import ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(ref.attention_ref, q, k, v)
+    return vjp(g)
+
+
+_flash_attention_vjp.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def _flash_attention_fwd_only(q, k, v, *, block_q: int = 32, block_k: int = 32):
+    b, h, s, d = q.shape
+    assert k.shape == (b, h, s, d) and v.shape == (b, h, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0, f"seq {s} not divisible by block_q {block_q}"
+    assert s % block_k == 0, f"seq {s} not divisible by block_k {block_k}"
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h, s, d)
+    vr = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _attention_kernel,
+        scale=scale,
+        block_k=block_k,
+        seq_len=s,
+        block_q=block_q,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            # Query tile: one (block_q, d) tile per program.
+            pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),
+            # Full K/V rows for this head; the kernel streams tiles itself.
+            pl.BlockSpec((None, s, d), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qb: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    """Fused RMSNorm tile: one row block per program."""
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g).astype(o_ref.dtype)
+
+
+def rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 32):
+    """RMS layer norm over the last axis via a Pallas kernel
+    (differentiable via the reference VJP, like `flash_attention`)."""
+    return _rmsnorm_vjp(x, gain, eps, block_rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_vjp(x, gain, eps, block_rows):
+    return _rmsnorm_fwd_only(x, gain, eps=eps, block_rows=block_rows)
+
+
+def _rmsnorm_fwd(x, gain, eps, block_rows):
+    return _rmsnorm_fwd_only(x, gain, eps=eps, block_rows=block_rows), (x, gain)
+
+
+def _rmsnorm_bwd(eps, block_rows, res, g):
+    from . import ref
+
+    x, gain = res
+    _, vjp = jax.vjp(lambda xx, gg: ref.rmsnorm_ref(xx, gg, eps), x, gain)
+    return vjp(g)
+
+
+_rmsnorm_vjp.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def _rmsnorm_fwd_only(x, gain, *, eps: float = 1e-6, block_rows: int = 32):
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for n in orig_shape[:-1]:
+        rows *= n
+    xr = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(xr, gain)
+    return out.reshape(orig_shape)

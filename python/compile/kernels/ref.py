@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `pytest python/tests` asserts the
+kernels in `attention.py` match these references across hypothesis-swept
+shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v):
+    """Naive causal multi-head attention. q/k/v: [B, H, S, D]."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, gain, eps: float = 1e-6):
+    """Naive RMSNorm over the last axis."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * (1.0 / jnp.sqrt(ms + eps)) * gain.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,182 @@
+"""Layer-2: the JAX policy model (GPT-style) + GRPO train step.
+
+Build-time only — these functions are lowered once by `aot.py` to HLO text
+and executed from Rust via PJRT. Python is never on the request path.
+
+Exported computations (all with the flattened parameter list as leading
+inputs, in `param_names()` order):
+
+* ``decode_block`` — the speculative VERIFY pass: given padded token ids
+  ``[B, S]`` and per-sequence query starts ``[B]``, return logits for the
+  ``K+1`` positions beginning at each query start. One call verifies a whole
+  draft block per sequence (the paper's "verify in one batched step").
+* ``grpo_train_step`` — policy-gradient update: group-normalized advantages
+  (GRPO with a single on-policy update, where the importance ratio is 1 and
+  the clipped surrogate reduces to REINFORCE), SGD on all parameters.
+
+Attention and RMSNorm run through the Layer-1 Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 64
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    max_seq_len: int = 128
+    batch: int = 8
+    # Draft block: K draft tokens verified per pass -> K+1 logit rows.
+    spec_block: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Canonical flattened parameter order (mirrored by rust meta loader)."""
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.ln2",
+            f"l{i}.w1",
+            f"l{i}.w2",
+        ]
+    names.append("ln_f")
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    shapes = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "pos": (cfg.max_seq_len, cfg.d_model),
+        "ln_f": (cfg.d_model,),
+    }
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.ln1"] = (cfg.d_model,)
+        shapes[f"l{i}.wq"] = (cfg.d_model, cfg.d_model)
+        shapes[f"l{i}.wk"] = (cfg.d_model, cfg.d_model)
+        shapes[f"l{i}.wv"] = (cfg.d_model, cfg.d_model)
+        shapes[f"l{i}.wo"] = (cfg.d_model, cfg.d_model)
+        shapes[f"l{i}.ln2"] = (cfg.d_model,)
+        shapes[f"l{i}.w1"] = (cfg.d_model, cfg.d_ff)
+        shapes[f"l{i}.w2"] = (cfg.d_ff, cfg.d_model)
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig) -> List[jnp.ndarray]:
+    """He-style init, returned as the flattened list in param_names order."""
+    shapes = param_shapes(cfg)
+    params = []
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "pos":
+            params.append(0.01 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return dict(zip(param_names(cfg), flat))
+
+
+def backbone(params: List[jnp.ndarray], tokens, cfg: ModelConfig):
+    """Transformer trunk: tokens [B, S] int32 -> activations [B, S, D]."""
+    p = _unflatten(cfg, params)
+    b, s = tokens.shape
+    h = p["embed"][tokens] + p["pos"][:s][None, :, :]
+    for i in range(cfg.n_layers):
+        x = rmsnorm(h, p[f"l{i}.ln1"])
+        q = (x @ p[f"l{i}.wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = (x @ p[f"l{i}.wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = (x @ p[f"l{i}.wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        att = flash_attention(q, k, v)
+        att = att.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + att @ p[f"l{i}.wo"]
+        x = rmsnorm(h, p[f"l{i}.ln2"])
+        h = h + jax.nn.gelu(x @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+    return rmsnorm(h, p["ln_f"])
+
+
+def forward_logits(params: List[jnp.ndarray], tokens, cfg: ModelConfig):
+    """Full next-token logits [B, S, V] (training / testing path)."""
+    p = _unflatten(cfg, params)
+    h = backbone(params, tokens, cfg)
+    return h @ p["embed"].T  # tied unembedding
+
+
+def decode_block(params: List[jnp.ndarray], tokens, q_start, cfg: ModelConfig):
+    """Verify pass: logits for cfg.spec_block positions starting at q_start.
+
+    tokens:  [B, S] int32 — context + draft, right-padded (pad value is
+             irrelevant: causal attention means positions after the block
+             cannot influence it).
+    q_start: [B] int32 — index of the last committed token per sequence;
+             row r of the output predicts token (q_start + r + 1).
+    returns: [B, spec_block, V] float32 raw logits.
+    """
+    p = _unflatten(cfg, params)
+    h = backbone(params, tokens, cfg)  # [B, S, D]
+
+    def take(h_b, q):
+        return jax.lax.dynamic_slice_in_dim(h_b, q, cfg.spec_block, axis=0)
+
+    rows = jax.vmap(take)(h, q_start)  # [B, K+1, D]
+    return rows @ p["embed"].T
+
+
+def _logprobs(logits):
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def grpo_loss(params, tokens, mask, advantages, cfg: ModelConfig):
+    """REINFORCE-with-baseline surrogate (GRPO, single on-policy update).
+
+    tokens:     [B, S] int32 — prompt + generation, right padded.
+    mask:       [B, S] f32 — 1.0 on GENERATED positions (prediction targets),
+                0 on prompt/pad.
+    advantages: [B] f32 — group-normalized rewards.
+    """
+    logits = forward_logits(params, tokens, cfg)  # predicts token t+1 at row t
+    logp = _logprobs(logits[:, :-1, :])
+    targets = tokens[:, 1:]
+    tgt_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    per_seq = (tgt_logp * m).sum(axis=-1) / jnp.maximum(m.sum(axis=-1), 1.0)
+    loss = -(advantages * per_seq).mean()
+    return loss
+
+
+def grpo_train_step(params, tokens, mask, advantages, lr, cfg: ModelConfig):
+    """One SGD step on the GRPO loss. Returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(grpo_loss)(params, tokens, mask, advantages, cfg)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)

@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis-swept)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, rmsnorm
+from compile.kernels.ref import attention_ref, rmsnorm_ref
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=24, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_pow=st.integers(2, 6),  # seq in {4..64}
+    d=st.sampled_from([4, 8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(b, h, s_pow, d, dtype, seed):
+    s = 2 ** s_pow
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q, k, v = (rand(kk_, (b, h, s, d), dtype) for kk_ in (kq, kk, kv))
+    got = flash_attention(q, k, v, block_q=min(16, s), block_k=min(16, s))
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+    )
+
+
+@settings(max_examples=24, deadline=None)
+@given(
+    rows=st.integers(1, 64),
+    d=st.sampled_from([8, 16, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(rows, d, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, (rows, d), dtype)
+    g = rand(k2, (d,), jnp.float32)
+    got = rmsnorm(x, g)
+    want = rmsnorm_ref(x, g)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+    )
+
+
+def test_attention_is_causal():
+    """Perturbing token t must not change outputs at positions < t."""
+    key = jax.random.PRNGKey(0)
+    b, h, s, d = 1, 2, 16, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, s, d), jnp.float32)
+    k = rand(kk, (b, h, s, d), jnp.float32)
+    v = rand(kv, (b, h, s, d), jnp.float32)
+    base = flash_attention(q, k, v)
+    k2 = k.at[:, :, 10, :].add(100.0)
+    v2 = v.at[:, :, 10, :].add(-50.0)
+    pert = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :10], pert[:, :, :10], rtol=1e-6)
+    assert not np.allclose(base[:, :, 10:], pert[:, :, 10:])
+
+
+def test_attention_uniform_values_passthrough():
+    """With identical V rows, attention output equals that row."""
+    b, h, s, d = 1, 1, 8, 4
+    q = jnp.ones((b, h, s, d))
+    k = jnp.ones((b, h, s, d))
+    v = jnp.broadcast_to(jnp.arange(d, dtype=jnp.float32), (b, h, s, d))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out[0, 0, 3], jnp.arange(d, dtype=jnp.float32), rtol=1e-6)
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(c*x) == RMSNorm(x) for c > 0 (up to eps)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    g = jnp.ones((16,))
+    a = rmsnorm(x, g)
+    b = rmsnorm(3.0 * x, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_handles_odd_row_counts():
+    x = jax.random.normal(jax.random.PRNGKey(2), (7, 8))  # 7 % 32 != 0
+    g = jnp.ones((8,))
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, g)), np.asarray(rmsnorm_ref(x, g)), rtol=2e-5, atol=2e-5
+    )

@@ -1,0 +1,122 @@
+"""L2 correctness: model invariants + train-step behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    decode_block,
+    forward_logits,
+    grpo_loss,
+    grpo_train_step,
+    init_params,
+    param_names,
+    param_shapes,
+)
+
+CFG = ModelConfig(vocab_size=32, d_model=32, n_layers=2, n_heads=4,
+                  max_seq_len=32, batch=2, spec_block=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def test_param_inventory_consistent():
+    names = param_names(CFG)
+    shapes = param_shapes(CFG)
+    assert len(names) == len(set(names))
+    assert set(names) == set(shapes)
+    # 2 + 8 per layer + 1
+    assert len(names) == 2 + 8 * CFG.n_layers + 1
+
+
+def test_forward_shapes(params):
+    tokens = jnp.zeros((CFG.batch, CFG.max_seq_len), jnp.int32)
+    logits = forward_logits(params, tokens, CFG)
+    assert logits.shape == (CFG.batch, CFG.max_seq_len, CFG.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_model_is_causal(params):
+    """Changing a future token must not change past logits."""
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (CFG.batch, CFG.max_seq_len), 0, CFG.vocab_size)
+    base = forward_logits(params, tokens, CFG)
+    pert = tokens.at[:, 20].set((tokens[:, 20] + 1) % CFG.vocab_size)
+    out = forward_logits(params, pert, CFG)
+    np.testing.assert_allclose(base[:, :20], out[:, :20], rtol=1e-4, atol=1e-5)
+    assert not np.allclose(base[:, 20:], out[:, 20:])
+
+
+def test_decode_block_matches_full_forward(params):
+    """The AOT verify pass must equal the corresponding full-logit rows."""
+    key = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(key, (CFG.batch, CFG.max_seq_len), 0, CFG.vocab_size)
+    q_start = jnp.array([5, 9], jnp.int32)
+    block = decode_block(params, tokens, q_start, CFG)
+    full = forward_logits(params, tokens, CFG)
+    for b in range(CFG.batch):
+        np.testing.assert_allclose(
+            np.asarray(block[b]),
+            np.asarray(full[b, q_start[b]:q_start[b] + CFG.spec_block]),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_decode_block_padding_independent(params):
+    """Tokens AFTER the query block must not affect block logits (causality
+    is what lets the runtime right-pad with garbage)."""
+    key = jax.random.PRNGKey(5)
+    tokens = jax.random.randint(key, (CFG.batch, CFG.max_seq_len), 0, CFG.vocab_size)
+    q_start = jnp.array([6, 6], jnp.int32)
+    a = decode_block(params, tokens, q_start, CFG)
+    # Scramble everything after position q_start + spec_block.
+    tail = 6 + CFG.spec_block
+    scrambled = tokens.at[:, tail:].set(0)
+    b = decode_block(params, scrambled, q_start, CFG)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_reduces_loss(params):
+    """Positive-advantage sequences must become more likely (lower loss)."""
+    key = jax.random.PRNGKey(6)
+    tokens = jax.random.randint(key, (CFG.batch, CFG.max_seq_len), 0, CFG.vocab_size)
+    mask = jnp.ones((CFG.batch, CFG.max_seq_len), jnp.float32).at[:, :4].set(0.0)
+    adv = jnp.ones((CFG.batch,), jnp.float32)
+    lr = jnp.float32(0.5)
+    p = params
+    losses = []
+    for _ in range(5):
+        out = grpo_train_step(p, tokens, mask, adv, lr, CFG)
+        p, loss = list(out[:-1]), out[-1]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_preserves_shapes(params):
+    tokens = jnp.zeros((CFG.batch, CFG.max_seq_len), jnp.int32)
+    mask = jnp.ones((CFG.batch, CFG.max_seq_len), jnp.float32)
+    adv = jnp.zeros((CFG.batch,), jnp.float32)
+    out = grpo_train_step(params, tokens, mask, adv, jnp.float32(0.1), CFG)
+    new_params, loss = out[:-1], out[-1]
+    assert len(new_params) == len(params)
+    for a, b in zip(new_params, params):
+        assert a.shape == b.shape
+    # Zero advantage => zero gradient => params unchanged.
+    for a, b in zip(new_params, params):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    assert float(loss) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_grpo_loss_sign():
+    """Higher-probability sequences with positive advantage -> lower loss."""
+    p = init_params(jax.random.PRNGKey(7), CFG)
+    tokens = jnp.zeros((CFG.batch, CFG.max_seq_len), jnp.int32)
+    mask = jnp.ones((CFG.batch, CFG.max_seq_len), jnp.float32)
+    pos = grpo_loss(p, tokens, mask, jnp.ones((CFG.batch,)), CFG)
+    neg = grpo_loss(p, tokens, mask, -jnp.ones((CFG.batch,)), CFG)
+    assert float(pos) == pytest.approx(-float(neg), rel=1e-5)

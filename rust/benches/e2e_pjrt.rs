@@ -1,0 +1,63 @@
+//! Bench: the REAL hot path — PJRT decode forwards and full engine rounds
+//! on the AOT-compiled model (the headline wall-clock numbers for this
+//! testbed; skipped when `artifacts/` is absent).
+
+use das::config::preset;
+use das::model::TargetModel;
+use das::rollout::{GenJob, RolloutEngine};
+use das::runtime::PjrtModel;
+use das::util::bench::{black_box, Bencher};
+
+fn main() {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        eprintln!("e2e_pjrt: artifacts/ missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    let mut b = Bencher::quick();
+    let mut model = PjrtModel::load(std::path::Path::new("artifacts")).unwrap();
+    let bsz = model.batch_capacity();
+    let s = model.meta.max_seq_len;
+
+    // Raw verify forward (the c_base + c_tok·n unit of Eq. 1).
+    let tokens: Vec<i32> = (0..bsz * s).map(|i| (i % 60) as i32).collect();
+    let q_start: Vec<i32> = vec![8; bsz];
+    b.bench("pjrt_decode_forward_b8_s128", || {
+        black_box(model.decode_raw(&tokens, &q_start).unwrap());
+    });
+
+    // Train step (weights round-trip included).
+    let mask: Vec<f32> = (0..bsz * s).map(|i| ((i % s) > 4) as u8 as f32).collect();
+    let adv: Vec<f32> = vec![0.1; bsz];
+    b.bench("pjrt_train_step", || {
+        black_box(model.train_step(&tokens, &mask, &adv, 1e-3).unwrap());
+    });
+
+    // Full generation step: baseline vs DAS on the real model.
+    for drafter in ["none", "das"] {
+        let mut cfg = preset("tiny_pjrt").unwrap();
+        cfg.spec.drafter = drafter.into();
+        cfg.rollout.max_new_tokens = 24;
+        let mut engine = RolloutEngine::new(&cfg, das::drafter::from_config(&cfg));
+        let jobs: Vec<GenJob> = (0..4)
+            .map(|p| GenJob {
+                problem: p,
+                prompt: vec![p + 1, 3, 5],
+                samples: 2,
+            })
+            .collect();
+        let mut step = 0u32;
+        let mut gen_t = 0.0;
+        let mut iters = 0;
+        b.bench(&format!("pjrt_generate_step_{drafter}"), || {
+            let rep = engine.generate_step(&mut model, &jobs, step);
+            gen_t += rep.metrics.gen_time;
+            step += 1;
+            iters += 1;
+        });
+        println!(
+            "    └ decode wall time inside step: {:.3} s (rounds incl. verification)",
+            gen_t / iters.max(1) as f64
+        );
+    }
+    b.summary();
+}

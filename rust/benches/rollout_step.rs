@@ -1,0 +1,61 @@
+//! Bench: end-to-end rollout steps on the simulated policy — the wall-time
+//! analog of the paper's per-step generation-time tables (Figs. 10–12).
+//!
+//! The simulator charges virtual time for model forwards, so the WALL time
+//! measured here is the coordinator's own overhead (drafting, batching,
+//! verification bookkeeping) — exactly the part DAS adds and the part L3
+//! must keep off the critical path. The virtual gen-time ratio between
+//! variants is printed alongside.
+
+use das::config::DasConfig;
+use das::model::sim::{SimModel, SimModelConfig};
+use das::rl::Trainer;
+use das::util::bench::Bencher;
+
+fn small(drafter: &str, policy: &str) -> DasConfig {
+    let mut c = DasConfig::default();
+    c.model.vocab_size = 256;
+    c.workload.n_problems = 16;
+    c.workload.len_mu = 4.2;
+    c.workload.len_sigma = 0.5;
+    c.rollout.max_new_tokens = 256;
+    c.rollout.max_batch = 16;
+    c.rollout.samples_per_problem = 4;
+    c.train.problems_per_step = 8;
+    c.spec.drafter = drafter.into();
+    c.spec.budget_policy = policy.into();
+    c
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    for (name, drafter, policy) in [
+        ("baseline_none", "none", "length_aware"),
+        ("das_length_aware", "das", "length_aware"),
+        ("das_optimal_eq9", "das", "optimal"),
+        ("das_unlimited", "das", "unlimited"),
+        ("static_ngram", "static", "uniform"),
+    ] {
+        let cfg = small(drafter, policy);
+        let mut model = SimModel::new(SimModelConfig::from_das(&cfg));
+        let mut trainer = Trainer::new(cfg);
+        // Warm up drafter history.
+        for s in 0..3 {
+            trainer.step_sim(&mut model, s);
+        }
+        let mut step = 3u32;
+        let mut virt = 0.0;
+        let mut iters = 0u32;
+        b.bench(&format!("rollout_step_{name}"), || {
+            let stats = trainer.step_sim(&mut model, step);
+            virt += stats.metrics.gen_time;
+            step += 1;
+            iters += 1;
+        });
+        println!(
+            "    └ virtual gen time: {:.3} s/step (model-clock; lower = better)",
+            virt / iters.max(1) as f64
+        );
+    }
+    b.summary();
+}

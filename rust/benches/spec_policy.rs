@@ -1,0 +1,66 @@
+//! Bench: the speculation policy hot paths — the Eq. 9 budget solver,
+//! length classification, acceptance-model updates, and verification
+//! (Fig. 12's policy axis; these run every round, so they must be far
+//! cheaper than one forward pass).
+
+use das::cost::LatencyModel;
+use das::spec::budget::{solve, BudgetRequest};
+use das::spec::verify::{softmax_with_temperature, verify_sampling};
+use das::spec::{AcceptanceEstimator, AcceptanceParams, LengthClass, LengthPolicy};
+use das::util::bench::{black_box, Bencher};
+use das::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from_u64(7);
+
+    for &n in &[16usize, 64, 256] {
+        let reqs: Vec<BudgetRequest> = (0..n)
+            .map(|_| BudgetRequest {
+                length: 50.0 + rng.next_f64() * 2000.0,
+                accept: AcceptanceParams {
+                    alpha: 0.2 + rng.next_f64(),
+                    k: 0.1 + 0.89 * rng.next_f64(),
+                },
+            })
+            .collect();
+        let cost = LatencyModel::paper_like();
+        b.bench(&format!("budget_solve_batch{n}"), || {
+            black_box(solve(&reqs, &cost));
+        });
+    }
+
+    let mut policy = LengthPolicy::new(100, 400);
+    for p in 0..64u32 {
+        for _ in 0..32 {
+            policy.observe(p, rng.below(900) + 10);
+        }
+    }
+    let mut p = 0u32;
+    b.bench("length_runtime_class", || {
+        p = (p + 1) % 64;
+        black_box(policy.runtime_class(p, (p as usize * 7) % 500, LengthClass::Medium));
+    });
+
+    let mut est = AcceptanceEstimator::default();
+    b.bench("acceptance_observe_and_params", || {
+        est.observe(8, 5);
+        black_box(est.params());
+    });
+
+    // Verification of an 8-token draft over a 512 vocab.
+    let vocab = 512;
+    let logits: Vec<f32> = (0..vocab).map(|_| rng.next_f32() * 8.0).collect();
+    let dists: Vec<Vec<f32>> = (0..9)
+        .map(|_| softmax_with_temperature(&logits, 0.6))
+        .collect();
+    let draft: Vec<u32> = (0..8).map(|_| rng.below(vocab) as u32).collect();
+    let mut vrng = Rng::seed_from_u64(3);
+    b.bench_throughput("verify_sampling_k8_v512", 8, || {
+        black_box(verify_sampling(&draft, &dists, &mut vrng));
+    });
+    b.bench("softmax_t_v512", || {
+        black_box(softmax_with_temperature(&logits, 0.6));
+    });
+    b.summary();
+}

@@ -1,0 +1,85 @@
+//! Bench: suffix-structure operations (Fig. 5's wall-time axis).
+//!
+//! Query and update costs for the Ukkonen suffix tree, the counting suffix
+//! trie (production drafter index) and the suffix array (rebuild-per-insert
+//! baseline) across corpus sizes.
+
+use das::suffix::{SuffixArray, SuffixArrayIndex, SuffixTree, SuffixTrieIndex};
+use das::util::bench::{black_box, Bencher};
+use das::util::rng::Rng;
+
+fn corpus(rng: &mut Rng, rollouts: usize, len: usize, alphabet: usize) -> Vec<Vec<u32>> {
+    (0..rollouts)
+        .map(|_| (0..len).map(|_| rng.below(alphabet) as u32).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from_u64(42);
+    for &n_tokens in &[10_000usize, 100_000] {
+        let rolls = corpus(&mut rng, n_tokens / 100, 100, 512);
+        let flat: Vec<u32> = rolls.iter().flatten().copied().collect();
+
+        let mut tree = SuffixTree::new();
+        for r in &rolls {
+            tree.insert(r);
+        }
+        let mut trie = SuffixTrieIndex::new(24);
+        for r in &rolls {
+            trie.insert(r);
+        }
+        let sa = SuffixArray::build(&flat);
+
+        // Realistic queries: 8-token contexts cut from the corpus.
+        let contexts: Vec<Vec<u32>> = (0..128)
+            .map(|_| {
+                let r = &rolls[rng.below(rolls.len())];
+                let s = rng.below(r.len() - 8);
+                r[s..s + 8].to_vec()
+            })
+            .collect();
+        let mut i = 0;
+        b.bench(&format!("tree_query_{}tok", n_tokens), || {
+            let c = &contexts[i % contexts.len()];
+            i += 1;
+            black_box(tree.draft(c, 8, 16));
+        });
+        let mut j = 0;
+        b.bench(&format!("trie_query_{}tok", n_tokens), || {
+            let c = &contexts[j % contexts.len()];
+            j += 1;
+            black_box(trie.draft_weighted(c, 8, 16));
+        });
+        let mut k = 0;
+        b.bench(&format!("array_query_{}tok", n_tokens), || {
+            let c = &contexts[k % contexts.len()];
+            k += 1;
+            black_box(sa.draft(c, 8, 16));
+        });
+
+        // Update: index one fresh 100-token rollout. Tree/trie are
+        // append-only online structures, so we insert into the live index
+        // (it grows over iterations; inserts are amortized-constant, which
+        // is exactly the property being measured). The array must rebuild,
+        // so each iteration pays the full reconstruction.
+        let fresh: Vec<u32> = (0..100).map(|_| rng.below(512) as u32).collect();
+        let mut tree_live = tree.clone();
+        b.bench(&format!("tree_insert100_{}tok", n_tokens), || {
+            tree_live.insert(black_box(&fresh));
+        });
+        let mut trie_live = trie.clone();
+        b.bench(&format!("trie_insert100_{}tok", n_tokens), || {
+            trie_live.insert(black_box(&fresh));
+        });
+        // Array rebuild (the Fig. 5 point): rebuild cost at this corpus
+        // size, measured by rebuilding the same-size corpus each iteration.
+        let mut idx = SuffixArrayIndex::new();
+        idx.insert(&flat[..flat.len() - 101]);
+        b.bench(&format!("array_rebuild_insert100_{}tok", n_tokens), || {
+            let mut a2 = idx.clone();
+            a2.insert(black_box(&fresh));
+        });
+    }
+    b.summary();
+}

@@ -1,0 +1,429 @@
+//! Typed configuration system.
+//!
+//! Everything the launcher can run — rollout-only serving, full RL training,
+//! figure reproduction — is described by a [`DasConfig`], loadable from a
+//! JSON file (`--config path`) with `--set key=value` dotted-path overrides,
+//! in the spirit of MaxText/vLLM config systems. Presets mirror the paper's
+//! two workloads (`math_rl`, `code_rl`).
+
+use crate::util::json::Json;
+use std::fmt;
+use std::path::Path;
+
+mod presets;
+pub use presets::{preset, preset_names};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DasConfig {
+    pub model: ModelConfig,
+    pub rollout: RolloutConfig,
+    pub spec: SpecConfig,
+    pub train: TrainConfig,
+    pub workload: WorkloadConfig,
+    pub seed: u64,
+}
+
+/// Policy model geometry — must match what `python/compile/aot.py` exported
+/// (checked against `artifacts/meta.json` when the PJRT backend is used).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq_len: usize,
+    /// "sim" (synthetic policy; virtual time) or "pjrt" (real AOT artifacts).
+    pub backend: String,
+    /// Directory with `*.hlo.txt` + `meta.json` for the pjrt backend.
+    pub artifacts_dir: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RolloutConfig {
+    /// Max concurrent sequences in one decode batch (vLLM-style continuous
+    /// batching slot count; also the compiled batch dim for pjrt).
+    pub max_batch: usize,
+    /// Samples drawn per problem per step (GRPO group size).
+    pub samples_per_problem: usize,
+    /// Hard cap on generated tokens per rollout.
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+}
+
+/// Speculation settings — the paper's §4 knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecConfig {
+    /// Drafter: "das" (windowed per-problem suffix tree), "static" (frozen
+    /// n-gram, the EAGLE analog), "none" (VeRL baseline).
+    pub drafter: String,
+    /// History scope for the suffix drafter: "problem", "problem+request",
+    /// "global+request" (Fig 6).
+    pub scope: String,
+    /// Sliding window size in epochs; 0 = unbounded ("window_all", Fig 7).
+    pub window: usize,
+    /// Budget policy: "length_aware" (the paper §4.2.3), "optimal" (Eq. 9
+    /// solver), "uniform", "unlimited"
+    /// (Fig 12 ablation).
+    pub budget_policy: String,
+    /// Draft tokens per round for the uniform policy / class budgets for the
+    /// length-aware policy (short, medium, long).
+    pub budget_short: usize,
+    pub budget_medium: usize,
+    pub budget_long: usize,
+    /// Cap for "unlimited" (still bounded by the tree's match depth).
+    pub budget_cap: usize,
+    /// Enable the per-request prefix-trie router (§4.1.2: off for small
+    /// models where routing overhead outweighs the gain).
+    pub prefix_router: bool,
+    /// Minimum context suffix length used as the tree query.
+    pub match_len: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub problems_per_step: usize,
+    pub lr: f64,
+    /// GRPO clip epsilon.
+    pub clip_eps: f64,
+    /// KL penalty weight (0 disables).
+    pub kl_coef: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// "math" | "code" | "trace".
+    pub kind: String,
+    pub n_problems: usize,
+    /// Log-normal length distribution parameters for the simulated policy
+    /// (chosen so a small fraction of rollouts dominates makespan).
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    /// Policy drift per step for the simulator (fraction of the canonical
+    /// trajectory that mutates after each learner update).
+    pub drift: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Default for DasConfig {
+    fn default() -> Self {
+        preset("math_rl").expect("math_rl preset exists")
+    }
+}
+
+macro_rules! read_field {
+    ($obj:expr, $root:expr, $section:literal, $key:literal, usize, $target:expr) => {
+        if let Some(v) = $obj.get_path(concat!($section, ".", $key)) {
+            $target = v
+                .as_usize()
+                .ok_or_else(|| ConfigError(format!("{}.{} must be a non-negative integer", $section, $key)))?;
+        }
+    };
+    ($obj:expr, $root:expr, $section:literal, $key:literal, f64, $target:expr) => {
+        if let Some(v) = $obj.get_path(concat!($section, ".", $key)) {
+            $target = v
+                .as_f64()
+                .ok_or_else(|| ConfigError(format!("{}.{} must be a number", $section, $key)))?;
+        }
+    };
+    ($obj:expr, $root:expr, $section:literal, $key:literal, bool, $target:expr) => {
+        if let Some(v) = $obj.get_path(concat!($section, ".", $key)) {
+            $target = v
+                .as_bool()
+                .ok_or_else(|| ConfigError(format!("{}.{} must be a bool", $section, $key)))?;
+        }
+    };
+    ($obj:expr, $root:expr, $section:literal, $key:literal, string, $target:expr) => {
+        if let Some(v) = $obj.get_path(concat!($section, ".", $key)) {
+            $target = v
+                .as_str()
+                .ok_or_else(|| ConfigError(format!("{}.{} must be a string", $section, $key)))?
+                .to_string();
+        }
+    };
+}
+
+impl DasConfig {
+    /// Load from a JSON file, starting from the preset named by the file's
+    /// `"preset"` field (default `math_rl`) and applying overrides on top.
+    pub fn load(path: &Path) -> Result<DasConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<DasConfig, ConfigError> {
+        let j = Json::parse(text).map_err(|e| ConfigError(e.to_string()))?;
+        let base = j
+            .get("preset")
+            .and_then(|p| p.as_str())
+            .unwrap_or("math_rl");
+        let mut cfg = preset(base)
+            .ok_or_else(|| ConfigError(format!("unknown preset '{base}'")))?;
+        cfg.apply_json(&j)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed JSON object's fields over the current config.
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), ConfigError> {
+        if let Some(v) = j.get("seed") {
+            self.seed = v
+                .as_i64()
+                .ok_or_else(|| ConfigError("seed must be an integer".into()))? as u64;
+        }
+        read_field!(j, self, "model", "vocab_size", usize, self.model.vocab_size);
+        read_field!(j, self, "model", "d_model", usize, self.model.d_model);
+        read_field!(j, self, "model", "n_layers", usize, self.model.n_layers);
+        read_field!(j, self, "model", "n_heads", usize, self.model.n_heads);
+        read_field!(j, self, "model", "max_seq_len", usize, self.model.max_seq_len);
+        read_field!(j, self, "model", "backend", string, self.model.backend);
+        read_field!(j, self, "model", "artifacts_dir", string, self.model.artifacts_dir);
+
+        read_field!(j, self, "rollout", "max_batch", usize, self.rollout.max_batch);
+        read_field!(j, self, "rollout", "samples_per_problem", usize, self.rollout.samples_per_problem);
+        read_field!(j, self, "rollout", "max_new_tokens", usize, self.rollout.max_new_tokens);
+        read_field!(j, self, "rollout", "temperature", f64, self.rollout.temperature);
+
+        read_field!(j, self, "spec", "drafter", string, self.spec.drafter);
+        read_field!(j, self, "spec", "scope", string, self.spec.scope);
+        read_field!(j, self, "spec", "window", usize, self.spec.window);
+        read_field!(j, self, "spec", "budget_policy", string, self.spec.budget_policy);
+        read_field!(j, self, "spec", "budget_short", usize, self.spec.budget_short);
+        read_field!(j, self, "spec", "budget_medium", usize, self.spec.budget_medium);
+        read_field!(j, self, "spec", "budget_long", usize, self.spec.budget_long);
+        read_field!(j, self, "spec", "budget_cap", usize, self.spec.budget_cap);
+        read_field!(j, self, "spec", "prefix_router", bool, self.spec.prefix_router);
+        read_field!(j, self, "spec", "match_len", usize, self.spec.match_len);
+
+        read_field!(j, self, "train", "steps", usize, self.train.steps);
+        read_field!(j, self, "train", "problems_per_step", usize, self.train.problems_per_step);
+        read_field!(j, self, "train", "lr", f64, self.train.lr);
+        read_field!(j, self, "train", "clip_eps", f64, self.train.clip_eps);
+        read_field!(j, self, "train", "kl_coef", f64, self.train.kl_coef);
+
+        read_field!(j, self, "workload", "kind", string, self.workload.kind);
+        read_field!(j, self, "workload", "n_problems", usize, self.workload.n_problems);
+        read_field!(j, self, "workload", "len_mu", f64, self.workload.len_mu);
+        read_field!(j, self, "workload", "len_sigma", f64, self.workload.len_sigma);
+        read_field!(j, self, "workload", "drift", f64, self.workload.drift);
+        Ok(())
+    }
+
+    /// Apply a `--set section.key=value` style override.
+    pub fn set(&mut self, assignment: &str) -> Result<(), ConfigError> {
+        let (path, value) = assignment
+            .split_once('=')
+            .ok_or_else(|| ConfigError(format!("--set expects key=value, got '{assignment}'")))?;
+        // Build a nested JSON object for the single key and reuse apply_json.
+        let parts: Vec<&str> = path.split('.').collect();
+        let leaf: Json = if value == "true" || value == "false" {
+            Json::Bool(value == "true")
+        } else if let Ok(n) = value.parse::<f64>() {
+            Json::Num(n)
+        } else {
+            Json::Str(value.to_string())
+        };
+        let mut node = leaf;
+        for part in parts.iter().rev() {
+            node = Json::obj(vec![(part, node)]);
+        }
+        self.apply_json(&node)?;
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let e = |m: String| Err(ConfigError(m));
+        if self.model.vocab_size < 8 {
+            return e("model.vocab_size must be >= 8".into());
+        }
+        if self.model.d_model % self.model.n_heads != 0 {
+            return e(format!(
+                "model.d_model ({}) must be divisible by n_heads ({})",
+                self.model.d_model, self.model.n_heads
+            ));
+        }
+        if !matches!(self.model.backend.as_str(), "sim" | "pjrt") {
+            return e(format!("model.backend must be sim|pjrt, got '{}'", self.model.backend));
+        }
+        if self.rollout.max_batch == 0 || self.rollout.max_new_tokens == 0 {
+            return e("rollout.max_batch and max_new_tokens must be > 0".into());
+        }
+        if self.rollout.temperature < 0.0 {
+            return e("rollout.temperature must be >= 0".into());
+        }
+        if !matches!(self.spec.drafter.as_str(), "das" | "static" | "none") {
+            return e(format!("spec.drafter must be das|static|none, got '{}'", self.spec.drafter));
+        }
+        if !matches!(
+            self.spec.scope.as_str(),
+            "problem" | "problem+request" | "global+request"
+        ) {
+            return e(format!("spec.scope invalid: '{}'", self.spec.scope));
+        }
+        if !matches!(
+            self.spec.budget_policy.as_str(),
+            "length_aware" | "optimal" | "uniform" | "unlimited"
+        ) {
+            return e(format!("spec.budget_policy invalid: '{}'", self.spec.budget_policy));
+        }
+        if self.spec.budget_long < self.spec.budget_medium {
+            return e("spec.budget_long must be >= budget_medium".into());
+        }
+        if !matches!(self.workload.kind.as_str(), "math" | "code" | "trace") {
+            return e(format!("workload.kind must be math|code|trace, got '{}'", self.workload.kind));
+        }
+        if self.workload.n_problems == 0 {
+            return e("workload.n_problems must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Serialize the resolved config (for logging / EXPERIMENTS.md records).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("vocab_size", Json::num(self.model.vocab_size as f64)),
+                    ("d_model", Json::num(self.model.d_model as f64)),
+                    ("n_layers", Json::num(self.model.n_layers as f64)),
+                    ("n_heads", Json::num(self.model.n_heads as f64)),
+                    ("max_seq_len", Json::num(self.model.max_seq_len as f64)),
+                    ("backend", Json::str(&self.model.backend)),
+                    ("artifacts_dir", Json::str(&self.model.artifacts_dir)),
+                ]),
+            ),
+            (
+                "rollout",
+                Json::obj(vec![
+                    ("max_batch", Json::num(self.rollout.max_batch as f64)),
+                    (
+                        "samples_per_problem",
+                        Json::num(self.rollout.samples_per_problem as f64),
+                    ),
+                    ("max_new_tokens", Json::num(self.rollout.max_new_tokens as f64)),
+                    ("temperature", Json::num(self.rollout.temperature)),
+                ]),
+            ),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("drafter", Json::str(&self.spec.drafter)),
+                    ("scope", Json::str(&self.spec.scope)),
+                    ("window", Json::num(self.spec.window as f64)),
+                    ("budget_policy", Json::str(&self.spec.budget_policy)),
+                    ("budget_short", Json::num(self.spec.budget_short as f64)),
+                    ("budget_medium", Json::num(self.spec.budget_medium as f64)),
+                    ("budget_long", Json::num(self.spec.budget_long as f64)),
+                    ("budget_cap", Json::num(self.spec.budget_cap as f64)),
+                    ("prefix_router", Json::Bool(self.spec.prefix_router)),
+                    ("match_len", Json::num(self.spec.match_len as f64)),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("steps", Json::num(self.train.steps as f64)),
+                    ("problems_per_step", Json::num(self.train.problems_per_step as f64)),
+                    ("lr", Json::num(self.train.lr)),
+                    ("clip_eps", Json::num(self.train.clip_eps)),
+                    ("kl_coef", Json::num(self.train.kl_coef)),
+                ]),
+            ),
+            (
+                "workload",
+                Json::obj(vec![
+                    ("kind", Json::str(&self.workload.kind)),
+                    ("n_problems", Json::num(self.workload.n_problems as f64)),
+                    ("len_mu", Json::num(self.workload.len_mu)),
+                    ("len_sigma", Json::num(self.workload.len_sigma)),
+                    ("drift", Json::num(self.workload.drift)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        DasConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn all_presets_valid() {
+        for name in preset_names() {
+            preset(name).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let cfg = DasConfig::from_json_text(
+            r#"{"preset": "code_rl", "spec": {"window": 8, "drafter": "static"},
+                "rollout": {"temperature": 0.9}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.window, 8);
+        assert_eq!(cfg.spec.drafter, "static");
+        assert!((cfg.rollout.temperature - 0.9).abs() < 1e-12);
+        assert_eq!(cfg.workload.kind, "code");
+    }
+
+    #[test]
+    fn set_override() {
+        let mut cfg = DasConfig::default();
+        cfg.set("spec.budget_long=24").unwrap();
+        assert_eq!(cfg.spec.budget_long, 24);
+        cfg.set("model.backend=pjrt").unwrap();
+        assert_eq!(cfg.model.backend, "pjrt");
+        assert!(cfg.set("spec.drafter=bogus").is_err());
+        assert!(cfg.set("no_equals_sign").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = DasConfig::default();
+        cfg.model.d_model = 100;
+        cfg.model.n_heads = 3;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = DasConfig::default();
+        cfg.spec.scope = "nope".into();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = DasConfig::default();
+        cfg.spec.budget_long = 1;
+        cfg.spec.budget_medium = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(DasConfig::from_json_text(r#"{"preset": "nonexistent"}"#).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_json() {
+        let cfg = preset("code_rl").unwrap();
+        let text = cfg.to_json().to_string();
+        let mut cfg2 = preset("code_rl").unwrap();
+        cfg2.apply_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Built-in configuration presets mirroring the paper's evaluated setups
+//! (§5.1 math RL on DSR-sub, §5.2 code RL on DeepCoder), scaled to this
+//! testbed per DESIGN.md §3, plus a tiny preset for the PJRT e2e examples.
+
+use super::*;
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["math_rl", "code_rl", "tiny_pjrt", "trace"]
+}
+
+pub fn preset(name: &str) -> Option<DasConfig> {
+    match name {
+        // §5.1: DeepSeek-R1-Distill-Qwen-7B on DSR-sub math. Long-tail heavy
+        // (16k max tokens in the paper → scaled to 2048 virtual tokens with
+        // the same lognormal tail shape).
+        "math_rl" => Some(DasConfig {
+            model: ModelConfig {
+                vocab_size: 512,
+                d_model: 128,
+                n_layers: 2,
+                n_heads: 4,
+                max_seq_len: 2048,
+                backend: "sim".into(),
+                artifacts_dir: "artifacts".into(),
+            },
+            rollout: RolloutConfig {
+                max_batch: 64,
+                samples_per_problem: 8,
+                max_new_tokens: 2048,
+                temperature: 0.6,
+            },
+            spec: SpecConfig {
+                drafter: "das".into(),
+                scope: "problem".into(),
+                window: 16,
+                budget_policy: "length_aware".into(),
+                budget_short: 0,
+                budget_medium: 6,
+                budget_long: 16,
+                budget_cap: 64,
+                prefix_router: false,
+                match_len: 8,
+            },
+            train: TrainConfig {
+                steps: 30,
+                problems_per_step: 16,
+                lr: 1e-2,
+                clip_eps: 0.2,
+                kl_coef: 0.0,
+            },
+            workload: WorkloadConfig {
+                kind: "math".into(),
+                n_problems: 64,
+                // lognormal(mu, sigma) over generated length: median ~400,
+                // p99 ~ 2000 — the paper's "few long stragglers" shape.
+                len_mu: 6.0,
+                len_sigma: 0.75,
+                drift: 0.03,
+            },
+            seed: 17,
+        }),
+        // §5.2: Qwen3-8B DeepCoder-style code RL. Shorter tail, smaller
+        // effective batch, unit-test rewards from the stack-VM.
+        "code_rl" => Some(DasConfig {
+            model: ModelConfig {
+                vocab_size: 512,
+                d_model: 128,
+                n_layers: 2,
+                n_heads: 4,
+                max_seq_len: 2048,
+                backend: "sim".into(),
+                artifacts_dir: "artifacts".into(),
+            },
+            rollout: RolloutConfig {
+                max_batch: 16,
+                samples_per_problem: 8,
+                max_new_tokens: 2048,
+                temperature: 0.6,
+            },
+            spec: SpecConfig {
+                drafter: "das".into(),
+                scope: "problem".into(),
+                window: 16,
+                budget_policy: "length_aware".into(),
+                budget_short: 0,
+                budget_medium: 4,
+                budget_long: 12,
+                budget_cap: 64,
+                prefix_router: false,
+                match_len: 6,
+            },
+            train: TrainConfig {
+                steps: 30,
+                problems_per_step: 8,
+                lr: 1e-2,
+                clip_eps: 0.2,
+                kl_coef: 0.0,
+            },
+            workload: WorkloadConfig {
+                kind: "code".into(),
+                n_problems: 32,
+                len_mu: 5.6,
+                len_sigma: 0.55,
+                drift: 0.04,
+            },
+            seed: 23,
+        }),
+        // Real PJRT model for the end-to-end examples: geometry matches the
+        // default export of python/compile/aot.py.
+        "tiny_pjrt" => Some(DasConfig {
+            model: ModelConfig {
+                vocab_size: 64,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                max_seq_len: 128,
+                backend: "pjrt".into(),
+                artifacts_dir: "artifacts".into(),
+            },
+            rollout: RolloutConfig {
+                max_batch: 8,
+                samples_per_problem: 4,
+                max_new_tokens: 48,
+                temperature: 0.8,
+            },
+            spec: SpecConfig {
+                drafter: "das".into(),
+                scope: "problem".into(),
+                window: 8,
+                budget_policy: "length_aware".into(),
+                budget_short: 0,
+                budget_medium: 4,
+                budget_long: 7,
+                budget_cap: 7,
+                prefix_router: false,
+                match_len: 4,
+            },
+            train: TrainConfig {
+                steps: 40,
+                problems_per_step: 8,
+                lr: 1.2e-1,
+                clip_eps: 0.2,
+                kl_coef: 0.0,
+            },
+            workload: WorkloadConfig {
+                kind: "math".into(),
+                n_problems: 16,
+                len_mu: 3.0,
+                len_sigma: 0.4,
+                drift: 0.05,
+            },
+            seed: 7,
+        }),
+        // Rollout-only serving over a recorded trace (no training).
+        "trace" => Some(DasConfig {
+            workload: WorkloadConfig {
+                kind: "trace".into(),
+                n_problems: 128,
+                len_mu: 6.2,
+                len_sigma: 0.8,
+                drift: 0.05,
+            },
+            ..preset("math_rl").unwrap()
+        }),
+        _ => None,
+    }
+}

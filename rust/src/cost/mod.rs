@@ -1,0 +1,159 @@
+//! Rollout latency model (§4.2.1, Eq. 1–2, Fig. 8).
+//!
+//! The paper models one target-model forward pass as
+//! `t_fwd = c_base + c_tok · n_toks` (mean relative error ≈ 12% on their
+//! hardware) and total rollout latency as
+//! `t_total = c_base·N_fwd + c_tok·N_toks + C`.
+//!
+//! [`LatencyModel`] carries the fitted coefficients; [`fit`] recovers them
+//! by least squares from `(n_toks, seconds)` profiles — either real PJRT
+//! timings (`das calibrate`, Fig. 8) or the simulator's configured truth.
+//! The same model powers the simulator's virtual clock, so scaled benches
+//! and the budget optimizer share one latency vocabulary.
+
+use crate::util::stats;
+
+/// Fitted linear forward-pass latency model. Units: seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyModel {
+    /// Per-forward-pass overhead (kernel launches, weight/activation
+    /// movement) — `c_base` in Eq. 1.
+    pub c_base: f64,
+    /// Per-token compute cost — `c_tok` in Eq. 1.
+    pub c_tok: f64,
+    /// Non-forward overhead per rollout step (scheduling, formatting) — `C`
+    /// in Eq. 2.
+    pub c_step: f64,
+}
+
+impl LatencyModel {
+    /// A default shaped like the paper's H100 measurements scaled to a
+    /// single device: ~20ms base per forward, ~0.15ms per token.
+    pub fn paper_like() -> Self {
+        LatencyModel {
+            c_base: 20e-3,
+            c_tok: 0.15e-3,
+            c_step: 50e-3,
+        }
+    }
+
+    /// Latency of one forward pass over `n_toks` processed tokens (Eq. 1).
+    #[inline]
+    pub fn t_fwd(&self, n_toks: usize) -> f64 {
+        self.c_base + self.c_tok * n_toks as f64
+    }
+
+    /// Total latency for `n_fwd` passes over `n_toks` total tokens (Eq. 2).
+    #[inline]
+    pub fn t_total(&self, n_fwd: usize, n_toks: usize) -> f64 {
+        self.c_base * n_fwd as f64 + self.c_tok * n_toks as f64 + self.c_step
+    }
+
+    /// The base-cost-dominant regime of §4.2.2 Obs. 4 — when true, the
+    /// optimal policy prioritizes cutting `N_fwd`.
+    pub fn base_dominant(&self, typical_batch_tokens: usize) -> bool {
+        self.c_base > self.c_tok * typical_batch_tokens as f64
+    }
+}
+
+/// Result of fitting the linear model to profile points.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub model: LatencyModel,
+    pub r_squared: f64,
+    /// Mean relative error — the paper reports ≈ 12% (Fig. 8 caption).
+    pub mre: f64,
+    pub n_points: usize,
+    /// The raw `(tokens, seconds)` profile points (Fig. 8 scatter).
+    pub samples: Vec<(usize, f64)>,
+}
+
+/// Least-squares fit of `(tokens_processed, seconds)` samples.
+pub fn fit(samples: &[(usize, f64)]) -> CalibrationReport {
+    let xs: Vec<f64> = samples.iter().map(|(n, _)| *n as f64).collect();
+    let ys: Vec<f64> = samples.iter().map(|(_, t)| *t).collect();
+    let (a, b) = stats::linreg(&xs, &ys);
+    // Clamp to physical values: latency can't be negative.
+    let c_base = a.max(0.0);
+    let c_tok = b.max(0.0);
+    CalibrationReport {
+        model: LatencyModel {
+            c_base,
+            c_tok,
+            c_step: 0.0,
+        },
+        r_squared: stats::r_squared(&xs, &ys, a, b),
+        mre: stats::mean_relative_error(&xs, &ys, a, b),
+        n_points: samples.len(),
+        samples: samples.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn t_fwd_linear() {
+        let m = LatencyModel {
+            c_base: 0.01,
+            c_tok: 0.001,
+            c_step: 0.0,
+        };
+        assert!((m.t_fwd(0) - 0.01).abs() < 1e-12);
+        assert!((m.t_fwd(100) - 0.11).abs() < 1e-12);
+        assert!((m.t_total(10, 100) - (0.1 + 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_recovers_exact_model() {
+        let truth = LatencyModel {
+            c_base: 0.02,
+            c_tok: 0.00015,
+            c_step: 0.0,
+        };
+        let samples: Vec<(usize, f64)> = (1..200).map(|n| (n * 8, truth.t_fwd(n * 8))).collect();
+        let rep = fit(&samples);
+        assert!((rep.model.c_base - truth.c_base).abs() < 1e-9);
+        assert!((rep.model.c_tok - truth.c_tok).abs() < 1e-12);
+        assert!(rep.mre < 1e-9);
+        assert!(rep.r_squared > 0.999999);
+    }
+
+    #[test]
+    fn fit_with_noise_has_paperlike_mre() {
+        // Multiplicative noise around a linear truth: the fit should land
+        // near the truth with a small mean relative error, like Fig. 8.
+        let truth = LatencyModel::paper_like();
+        let mut rng = Rng::seed_from_u64(8);
+        let samples: Vec<(usize, f64)> = (1..300)
+            .map(|n| {
+                let toks = n * 4;
+                let noise = 1.0 + 0.12 * rng.normal();
+                (toks, truth.t_fwd(toks) * noise.max(0.2))
+            })
+            .collect();
+        let rep = fit(&samples);
+        assert!(rep.mre < 0.25, "mre={}", rep.mre);
+        assert!((rep.model.c_tok - truth.c_tok).abs() / truth.c_tok < 0.15);
+    }
+
+    #[test]
+    fn base_dominant_regime() {
+        let m = LatencyModel {
+            c_base: 0.02,
+            c_tok: 0.0001,
+            c_step: 0.0,
+        };
+        assert!(m.base_dominant(50)); // 0.02 > 0.005
+        assert!(!m.base_dominant(500)); // 0.02 < 0.05
+    }
+
+    #[test]
+    fn fit_clamps_negative_intercept() {
+        // Degenerate data sloping through negative intercept.
+        let rep = fit(&[(10, 0.0005), (20, 0.0015), (30, 0.0025)]);
+        assert!(rep.model.c_base >= 0.0);
+    }
+}

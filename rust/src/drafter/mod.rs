@@ -1,0 +1,123 @@
+//! Drafters — the proposal side of speculative decoding (§4.1).
+//!
+//! * [`SuffixDrafter`] — the paper's adaptive nonparametric drafter:
+//!   per-problem (or global) sliding-window suffix indexes, optionally
+//!   combined with a request-local index ("+request" scopes of Fig. 6) and a
+//!   prefix-trie router.
+//! * [`StaticNgramDrafter`] — the frozen parametric baseline standing in for
+//!   EAGLE: calibrated once on epoch-0 rollouts, never updated, so its
+//!   acceptance stays flat while the policy drifts (Fig. 4).
+//! * [`NoneDrafter`] — the VeRL no-speculation baseline.
+
+mod static_ngram;
+mod suffix_drafter;
+
+pub use static_ngram::StaticNgramDrafter;
+pub use suffix_drafter::{HistoryScope, SuffixDrafter};
+
+use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
+
+/// A proposed draft block.
+#[derive(Debug, Clone, Default)]
+pub struct Draft {
+    pub tokens: Vec<TokenId>,
+    /// Empirical per-token confidence (drafter's own estimate; diagnostic).
+    pub confidence: Vec<f32>,
+    /// Length of the context suffix the draft was retrieved from.
+    pub match_len: usize,
+}
+
+impl Draft {
+    pub fn empty() -> Self {
+        Draft::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Common interface for all drafters.
+pub trait Drafter: Send {
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `budget` tokens continuing `context` for a request of
+    /// the given problem.
+    fn draft(
+        &mut self,
+        request: RequestId,
+        problem: ProblemId,
+        context: &[TokenId],
+        budget: usize,
+    ) -> Draft;
+
+    /// Feed freshly *committed* (verified) tokens of an in-flight request —
+    /// powers the "+request" scopes. Default: ignore.
+    fn observe_partial(
+        &mut self,
+        _request: RequestId,
+        _problem: ProblemId,
+        _new_tokens: &[TokenId],
+    ) {
+    }
+
+    /// A request finished; drop any request-local state. Default: ignore.
+    fn end_request(&mut self, _request: RequestId) {}
+
+    /// A rollout completed and was added to history (drafters that adapt
+    /// index it here). Default: ignore (static baselines).
+    fn observe_rollout(&mut self, _rollout: &Rollout) {}
+
+    /// A new training epoch started (window maintenance). Default: ignore.
+    fn roll_epoch(&mut self, _epoch: Epoch) {}
+}
+
+/// The no-speculation baseline: always proposes nothing.
+#[derive(Debug, Default, Clone)]
+pub struct NoneDrafter;
+
+impl Drafter for NoneDrafter {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn draft(&mut self, _r: RequestId, _p: ProblemId, _c: &[TokenId], _b: usize) -> Draft {
+        Draft::empty()
+    }
+}
+
+/// Build a drafter from config.
+pub fn from_config(cfg: &crate::config::DasConfig) -> Box<dyn Drafter> {
+    match cfg.spec.drafter.as_str() {
+        "das" => Box::new(SuffixDrafter::from_config(&cfg.spec)),
+        "static" => Box::new(StaticNgramDrafter::new(4)),
+        "none" => Box::new(NoneDrafter),
+        other => panic!("unknown drafter '{other}' (validate() should have caught this)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_drafter_proposes_nothing() {
+        let mut d = NoneDrafter;
+        assert!(d.draft(1, 1, &[1, 2, 3], 8).is_empty());
+        assert_eq!(d.name(), "none");
+    }
+
+    #[test]
+    fn from_config_dispatch() {
+        let mut cfg = crate::config::DasConfig::default();
+        assert_eq!(from_config(&cfg).name(), "das-suffix");
+        cfg.spec.drafter = "static".into();
+        assert_eq!(from_config(&cfg).name(), "static-ngram");
+        cfg.spec.drafter = "none".into();
+        assert_eq!(from_config(&cfg).name(), "none");
+    }
+}

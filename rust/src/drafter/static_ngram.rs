@@ -1,0 +1,145 @@
+//! Frozen n-gram drafter — the parametric-baseline stand-in for EAGLE
+//! (§4.1.1, Fig. 4).
+//!
+//! EAGLE's failure mode in RL training is *calibration freeze*: the drafter
+//! head is trained against one policy checkpoint and goes stale as the
+//! policy drifts, so its acceptance curve stays flat (or decays) while the
+//! DAS drafter's keeps rising. We reproduce that mechanism with a
+//! nonparametric proxy trained the same way EAGLE would be deployed: fit
+//! once on the FIRST epoch's rollouts, then never update. Using the same
+//! index machinery as the adaptive drafter isolates the variable that
+//! matters — *whether the drafter tracks the policy* — from incidental
+//! representation differences.
+
+use super::{Draft, Drafter};
+use crate::suffix::trie::SuffixTrieIndex;
+use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
+
+pub struct StaticNgramDrafter {
+    index: SuffixTrieIndex,
+    /// Epoch whose rollouts we train on (0 = the first observed epoch).
+    train_epoch: Option<Epoch>,
+    frozen: bool,
+    order: usize,
+}
+
+impl StaticNgramDrafter {
+    /// `order` = maximum n-gram context length used for matching.
+    pub fn new(order: usize) -> Self {
+        StaticNgramDrafter {
+            index: SuffixTrieIndex::new(order + 64),
+            train_epoch: None,
+            frozen: false,
+            order,
+        }
+    }
+
+    /// Pre-train on a calibration corpus (alternative to observing epoch 0).
+    pub fn train(&mut self, corpus: &[Vec<TokenId>]) {
+        for seq in corpus {
+            self.index.insert(seq);
+        }
+        self.frozen = true;
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+}
+
+impl Drafter for StaticNgramDrafter {
+    fn name(&self) -> &'static str {
+        "static-ngram"
+    }
+
+    fn draft(
+        &mut self,
+        _request: RequestId,
+        _problem: ProblemId,
+        context: &[TokenId],
+        budget: usize,
+    ) -> Draft {
+        if budget == 0 || context.is_empty() {
+            return Draft::empty();
+        }
+        let (tokens, confidence) = self.index.draft_weighted(context, self.order, budget);
+        let match_len = self.index.match_len(context, self.order);
+        Draft {
+            tokens,
+            confidence,
+            match_len,
+        }
+    }
+
+    fn observe_rollout(&mut self, rollout: &Rollout) {
+        // Calibration phase only: absorb the first epoch, then freeze.
+        if self.frozen {
+            return;
+        }
+        match self.train_epoch {
+            None => {
+                self.train_epoch = Some(rollout.epoch);
+                self.index.insert(&rollout.tokens);
+            }
+            Some(e) if rollout.epoch == e => self.index.insert(&rollout.tokens),
+            Some(_) => self.frozen = true,
+        }
+    }
+
+    fn roll_epoch(&mut self, epoch: Epoch) {
+        if let Some(e) = self.train_epoch {
+            if epoch > e {
+                self.frozen = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rollout(epoch: Epoch, tokens: Vec<TokenId>) -> Rollout {
+        Rollout {
+            problem: 1,
+            epoch,
+            step: 0,
+            tokens,
+            reward: 0.0,
+        }
+    }
+
+    #[test]
+    fn drafts_from_calibration_corpus() {
+        let mut d = StaticNgramDrafter::new(4);
+        d.train(&[vec![1, 2, 3, 4, 5]]);
+        let draft = d.draft(0, 0, &[2, 3], 2);
+        assert_eq!(draft.tokens, vec![4, 5]);
+    }
+
+    #[test]
+    fn freezes_after_first_epoch() {
+        let mut d = StaticNgramDrafter::new(4);
+        d.observe_rollout(&rollout(0, vec![1, 2, 3]));
+        assert!(!d.is_frozen());
+        d.roll_epoch(1);
+        assert!(d.is_frozen());
+        // Later rollouts are ignored — the drafter is stale by design.
+        d.observe_rollout(&rollout(1, vec![7, 8, 9]));
+        assert!(d.draft(0, 0, &[7, 8], 1).is_empty());
+        // Epoch-0 patterns still work.
+        assert_eq!(d.draft(0, 0, &[1, 2], 1).tokens, vec![3]);
+    }
+
+    #[test]
+    fn stale_after_policy_drift() {
+        // The Fig. 4 mechanism in miniature: policy continuations change,
+        // frozen drafter keeps proposing the old ones.
+        let mut d = StaticNgramDrafter::new(4);
+        d.observe_rollout(&rollout(0, vec![1, 2, 3, 4]));
+        d.roll_epoch(5);
+        // New policy would continue [1,2] with 30 — the static drafter
+        // still proposes 3.
+        assert_eq!(d.draft(0, 0, &[1, 2], 1).tokens, vec![3]);
+    }
+}

@@ -1,0 +1,332 @@
+//! The DAS adaptive nonparametric drafter (§4.1.2).
+//!
+//! History scoping (Fig. 6):
+//! * `Problem` — one sliding-window suffix index per problem (the paper's
+//!   default: per-problem patterns transfer poorly across problems, and
+//!   small shards are cheap to query).
+//! * `ProblemRequest` — per-problem index PLUS a request-local index over
+//!   the tokens generated so far in the current request (captures
+//!   self-repetition; higher acceptance, more query cost).
+//! * `GlobalRequest` — one big global index plus the request-local index
+//!   (the strawman that is slower due to the single large tree).
+//!
+//! An optional prefix-trie router (§4.1.2 "per-request suffix trees")
+//! routes the decode prefix to the most similar prior generation's shard
+//! before querying.
+
+use std::collections::HashMap;
+
+use super::{Draft, Drafter};
+use crate::config::SpecConfig;
+use crate::suffix::trie::SuffixTrieIndex;
+use crate::suffix::window::WindowedIndex;
+use crate::suffix::PrefixRouter;
+use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistoryScope {
+    Problem,
+    ProblemRequest,
+    GlobalRequest,
+}
+
+impl HistoryScope {
+    pub fn parse(s: &str) -> Option<HistoryScope> {
+        match s {
+            "problem" => Some(HistoryScope::Problem),
+            "problem+request" => Some(HistoryScope::ProblemRequest),
+            "global+request" => Some(HistoryScope::GlobalRequest),
+            _ => None,
+        }
+    }
+
+    pub fn uses_request_local(self) -> bool {
+        matches!(self, HistoryScope::ProblemRequest | HistoryScope::GlobalRequest)
+    }
+}
+
+pub struct SuffixDrafter {
+    scope: HistoryScope,
+    /// Per-problem windowed indexes (Problem / ProblemRequest scopes).
+    shards: HashMap<ProblemId, WindowedIndex>,
+    /// Single global index (GlobalRequest scope).
+    global: WindowedIndex,
+    /// Request-local indexes over the tokens generated so far.
+    request_local: HashMap<RequestId, SuffixTrieIndex>,
+    /// Optional prefix router over prior generations of each problem.
+    router: Option<PrefixRouter>,
+    window: usize,
+    match_len: usize,
+    /// Minimum context-suffix match depth before a history draft is trusted.
+    min_match: usize,
+    max_depth: usize,
+    epoch: Epoch,
+    /// Drafts answered from the request-local index (diagnostics).
+    pub local_hits: u64,
+    pub shard_hits: u64,
+    pub misses: u64,
+}
+
+impl SuffixDrafter {
+    pub fn new(scope: HistoryScope, window: usize, match_len: usize, budget_cap: usize, use_router: bool) -> Self {
+        let max_depth = match_len + budget_cap.max(8);
+        SuffixDrafter {
+            scope,
+            shards: HashMap::new(),
+            global: WindowedIndex::new(window, max_depth),
+            request_local: HashMap::new(),
+            router: if use_router {
+                Some(PrefixRouter::new(match_len.max(8)))
+            } else {
+                None
+            },
+            window,
+            match_len,
+            min_match: 2.min(match_len),
+            max_depth,
+            epoch: 0,
+            local_hits: 0,
+            shard_hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn from_config(cfg: &SpecConfig) -> Self {
+        let scope = HistoryScope::parse(&cfg.scope).expect("validated scope");
+        SuffixDrafter::new(scope, cfg.window, cfg.match_len, cfg.budget_cap, cfg.prefix_router)
+    }
+
+    pub fn scope(&self) -> HistoryScope {
+        self.scope
+    }
+
+    /// Total tokens currently indexed across history shards (diagnostics;
+    /// Fig. 6-right's "bigger index = slower" effect is real work here).
+    pub fn indexed_tokens(&self) -> usize {
+        match self.scope {
+            HistoryScope::GlobalRequest => self.global.tokens_indexed(),
+            _ => self.shards.values().map(|w| w.tokens_indexed()).sum(),
+        }
+    }
+
+    fn history_draft(&self, problem: ProblemId, context: &[TokenId], budget: usize) -> Draft {
+        let index = match self.scope {
+            HistoryScope::GlobalRequest => Some(&self.global),
+            _ => self.shards.get(&problem),
+        };
+        let Some(index) = index else { return Draft::empty() };
+        match index.draft(context, self.match_len, budget) {
+            // Require a minimum match depth: a 1-token suffix match is
+            // usually a coincidental token collision somewhere in history,
+            // and drafting from it wastes verification budget (the same
+            // reason SuffixDecoding thresholds its pattern-match scores).
+            Some(d) if d.match_len >= self.min_match => Draft {
+                tokens: d.tokens,
+                confidence: d.confidence,
+                match_len: d.match_len,
+            },
+            _ => Draft::empty(),
+        }
+    }
+}
+
+impl Drafter for SuffixDrafter {
+    fn name(&self) -> &'static str {
+        "das-suffix"
+    }
+
+    fn draft(
+        &mut self,
+        request: RequestId,
+        problem: ProblemId,
+        context: &[TokenId],
+        budget: usize,
+    ) -> Draft {
+        if budget == 0 || context.is_empty() {
+            return Draft::empty();
+        }
+        // Request-local first: self-repetition within a generation is the
+        // strongest signal when present (loops, repeated derivation steps).
+        if self.scope.uses_request_local() {
+            if let Some(local) = self.request_local.get(&request) {
+                let (tokens, confidence) = local.draft_weighted(context, self.match_len, budget);
+                // Only trust local matches that are reasonably deep.
+                let mlen = local.match_len(context, self.match_len);
+                if !tokens.is_empty() && mlen >= 3.min(self.match_len) {
+                    self.local_hits += 1;
+                    return Draft {
+                        tokens,
+                        confidence,
+                        match_len: mlen,
+                    };
+                }
+            }
+        }
+        // Router: narrow the context to the shard of the most similar prior
+        // generation. (Per-problem shards already give strong locality; the
+        // router mainly matters for the global scope, mirroring §4.1.2's
+        // note that its benefit is workload-dependent.)
+        let routed_problem = match &self.router {
+            Some(r) => r.route(context).map(|(shard, _)| shard).unwrap_or(problem),
+            None => problem,
+        };
+        let d = self.history_draft(routed_problem, context, budget);
+        if d.is_empty() && routed_problem != problem {
+            // Router miss: fall back to the request's own problem shard.
+            let d2 = self.history_draft(problem, context, budget);
+            if d2.is_empty() {
+                self.misses += 1;
+            } else {
+                self.shard_hits += 1;
+            }
+            return d2;
+        }
+        if d.is_empty() {
+            self.misses += 1;
+        } else {
+            self.shard_hits += 1;
+        }
+        d
+    }
+
+    fn observe_partial(&mut self, request: RequestId, _problem: ProblemId, new_tokens: &[TokenId]) {
+        if !self.scope.uses_request_local() || new_tokens.is_empty() {
+            return;
+        }
+        // Request-local index: re-index the request's committed tokens.
+        // Cheap because requests are bounded and the trie depth is capped.
+        let entry = self
+            .request_local
+            .entry(request)
+            .or_insert_with(|| SuffixTrieIndex::new(self.max_depth));
+        entry.insert(new_tokens);
+    }
+
+    fn end_request(&mut self, request: RequestId) {
+        self.request_local.remove(&request);
+    }
+
+    fn observe_rollout(&mut self, rollout: &Rollout) {
+        if rollout.tokens.is_empty() {
+            return;
+        }
+        match self.scope {
+            HistoryScope::GlobalRequest => self.global.insert(rollout.epoch, &rollout.tokens),
+            _ => {
+                self.shards
+                    .entry(rollout.problem)
+                    .or_insert_with(|| WindowedIndex::new(self.window, self.max_depth))
+                    .insert(rollout.epoch, &rollout.tokens);
+            }
+        }
+        if let Some(router) = &mut self.router {
+            router.register(rollout.problem, &rollout.tokens);
+        }
+    }
+
+    fn roll_epoch(&mut self, epoch: Epoch) {
+        self.epoch = epoch;
+        self.global.roll_epoch(epoch);
+        for shard in self.shards.values_mut() {
+            shard.roll_epoch(epoch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rollout(problem: ProblemId, epoch: Epoch, tokens: Vec<TokenId>) -> Rollout {
+        Rollout {
+            problem,
+            epoch,
+            step: 0,
+            tokens,
+            reward: 0.0,
+        }
+    }
+
+    #[test]
+    fn per_problem_isolation() {
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 8, 8, 16, false);
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 3, 4, 5]));
+        d.observe_rollout(&rollout(2, 0, vec![1, 2, 9, 9, 9]));
+        // Problem 1 context retrieves problem-1 continuations only.
+        let draft = d.draft(100, 1, &[1, 2], 3);
+        assert_eq!(draft.tokens, vec![3, 4, 5]);
+        // Problem 2 shard differs.
+        let draft = d.draft(101, 2, &[1, 2], 3);
+        assert_eq!(draft.tokens, vec![9, 9, 9]);
+        // Unknown problem: nothing.
+        assert!(d.draft(102, 3, &[1, 2], 3).is_empty());
+    }
+
+    #[test]
+    fn global_scope_shares_across_problems() {
+        let mut d = SuffixDrafter::new(HistoryScope::GlobalRequest, 8, 8, 16, false);
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 3, 4]));
+        let draft = d.draft(100, 999, &[1, 2], 2);
+        assert_eq!(draft.tokens, vec![3, 4]);
+    }
+
+    #[test]
+    fn request_local_self_repetition() {
+        let mut d = SuffixDrafter::new(HistoryScope::ProblemRequest, 8, 8, 16, false);
+        // No history at all, but the request repeats itself.
+        d.observe_partial(7, 1, &[10, 11, 12, 13, 10, 11, 12]);
+        let draft = d.draft(7, 1, &[10, 11, 12], 1);
+        assert_eq!(draft.tokens, vec![13]);
+        assert_eq!(d.local_hits, 1);
+        // After the request ends, local state is dropped.
+        d.end_request(7);
+        assert!(d.draft(7, 1, &[10, 11, 12], 1).is_empty());
+    }
+
+    #[test]
+    fn window_eviction_forgets_old_epochs() {
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 2, 8, 16, false);
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 3]));
+        for e in 1..4 {
+            d.roll_epoch(e);
+            d.observe_rollout(&rollout(1, e, vec![7, 8, 9]));
+        }
+        assert!(d.draft(1, 1, &[1, 2], 2).is_empty(), "epoch-0 must be evicted");
+        assert_eq!(d.draft(2, 1, &[7, 8], 2).tokens, vec![9]);
+    }
+
+    #[test]
+    fn router_routes_to_similar_generation() {
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 8, 8, 16, true);
+        d.observe_rollout(&rollout(1, 0, vec![5, 6, 7, 8]));
+        // Context starts exactly like problem 1's prior generation; even if
+        // the engine thinks it's problem 42 (e.g. shared prefix patterns),
+        // the router redirects to shard 1.
+        let draft = d.draft(9, 42, &[5, 6, 7], 1);
+        assert_eq!(draft.tokens, vec![8]);
+    }
+
+    #[test]
+    fn zero_budget_or_empty_context() {
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 8, 8, 16, false);
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 3]));
+        assert!(d.draft(1, 1, &[1, 2], 0).is_empty());
+        assert!(d.draft(1, 1, &[], 4).is_empty());
+    }
+
+    #[test]
+    fn acceptance_improves_with_fresh_history() {
+        // Sanity for the Fig. 4 mechanism: once recent rollouts are indexed,
+        // drafts match the current policy's continuations.
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 4, 8, 16, false);
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 3, 4, 5, 6]));
+        // Policy drifted: new rollouts continue differently.
+        d.roll_epoch(1);
+        d.observe_rollout(&rollout(1, 1, vec![1, 2, 30, 40, 50, 60]));
+        d.roll_epoch(2);
+        d.observe_rollout(&rollout(1, 2, vec![1, 2, 30, 40, 50, 60]));
+        let draft = d.draft(5, 1, &[1, 2], 4);
+        // Recent continuation (30,40,...) outvotes the stale one (3,4,...).
+        assert_eq!(draft.tokens[0], 30);
+    }
+}

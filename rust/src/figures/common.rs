@@ -1,0 +1,53 @@
+//! Shared helpers for figure drivers.
+
+use super::FigOpts;
+use crate::config::{preset, DasConfig};
+use crate::model::sim::{SimModel, SimModelConfig};
+use crate::rl::{StepStats, Trainer};
+
+/// Scale a preset down so figures regenerate in seconds by default;
+/// `--full` keeps the preset's paper-scale settings.
+pub fn scaled_config(preset_name: &str, opts: &FigOpts) -> DasConfig {
+    let mut cfg = preset(preset_name).expect("known preset");
+    cfg.seed = opts.seed;
+    if !opts.full {
+        cfg.workload.n_problems = cfg.workload.n_problems.min(24);
+        cfg.train.problems_per_step = cfg.train.problems_per_step.min(8);
+        cfg.rollout.samples_per_problem = cfg.rollout.samples_per_problem.min(4);
+        cfg.rollout.max_new_tokens = cfg.rollout.max_new_tokens.min(512);
+        cfg.rollout.max_batch = cfg.rollout.max_batch.min(16);
+        cfg.workload.len_mu = cfg.workload.len_mu.min(5.0);
+    }
+    cfg
+}
+
+pub fn steps_for(opts: &FigOpts, default_steps: usize, full_steps: usize) -> usize {
+    if opts.full {
+        full_steps
+    } else {
+        default_steps
+    }
+}
+
+/// Build a sim model + trainer for a config.
+pub fn sim_trainer(cfg: &DasConfig) -> (SimModel, Trainer) {
+    let model = SimModel::new(SimModelConfig::from_das(cfg));
+    let trainer = Trainer::new(cfg.clone());
+    (model, trainer)
+}
+
+/// Run a full sim training and return the per-step stats.
+pub fn run_variant(cfg: &DasConfig, steps: usize) -> Vec<StepStats> {
+    let (mut model, mut trainer) = sim_trainer(cfg);
+    trainer.run_sim(&mut model, steps)
+}
+
+pub fn total_gen_time(stats: &[StepStats]) -> f64 {
+    stats.iter().map(|s| s.metrics.gen_time).sum()
+}
+
+pub fn mean_late_reward(stats: &[StepStats]) -> f64 {
+    let k = (stats.len() / 4).max(1);
+    let tail = &stats[stats.len() - k..];
+    crate::util::stats::mean(&tail.iter().map(|s| s.reward).collect::<Vec<_>>())
+}

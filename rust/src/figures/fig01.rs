@@ -1,0 +1,90 @@
+//! Fig. 1 — effective batch size collapse during rollout, w/ and w/o DAS.
+//!
+//! Paper: decoding starts at full parallelism; short sequences finish and
+//! the effective batch shrinks until a few long stragglers set the step
+//! makespan. DAS both shortens total latency and shrinks the tail.
+
+use super::common::{run_variant, scaled_config, sim_trainer, steps_for};
+use super::{FigOpts, FigureOutput};
+use crate::telemetry::Table;
+
+pub fn run(opts: &FigOpts) -> FigureOutput {
+    let warmup = steps_for(opts, 4, 8);
+    let mut variants = Vec::new();
+    for drafter in ["none", "das"] {
+        let mut cfg = scaled_config("math_rl", opts);
+        cfg.spec.drafter = drafter.into();
+        // Warm the drafter/history, then profile ONE representative step.
+        let (mut model, mut trainer) = sim_trainer(&cfg);
+        let mut stats = trainer.run_sim(&mut model, warmup + 1);
+        let last = stats.pop().unwrap();
+        variants.push((drafter, last));
+    }
+
+    let mut table = Table::new("fig01_effective_batch", &["round", "none", "das"]);
+    let a = &variants[0].1.metrics.eff_batch;
+    let b = &variants[1].1.metrics.eff_batch;
+    for i in 0..a.len().max(b.len()) {
+        table.row(vec![
+            i.to_string(),
+            a.get(i).map(|v| v.to_string()).unwrap_or_default(),
+            b.get(i).map(|v| v.to_string()).unwrap_or_default(),
+        ]);
+    }
+    let makespan_none = variants[0].1.metrics.gen_time;
+    let makespan_das = variants[1].1.metrics.gen_time;
+    let rounds_none = variants[0].1.metrics.rounds;
+    let rounds_das = variants[1].1.metrics.rounds;
+    // Tail fraction: rounds spent at effective batch <= 25% of max.
+    let tail = |t: &[u32]| -> f64 {
+        if t.is_empty() {
+            return 0.0;
+        }
+        let max = *t.iter().max().unwrap() as f64;
+        t.iter().filter(|&&v| (v as f64) <= 0.25 * max).count() as f64 / t.len() as f64
+    };
+    let summary = format!(
+        "Fig.1: decode rounds none={rounds_none} das={rounds_das} \
+         (makespan {:.2}s -> {:.2}s, {:.0}% less); rounds in the collapsed \
+         tail (eff.batch <= 25% of peak): none={:.0}% das={:.0}%. Paper: a few \
+         long stragglers dominate after ~100 steps; DAS shrinks the tail.",
+        makespan_none,
+        makespan_das,
+        100.0 * (1.0 - makespan_das / makespan_none),
+        100.0 * tail(a),
+        100.0 * tail(b),
+    );
+    let _ = run_variant; // (re-exported helper used by other figures)
+    FigureOutput {
+        tables: vec![table],
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collapse_and_das_improvement() {
+        let out = run(&FigOpts::default());
+        let t = &out.tables[0];
+        assert!(t.rows.len() > 10);
+        // Baseline trace starts at max batch and ends at 1.
+        let first: u32 = t.rows.first().unwrap()[1].parse().unwrap();
+        let last: u32 = t.rows.last().unwrap()[1].parse::<u32>().unwrap_or_else(|_| {
+            // das column may be longer; find last non-empty baseline value
+            t.rows
+                .iter()
+                .rev()
+                .find_map(|r| r[1].parse().ok())
+                .unwrap()
+        });
+        assert!(first >= 8);
+        assert!(last <= 2);
+        // DAS uses fewer rounds than baseline.
+        let das_rounds = t.rows.iter().filter(|r| !r[2].is_empty()).count();
+        let none_rounds = t.rows.iter().filter(|r| !r[1].is_empty()).count();
+        assert!(das_rounds < none_rounds, "das={das_rounds} none={none_rounds}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig. 2 — rollout similarity structure across training.
+//!
+//! Left: per-iteration n-gram reuse ratio. Right: pairwise epoch similarity
+//! matrix — block structure near the diagonal (recency bias from policy
+//! drift) is what justifies sliding-window drafters.
+
+use super::common::{scaled_config, sim_trainer, steps_for};
+use super::{FigOpts, FigureOutput};
+use crate::telemetry::Table;
+
+const NGRAM: usize = 4;
+
+pub fn run(opts: &FigOpts) -> FigureOutput {
+    let mut cfg = scaled_config("math_rl", opts);
+    // Several epochs of history: few problems per step, more steps.
+    cfg.workload.n_problems = 8;
+    cfg.train.problems_per_step = 8;
+    let steps = steps_for(opts, 10, 30);
+    let (mut model, mut trainer) = sim_trainer(&cfg);
+    trainer.run_sim(&mut model, steps);
+
+    let reuse = trainer.history.reuse_per_iteration(NGRAM);
+    let mut left = Table::new("fig02_reuse_per_iteration", &["epoch", "reuse_ratio"]);
+    for (e, r) in &reuse {
+        left.row_f(&[*e as f64, *r]);
+    }
+
+    let m = trainer.history.epoch_similarity_matrix(NGRAM);
+    let epochs = trainer.history.epochs().to_vec();
+    let mut cols = vec!["epoch".to_string()];
+    cols.extend(epochs.iter().map(|e| format!("e{e}")));
+    let mut right = Table::new(
+        "fig02_epoch_similarity",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (i, e) in epochs.iter().enumerate() {
+        let mut row = vec![e.to_string()];
+        row.extend(m[i].iter().map(|v| format!("{v:.4}")));
+        right.row(row);
+    }
+
+    // Quantify the block-diagonal claim: adjacent-epoch similarity vs
+    // most-distant-pair similarity.
+    let n = m.len();
+    let adjacent: Vec<f64> = (1..n).map(|i| m[i - 1][i]).collect();
+    let adj = crate::util::stats::mean(&adjacent);
+    let far = if n >= 2 { m[0][n - 1] } else { 0.0 };
+    let reuse_last = reuse.last().map(|(_, r)| *r).unwrap_or(0.0);
+    let summary = format!(
+        "Fig.2: n-gram reuse vs previous iteration reaches {:.2} by the last \
+         epoch (paper: elevated reuse across epochs); adjacent-epoch \
+         similarity {:.3} vs epoch-0↔epoch-{} similarity {:.3} — the \
+         near-diagonal block structure that motivates sliding windows.",
+        reuse_last,
+        adj,
+        n.saturating_sub(1),
+        far
+    );
+    FigureOutput {
+        tables: vec![left, right],
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recency_structure_reproduced() {
+        let out = run(&FigOpts::default());
+        // Parse the similarity matrix back out of the table.
+        let right = &out.tables[1];
+        let n = right.rows.len();
+        assert!(n >= 4);
+        let val = |i: usize, j: usize| -> f64 { right.rows[i][j + 1].parse().unwrap() };
+        // Diagonal dominant.
+        assert!(val(1, 1) > val(1, n - 1));
+        // Adjacent beats distant on average.
+        let adj: f64 = (1..n).map(|i| val(i - 1, i)).sum::<f64>() / (n - 1) as f64;
+        assert!(
+            adj > val(0, n - 1) + 0.02,
+            "adjacent {adj} vs far {}",
+            val(0, n - 1)
+        );
+        // Reuse series exists and rises overall.
+        let left = &out.tables[0];
+        let first: f64 = left.rows.first().unwrap()[1].parse().unwrap();
+        let last: f64 = left.rows.last().unwrap()[1].parse().unwrap();
+        assert!(last > first, "reuse should rise as policy sharpens");
+    }
+}

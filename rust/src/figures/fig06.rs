@@ -1,0 +1,99 @@
+//! Fig. 6 — history scoping ablation: problem vs problem+request vs
+//! global+request.
+//!
+//! Paper: problem-scoped histories beat the global index on acceptance AND
+//! on speculation latency (one large global index is slower to query and
+//! maintain).
+
+use super::common::{scaled_config, sim_trainer, steps_for};
+use super::{FigOpts, FigureOutput};
+use crate::telemetry::Table;
+
+const SCOPES: [&str; 3] = ["problem", "problem+request", "global+request"];
+
+pub fn run(opts: &FigOpts) -> FigureOutput {
+    let steps = steps_for(opts, 12, 30);
+    let mut accept = vec![Vec::new(); SCOPES.len()];
+    let mut lat = vec![Vec::new(); SCOPES.len()];
+    for (i, scope) in SCOPES.iter().enumerate() {
+        let mut cfg = scaled_config("math_rl", opts);
+        cfg.spec.scope = scope.to_string();
+        cfg.spec.budget_policy = "uniform".into();
+        // Make the workload big enough that a global tree is meaningfully
+        // larger than per-problem shards.
+        cfg.workload.n_problems = 24;
+        let (mut model, mut trainer) = sim_trainer(&cfg);
+        for s in trainer.run_sim(&mut model, steps) {
+            accept[i].push(s.metrics.accepted_per_round());
+            lat[i].push(s.metrics.draft_ms_per_token());
+        }
+    }
+    let mut t_acc = Table::new(
+        "fig06_accept_by_scope",
+        &["step", "problem", "problem_request", "global_request"],
+    );
+    let mut t_lat = Table::new(
+        "fig06_latency_by_scope",
+        &["step", "problem_ms", "problem_request_ms", "global_request_ms"],
+    );
+    for s in 0..steps {
+        t_acc.row_f(&[s as f64, accept[0][s], accept[1][s], accept[2][s]]);
+        t_lat.row_f(&[s as f64, lat[0][s], lat[1][s], lat[2][s]]);
+    }
+    let late = |xs: &[f64]| {
+        let k = (xs.len() / 3).max(1);
+        crate::util::stats::mean(&xs[xs.len() - k..])
+    };
+    let summary = format!(
+        "Fig.6: accepted/round — problem {:.2}, problem+request {:.2}, \
+         global+request {:.2}; speculation ms/token — {:.4} / {:.4} / {:.4}. \
+         Paper: problem-scoped ≥ global on acceptance and cheaper to query.",
+        late(&accept[0]),
+        late(&accept[1]),
+        late(&accept[2]),
+        late(&lat[0]),
+        late(&lat[1]),
+        late(&lat[2]),
+    );
+    FigureOutput {
+        tables: vec![t_acc, t_lat],
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_scope_at_least_matches_global_acceptance() {
+        let out = run(&FigOpts::default());
+        let t = &out.tables[0];
+        let late = |col: usize| -> f64 {
+            let k = t.rows.len() / 3;
+            t.rows[t.rows.len() - k..]
+                .iter()
+                .map(|r| r[col].parse::<f64>().unwrap())
+                .sum::<f64>()
+                / k as f64
+        };
+        // Problem scope should not lose to global scope on acceptance.
+        assert!(
+            late(1) >= 0.9 * late(3),
+            "problem {} vs global {}",
+            late(1),
+            late(3)
+        );
+        // Latency: global index must not be cheaper than problem shards.
+        let l = &out.tables[1];
+        let lat = |col: usize| -> f64 {
+            let k = l.rows.len() / 3;
+            l.rows[l.rows.len() - k..]
+                .iter()
+                .map(|r| r[col].parse::<f64>().unwrap())
+                .sum::<f64>()
+                / k as f64
+        };
+        assert!(lat(3) >= 0.7 * lat(1), "global {} vs problem {}", lat(3), lat(1));
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig. 7 — sliding-window size ablation (4 / 8 / 16 / 32 / all).
+//!
+//! Paper: larger windows give higher acceptance (more matching
+//! continuations) but `window_all` pays the highest per-token speculation
+//! latency (querying and maintaining the full history, including stale
+//! trajectories); moderate windows (16/32) strike the balance.
+
+use super::common::{scaled_config, sim_trainer, steps_for};
+use super::{FigOpts, FigureOutput};
+use crate::telemetry::Table;
+
+const WINDOWS: [usize; 5] = [4, 8, 16, 32, 0]; // 0 = all
+
+pub fn run(opts: &FigOpts) -> FigureOutput {
+    let steps = steps_for(opts, 14, 40);
+    let mut accept = vec![Vec::new(); WINDOWS.len()];
+    let mut lat = vec![Vec::new(); WINDOWS.len()];
+    for (i, &w) in WINDOWS.iter().enumerate() {
+        let mut cfg = scaled_config("math_rl", opts);
+        cfg.spec.window = w;
+        cfg.spec.budget_policy = "uniform".into();
+        // Epochs advance quickly so windows differentiate: few problems.
+        cfg.workload.n_problems = 8;
+        cfg.train.problems_per_step = 8;
+        let (mut model, mut trainer) = sim_trainer(&cfg);
+        for s in trainer.run_sim(&mut model, steps) {
+            accept[i].push(s.metrics.accepted_per_round());
+            lat[i].push(s.metrics.draft_ms_per_token());
+        }
+    }
+    let names = ["w4", "w8", "w16", "w32", "all"];
+    let mut t_acc = Table::new(
+        "fig07_accept_by_window",
+        &["step", "w4", "w8", "w16", "w32", "all"],
+    );
+    let mut t_lat = Table::new(
+        "fig07_latency_by_window",
+        &["step", "w4_ms", "w8_ms", "w16_ms", "w32_ms", "all_ms"],
+    );
+    for s in 0..steps {
+        t_acc.row_f(&[
+            s as f64, accept[0][s], accept[1][s], accept[2][s], accept[3][s], accept[4][s],
+        ]);
+        t_lat.row_f(&[s as f64, lat[0][s], lat[1][s], lat[2][s], lat[3][s], lat[4][s]]);
+    }
+    let late = |xs: &[f64]| {
+        let k = (xs.len() / 3).max(1);
+        crate::util::stats::mean(&xs[xs.len() - k..])
+    };
+    let mut parts = Vec::new();
+    for (i, n) in names.iter().enumerate() {
+        parts.push(format!("{n}: {:.2} acc / {:.4} ms", late(&accept[i]), late(&lat[i])));
+    }
+    let summary = format!(
+        "Fig.7: {} — larger windows raise acceptance; window_all pays the \
+         highest query latency (paper: moderate windows 16/32 balance best).",
+        parts.join("; ")
+    );
+    FigureOutput {
+        tables: vec![t_acc, t_lat],
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_tradeoff_reproduced() {
+        let out = run(&FigOpts::default());
+        let acc = &out.tables[0];
+        let lat = &out.tables[1];
+        let late = |t: &crate::telemetry::Table, col: usize| -> f64 {
+            let k = (t.rows.len() / 3).max(1);
+            t.rows[t.rows.len() - k..]
+                .iter()
+                .map(|r| r[col].parse::<f64>().unwrap())
+                .sum::<f64>()
+                / k as f64
+        };
+        // Acceptance: all/32 >= 4 (more history = more matches).
+        assert!(
+            late(acc, 5).max(late(acc, 4)) >= late(acc, 1) * 0.95,
+            "large windows should not lose acceptance: w4={} w32={} all={}",
+            late(acc, 1),
+            late(acc, 4),
+            late(acc, 5)
+        );
+        // Latency: window_all must cost at least as much as w4.
+        assert!(
+            late(lat, 5) >= late(lat, 1) * 0.8,
+            "all={} w4={}",
+            late(lat, 5),
+            late(lat, 1)
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig. 13 — robustness along sequence length and batch size.
+//!
+//! Paper (Qwen3-8B code): halving the max decode length (16k→8k) still
+//! yields >30% rollout speedup; halving the effective batch (32→16)
+//! preserves a similar fractional speedup — the benefit doesn't depend on a
+//! particular batching regime.
+
+use super::common::{scaled_config, sim_trainer, steps_for, total_gen_time};
+use super::{FigOpts, FigureOutput};
+use crate::telemetry::Table;
+
+pub fn run(opts: &FigOpts) -> FigureOutput {
+    let steps = steps_for(opts, 12, 30);
+    // (label, max_new_tokens scale, batch scale)
+    let axes: [(&str, f64, f64); 3] = [
+        ("default", 1.0, 1.0),
+        ("half_seq_len", 0.5, 1.0),
+        ("half_batch", 1.0, 0.5),
+    ];
+    let mut rows = Vec::new();
+    for (label, len_scale, batch_scale) in &axes {
+        let mut speedups = Vec::new();
+        let mut times = (0.0, 0.0);
+        for drafter in ["none", "das"] {
+            let mut cfg = scaled_config("code_rl", opts);
+            cfg.spec.drafter = drafter.into();
+            cfg.rollout.max_new_tokens =
+                ((cfg.rollout.max_new_tokens as f64 * len_scale) as usize).max(32);
+            cfg.rollout.max_batch = ((cfg.rollout.max_batch as f64 * batch_scale) as usize).max(2);
+            // Shrink canonical lengths along with the cap so the workload
+            // stays length-limited the same way the paper's 8k run is.
+            if *len_scale < 1.0 {
+                cfg.workload.len_mu += len_scale.ln();
+            }
+            let (mut model, mut trainer) = sim_trainer(&cfg);
+            let stats = trainer.run_sim(&mut model, steps);
+            let t = total_gen_time(&stats[1..]);
+            if drafter == "none" {
+                times.0 = t;
+            } else {
+                times.1 = t;
+            }
+        }
+        let speedup = 100.0 * (1.0 - times.1 / times.0);
+        speedups.push(speedup);
+        rows.push((label.to_string(), times.0, times.1, speedup));
+    }
+    let mut t = Table::new(
+        "fig13_robustness",
+        &["variant", "baseline_s", "das_s", "reduction_pct"],
+    );
+    for (label, b, d, s) in &rows {
+        t.row(vec![
+            label.clone(),
+            format!("{b:.3}"),
+            format!("{d:.3}"),
+            format!("{s:.1}"),
+        ]);
+    }
+    let summary = format!(
+        "Fig.13: rollout-time reduction — default {:.0}%, half-seq-len \
+         {:.0}%, half-batch {:.0}% (paper: >30% at 8k, similar fractional \
+         savings at batch 16 — the speedup is regime-robust).",
+        rows[0].3, rows[1].3, rows[2].3
+    );
+    FigureOutput {
+        tables: vec![t],
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_survives_both_axes() {
+        let out = run(&FigOpts::default());
+        for row in &out.tables[0].rows {
+            let red: f64 = row[3].parse().unwrap();
+            assert!(
+                red > 10.0,
+                "variant {} lost the speedup: {red:.1}%",
+                row[0]
+            );
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure reproduction harness — one driver per figure in the paper's
+//! evaluation (see DESIGN.md §4 for the index).
+//!
+//! Every driver returns one or more [`Table`]s: printed to stdout and
+//! written as CSV under `results/`. Run via `das figures --fig N` or
+//! `das figures --all`.
+
+use crate::telemetry::Table;
+
+mod common;
+pub mod fig01;
+pub mod fig02;
+pub mod fig04;
+pub mod fig05;
+pub mod fig06;
+pub mod fig07;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig12;
+pub mod fig13;
+
+/// Common options for figure drivers (scaled-down defaults keep every
+/// figure under a couple of minutes; `--full` uses paper-scale settings).
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    pub seed: u64,
+    pub full: bool,
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            seed: 17,
+            full: false,
+            out_dir: std::path::PathBuf::from("results"),
+        }
+    }
+}
+
+pub struct FigureOutput {
+    pub tables: Vec<Table>,
+    /// One-line summary of the reproduced claim vs the paper's.
+    pub summary: String,
+}
+
+/// Which figure ids exist (11 reuses the fig10 driver with the code preset;
+/// 3 is the system diagram — nothing to run).
+pub fn known_figures() -> &'static [u32] {
+    &[1, 2, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13]
+}
+
+pub fn run(fig: u32, opts: &FigOpts) -> anyhow::Result<FigureOutput> {
+    match fig {
+        1 => Ok(fig01::run(opts)),
+        2 => Ok(fig02::run(opts)),
+        4 => Ok(fig04::run(opts)),
+        5 => Ok(fig05::run(opts)),
+        6 => Ok(fig06::run(opts)),
+        7 => Ok(fig07::run(opts)),
+        8 => fig08::run(opts),
+        9 => Ok(fig09::run(opts)),
+        10 => Ok(fig10::run(opts, "math_rl", "fig10")),
+        11 => Ok(fig10::run(opts, "code_rl", "fig11")),
+        12 => Ok(fig12::run(opts)),
+        13 => Ok(fig13::run(opts)),
+        other => anyhow::bail!(
+            "unknown figure {other}; available: {:?} (3 is the system diagram)",
+            known_figures()
+        ),
+    }
+}
+
+/// Emit the output: print tables, write CSVs, print the summary.
+pub fn emit(out: &FigureOutput, opts: &FigOpts) -> anyhow::Result<()> {
+    for t in &out.tables {
+        t.print();
+        let path = t.write_csv(&opts.out_dir)?;
+        println!("→ {}", path.display());
+    }
+    println!("\n{}", out.summary);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(run(99, &FigOpts::default()).is_err());
+        assert!(run(3, &FigOpts::default()).is_err());
+    }
+}

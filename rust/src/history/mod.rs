@@ -1,0 +1,222 @@
+//! Rollout history store + cross-epoch similarity analysis (Fig. 2).
+//!
+//! The paper's Insight-2 rests on two measurements over stored rollouts:
+//! the per-iteration *n-gram reuse ratio* (how much of each new rollout
+//! already appeared in the previous iteration's rollouts for the same
+//! problem) and the *pairwise epoch similarity matrix* (block structure
+//! near the diagonal ⇒ recency bias ⇒ sliding windows).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::tokens::{Epoch, ProblemId, Rollout, TokenId};
+
+/// N-gram reuse: fraction of `text`'s n-grams that occur anywhere in
+/// `corpus` (the Fig. 2-left metric).
+pub fn ngram_reuse(corpus: &[&[TokenId]], text: &[TokenId], n: usize) -> f64 {
+    if text.len() < n {
+        return 0.0;
+    }
+    let mut grams: HashSet<&[TokenId]> = HashSet::new();
+    for seq in corpus {
+        if seq.len() >= n {
+            for w in seq.windows(n) {
+                grams.insert(w);
+            }
+        }
+    }
+    let total = text.len() - n + 1;
+    let hit = text.windows(n).filter(|w| grams.contains(*w)).count();
+    hit as f64 / total as f64
+}
+
+/// Symmetric similarity between two rollout sets: mean of directional
+/// n-gram reuse both ways.
+pub fn set_similarity(a: &[&[TokenId]], b: &[&[TokenId]], n: usize) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let dir = |from: &[&[TokenId]], to: &[&[TokenId]]| -> f64 {
+        let vals: Vec<f64> = to.iter().map(|t| ngram_reuse(from, t, n)).collect();
+        crate::util::stats::mean(&vals)
+    };
+    0.5 * (dir(a, b) + dir(b, a))
+}
+
+/// Store of completed rollouts, indexed by (problem, epoch).
+#[derive(Debug, Default)]
+pub struct RolloutHistory {
+    by_problem_epoch: HashMap<(ProblemId, Epoch), Vec<Vec<TokenId>>>,
+    epochs: Vec<Epoch>,
+}
+
+impl RolloutHistory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, r: &Rollout) {
+        if !self.epochs.contains(&r.epoch) {
+            self.epochs.push(r.epoch);
+            self.epochs.sort_unstable();
+        }
+        self.by_problem_epoch
+            .entry((r.problem, r.epoch))
+            .or_default()
+            .push(r.tokens.clone());
+    }
+
+    pub fn epochs(&self) -> &[Epoch] {
+        &self.epochs
+    }
+
+    pub fn rollouts(&self, problem: ProblemId, epoch: Epoch) -> Vec<&[TokenId]> {
+        self.by_problem_epoch
+            .get(&(problem, epoch))
+            .map(|v| v.iter().map(|x| x.as_slice()).collect())
+            .unwrap_or_default()
+    }
+
+    fn epoch_rollouts(&self, epoch: Epoch) -> Vec<(ProblemId, &[TokenId])> {
+        self.by_problem_epoch
+            .iter()
+            .filter(|((_, e), _)| *e == epoch)
+            .flat_map(|((p, _), v)| v.iter().map(move |x| (*p, x.as_slice())))
+            .collect()
+    }
+
+    /// Fig. 2-left series: for each epoch e > first, the mean per-problem
+    /// reuse of epoch-e rollouts against epoch-(e−1) rollouts.
+    pub fn reuse_per_iteration(&self, n: usize) -> Vec<(Epoch, f64)> {
+        let mut out = Vec::new();
+        for w in self.epochs.windows(2) {
+            let (prev, cur) = (w[0], w[1]);
+            let mut vals = Vec::new();
+            for ((p, e), texts) in &self.by_problem_epoch {
+                if *e != cur {
+                    continue;
+                }
+                let prev_set = self.rollouts(*p, prev);
+                if prev_set.is_empty() {
+                    continue;
+                }
+                for t in texts {
+                    vals.push(ngram_reuse(&prev_set, t, n));
+                }
+            }
+            out.push((cur, crate::util::stats::mean(&vals)));
+        }
+        out
+    }
+
+    /// Fig. 2-right: pairwise epoch similarity matrix (problem-matched).
+    pub fn epoch_similarity_matrix(&self, n: usize) -> Vec<Vec<f64>> {
+        let es = self.epochs.clone();
+        let mut m = vec![vec![0.0; es.len()]; es.len()];
+        for (i, &ei) in es.iter().enumerate() {
+            for (j, &ej) in es.iter().enumerate() {
+                if j < i {
+                    m[i][j] = m[j][i];
+                    continue;
+                }
+                // Problem-matched similarity, averaged over problems present
+                // in both epochs.
+                let probs: HashSet<ProblemId> = self
+                    .epoch_rollouts(ei)
+                    .iter()
+                    .map(|(p, _)| *p)
+                    .collect();
+                let mut vals = Vec::new();
+                for p in probs {
+                    let a = self.rollouts(p, ei);
+                    let b = self.rollouts(p, ej);
+                    if !a.is_empty() && !b.is_empty() {
+                        vals.push(set_similarity(&a, &b, n));
+                    }
+                }
+                m[i][j] = crate::util::stats::mean(&vals);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ro(problem: ProblemId, epoch: Epoch, tokens: Vec<TokenId>) -> Rollout {
+        Rollout {
+            problem,
+            epoch,
+            step: 0,
+            tokens,
+            reward: 0.0,
+        }
+    }
+
+    #[test]
+    fn ngram_reuse_basics() {
+        let c1 = [1u32, 2, 3, 4, 5];
+        let corpus: Vec<&[u32]> = vec![&c1];
+        assert!((ngram_reuse(&corpus, &[1, 2, 3], 3) - 1.0).abs() < 1e-12);
+        assert_eq!(ngram_reuse(&corpus, &[7, 8, 9], 3), 0.0);
+        // Half the 2-grams of [1,2,9,9]: (1,2) yes, (2,9) no, (9,9) no.
+        assert!((ngram_reuse(&corpus, &[1, 2, 9, 9], 2) - 1.0 / 3.0).abs() < 1e-12);
+        // Text shorter than n.
+        assert_eq!(ngram_reuse(&corpus, &[1], 3), 0.0);
+    }
+
+    #[test]
+    fn identical_sets_have_similarity_one() {
+        let a1 = [1u32, 2, 3, 4];
+        let a: Vec<&[u32]> = vec![&a1];
+        assert!((set_similarity(&a, &a, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn similarity_decays_with_distance_under_drift() {
+        // Simulate drift: each epoch mutates a couple of tokens.
+        let mut h = RolloutHistory::new();
+        let mut base: Vec<u32> = (0..40).map(|i| i % 7).collect();
+        let mut rng = crate::util::rng::Rng::seed_from_u64(5);
+        for e in 0..8 {
+            h.add(&ro(1, e, base.clone()));
+            for _ in 0..6 {
+                let i = rng.below(base.len());
+                base[i] = rng.below(7) as u32;
+            }
+        }
+        let m = h.epoch_similarity_matrix(3);
+        // Diagonal is maximal; similarity to epoch 0 decays.
+        assert!(m[0][0] > 0.99);
+        assert!(m[0][1] > m[0][6], "recency structure expected: {:?}", m[0]);
+    }
+
+    #[test]
+    fn reuse_per_iteration_rises_when_policy_stabilizes() {
+        let mut h = RolloutHistory::new();
+        // Epochs 0/1 unrelated; epochs 1/2 identical.
+        h.add(&ro(1, 0, (0..30).map(|i| i % 5).collect()));
+        h.add(&ro(1, 1, (0..30).map(|i| (i * 3 + 1) % 5).collect()));
+        h.add(&ro(1, 2, (0..30).map(|i| (i * 3 + 1) % 5).collect()));
+        let series = h.reuse_per_iteration(4);
+        assert_eq!(series.len(), 2);
+        assert!(series[1].1 > series[0].1);
+        assert!((series[1].1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_is_symmetric() {
+        let mut h = RolloutHistory::new();
+        for e in 0..4 {
+            h.add(&ro(1, e, (0..20).map(|i| (i + e as u32) % 6).collect()));
+            h.add(&ro(2, e, (0..20).map(|i| (i * 2 + e as u32) % 6).collect()));
+        }
+        let m = h.epoch_similarity_matrix(2);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((m[i][j] - m[j][i]).abs() < 1e-12);
+            }
+        }
+    }
+}

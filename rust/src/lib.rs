@@ -1,0 +1,28 @@
+//! # DAS — Distribution-Aware Speculative Decoding for RL Training
+//!
+//! A from-scratch reproduction of the DAS system (Shao, Srivatsa et al.,
+//! 2025) as a three-layer Rust + JAX + Pallas stack. This crate is Layer 3:
+//! the Rust rollout coordinator — continuous batching, the adaptive
+//! nonparametric drafter built on online suffix structures, the
+//! length-aware speculation policy, lossless draft verification, and a GRPO
+//! training loop driving either a real AOT-compiled policy (via PJRT) or a
+//! calibrated simulator.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! reproduced figures.
+
+pub mod config;
+pub mod cost;
+pub mod model;
+pub mod rollout;
+pub mod runtime;
+pub mod telemetry;
+pub mod history;
+pub mod workload;
+pub mod rl;
+pub mod figures;
+pub mod drafter;
+pub mod spec;
+pub mod suffix;
+pub mod tokens;
+pub mod util;

@@ -1,0 +1,238 @@
+//! `das` — launcher for the DAS reproduction.
+//!
+//! Subcommands:
+//!   figures    regenerate the paper's figures (CSV + printed tables)
+//!   train      run RL training (sim or pjrt backend) with a config
+//!   serve      rollout-only generation over a trace workload
+//!   calibrate  fit the latency model on the real PJRT artifacts (Fig. 8)
+//!   config     print the resolved configuration for a preset/file
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use das::config::{preset, preset_names, DasConfig};
+use das::figures::{emit, known_figures, run as run_figure, FigOpts};
+use das::model::sim::{SimModel, SimModelConfig};
+use das::rl::Trainer;
+use das::runtime::PjrtModel;
+use das::telemetry::Table;
+use das::util::argparse::Command;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let result = match argv.first().map(|s| s.as_str()) {
+        Some("figures") => cmd_figures(&argv[1..]),
+        Some("train") => cmd_train(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("calibrate") => cmd_calibrate(&argv[1..]),
+        Some("config") => cmd_config(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "das — Distribution-Aware Speculative Decoding for RL Training\n\n\
+         usage: das <subcommand> [options]\n\n\
+         subcommands:\n\
+           figures    --fig <N>|--all [--full] [--out results] [--seed N]\n\
+           train      [--config file.json] [--preset name] [--set k=v] [--steps N] [--out results]\n\
+           serve      [--preset name] [--steps N] (rollout-only, trace workload)\n\
+           calibrate  [--reps N] (requires `make artifacts`)\n\
+           config     [--preset name | --config file.json]\n\n\
+         presets: {}",
+        preset_names().join(", ")
+    );
+}
+
+fn load_config(args: &das::util::argparse::Args) -> Result<DasConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => DasConfig::load(Path::new(path))?,
+        None => {
+            let name = args.get_or("preset", "math_rl");
+            preset(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown preset '{name}' (known: {:?})", preset_names())
+            })?
+        }
+    };
+    if let Some(seed) = args.get_u64("seed") {
+        cfg.seed = seed;
+    }
+    if let Some(assignment) = args.get("set") {
+        cfg.set(assignment)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_figures(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das figures", "regenerate the paper's figures")
+        .opt("fig", "figure number to run", None)
+        .flag_opt("all", "run every figure")
+        .flag_opt("full", "paper-scale settings (slower)")
+        .opt("out", "output directory for CSVs", Some("results"))
+        .opt("seed", "random seed", Some("17"));
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    let opts = FigOpts {
+        seed: args.get_u64("seed").unwrap_or(17),
+        full: args.flag("full"),
+        out_dir: PathBuf::from(args.get_or("out", "results")),
+    };
+    let figs: Vec<u32> = if args.flag("all") {
+        known_figures().to_vec()
+    } else {
+        let n = args
+            .get_usize("fig")
+            .ok_or_else(|| anyhow::anyhow!("--fig <N> or --all required\n\n{}", cmd.usage()))?;
+        vec![n as u32]
+    };
+    for f in figs {
+        println!("\n───────────────────────────── figure {f} ─────────────────────────────");
+        match run_figure(f, &opts) {
+            Ok(out) => emit(&out, &opts)?,
+            Err(e) => eprintln!("figure {f} skipped: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das train", "run GRPO training with DAS rollouts")
+        .opt("config", "JSON config file", None)
+        .opt("preset", "named preset", Some("math_rl"))
+        .opt("set", "single key=value override", None)
+        .opt("steps", "training steps (overrides config)", None)
+        .opt("seed", "random seed", None)
+        .opt("out", "CSV output directory", Some("results"));
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    let mut cfg = load_config(&args)?;
+    if let Some(steps) = args.get_usize("steps") {
+        cfg.train.steps = steps;
+    }
+    println!("resolved config: {}", cfg.to_json().to_string());
+    let mut table = Table::new(
+        "train_log",
+        &["step", "epoch", "reward", "loss", "gen_time_s", "accept_rate", "tokens"],
+    );
+    let mut trainer = Trainer::new(cfg.clone());
+    let mut log_step = |t: &mut Table, s: &das::rl::StepStats| {
+        println!(
+            "step {:>3}  epoch {:>2}  reward {:.3}  loss {:+.4}  gen {:.3}s  accept {:.2}  toks {}",
+            s.step,
+            s.epoch,
+            s.reward,
+            s.loss,
+            s.metrics.gen_time,
+            s.metrics.accept_rate(),
+            s.metrics.generated
+        );
+        t.row_f(&[
+            s.step as f64,
+            s.epoch as f64,
+            s.reward,
+            s.loss,
+            s.metrics.gen_time,
+            s.metrics.accept_rate(),
+            s.metrics.generated as f64,
+        ]);
+    };
+    match cfg.model.backend.as_str() {
+        "sim" => {
+            let mut model = SimModel::new(SimModelConfig::from_das(&cfg));
+            for step in 0..cfg.train.steps {
+                let s = trainer.step_sim(&mut model, step as u32);
+                log_step(&mut table, &s);
+            }
+        }
+        "pjrt" => {
+            let mut model = PjrtModel::load(Path::new(&cfg.model.artifacts_dir))?;
+            for step in 0..cfg.train.steps {
+                let s = trainer.step_pjrt(&mut model, step as u32);
+                log_step(&mut table, &s);
+            }
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    }
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let path = table.write_csv(&out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das serve", "rollout-only serving over a trace")
+        .opt("preset", "named preset", Some("trace"))
+        .opt("steps", "generation steps", Some("5"))
+        .opt("seed", "random seed", None);
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    let mut cfg = preset(args.get_or("preset", "trace"))
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    if let Some(seed) = args.get_u64("seed") {
+        cfg.seed = seed;
+    }
+    let steps = args.get_usize("steps").unwrap_or(5);
+    let mut trainer = Trainer::new(cfg.clone());
+    let mut model = SimModel::new(SimModelConfig::from_das(&cfg));
+    let mut total = 0.0;
+    let mut toks = 0u64;
+    for step in 0..steps {
+        let s = trainer.step_sim(&mut model, step as u32);
+        total += s.metrics.gen_time;
+        toks += s.metrics.generated;
+        println!(
+            "step {:>3}  gen {:.3}s  eff-batch start {} end {}  accept {:.2}",
+            step,
+            s.metrics.gen_time,
+            s.metrics.eff_batch.first().copied().unwrap_or(0),
+            s.metrics.eff_batch.last().copied().unwrap_or(0),
+            s.metrics.accept_rate()
+        );
+    }
+    println!(
+        "served {toks} tokens in {total:.3}s model-time ({:.0} tok/s)",
+        toks as f64 / total.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das calibrate", "fit the latency model on PJRT")
+        .opt("reps", "repetitions per length", Some("10"))
+        .opt("artifacts", "artifacts directory", Some("artifacts"));
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    let mut model = PjrtModel::load(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let rep = model.calibrate(args.get_usize("reps").unwrap_or(10))?;
+    println!(
+        "t_fwd = {:.6}s + {:.3}µs/token   R²={:.4}  MRE={:.1}%  ({} samples)",
+        rep.model.c_base,
+        rep.model.c_tok * 1e6,
+        rep.r_squared,
+        rep.mre * 100.0,
+        rep.n_points
+    );
+    Ok(())
+}
+
+fn cmd_config(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das config", "print the resolved configuration")
+        .opt("config", "JSON config file", None)
+        .opt("preset", "named preset", Some("math_rl"))
+        .opt("set", "single key=value override", None)
+        .opt("seed", "random seed", None);
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    let cfg = load_config(&args)?;
+    println!("{}", cfg.to_json().to_string());
+    Ok(())
+}

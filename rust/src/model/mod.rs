@@ -1,0 +1,64 @@
+//! Target-model abstraction.
+//!
+//! The rollout engine speaks to the policy through [`TargetModel`]: a
+//! batched "process context + draft block, return K+1 next-token
+//! distributions" interface — exactly the shape of a speculative-decoding
+//! verify pass. Two backends:
+//!
+//! * [`sim::SimModel`] — a synthetic, drifting policy with a calibrated
+//!   virtual clock. Reproduces the paper's workload *structure* (long-tail
+//!   lengths, cross-epoch similarity, policy sharpening) at paper scale in
+//!   milliseconds of wall time. See DESIGN.md §3 (substitutions).
+//! * [`crate::runtime::PjrtModel`] — the real thing: AOT-compiled JAX/Pallas
+//!   transformer executed through the PJRT C API.
+
+pub mod sim;
+
+use crate::cost::LatencyModel;
+use crate::tokens::{ProblemId, RequestId, TokenId};
+
+/// One element of a batched verify pass.
+#[derive(Debug, Clone)]
+pub struct StepInput<'a> {
+    pub request: RequestId,
+    pub problem: ProblemId,
+    /// Full context: prompt + committed tokens.
+    pub context: &'a [TokenId],
+    /// Number of leading context tokens that are the prompt.
+    pub prompt_len: usize,
+    /// Proposed draft block (may be empty = plain decode of one token).
+    pub draft: &'a [TokenId],
+}
+
+/// Per-element output: `draft.len() + 1` temperature-adjusted probability
+/// distributions over the vocabulary.
+pub type StepOutput = Vec<Vec<f32>>;
+
+pub trait TargetModel {
+    fn vocab_size(&self) -> usize;
+    fn eos(&self) -> TokenId;
+
+    /// Run one batched forward pass. Implementations must charge their
+    /// clock: `c_base + c_tok · Σ(draft_i + 1)` for the simulator, real
+    /// wall time for PJRT.
+    fn forward(&mut self, batch: &[StepInput], temperature: f64) -> Vec<StepOutput>;
+
+    /// Cumulative generation-time clock in seconds (virtual for the
+    /// simulator, wall for PJRT).
+    fn elapsed(&self) -> f64;
+
+    /// Reset the clock (per training step timing).
+    fn reset_clock(&mut self);
+
+    /// The fitted/configured latency model (drives the budget optimizer).
+    fn latency_model(&self) -> LatencyModel;
+
+    /// Total forward passes executed (N_fwd across the run).
+    fn forward_passes(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    // Trait-level behavior is exercised through the sim backend tests and
+    // the rollout engine integration tests.
+}

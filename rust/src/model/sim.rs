@@ -1,0 +1,463 @@
+//! Synthetic drifting-policy model with a calibrated virtual clock.
+//!
+//! The paper's evaluation hardware (6× 8-H100 nodes, 7–8B policies, 16k
+//! contexts) is substituted per DESIGN.md §3 by a simulator that reproduces
+//! the three workload properties DAS exploits, while charging time through
+//! the same `t_fwd = c_base + c_tok·n` model the paper itself fits (Eq. 1):
+//!
+//! * **Insight-1 (long tail):** each problem has a *canonical trajectory*
+//!   whose length is log-normal across problems — a few problems are much
+//!   longer than the median and dominate step makespan.
+//! * **Insight-2 (reuse):** the policy's next-token distribution places
+//!   most of its mass on the canonical trajectory, so rollouts of the same
+//!   problem repeat across epochs.
+//! * **Insight-3 (drift):** each learner update mutates a `drift` fraction
+//!   of every canonical trajectory and increases policy *sharpness* (the
+//!   mass on the canonical continuation), modeling a policy that both
+//!   changes and improves — old rollouts decay in predictive value while
+//!   rewards rise.
+//!
+//! The distribution is an explicit dense categorical per position, so exact
+//! speculative verification applies unchanged and "lossless" is testable.
+
+use super::{StepInput, StepOutput, TargetModel};
+use crate::cost::LatencyModel;
+use crate::tokens::{ProblemId, TokenId};
+use crate::util::rng::{splitmix64, Rng};
+
+/// Per-problem synthetic task state.
+#[derive(Debug, Clone)]
+pub struct SimProblem {
+    /// Canonical trajectory the current policy is converging to. Mutates on
+    /// policy updates (drift) — the answer suffix is kept stable so reward
+    /// improvement is learnable.
+    pub canonical: Vec<TokenId>,
+    /// Tokens at the end of `canonical` that constitute the verifiable
+    /// answer (kept fixed under drift).
+    pub answer_len: usize,
+    /// Problem difficulty in (0,1]: harder problems sharpen more slowly.
+    pub difficulty: f64,
+    /// When set, drift may only mutate positions with `mutable[i] == true`
+    /// and resamples them inside `drift_range` — used by the code workload,
+    /// where filler (no-op) tokens drift lexically while the program's
+    /// semantics (and thus unit-test rewards) stay intact.
+    pub mutable: Option<Vec<bool>>,
+    pub drift_range: (TokenId, TokenId),
+}
+
+#[derive(Debug, Clone)]
+pub struct SimModelConfig {
+    pub vocab_size: usize,
+    pub n_problems: usize,
+    /// Log-normal parameters of canonical-trajectory length.
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    pub max_len: usize,
+    /// Fraction of canonical tokens re-sampled per policy update.
+    pub drift: f64,
+    /// Sharpness schedule: mass on the canonical token is
+    /// `s0 + (s1 − s0) · (1 − exp(−updates / tau / difficulty))`.
+    pub sharpness0: f64,
+    pub sharpness1: f64,
+    pub sharpness_tau: f64,
+    pub cost: LatencyModel,
+    pub seed: u64,
+}
+
+impl Default for SimModelConfig {
+    fn default() -> Self {
+        SimModelConfig {
+            vocab_size: 512,
+            n_problems: 64,
+            len_mu: 6.0,
+            len_sigma: 0.75,
+            max_len: 2048,
+            drift: 0.08,
+            sharpness0: 0.45,
+            sharpness1: 0.99,
+            sharpness_tau: 4.0,
+            cost: LatencyModel::paper_like(),
+            seed: 17,
+        }
+    }
+}
+
+impl SimModelConfig {
+    pub fn from_das(cfg: &crate::config::DasConfig) -> Self {
+        SimModelConfig {
+            vocab_size: cfg.model.vocab_size,
+            n_problems: cfg.workload.n_problems,
+            len_mu: cfg.workload.len_mu,
+            len_sigma: cfg.workload.len_sigma,
+            max_len: cfg.rollout.max_new_tokens,
+            drift: cfg.workload.drift,
+            seed: cfg.seed,
+            ..SimModelConfig::default()
+        }
+    }
+}
+
+pub struct SimModel {
+    cfg: SimModelConfig,
+    problems: Vec<SimProblem>,
+    /// Learner updates applied so far (drives sharpness + drift).
+    pub updates: u64,
+    /// Version counter for the distractor hash (bumped on each drift so
+    /// noise patterns also evolve slowly).
+    version: u64,
+    clock: f64,
+    n_fwd: u64,
+    rng: Rng,
+    /// Number of distractor continuations sharing the non-canonical mass.
+    n_distractors: usize,
+    /// Reserved: EOS = vocab-1 (never appears inside canonical bodies).
+    eos: TokenId,
+}
+
+impl SimModel {
+    pub fn new(cfg: SimModelConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x51D0_CAFE);
+        let eos = (cfg.vocab_size - 1) as TokenId;
+        let usable_vocab = (cfg.vocab_size - 1) as u32;
+        let mut problems = Vec::with_capacity(cfg.n_problems);
+        for _ in 0..cfg.n_problems {
+            let len = (rng.lognormal(cfg.len_mu, cfg.len_sigma) as usize)
+                .clamp(8, cfg.max_len.saturating_sub(2).max(8));
+            let canonical: Vec<TokenId> =
+                (0..len).map(|_| rng.below(usable_vocab as usize) as u32).collect();
+            let answer_len = 4.min(len / 2).max(1);
+            let difficulty = 0.3 + 0.7 * rng.next_f64();
+            problems.push(SimProblem {
+                canonical,
+                answer_len,
+                difficulty,
+                mutable: None,
+                drift_range: (0, usable_vocab),
+            });
+        }
+        SimModel {
+            cfg,
+            problems,
+            updates: 0,
+            version: 0,
+            clock: 0.0,
+            n_fwd: 0,
+            rng,
+            n_distractors: 6,
+            eos,
+        }
+    }
+
+    pub fn problems(&self) -> &[SimProblem] {
+        &self.problems
+    }
+
+    pub fn config(&self) -> &SimModelConfig {
+        &self.cfg
+    }
+
+    /// The answer tokens currently considered correct for a problem.
+    pub fn answer(&self, problem: ProblemId) -> &[TokenId] {
+        let p = &self.problems[problem as usize % self.problems.len()];
+        &p.canonical[p.canonical.len() - p.answer_len..]
+    }
+
+    /// Current sharpness (mass on the canonical continuation) for a problem.
+    pub fn sharpness(&self, problem: ProblemId) -> f64 {
+        let p = &self.problems[problem as usize % self.problems.len()];
+        let t = self.updates as f64 / (self.cfg.sharpness_tau * p.difficulty.max(0.05));
+        self.cfg.sharpness0 + (self.cfg.sharpness1 - self.cfg.sharpness0) * (1.0 - (-t).exp())
+    }
+
+    /// Replace a problem's canonical trajectory (used by workloads whose
+    /// canonical is semantically constrained, e.g. correct VM programs).
+    /// `mutable` marks drift-eligible positions; drifted tokens are drawn
+    /// from `drift_range`.
+    pub fn set_canonical(
+        &mut self,
+        problem: ProblemId,
+        canonical: Vec<TokenId>,
+        answer_len: usize,
+        mutable: Option<Vec<bool>>,
+        drift_range: (TokenId, TokenId),
+    ) {
+        let n = self.problems.len();
+        let p = &mut self.problems[problem as usize % n];
+        if let Some(m) = &mutable {
+            assert_eq!(m.len(), canonical.len(), "mask/canonical length mismatch");
+        }
+        p.canonical = canonical;
+        p.answer_len = answer_len.max(1);
+        p.mutable = mutable;
+        p.drift_range = drift_range;
+    }
+
+    /// Apply one learner update: sharpen + drift canonical trajectories.
+    /// `gain` scales drift (1.0 = configured value); the trainer ties it to
+    /// its optimizer step scale, realizing §4.1.2's "window update rate tied
+    /// to the optimizer's step scale".
+    pub fn policy_update(&mut self, gain: f64) {
+        self.updates += 1;
+        self.version += 1;
+        let drift = (self.cfg.drift * gain).clamp(0.0, 1.0);
+        for p in &mut self.problems {
+            let (lo, hi) = p.drift_range;
+            let span = (hi.saturating_sub(lo)).max(1) as usize;
+            let body = p.canonical.len() - p.answer_len;
+            for i in 0..body {
+                let eligible = p.mutable.as_ref().map(|m| m[i]).unwrap_or(true);
+                if eligible && self.rng.chance(drift) {
+                    p.canonical[i] = lo + self.rng.below(span) as u32;
+                }
+            }
+        }
+    }
+
+    /// Deterministic distractor token for (problem, position, slot).
+    fn distractor(&self, problem: usize, pos: usize, slot: usize) -> TokenId {
+        let mut h = (problem as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((pos as u64) << 20)
+            .wrapping_add(slot as u64)
+            .wrapping_add(self.version / 4); // distractors shift slowly
+        (splitmix64(&mut h) % (self.cfg.vocab_size as u64 - 1)) as TokenId
+    }
+
+    /// Dense next-token distribution for a problem at generated-position
+    /// `pos` (0-based over the generation, prompts carry no extra state).
+    ///
+    /// NOTE on temperature: the simulator defines the *sampling*
+    /// distribution directly; `temperature` rescales it through a softmax of
+    /// its log (T=1 identity), keeping the greedy argmax canonical.
+    fn next_dist(&self, problem: ProblemId, pos: usize, temperature: f64) -> Vec<f32> {
+        let pi = problem as usize % self.problems.len();
+        let p = &self.problems[pi];
+        let v = self.cfg.vocab_size;
+        let mut dist = vec![0f32; v];
+        if pos >= p.canonical.len() {
+            // Past the canonical end: overwhelmingly EOS.
+            dist[self.eos as usize] = 0.98;
+            let spread = 0.02 / (v - 1) as f32;
+            for (i, d) in dist.iter_mut().enumerate() {
+                if i != self.eos as usize {
+                    *d = spread;
+                }
+            }
+            return dist;
+        }
+        let s = self.sharpness(problem) as f32;
+        // EOS hazard: (i) length-relative, so long trajectories aren't
+        // disproportionately truncated; (ii) shrinking as the policy
+        // sharpens — an under-trained policy stops rambling early, a trained
+        // one completes its derivation; (iii) ramping near the canonical
+        // end. This is what makes sampled lengths disperse around the
+        // canonical length (Fig. 9) while keeping rewards learnable.
+        let len = p.canonical.len() as f32;
+        let frac = pos as f32 / len;
+        let base_hazard = (1.4 * (1.0 - s) / len).clamp(0.0003, 0.05);
+        let eos_p = if frac > 0.85 {
+            base_hazard + 0.03 + 0.25 * (frac - 0.85) / 0.15
+        } else {
+            base_hazard
+        };
+        let canonical_tok = p.canonical[pos] as usize;
+        let noise_mass = (1.0 - s) * (1.0 - eos_p);
+        let canon_mass = s * (1.0 - eos_p);
+        dist[self.eos as usize] += eos_p;
+        dist[canonical_tok] += canon_mass;
+        // Distractors: plausible alternative continuations (what a policy
+        // with entropy actually does — it doesn't spread uniformly).
+        let per = noise_mass * 0.85 / self.n_distractors as f32;
+        for slot in 0..self.n_distractors {
+            let tok = self.distractor(pi, pos, slot) as usize;
+            dist[tok] += per;
+        }
+        // Thin uniform floor so the support is full (residual sampling
+        // always has somewhere to go).
+        let floor = noise_mass * 0.15 / v as f32;
+        for d in dist.iter_mut() {
+            *d += floor;
+        }
+        if (temperature - 1.0).abs() > 1e-9 {
+            let logits: Vec<f32> = dist.iter().map(|&x| (x.max(1e-20)).ln()).collect();
+            return crate::spec::verify::softmax_with_temperature(&logits, temperature);
+        }
+        // Normalize (mass bookkeeping above is approximate).
+        let sum: f32 = dist.iter().sum();
+        for d in dist.iter_mut() {
+            *d /= sum;
+        }
+        dist
+    }
+}
+
+impl TargetModel for SimModel {
+    fn vocab_size(&self) -> usize {
+        self.cfg.vocab_size
+    }
+
+    fn eos(&self) -> TokenId {
+        self.eos
+    }
+
+    fn forward(&mut self, batch: &[StepInput], temperature: f64) -> Vec<StepOutput> {
+        let mut outs = Vec::with_capacity(batch.len());
+        let mut toks_processed = 0usize;
+        for el in batch {
+            let gen_len = el.context.len() - el.prompt_len;
+            let k = el.draft.len();
+            toks_processed += k + 1;
+            let mut dists = Vec::with_capacity(k + 1);
+            for t in 0..=k {
+                dists.push(self.next_dist(el.problem, gen_len + t, temperature));
+            }
+            outs.push(dists);
+        }
+        self.n_fwd += 1;
+        self.clock += self.cfg.cost.t_fwd(toks_processed);
+        outs
+    }
+
+    fn elapsed(&self) -> f64 {
+        self.clock
+    }
+
+    fn reset_clock(&mut self) {
+        self.clock = 0.0;
+    }
+
+    fn latency_model(&self) -> LatencyModel {
+        self.cfg.cost
+    }
+
+    fn forward_passes(&self) -> u64 {
+        self.n_fwd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SimModel {
+        SimModel::new(SimModelConfig {
+            vocab_size: 64,
+            n_problems: 8,
+            len_mu: 3.5,
+            len_sigma: 0.5,
+            max_len: 256,
+            ..SimModelConfig::default()
+        })
+    }
+
+    #[test]
+    fn distributions_normalized() {
+        let m = model();
+        for pos in [0usize, 5, 50, 10_000] {
+            let d = m.next_dist(3, pos, 1.0);
+            let s: f32 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum={s} at pos={pos}");
+            assert!(d.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn past_canonical_end_is_eos() {
+        let m = model();
+        let d = m.next_dist(0, 100_000, 1.0);
+        assert!(d[m.eos() as usize] > 0.9);
+    }
+
+    #[test]
+    fn sharpness_increases_with_updates() {
+        let mut m = model();
+        let s0 = m.sharpness(1);
+        for _ in 0..50 {
+            m.policy_update(1.0);
+        }
+        let s1 = m.sharpness(1);
+        assert!(s1 > s0 + 0.2, "s0={s0} s1={s1}");
+        assert!(s1 <= m.cfg.sharpness1 + 1e-9);
+    }
+
+    #[test]
+    fn drift_mutates_body_not_answer() {
+        let mut m = model();
+        let before = m.problems()[2].canonical.clone();
+        let ans_before = m.answer(2).to_vec();
+        for _ in 0..20 {
+            m.policy_update(1.0);
+        }
+        let after = &m.problems()[2].canonical;
+        let ans_after = m.answer(2);
+        assert_eq!(ans_before, ans_after, "answer must be drift-stable");
+        let changed = before
+            .iter()
+            .zip(after.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(changed > 0, "drift should mutate the body");
+    }
+
+    #[test]
+    fn forward_charges_linear_cost() {
+        let mut m = model();
+        let ctx = [1u32, 2, 3];
+        let draft = [4u32, 5];
+        let inp = StepInput {
+            request: 1,
+            problem: 0,
+            context: &ctx,
+            prompt_len: 3,
+            draft: &draft,
+        };
+        let before = m.elapsed();
+        let outs = m.forward(&[inp], 1.0);
+        let dt = m.elapsed() - before;
+        let expect = m.latency_model().t_fwd(3); // draft(2) + 1
+        assert!((dt - expect).abs() < 1e-12);
+        assert_eq!(outs[0].len(), 3);
+        assert_eq!(m.forward_passes(), 1);
+    }
+
+    #[test]
+    fn lengths_are_long_tailed() {
+        let m = SimModel::new(SimModelConfig {
+            n_problems: 512,
+            ..SimModelConfig::default()
+        });
+        let lens: Vec<f64> = m.problems().iter().map(|p| p.canonical.len() as f64).collect();
+        let mean = crate::util::stats::mean(&lens);
+        let p99 = crate::util::stats::percentile(&lens, 99.0);
+        assert!(
+            p99 > 2.5 * mean,
+            "long tail expected: mean={mean:.0} p99={p99:.0}"
+        );
+    }
+
+    #[test]
+    fn greedy_path_is_canonical() {
+        // With sharpness dominant the argmax at each position is the
+        // canonical token — the policy "wants" to emit its trajectory.
+        let mut m = model();
+        for _ in 0..100 {
+            m.policy_update(1.0);
+        }
+        let p = m.problems()[1].clone();
+        for pos in 0..p.canonical.len().min(20) {
+            let d = m.next_dist(1, pos, 1.0);
+            let argmax = crate::spec::verify::greedy_token(&d);
+            assert_eq!(argmax, p.canonical[pos], "pos={pos}");
+        }
+    }
+
+    #[test]
+    fn temperature_flattens() {
+        let m = model();
+        let d1 = m.next_dist(0, 0, 1.0);
+        let d2 = m.next_dist(0, 0, 4.0);
+        let max1 = d1.iter().cloned().fold(0f32, f32::max);
+        let max2 = d2.iter().cloned().fold(0f32, f32::max);
+        assert!(max2 < max1);
+    }
+}

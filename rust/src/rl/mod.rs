@@ -1,0 +1,9 @@
+//! RL post-training layer: GRPO trainer, verifiable rewards, and the
+//! code-execution VM substrate.
+
+pub mod reward;
+pub mod trainer;
+pub mod vm;
+
+pub use reward::{group_advantages, score};
+pub use trainer::{StepStats, Trainer};

@@ -1,0 +1,121 @@
+//! Verifiable rewards (the "preparation" phase of RL post-training).
+//!
+//! Rewards here are verifiable outcome signals, matching the paper's two
+//! workloads: answer-match for math (One-Shot-RLVR style) and unit-test
+//! pass fraction for code (DeepCoder style, executed on the stack VM).
+//! DAS never touches this logic — speculation is decode-side only.
+
+use crate::tokens::{Rollout, TokenId};
+use crate::workload::{Problem, TaskSpec};
+
+use super::vm;
+
+/// Score one rollout against its problem's task.
+/// `eos` is stripped before checking.
+pub fn score(problem: &Problem, rollout: &Rollout, eos: TokenId) -> f64 {
+    let mut toks: &[TokenId] = &rollout.tokens;
+    if toks.last() == Some(&eos) {
+        toks = &toks[..toks.len() - 1];
+    }
+    match &problem.task {
+        TaskSpec::MatchAnswer { answer } => {
+            if answer.is_empty() || toks.len() < answer.len() {
+                0.0
+            } else if &toks[toks.len() - answer.len()..] == answer.as_slice() {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        TaskSpec::SumMod { modulus } => {
+            let want = problem.prompt.iter().sum::<u32>() % modulus;
+            if toks.first() == Some(&want) {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        TaskSpec::UnitTests { tests, fuel } => vm::pass_fraction(toks, tests, *fuel),
+        TaskSpec::None => 0.0,
+    }
+}
+
+/// GRPO group normalization: advantage_i = (r_i − mean) / (std + ε), per
+/// problem group.
+pub fn group_advantages(rewards: &[f64]) -> Vec<f64> {
+    if rewards.is_empty() {
+        return Vec::new();
+    }
+    let mean = crate::util::stats::mean(rewards);
+    let std = crate::util::stats::stddev(rewards);
+    rewards.iter().map(|r| (r - mean) / (std + 1e-6)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokens::Rollout;
+
+    fn rollout(tokens: Vec<TokenId>) -> Rollout {
+        Rollout {
+            problem: 0,
+            epoch: 0,
+            step: 0,
+            tokens,
+            reward: 0.0,
+        }
+    }
+
+    fn problem(task: TaskSpec) -> Problem {
+        Problem {
+            id: 0,
+            prompt: vec![3, 4, 5],
+            task,
+            canonical: None,
+            mutable: None,
+        }
+    }
+
+    #[test]
+    fn match_answer_checks_suffix() {
+        let p = problem(TaskSpec::MatchAnswer { answer: vec![7, 8] });
+        assert_eq!(score(&p, &rollout(vec![1, 2, 7, 8, 63]), 63), 1.0);
+        assert_eq!(score(&p, &rollout(vec![1, 2, 7, 8]), 63), 1.0);
+        assert_eq!(score(&p, &rollout(vec![7, 8, 9]), 63), 0.0);
+        assert_eq!(score(&p, &rollout(vec![8]), 63), 0.0);
+    }
+
+    #[test]
+    fn sum_mod_checks_first_token() {
+        let p = problem(TaskSpec::SumMod { modulus: 10 });
+        // 3+4+5 = 12 % 10 = 2.
+        assert_eq!(score(&p, &rollout(vec![2, 63]), 63), 1.0);
+        assert_eq!(score(&p, &rollout(vec![3]), 63), 0.0);
+        assert_eq!(score(&p, &rollout(vec![63]), 63), 0.0);
+    }
+
+    #[test]
+    fn unit_tests_pay_fraction() {
+        use super::vm::{TestCase, OP_ADD, OP_END, OP_LOAD_A, OP_LOAD_B, OP_OUT};
+        let p = problem(TaskSpec::UnitTests {
+            tests: vec![
+                TestCase { a: 1, b: 2, expected: vec![3] },
+                TestCase { a: 2, b: 2, expected: vec![5] }, // wrong
+            ],
+            fuel: 100,
+        });
+        let prog = vec![OP_LOAD_A, OP_LOAD_B, OP_ADD, OP_OUT, OP_END, 63];
+        assert!((score(&p, &rollout(prog), 63) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_advantages_zero_mean() {
+        let adv = group_advantages(&[0.0, 1.0, 1.0, 0.0]);
+        let sum: f64 = adv.iter().sum();
+        assert!(sum.abs() < 1e-9);
+        assert!(adv[1] > 0.0 && adv[0] < 0.0);
+        // Degenerate group: all equal -> all zeros.
+        let flat = group_advantages(&[0.5, 0.5]);
+        assert!(flat.iter().all(|a| a.abs() < 1e-3));
+    }
+}

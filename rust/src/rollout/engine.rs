@@ -1,0 +1,528 @@
+//! The speculative rollout engine — DAS's decode loop (Fig. 3).
+//!
+//! Each verification round:
+//!   1. the budget policy assigns every active request a draft budget
+//!      (length-aware classes §4.2.3, the Eq. 9 optimizer, uniform, or
+//!      unlimited — the Fig. 12 ablation axis);
+//!   2. the drafter proposes a block per request (suffix-window retrieval);
+//!   3. ONE batched target forward verifies all blocks (the simulator and
+//!      the PJRT backend both process `Σ(draft+1)` tokens and charge
+//!      `c_base + c_tok·n`);
+//!   4. exact speculative sampling commits an accepted prefix + one
+//!      correction/bonus token per request — losslessness is enforced here;
+//!   5. finished requests retire, the batcher refills slots, the drafter
+//!      and length statistics absorb the new tokens.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::batcher::Batcher;
+use super::metrics::StepMetrics;
+use super::request::RolloutRequest;
+use crate::config::DasConfig;
+use crate::drafter::Drafter;
+use crate::model::{StepInput, TargetModel};
+use crate::spec::budget::{solve as solve_budget, BudgetRequest};
+use crate::spec::{verify_greedy, verify_sampling, AcceptanceEstimator, LengthClass, LengthPolicy};
+use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
+use crate::util::rng::Rng;
+
+/// Draft budget policy (config `spec.budget_policy` + drafter "none").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetPolicy {
+    LengthAware,
+    Optimal,
+    Uniform,
+    Unlimited,
+}
+
+impl BudgetPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "length_aware" => Some(BudgetPolicy::LengthAware),
+            "optimal" => Some(BudgetPolicy::Optimal),
+            "uniform" => Some(BudgetPolicy::Uniform),
+            "unlimited" => Some(BudgetPolicy::Unlimited),
+            _ => None,
+        }
+    }
+}
+
+/// One problem's generation jobs for a step.
+#[derive(Debug, Clone)]
+pub struct GenJob {
+    pub problem: ProblemId,
+    pub prompt: Vec<TokenId>,
+    pub samples: usize,
+}
+
+/// Output of one generation step.
+#[derive(Debug)]
+pub struct StepReport {
+    pub rollouts: Vec<Rollout>,
+    pub metrics: StepMetrics,
+}
+
+pub struct RolloutEngine {
+    pub drafter: Box<dyn Drafter>,
+    pub length_policy: LengthPolicy,
+    /// Per-problem acceptance estimators feeding the Eq. 9 optimizer.
+    pub acceptance: HashMap<ProblemId, AcceptanceEstimator>,
+    budget_policy: BudgetPolicy,
+    budget_short: usize,
+    budget_medium: usize,
+    budget_long: usize,
+    budget_cap: usize,
+    max_batch: usize,
+    max_new_tokens: usize,
+    temperature: f64,
+    next_request: RequestId,
+    epoch: Epoch,
+    seed: u64,
+}
+
+impl RolloutEngine {
+    pub fn new(cfg: &DasConfig, drafter: Box<dyn Drafter>) -> Self {
+        let budget_policy =
+            BudgetPolicy::parse(&cfg.spec.budget_policy).expect("validated budget policy");
+        // Length-class thresholds relative to the configured cap; refined
+        // online as real lengths arrive.
+        let t_long = (cfg.rollout.max_new_tokens / 4).max(2);
+        let t_short = (cfg.rollout.max_new_tokens / 16).max(1);
+        RolloutEngine {
+            drafter,
+            length_policy: LengthPolicy::new(t_short, t_long),
+            acceptance: HashMap::new(),
+            budget_policy,
+            budget_short: cfg.spec.budget_short,
+            budget_medium: cfg.spec.budget_medium,
+            budget_long: cfg.spec.budget_long,
+            budget_cap: cfg.spec.budget_cap.max(1),
+            max_batch: cfg.rollout.max_batch,
+            max_new_tokens: cfg.rollout.max_new_tokens,
+            temperature: cfg.rollout.temperature,
+            next_request: 0,
+            epoch: 0,
+            seed: cfg.seed,
+        }
+    }
+
+    pub fn set_temperature(&mut self, t: f64) {
+        self.temperature = t;
+    }
+
+    /// Advance the epoch (window maintenance in the drafter).
+    pub fn roll_epoch(&mut self, epoch: Epoch) {
+        self.epoch = epoch;
+        self.drafter.roll_epoch(epoch);
+    }
+
+    pub fn epoch(&self) -> Epoch {
+        self.epoch
+    }
+
+    fn class_budget(&self, class: LengthClass) -> usize {
+        match class {
+            LengthClass::Short => self.budget_short,
+            LengthClass::Medium => self.budget_medium,
+            LengthClass::Long => self.budget_long,
+        }
+    }
+
+    /// Decide per-request draft budgets for this round.
+    fn budgets(&self, active: &[RolloutRequest], model: &dyn Fn() -> crate::cost::LatencyModel) -> Vec<usize> {
+        match self.budget_policy {
+            BudgetPolicy::Uniform => vec![self.budget_medium.max(1); active.len()],
+            BudgetPolicy::Unlimited => vec![self.budget_cap; active.len()],
+            BudgetPolicy::LengthAware => active
+                .iter()
+                .map(|r| {
+                    let class =
+                        self.length_policy
+                            .runtime_class(r.problem, r.gen_len(), r.init_class);
+                    self.class_budget(class).min(self.budget_cap)
+                })
+                .collect(),
+            BudgetPolicy::Optimal => {
+                // Eq. 9: solve for N_fwd over the active batch, then spread
+                // each request's total budget p* across its expected rounds.
+                let reqs: Vec<BudgetRequest> = active
+                    .iter()
+                    .map(|r| {
+                        let class = self.length_policy.runtime_class(
+                            r.problem,
+                            r.gen_len(),
+                            r.init_class,
+                        );
+                        let l = self
+                            .length_policy
+                            .expected_remaining(r.problem, r.gen_len(), class);
+                        let accept = self
+                            .acceptance
+                            .get(&r.problem)
+                            .map(|e| e.params())
+                            .unwrap_or_default();
+                        BudgetRequest { length: l, accept }
+                    })
+                    .collect();
+                let sol = solve_budget(&reqs, &model());
+                sol.budgets
+                    .iter()
+                    .map(|&p| {
+                        if !p.is_finite() || sol.n_fwd <= 0.0 {
+                            self.budget_medium
+                        } else {
+                            ((p / sol.n_fwd).ceil() as usize).min(self.budget_cap)
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Generate rollouts for a batch of jobs. `step` tags provenance; the
+    /// engine's RNG forks deterministically from `(seed, step, request id)`.
+    pub fn generate_step<M: TargetModel>(
+        &mut self,
+        model: &mut M,
+        jobs: &[GenJob],
+        step: u32,
+    ) -> StepReport {
+        let wall_start = Instant::now();
+        model.reset_clock();
+        let fwd0 = model.forward_passes();
+        let mut metrics = StepMetrics::default();
+        let mut batcher = Batcher::new(self.max_batch);
+        let mut step_rng = Rng::seed_from_u64(
+            self.seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        for job in jobs {
+            for s in 0..job.samples {
+                let id = self.next_request;
+                self.next_request += 1;
+                let rng = step_rng.fork(id ^ ((s as u64) << 40));
+                let init_class = self.length_policy.init_class(job.problem);
+                batcher.submit(RolloutRequest::new(
+                    id,
+                    job.problem,
+                    job.prompt.clone(),
+                    rng,
+                    init_class,
+                ));
+            }
+        }
+        let eos = model.eos();
+        let latency = model.latency_model();
+        let mut rollouts = Vec::new();
+
+        loop {
+            let done = batcher.recycle();
+            for req in &done {
+                self.finish_request(req, step, &mut rollouts, &mut metrics);
+            }
+            batcher.archive(done);
+            if batcher.effective_batch() == 0 {
+                break;
+            }
+            metrics.eff_batch.push(batcher.effective_batch() as u32);
+
+            // 1. Budgets.
+            let budgets = {
+                let active = batcher.active();
+                self.budgets(active, &|| latency)
+            };
+
+            // 2. Drafts (speculation overhead measured in wall time). The
+            // decode context is a zero-copy slice of each request's token
+            // buffer — no per-round materialization.
+            let draft_start = Instant::now();
+            let mut drafts: Vec<Vec<TokenId>> = Vec::with_capacity(budgets.len());
+            {
+                let active = batcher.active();
+                for (req, &budget) in active.iter().zip(&budgets) {
+                    // Never draft past the generation cap (leave room for
+                    // the guaranteed extra token).
+                    let room = self.max_new_tokens.saturating_sub(req.gen_len() + 1);
+                    let b = budget.min(room);
+                    let d = if b == 0 {
+                        Vec::new()
+                    } else {
+                        self.drafter
+                            .draft(req.id, req.problem, req.context(), b)
+                            .tokens
+                    };
+                    drafts.push(d);
+                }
+            }
+            metrics.draft_time += draft_start.elapsed().as_secs_f64();
+
+            // 3. One batched verify forward.
+            let inputs: Vec<StepInput> = {
+                let active = batcher.active();
+                active
+                    .iter()
+                    .enumerate()
+                    .map(|(i, req)| StepInput {
+                        request: req.id,
+                        problem: req.problem,
+                        context: req.context(),
+                        prompt_len: req.prompt_len(),
+                        draft: &drafts[i],
+                    })
+                    .collect()
+            };
+            let outputs = model.forward(&inputs, self.temperature);
+            drop(inputs);
+            metrics.rounds += 1;
+
+            // 4. Verify + commit.
+            let greedy = self.temperature <= 0.0;
+            let active = batcher.active_mut();
+            for (i, req) in active.iter_mut().enumerate() {
+                let draft = &drafts[i];
+                let dists = &outputs[i];
+                metrics.tokens_processed += (draft.len() + 1) as u64;
+                let outcome = if greedy {
+                    verify_greedy(draft, dists)
+                } else {
+                    verify_sampling(draft, dists, &mut req.rng)
+                };
+                metrics.proposed += draft.len() as u64;
+                metrics.accepted += outcome.accepted as u64;
+                req.rounds += 1;
+                req.proposed += draft.len() as u64;
+                req.accepted += outcome.accepted as u64;
+                if !draft.is_empty() {
+                    self.acceptance
+                        .entry(req.problem)
+                        .or_default()
+                        .observe(draft.len(), outcome.accepted);
+                }
+                let committed = req.commit(&outcome.tokens, eos, self.max_new_tokens);
+                metrics.generated += committed as u64;
+                let gl = req.gen_len();
+                let new_tokens: Vec<TokenId> = req.generated()[gl - committed..].to_vec();
+                self.drafter.observe_partial(req.id, req.problem, &new_tokens);
+            }
+        }
+
+        metrics.gen_time = model.elapsed() + latency.c_step;
+        metrics.wall_time = wall_start.elapsed().as_secs_f64();
+        // All passes this engine saw belong to this step's rounds.
+        debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
+        StepReport { rollouts, metrics }
+    }
+
+    fn finish_request(
+        &mut self,
+        req: &RolloutRequest,
+        step: u32,
+        rollouts: &mut Vec<Rollout>,
+        metrics: &mut StepMetrics,
+    ) {
+        metrics.completed += 1;
+        self.drafter.end_request(req.id);
+        self.length_policy.observe(req.problem, req.gen_len());
+        let rollout = Rollout {
+            problem: req.problem,
+            epoch: self.epoch,
+            step,
+            tokens: req.generated().to_vec(),
+            reward: 0.0,
+        };
+        // Online drafter refresh: newly finished trajectories immediately
+        // become draft material for still-running stragglers — exactly the
+        // idle-slack exploitation the paper describes.
+        self.drafter.observe_rollout(&rollout);
+        rollouts.push(rollout);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::drafter::{NoneDrafter, SuffixDrafter};
+    use crate::model::sim::{SimModel, SimModelConfig};
+
+    fn cfg(temp: f64, drafter: &str, policy: &str) -> DasConfig {
+        let mut c = DasConfig::default();
+        c.model.vocab_size = 64;
+        c.workload.n_problems = 6;
+        c.workload.len_mu = 3.2;
+        c.workload.len_sigma = 0.4;
+        c.rollout.max_new_tokens = 128;
+        c.rollout.max_batch = 4;
+        c.rollout.temperature = temp;
+        c.spec.drafter = drafter.into();
+        c.spec.budget_policy = policy.into();
+        c
+    }
+
+    fn sim(c: &DasConfig) -> SimModel {
+        SimModel::new(SimModelConfig::from_das(c))
+    }
+
+    fn jobs(n: usize, samples: usize) -> Vec<GenJob> {
+        (0..n)
+            .map(|p| GenJob {
+                problem: p as u32,
+                prompt: vec![p as u32 + 1, 7, 9],
+                samples,
+            })
+            .collect()
+    }
+
+    fn engine(c: &DasConfig) -> RolloutEngine {
+        RolloutEngine::new(c, crate::drafter::from_config(c))
+    }
+
+    #[test]
+    fn baseline_generates_all_rollouts() {
+        let c = cfg(0.6, "none", "length_aware");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let rep = e.generate_step(&mut m, &jobs(6, 2), 0);
+        assert_eq!(rep.rollouts.len(), 12);
+        assert_eq!(rep.metrics.completed, 12);
+        assert!(rep.metrics.rounds > 0);
+        assert_eq!(rep.metrics.proposed, 0, "none drafter never proposes");
+        // Every rollout ends with EOS or hit the cap.
+        for r in &rep.rollouts {
+            assert!(
+                *r.tokens.last().unwrap() == m.eos() || r.tokens.len() == 128,
+                "rollout must terminate properly"
+            );
+        }
+    }
+
+    #[test]
+    fn effective_batch_collapses() {
+        // Fig. 1 mechanism: the eff-batch trace is non-increasing once the
+        // pending queue drains, ending at 1.
+        let c = cfg(0.6, "none", "length_aware");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let rep = e.generate_step(&mut m, &jobs(6, 2), 0);
+        let trace = &rep.metrics.eff_batch;
+        assert_eq!(trace[0] as usize, 4); // starts at max_batch
+        assert_eq!(*trace.last().unwrap(), 1); // single straggler at the end
+    }
+
+    #[test]
+    fn greedy_spec_equals_greedy_baseline_bitwise() {
+        // THE losslessness anchor: at T=0, DAS output == baseline output
+        // exactly, token for token, for every rollout.
+        let c_base = cfg(0.0, "none", "length_aware");
+        let c_das = cfg(0.0, "das", "length_aware");
+        let mut m1 = sim(&c_base);
+        let mut m2 = sim(&c_das);
+        let mut e1 = engine(&c_base);
+        let mut e2 = engine(&c_das);
+        for step in 0..3 {
+            let r1 = e1.generate_step(&mut m1, &jobs(6, 2), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(6, 2), step);
+            let key = |r: &Rollout| (r.problem, r.tokens.clone());
+            let mut a: Vec<_> = r1.rollouts.iter().map(key).collect();
+            let mut b: Vec<_> = r2.rollouts.iter().map(key).collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "greedy outputs must be bit-identical at step {step}");
+            // And DAS must actually be speculating by step 1+.
+            if step > 0 {
+                assert!(r2.metrics.accepted > 0, "DAS accepted nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn das_reduces_gen_time_after_warmup() {
+        let c_base = cfg(0.6, "none", "length_aware");
+        let c_das = cfg(0.6, "das", "length_aware");
+        let mut m1 = sim(&c_base);
+        let mut m2 = sim(&c_das);
+        let mut e1 = engine(&c_base);
+        let mut e2 = engine(&c_das);
+        let mut base_t = 0.0;
+        let mut das_t = 0.0;
+        for step in 0..4 {
+            let r1 = e1.generate_step(&mut m1, &jobs(6, 4), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(6, 4), step);
+            if step > 0 {
+                base_t += r1.metrics.gen_time;
+                das_t += r2.metrics.gen_time;
+            }
+            // Simulate a policy update (both models drift identically).
+            m1.policy_update(1.0);
+            m2.policy_update(1.0);
+            e1.roll_epoch(step + 1);
+            e2.roll_epoch(step + 1);
+        }
+        assert!(
+            das_t < base_t,
+            "DAS should cut generation time: das={das_t:.3}s base={base_t:.3}s"
+        );
+    }
+
+    #[test]
+    fn rollout_lengths_respect_cap() {
+        let c = cfg(0.9, "das", "unlimited");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let rep = e.generate_step(&mut m, &jobs(6, 2), 0);
+        for r in &rep.rollouts {
+            assert!(r.tokens.len() <= 128);
+        }
+    }
+
+    #[test]
+    fn optimal_policy_runs() {
+        let c = cfg(0.6, "das", "optimal");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        for step in 0..2 {
+            let rep = e.generate_step(&mut m, &jobs(6, 2), step);
+            assert_eq!(rep.metrics.completed, 12);
+        }
+    }
+
+    #[test]
+    fn metrics_accounting_consistent() {
+        let c = cfg(0.6, "das", "uniform");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let rep = e.generate_step(&mut m, &jobs(4, 2), 0);
+        let mm = &rep.metrics;
+        assert!(mm.accepted <= mm.proposed);
+        // Generated tokens ≥ rounds is NOT guaranteed per-request, but
+        // tokens_processed ≥ generated ≥ completed always holds.
+        assert!(mm.tokens_processed >= mm.generated);
+        assert!(mm.generated >= mm.completed);
+        let total_tokens: u64 = rep.rollouts.iter().map(|r| r.tokens.len() as u64).sum();
+        assert_eq!(total_tokens, mm.generated);
+        assert_eq!(mm.eff_batch.len() as u64, mm.rounds);
+    }
+
+    #[test]
+    fn suffix_drafter_learns_within_step() {
+        // Even in the FIRST step, early-finishing samples of a problem seed
+        // the tree for later samples of the same problem (online refresh).
+        let c = cfg(0.0, "das", "uniform");
+        let mut m = sim(&c);
+        // Sharpen the policy so greedy paths repeat across samples.
+        for _ in 0..60 {
+            m.policy_update(1.0);
+        }
+        let mut e = engine(&c);
+        let job = vec![GenJob {
+            problem: 0,
+            prompt: vec![1, 7, 9],
+            samples: 6,
+        }];
+        let rep = e.generate_step(&mut m, &job, 0);
+        assert!(
+            rep.metrics.accepted > 0,
+            "same-step reuse should already speculate"
+        );
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-step rollout metrics — the raw series behind Figs. 1, 4, 6, 7, 10–13.
+
+/// Metrics for one training step's generation phase.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    /// Model-clock generation time (virtual seconds for the simulator, wall
+    /// seconds for PJRT) — the paper's "generation time per step".
+    pub gen_time: f64,
+    /// Wall-clock time spent inside the drafter (speculation overhead).
+    pub draft_time: f64,
+    /// Wall-clock of the whole generation phase (engine overhead incl.).
+    pub wall_time: f64,
+    /// Verification rounds executed (= forward passes, N_fwd).
+    pub rounds: u64,
+    /// Total tokens processed by the target model (accepted + speculative
+    /// + bonus) — N_toks in Eq. 2.
+    pub tokens_processed: u64,
+    /// Draft tokens proposed / accepted.
+    pub proposed: u64,
+    pub accepted: u64,
+    /// Tokens committed to rollouts (including EOS).
+    pub generated: u64,
+    /// Completed rollouts.
+    pub completed: u64,
+    /// Effective batch size at the start of every round (Fig. 1 trace).
+    pub eff_batch: Vec<u32>,
+}
+
+impl StepMetrics {
+    /// Fraction of proposed draft tokens accepted.
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Average accepted draft tokens per verification round — the y-axis of
+    /// Figs. 4, 6, 7. (Counts only rounds where speculation ran.)
+    pub fn accepted_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.rounds as f64
+        }
+    }
+
+    /// Committed tokens per forward pass (≥ 1; the speedup mechanism).
+    pub fn tokens_per_pass(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.generated as f64 / self.rounds as f64
+        }
+    }
+
+    /// Speculation latency per generated token in ms (Figs. 6/7 right).
+    pub fn draft_ms_per_token(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.draft_time * 1e3 / self.generated as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &StepMetrics) {
+        self.gen_time += other.gen_time;
+        self.draft_time += other.draft_time;
+        self.wall_time += other.wall_time;
+        self.rounds += other.rounds;
+        self.tokens_processed += other.tokens_processed;
+        self.proposed += other.proposed;
+        self.accepted += other.accepted;
+        self.generated += other.generated;
+        self.completed += other.completed;
+        self.eff_batch.extend_from_slice(&other.eff_batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let m = StepMetrics {
+            proposed: 100,
+            accepted: 60,
+            rounds: 30,
+            generated: 90,
+            draft_time: 0.009,
+            ..Default::default()
+        };
+        assert!((m.accept_rate() - 0.6).abs() < 1e-12);
+        assert!((m.accepted_per_round() - 2.0).abs() < 1e-12);
+        assert!((m.tokens_per_pass() - 3.0).abs() < 1e-12);
+        assert!((m.draft_ms_per_token() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_safe() {
+        let m = StepMetrics::default();
+        assert_eq!(m.accept_rate(), 0.0);
+        assert_eq!(m.accepted_per_round(), 0.0);
+        assert_eq!(m.tokens_per_pass(), 0.0);
+        assert_eq!(m.draft_ms_per_token(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = StepMetrics {
+            rounds: 1,
+            eff_batch: vec![4],
+            ..Default::default()
+        };
+        let b = StepMetrics {
+            rounds: 2,
+            eff_batch: vec![3, 2],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.rounds, 3);
+        assert_eq!(a.eff_batch, vec![4, 3, 2]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Rollout coordination: continuous batching + the speculative decode loop.
+
+pub mod batcher;
+pub mod parallel;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+
+pub use batcher::Batcher;
+pub use parallel::{DataParallelRollout, ParallelStepReport};
+pub use engine::{BudgetPolicy, GenJob, RolloutEngine, StepReport};
+pub use metrics::StepMetrics;
+pub use request::{RequestState, RolloutRequest};

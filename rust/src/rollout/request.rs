@@ -1,0 +1,139 @@
+//! Rollout request state machine.
+
+use crate::spec::LengthClass;
+use crate::tokens::{ProblemId, RequestId, TokenId};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Pending,
+    Active,
+    /// Finished by emitting EOS.
+    FinishedEos,
+    /// Finished by hitting the generation cap.
+    FinishedLength,
+}
+
+#[derive(Debug)]
+pub struct RolloutRequest {
+    pub id: RequestId,
+    pub problem: ProblemId,
+    /// Prompt + committed generation in ONE contiguous buffer, so the
+    /// per-round decode context is a slice (`context()`), not a clone —
+    /// re-materializing the context each verification round made the hot
+    /// loop O(len²) per rollout (see EXPERIMENTS.md §Perf).
+    tokens: Vec<TokenId>,
+    prompt_len: usize,
+    pub state: RequestState,
+    /// Private sampling stream — forked per request so batching order can
+    /// never change any request's randomness.
+    pub rng: Rng,
+    pub init_class: LengthClass,
+    /// Rounds this request participated in (diagnostics).
+    pub rounds: u32,
+    /// Draft tokens proposed / accepted for this request (diagnostics).
+    pub proposed: u64,
+    pub accepted: u64,
+}
+
+impl RolloutRequest {
+    pub fn new(
+        id: RequestId,
+        problem: ProblemId,
+        prompt: Vec<TokenId>,
+        rng: Rng,
+        init_class: LengthClass,
+    ) -> Self {
+        let prompt_len = prompt.len();
+        RolloutRequest {
+            id,
+            problem,
+            tokens: prompt,
+            prompt_len,
+            state: RequestState::Pending,
+            rng,
+            init_class,
+            rounds: 0,
+            proposed: 0,
+            accepted: 0,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(
+            self.state,
+            RequestState::FinishedEos | RequestState::FinishedLength
+        )
+    }
+
+    /// Full decode context (prompt + committed generation) — zero-copy.
+    pub fn context(&self) -> &[TokenId] {
+        &self.tokens
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    pub fn generated(&self) -> &[TokenId] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    pub fn gen_len(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    /// Commit verified tokens; returns how many were actually committed
+    /// (truncation at EOS or at the generation cap ends the request).
+    pub fn commit(&mut self, tokens: &[TokenId], eos: TokenId, max_new_tokens: usize) -> usize {
+        let mut committed = 0;
+        for &t in tokens {
+            self.tokens.push(t);
+            committed += 1;
+            if t == eos {
+                self.state = RequestState::FinishedEos;
+                return committed;
+            }
+            if self.gen_len() >= max_new_tokens {
+                self.state = RequestState::FinishedLength;
+                return committed;
+            }
+        }
+        committed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> RolloutRequest {
+        RolloutRequest::new(1, 2, vec![9, 8], Rng::seed_from_u64(1), LengthClass::Medium)
+    }
+
+    #[test]
+    fn commit_stops_at_eos() {
+        let mut r = req();
+        let n = r.commit(&[1, 2, 63, 4], 63, 100);
+        assert_eq!(n, 3);
+        assert_eq!(r.state, RequestState::FinishedEos);
+        assert_eq!(r.generated(), &[1, 2, 63]);
+    }
+
+    #[test]
+    fn commit_stops_at_cap() {
+        let mut r = req();
+        let n = r.commit(&[1, 2, 3, 4, 5], 63, 3);
+        assert_eq!(n, 3);
+        assert_eq!(r.state, RequestState::FinishedLength);
+    }
+
+    #[test]
+    fn context_concatenates() {
+        let mut r = req();
+        r.commit(&[5], 63, 10);
+        assert_eq!(r.context(), &[9, 8, 5]);
+        assert_eq!(r.gen_len(), 1);
+        assert!(!r.is_done());
+    }
+}

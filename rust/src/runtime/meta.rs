@@ -1,0 +1,143 @@
+//! `artifacts/meta.json` loader — the contract between `aot.py` and the
+//! Rust runtime (geometry, parameter inventory, executable names).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq_len: usize,
+    pub batch: usize,
+    /// K+1: logit rows produced per verify call (max draft = spec_block-1).
+    pub spec_block: usize,
+    pub params: Vec<ParamSpec>,
+    pub calibration_lens: Vec<usize>,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let get_usize = |path: &str| -> Result<usize> {
+            j.get_path(path)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("meta.json missing {path}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .context("meta.json missing params")?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .context("param name")?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("shape dim"))
+                        .collect::<Result<_>>()?,
+                    file: p
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .context("param file")?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let calibration_lens = j
+            .get("calibration_lens")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        Ok(ArtifactMeta {
+            dir: dir.to_path_buf(),
+            vocab_size: get_usize("model.vocab_size")?,
+            d_model: get_usize("model.d_model")?,
+            n_layers: get_usize("model.n_layers")?,
+            n_heads: get_usize("model.n_heads")?,
+            max_seq_len: get_usize("model.max_seq_len")?,
+            batch: get_usize("model.batch")?,
+            spec_block: get_usize("model.spec_block")?,
+            params,
+            calibration_lens,
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{
+              "model": {"vocab_size": 64, "d_model": 64, "n_layers": 2,
+                        "n_heads": 4, "max_seq_len": 128, "batch": 8,
+                        "spec_block": 8},
+              "params": [{"name": "embed", "shape": [64, 64],
+                          "file": "params/embed.bin"}],
+              "artifacts": {"decode": "decode.hlo.txt"},
+              "calibration_lens": [32, 64, 128],
+              "seed": 0
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("das_meta_fixture");
+        write_fixture(&dir);
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.vocab_size, 64);
+        assert_eq!(m.spec_block, 8);
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.params[0].elems(), 4096);
+        assert_eq!(m.calibration_lens, vec![32, 64, 128]);
+        assert!(m.artifact_path("decode").ends_with("decode.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactMeta::load(Path::new("/nonexistent_das")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,66 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute_b`. Parameters live as **device buffers** and are threaded
+//! through every call; after a train step the returned buffers simply
+//! replace them (no host round-trip on the weight path).
+
+pub mod checkpoint;
+pub mod meta;
+pub mod pjrt_model;
+
+pub use checkpoint::{load as load_checkpoint, save as save_checkpoint, CheckpointMeta};
+pub use meta::ArtifactMeta;
+pub use pjrt_model::PjrtModel;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Compile one HLO-text artifact on the given client.
+pub fn compile_artifact(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+/// Read a raw little-endian f32 parameter dump written by `aot.py`.
+pub fn read_param_bin(path: &Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading param file {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == expect_elems * 4,
+        "param {} has {} bytes, expected {}",
+        path.display(),
+        bytes.len(),
+        expect_elems * 4
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_param_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("das_test_param");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_param_bin(&p, 3).unwrap(), vals);
+        assert!(read_param_bin(&p, 4).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! The real policy backend: AOT-compiled JAX/Pallas transformer on PJRT.
+//!
+//! Implements [`TargetModel`] over the `decode.hlo.txt` verify executable
+//! and exposes `train_step` for the GRPO trainer. Weights are device
+//! buffers updated in place after each learner step — the policy the engine
+//! decodes with is always the current one, so drafter staleness (Insight-3)
+//! is physically real in this stack, not simulated.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::meta::ArtifactMeta;
+use super::{compile_artifact, read_param_bin};
+use crate::cost::{fit, LatencyModel};
+use crate::model::{StepInput, StepOutput, TargetModel};
+use crate::spec::verify::softmax_with_temperature;
+use crate::tokens::TokenId;
+
+pub struct PjrtModel {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    decode: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    /// Device-resident parameters, in meta.params order.
+    params: Vec<xla::PjRtBuffer>,
+    latency: LatencyModel,
+    clock: f64,
+    n_fwd: u64,
+    pub train_steps: u64,
+}
+
+impl PjrtModel {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let decode = compile_artifact(&client, &meta.artifact_path("decode"))?;
+        let train = compile_artifact(&client, &meta.artifact_path("train_step"))?;
+        let mut params = Vec::with_capacity(meta.params.len());
+        for spec in &meta.params {
+            let host = read_param_bin(&meta.dir.join(&spec.file), spec.elems())?;
+            params.push(
+                client
+                    .buffer_from_host_buffer(&host, &spec.shape, None)
+                    .with_context(|| format!("uploading param {}", spec.name))?,
+            );
+        }
+        Ok(PjrtModel {
+            client,
+            meta,
+            decode,
+            train,
+            params,
+            latency: LatencyModel {
+                // Pre-calibration defaults; `calibrate()` refits.
+                c_base: 5e-3,
+                c_tok: 5e-6,
+                c_step: 1e-3,
+            },
+            clock: 0.0,
+            n_fwd: 0,
+            train_steps: 0,
+        })
+    }
+
+    /// Max draft tokens per verify call (the compiled block minus the
+    /// guaranteed extra token).
+    pub fn max_draft(&self) -> usize {
+        self.meta.spec_block - 1
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn upload<T: xla::ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        // NOTE: must be buffer_from_host_buffer (kImmutableOnlyDuringCall —
+        // synchronous copy). buffer_from_host_literal transfers lazily and
+        // does not await, so the host literal can be freed mid-transfer.
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Raw verify call: padded tokens `[B, S]`, starts `[B]` → logits
+    /// `[B, spec_block, V]` flattened row-major.
+    pub fn decode_raw(&mut self, tokens: &[i32], q_start: &[i32]) -> Result<Vec<f32>> {
+        let b = self.meta.batch;
+        let s = self.meta.max_seq_len;
+        anyhow::ensure!(tokens.len() == b * s, "tokens must be [B,S]");
+        anyhow::ensure!(q_start.len() == b, "q_start must be [B]");
+        let tok_buf = self.upload(tokens, &[b, s])?;
+        let qs_buf = self.upload(q_start, &[b])?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        inputs.push(&tok_buf);
+        inputs.push(&qs_buf);
+        let t0 = Instant::now();
+        let result = self.decode.execute_b(&inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        self.clock += t0.elapsed().as_secs_f64();
+        self.n_fwd += 1;
+        let out = lit.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// One GRPO SGD step. `tokens` `[B,S]` (prompt+generation, padded),
+    /// `mask` `[B,S]` (1.0 on generated positions), `adv` `[B]`. Updates the
+    /// device-resident weights; returns the loss.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i32],
+        mask: &[f32],
+        adv: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let b = self.meta.batch;
+        let s = self.meta.max_seq_len;
+        anyhow::ensure!(tokens.len() == b * s && mask.len() == b * s && adv.len() == b);
+        let tok_buf = self.upload(tokens, &[b, s])?;
+        let mask_buf = self.upload(mask, &[b, s])?;
+        let adv_buf = self.upload(adv, &[b])?;
+        let lr_buf = self.upload(&[lr], &[])?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        inputs.push(&tok_buf);
+        inputs.push(&mask_buf);
+        inputs.push(&adv_buf);
+        inputs.push(&lr_buf);
+        let result = self.train.execute_b(&inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let mut elems = lit.to_tuple()?;
+        anyhow::ensure!(
+            elems.len() == self.params.len() + 1,
+            "train_step returned {} outputs, expected {}",
+            elems.len(),
+            self.params.len() + 1
+        );
+        let loss = elems.pop().unwrap().to_vec::<f32>()?[0];
+        // Re-upload the updated weights (tuple outputs come back as one
+        // literal; a device-side split API isn't exposed by this crate).
+        let mut new_params = Vec::with_capacity(self.params.len());
+        for (spec, lit) in self.meta.params.iter().zip(elems) {
+            let host = lit.to_vec::<f32>()?;
+            new_params.push(self.client.buffer_from_host_buffer(&host, &spec.shape, None)?);
+        }
+        self.params = new_params;
+        self.train_steps += 1;
+        Ok(loss)
+    }
+
+    /// Fig. 8 calibration: run the `decode_len{S}` variants and fit the
+    /// linear latency model to (tokens processed, seconds) samples.
+    pub fn calibrate(&mut self, reps: usize) -> Result<crate::cost::CalibrationReport> {
+        let mut samples = Vec::new();
+        for &s in &self.meta.calibration_lens.clone() {
+            let exe = compile_artifact(
+                &self.client,
+                &self.meta.artifact_path(&format!("decode_len{s}")),
+            )?;
+            let b = self.meta.batch;
+            let tokens = vec![0i32; b * s];
+            let q_start = vec![0i32; b];
+            let tok_buf = self.upload(&tokens, &[b, s])?;
+            let qs_buf = self.upload(&q_start, &[b])?;
+            let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+            inputs.push(&tok_buf);
+            inputs.push(&qs_buf);
+            // Warmup.
+            let _ = exe.execute_b(&inputs)?[0][0].to_literal_sync()?;
+            for _ in 0..reps.max(3) {
+                let t0 = Instant::now();
+                let _ = exe.execute_b(&inputs)?[0][0].to_literal_sync()?;
+                samples.push((b * s, t0.elapsed().as_secs_f64()));
+            }
+        }
+        let report = fit(&samples);
+        self.latency = LatencyModel {
+            c_step: self.latency.c_step,
+            ..report.model
+        };
+        Ok(report)
+    }
+
+    /// Replace the device-resident weights from host arrays (checkpoint
+    /// restore). Order/shapes must match `meta.params`.
+    pub fn set_params_from_host(&mut self, host: &[Vec<f32>]) -> Result<()> {
+        anyhow::ensure!(host.len() == self.meta.params.len(), "param count mismatch");
+        let mut new_params = Vec::with_capacity(host.len());
+        for (spec, values) in self.meta.params.iter().zip(host) {
+            anyhow::ensure!(values.len() == spec.elems(), "param {} size mismatch", spec.name);
+            new_params.push(self.client.buffer_from_host_buffer(values, &spec.shape, None)?);
+        }
+        self.params = new_params;
+        Ok(())
+    }
+
+    /// Download current weights (checkpointing / tests).
+    pub fn params_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|b| Ok(b.to_literal_sync()?.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+impl TargetModel for PjrtModel {
+    fn vocab_size(&self) -> usize {
+        self.meta.vocab_size
+    }
+
+    fn eos(&self) -> TokenId {
+        (self.meta.vocab_size - 1) as TokenId
+    }
+
+    fn forward(&mut self, batch: &[StepInput], temperature: f64) -> Vec<StepOutput> {
+        let b = self.meta.batch;
+        let s = self.meta.max_seq_len;
+        let kp1 = self.meta.spec_block;
+        let v = self.meta.vocab_size;
+        assert!(batch.len() <= b, "batch {} exceeds compiled capacity {b}", batch.len());
+        let mut tokens = vec![0i32; b * s];
+        let mut q_start = vec![0i32; b];
+        for (i, el) in batch.iter().enumerate() {
+            let total = el.context.len() + el.draft.len();
+            assert!(
+                total <= s,
+                "context+draft ({total}) exceeds compiled seq len ({s})"
+            );
+            assert!(el.draft.len() < kp1, "draft exceeds spec block");
+            assert!(!el.context.is_empty(), "context must be non-empty");
+            for (j, &t) in el.context.iter().chain(el.draft.iter()).enumerate() {
+                tokens[i * s + j] = t as i32;
+            }
+            // Query rows start at the last committed token: row r predicts
+            // the token after context+r.
+            q_start[i] = (el.context.len() - 1) as i32;
+        }
+        let logits = self
+            .decode_raw(&tokens, &q_start)
+            .expect("decode execution failed");
+        let mut outs = Vec::with_capacity(batch.len());
+        for (i, el) in batch.iter().enumerate() {
+            let need = el.draft.len() + 1;
+            let mut dists = Vec::with_capacity(need);
+            for r in 0..need {
+                let base = (i * kp1 + r) * v;
+                let row = &logits[base..base + v];
+                if temperature <= 0.0 {
+                    // Greedy callers only need the argmax; hand back the raw
+                    // logits as "probabilities" (argmax-invariant).
+                    dists.push(row.to_vec());
+                } else {
+                    dists.push(softmax_with_temperature(row, temperature));
+                }
+            }
+            outs.push(dists);
+        }
+        outs
+    }
+
+    fn elapsed(&self) -> f64 {
+        self.clock
+    }
+
+    fn reset_clock(&mut self) {
+        self.clock = 0.0;
+    }
+
+    fn latency_model(&self) -> LatencyModel {
+        self.latency
+    }
+
+    fn forward_passes(&self) -> u64 {
+        self.n_fwd
+    }
+}

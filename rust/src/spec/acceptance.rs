@@ -1,0 +1,194 @@
+//! Saturating acceptance model (§4.2.2 Eq. 3, Appendix C).
+//!
+//! `A_i(p) = k_i · l_i · (1 − e^{−α_i p / l_i})` — the total number of
+//! accepted tokens for request `i` as a function of its proposed-token
+//! budget `p`, saturating at `k_i·l_i` (the intrinsic drafter/target
+//! mismatch limit). [`AcceptanceEstimator`] fits `(α, k)` online from the
+//! observed (proposed, accepted) pairs of recent verification rounds, so the
+//! budget optimizer tracks the drafter's actual quality as training evolves.
+
+/// Per-request acceptance-curve parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceptanceParams {
+    /// Draft efficiency `α > 0`: how fast acceptance accrues with budget.
+    pub alpha: f64,
+    /// Capacity factor `k ∈ (0, 1]`: max achievable accepted fraction.
+    pub k: f64,
+}
+
+impl Default for AcceptanceParams {
+    fn default() -> Self {
+        // Conservative prior: a mediocre drafter.
+        AcceptanceParams { alpha: 1.0, k: 0.5 }
+    }
+}
+
+impl AcceptanceParams {
+    /// Eq. 3: expected accepted tokens given total proposed budget `p` for a
+    /// request with target length `l`.
+    pub fn accepted(&self, p: f64, l: f64) -> f64 {
+        if l <= 0.0 {
+            return 0.0;
+        }
+        self.k * l * (1.0 - (-self.alpha * p / l).exp())
+    }
+
+    /// Remaining tokens after speculation: `l − A(p)` (pre-Eq. 4 identity).
+    pub fn remaining(&self, p: f64, l: f64) -> f64 {
+        l * (1.0 - self.k + self.k * (-self.alpha * p / l).exp())
+    }
+}
+
+/// Online estimator of `(α, k)` from verification-round outcomes.
+///
+/// Each round contributes one `(d, a)` point: `d` tokens proposed, `a`
+/// accepted (a ≤ d). In the small-budget regime Eq. 3 is `A ≈ α·p`, so α is
+/// estimated from the per-round acceptance ratio; `k` is estimated from the
+/// empirical ceiling — the high-quantile of per-round acceptance fractions —
+/// since rounds that keep accepting everything indicate a high mismatch
+/// limit. Exponentially decayed so the estimate follows policy drift.
+#[derive(Debug, Clone)]
+pub struct AcceptanceEstimator {
+    /// Decayed sums for the linear-regime α fit.
+    sum_d: f64,
+    sum_a: f64,
+    /// Decayed count of rounds that were fully accepted vs total.
+    full_rounds: f64,
+    rounds: f64,
+    /// Decay per observation.
+    decay: f64,
+}
+
+impl Default for AcceptanceEstimator {
+    fn default() -> Self {
+        Self::new(0.98)
+    }
+}
+
+impl AcceptanceEstimator {
+    pub fn new(decay: f64) -> Self {
+        AcceptanceEstimator {
+            sum_d: 0.0,
+            sum_a: 0.0,
+            full_rounds: 0.0,
+            rounds: 0.0,
+            decay,
+        }
+    }
+
+    /// Record one verification round: `proposed` draft tokens, `accepted` of
+    /// them kept.
+    pub fn observe(&mut self, proposed: usize, accepted: usize) {
+        debug_assert!(accepted <= proposed);
+        if proposed == 0 {
+            return;
+        }
+        self.sum_d = self.sum_d * self.decay + proposed as f64;
+        self.sum_a = self.sum_a * self.decay + accepted as f64;
+        self.rounds = self.rounds * self.decay + 1.0;
+        if accepted == proposed {
+            self.full_rounds = self.full_rounds * self.decay + 1.0;
+        } else {
+            self.full_rounds *= self.decay;
+        }
+    }
+
+    pub fn observations(&self) -> f64 {
+        self.rounds
+    }
+
+    /// Current `(α, k)` estimate (prior when too few observations).
+    pub fn params(&self) -> AcceptanceParams {
+        if self.rounds < 3.0 || self.sum_d <= 0.0 {
+            return AcceptanceParams::default();
+        }
+        let ratio = (self.sum_a / self.sum_d).clamp(0.01, 0.99);
+        // Linear regime: A ≈ α p  ⇒  α ≈ accept ratio (per proposed token).
+        let alpha = ratio;
+        // Ceiling: fraction of rounds that were fully accepted lifts k above
+        // the mean ratio; never below the observed mean ratio itself.
+        let full_frac = (self.full_rounds / self.rounds).clamp(0.0, 1.0);
+        let k = (ratio + (1.0 - ratio) * full_frac).clamp(0.05, 1.0);
+        AcceptanceParams { alpha, k }
+    }
+
+    /// Mean per-round acceptance ratio (diagnostic; Figs. 4/6/7 series).
+    pub fn mean_ratio(&self) -> f64 {
+        if self.sum_d <= 0.0 {
+            0.0
+        } else {
+            self.sum_a / self.sum_d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepted_saturates_at_k_l() {
+        let p = AcceptanceParams { alpha: 2.0, k: 0.8 };
+        let l = 100.0;
+        assert!(p.accepted(0.0, l).abs() < 1e-12);
+        let huge = p.accepted(1e6, l);
+        assert!((huge - 80.0).abs() < 1e-6, "saturation at k*l, got {huge}");
+        // Monotone in p.
+        assert!(p.accepted(10.0, l) < p.accepted(20.0, l));
+    }
+
+    #[test]
+    fn remaining_complements_accepted() {
+        let p = AcceptanceParams { alpha: 1.5, k: 0.7 };
+        let (bud, l) = (30.0, 200.0);
+        assert!((p.accepted(bud, l) + p.remaining(bud, l) - l).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimator_tracks_good_drafter() {
+        let mut e = AcceptanceEstimator::default();
+        for _ in 0..50 {
+            e.observe(8, 8); // everything accepted
+        }
+        let p = e.params();
+        assert!(p.k > 0.9, "k={}", p.k);
+        assert!(p.alpha > 0.9, "alpha={}", p.alpha);
+    }
+
+    #[test]
+    fn estimator_tracks_weak_drafter() {
+        let mut e = AcceptanceEstimator::default();
+        for _ in 0..50 {
+            e.observe(8, 1);
+        }
+        let p = e.params();
+        assert!(p.k < 0.4, "k={}", p.k);
+        assert!(p.alpha < 0.2, "alpha={}", p.alpha);
+    }
+
+    #[test]
+    fn estimator_adapts_to_drift() {
+        let mut e = AcceptanceEstimator::new(0.9);
+        for _ in 0..100 {
+            e.observe(8, 8);
+        }
+        for _ in 0..100 {
+            e.observe(8, 1); // drafter went stale
+        }
+        assert!(e.params().k < 0.4);
+    }
+
+    #[test]
+    fn few_observations_fall_back_to_prior() {
+        let mut e = AcceptanceEstimator::default();
+        e.observe(4, 4);
+        assert_eq!(e.params(), AcceptanceParams::default());
+    }
+
+    #[test]
+    fn zero_proposed_ignored() {
+        let mut e = AcceptanceEstimator::default();
+        e.observe(0, 0);
+        assert_eq!(e.observations(), 0.0);
+    }
+}

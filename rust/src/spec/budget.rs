@@ -1,0 +1,324 @@
+//! Optimal speculative-token budget allocation (§4.2.2, Eq. 5–9).
+//!
+//! Given a batch of requests with predicted lengths `l_i` and acceptance
+//! parameters `(α_i, k_i)`, the rollout-latency objective (Eq. 5)
+//!
+//! ```text
+//! J(p) = c_base · max_i[ l_i (1 − k_i + k_i e^{−α_i p_i / l_i}) ]
+//!        + c_tok · Σ_i p_i + C
+//! ```
+//!
+//! has, at optimality, a tight constraint for every active request. Solving
+//! `l(1−k+k·e^{−αp/l}) = N_fwd` for `p` gives
+//!
+//! ```text
+//! p_i* = −(l_i/α_i) · ln( (N_fwd/l_i − 1 + k_i) / k_i )   for N_fwd < l_i
+//! p_i* = 0                                                otherwise
+//! ```
+//!
+//! **Paper erratum:** the paper's Eq. 7 prints the argument of the log as
+//! `1 − k_i(1 − N_fwd/l_i)` — missing the division by `k_i`. The two forms
+//! coincide at `k = 1` but the printed one does not satisfy the tight
+//! constraint of Eq. 6 for `k < 1` (substituting it back into the
+//! remaining-length expression does not return `N_fwd`). We implement the
+//! consistent form; the qualitative observations (1)–(4) of §4.2.2 are
+//! unchanged and are unit-tested below. See DESIGN.md §5.
+//!
+//! The resulting single-variable objective `J(N_fwd)` is minimized by
+//! bisection on its derivative: `J'(N) → −∞` as `N` approaches the largest
+//! saturation floor `l_i(1−k_i)` (budget blows up), `J'(max l_i) = c_base >
+//! 0`, and `J'` is monotone non-decreasing in between, so a unique crossing
+//! exists.
+
+use super::acceptance::AcceptanceParams;
+use crate::cost::LatencyModel;
+
+/// One request as seen by the allocator.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetRequest {
+    /// Predicted (remaining) generation length `l_i`.
+    pub length: f64,
+    pub accept: AcceptanceParams,
+}
+
+/// Solution of the allocation problem.
+#[derive(Debug, Clone)]
+pub struct BudgetSolution {
+    /// Optimal effective forward-pass count `N_fwd`.
+    pub n_fwd: f64,
+    /// Per-request total speculative budgets `p_i*` (same order as input).
+    pub budgets: Vec<f64>,
+    /// Modeled objective value `J` (Eq. 8), in seconds.
+    pub objective: f64,
+}
+
+/// Corrected Eq. 7 for a single request at a given `n_fwd`.
+pub fn closed_form_budget(req: &BudgetRequest, n_fwd: f64) -> f64 {
+    let l = req.length;
+    if n_fwd >= l || l <= 0.0 {
+        return 0.0;
+    }
+    let AcceptanceParams { alpha, k } = req.accept;
+    let inner = (n_fwd / l - 1.0 + k) / k;
+    if inner <= 0.0 {
+        // n_fwd is at/below this request's saturation floor l(1−k): no
+        // finite budget reaches it.
+        return f64::INFINITY;
+    }
+    -(l / alpha) * inner.ln()
+}
+
+/// The paper's literal Eq. 7 (kept for the ablation in `figures::fig12` and
+/// for documenting the erratum; do not use for allocation).
+pub fn paper_eq7_budget(req: &BudgetRequest, n_fwd: f64) -> f64 {
+    let l = req.length;
+    if n_fwd >= l || l <= 0.0 {
+        return 0.0;
+    }
+    let AcceptanceParams { alpha, k } = req.accept;
+    let inner = 1.0 - k * (1.0 - n_fwd / l);
+    if inner <= 0.0 {
+        return f64::INFINITY;
+    }
+    -(l / alpha) * inner.ln()
+}
+
+/// `dJ/dN` (corrected Eq. 9): `c_base − c_tok · Σ_{l_i > N} (l_i/α_i) /
+/// (N − l_i(1−k_i))`.
+fn objective_derivative(reqs: &[BudgetRequest], cost: &LatencyModel, n_fwd: f64) -> f64 {
+    let mut sum = 0.0;
+    for r in reqs {
+        if r.length > n_fwd {
+            let AcceptanceParams { alpha, k } = r.accept;
+            let denom = n_fwd - r.length * (1.0 - k);
+            if denom > 0.0 {
+                sum += (r.length / alpha) / denom;
+            } else {
+                return f64::NEG_INFINITY;
+            }
+        }
+    }
+    cost.c_base - cost.c_tok * sum
+}
+
+/// Eq. 8: the single-variable objective at `n_fwd`.
+pub fn objective(reqs: &[BudgetRequest], cost: &LatencyModel, n_fwd: f64) -> f64 {
+    let mut j = cost.c_base * n_fwd + cost.c_step;
+    for r in reqs {
+        let p = closed_form_budget(r, n_fwd);
+        if p.is_finite() {
+            j += cost.c_tok * p;
+        } else {
+            return f64::INFINITY;
+        }
+    }
+    j
+}
+
+/// Solve for the optimal `N_fwd` and per-request budgets.
+pub fn solve(reqs: &[BudgetRequest], cost: &LatencyModel) -> BudgetSolution {
+    if reqs.is_empty() {
+        return BudgetSolution {
+            n_fwd: 0.0,
+            budgets: Vec::new(),
+            objective: cost.c_step,
+        };
+    }
+    // Feasible domain: strictly above every saturation floor l_i(1−k_i);
+    // never useful above the longest request.
+    let floor = reqs
+        .iter()
+        .map(|r| r.length * (1.0 - r.accept.k))
+        .fold(0.0_f64, f64::max);
+    let n_hi = reqs.iter().map(|r| r.length).fold(0.0_f64, f64::max);
+    let n_lo = (floor + 1e-9).min(n_hi);
+    if n_hi <= n_lo + 1e-12 {
+        let budgets = reqs.iter().map(|r| closed_form_budget(r, n_hi)).collect();
+        return BudgetSolution {
+            n_fwd: n_hi,
+            budgets,
+            objective: objective(reqs, cost, n_hi),
+        };
+    }
+    // J'(n_lo⁺) = −∞, J'(n_hi) = c_base > 0; bisect the monotone derivative.
+    let mut lo = n_lo;
+    let mut hi = n_hi;
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if objective_derivative(reqs, cost, mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let n = 0.5 * (lo + hi);
+    BudgetSolution {
+        n_fwd: n,
+        budgets: reqs.iter().map(|r| closed_form_budget(r, n)).collect(),
+        objective: objective(reqs, cost, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn req(l: f64, alpha: f64, k: f64) -> BudgetRequest {
+        BudgetRequest {
+            length: l,
+            accept: AcceptanceParams { alpha, k },
+        }
+    }
+
+    fn paper_cost() -> LatencyModel {
+        LatencyModel {
+            c_base: 20e-3,
+            c_tok: 0.15e-3,
+            c_step: 0.0,
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_constraint() {
+        // Substituting p* back into the remaining-length expression must give
+        // exactly n_fwd (the tight constraint of Eq. 6). This is the test the
+        // paper's printed Eq. 7 fails for k < 1 (see module docs).
+        let r = req(500.0, 0.7, 0.85);
+        for n in [100.0, 200.0, 400.0] {
+            let p = closed_form_budget(&r, n);
+            let remaining = r.accept.remaining(p, r.length);
+            assert!(
+                (remaining - n).abs() < 1e-6,
+                "constraint not tight: rem={remaining} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_eq7_violates_constraint_for_k_lt_1() {
+        let r = req(500.0, 0.7, 0.85);
+        let p = paper_eq7_budget(&r, 200.0);
+        let remaining = r.accept.remaining(p, r.length);
+        assert!((remaining - 200.0).abs() > 1.0, "erratum unexpectedly tight");
+        // …and the forms agree at k = 1.
+        let r1 = req(500.0, 0.7, 1.0);
+        assert!((paper_eq7_budget(&r1, 200.0) - closed_form_budget(&r1, 200.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observation_1_longer_requests_get_bigger_budgets() {
+        // §4.2.2 Obs. 1: p* grows with l; similar lengths → similar budgets.
+        let reqs = vec![
+            req(100.0, 0.8, 0.8),
+            req(400.0, 0.8, 0.8),
+            req(1600.0, 0.8, 0.8),
+            req(1550.0, 0.8, 0.8),
+        ];
+        let sol = solve(&reqs, &paper_cost());
+        assert!(sol.budgets[0] <= sol.budgets[1]);
+        assert!(sol.budgets[1] <= sol.budgets[2]);
+        let rel = (sol.budgets[2] - sol.budgets[3]).abs() / sol.budgets[2].max(1.0);
+        assert!(rel < 0.15, "similar lengths should get similar budgets");
+    }
+
+    #[test]
+    fn observation_2_short_requests_skip_speculation() {
+        // Requests with l_i <= N_fwd get p* = 0.
+        let reqs = vec![req(2000.0, 0.8, 0.8), req(50.0, 0.8, 0.8)];
+        let sol = solve(&reqs, &paper_cost());
+        assert!(sol.n_fwd > 50.0, "n_fwd={}", sol.n_fwd);
+        assert_eq!(sol.budgets[1], 0.0);
+        assert!(sol.budgets[0] > 0.0);
+    }
+
+    #[test]
+    fn observation_3_weak_drafter_shrinks_budget_value() {
+        let strong = solve(&[req(1000.0, 0.8, 0.9)], &paper_cost());
+        let weak = solve(&[req(1000.0, 0.8, 0.2)], &paper_cost());
+        // Weak drafter can't push N_fwd down nearly as far.
+        assert!(weak.n_fwd > strong.n_fwd);
+        // And its achievable objective is worse.
+        assert!(weak.objective > strong.objective);
+    }
+
+    #[test]
+    fn observation_4_base_dominant_drives_nfwd_down() {
+        let base_heavy = LatencyModel {
+            c_base: 100e-3,
+            c_tok: 0.01e-3,
+            c_step: 0.0,
+        };
+        let tok_heavy = LatencyModel {
+            c_base: 1e-3,
+            c_tok: 1e-3,
+            c_step: 0.0,
+        };
+        let reqs = vec![req(1000.0, 0.8, 0.9)];
+        let a = solve(&reqs, &base_heavy);
+        let b = solve(&reqs, &tok_heavy);
+        assert!(
+            a.n_fwd < b.n_fwd,
+            "base-dominant should cut N_fwd harder: {} vs {}",
+            a.n_fwd,
+            b.n_fwd
+        );
+    }
+
+    #[test]
+    fn empty_batch() {
+        let sol = solve(&[], &paper_cost());
+        assert_eq!(sol.n_fwd, 0.0);
+        assert!(sol.budgets.is_empty());
+    }
+
+    #[test]
+    fn infeasible_floor_returns_infinite_budget() {
+        // n_fwd below the saturation floor l(1-k) = 500*0.5 = 250.
+        let r = req(500.0, 1.0, 0.5);
+        assert!(closed_form_budget(&r, 100.0).is_infinite());
+    }
+
+    #[test]
+    fn prop_solution_is_stationary_and_feasible() {
+        prop::check(128, |g| {
+            let n = 1 + g.usize_in(0, 6);
+            let reqs: Vec<BudgetRequest> = (0..n)
+                .map(|_| {
+                    req(
+                        g.f64_in(50.0, 3000.0),
+                        g.f64_in(0.2, 1.5),
+                        g.f64_in(0.1, 0.99),
+                    )
+                })
+                .collect();
+            let cost = LatencyModel {
+                c_base: g.f64_in(1e-3, 100e-3),
+                c_tok: g.f64_in(0.01e-3, 1e-3),
+                c_step: 0.0,
+            };
+            let sol = solve(&reqs, &cost);
+            // Budgets finite and non-negative.
+            for p in &sol.budgets {
+                prop::require(p.is_finite() && *p >= 0.0, "budget finite & >= 0")?;
+            }
+            // No probed neighbor of N_fwd does better (optimality of the
+            // bisected stationary point).
+            let j0 = objective(&reqs, &cost, sol.n_fwd);
+            prop::require(j0.is_finite(), "objective finite at optimum")?;
+            let floor = reqs
+                .iter()
+                .map(|r| r.length * (1.0 - r.accept.k))
+                .fold(0.0_f64, f64::max);
+            let n_hi = reqs.iter().map(|r| r.length).fold(0.0_f64, f64::max);
+            for d in [-1.0, 1.0, -10.0, 10.0, -100.0, 100.0] {
+                let n2 = sol.n_fwd + d;
+                if n2 > floor + 1e-6 && n2 <= n_hi {
+                    let j2 = objective(&reqs, &cost, n2);
+                    prop::require(j0 <= j2 + 1e-6 * j2.abs().max(1.0), "J(N*) must be minimal")?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

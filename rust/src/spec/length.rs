@@ -1,0 +1,333 @@
+//! Dynamic draft budget via runtime length prediction (§4.2.3).
+//!
+//! Direct length prediction is hopeless — Fig. 9 shows per-problem lengths
+//! are wildly dispersed — so the paper uses a hierarchical heuristic:
+//!
+//! 1. **Length classes** Long / Medium / Short, each mapped to a draft
+//!    budget (Short disables speculation — §4.2.2 Obs. 2).
+//! 2. **Initialization from history**: a request's initial class is the
+//!    argmax of its problem's historical class distribution.
+//! 3. **Runtime update**: as the partial length `l` grows, re-classify via
+//!    `argmax_c P(c | l, Init)` estimated from historical rollouts — here a
+//!    survival-statistics estimate `P(final class = c | L > l)` blended with
+//!    the init prior.
+
+use std::collections::HashMap;
+
+use crate::tokens::ProblemId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LengthClass {
+    Short,
+    Medium,
+    Long,
+}
+
+impl LengthClass {
+    pub fn all() -> [LengthClass; 3] {
+        [LengthClass::Short, LengthClass::Medium, LengthClass::Long]
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            LengthClass::Short => 0,
+            LengthClass::Medium => 1,
+            LengthClass::Long => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LengthClass::Short => "short",
+            LengthClass::Medium => "medium",
+            LengthClass::Long => "long",
+        }
+    }
+}
+
+/// Class thresholds plus historical statistics powering the classifier.
+#[derive(Debug, Clone)]
+pub struct LengthPolicy {
+    /// Lengths < t_short ⇒ Short; < t_long ⇒ Medium; else Long.
+    pub t_short: usize,
+    pub t_long: usize,
+    /// Recent final lengths per problem (bounded).
+    history: HashMap<ProblemId, Vec<usize>>,
+    /// Global pool of recent final lengths (for survival statistics).
+    global: Vec<usize>,
+    /// Keep at most this many samples per problem / globally.
+    per_problem_cap: usize,
+    global_cap: usize,
+}
+
+impl LengthPolicy {
+    /// Thresholds from quantiles of an initial length sample: Short below
+    /// the median, Long above the 85th percentile (the tail that dominates
+    /// makespan).
+    pub fn from_samples(samples: &[usize]) -> Self {
+        let mut v: Vec<usize> = samples.to_vec();
+        v.sort_unstable();
+        let q = |p: f64| -> usize {
+            if v.is_empty() {
+                0
+            } else {
+                v[((v.len() - 1) as f64 * p) as usize]
+            }
+        };
+        LengthPolicy::new(q(0.5).max(1), q(0.85).max(2))
+    }
+
+    pub fn new(t_short: usize, t_long: usize) -> Self {
+        LengthPolicy {
+            t_short,
+            t_long: t_long.max(t_short + 1),
+            history: HashMap::new(),
+            global: Vec::new(),
+            per_problem_cap: 64,
+            global_cap: 4096,
+        }
+    }
+
+    pub fn classify(&self, final_len: usize) -> LengthClass {
+        if final_len < self.t_short {
+            LengthClass::Short
+        } else if final_len < self.t_long {
+            LengthClass::Medium
+        } else {
+            LengthClass::Long
+        }
+    }
+
+    /// Record a completed rollout's final length.
+    pub fn observe(&mut self, problem: ProblemId, final_len: usize) {
+        let h = self.history.entry(problem).or_default();
+        h.push(final_len);
+        if h.len() > self.per_problem_cap {
+            h.remove(0);
+        }
+        self.global.push(final_len);
+        if self.global.len() > self.global_cap {
+            self.global.remove(0);
+        }
+    }
+
+    pub fn observations(&self, problem: ProblemId) -> usize {
+        self.history.get(&problem).map(|h| h.len()).unwrap_or(0)
+    }
+
+    /// Step 2: initial class from the problem's historical distribution
+    /// (argmax class frequency; Medium when no history).
+    pub fn init_class(&self, problem: ProblemId) -> LengthClass {
+        let Some(h) = self.history.get(&problem) else {
+            return LengthClass::Medium;
+        };
+        if h.is_empty() {
+            return LengthClass::Medium;
+        }
+        let mut counts = [0usize; 3];
+        for &l in h {
+            counts[self.classify(l).index()] += 1;
+        }
+        Self::argmax_class(&counts.map(|c| c as f64))
+    }
+
+    /// Step 3: runtime update — `argmax_c P(c | L > partial_len, Init)`.
+    ///
+    /// `P(c | L > l)` comes from survival counts over the problem's (falling
+    /// back to global) historical lengths; the init prior enters as one
+    /// pseudo-count, which resolves ties toward the initial class and keeps
+    /// the decision stable early in generation.
+    pub fn runtime_class(
+        &self,
+        problem: ProblemId,
+        partial_len: usize,
+        init: LengthClass,
+    ) -> LengthClass {
+        // Deterministic fast path: the partial length already proves the
+        // class floor — a sequence of length >= t_long IS Long.
+        if partial_len >= self.t_long {
+            return LengthClass::Long;
+        }
+        let pool: &[usize] = match self.history.get(&problem) {
+            Some(h) if !h.is_empty() => h,
+            _ => &self.global,
+        };
+        let mut counts = [0f64; 3];
+        counts[init.index()] += 1.0; // prior pseudo-count
+        for &l in pool {
+            if l > partial_len {
+                counts[self.classify(l).index()] += 1.0;
+            }
+        }
+        // Survivors can't be Short if partial_len >= t_short.
+        if partial_len >= self.t_short {
+            counts[LengthClass::Short.index()] = 0.0;
+        }
+        Self::argmax_class(&counts)
+    }
+
+    fn argmax_class(counts: &[f64; 3]) -> LengthClass {
+        // Ties break toward the LONGER class: under-speculating on a long
+        // straggler costs more than over-speculating on a medium one.
+        let mut best = LengthClass::Short;
+        let mut best_v = f64::MIN;
+        for c in LengthClass::all() {
+            let v = counts[c.index()];
+            if v >= best_v {
+                best_v = v;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Map a class to its configured draft budget per round.
+    pub fn budget_for(class: LengthClass, cfg: &crate::config::SpecConfig) -> usize {
+        match class {
+            LengthClass::Short => cfg.budget_short,
+            LengthClass::Medium => cfg.budget_medium,
+            LengthClass::Long => cfg.budget_long,
+        }
+    }
+
+    /// Expected remaining length for a request in a class (used as `l_i` by
+    /// the Eq. 7 allocator): mean of historical lengths in that class minus
+    /// the partial length, floored at a small positive value.
+    pub fn expected_remaining(
+        &self,
+        problem: ProblemId,
+        partial_len: usize,
+        class: LengthClass,
+    ) -> f64 {
+        let pool: &[usize] = match self.history.get(&problem) {
+            Some(h) if !h.is_empty() => h,
+            _ => &self.global,
+        };
+        let in_class: Vec<f64> = pool
+            .iter()
+            .filter(|&&l| self.classify(l) == class && l > partial_len)
+            .map(|&l| l as f64)
+            .collect();
+        let mean_final = if in_class.is_empty() {
+            match class {
+                LengthClass::Short => self.t_short as f64 * 0.5,
+                LengthClass::Medium => (self.t_short + self.t_long) as f64 * 0.5,
+                LengthClass::Long => self.t_long as f64 * 1.5,
+            }
+        } else {
+            in_class.iter().sum::<f64>() / in_class.len() as f64
+        };
+        (mean_final - partial_len as f64).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> LengthPolicy {
+        LengthPolicy::new(100, 400)
+    }
+
+    #[test]
+    fn classify_thresholds() {
+        let p = policy();
+        assert_eq!(p.classify(10), LengthClass::Short);
+        assert_eq!(p.classify(99), LengthClass::Short);
+        assert_eq!(p.classify(100), LengthClass::Medium);
+        assert_eq!(p.classify(399), LengthClass::Medium);
+        assert_eq!(p.classify(400), LengthClass::Long);
+    }
+
+    #[test]
+    fn from_samples_quantiles() {
+        let samples: Vec<usize> = (1..=100).collect();
+        let p = LengthPolicy::from_samples(&samples);
+        assert_eq!(p.t_short, 50);
+        assert_eq!(p.t_long, 85);
+    }
+
+    #[test]
+    fn init_class_follows_history() {
+        let mut p = policy();
+        for _ in 0..5 {
+            p.observe(7, 800);
+        }
+        p.observe(7, 50);
+        assert_eq!(p.init_class(7), LengthClass::Long);
+        assert_eq!(p.init_class(99), LengthClass::Medium); // unseen problem
+    }
+
+    #[test]
+    fn runtime_class_long_once_past_threshold() {
+        let p = policy();
+        assert_eq!(
+            p.runtime_class(1, 400, LengthClass::Short),
+            LengthClass::Long
+        );
+    }
+
+    #[test]
+    fn runtime_class_excludes_short_after_t_short() {
+        let mut p = policy();
+        for _ in 0..10 {
+            p.observe(3, 50); // history says short...
+        }
+        // ...but we've already generated 150 tokens.
+        let c = p.runtime_class(3, 150, LengthClass::Short);
+        assert_ne!(c, LengthClass::Short);
+    }
+
+    #[test]
+    fn runtime_class_uses_survival_statistics() {
+        let mut p = policy();
+        // Problem 5: most rollouts are medium (~200), a few are very long.
+        for _ in 0..8 {
+            p.observe(5, 200);
+        }
+        for _ in 0..2 {
+            p.observe(5, 900);
+        }
+        // Early on, survivors are mostly medium.
+        assert_eq!(
+            p.runtime_class(5, 10, LengthClass::Medium),
+            LengthClass::Medium
+        );
+        // Past 200, only the long ones survive.
+        assert_eq!(
+            p.runtime_class(5, 250, LengthClass::Medium),
+            LengthClass::Long
+        );
+    }
+
+    #[test]
+    fn history_capped() {
+        let mut p = policy();
+        for i in 0..200 {
+            p.observe(1, i);
+        }
+        assert_eq!(p.observations(1), 64);
+    }
+
+    #[test]
+    fn expected_remaining_positive_and_decreasing() {
+        let mut p = policy();
+        for _ in 0..10 {
+            p.observe(2, 600);
+        }
+        let a = p.expected_remaining(2, 0, LengthClass::Long);
+        let b = p.expected_remaining(2, 300, LengthClass::Long);
+        assert!(a > b);
+        assert!(b >= 1.0);
+        // No data at all: falls back to threshold-derived guesses.
+        let c = p.expected_remaining(77, 0, LengthClass::Medium);
+        assert!(c > 0.0);
+    }
+
+    #[test]
+    fn budget_mapping() {
+        let cfg = crate::config::DasConfig::default().spec;
+        assert_eq!(LengthPolicy::budget_for(LengthClass::Short, &cfg), cfg.budget_short);
+        assert_eq!(LengthPolicy::budget_for(LengthClass::Long, &cfg), cfg.budget_long);
+    }
+}

@@ -1,0 +1,136 @@
+//! Lenient (LOSSY) verification — the SPEC-RL-style baseline DAS defines
+//! itself against.
+//!
+//! Related work (§2): SPEC-RL reuses prior trajectories as drafts but
+//! "introduces a lenience parameter for acceptance that changes the output
+//! distribution … it does not recover non-SD-level accuracy". This module
+//! implements that acceptance rule so the claim is testable: a draft token
+//! is accepted when `p(x) ≥ (1 − lenience) · max_y p(y)` — at lenience 0
+//! this is greedy-strict; as lenience grows, off-policy draft tokens leak
+//! into the output and the effective sampling distribution shifts toward
+//! whatever the (stale) draft source proposes.
+//!
+//! DAS never uses this path; it exists for the ablation
+//! (`figures`/tests) demonstrating WHY losslessness matters: lenient
+//! acceptance inflates speedup but biases rollouts — on the simulator the
+//! bias shows up directly as reward distortion.
+
+use super::verify::{greedy_token, VerifyOutcome};
+use crate::tokens::TokenId;
+use crate::util::rng::Rng;
+
+/// Lenient verification of a point-mass draft. `lenience ∈ [0, 1)`:
+/// 0 ⇒ accept only when the draft token IS (tied-)argmax; larger values
+/// accept increasingly improbable draft tokens. Rejection falls back to
+/// sampling from the true distribution.
+pub fn verify_lenient(
+    draft: &[TokenId],
+    dists: &[Vec<f32>],
+    lenience: f64,
+    rng: &mut Rng,
+) -> VerifyOutcome {
+    assert_eq!(dists.len(), draft.len() + 1, "need K+1 distributions");
+    let thresh_scale = (1.0 - lenience).clamp(0.0, 1.0) as f32;
+    let mut tokens = Vec::with_capacity(draft.len() + 1);
+    for (t, &d) in draft.iter().enumerate() {
+        let dist = &dists[t];
+        let top = dist.iter().cloned().fold(f32::MIN, f32::max);
+        let p_d = dist.get(d as usize).copied().unwrap_or(0.0);
+        if p_d >= thresh_scale * top && p_d > 0.0 {
+            // LOSSY: accepted even when p(d) < max — the distribution shift.
+            tokens.push(d);
+        } else {
+            tokens.push(super::verify::sample(dist, rng));
+            return VerifyOutcome { accepted: t, tokens };
+        }
+    }
+    tokens.push(super::verify::sample(&dists[draft.len()], rng));
+    VerifyOutcome {
+        accepted: draft.len(),
+        tokens,
+    }
+}
+
+/// Expected acceptance gain of lenience on a distribution: fraction of
+/// probability mass whose tokens clear the lenient threshold (diagnostic).
+pub fn lenient_acceptance_mass(dist: &[f32], lenience: f64) -> f64 {
+    let top = dist.iter().cloned().fold(f32::MIN, f32::max);
+    let thresh = (1.0 - lenience) as f32 * top;
+    dist.iter().filter(|&&p| p >= thresh).map(|&p| p as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist(ps: &[f32]) -> Vec<f32> {
+        ps.to_vec()
+    }
+
+    #[test]
+    fn zero_lenience_is_greedy_strict() {
+        let d = dist(&[0.5, 0.3, 0.2]);
+        let mut rng = Rng::seed_from_u64(1);
+        // Draft = argmax: accepted.
+        let out = verify_lenient(&[0], &[d.clone(), d.clone()], 0.0, &mut rng);
+        assert_eq!(out.accepted, 1);
+        assert_eq!(out.tokens[0], greedy_token(&d));
+        // Draft = non-argmax: rejected.
+        let out = verify_lenient(&[1], &[d.clone(), d.clone()], 0.0, &mut rng);
+        assert_eq!(out.accepted, 0);
+    }
+
+    #[test]
+    fn lenience_accepts_off_policy_tokens() {
+        let d = dist(&[0.5, 0.4, 0.1]);
+        let mut rng = Rng::seed_from_u64(2);
+        // Token 1 (p=0.4) clears 0.3 = (1-0.4)*0.5 at lenience 0.4.
+        let out = verify_lenient(&[1], &[d.clone(), d.clone()], 0.4, &mut rng);
+        assert_eq!(out.accepted, 1, "lenient rule must accept p=0.4 vs top=0.5");
+        // Token 2 (p=0.1) still rejected.
+        let out = verify_lenient(&[2], &[d.clone(), d.clone()], 0.4, &mut rng);
+        assert_eq!(out.accepted, 0);
+    }
+
+    #[test]
+    fn lenience_is_biased_greedy_exact_is_not() {
+        // THE distinction: under lenient verification the emitted-token
+        // distribution depends on the DRAFT; under exact verification it
+        // does not (tested distributionally in spec::verify). Here: a
+        // stale drafter that always proposes token 1 drags the lenient
+        // output toward token 1 far beyond its true probability.
+        let d = dist(&[0.5, 0.4, 0.1]);
+        let n = 100_000;
+        let mut rng = Rng::seed_from_u64(3);
+        let mut lenient_count = 0usize;
+        let mut exact_count = 0usize;
+        for _ in 0..n {
+            let out = verify_lenient(&[1], &[d.clone(), d.clone()], 0.4, &mut rng);
+            if out.tokens[0] == 1 {
+                lenient_count += 1;
+            }
+            let out = crate::spec::verify::verify_sampling(&[1], &[d.clone(), d.clone()], &mut rng);
+            if out.tokens[0] == 1 {
+                exact_count += 1;
+            }
+        }
+        let lenient_p = lenient_count as f64 / n as f64;
+        let exact_p = exact_count as f64 / n as f64;
+        assert!(lenient_p > 0.99, "lenient always accepts the proposal: {lenient_p}");
+        assert!(
+            (exact_p - 0.4).abs() < 0.01,
+            "exact verification preserves p(1)=0.4: {exact_p}"
+        );
+    }
+
+    #[test]
+    fn acceptance_mass_monotone_in_lenience() {
+        let d = dist(&[0.5, 0.3, 0.15, 0.05]);
+        let m0 = lenient_acceptance_mass(&d, 0.0);
+        let m4 = lenient_acceptance_mass(&d, 0.4);
+        let m9 = lenient_acceptance_mass(&d, 0.9);
+        assert!(m0 <= m4 && m4 <= m9);
+        assert!((m0 - 0.5).abs() < 1e-6);
+        assert!((m9 - 1.0).abs() < 0.06);
+    }
+}

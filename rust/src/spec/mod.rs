@@ -1,0 +1,20 @@
+//! Length-aware speculation policy and lossless verification (§4.2).
+//!
+//! * [`acceptance`] — the saturating acceptance model (Eq. 3) and its online
+//!   `(α, k)` estimator.
+//! * [`budget`] — the optimal speculative-token budget (Eq. 5–9; with a
+//!   documented correction to the printed Eq. 7).
+//! * [`length`] — Long/Medium/Short length classes with history-initialized,
+//!   survival-updated runtime classification (§4.2.3).
+//! * [`verify`] — exact speculative-sampling verification (lossless).
+
+pub mod acceptance;
+pub mod budget;
+pub mod lenience;
+pub mod length;
+pub mod verify;
+
+pub use acceptance::{AcceptanceEstimator, AcceptanceParams};
+pub use budget::{solve as solve_budget, BudgetRequest, BudgetSolution};
+pub use length::{LengthClass, LengthPolicy};
+pub use verify::{verify_greedy, verify_sampling, VerifyOutcome};

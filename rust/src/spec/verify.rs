@@ -1,0 +1,321 @@
+//! Lossless draft verification (speculative sampling).
+//!
+//! DAS is a *lossless* acceleration: verification must preserve the target
+//! model's output distribution exactly (the paper's "identical training
+//! curves" claim rests on this). Our drafter is nonparametric and proposes a
+//! deterministic token sequence — a point-mass proposal `q`. For point-mass
+//! proposals the Leviathan-style accept/resample rule specializes to:
+//!
+//! * accept draft token `y` with probability `p(y)`;
+//! * on rejection, sample from `p` restricted to `x ≠ y`, renormalized
+//!   (`norm(max(p − q, 0))` with `q = δ_y`).
+//!
+//! Summing the two branches returns exactly `p` — verified distributionally
+//! in the tests below. At temperature 0 verification degenerates to "accept
+//! while the draft equals the argmax", which makes speculative greedy decode
+//! *bit-identical* to non-speculative greedy decode (a property test in
+//! `rollout::engine` enforces this end-to-end).
+//!
+//! Every round emits at least one token: either the first correction or, if
+//! the whole draft is accepted, a bonus token sampled from the last
+//! distribution — the standard "draft K, get up to K+1" guarantee.
+
+use crate::tokens::TokenId;
+use crate::util::rng::Rng;
+
+/// Result of verifying one draft block for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyOutcome {
+    /// Number of draft tokens accepted (prefix of the draft).
+    pub accepted: usize,
+    /// Emitted tokens: the accepted draft prefix plus exactly one extra
+    /// (correction on rejection, bonus on full acceptance).
+    pub tokens: Vec<TokenId>,
+}
+
+/// Argmax with deterministic tie-breaking (lowest token id), so greedy
+/// decode is reproducible across runs and backends.
+pub fn greedy_token(probs: &[f32]) -> TokenId {
+    let mut best = 0usize;
+    let mut best_p = f32::MIN;
+    for (i, &p) in probs.iter().enumerate() {
+        if p > best_p {
+            best_p = p;
+            best = i;
+        }
+    }
+    best as TokenId
+}
+
+/// Temperature softmax over raw logits (T = 0 handled by callers via
+/// [`greedy_token`]). Numerically stabilized.
+pub fn softmax_with_temperature(logits: &[f32], temperature: f64) -> Vec<f32> {
+    let t = temperature.max(1e-6) as f32;
+    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+    let s: f32 = out.iter().sum();
+    if s > 0.0 {
+        for p in &mut out {
+            *p /= s;
+        }
+    } else {
+        let u = 1.0 / out.len() as f32;
+        for p in &mut out {
+            *p = u;
+        }
+    }
+    out
+}
+
+/// Sample a token from a normalized distribution.
+pub fn sample(probs: &[f32], rng: &mut Rng) -> TokenId {
+    rng.categorical_f32(probs).unwrap_or(0) as TokenId
+}
+
+/// Sample from `p` with token `banned` excluded and the rest renormalized —
+/// the residual distribution `norm(max(p − δ_banned, 0))` for a point-mass
+/// proposal.
+pub fn sample_residual(probs: &[f32], banned: TokenId, rng: &mut Rng) -> TokenId {
+    let total: f64 = probs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i as TokenId != banned)
+        .map(|(_, &p)| p as f64)
+        .sum();
+    if total <= 0.0 {
+        // Degenerate: p was a point mass on the banned token. Emit it — the
+        // residual is empty only when p(banned) = 1, in which case emitting
+        // `banned` is still a sample from p.
+        return banned;
+    }
+    let mut u = rng.next_f64() * total;
+    for (i, &p) in probs.iter().enumerate() {
+        if i as TokenId == banned {
+            continue;
+        }
+        u -= p as f64;
+        if u < 0.0 {
+            return i as TokenId;
+        }
+    }
+    // Fallback for fp rounding.
+    probs
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|(i, &p)| *i as TokenId != banned && p > 0.0)
+        .map(|(i, _)| i as TokenId)
+        .unwrap_or(banned)
+}
+
+/// Greedy (T = 0) verification: accept while the draft matches the argmax;
+/// emit the argmax correction on mismatch, or the bonus argmax when the
+/// whole draft holds. `dists[t]` is the target distribution at draft
+/// position `t`; `dists.len() == draft.len() + 1`.
+pub fn verify_greedy(draft: &[TokenId], dists: &[Vec<f32>]) -> VerifyOutcome {
+    assert_eq!(dists.len(), draft.len() + 1, "need K+1 distributions");
+    let mut tokens = Vec::with_capacity(draft.len() + 1);
+    for (t, &d) in draft.iter().enumerate() {
+        let top = greedy_token(&dists[t]);
+        if top == d {
+            tokens.push(d);
+        } else {
+            tokens.push(top);
+            return VerifyOutcome { accepted: t, tokens };
+        }
+    }
+    tokens.push(greedy_token(&dists[draft.len()]));
+    VerifyOutcome {
+        accepted: draft.len(),
+        tokens,
+    }
+}
+
+/// Stochastic verification for a point-mass proposal (see module docs).
+/// `dists` are already temperature-adjusted probability vectors.
+pub fn verify_sampling(draft: &[TokenId], dists: &[Vec<f32>], rng: &mut Rng) -> VerifyOutcome {
+    assert_eq!(dists.len(), draft.len() + 1, "need K+1 distributions");
+    let mut tokens = Vec::with_capacity(draft.len() + 1);
+    for (t, &d) in draft.iter().enumerate() {
+        let p_d = dists[t].get(d as usize).copied().unwrap_or(0.0) as f64;
+        if rng.next_f64() < p_d {
+            tokens.push(d);
+        } else {
+            tokens.push(sample_residual(&dists[t], d, rng));
+            return VerifyOutcome { accepted: t, tokens };
+        }
+    }
+    tokens.push(sample(&dists[draft.len()], rng));
+    VerifyOutcome {
+        accepted: draft.len(),
+        tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn dist(ps: &[f32]) -> Vec<f32> {
+        ps.to_vec()
+    }
+
+    #[test]
+    fn greedy_accepts_matching_prefix() {
+        let draft = [2u32, 0, 1];
+        let dists = vec![
+            dist(&[0.1, 0.2, 0.7]), // argmax 2 == draft ✓
+            dist(&[0.9, 0.05, 0.05]), // argmax 0 == draft ✓
+            dist(&[0.2, 0.3, 0.5]), // argmax 2 != draft(1) ✗ -> emit 2
+            dist(&[1.0, 0.0, 0.0]), // unused
+        ];
+        let out = verify_greedy(&draft, &dists);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.tokens, vec![2, 0, 2]);
+    }
+
+    #[test]
+    fn greedy_full_acceptance_gets_bonus() {
+        let draft = [1u32];
+        let dists = vec![dist(&[0.0, 1.0]), dist(&[1.0, 0.0])];
+        let out = verify_greedy(&draft, &dists);
+        assert_eq!(out.accepted, 1);
+        assert_eq!(out.tokens, vec![1, 0]); // draft + bonus argmax
+    }
+
+    #[test]
+    fn greedy_tie_breaks_low_token() {
+        assert_eq!(greedy_token(&[0.5, 0.5]), 0);
+    }
+
+    #[test]
+    fn empty_draft_emits_one_token() {
+        let out = verify_greedy(&[], &[dist(&[0.0, 1.0])]);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.tokens, vec![1]);
+        let mut rng = Rng::seed_from_u64(1);
+        let out = verify_sampling(&[], &[dist(&[0.0, 1.0])], &mut rng);
+        assert_eq!(out.tokens, vec![1]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let hot = softmax_with_temperature(&logits, 2.0);
+        let cold = softmax_with_temperature(&logits, 0.25);
+        assert!(cold[2] > hot[2]);
+        let s: f32 = hot.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn residual_excludes_banned() {
+        let mut rng = Rng::seed_from_u64(3);
+        let p = dist(&[0.5, 0.3, 0.2]);
+        for _ in 0..200 {
+            assert_ne!(sample_residual(&p, 0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn residual_degenerate_point_mass() {
+        let mut rng = Rng::seed_from_u64(3);
+        let p = dist(&[1.0, 0.0, 0.0]);
+        assert_eq!(sample_residual(&p, 0, &mut rng), 0);
+    }
+
+    /// The heart of losslessness: for ANY draft token, the marginal
+    /// distribution of the first emitted token equals the target
+    /// distribution p.
+    #[test]
+    fn spec_sampling_preserves_target_distribution() {
+        let p = dist(&[0.55, 0.25, 0.15, 0.05]);
+        for draft_tok in 0..4u32 {
+            let mut rng = Rng::seed_from_u64(1000 + draft_tok as u64);
+            let n = 200_000;
+            let mut counts = [0usize; 4];
+            for _ in 0..n {
+                let out = verify_sampling(&[draft_tok], &[p.clone(), p.clone()], &mut rng);
+                counts[out.tokens[0] as usize] += 1;
+            }
+            for (i, &c) in counts.iter().enumerate() {
+                let emp = c as f64 / n as f64;
+                assert!(
+                    (emp - p[i] as f64).abs() < 0.01,
+                    "draft={draft_tok} token={i}: emp={emp} want={}",
+                    p[i]
+                );
+            }
+        }
+    }
+
+    /// Multi-position drafts: the JOINT first-two-token distribution must
+    /// match ancestral sampling from p1 then p2.
+    #[test]
+    fn spec_sampling_preserves_joint_distribution() {
+        let p1 = dist(&[0.6, 0.4]);
+        let p2 = dist(&[0.3, 0.7]);
+        let draft = [0u32, 0u32];
+        let mut rng = Rng::seed_from_u64(77);
+        let n = 300_000;
+        let mut joint = [[0usize; 2]; 2];
+        for _ in 0..n {
+            let out = verify_sampling(&draft, &[p1.clone(), p2.clone(), p2.clone()], &mut rng);
+            if out.tokens.len() >= 2 {
+                joint[out.tokens[0] as usize][out.tokens[1] as usize] += 1;
+            } else {
+                // Rejected at position 0: only one token emitted; second
+                // token would come from a fresh round. Count the marginal.
+                joint[out.tokens[0] as usize][0] += 0; // not part of joint test
+            }
+        }
+        // When two tokens are emitted, first token must be the accepted
+        // draft (0); check P(second=j | first=0) == p2[j].
+        let total: usize = joint[0].iter().sum();
+        if total > 10_000 {
+            for j in 0..2 {
+                let emp = joint[0][j] as f64 / total as f64;
+                assert!(
+                    (emp - p2[j] as f64).abs() < 0.01,
+                    "cond dist mismatch: {emp} vs {}",
+                    p2[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_outcome_shape_invariants() {
+        prop::check(128, |g| {
+            let vocab = 2 + g.usize_in(0, 6);
+            let k = g.usize_in(0, 6);
+            let draft: Vec<u32> = (0..k).map(|_| g.rng.below(vocab) as u32).collect();
+            let dists: Vec<Vec<f32>> = (0..=k)
+                .map(|_| {
+                    let mut v: Vec<f32> = (0..vocab).map(|_| g.rng.next_f32() + 1e-3).collect();
+                    let s: f32 = v.iter().sum();
+                    v.iter_mut().for_each(|x| *x /= s);
+                    v
+                })
+                .collect();
+            let mut rng = g.rng.fork(9);
+            for out in [
+                verify_greedy(&draft, &dists),
+                verify_sampling(&draft, &dists, &mut rng),
+            ] {
+                prop::require(out.accepted <= draft.len(), "accepted <= draft len")?;
+                prop::require_eq(out.tokens.len(), out.accepted + 1, "emit accepted+1 tokens")?;
+                prop::require(
+                    out.tokens[..out.accepted] == draft[..out.accepted],
+                    "emitted prefix equals accepted draft prefix",
+                )?;
+                prop::require(
+                    out.tokens.iter().all(|&t| (t as usize) < vocab),
+                    "tokens in vocab",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,334 @@
+//! Suffix array baseline (§4.1.2 "Suffix tree and suffix array").
+//!
+//! Implements the alternative the paper evaluates and rejects for online RL
+//! training: an SA built by prefix-doubling (O(n log² n)), a Kasai LCP array,
+//! and O(m log n) binary-search pattern lookup. The crucial property for
+//! Fig. 5 is that *updates require a full rebuild* — suffix arrays are
+//! static — which is exactly what `SuffixArrayIndex::insert` does.
+
+use crate::tokens::TokenId;
+
+use super::tree::SENTINEL_BASE;
+
+/// Plain suffix array over a token slice with LCP support.
+#[derive(Debug, Clone)]
+pub struct SuffixArray {
+    text: Vec<TokenId>,
+    /// `sa[i]` = start position of the i-th smallest suffix.
+    sa: Vec<usize>,
+    /// `lcp[i]` = LCP(text[sa[i]..], text[sa[i-1]..]); lcp[0] = 0.
+    lcp: Vec<usize>,
+}
+
+impl SuffixArray {
+    pub fn build(text: &[TokenId]) -> Self {
+        let sa = build_sa(text);
+        let lcp = kasai(text, &sa);
+        SuffixArray {
+            text: text.to_vec(),
+            sa,
+            lcp,
+        }
+    }
+
+    pub fn text(&self) -> &[TokenId] {
+        &self.text
+    }
+
+    pub fn sa(&self) -> &[usize] {
+        &self.sa
+    }
+
+    pub fn lcp(&self) -> &[usize] {
+        &self.lcp
+    }
+
+    /// Is `pattern` a substring? O(m log n) via two binary searches.
+    pub fn contains(&self, pattern: &[TokenId]) -> bool {
+        !pattern.is_empty() && self.range(pattern).is_some() || pattern.is_empty()
+    }
+
+    /// Range [lo, hi) of suffixes starting with `pattern`.
+    pub fn range(&self, pattern: &[TokenId]) -> Option<(usize, usize)> {
+        if pattern.is_empty() || self.text.is_empty() {
+            return None;
+        }
+        let cmp_ge = |suf: &[TokenId]| -> bool {
+            // suffix >= pattern (prefix-wise)
+            let n = suf.len().min(pattern.len());
+            match suf[..n].cmp(&pattern[..n]) {
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Equal => suf.len() >= pattern.len(),
+            }
+        };
+        let cmp_gt = |suf: &[TokenId]| -> bool {
+            // suffix > pattern and does NOT start with pattern
+            let n = suf.len().min(pattern.len());
+            match suf[..n].cmp(&pattern[..n]) {
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Equal => false, // prefix or equal -> not greater
+            }
+        };
+        let lo = partition_point(&self.sa, |&p| !cmp_ge(&self.text[p..]));
+        let hi = partition_point(&self.sa, |&p| !cmp_gt(&self.text[p..]));
+        if lo < hi {
+            Some((lo, hi))
+        } else {
+            None
+        }
+    }
+
+    /// Number of occurrences of `pattern`.
+    pub fn count(&self, pattern: &[TokenId]) -> usize {
+        self.range(pattern).map(|(l, h)| h - l).unwrap_or(0)
+    }
+
+    /// Longest suffix of `context` (≤ `max_len`) present in the text, plus
+    /// the end position of one occurrence (mirrors `SuffixTree`).
+    pub fn longest_suffix_match(&self, context: &[TokenId], max_len: usize) -> (usize, Option<usize>) {
+        let cap = context.len().min(max_len);
+        for take in (1..=cap).rev() {
+            let suffix = &context[context.len() - take..];
+            if let Some((lo, _)) = self.range(suffix) {
+                return (take, Some(self.sa[lo] + take));
+            }
+        }
+        (0, None)
+    }
+
+    /// Retrieval draft, same semantics as `SuffixTree::draft`.
+    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Vec<TokenId> {
+        let (mlen, pos) = self.longest_suffix_match(context, max_match);
+        let Some(mut p) = pos else { return Vec::new() };
+        if mlen == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(budget);
+        while out.len() < budget && p < self.text.len() {
+            let t = self.text[p];
+            if t >= SENTINEL_BASE {
+                break;
+            }
+            out.push(t);
+            p += 1;
+        }
+        out
+    }
+}
+
+fn partition_point(sa: &[usize], mut pred: impl FnMut(&usize) -> bool) -> usize {
+    // std's partition_point on a slice of indices.
+    let mut lo = 0;
+    let mut hi = sa.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if pred(&sa[mid]) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Prefix-doubling suffix array construction, O(n log² n).
+fn build_sa(text: &[TokenId]) -> Vec<usize> {
+    let n = text.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut sa: Vec<usize> = (0..n).collect();
+    // Initial ranks = token values (u32 fits in i64 rank space).
+    let mut rank: Vec<i64> = text.iter().map(|&t| t as i64).collect();
+    let mut tmp = vec![0i64; n];
+    let mut k = 1usize;
+    loop {
+        let key = |i: usize| {
+            (
+                rank[i],
+                if i + k < n { rank[i + k] } else { -1 },
+            )
+        };
+        sa.sort_unstable_by(|&a, &b| key(a).cmp(&key(b)));
+        tmp[sa[0]] = 0;
+        for w in 1..n {
+            tmp[sa[w]] = tmp[sa[w - 1]] + if key(sa[w]) != key(sa[w - 1]) { 1 } else { 0 };
+        }
+        rank.copy_from_slice(&tmp);
+        if rank[sa[n - 1]] as usize == n - 1 {
+            break;
+        }
+        k *= 2;
+        if k >= n {
+            break;
+        }
+    }
+    sa
+}
+
+/// Kasai's linear-time LCP construction.
+fn kasai(text: &[TokenId], sa: &[usize]) -> Vec<usize> {
+    let n = text.len();
+    let mut lcp = vec![0usize; n];
+    if n == 0 {
+        return lcp;
+    }
+    let mut rank = vec![0usize; n];
+    for (i, &p) in sa.iter().enumerate() {
+        rank[p] = i;
+    }
+    let mut h = 0usize;
+    for i in 0..n {
+        if rank[i] > 0 {
+            let j = sa[rank[i] - 1];
+            while i + h < n && j + h < n && text[i + h] == text[j + h] {
+                h += 1;
+            }
+            lcp[rank[i]] = h;
+            h = h.saturating_sub(1);
+        } else {
+            h = 0;
+        }
+    }
+    lcp
+}
+
+/// The "suffix array as an online index" strawman from Fig. 5: it stores all
+/// rollouts in one corpus and REBUILDS the SA + LCP on every insert. Used by
+/// `figures::fig05` and the `suffix_ops` bench to quantify why this loses.
+#[derive(Debug, Clone, Default)]
+pub struct SuffixArrayIndex {
+    corpus: Vec<TokenId>,
+    built: Option<SuffixArray>,
+    next_sentinel: TokenId,
+    pub rebuilds: usize,
+}
+
+impl SuffixArrayIndex {
+    pub fn new() -> Self {
+        SuffixArrayIndex {
+            corpus: Vec::new(),
+            built: None,
+            next_sentinel: SENTINEL_BASE,
+            rebuilds: 0,
+        }
+    }
+
+    /// Insert = append + FULL REBUILD (suffix arrays are static structures).
+    pub fn insert(&mut self, tokens: &[TokenId]) {
+        self.corpus.extend_from_slice(tokens);
+        self.corpus.push(self.next_sentinel);
+        self.next_sentinel += 1;
+        self.built = Some(SuffixArray::build(&self.corpus));
+        self.rebuilds += 1;
+    }
+
+    pub fn len_tokens(&self) -> usize {
+        self.corpus.len()
+    }
+
+    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Vec<TokenId> {
+        match &self.built {
+            Some(sa) => sa.draft(context, max_match, budget),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn contains(&self, pattern: &[TokenId]) -> bool {
+        match &self.built {
+            Some(sa) => sa.contains(pattern),
+            None => pattern.is_empty(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn sa_of_known_text() {
+        // banana analog: 1=a 2=b 3=n -> b a n a n a = [2,1,3,1,3,1]
+        let text = [2u32, 1, 3, 1, 3, 1];
+        let sa = SuffixArray::build(&text);
+        // Sorted suffixes: a(5), ana(3), anana(1), banana(0), na(4), nana(2)
+        assert_eq!(sa.sa(), &[5, 3, 1, 0, 4, 2]);
+        // LCPs: -,1,3,0,0,2
+        assert_eq!(sa.lcp(), &[0, 1, 3, 0, 0, 2]);
+    }
+
+    #[test]
+    fn contains_and_count() {
+        let text = [2u32, 1, 3, 1, 3, 1];
+        let sa = SuffixArray::build(&text);
+        assert!(sa.contains(&[1, 3, 1]));
+        assert!(!sa.contains(&[3, 3]));
+        assert_eq!(sa.count(&[1]), 3);
+        assert_eq!(sa.count(&[3, 1]), 2);
+        assert_eq!(sa.count(&[9]), 0);
+    }
+
+    #[test]
+    fn index_rebuilds_on_insert() {
+        let mut idx = SuffixArrayIndex::new();
+        idx.insert(&[1, 2, 3]);
+        idx.insert(&[2, 3, 4]);
+        assert_eq!(idx.rebuilds, 2);
+        assert!(idx.contains(&[2, 3, 4]));
+        assert!(!idx.contains(&[3, 2]));
+        assert_eq!(idx.draft(&[9, 1, 2], 4, 2), vec![3]);
+    }
+
+    #[test]
+    fn prop_sa_is_sorted_permutation() {
+        prop::check(128, |g| {
+            let alphabet = 1 + g.usize_in(1, 8) as u32;
+            let text = g.vec_u32_nonempty(alphabet, 150);
+            let sa = SuffixArray::build(&text);
+            let mut seen = vec![false; text.len()];
+            for &p in sa.sa() {
+                prop::require(!seen[p], "sa must be a permutation")?;
+                seen[p] = true;
+            }
+            for w in sa.sa().windows(2) {
+                prop::require(text[w[0]..] <= text[w[1]..], "sa must be sorted")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lcp_matches_naive() {
+        prop::check(96, |g| {
+            let alphabet = 1 + g.usize_in(1, 4) as u32;
+            let text = g.vec_u32_nonempty(alphabet, 80);
+            let sa = SuffixArray::build(&text);
+            for i in 1..sa.sa().len() {
+                let a = &text[sa.sa()[i - 1]..];
+                let b = &text[sa.sa()[i]..];
+                let naive = a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count();
+                prop::require_eq(sa.lcp()[i], naive, "lcp mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sa_agrees_with_tree() {
+        use crate::suffix::tree::SuffixTree;
+        prop::check(96, |g| {
+            let alphabet = 1 + g.usize_in(1, 6) as u32;
+            let text = g.vec_u32_nonempty(alphabet, 100);
+            let sa = SuffixArray::build(&text);
+            let tree = SuffixTree::build(&text);
+            for _ in 0..15 {
+                let pat = g.vec_u32_nonempty(alphabet, 8);
+                prop::require_eq(sa.contains(&pat), tree.contains(&pat), "sa vs tree")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! Suffix-structure substrates for the nonparametric drafter (§4.1).
+//!
+//! * [`tree`] — online Ukkonen suffix tree: the paper's headline structure
+//!   (amortized O(1) appends, O(m) queries, retrieval drafting).
+//! * [`trie`] — depth-capped *counting* suffix trie: the production drafter
+//!   index with per-path occurrence counts for frequency-weighted drafts.
+//! * [`array`] — suffix array + Kasai LCP: the static baseline the paper
+//!   compares against in Fig. 5 (updates = full rebuilds).
+//! * [`router`] — per-request prefix-trie router (§4.1.2).
+//! * [`window`] — sliding-window epoch buckets with age discounting (Fig. 7).
+
+pub mod array;
+pub mod router;
+pub mod tree;
+pub mod trie;
+pub mod window;
+
+pub use array::{SuffixArray, SuffixArrayIndex};
+pub use router::PrefixRouter;
+pub use tree::{SuffixTree, SENTINEL_BASE};
+pub use trie::SuffixTrieIndex;
+pub use window::{WindowDraft, WindowedIndex};

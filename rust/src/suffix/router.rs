@@ -1,0 +1,150 @@
+//! Per-request prefix-trie router (§4.1.2 "Per-request suffix trees").
+//!
+//! The paper pairs per-problem suffix trees with a lightweight prefix trie
+//! that recognizes which *prior generation* the current decode most
+//! resembles, and routes the query to that generation's shard. The benefit
+//! is workload/model dependent — for small models the CPU overhead can
+//! outweigh the gain — so the router is a config toggle
+//! (`spec.prefix_router`, exercised by the Fig. 6 scope ablation).
+
+use std::collections::HashMap;
+
+use crate::tokens::TokenId;
+
+#[derive(Debug, Clone, Default)]
+struct RNode {
+    children: HashMap<TokenId, usize>,
+    /// Shards whose indexed generations pass through this node, with visit
+    /// counts (a shard here = one prior request/rollout id).
+    owners: HashMap<u32, u32>,
+}
+
+/// Routes a decode context to the prior-rollout shard whose prefix it
+/// matches the deepest.
+#[derive(Debug, Clone)]
+pub struct PrefixRouter {
+    nodes: Vec<RNode>,
+    max_depth: usize,
+}
+
+impl PrefixRouter {
+    pub fn new(max_depth: usize) -> Self {
+        PrefixRouter {
+            nodes: vec![RNode::default()],
+            max_depth: max_depth.max(1),
+        }
+    }
+
+    /// Register a generation's PREFIX under a shard id.
+    pub fn register(&mut self, shard: u32, generation: &[TokenId]) {
+        let mut node = 0usize;
+        for &tok in generation.iter().take(self.max_depth) {
+            let next = match self.nodes[node].children.get(&tok) {
+                Some(&n) => n,
+                None => {
+                    let id = self.nodes.len();
+                    self.nodes.push(RNode::default());
+                    self.nodes[node].children.insert(tok, id);
+                    id
+                }
+            };
+            node = next;
+            *self.nodes[node].owners.entry(shard).or_insert(0) += 1;
+        }
+    }
+
+    /// Route a context: deepest trie node the context's PREFIX reaches, then
+    /// the most frequent owner there. Returns (shard, matched_depth).
+    pub fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        let mut last_owned: Option<(usize, usize)> = None; // (node, depth)
+        for &tok in context.iter().take(self.max_depth) {
+            match self.nodes[node].children.get(&tok) {
+                Some(&n) => {
+                    node = n;
+                    depth += 1;
+                    if !self.nodes[node].owners.is_empty() {
+                        last_owned = Some((node, depth));
+                    }
+                }
+                None => break,
+            }
+        }
+        let (node, depth) = last_owned?;
+        let shard = self.nodes[node]
+            .owners
+            .iter()
+            .max_by_key(|(id, c)| (**c, std::cmp::Reverse(**id)))
+            .map(|(&id, _)| id)?;
+        Some((shard, depth))
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn routes_to_deepest_match() {
+        let mut r = PrefixRouter::new(8);
+        r.register(1, &[10, 11, 12, 13]);
+        r.register(2, &[10, 11, 20, 21]);
+        let (shard, depth) = r.route(&[10, 11, 20, 99]).unwrap();
+        assert_eq!(shard, 2);
+        assert_eq!(depth, 3);
+        let (shard, _) = r.route(&[10, 11, 12]).unwrap();
+        assert_eq!(shard, 1);
+    }
+
+    #[test]
+    fn no_match_is_none() {
+        let mut r = PrefixRouter::new(8);
+        r.register(1, &[5, 6]);
+        assert!(r.route(&[7, 8]).is_none());
+        assert!(r.route(&[]).is_none());
+    }
+
+    #[test]
+    fn frequency_breaks_ambiguity() {
+        let mut r = PrefixRouter::new(4);
+        r.register(1, &[3, 4]);
+        r.register(2, &[3, 4]);
+        r.register(2, &[3, 4]);
+        let (shard, _) = r.route(&[3, 4, 9]).unwrap();
+        assert_eq!(shard, 2);
+    }
+
+    #[test]
+    fn deterministic_tiebreak_prefers_smaller_shard() {
+        let mut r = PrefixRouter::new(4);
+        r.register(2, &[3, 4]);
+        r.register(1, &[3, 4]);
+        let (shard, _) = r.route(&[3, 4]).unwrap();
+        assert_eq!(shard, 1);
+    }
+
+    #[test]
+    fn prop_route_returns_registered_shard() {
+        prop::check(96, |g| {
+            let mut r = PrefixRouter::new(6);
+            let mut shards = Vec::new();
+            for s in 0..g.usize_in(1, 5) as u32 {
+                let gen = g.vec_u32_nonempty(6, 12);
+                r.register(s, &gen);
+                shards.push(s);
+            }
+            let ctx = g.vec_u32_nonempty(6, 12);
+            if let Some((shard, depth)) = r.route(&ctx) {
+                prop::require(shards.contains(&shard), "routed shard must exist")?;
+                prop::require(depth >= 1 && depth <= 6, "depth within bounds")?;
+            }
+            Ok(())
+        });
+    }
+}

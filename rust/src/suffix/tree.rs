@@ -1,0 +1,511 @@
+//! Online suffix tree (Ukkonen's algorithm) over token sequences.
+//!
+//! This is the paper's §4.1.2 data structure: amortized O(1) per appended
+//! token, O(m) longest-match queries for a query of length m, and it supports
+//! the *generalized* form (many rollouts in one tree) by appending each
+//! rollout followed by a unique sentinel token that never occurs in the
+//! vocabulary.
+//!
+//! Drafting uses the retrieval semantics of suffix-structure speculators
+//! (SuffixDecoding, PLD): `longest_suffix_match` returns the text position
+//! where (one occurrence of) the longest matching context suffix ends; the
+//! proposed draft is simply the tokens that followed that occurrence. The
+//! frequency-weighted variant lives in [`super::trie`], which keeps explicit
+//! counts; this tree is the exact-match engine and the Fig. 5 subject.
+
+use std::collections::HashMap;
+
+use crate::tokens::TokenId;
+
+/// First token id reserved for rollout terminators. Real vocabulary ids must
+/// stay below this; each inserted sequence gets the next sentinel so no
+/// suffix of one rollout can match across rollout boundaries.
+pub const SENTINEL_BASE: TokenId = 0xF000_0000;
+
+const INVALID: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Edge label is `text[start..end(node)]` (end exclusive).
+    start: usize,
+    /// `usize::MAX` means "leaf: grows with the global end".
+    end: usize,
+    children: HashMap<TokenId, usize>,
+    suffix_link: usize,
+}
+
+impl Node {
+    fn new(start: usize, end: usize) -> Self {
+        Node {
+            start,
+            end,
+            children: HashMap::new(),
+            suffix_link: 0,
+        }
+    }
+}
+
+/// Ukkonen suffix tree over `u32` tokens.
+#[derive(Debug, Clone)]
+pub struct SuffixTree {
+    text: Vec<TokenId>,
+    nodes: Vec<Node>,
+    root: usize,
+    // Active point.
+    active_node: usize,
+    active_edge: usize, // index into text of the edge's first token
+    active_length: usize,
+    remainder: usize,
+    next_sentinel: TokenId,
+}
+
+impl Default for SuffixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SuffixTree {
+    pub fn new() -> Self {
+        let root = Node::new(0, 0);
+        SuffixTree {
+            text: Vec::new(),
+            nodes: vec![root],
+            root: 0,
+            active_node: 0,
+            active_edge: 0,
+            active_length: 0,
+            remainder: 0,
+            next_sentinel: SENTINEL_BASE,
+        }
+    }
+
+    /// Build from one sequence (terminated internally).
+    pub fn build(tokens: &[TokenId]) -> Self {
+        let mut t = Self::new();
+        t.insert(tokens);
+        t
+    }
+
+    /// Number of tokens stored (including sentinels).
+    pub fn text_len(&self) -> usize {
+        self.text.len()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The raw token store. Draft continuations are read straight from here.
+    pub fn text(&self) -> &[TokenId] {
+        &self.text
+    }
+
+    /// Append a whole rollout and terminate it with a fresh sentinel.
+    pub fn insert(&mut self, tokens: &[TokenId]) {
+        for &t in tokens {
+            debug_assert!(t < SENTINEL_BASE, "token id collides with sentinel space");
+            self.extend(t);
+        }
+        let s = self.next_sentinel;
+        self.next_sentinel += 1;
+        self.extend(s);
+    }
+
+    fn edge_end(&self, node: usize) -> usize {
+        if self.nodes[node].end == usize::MAX {
+            self.text.len()
+        } else {
+            self.nodes[node].end
+        }
+    }
+
+    fn edge_len(&self, node: usize) -> usize {
+        self.edge_end(node) - self.nodes[node].start
+    }
+
+    /// Ukkonen single-token extension. Amortized O(1).
+    #[allow(unused_assignments)] // last_new_node bookkeeping mirrors the canonical algorithm
+    pub fn extend(&mut self, token: TokenId) {
+        self.text.push(token);
+        let pos = self.text.len() - 1;
+        self.remainder += 1;
+        let mut last_new_node = INVALID;
+
+        while self.remainder > 0 {
+            if self.active_length == 0 {
+                self.active_edge = pos;
+            }
+            let edge_tok = self.text[self.active_edge];
+            let next = self.nodes[self.active_node].children.get(&edge_tok).copied();
+            match next {
+                None => {
+                    // Rule 2: new leaf off active_node.
+                    let leaf = self.nodes.len();
+                    self.nodes.push(Node::new(pos, usize::MAX));
+                    self.nodes[self.active_node].children.insert(edge_tok, leaf);
+                    if last_new_node != INVALID {
+                        self.nodes[last_new_node].suffix_link = self.active_node;
+                        last_new_node = INVALID;
+                    }
+                }
+                Some(nxt) => {
+                    // Walk down if the active length exceeds this edge.
+                    let el = self.edge_len(nxt);
+                    if self.active_length >= el {
+                        self.active_edge += el;
+                        self.active_length -= el;
+                        self.active_node = nxt;
+                        continue;
+                    }
+                    // Rule 3: the token is already on the edge — stop here.
+                    if self.text[self.nodes[nxt].start + self.active_length] == token {
+                        if last_new_node != INVALID && self.active_node != self.root {
+                            self.nodes[last_new_node].suffix_link = self.active_node;
+                            last_new_node = INVALID;
+                        }
+                        self.active_length += 1;
+                        break;
+                    }
+                    // Rule 2 with split: split the edge, add new leaf.
+                    let split = self.nodes.len();
+                    let nxt_start = self.nodes[nxt].start;
+                    self.nodes
+                        .push(Node::new(nxt_start, nxt_start + self.active_length));
+                    self.nodes[self.active_node].children.insert(edge_tok, split);
+                    let leaf = self.nodes.len();
+                    self.nodes.push(Node::new(pos, usize::MAX));
+                    self.nodes[split].children.insert(token, leaf);
+                    self.nodes[nxt].start += self.active_length;
+                    let nxt_tok = self.text[self.nodes[nxt].start];
+                    self.nodes[split].children.insert(nxt_tok, nxt);
+                    if last_new_node != INVALID {
+                        self.nodes[last_new_node].suffix_link = split;
+                    }
+                    last_new_node = split;
+                }
+            }
+            self.remainder -= 1;
+            if self.active_node == self.root && self.active_length > 0 {
+                self.active_length -= 1;
+                self.active_edge = pos - self.remainder + 1;
+            } else if self.active_node != self.root {
+                self.active_node = self.nodes[self.active_node].suffix_link;
+            }
+        }
+    }
+
+    /// Walk `pattern` from the root. Returns the number of tokens matched and,
+    /// if the whole pattern matched, a text position where one occurrence of
+    /// the pattern ENDS (exclusive) — i.e. `text[end - pattern.len() .. end]`
+    /// equals the matched pattern, so `text[end..]` is a real continuation.
+    fn walk(&self, pattern: &[TokenId]) -> (usize, Option<usize>) {
+        let mut node = self.root;
+        let mut matched = 0usize;
+        let mut text_pos = 0usize; // position in text aligned with `matched`
+        while matched < pattern.len() {
+            let tok = pattern[matched];
+            let Some(&child) = self.nodes[node].children.get(&tok) else {
+                return (matched, None);
+            };
+            let start = self.nodes[child].start;
+            let end = self.edge_end(child);
+            let mut i = start;
+            while i < end && matched < pattern.len() {
+                if self.text[i] != pattern[matched] {
+                    return (matched, None);
+                }
+                i += 1;
+                matched += 1;
+            }
+            text_pos = i;
+            node = child;
+        }
+        (matched, Some(text_pos))
+    }
+
+    /// Exact containment query, O(m).
+    pub fn contains(&self, pattern: &[TokenId]) -> bool {
+        pattern.is_empty() || matches!(self.walk(pattern), (m, Some(_)) if m == pattern.len())
+    }
+
+    /// Longest suffix of `context` (capped at `max_len`) that occurs in the
+    /// stored corpus. Returns `(match_len, text_end_pos)` where
+    /// `text_end_pos` is exclusive; `text()[text_end_pos..]` is the stored
+    /// continuation after one occurrence of that suffix. Returns match_len 0
+    /// when nothing matches.
+    ///
+    /// Implementation note: we probe progressively shorter suffixes. Each
+    /// probe is O(suffix_len) so the total is O(max_len²) worst case, with
+    /// max_len a small constant (the configured `match_len`, ≤ 64) — in
+    /// practice cheaper than maintaining a matching-statistics automaton.
+    pub fn longest_suffix_match(&self, context: &[TokenId], max_len: usize) -> (usize, Option<usize>) {
+        let cap = context.len().min(max_len);
+        for take in (1..=cap).rev() {
+            let suffix = &context[context.len() - take..];
+            if let (m, Some(pos)) = self.walk(suffix) {
+                if m == take {
+                    return (take, Some(pos));
+                }
+            }
+        }
+        (0, None)
+    }
+
+    /// Retrieval draft: find the longest context-suffix occurrence and copy
+    /// up to `budget` following tokens (stopping at any sentinel).
+    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Vec<TokenId> {
+        let (mlen, pos) = self.longest_suffix_match(context, max_match);
+        let Some(mut p) = pos else { return Vec::new() };
+        if mlen == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(budget);
+        while out.len() < budget && p < self.text.len() {
+            let t = self.text[p];
+            if t >= SENTINEL_BASE {
+                break;
+            }
+            out.push(t);
+            p += 1;
+        }
+        out
+    }
+
+    /// All distinct first-tokens that can follow the given pattern in the
+    /// corpus (used by tests and by the router's candidate analysis).
+    pub fn continuations(&self, pattern: &[TokenId]) -> Vec<TokenId> {
+        let (m, pos) = self.walk(pattern);
+        if m != pattern.len() {
+            return Vec::new();
+        }
+        let Some(text_pos) = pos else { return Vec::new() };
+        // We're either in the middle of an edge (single continuation) or at a
+        // node boundary (all children).
+        // Re-walk to find the node/edge state.
+        let mut node = self.root;
+        let mut matched = 0;
+        let mut res = Vec::new();
+        while matched < pattern.len() {
+            let tok = pattern[matched];
+            let child = *self.nodes[node].children.get(&tok).unwrap();
+            let el = self.edge_len(child);
+            if matched + el <= pattern.len() {
+                matched += el;
+                node = child;
+            } else {
+                // Mid-edge: single determined continuation.
+                let idx = self.nodes[child].start + (pattern.len() - matched);
+                if idx < self.edge_end(child) {
+                    let t = self.text[idx];
+                    if t < SENTINEL_BASE {
+                        res.push(t);
+                    }
+                }
+                return res;
+            }
+        }
+        let _ = text_pos;
+        for (&t, _) in &self.nodes[node].children {
+            if t < SENTINEL_BASE {
+                res.push(t);
+            }
+        }
+        res.sort_unstable();
+        res
+    }
+
+    /// Approximate heap footprint in bytes (for the Fig. 5 space comparison).
+    pub fn approx_bytes(&self) -> usize {
+        self.text.len() * std::mem::size_of::<TokenId>()
+            + self.nodes.len() * std::mem::size_of::<Node>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| n.children.capacity() * (std::mem::size_of::<(TokenId, usize)>() + 8))
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Naive O(n·m) oracle: does `pattern` occur in `text`?
+    fn naive_contains(text: &[u32], pattern: &[u32]) -> bool {
+        if pattern.is_empty() {
+            return true;
+        }
+        text.windows(pattern.len()).any(|w| w == pattern)
+    }
+
+    #[test]
+    fn contains_all_substrings_banana_style() {
+        // "banana" analog over tokens.
+        let t = [1, 2, 3, 2, 3, 2];
+        let tree = SuffixTree::build(&t);
+        for i in 0..t.len() {
+            for j in i + 1..=t.len() {
+                assert!(tree.contains(&t[i..j]), "missing substring {:?}", &t[i..j]);
+            }
+        }
+        assert!(!tree.contains(&[3, 3]));
+        assert!(!tree.contains(&[9]));
+    }
+
+    #[test]
+    fn generalized_tree_spans_multiple_rollouts() {
+        let mut tree = SuffixTree::new();
+        tree.insert(&[1, 2, 3, 4]);
+        tree.insert(&[3, 4, 5, 6]);
+        assert!(tree.contains(&[1, 2, 3, 4]));
+        assert!(tree.contains(&[3, 4, 5]));
+        // No cross-rollout phantom match: 4 followed by 3 never happened
+        // inside a single rollout (sentinels separate them).
+        assert!(!tree.contains(&[2, 3, 4, 3]));
+        assert!(!tree.contains(&[4, 3, 4, 5]));
+    }
+
+    #[test]
+    fn longest_suffix_match_finds_real_occurrence() {
+        let mut tree = SuffixTree::new();
+        tree.insert(&[10, 11, 12, 13, 14, 15]);
+        let (m, pos) = tree.longest_suffix_match(&[99, 98, 12, 13], 8);
+        assert_eq!(m, 2);
+        let p = pos.unwrap();
+        assert_eq!(&tree.text()[p - 2..p], &[12, 13]);
+        // The continuation after [12,13] is [14,15].
+        assert_eq!(tree.draft(&[99, 98, 12, 13], 8, 2), vec![14, 15]);
+    }
+
+    #[test]
+    fn draft_stops_at_sentinel() {
+        let mut tree = SuffixTree::new();
+        tree.insert(&[1, 2, 3]);
+        // Continuation after [2,3] hits the sentinel immediately.
+        assert_eq!(tree.draft(&[2, 3], 4, 8), Vec::<u32>::new());
+        // After [1,2] we can still read [3] then stop.
+        assert_eq!(tree.draft(&[1, 2], 4, 8), vec![3]);
+    }
+
+    #[test]
+    fn draft_empty_when_no_match() {
+        let tree = SuffixTree::build(&[1, 2, 3]);
+        assert!(tree.draft(&[7, 8, 9], 4, 8).is_empty());
+        assert!(tree.draft(&[], 4, 8).is_empty());
+    }
+
+    #[test]
+    fn continuations_at_branch() {
+        let mut tree = SuffixTree::new();
+        tree.insert(&[1, 2, 5]);
+        tree.insert(&[1, 2, 7]);
+        let cs = tree.continuations(&[1, 2]);
+        assert_eq!(cs, vec![5, 7]);
+        assert_eq!(tree.continuations(&[1]), vec![2]);
+    }
+
+    #[test]
+    fn repetitive_text_is_fine() {
+        // Worst case for naive structures: one repeated token.
+        let t = vec![5u32; 2000];
+        let tree = SuffixTree::build(&t);
+        assert!(tree.contains(&vec![5u32; 1999]));
+        assert!(!tree.contains(&[5, 6]));
+    }
+
+    #[test]
+    fn prop_tree_matches_naive_oracle() {
+        prop::check(192, |g| {
+            let alphabet = 1 + g.usize_in(1, 8) as u32;
+            let text = g.vec_u32_nonempty(alphabet, 200);
+            let tree = SuffixTree::build(&text);
+            // Positive cases: all sampled substrings must be found.
+            for _ in 0..10 {
+                let i = g.rng.below(text.len());
+                let j = i + 1 + g.rng.below(text.len() - i);
+                prop::require(tree.contains(&text[i..j]), "substring of text must be in tree")?;
+            }
+            // Random patterns must agree with the oracle.
+            for _ in 0..10 {
+                let pat = g.vec_u32_nonempty(alphabet, 12);
+                prop::require_eq(
+                    tree.contains(&pat),
+                    naive_contains(&text, &pat),
+                    "tree/oracle disagree",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_draft_is_real_continuation() {
+        // Any draft must literally appear in some inserted rollout right
+        // after an occurrence of the matched context suffix.
+        prop::check(96, |g| {
+            let alphabet = 1 + g.usize_in(1, 6) as u32;
+            let mut tree = SuffixTree::new();
+            let mut rollouts: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..g.usize_in(1, 5) {
+                let r = g.vec_u32_nonempty(alphabet, 60);
+                tree.insert(&r);
+                rollouts.push(r);
+            }
+            let ctx = g.vec_u32_nonempty(alphabet, 20);
+            let draft = tree.draft(&ctx, 8, 6);
+            if draft.is_empty() {
+                return Ok(());
+            }
+            let (mlen, _) = tree.longest_suffix_match(&ctx, 8);
+            let needle: Vec<u32> = ctx[ctx.len() - mlen..]
+                .iter()
+                .chain(draft.iter())
+                .copied()
+                .collect();
+            let found = rollouts
+                .iter()
+                .any(|r| r.windows(needle.len()).any(|w| w == needle.as_slice()));
+            prop::require(found, "draft must extend a real occurrence in some rollout")
+        });
+    }
+
+    #[test]
+    fn prop_incremental_equals_batch() {
+        // extend() token-by-token must answer queries identically to build().
+        prop::check(96, |g| {
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let text = g.vec_u32_nonempty(alphabet, 120);
+            let batch = SuffixTree::build(&text);
+            let mut inc = SuffixTree::new();
+            for &t in &text {
+                inc.extend(t);
+            }
+            for _ in 0..20 {
+                let pat = g.vec_u32_nonempty(alphabet, 10);
+                prop::require_eq(
+                    inc.contains(&pat),
+                    batch.contains(&pat),
+                    "incremental vs batch",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_node_growth() {
+        // Suffix trees have < 2n nodes; catches quadratic blowups.
+        let mut r = Rng::seed_from_u64(42);
+        let text: Vec<u32> = (0..5000).map(|_| r.below(16) as u32).collect();
+        let tree = SuffixTree::build(&text);
+        assert!(
+            tree.node_count() <= 2 * (text.len() + 1) + 2,
+            "nodes={} n={}",
+            tree.node_count(),
+            text.len()
+        );
+    }
+}

@@ -1,0 +1,311 @@
+//! Depth-capped counting suffix trie — the drafter's production index.
+//!
+//! [`super::tree::SuffixTree`] gives exact O(m) longest-match with retrieval
+//! drafting ("copy what followed one occurrence"). For *frequency-weighted*
+//! drafting (propose the continuation that followed the context MOST OFTEN —
+//! the high-frequency suffix-match walk of Fig. 3 right), we need per-path
+//! occurrence counts. Maintaining exact subtree-leaf counts online in a
+//! Ukkonen tree costs an ancestor walk per update; instead we follow the
+//! SuffixDecoding implementation strategy: a suffix *trie* capped at depth D
+//! (D = max match length + max draft budget), inserting the D-bounded
+//! suffixes of every new rollout and bumping counts along each path.
+//!
+//! Insert cost is O(len·D) — sub-millisecond for RL rollout lengths — and the
+//! cap makes total space O(corpus·D) worst case but far smaller in practice
+//! due to sharing. Queries are O(m); the greedy draft walk is O(budget).
+
+use std::collections::HashMap;
+
+use crate::tokens::TokenId;
+
+#[derive(Debug, Clone, Default)]
+struct TrieNode {
+    children: HashMap<TokenId, usize>,
+    /// Number of (bounded) suffixes whose path passes through this node,
+    /// i.e. occurrences of the path-string in the indexed corpus.
+    count: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SuffixTrieIndex {
+    nodes: Vec<TrieNode>,
+    max_depth: usize,
+    tokens_indexed: usize,
+    rollouts: usize,
+}
+
+impl SuffixTrieIndex {
+    pub fn new(max_depth: usize) -> Self {
+        SuffixTrieIndex {
+            nodes: vec![TrieNode::default()],
+            max_depth: max_depth.max(2),
+            tokens_indexed: 0,
+            rollouts: 0,
+        }
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn tokens_indexed(&self) -> usize {
+        self.tokens_indexed
+    }
+
+    pub fn rollouts(&self) -> usize {
+        self.rollouts
+    }
+
+    /// Index one rollout: insert every suffix, truncated at `max_depth`.
+    pub fn insert(&mut self, tokens: &[TokenId]) {
+        for start in 0..tokens.len() {
+            let end = (start + self.max_depth).min(tokens.len());
+            let mut node = 0usize;
+            self.nodes[0].count += 1;
+            for &tok in &tokens[start..end] {
+                let next = match self.nodes[node].children.get(&tok) {
+                    Some(&n) => n,
+                    None => {
+                        let id = self.nodes.len();
+                        self.nodes.push(TrieNode::default());
+                        self.nodes[node].children.insert(tok, id);
+                        id
+                    }
+                };
+                node = next;
+                self.nodes[node].count += 1;
+            }
+        }
+        self.tokens_indexed += tokens.len();
+        self.rollouts += 1;
+    }
+
+    /// Walk a pattern from the root; returns the node if fully matched.
+    fn locate(&self, pattern: &[TokenId]) -> Option<usize> {
+        let mut node = 0usize;
+        for tok in pattern {
+            node = *self.nodes[node].children.get(tok)?;
+        }
+        Some(node)
+    }
+
+    /// Occurrence count of `pattern` in the indexed corpus (patterns longer
+    /// than `max_depth` report 0).
+    pub fn count(&self, pattern: &[TokenId]) -> u64 {
+        if pattern.len() > self.max_depth {
+            return 0;
+        }
+        self.locate(pattern).map(|n| self.nodes[n].count).unwrap_or(0)
+    }
+
+    pub fn contains(&self, pattern: &[TokenId]) -> bool {
+        self.count(pattern) > 0
+    }
+
+    /// Longest suffix of `context` (≤ `max_len`) with at least `min_count`
+    /// occurrences. Returns (match_len, node).
+    fn longest_suffix_node(
+        &self,
+        context: &[TokenId],
+        max_len: usize,
+        min_count: u64,
+    ) -> (usize, usize) {
+        let cap = context.len().min(max_len).min(self.max_depth);
+        for take in (1..=cap).rev() {
+            if let Some(node) = self.locate(&context[context.len() - take..]) {
+                if self.nodes[node].count >= min_count {
+                    return (take, node);
+                }
+            }
+        }
+        (0, 0)
+    }
+
+    /// Frequency-weighted greedy draft: locate the longest context suffix,
+    /// then repeatedly step to the most frequent child (ties broken by
+    /// smallest token id, deterministically), up to `budget` tokens.
+    ///
+    /// Returns the draft and, for each draft token, the empirical
+    /// confidence `count(child)/count(node)` — used by the acceptance model
+    /// estimator (§4.2.2's α, k fitting).
+    pub fn draft_weighted(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> (Vec<TokenId>, Vec<f32>) {
+        let (mlen, mut node) = self.longest_suffix_node(context, max_match, 1);
+        if mlen == 0 || budget == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let mut draft = Vec::with_capacity(budget);
+        let mut conf = Vec::with_capacity(budget);
+        for _ in 0..budget {
+            let parent_count = self.nodes[node].count;
+            let mut best: Option<(TokenId, usize, u64)> = None;
+            for (&tok, &child) in &self.nodes[node].children {
+                let c = self.nodes[child].count;
+                match best {
+                    None => best = Some((tok, child, c)),
+                    Some((btok, _, bc)) => {
+                        if c > bc || (c == bc && tok < btok) {
+                            best = Some((tok, child, c));
+                        }
+                    }
+                }
+            }
+            let Some((tok, child, c)) = best else { break };
+            draft.push(tok);
+            conf.push((c as f64 / parent_count.max(1) as f64) as f32);
+            node = child;
+        }
+        (draft, conf)
+    }
+
+    /// Match length the context achieves against the index (diagnostics).
+    pub fn match_len(&self, context: &[TokenId], max_len: usize) -> usize {
+        self.longest_suffix_node(context, max_len, 1).0
+    }
+
+    /// Approximate heap bytes.
+    pub fn approx_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<TrieNode>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| n.children.capacity() * (std::mem::size_of::<(TokenId, usize)>() + 8))
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn counts_are_occurrences() {
+        let mut idx = SuffixTrieIndex::new(8);
+        idx.insert(&[1, 2, 1, 2, 3]);
+        assert_eq!(idx.count(&[1, 2]), 2);
+        assert_eq!(idx.count(&[1, 2, 3]), 1);
+        assert_eq!(idx.count(&[2, 1]), 1);
+        assert_eq!(idx.count(&[3, 1]), 0);
+        assert!(idx.contains(&[2, 3]));
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        let mut idx = SuffixTrieIndex::new(3);
+        idx.insert(&[1, 2, 3, 4, 5]);
+        assert!(idx.contains(&[1, 2, 3]));
+        assert_eq!(idx.count(&[1, 2, 3, 4]), 0); // beyond cap
+    }
+
+    #[test]
+    fn draft_follows_majority() {
+        let mut idx = SuffixTrieIndex::new(8);
+        // After [5], token 7 follows twice, token 9 once.
+        idx.insert(&[5, 7, 1]);
+        idx.insert(&[5, 7, 2]);
+        idx.insert(&[5, 9, 3]);
+        let (draft, conf) = idx.draft_weighted(&[0, 0, 5], 4, 1);
+        assert_eq!(draft, vec![7]);
+        assert!((conf[0] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn draft_deterministic_tiebreak() {
+        let mut idx = SuffixTrieIndex::new(8);
+        idx.insert(&[5, 7]);
+        idx.insert(&[5, 3]);
+        let (draft, _) = idx.draft_weighted(&[5], 4, 1);
+        assert_eq!(draft, vec![3]); // smallest token wins ties
+    }
+
+    #[test]
+    fn empty_context_or_no_match() {
+        let mut idx = SuffixTrieIndex::new(8);
+        idx.insert(&[1, 2, 3]);
+        assert!(idx.draft_weighted(&[], 4, 4).0.is_empty());
+        assert!(idx.draft_weighted(&[9, 9], 4, 4).0.is_empty());
+        assert!(idx.draft_weighted(&[1], 4, 0).0.is_empty());
+    }
+
+    #[test]
+    fn multi_rollout_counts_accumulate() {
+        let mut idx = SuffixTrieIndex::new(6);
+        for _ in 0..10 {
+            idx.insert(&[1, 2, 3]);
+        }
+        assert_eq!(idx.count(&[2, 3]), 10);
+        assert_eq!(idx.rollouts(), 10);
+        assert_eq!(idx.tokens_indexed(), 30);
+    }
+
+    #[test]
+    fn prop_counts_match_naive() {
+        prop::check(128, |g| {
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let depth = 2 + g.usize_in(0, 6);
+            let mut idx = SuffixTrieIndex::new(depth);
+            let mut rollouts = Vec::new();
+            for _ in 0..g.usize_in(1, 4) {
+                let r = g.vec_u32_nonempty(alphabet, 50);
+                idx.insert(&r);
+                rollouts.push(r);
+            }
+            for _ in 0..12 {
+                let pat = g.vec_u32_nonempty(alphabet, depth);
+                let naive: u64 = rollouts
+                    .iter()
+                    .map(|r| {
+                        if r.len() < pat.len() {
+                            0
+                        } else {
+                            r.windows(pat.len()).filter(|w| *w == pat.as_slice()).count() as u64
+                        }
+                    })
+                    .sum();
+                prop::require_eq(idx.count(&pat), naive, "count vs naive")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_draft_tokens_seen_in_corpus() {
+        prop::check(64, |g| {
+            let alphabet = 1 + g.usize_in(1, 4) as u32;
+            let mut idx = SuffixTrieIndex::new(12);
+            let mut corpus: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..g.usize_in(1, 4) {
+                let r = g.vec_u32_nonempty(alphabet, 40);
+                idx.insert(&r);
+                corpus.push(r);
+            }
+            let ctx = g.vec_u32_nonempty(alphabet, 10);
+            let (draft, conf) = idx.draft_weighted(&ctx, 6, 5);
+            prop::require_eq(draft.len(), conf.len(), "draft/conf aligned")?;
+            for c in &conf {
+                prop::require(*c > 0.0 && *c <= 1.0, "confidence in (0,1]")?;
+            }
+            // Every drafted step extends a context suffix that occurs with
+            // that continuation somewhere in the corpus.
+            if !draft.is_empty() {
+                let mlen = idx.match_len(&ctx, 6);
+                let mut needle: Vec<u32> = ctx[ctx.len() - mlen..].to_vec();
+                needle.push(draft[0]);
+                let found = corpus
+                    .iter()
+                    .any(|r| r.windows(needle.len()).any(|w| w == needle.as_slice()));
+                prop::require(found, "first draft token must be a seen continuation")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! Sliding-window drafter index (§4.1.2 "Sliding window selection tree").
+//!
+//! Policy drift makes old rollouts less predictive (Fig. 2), so the drafter
+//! is built from a sliding window of recent trajectories. We implement the
+//! window as one counting suffix-trie *bucket per epoch*: inserts are
+//! append-only into the newest bucket (keeping the incremental-update cost
+//! profile of Fig. 5), and eviction drops whole stale buckets — true deletion
+//! without tree surgery. Queries probe buckets newest → oldest and pick the
+//! draft whose (age-discounted) match quality is best, which realizes the
+//! paper's "mild down-weighting of matches originating from older epochs".
+
+use std::collections::VecDeque;
+
+use crate::suffix::trie::SuffixTrieIndex;
+use crate::tokens::{Epoch, TokenId};
+
+#[derive(Debug, Clone)]
+pub struct WindowedIndex {
+    /// Newest bucket at the back.
+    buckets: VecDeque<(Epoch, SuffixTrieIndex)>,
+    /// Window size in epochs; 0 = unbounded ("window_all" in Fig. 7).
+    pub window: usize,
+    /// Trie depth cap (match_len + draft budget cap).
+    max_depth: usize,
+    /// Multiplicative per-epoch age discount applied to match length when
+    /// ranking candidate drafts across buckets.
+    pub age_discount: f64,
+}
+
+/// One candidate draft from one bucket.
+#[derive(Debug, Clone)]
+pub struct WindowDraft {
+    pub tokens: Vec<TokenId>,
+    pub confidence: Vec<f32>,
+    pub match_len: usize,
+    pub epoch: Epoch,
+    pub score: f64,
+}
+
+impl WindowedIndex {
+    pub fn new(window: usize, max_depth: usize) -> Self {
+        WindowedIndex {
+            buckets: VecDeque::new(),
+            window,
+            max_depth,
+            age_discount: 0.85,
+        }
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn tokens_indexed(&self) -> usize {
+        self.buckets.iter().map(|(_, b)| b.tokens_indexed()).sum()
+    }
+
+    pub fn newest_epoch(&self) -> Option<Epoch> {
+        self.buckets.back().map(|(e, _)| *e)
+    }
+
+    /// Insert a rollout produced at `epoch`. Epochs must be non-decreasing.
+    pub fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        match self.buckets.back_mut() {
+            Some((e, bucket)) if *e == epoch => bucket.insert(tokens),
+            Some((e, _)) if *e > epoch => {
+                // Late arrival from an already-sealed epoch: index it into
+                // the newest bucket rather than violating ordering.
+                self.buckets.back_mut().unwrap().1.insert(tokens);
+            }
+            _ => {
+                let mut bucket = SuffixTrieIndex::new(self.max_depth);
+                bucket.insert(tokens);
+                self.buckets.push_back((epoch, bucket));
+                self.evict();
+            }
+        }
+    }
+
+    /// Start a new (possibly empty) epoch bucket and evict stale ones.
+    pub fn roll_epoch(&mut self, epoch: Epoch) {
+        if self.buckets.back().map(|(e, _)| *e < epoch).unwrap_or(true) {
+            self.buckets
+                .push_back((epoch, SuffixTrieIndex::new(self.max_depth)));
+            self.evict();
+        }
+    }
+
+    fn evict(&mut self) {
+        if self.window == 0 {
+            return;
+        }
+        while self.buckets.len() > self.window {
+            self.buckets.pop_front();
+        }
+    }
+
+    /// Best draft across the window. Candidates are ranked by
+    /// `match_len · age_discount^age` (ties → newer epoch), so a much longer
+    /// match in an older epoch can still win, but recency is preferred.
+    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Option<WindowDraft> {
+        if budget == 0 {
+            return None;
+        }
+        let newest = self.newest_epoch()?;
+        let mut best: Option<WindowDraft> = None;
+        for (epoch, bucket) in self.buckets.iter().rev() {
+            let mlen = bucket.match_len(context, max_match);
+            if mlen == 0 {
+                continue;
+            }
+            let age = (newest - *epoch) as f64;
+            let score = mlen as f64 * self.age_discount.powf(age);
+            let better = match &best {
+                None => true,
+                Some(b) => score > b.score,
+            };
+            if better {
+                let (tokens, confidence) = bucket.draft_weighted(context, max_match, budget);
+                if !tokens.is_empty() {
+                    best = Some(WindowDraft {
+                        tokens,
+                        confidence,
+                        match_len: mlen,
+                        epoch: *epoch,
+                        score,
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Total number of probe operations a draft costs (for latency figures:
+    /// window_all pays for every bucket).
+    pub fn probe_cost(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.buckets.iter().map(|(_, b)| b.approx_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn window_evicts_old_epochs() {
+        let mut w = WindowedIndex::new(2, 8);
+        w.insert(0, &[1, 2, 3]);
+        w.insert(1, &[4, 5, 6]);
+        w.insert(2, &[7, 8, 9]);
+        assert_eq!(w.bucket_count(), 2);
+        // Epoch-0 content is gone.
+        assert!(w.draft(&[1, 2], 4, 2).is_none());
+        // Epoch-2 content matches.
+        let d = w.draft(&[7, 8], 4, 2).unwrap();
+        assert_eq!(d.tokens, vec![9]);
+        assert_eq!(d.epoch, 2);
+    }
+
+    #[test]
+    fn unbounded_window_keeps_everything() {
+        let mut w = WindowedIndex::new(0, 8);
+        for e in 0..20 {
+            w.insert(e, &[e + 100, e + 101, e + 102]);
+        }
+        assert_eq!(w.bucket_count(), 20);
+        assert!(w.draft(&[100, 101], 4, 1).is_some());
+    }
+
+    #[test]
+    fn recency_preferred_on_equal_match() {
+        let mut w = WindowedIndex::new(0, 8);
+        w.insert(0, &[1, 2, 30]); // old continuation: 30
+        w.insert(5, &[1, 2, 40]); // new continuation: 40
+        let d = w.draft(&[1, 2], 4, 1).unwrap();
+        assert_eq!(d.epoch, 5);
+        assert_eq!(d.tokens, vec![40]);
+    }
+
+    #[test]
+    fn much_longer_old_match_can_win() {
+        let mut w = WindowedIndex::new(0, 16);
+        w.insert(0, &[1, 2, 3, 4, 5, 6, 7, 8, 60, 61]); // long pattern, old epoch
+        w.insert(1, &[8, 50]); // short match in new epoch
+        let d = w.draft(&[1, 2, 3, 4, 5, 6, 7, 8], 8, 2).unwrap();
+        // Old bucket matches 8 tokens (score 8·0.85=6.8) vs new 1 (score 1).
+        assert_eq!(d.epoch, 0);
+        assert_eq!(d.tokens, vec![60, 61]);
+    }
+
+    #[test]
+    fn roll_epoch_creates_and_evicts() {
+        let mut w = WindowedIndex::new(3, 8);
+        for e in 0..10 {
+            w.roll_epoch(e);
+        }
+        assert_eq!(w.bucket_count(), 3);
+        assert_eq!(w.newest_epoch(), Some(9));
+    }
+
+    #[test]
+    fn late_arrival_goes_to_newest_bucket() {
+        let mut w = WindowedIndex::new(4, 8);
+        w.insert(3, &[1, 2]);
+        w.insert(1, &[5, 6]); // late: epoch 1 after epoch 3 sealed
+        assert_eq!(w.bucket_count(), 1);
+        assert!(w.draft(&[5], 4, 1).is_some());
+    }
+
+    #[test]
+    fn prop_window_size_never_exceeded() {
+        prop::check(64, |g| {
+            let win = 1 + g.usize_in(0, 6);
+            let mut w = WindowedIndex::new(win, 8);
+            let mut epoch = 0;
+            for _ in 0..g.usize_in(1, 40) {
+                if g.bool() {
+                    epoch += 1;
+                }
+                let r = g.vec_u32_nonempty(8, 20);
+                w.insert(epoch, &r);
+                prop::require(w.bucket_count() <= win, "window bound respected")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_draft_nonempty_implies_match() {
+        prop::check(64, |g| {
+            let mut w = WindowedIndex::new(0, 10);
+            for e in 0..g.usize_in(1, 5) as u32 {
+                w.insert(e, &g.vec_u32_nonempty(5, 30));
+            }
+            let ctx = g.vec_u32_nonempty(5, 10);
+            if let Some(d) = w.draft(&ctx, 6, 4) {
+                prop::require(d.match_len >= 1, "match_len >= 1")?;
+                prop::require(!d.tokens.is_empty(), "tokens nonempty")?;
+                prop::require(d.tokens.len() <= 4, "budget respected")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Telemetry: CSV emission and aligned-table printing for the figure
+//! harness and the training loop.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-oriented table that can print aligned text and write CSV.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Convenience for numeric rows.
+    pub fn row_f(&mut self, cells: &[f64]) {
+        self.row(cells.iter().map(|v| format_num(*v)).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        writeln!(s, "{}", self.columns.join(",")).unwrap();
+        for r in &self.rows {
+            writeln!(s, "{}", r.join(",")).unwrap();
+        }
+        s
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        writeln!(s, "== {} ==", self.name).unwrap();
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        writeln!(s, "{}", header.join("  ")).unwrap();
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            writeln!(s, "{}", line.join("  ")).unwrap();
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+pub fn format_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 || (v.fract() == 0.0 && v.abs() < 1e9) {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_render() {
+        let mut t = Table::new("demo", &["step", "value"]);
+        t.row_f(&[1.0, 0.5]);
+        t.row_f(&[2.0, 1500.0]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("step,value\n"));
+        assert!(csv.contains("1,0.50000"));
+        assert!(csv.contains("2,1500"));
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("step"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn write_csv_creates_file() {
+        let dir = std::env::temp_dir().join("das_telemetry_test");
+        let mut t = Table::new("out", &["a"]);
+        t.row(vec!["1".into()]);
+        let p = t.write_csv(&dir).unwrap();
+        assert!(p.exists());
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a\n1\n");
+    }
+}

@@ -1,0 +1,55 @@
+//! Core token / identifier types shared by every layer of the coordinator.
+
+/// Token id in the policy's vocabulary. `u32` everywhere — the suffix
+/// structures index token *sequences*, never text.
+pub type TokenId = u32;
+
+/// Stable identifier of a *problem* (a prompt in the RL dataset). The same
+/// problem is revisited every epoch (paper Insight-2), which is what makes
+/// per-problem suffix-tree shards work.
+pub type ProblemId = u32;
+
+/// Identifier of a single rollout request (one sample of one problem in one
+/// step). Unique within a training run.
+pub type RequestId = u64;
+
+/// Training epoch index (one full pass over the dataset).
+pub type Epoch = u32;
+
+/// One completed rollout: the generated token sequence plus provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rollout {
+    pub problem: ProblemId,
+    pub epoch: Epoch,
+    pub step: u32,
+    pub tokens: Vec<TokenId>,
+    pub reward: f64,
+}
+
+impl Rollout {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollout_len() {
+        let r = Rollout {
+            problem: 1,
+            epoch: 0,
+            step: 0,
+            tokens: vec![1, 2, 3],
+            reward: 1.0,
+        };
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+    }
+}

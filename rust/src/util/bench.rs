@@ -1,0 +1,191 @@
+//! Criterion-style micro-benchmark harness.
+//!
+//! `criterion` is not in the offline registry, so `benches/*.rs` use this
+//! harness (`[[bench]] harness = false` in Cargo.toml). It does what we need
+//! from criterion: warmup, adaptive iteration counts targeting a fixed
+//! measurement window, and median/mean/p99 reporting with throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems: Option<u64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (stable-Rust
+/// equivalent of `std::hint::black_box` — which we also call through to).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI: tiny windows, still statistically usable.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_elems(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (elements per iteration).
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elems: u64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_elems(name, Some(elems), &mut f)
+    }
+
+    fn bench_elems(&mut self, name: &str, elems: Option<u64>, f: &mut dyn FnMut()) -> &BenchResult {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup || witers < 3 {
+            f();
+            witers += 1;
+            if witers > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / witers as f64;
+        // Batch so each sample is >= ~50us to avoid timer noise.
+        let batch = ((50_000.0 / per_iter.max(1.0)).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        let mut total_iters = 0u64;
+        while mstart.elapsed() < self.measure || samples.len() < self.min_iters as usize {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let p99 = samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: median,
+            p99_ns: p99,
+            elems,
+        };
+        println!("{}", format_result(&res));
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a closing summary table.
+    pub fn summary(&self) {
+        println!("\n== bench summary ==");
+        for r in &self.results {
+            println!("{}", format_result(r));
+        }
+    }
+}
+
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+fn format_result(r: &BenchResult) -> String {
+    let mut s = format!(
+        "{:<44} median {:>10}  mean {:>10}  p99 {:>10}",
+        r.name,
+        format_ns(r.median_ns),
+        format_ns(r.mean_ns),
+        format_ns(r.p99_ns),
+    );
+    if let Some(e) = r.elems {
+        let per_sec = e as f64 / (r.median_ns * 1e-9);
+        s.push_str(&format!("  ({:.2} Melem/s)", per_sec / 1e6));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p99_ns * 1.001);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn format_ns_units() {
+        assert!(format_ns(500.0).contains("ns"));
+        assert!(format_ns(5_000.0).contains("µs"));
+        assert!(format_ns(5_000_000.0).contains("ms"));
+        assert!(format_ns(5_000_000_000.0).ends_with("s"));
+    }
+}

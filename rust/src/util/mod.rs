@@ -1,0 +1,15 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment resolves crates only from the image's vendored set
+//! (the `xla` dependency tree), so the usual ecosystem crates (`rand`,
+//! `serde`, `clap`, `criterion`, `proptest`) are written from scratch here in
+//! minimal form: [`rng`] (Xoshiro256**), [`json`], [`argparse`], [`stats`],
+//! [`bench`] (a criterion-style harness used by `benches/`), and [`prop`]
+//! (a property-testing helper used by the test suite).
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

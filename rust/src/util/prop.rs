@@ -1,0 +1,157 @@
+//! Minimal property-testing harness (`proptest` is not in the offline
+//! registry). Runs a property against many seeded random cases and, on
+//! failure, retries with progressively simpler inputs (size-based shrinking)
+//! before reporting the smallest failing seed/size it saw.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(256, |g| {
+//!     let xs = g.vec_u32(0..1000, 0..64);
+//!     let t = SuffixTree::build(&xs);
+//!     prop::require(t.contains(&xs[..]), "tree must contain its own text")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to properties; wraps an RNG plus a size hint that
+/// the harness lowers while shrinking.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        // Respect the shrink size: cap the span.
+        let span = (hi - lo).min(self.size.max(1));
+        self.rng.range(lo, lo + span + 1).min(hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of token ids drawn from `[0, alphabet)`, length in `len_range`.
+    pub fn vec_u32(&mut self, alphabet: u32, max_len: usize) -> Vec<u32> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| self.rng.below(alphabet as usize) as u32).collect()
+    }
+
+    /// Non-empty variant.
+    pub fn vec_u32_nonempty(&mut self, alphabet: u32, max_len: usize) -> Vec<u32> {
+        let len = self.usize_in(1, max_len.max(1));
+        (0..len).map(|_| self.rng.below(alphabet as usize) as u32).collect()
+    }
+}
+
+#[derive(Debug)]
+pub struct CaseFailure {
+    pub message: String,
+}
+
+pub type PropResult = Result<(), CaseFailure>;
+
+/// Assertion helper for use inside properties.
+pub fn require(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(CaseFailure {
+            message: msg.to_string(),
+        })
+    }
+}
+
+pub fn require_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, msg: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(CaseFailure {
+            message: format!("{msg}: {a:?} != {b:?}"),
+        })
+    }
+}
+
+/// Run `prop` on `cases` random inputs. Panics (failing the enclosing
+/// `#[test]`) with the seed, size and message of the smallest failure found.
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    check_seeded(0xDA5_0001, cases, &mut prop);
+}
+
+pub fn check_seeded<F>(base_seed: u64, cases: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        // Grow input sizes as cases progress (small cases first — cheap
+        // built-in shrinking bias).
+        let size = 2 + (case as usize * 64) / cases.max(1) as usize;
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen {
+            rng: Rng::seed_from_u64(seed),
+            size,
+        };
+        if let Err(fail) = prop(&mut g) {
+            // Shrink: replay with smaller sizes on the same seed and report
+            // the smallest size that still fails.
+            let mut min_fail = (size, fail.message.clone());
+            for s in (1..size).rev() {
+                let mut g2 = Gen {
+                    rng: Rng::seed_from_u64(seed),
+                    size: s,
+                };
+                if let Err(f2) = prop(&mut g2) {
+                    min_fail = (s, f2.message);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, minimal size {}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |g| {
+            let v = g.vec_u32(100, 32);
+            require(v.iter().all(|&t| t < 100), "tokens within alphabet")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        check(64, |g| {
+            let v = g.vec_u32_nonempty(10, 32);
+            require(v.len() < 5, "length always < 5 (false)")
+        });
+    }
+
+    #[test]
+    fn sizes_grow_over_cases() {
+        let mut max_len = 0;
+        check(64, |g| {
+            let v = g.vec_u32(10, 64);
+            max_len = max_len.max(v.len());
+            Ok(())
+        });
+        assert!(max_len > 16, "later cases should generate larger inputs");
+    }
+}

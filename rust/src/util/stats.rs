@@ -1,0 +1,198 @@
+//! Small statistics helpers used across the cost model, figure harness and
+//! benchmarks: summary stats, percentiles, least-squares line fits.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for slices shorter than 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile with linear interpolation; `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Ordinary least squares fit `y = a + b x`. Returns `(a, b)`.
+/// Falls back to a flat line through the mean when x has no variance.
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let sxy: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (x - mx) * (y - my))
+        .sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let _ = n;
+    (a, b)
+}
+
+/// Coefficient of determination R^2 for a fitted line.
+pub fn r_squared(xs: &[f64], ys: &[f64], a: f64, b: f64) -> f64 {
+    let my = mean(ys);
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    1.0 - ss_res / ss_tot
+}
+
+/// Mean relative error of a fitted line — the paper reports MRE ≈ 12% for
+/// its `t_fwd = c_base + c_tok·n` model (Fig. 8 / Eq. 1).
+pub fn mean_relative_error(xs: &[f64], ys: &[f64], a: f64, b: f64) -> f64 {
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (x, y) in xs.iter().zip(ys) {
+        if *y != 0.0 {
+            acc += ((a + b * x) - y).abs() / y.abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let sx = stddev(xs);
+    let sy = stddev(ys);
+    if sx == 0.0 || sy == 0.0 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let cov = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (x - mx) * (y - my))
+        .sum::<f64>()
+        / xs.len() as f64;
+    cov / (sx * sy)
+}
+
+/// Exponential moving average over a series (smoothing for figures).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        acc = Some(v);
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+        assert!((r_squared(&xs, &ys, a, b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linreg_degenerate_x() {
+        let (a, b) = linreg(&[2.0, 2.0], &[1.0, 3.0]);
+        assert_eq!(b, 0.0);
+        assert!((a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mre_zero_for_exact_fit() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!(mean_relative_error(&xs, &ys, 0.0, 2.0) < 1e-12);
+    }
+
+    #[test]
+    fn pearson_sign() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let up = [1.0, 2.0, 3.0, 4.5];
+        let down = [4.0, 3.0, 2.0, 1.0];
+        assert!(pearson(&xs, &up) > 0.95);
+        assert!(pearson(&xs, &down) < -0.95);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[0.0, 10.0], 0.5);
+        assert_eq!(out, vec![0.0, 5.0]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Workload generators — the RL datasets (DESIGN.md §3 substitutions).
+//!
+//! * **math** — DSR-sub/DeepScaleR analog: verifiable-answer problems with
+//!   long-tailed canonical solution lengths. On the sim backend the answer
+//!   is the problem's (drift-stable) canonical suffix; on the PJRT backend
+//!   the answer is a deterministic function of the prompt, so a real model
+//!   can actually learn it.
+//! * **code** — DeepCoder analog: each problem is a set of unit tests for
+//!   the token stack-VM; the canonical trajectory IS a correct program, so
+//!   rewards are real program executions.
+//! * **trace** — rollout-only serving workload (no reward semantics).
+
+use crate::rl::vm::{self, TestCase};
+use crate::tokens::{ProblemId, TokenId};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskSpec {
+    /// Reward = rollout ends with these tokens (before EOS).
+    MatchAnswer { answer: Vec<TokenId> },
+    /// Reward = first generated token equals (sum of prompt) mod modulus.
+    SumMod { modulus: u32 },
+    /// Reward = unit-test pass fraction of the generated program.
+    UnitTests { tests: Vec<TestCase>, fuel: usize },
+    /// No reward (serving trace).
+    None,
+}
+
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub id: ProblemId,
+    pub prompt: Vec<TokenId>,
+    pub task: TaskSpec,
+    /// A known-good generation for this problem (used to seed the sim
+    /// model's canonical trajectory; None = let the sim invent one).
+    pub canonical: Option<Vec<TokenId>>,
+    /// Drift-eligible positions of `canonical` (see `SimModel::set_canonical`).
+    pub mutable: Option<Vec<bool>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub problems: Vec<Problem>,
+}
+
+impl Workload {
+    pub fn from_config(cfg: &crate::config::DasConfig) -> Workload {
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x0A7A_5E7);
+        match cfg.workload.kind.as_str() {
+            "math" => {
+                if cfg.model.backend == "pjrt" {
+                    math_pjrt(&mut rng, cfg.workload.n_problems, cfg.model.vocab_size)
+                } else {
+                    math_sim(&mut rng, cfg.workload.n_problems, cfg.model.vocab_size)
+                }
+            }
+            "code" => code(
+                &mut rng,
+                cfg.workload.n_problems,
+                cfg.model.vocab_size,
+                cfg.workload.len_mu,
+                cfg.workload.len_sigma,
+                cfg.rollout.max_new_tokens,
+            ),
+            "trace" => trace(&mut rng, cfg.workload.n_problems, cfg.model.vocab_size),
+            other => panic!("unknown workload kind '{other}'"),
+        }
+    }
+}
+
+/// Sim-backend math: prompts are short id-bearing headers; the answer lives
+/// in the sim's canonical trajectory (queried at reward time).
+fn math_sim(rng: &mut Rng, n: usize, vocab: usize) -> Workload {
+    let problems = (0..n)
+        .map(|i| {
+            let plen = 3 + rng.below(4);
+            let prompt: Vec<TokenId> = (0..plen)
+                .map(|_| rng.below(vocab.saturating_sub(2).max(2)) as u32)
+                .collect();
+            Problem {
+                id: i as ProblemId,
+                prompt,
+                task: TaskSpec::MatchAnswer { answer: Vec::new() }, // filled by trainer
+                canonical: None,
+                mutable: None,
+            }
+        })
+        .collect();
+    Workload { problems }
+}
+
+/// PJRT-backend math: answer = (Σ prompt tokens) mod modulus — small enough
+/// for the tiny transformer to learn via REINFORCE.
+fn math_pjrt(rng: &mut Rng, n: usize, vocab: usize) -> Workload {
+    let modulus = (vocab as u32 - 2).min(16);
+    let problems = (0..n)
+        .map(|i| {
+            let plen = 3 + rng.below(3);
+            let prompt: Vec<TokenId> =
+                (0..plen).map(|_| rng.below(modulus as usize) as u32).collect();
+            Problem {
+                id: i as ProblemId,
+                prompt,
+                task: TaskSpec::SumMod { modulus },
+                canonical: None,
+                mutable: None,
+            }
+        })
+        .collect();
+    Workload { problems }
+}
+
+/// Code workload: canonical = a correct program for the generated tests.
+/// Program lengths follow the configured log-normal so the long-tail
+/// structure (Insight-1) holds for code too.
+fn code(
+    rng: &mut Rng,
+    n: usize,
+    vocab: usize,
+    len_mu: f64,
+    len_sigma: f64,
+    max_len: usize,
+) -> Workload {
+    assert!(vocab as u32 > vm::OP_MAX, "vocab too small for VM opcodes");
+    let problems = (0..n)
+        .map(|i| {
+            let target_len = (rng.lognormal(len_mu, len_sigma) as usize)
+                .clamp(8, max_len.saturating_sub(4).max(8));
+            let (program, tests) = vm::random_program(rng, target_len, 5);
+            // Interleave no-op "comment" tokens (ids in [OP_MAX, vocab-2)):
+            // the VM ignores them, so the canonical trajectory can drift
+            // lexically (Insight-3) while staying a CORRECT program — the
+            // reasoning text changes, the answer doesn't.
+            let filler_lo = vm::OP_MAX;
+            let filler_hi = (vocab - 1) as u32; // exclusive; vocab-1 is EOS
+            let mut canonical = Vec::with_capacity(program.len() * 2);
+            let mut mutable = Vec::with_capacity(program.len() * 2);
+            for &t in &program {
+                while rng.chance(0.35) {
+                    canonical.push(filler_lo + rng.below((filler_hi - filler_lo) as usize) as u32);
+                    mutable.push(true);
+                }
+                canonical.push(t);
+                mutable.push(false);
+            }
+            let prompt = vec![
+                vm::OP_MAX + 1 + (i as u32 % 8), // task marker tokens
+                (i as u32 / 8) % 8 + vm::OP_MAX + 9,
+            ];
+            Problem {
+                id: i as ProblemId,
+                prompt,
+                task: TaskSpec::UnitTests { tests, fuel: 10_000 },
+                canonical: Some(canonical),
+                mutable: Some(mutable),
+            }
+        })
+        .collect();
+    Workload { problems }
+}
+
+fn trace(rng: &mut Rng, n: usize, vocab: usize) -> Workload {
+    let problems = (0..n)
+        .map(|i| {
+            let plen = 2 + rng.below(6);
+            Problem {
+                id: i as ProblemId,
+                prompt: (0..plen).map(|_| rng.below(vocab - 1) as u32).collect(),
+                task: TaskSpec::None,
+                canonical: None,
+                mutable: None,
+            }
+        })
+        .collect();
+    Workload { problems }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DasConfig;
+
+    #[test]
+    fn math_sim_workload_shape() {
+        let cfg = DasConfig::default();
+        let w = Workload::from_config(&cfg);
+        assert_eq!(w.problems.len(), cfg.workload.n_problems);
+        for p in &w.problems {
+            assert!(!p.prompt.is_empty());
+            assert!(matches!(p.task, TaskSpec::MatchAnswer { .. }));
+        }
+    }
+
+    #[test]
+    fn code_workload_programs_pass_their_tests() {
+        let mut cfg = DasConfig::default();
+        cfg.workload.kind = "code".into();
+        cfg.workload.n_problems = 8;
+        let w = Workload::from_config(&cfg);
+        for p in &w.problems {
+            let prog = p.canonical.as_ref().unwrap();
+            let TaskSpec::UnitTests { tests, fuel } = &p.task else {
+                panic!("code problems carry tests")
+            };
+            assert!((vm::pass_fraction(prog, tests, *fuel) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn code_lengths_long_tailed() {
+        let mut cfg = DasConfig::default();
+        cfg.workload.kind = "code".into();
+        cfg.workload.n_problems = 128;
+        let w = Workload::from_config(&cfg);
+        let lens: Vec<f64> = w
+            .problems
+            .iter()
+            .map(|p| p.canonical.as_ref().unwrap().len() as f64)
+            .collect();
+        let mean = crate::util::stats::mean(&lens);
+        let max = lens.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 2.0 * mean, "tail expected: mean={mean} max={max}");
+    }
+
+    #[test]
+    fn pjrt_math_answers_learnable() {
+        let mut cfg = DasConfig::default();
+        cfg.model.backend = "pjrt".into();
+        cfg.model.vocab_size = 64;
+        let w = Workload::from_config(&cfg);
+        for p in &w.problems {
+            let TaskSpec::SumMod { modulus } = p.task else {
+                panic!("expected SumMod")
+            };
+            assert!(modulus >= 2);
+            assert!(p.prompt.iter().all(|&t| t < modulus));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = DasConfig::default();
+        let a = Workload::from_config(&cfg);
+        let b = Workload::from_config(&cfg);
+        assert_eq!(a.problems.len(), b.problems.len());
+        for (x, y) in a.problems.iter().zip(&b.problems) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

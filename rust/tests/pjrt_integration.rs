@@ -1,0 +1,202 @@
+//! End-to-end integration over the REAL runtime: artifacts → PJRT → engine.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they skip
+//! gracefully when the artifacts are missing so `cargo test` works in a
+//! fresh checkout.
+
+use std::path::Path;
+
+use das::config::preset;
+use das::model::TargetModel;
+use das::rollout::{GenJob, RolloutEngine};
+use das::runtime::PjrtModel;
+use das::tokens::Rollout;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("meta.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn decode_executes_and_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mut m = PjrtModel::load(dir).unwrap();
+    let b = m.batch_capacity();
+    let s = m.meta.max_seq_len;
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % 17) as i32 % 63).collect();
+    let q_start: Vec<i32> = (0..b as i32).collect();
+    let a = m.decode_raw(&tokens, &q_start).unwrap();
+    let bb = m.decode_raw(&tokens, &q_start).unwrap();
+    assert_eq!(a.len(), b * m.meta.spec_block * m.meta.vocab_size);
+    assert_eq!(a, bb, "decode must be deterministic");
+    assert!(a.iter().all(|x| x.is_finite()));
+    assert_eq!(m.forward_passes(), 2);
+}
+
+#[test]
+fn padding_after_block_does_not_change_logits() {
+    // The runtime right-pads contexts; causality must make that safe.
+    let Some(dir) = artifacts() else { return };
+    let mut m = PjrtModel::load(dir).unwrap();
+    let b = m.batch_capacity();
+    let s = m.meta.max_seq_len;
+    let kp1 = m.meta.spec_block;
+    let mut tokens: Vec<i32> = vec![1; b * s];
+    let q_start: Vec<i32> = vec![4; b];
+    let a = m.decode_raw(&tokens, &q_start).unwrap();
+    // Scramble everything after position 4 + spec_block in every row.
+    for r in 0..b {
+        for j in (4 + kp1)..s {
+            tokens[r * s + j] = ((j * 7 + r) % 60) as i32;
+        }
+    }
+    let c = m.decode_raw(&tokens, &q_start).unwrap();
+    for (x, y) in a.iter().zip(&c) {
+        assert!((x - y).abs() < 1e-4, "padding leaked into block logits");
+    }
+}
+
+#[test]
+fn train_step_runs_and_moves_weights() {
+    let Some(dir) = artifacts() else { return };
+    let mut m = PjrtModel::load(dir).unwrap();
+    let b = m.batch_capacity();
+    let s = m.meta.max_seq_len;
+    let before = m.params_to_host().unwrap();
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % 50) as i32).collect();
+    let mask: Vec<f32> = (0..b * s).map(|i| if i % s > 2 { 1.0 } else { 0.0 }).collect();
+    let adv: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let loss1 = m.train_step(&tokens, &mask, &adv, 0.05).unwrap();
+    let after = m.params_to_host().unwrap();
+    assert!(loss1.is_finite());
+    let moved = before
+        .iter()
+        .zip(&after)
+        .any(|(x, y)| x.iter().zip(y).any(|(a, b)| (a - b).abs() > 1e-9));
+    assert!(moved, "weights must change");
+    assert_eq!(m.train_steps, 1);
+}
+
+#[test]
+fn train_overfit_increases_sequence_probability() {
+    // REINFORCE sanity on the real stack: repeatedly rewarding one sequence
+    // must increase its per-token logprob under decode.
+    let Some(dir) = artifacts() else { return };
+    let mut m = PjrtModel::load(dir).unwrap();
+    let b = m.batch_capacity();
+    let s = m.meta.max_seq_len;
+    let v = m.meta.vocab_size;
+    let seq: Vec<i32> = (0..12).map(|i| ((i * 5 + 3) % 60) as i32).collect();
+    let mut tokens = vec![0i32; b * s];
+    let mut mask = vec![0f32; b * s];
+    for r in 0..b {
+        for (j, &t) in seq.iter().enumerate() {
+            tokens[r * s + j] = t;
+            if j > 0 {
+                mask[r * s + j] = 1.0;
+            }
+        }
+    }
+    let adv = vec![1.0f32; b];
+    let prob_of_target = |m: &mut PjrtModel| -> f32 {
+        // logits at q_start=0 predict token at position 1 == seq[1].
+        let q = vec![0i32; b];
+        let logits = m.decode_raw(&tokens.clone(), &q).unwrap();
+        let row = &logits[..v];
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = row.iter().map(|x| (x - mx).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        exps[seq[1] as usize] / sum
+    };
+    let p0 = prob_of_target(&mut m);
+    for _ in 0..10 {
+        m.train_step(&tokens, &mask, &adv, 0.3).unwrap();
+    }
+    let p1 = prob_of_target(&mut m);
+    assert!(
+        p1 > p0 * 1.2,
+        "rewarded sequence should become more likely: {p0} -> {p1}"
+    );
+}
+
+#[test]
+fn engine_generates_on_pjrt_and_greedy_is_lossless() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = {
+        let mut c = preset("tiny_pjrt").unwrap();
+        c.rollout.temperature = 0.0;
+        c.rollout.max_new_tokens = 24;
+        c
+    };
+    let jobs: Vec<GenJob> = (0..4)
+        .map(|p| GenJob {
+            problem: p,
+            prompt: vec![p + 1, 2 * p + 3, 5],
+            samples: 2,
+        })
+        .collect();
+    let run = |drafter: &str| -> Vec<Rollout> {
+        let mut c = cfg.clone();
+        c.spec.drafter = drafter.into();
+        let mut model = PjrtModel::load(dir).unwrap();
+        let mut engine = RolloutEngine::new(&c, das::drafter::from_config(&c));
+        let mut all = Vec::new();
+        for step in 0..2 {
+            let rep = engine.generate_step(&mut model, &jobs, step);
+            all.extend(rep.rollouts);
+        }
+        all
+    };
+    let base = run("none");
+    let das_out = run("das");
+    let key = |r: &Rollout| (r.problem, r.step, r.tokens.clone());
+    let mut a: Vec<_> = base.iter().map(key).collect();
+    let mut b: Vec<_> = das_out.iter().map(key).collect();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b, "greedy DAS must equal greedy baseline on the real model");
+    assert_eq!(a.len(), 16);
+}
+
+#[test]
+fn calibration_fits_linear_model() {
+    let Some(dir) = artifacts() else { return };
+    let mut m = PjrtModel::load(dir).unwrap();
+    let rep = m.calibrate(5).unwrap();
+    assert!(rep.model.c_tok > 0.0, "per-token cost must be positive");
+    assert!(rep.mre < 0.5, "fit should be reasonable, mre={}", rep.mre);
+    assert!(rep.n_points >= 9);
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_weights() {
+    let Some(dir) = artifacts() else { return };
+    let mut m = PjrtModel::load(dir).unwrap();
+    // Perturb weights with one train step, save, perturb again, restore.
+    let b = m.batch_capacity();
+    let s = m.meta.max_seq_len;
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % 50) as i32).collect();
+    let mask: Vec<f32> = vec![1.0; b * s];
+    let adv: Vec<f32> = vec![1.0; b];
+    m.train_step(&tokens, &mask, &adv, 0.1).unwrap();
+    let saved = m.params_to_host().unwrap();
+    let ckpt_dir = std::env::temp_dir().join("das_ckpt_test");
+    das::runtime::save_checkpoint(
+        &m,
+        &ckpt_dir,
+        &das::runtime::CheckpointMeta { step: 5, epoch: 1, train_steps: 1 },
+    )
+    .unwrap();
+    m.train_step(&tokens, &mask, &adv, 0.1).unwrap();
+    assert_ne!(m.params_to_host().unwrap(), saved, "weights moved after save");
+    let meta = das::runtime::load_checkpoint(&mut m, &ckpt_dir).unwrap();
+    assert_eq!(meta.step, 5);
+    assert_eq!(meta.train_steps, 1);
+    let restored = m.params_to_host().unwrap();
+    assert_eq!(restored, saved, "checkpoint restore must be exact");
+}
