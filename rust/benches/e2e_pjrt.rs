@@ -2,12 +2,23 @@
 //! on the AOT-compiled model (the headline wall-clock numbers for this
 //! testbed; skipped when `artifacts/` is absent).
 
+#[cfg(feature = "pjrt")]
 use das::config::preset;
+#[cfg(feature = "pjrt")]
 use das::model::TargetModel;
+#[cfg(feature = "pjrt")]
 use das::rollout::{GenJob, RolloutEngine};
+#[cfg(feature = "pjrt")]
 use das::runtime::PjrtModel;
+#[cfg(feature = "pjrt")]
 use das::util::bench::{black_box, Bencher};
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("e2e_pjrt: built without the pjrt feature (skipping)");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     if !std::path::Path::new("artifacts/meta.json").exists() {
         eprintln!("e2e_pjrt: artifacts/ missing — run `make artifacts` first (skipping)");

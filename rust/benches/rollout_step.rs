@@ -57,5 +57,5 @@ fn main() {
             virt / iters.max(1) as f64
         );
     }
-    b.summary();
+    b.finish("BENCH_rollout.json");
 }

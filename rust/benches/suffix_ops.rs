@@ -2,9 +2,14 @@
 //!
 //! Query and update costs for the Ukkonen suffix tree, the counting suffix
 //! trie (production drafter index) and the suffix array (rebuild-per-insert
-//! baseline) across corpus sizes.
+//! baseline) across corpus sizes, plus windowed drafting over the fused
+//! epoch-ring index.
+//!
+//! Flags: `--quick` (small corpus + short windows, for CI),
+//! `--json [path]` / env `BENCH_JSON` (write machine-readable results,
+//! default `BENCH_suffix.json`).
 
-use das::suffix::{SuffixArray, SuffixArrayIndex, SuffixTree, SuffixTrieIndex};
+use das::suffix::{SuffixArray, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
 use das::util::bench::{black_box, Bencher};
 use das::util::rng::Rng;
 
@@ -15,9 +20,11 @@ fn corpus(rng: &mut Rng, rollouts: usize, len: usize, alphabet: usize) -> Vec<Ve
 }
 
 fn main() {
-    let mut b = Bencher::new();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
     let mut rng = Rng::seed_from_u64(42);
-    for &n_tokens in &[10_000usize, 100_000] {
+    let sizes: &[usize] = if quick { &[10_000] } else { &[10_000, 100_000] };
+    for &n_tokens in sizes {
         let rolls = corpus(&mut rng, n_tokens / 100, 100, 512);
         let flat: Vec<u32> = rolls.iter().flatten().copied().collect();
 
@@ -30,6 +37,14 @@ fn main() {
             trie.insert(r);
         }
         let sa = SuffixArray::build(&flat);
+        // Windowed index: same corpus spread over 8 epochs (the fused
+        // epoch-ring probes one structure per draft; the old bucket ring
+        // walked all 8 bucket tries).
+        let mut win = WindowedIndex::new(8, 24);
+        for (i, r) in rolls.iter().enumerate() {
+            let epoch = (i * 8 / rolls.len()) as u32;
+            win.insert(epoch, r);
+        }
 
         // Realistic queries: 8-token contexts cut from the corpus.
         let contexts: Vec<Vec<u32>> = (0..128)
@@ -57,6 +72,12 @@ fn main() {
             k += 1;
             black_box(sa.draft(c, 8, 16));
         });
+        let mut l = 0;
+        b.bench(&format!("window_draft_{}tok", n_tokens), || {
+            let c = &contexts[l % contexts.len()];
+            l += 1;
+            black_box(win.draft(c, 8, 16));
+        });
 
         // Update: index one fresh 100-token rollout. Tree/trie are
         // append-only online structures, so we insert into the live index
@@ -72,6 +93,10 @@ fn main() {
         b.bench(&format!("trie_insert100_{}tok", n_tokens), || {
             trie_live.insert(black_box(&fresh));
         });
+        let mut win_live = win.clone();
+        b.bench(&format!("window_insert100_{}tok", n_tokens), || {
+            win_live.insert(7, black_box(&fresh));
+        });
         // Array rebuild (the Fig. 5 point): rebuild cost at this corpus
         // size, measured by rebuilding the same-size corpus each iteration.
         let mut idx = SuffixArrayIndex::new();
@@ -81,5 +106,5 @@ fn main() {
             a2.insert(black_box(&fresh));
         });
     }
-    b.summary();
+    b.finish("BENCH_suffix.json");
 }

@@ -7,9 +7,9 @@
 //! DAS drafter's keeps rising. We reproduce that mechanism with a
 //! nonparametric proxy trained the same way EAGLE would be deployed: fit
 //! once on the FIRST epoch's rollouts, then never update. Using the same
-//! index machinery as the adaptive drafter isolates the variable that
-//! matters — *whether the drafter tracks the policy* — from incidental
-//! representation differences.
+//! index machinery as the adaptive drafter (the arena [`SuffixTrieIndex`])
+//! isolates the variable that matters — *whether the drafter tracks the
+//! policy* — from incidental representation differences.
 
 use super::{Draft, Drafter};
 use crate::suffix::trie::SuffixTrieIndex;

@@ -13,6 +13,12 @@
 //! An optional prefix-trie router (§4.1.2 "per-request suffix trees")
 //! routes the decode prefix to the most similar prior generation's shard
 //! before querying.
+//!
+//! Each windowed shard is a fused epoch-tagged arena trie (see
+//! [`crate::suffix::window`]): a draft call probes one structure with
+//! window-independent cost instead of walking one trie per epoch bucket,
+//! so the per-round speculation overhead the engine measures
+//! (`draft_time`) stays flat as windows grow.
 
 use std::collections::HashMap;
 

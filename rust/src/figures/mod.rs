@@ -14,6 +14,7 @@ pub mod fig04;
 pub mod fig05;
 pub mod fig06;
 pub mod fig07;
+#[cfg(feature = "pjrt")]
 pub mod fig08;
 pub mod fig09;
 pub mod fig10;
@@ -59,7 +60,10 @@ pub fn run(fig: u32, opts: &FigOpts) -> anyhow::Result<FigureOutput> {
         5 => Ok(fig05::run(opts)),
         6 => Ok(fig06::run(opts)),
         7 => Ok(fig07::run(opts)),
+        #[cfg(feature = "pjrt")]
         8 => fig08::run(opts),
+        #[cfg(not(feature = "pjrt"))]
+        8 => anyhow::bail!("figure 8 runs the real PJRT model; rebuild with the pjrt feature"),
         9 => Ok(fig09::run(opts)),
         10 => Ok(fig10::run(opts, "math_rl", "fig10")),
         11 => Ok(fig10::run(opts, "code_rl", "fig11")),

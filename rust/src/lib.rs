@@ -15,6 +15,7 @@ pub mod config;
 pub mod cost;
 pub mod model;
 pub mod rollout;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod telemetry;
 pub mod history;

@@ -15,6 +15,7 @@ use das::config::{preset, preset_names, DasConfig};
 use das::figures::{emit, known_figures, run as run_figure, FigOpts};
 use das::model::sim::{SimModel, SimModelConfig};
 use das::rl::Trainer;
+#[cfg(feature = "pjrt")]
 use das::runtime::PjrtModel;
 use das::telemetry::Table;
 use das::util::argparse::Command;
@@ -156,6 +157,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
                 log_step(&mut table, &s);
             }
         }
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let mut model = PjrtModel::load(Path::new(&cfg.model.artifacts_dir))?;
             for step in 0..cfg.train.steps {
@@ -163,6 +165,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
                 log_step(&mut table, &s);
             }
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!("das was built without the pjrt feature; rebuild with --features pjrt"),
         other => anyhow::bail!("unknown backend {other}"),
     }
     let out = PathBuf::from(args.get_or("out", "results"));
@@ -207,6 +211,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_calibrate(_argv: &[String]) -> Result<()> {
+    anyhow::bail!("das was built without the pjrt feature; rebuild with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_calibrate(argv: &[String]) -> Result<()> {
     let cmd = Command::new("das calibrate", "fit the latency model on PJRT")
         .opt("reps", "repetitions per length", Some("10"))

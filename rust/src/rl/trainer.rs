@@ -12,6 +12,7 @@ use crate::history::RolloutHistory;
 use crate::model::sim::SimModel;
 use crate::model::TargetModel;
 use crate::rollout::{GenJob, RolloutEngine, StepMetrics};
+#[cfg(feature = "pjrt")]
 use crate::runtime::PjrtModel;
 use crate::tokens::{Epoch, Rollout};
 use crate::util::rng::Rng;
@@ -168,6 +169,7 @@ impl Trainer {
     }
 
     /// One full RL step on the REAL PJRT policy (true gradients).
+    #[cfg(feature = "pjrt")]
     pub fn step_pjrt(&mut self, model: &mut PjrtModel, step: u32) -> StepStats {
         let cursor_before = self.cursor;
         let idxs = self.select_problems();
@@ -243,6 +245,7 @@ impl Trainer {
         (0..steps).map(|s| self.step_sim(model, s as u32)).collect()
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn run_pjrt(&mut self, model: &mut PjrtModel, steps: usize) -> Vec<StepStats> {
         (0..steps).map(|s| self.step_pjrt(model, s as u32)).collect()
     }

@@ -85,13 +85,9 @@ impl RolloutEngine {
     pub fn new(cfg: &DasConfig, drafter: Box<dyn Drafter>) -> Self {
         let budget_policy =
             BudgetPolicy::parse(&cfg.spec.budget_policy).expect("validated budget policy");
-        // Length-class thresholds relative to the configured cap; refined
-        // online as real lengths arrive.
-        let t_long = (cfg.rollout.max_new_tokens / 4).max(2);
-        let t_short = (cfg.rollout.max_new_tokens / 16).max(1);
         RolloutEngine {
             drafter,
-            length_policy: LengthPolicy::new(t_short, t_long),
+            length_policy: LengthPolicy::from_das(cfg),
             acceptance: HashMap::new(),
             budget_policy,
             budget_short: cfg.spec.budget_short,
@@ -119,6 +115,13 @@ impl RolloutEngine {
 
     pub fn epoch(&self) -> Epoch {
         self.epoch
+    }
+
+    /// Predicted device cost of a job: samples × expected generation length
+    /// under the length policy's history. Coordinators use this to shard
+    /// jobs longest-predicted-first (LPT) instead of round-robin.
+    pub fn predict_job_cost(&self, job: &GenJob) -> f64 {
+        self.length_policy.job_cost(job.problem, job.samples)
     }
 
     fn class_budget(&self, class: LengthClass) -> usize {
@@ -501,6 +504,32 @@ mod tests {
         let total_tokens: u64 = rep.rollouts.iter().map(|r| r.tokens.len() as u64).sum();
         assert_eq!(total_tokens, mm.generated);
         assert_eq!(mm.eff_batch.len() as u64, mm.rounds);
+    }
+
+    #[test]
+    fn job_cost_prediction_follows_observed_lengths() {
+        let c = cfg(0.6, "none", "length_aware");
+        let mut e = engine(&c);
+        // Cold start: all problems predict the same cost.
+        let js = jobs(2, 2);
+        assert_eq!(e.predict_job_cost(&js[0]), e.predict_job_cost(&js[1]));
+        // Samples scale the prediction linearly.
+        let mut big = js[0].clone();
+        big.samples = 4;
+        assert!((e.predict_job_cost(&big) - 2.0 * e.predict_job_cost(&js[0])).abs() < 1e-9);
+        // After observing real lengths the prediction must differentiate:
+        // problem 0 runs long (120 >= t_long for the 128-token cap),
+        // problem 1 short — the long problem must predict strictly costlier.
+        for _ in 0..3 {
+            e.length_policy.observe(0, 120);
+            e.length_policy.observe(1, 3);
+        }
+        assert!(
+            e.predict_job_cost(&js[0]) > e.predict_job_cost(&js[1]),
+            "LPT key must follow observed lengths: long={} short={}",
+            e.predict_job_cost(&js[0]),
+            e.predict_job_cost(&js[1])
+        );
     }
 
     #[test]

@@ -1,30 +1,54 @@
 //! Data-parallel rollout workers (§3: "systems like VeRL and OpenRLHF
 //! favor data-parallel rollout workers to scale decoding throughput").
 //!
-//! A [`DataParallelRollout`] owns `n` worker replicas — each a policy
-//! replica plus its own [`RolloutEngine`] (drafter state is worker-local,
-//! exactly like per-actor suffix trees in the paper's deployment) — and
-//! shards each step's jobs across them. Workers run on OS threads; the
-//! step's *makespan* is the slowest worker's generation time, which is
+//! A [`DataParallelRollout`] owns `n` **persistent** worker replicas — each
+//! an OS thread holding a policy replica plus its own [`RolloutEngine`]
+//! (drafter state is worker-local, exactly like per-actor suffix trees in
+//! the paper's deployment). Threads and channels are created ONCE in
+//! [`DataParallelRollout::new`]; every `generate_step` just enqueues a shard
+//! per worker and collects reports, so per-step coordination cost is two
+//! channel hops instead of `n` thread spawns/joins. Epoch rolls and policy
+//! updates ride the same command queues, which keeps them ordered with
+//! respect to steps without any locking.
+//!
+//! The step's *makespan* is the slowest worker's generation time, which is
 //! precisely where the long-tail problem bites at the cluster level: one
-//! straggler worker holds up the learner. DAS shrinks per-worker tails, so
-//! it compresses the cross-worker makespan too (test below).
+//! straggler worker holds up the learner. Jobs are therefore sharded
+//! longest-predicted-first onto the least-loaded worker (LPT — the paper's
+//! own makespan argument, §3/Fig. 12, applied across workers) using the
+//! same length statistics that drive the speculation budget, instead of
+//! blind round-robin. DAS shrinks per-worker tails, so it compresses the
+//! cross-worker makespan too (test below).
 
-use std::thread;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::{self, JoinHandle};
 
 use super::engine::{GenJob, RolloutEngine, StepReport};
 use super::metrics::StepMetrics;
 use crate::config::DasConfig;
 use crate::model::sim::{SimModel, SimModelConfig};
-use crate::tokens::Rollout;
+use crate::spec::LengthPolicy;
+use crate::tokens::{Epoch, Rollout};
 
 pub struct DataParallelRollout {
-    workers: Vec<Worker>,
+    workers: Vec<WorkerHandle>,
+    /// Coordinator-side length statistics feeding the LPT sharder (fed by
+    /// every finished rollout; the same survival-statistics predictor the
+    /// engines use for speculation budgets).
+    predictor: LengthPolicy,
 }
 
-struct Worker {
-    model: SimModel,
-    engine: RolloutEngine,
+enum Command {
+    Step { jobs: Vec<GenJob>, step: u32 },
+    RollEpoch(Epoch),
+    PolicyUpdate(f64),
+    Shutdown,
+}
+
+struct WorkerHandle {
+    cmd_tx: Sender<Command>,
+    report_rx: Receiver<StepReport>,
+    thread: Option<JoinHandle<()>>,
 }
 
 /// Merged outcome of one data-parallel step.
@@ -38,10 +62,41 @@ pub struct ParallelStepReport {
     pub per_worker: Vec<StepMetrics>,
 }
 
+/// Longest-processing-time-first assignment: jobs (by predicted cost) are
+/// placed heaviest-first onto the currently least-loaded worker. Returns a
+/// worker index per job. Deterministic: cost ties keep submission order,
+/// load ties pick the lowest worker index.
+fn lpt_assignment(costs: &[f64], n_workers: usize) -> Vec<usize> {
+    let n = n_workers.max(1);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| {
+        costs[b]
+            .partial_cmp(&costs[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut assignment = vec![0usize; costs.len()];
+    let mut load = vec![0.0f64; n];
+    for job in order {
+        let mut best = 0usize;
+        for w in 1..n {
+            if load[w] < load[best] {
+                best = w;
+            }
+        }
+        assignment[job] = best;
+        // Floor at 1 so zero-cost predictions still spread across workers.
+        load[best] += costs[job].max(1.0);
+    }
+    assignment
+}
+
 impl DataParallelRollout {
-    /// Build `n_workers` replicas. Policy replicas share the seed (data
-    /// parallelism: same weights everywhere); engines get distinct request
-    /// id spaces via the config seed offset so RNG streams never collide.
+    /// Build `n_workers` replicas ONCE: each worker thread owns its policy
+    /// replica and engine for the lifetime of the pool. Policy replicas
+    /// share the seed (data parallelism: same weights everywhere); engines
+    /// get distinct request id spaces via the config seed offset so RNG
+    /// streams never collide.
     pub fn new(cfg: &DasConfig, n_workers: usize) -> Self {
         let workers = (0..n_workers.max(1))
             .map(|w| {
@@ -49,22 +104,56 @@ impl DataParallelRollout {
                 // Worker-local engine seed: shifts request RNG forks, not
                 // the policy (the sim replica keeps the shared seed).
                 wcfg.seed = cfg.seed ^ ((w as u64 + 1) << 32);
-                let model = SimModel::new(SimModelConfig::from_das(cfg));
-                let engine = RolloutEngine::new(&wcfg, crate::drafter::from_config(&wcfg));
-                Worker { model, engine }
+                let model_cfg = SimModelConfig::from_das(cfg);
+                let (cmd_tx, cmd_rx) = channel::<Command>();
+                let (report_tx, report_rx) = channel::<StepReport>();
+                let thread = thread::Builder::new()
+                    .name(format!("dp-worker-{w}"))
+                    .spawn(move || {
+                        let mut model = SimModel::new(model_cfg);
+                        let mut engine =
+                            RolloutEngine::new(&wcfg, crate::drafter::from_config(&wcfg));
+                        while let Ok(cmd) = cmd_rx.recv() {
+                            match cmd {
+                                Command::Step { jobs, step } => {
+                                    let report = engine.generate_step(&mut model, &jobs, step);
+                                    if report_tx.send(report).is_err() {
+                                        break;
+                                    }
+                                }
+                                Command::RollEpoch(e) => engine.roll_epoch(e),
+                                Command::PolicyUpdate(gain) => model.policy_update(gain),
+                                Command::Shutdown => break,
+                            }
+                        }
+                    })
+                    .expect("spawn rollout worker thread");
+                WorkerHandle {
+                    cmd_tx,
+                    report_rx,
+                    thread: Some(thread),
+                }
             })
             .collect();
-        DataParallelRollout { workers }
+        DataParallelRollout {
+            workers,
+            // Same thresholds as the worker engines, so the coordinator's
+            // LPT keys classify lengths exactly like the engines do.
+            predictor: LengthPolicy::from_das(cfg),
+        }
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
 
-    /// Advance every replica's epoch (window maintenance).
+    /// Advance every replica's epoch (window maintenance). Enqueued on the
+    /// command channels, so it is ordered with respect to steps.
     pub fn roll_epoch(&mut self, epoch: u32) {
-        for w in &mut self.workers {
-            w.engine.roll_epoch(epoch);
+        for w in &self.workers {
+            w.cmd_tx
+                .send(Command::RollEpoch(epoch))
+                .expect("worker alive");
         }
     }
 
@@ -72,29 +161,37 @@ impl DataParallelRollout {
     /// identical weights — the sim replicas share seed, so drift stays
     /// bit-identical across workers).
     pub fn policy_update(&mut self, gain: f64) {
-        for w in &mut self.workers {
-            w.model.policy_update(gain);
+        for w in &self.workers {
+            w.cmd_tx
+                .send(Command::PolicyUpdate(gain))
+                .expect("worker alive");
         }
     }
 
-    /// Shard `jobs` round-robin and run all workers concurrently.
+    /// Shard `jobs` longest-predicted-first and run all workers
+    /// concurrently on the persistent pool.
     pub fn generate_step(&mut self, jobs: &[GenJob], step: u32) -> ParallelStepReport {
         let n = self.workers.len();
+        let costs: Vec<f64> = jobs
+            .iter()
+            .map(|j| self.predictor.job_cost(j.problem, j.samples))
+            .collect();
+        let assignment = lpt_assignment(&costs, n);
         let mut shards: Vec<Vec<GenJob>> = vec![Vec::new(); n];
-        for (i, job) in jobs.iter().enumerate() {
-            shards[i % n].push(job.clone());
+        for (job, &w) in jobs.iter().zip(&assignment) {
+            shards[w].push(job.clone());
         }
-        let reports: Vec<StepReport> = thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .workers
-                .iter_mut()
-                .zip(shards)
-                .map(|(w, shard)| {
-                    scope.spawn(move || w.engine.generate_step(&mut w.model, &shard, step))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-        });
+        for (worker, shard) in self.workers.iter().zip(shards) {
+            worker
+                .cmd_tx
+                .send(Command::Step { jobs: shard, step })
+                .expect("worker alive");
+        }
+        let reports: Vec<StepReport> = self
+            .workers
+            .iter()
+            .map(|w| w.report_rx.recv().expect("worker panicked"))
+            .collect();
         let makespan = reports
             .iter()
             .map(|r| r.metrics.gen_time)
@@ -103,6 +200,10 @@ impl DataParallelRollout {
         let mut rollouts = Vec::new();
         let mut per_worker = Vec::new();
         for r in reports {
+            for roll in &r.rollouts {
+                // Feed the LPT predictor with every observed final length.
+                self.predictor.observe(roll.problem, roll.tokens.len());
+            }
             rollouts.extend(r.rollouts);
             per_worker.push(r.metrics);
         }
@@ -111,6 +212,19 @@ impl DataParallelRollout {
             makespan,
             total_device_time,
             per_worker,
+        }
+    }
+}
+
+impl Drop for DataParallelRollout {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd_tx.send(Command::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
         }
     }
 }
@@ -207,5 +321,55 @@ mod tests {
         let rep = dp.generate_step(&jobs(5), 0);
         assert_eq!(rep.rollouts.len(), 10);
         assert_eq!(rep.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn pool_survives_many_steps_and_maintenance() {
+        // Persistent workers: the same threads serve every step, with epoch
+        // rolls and policy updates ordered in between.
+        let mut dp = DataParallelRollout::new(&cfg("das"), 2);
+        for step in 0..4 {
+            let rep = dp.generate_step(&jobs(6), step);
+            assert_eq!(rep.rollouts.len(), 12, "step {step}");
+            dp.policy_update(1.0);
+            dp.roll_epoch(step + 1);
+        }
+        assert_eq!(dp.n_workers(), 2);
+    }
+
+    #[test]
+    fn lpt_beats_round_robin_makespan() {
+        // The scheduling argument in isolation: on a skewed cost vector,
+        // LPT's worst worker is no worse than round-robin's (and strictly
+        // better here).
+        let costs = [8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let n = 2;
+        let lpt = lpt_assignment(&costs, n);
+        let span = |assign: &dyn Fn(usize) -> usize| -> f64 {
+            let mut load = vec![0.0; n];
+            for (i, &c) in costs.iter().enumerate() {
+                load[assign(i)] += c;
+            }
+            load.iter().fold(0.0_f64, |a, &b| a.max(b))
+        };
+        let lpt_span = span(&|i| lpt[i]);
+        let rr_span = span(&|i| i % n);
+        assert!(lpt_span <= rr_span, "lpt={lpt_span} rr={rr_span}");
+        assert!((lpt_span - 18.0).abs() < 1e-12, "LPT makespan on this vector is 18");
+        assert!((rr_span - 20.0).abs() < 1e-12, "round-robin makespan is 20");
+    }
+
+    #[test]
+    fn lpt_spreads_equal_costs_evenly() {
+        // Cold start (no length history): every job predicts the same cost,
+        // and LPT must still balance counts like round-robin would.
+        let costs = vec![5.0; 10];
+        let assign = lpt_assignment(&costs, 4);
+        let mut per_worker = [0usize; 4];
+        for &w in &assign {
+            per_worker[w] += 1;
+        }
+        assert_eq!(per_worker.iter().max(), Some(&3));
+        assert_eq!(per_worker.iter().min(), Some(&2));
     }
 }

@@ -77,6 +77,17 @@ impl LengthPolicy {
         LengthPolicy::new(q(0.5).max(1), q(0.85).max(2))
     }
 
+    /// Thresholds derived from the configured generation cap (§4.2.3's
+    /// initialization; refined online as real lengths arrive): Long above
+    /// cap/4, Short below cap/16. Single source of truth shared by the
+    /// rollout engine and the data-parallel coordinator so both classify
+    /// lengths identically.
+    pub fn from_das(cfg: &crate::config::DasConfig) -> Self {
+        let t_long = (cfg.rollout.max_new_tokens / 4).max(2);
+        let t_short = (cfg.rollout.max_new_tokens / 16).max(1);
+        LengthPolicy::new(t_short, t_long)
+    }
+
     pub fn new(t_short: usize, t_long: usize) -> Self {
         LengthPolicy {
             t_short,
@@ -188,6 +199,24 @@ impl LengthPolicy {
             LengthClass::Medium => cfg.budget_medium,
             LengthClass::Long => cfg.budget_long,
         }
+    }
+
+    /// Predicted total generation length of a FRESH request of `problem`:
+    /// the expected length under its historical init class. This is the
+    /// per-job cost key the data-parallel coordinator uses for
+    /// longest-predicted-first (LPT) sharding — the paper's makespan
+    /// argument (§3) applied across workers instead of across requests.
+    pub fn expected_total(&self, problem: ProblemId) -> f64 {
+        let class = self.init_class(problem);
+        self.expected_remaining(problem, 0, class)
+    }
+
+    /// Predicted device cost of one generation job: samples × expected
+    /// total length. The single source of truth for LPT sharding keys
+    /// (used by both `RolloutEngine::predict_job_cost` and the
+    /// data-parallel coordinator).
+    pub fn job_cost(&self, problem: ProblemId, samples: usize) -> f64 {
+        self.expected_total(problem) * samples.max(1) as f64
     }
 
     /// Expected remaining length for a request in a class (used as `l_i` by
@@ -322,6 +351,21 @@ mod tests {
         // No data at all: falls back to threshold-derived guesses.
         let c = p.expected_remaining(77, 0, LengthClass::Medium);
         assert!(c > 0.0);
+    }
+
+    #[test]
+    fn expected_total_tracks_problem_history() {
+        let mut p = policy();
+        for _ in 0..10 {
+            p.observe(1, 800); // long problem
+        }
+        for _ in 0..10 {
+            p.observe(2, 20); // short problem
+        }
+        assert!(p.expected_total(1) > p.expected_total(2));
+        // Unseen problems fall back to the Medium-class prior.
+        let fresh = p.expected_total(777);
+        assert!(fresh > 0.0);
     }
 
     #[test]

@@ -4,10 +4,16 @@
 //!   (amortized O(1) appends, O(m) queries, retrieval drafting).
 //! * [`trie`] — depth-capped *counting* suffix trie: the production drafter
 //!   index with per-path occurrence counts for frequency-weighted drafts.
+//!   Flat node arena with inline sorted child storage (≤4 children in the
+//!   node, sorted-Vec spill above that) — no per-probe hashing.
 //! * [`array`] — suffix array + Kasai LCP: the static baseline the paper
 //!   compares against in Fig. 5 (updates = full rebuilds).
 //! * [`router`] — per-request prefix-trie router (§4.1.2).
-//! * [`window`] — sliding-window epoch buckets with age discounting (Fig. 7).
+//! * [`window`] — sliding-window index with age discounting (Fig. 7): one
+//!   fused epoch-tagged trie per shard (per-node count ring,
+//!   window-independent draft cost, O(1) whole-epoch eviction plus a
+//!   compaction sweep); per-epoch buckets only for the unbounded
+//!   `window_all` ablation.
 
 pub mod array;
 pub mod router;

@@ -1,33 +1,54 @@
 //! Sliding-window drafter index (§4.1.2 "Sliding window selection tree").
 //!
 //! Policy drift makes old rollouts less predictive (Fig. 2), so the drafter
-//! is built from a sliding window of recent trajectories. We implement the
-//! window as one counting suffix-trie *bucket per epoch*: inserts are
-//! append-only into the newest bucket (keeping the incremental-update cost
-//! profile of Fig. 5), and eviction drops whole stale buckets — true deletion
-//! without tree surgery. Queries probe buckets newest → oldest and pick the
-//! draft whose (age-discounted) match quality is best, which realizes the
-//! paper's "mild down-weighting of matches originating from older epochs".
+//! is built from a sliding window of recent trajectories. Historically this
+//! was one counting suffix-trie *bucket per epoch*, which made every draft
+//! call pay one full trie walk per bucket. The production representation is
+//! now a **fused epoch-tagged trie**: one arena trie per shard whose nodes
+//! carry a per-epoch count ring.
+//!
+//! # Fused layout (window ≥ 1)
+//!
+//! One [`ChildTable`]-arena trie holds the union of all live epochs' paths.
+//! Each node owns `window` count slots in a flat side array; an insert at
+//! epoch `e` bumps slot `e % window`, tagging it with `e` and lazily
+//! zeroing whatever stale epoch the slot held before (live epochs span
+//! fewer than `window` consecutive values, so live tags never collide).
+//! Rolling the epoch is O(1): slots whose tag falls out of the window are
+//! simply no longer live — whole-epoch eviction without touching a single
+//! node (a periodic compaction sweep reclaims the dead paths once they
+//! dominate the arena). A draft call probes ONE fused trie — a
+//! binary-searched deepest match (O(m log m) arena probes, m = max match
+//! length) plus a descending per-epoch depth scan of at most m short
+//! re-walks — instead of `window` independent O(m²) bucket walks over
+//! `window` separate hash-node tries. It reads each live epoch's match
+//! depth from the visited nodes' rings and ranks candidates by the same
+//! `match_len · age_discount^age` rule as before — identical drafts,
+//! window-independent cost.
+//!
+//! Eviction is by epoch *distance* (`newest − e < window`); with the
+//! consecutive epoch advances RL training produces this is exactly the old
+//! keep-the-last-`window`-buckets behavior (property-tested below against
+//! the bucket-ring reference).
+//!
+//! # Bucket layout (window = 0, "window_all" of Fig. 7)
+//!
+//! An unbounded window cannot use a fixed ring, so the ablation baseline
+//! keeps the per-epoch bucket list — and honestly pays one walk per bucket,
+//! which is precisely the cost the ablation measures.
+//!
+//! Late arrivals (a rollout from an already-sealed epoch) are indexed under
+//! their TRUE epoch so they age and evict with their cohort; arrivals from
+//! epochs already outside the window are dropped (Fig. 2's drift argument).
+//! The old implementation silently promoted them into the newest bucket,
+//! letting stale data outlive its window.
 
 use std::collections::VecDeque;
 
-use crate::suffix::trie::SuffixTrieIndex;
+use crate::suffix::trie::{ChildTable, SuffixTrieIndex};
 use crate::tokens::{Epoch, TokenId};
 
-#[derive(Debug, Clone)]
-pub struct WindowedIndex {
-    /// Newest bucket at the back.
-    buckets: VecDeque<(Epoch, SuffixTrieIndex)>,
-    /// Window size in epochs; 0 = unbounded ("window_all" in Fig. 7).
-    pub window: usize,
-    /// Trie depth cap (match_len + draft budget cap).
-    max_depth: usize,
-    /// Multiplicative per-epoch age discount applied to match length when
-    /// ranking candidate drafts across buckets.
-    pub age_discount: f64,
-}
-
-/// One candidate draft from one bucket.
+/// One candidate draft from one epoch.
 #[derive(Debug, Clone)]
 pub struct WindowDraft {
     pub tokens: Vec<TokenId>,
@@ -37,36 +58,504 @@ pub struct WindowDraft {
     pub score: f64,
 }
 
+#[derive(Debug, Clone)]
+pub struct WindowedIndex {
+    /// Window size in epochs; 0 = unbounded ("window_all" in Fig. 7).
+    pub window: usize,
+    /// Multiplicative per-epoch age discount applied to match length when
+    /// ranking candidate drafts across epochs.
+    pub age_discount: f64,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    /// window ≥ 1: one fused epoch-tagged trie.
+    Fused(FusedEpochTrie),
+    /// window == 0: legacy per-epoch buckets (unbounded history).
+    Buckets(BucketRing),
+}
+
 impl WindowedIndex {
     pub fn new(window: usize, max_depth: usize) -> Self {
+        let repr = if window == 0 {
+            Repr::Buckets(BucketRing::new(0, max_depth))
+        } else {
+            Repr::Fused(FusedEpochTrie::new(window, max_depth))
+        };
         WindowedIndex {
-            buckets: VecDeque::new(),
             window,
-            max_depth,
             age_discount: 0.85,
+            repr,
         }
     }
 
+    /// Number of distinct live epochs currently indexed.
     pub fn bucket_count(&self) -> usize {
-        self.buckets.len()
+        match &self.repr {
+            Repr::Fused(f) => f.live.len(),
+            Repr::Buckets(b) => b.buckets.len(),
+        }
     }
 
     pub fn tokens_indexed(&self) -> usize {
-        self.buckets.iter().map(|(_, b)| b.tokens_indexed()).sum()
+        match &self.repr {
+            Repr::Fused(f) => f.live_tokens.iter().sum(),
+            Repr::Buckets(b) => b.tokens_indexed(),
+        }
     }
 
     pub fn newest_epoch(&self) -> Option<Epoch> {
+        match &self.repr {
+            Repr::Fused(f) => f.newest,
+            Repr::Buckets(b) => b.newest_epoch(),
+        }
+    }
+
+    /// Insert a rollout produced at `epoch`. Epochs are expected to be
+    /// non-decreasing; a late arrival is indexed under its true epoch while
+    /// it is still inside the window and dropped once it is not.
+    pub fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        match &mut self.repr {
+            Repr::Fused(f) => f.insert_rollout(epoch, tokens),
+            Repr::Buckets(b) => b.insert(epoch, tokens),
+        }
+    }
+
+    /// Start a new (possibly empty) epoch and evict stale ones.
+    pub fn roll_epoch(&mut self, epoch: Epoch) {
+        match &mut self.repr {
+            Repr::Fused(f) => f.roll_epoch(epoch),
+            Repr::Buckets(b) => b.roll_epoch(epoch),
+        }
+    }
+
+    /// Best draft across the window. Candidates are ranked by
+    /// `match_len · age_discount^age` (ties → newer epoch), so a much longer
+    /// match in an older epoch can still win, but recency is preferred.
+    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Option<WindowDraft> {
+        if budget == 0 {
+            return None;
+        }
+        match &self.repr {
+            Repr::Fused(f) => f.draft(context, max_match, budget, self.age_discount),
+            Repr::Buckets(b) => b.draft(context, max_match, budget, self.age_discount),
+        }
+    }
+
+    /// Number of independent index structures a draft call probes (for
+    /// latency figures): the fused trie is a single structure regardless of
+    /// window size (its probe sequence is O(m log m), window-independent);
+    /// window_all pays one full walk per bucket.
+    pub fn probe_cost(&self) -> usize {
+        match &self.repr {
+            Repr::Fused(_) => 1,
+            Repr::Buckets(b) => b.buckets.len(),
+        }
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Fused(f) => f.approx_bytes(),
+            Repr::Buckets(b) => b.approx_bytes(),
+        }
+    }
+
+    /// Trie nodes currently allocated (diagnostics; bounded by compaction
+    /// on the fused path).
+    pub fn node_count(&self) -> usize {
+        match &self.repr {
+            Repr::Fused(f) => f.nodes.len(),
+            Repr::Buckets(b) => b.buckets.iter().map(|(_, t)| t.node_count()).sum(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused epoch-tagged trie (window ≥ 1)
+// ---------------------------------------------------------------------------
+
+/// One per-epoch count slot of a node's ring.
+#[derive(Debug, Clone, Copy, Default)]
+struct Slot {
+    epoch: Epoch,
+    count: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct RingNode {
+    children: ChildTable,
+}
+
+#[derive(Debug, Clone)]
+struct FusedEpochTrie {
+    nodes: Vec<RingNode>,
+    /// `window` slots per node: node `i`'s ring is
+    /// `slots[i*window .. (i+1)*window]`, slot index `epoch % window`.
+    slots: Vec<Slot>,
+    window: usize,
+    max_depth: usize,
+    newest: Option<Epoch>,
+    /// Distinct live epochs, ascending (≤ `window` entries).
+    live: VecDeque<Epoch>,
+    /// Tokens indexed per live epoch (parallel to `live`).
+    live_tokens: VecDeque<usize>,
+    /// Arena size right after the last compaction (growth trigger).
+    last_compact_nodes: usize,
+}
+
+/// Don't bother compacting tiny arenas.
+const COMPACT_MIN_NODES: usize = 1024;
+
+impl FusedEpochTrie {
+    fn new(window: usize, max_depth: usize) -> Self {
+        FusedEpochTrie {
+            nodes: vec![RingNode::default()],
+            slots: vec![Slot::default(); window],
+            window,
+            max_depth: max_depth.max(2),
+            newest: None,
+            live: VecDeque::new(),
+            live_tokens: VecDeque::new(),
+            last_compact_nodes: 1,
+        }
+    }
+
+    /// Is `epoch` inside the window relative to `newest`?
+    #[inline]
+    fn in_window(&self, newest: Epoch, epoch: Epoch) -> bool {
+        epoch <= newest && (newest - epoch) < self.window as Epoch
+    }
+
+    /// Advance `newest` to `epoch` (≥ current), registering it as live and
+    /// lazily dropping epochs that fell out of the window. O(window).
+    fn advance(&mut self, epoch: Epoch) {
+        if self.live.back() != Some(&epoch) {
+            self.live.push_back(epoch);
+            self.live_tokens.push_back(0);
+        }
+        self.newest = Some(epoch);
+        while let Some(&front) = self.live.front() {
+            if self.in_window(epoch, front) {
+                break;
+            }
+            self.live.pop_front();
+            self.live_tokens.pop_front();
+        }
+        // Epochs can advance via roll_epoch OR direct inserts at a newer
+        // epoch; reclaim dead paths on either path (the guard inside is two
+        // integer compares, so this is free on the hot path).
+        self.maybe_compact();
+    }
+
+    fn roll_epoch(&mut self, epoch: Epoch) {
+        if self.newest.map(|n| n < epoch).unwrap_or(true) {
+            self.advance(epoch);
+        }
+    }
+
+    /// Dead-epoch paths stay in the arena after (lazy) eviction; once the
+    /// arena has doubled since the last sweep, rebuild it from the
+    /// live-reachable nodes only. A node is live iff any ring slot holds a
+    /// live-epoch count, and liveness propagates to ancestors (counts are
+    /// bumped along whole paths), so one DFS that keeps live children
+    /// reconstructs exactly the reachable live trie. Counts are copied
+    /// verbatim, so drafts are unchanged. Amortized O(1) per insert;
+    /// bounds memory at ~2× the live working set instead of growing with
+    /// every epoch the run has ever seen (the old bucket ring freed whole
+    /// tries on eviction — this is the fused equivalent).
+    fn maybe_compact(&mut self) {
+        let n = self.nodes.len();
+        if n < COMPACT_MIN_NODES || n < self.last_compact_nodes.saturating_mul(2) {
+            return;
+        }
+        let Some(newest) = self.newest else { return };
+        let mut new_nodes: Vec<RingNode> = Vec::with_capacity(n / 2);
+        let mut new_slots: Vec<Slot> = Vec::with_capacity((n / 2) * self.window);
+        new_nodes.push(RingNode::default());
+        new_slots.extend_from_slice(&self.slots[0..self.window]);
+        let mut stack: Vec<(usize, usize)> = vec![(0, 0)]; // (old id, new id)
+        while let Some((old_id, new_id)) = stack.pop() {
+            let mut live_children: Vec<(TokenId, usize)> = Vec::new();
+            self.nodes[old_id].children.for_each(|tok, child| {
+                if self.live_at(child as usize, newest) {
+                    live_children.push((tok, child as usize));
+                }
+            });
+            for (tok, child_old) in live_children {
+                let child_new = new_nodes.len();
+                new_nodes.push(RingNode::default());
+                let base = child_old * self.window;
+                new_slots.extend_from_slice(&self.slots[base..base + self.window]);
+                new_nodes[new_id].children.insert(tok, child_new as u32);
+                stack.push((child_old, child_new));
+            }
+        }
+        self.nodes = new_nodes;
+        self.slots = new_slots;
+        self.last_compact_nodes = self.nodes.len().max(1);
+    }
+
+    fn insert_rollout(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        match self.newest {
+            Some(n) if epoch < n => {
+                // Late arrival from a sealed epoch: keep its TRUE epoch tag
+                // (it must age and evict with its cohort) or drop it when
+                // the cohort is already outside the window.
+                if !self.in_window(n, epoch) {
+                    return;
+                }
+                if !self.live.contains(&epoch) {
+                    let pos = self
+                        .live
+                        .iter()
+                        .position(|&e| e > epoch)
+                        .unwrap_or(self.live.len());
+                    self.live.insert(pos, epoch);
+                    self.live_tokens.insert(pos, 0);
+                }
+            }
+            _ => self.advance(epoch),
+        }
+        if let Some(pos) = self.live.iter().position(|&e| e == epoch) {
+            self.live_tokens[pos] += tokens.len();
+        }
+        self.insert_paths(epoch, tokens);
+    }
+
+    /// Bump node's epoch slot, lazily reclaiming a stale tag.
+    #[inline]
+    fn bump(&mut self, node: usize, epoch: Epoch) {
+        let s = &mut self.slots[node * self.window + (epoch as usize % self.window)];
+        if s.epoch != epoch {
+            s.epoch = epoch;
+            s.count = 0;
+        }
+        s.count += 1;
+    }
+
+    /// Count this node holds for `epoch` (0 if the slot was recycled).
+    #[inline]
+    fn epoch_count(&self, node: usize, epoch: Epoch) -> u64 {
+        let s = &self.slots[node * self.window + (epoch as usize % self.window)];
+        if s.epoch == epoch {
+            s.count
+        } else {
+            0
+        }
+    }
+
+    /// Does any live epoch pass through this node?
+    fn live_at(&self, node: usize, newest: Epoch) -> bool {
+        let base = node * self.window;
+        self.slots[base..base + self.window]
+            .iter()
+            .any(|s| s.count > 0 && self.in_window(newest, s.epoch))
+    }
+
+    fn insert_paths(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        for start in 0..tokens.len() {
+            let end = (start + self.max_depth).min(tokens.len());
+            let mut node = 0usize;
+            self.bump(0, epoch);
+            for &tok in &tokens[start..end] {
+                let next = match self.nodes[node].children.get(tok) {
+                    Some(n) => n as usize,
+                    None => {
+                        let id = self.nodes.len();
+                        self.nodes.push(RingNode::default());
+                        self.slots
+                            .extend(std::iter::repeat(Slot::default()).take(self.window));
+                        self.nodes[node].children.insert(tok, id as u32);
+                        id
+                    }
+                };
+                node = next;
+                self.bump(node, epoch);
+            }
+        }
+    }
+
+    fn locate(&self, pattern: &[TokenId]) -> Option<usize> {
+        let mut node = 0usize;
+        for &tok in pattern {
+            node = self.nodes[node].children.get(tok)? as usize;
+        }
+        Some(node)
+    }
+
+    fn draft(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+        age_discount: f64,
+    ) -> Option<WindowDraft> {
+        let newest = self.newest?;
+        let cap = context.len().min(max_match).min(self.max_depth);
+        if cap == 0 {
+            return None;
+        }
+        // 1. Deepest match over ANY live epoch — monotone in the suffix
+        //    length (see trie.rs), so binary search.
+        let probe = |take: usize| -> Option<usize> {
+            self.locate(&context[context.len() - take..])
+                .filter(|&n| self.live_at(n, newest))
+        };
+        probe(1)?;
+        let mut lo = 1usize;
+        let mut hi = cap;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if probe(mid).is_some() {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let take_max = lo;
+        // 2. Per-epoch match depths: scan take_max → 1, recording each live
+        //    epoch the first (deepest) time it appears at the matched node.
+        //    Per-epoch presence is monotone too, so first-seen = deepest.
+        let mut cands: Vec<(f64, Epoch, usize, usize)> = Vec::new(); // (score, epoch, mlen, node)
+        for take in (1..=take_max).rev() {
+            let Some(node) = self.locate(&context[context.len() - take..]) else {
+                continue;
+            };
+            let base = node * self.window;
+            for s in &self.slots[base..base + self.window] {
+                if s.count > 0
+                    && self.in_window(newest, s.epoch)
+                    && !cands.iter().any(|&(_, e, _, _)| e == s.epoch)
+                {
+                    let age = (newest - s.epoch) as f64;
+                    let score = take as f64 * age_discount.powf(age);
+                    cands.push((score, s.epoch, take, node));
+                }
+            }
+            if cands.len() == self.live.len() {
+                break; // every live epoch accounted for
+            }
+        }
+        // 3. Same ranking as the bucket ring: best score, ties to the newer
+        //    epoch, skipping candidates whose greedy walk yields nothing.
+        cands.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.1.cmp(&a.1))
+        });
+        for &(score, epoch, mlen, node) in &cands {
+            let (tokens, confidence) = self.draft_from(node, epoch, budget);
+            if !tokens.is_empty() {
+                return Some(WindowDraft {
+                    tokens,
+                    confidence,
+                    match_len: mlen,
+                    epoch,
+                    score,
+                });
+            }
+        }
+        None
+    }
+
+    /// Greedy most-frequent-child walk restricted to one epoch's counts.
+    fn draft_from(&self, start: usize, epoch: Epoch, budget: usize) -> (Vec<TokenId>, Vec<f32>) {
+        let mut node = start;
+        let mut draft = Vec::with_capacity(budget);
+        let mut conf = Vec::with_capacity(budget);
+        for _ in 0..budget {
+            let parent_count = self.epoch_count(node, epoch);
+            let mut best: Option<(TokenId, usize, u64)> = None;
+            self.nodes[node].children.for_each(|tok, child| {
+                let c = self.epoch_count(child as usize, epoch);
+                if c == 0 {
+                    return; // path belongs to another epoch
+                }
+                match best {
+                    None => best = Some((tok, child as usize, c)),
+                    Some((_, _, bc)) => {
+                        if c > bc {
+                            best = Some((tok, child as usize, c));
+                        }
+                    }
+                }
+            });
+            let Some((tok, child, c)) = best else { break };
+            draft.push(tok);
+            conf.push((c as f64 / parent_count.max(1) as f64) as f32);
+            node = child;
+        }
+        (draft, conf)
+    }
+
+    fn approx_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<RingNode>()
+            + self.slots.len() * std::mem::size_of::<Slot>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| n.children.heap_bytes())
+                .sum::<usize>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bucket ring (window = 0 production path; reference impl for the tests)
+// ---------------------------------------------------------------------------
+
+/// Per-epoch trie buckets — the pre-fusion representation. Kept as the
+/// `window_all` implementation (an unbounded window cannot ring-buffer) and
+/// as the executable specification the fused trie is property-tested
+/// against.
+#[derive(Debug, Clone)]
+struct BucketRing {
+    /// Ascending epoch order; newest at the back.
+    buckets: VecDeque<(Epoch, SuffixTrieIndex)>,
+    window: usize,
+    max_depth: usize,
+}
+
+impl BucketRing {
+    fn new(window: usize, max_depth: usize) -> Self {
+        BucketRing {
+            buckets: VecDeque::new(),
+            window,
+            max_depth,
+        }
+    }
+
+    fn tokens_indexed(&self) -> usize {
+        self.buckets.iter().map(|(_, b)| b.tokens_indexed()).sum()
+    }
+
+    fn newest_epoch(&self) -> Option<Epoch> {
         self.buckets.back().map(|(e, _)| *e)
     }
 
-    /// Insert a rollout produced at `epoch`. Epochs must be non-decreasing.
-    pub fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
-        match self.buckets.back_mut() {
-            Some((e, bucket)) if *e == epoch => bucket.insert(tokens),
-            Some((e, _)) if *e > epoch => {
-                // Late arrival from an already-sealed epoch: index it into
-                // the newest bucket rather than violating ordering.
-                self.buckets.back_mut().unwrap().1.insert(tokens);
+    fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        let newest = self.newest_epoch();
+        match newest {
+            Some(e) if e == epoch => {
+                self.buckets.back_mut().expect("nonempty").1.insert(tokens);
+            }
+            Some(e) if e > epoch => {
+                // Late arrival: index under its TRUE epoch (creating the
+                // bucket in order if needed); eviction below drops it
+                // immediately when it is already outside the window.
+                if let Some((_, b)) = self.buckets.iter_mut().find(|(e2, _)| *e2 == epoch) {
+                    b.insert(tokens);
+                } else {
+                    let mut bucket = SuffixTrieIndex::new(self.max_depth);
+                    bucket.insert(tokens);
+                    let pos = self
+                        .buckets
+                        .iter()
+                        .position(|(e2, _)| *e2 > epoch)
+                        .unwrap_or(self.buckets.len());
+                    self.buckets.insert(pos, (epoch, bucket));
+                    self.evict();
+                }
             }
             _ => {
                 let mut bucket = SuffixTrieIndex::new(self.max_depth);
@@ -77,8 +566,7 @@ impl WindowedIndex {
         }
     }
 
-    /// Start a new (possibly empty) epoch bucket and evict stale ones.
-    pub fn roll_epoch(&mut self, epoch: Epoch) {
+    fn roll_epoch(&mut self, epoch: Epoch) {
         if self.buckets.back().map(|(e, _)| *e < epoch).unwrap_or(true) {
             self.buckets
                 .push_back((epoch, SuffixTrieIndex::new(self.max_depth)));
@@ -95,13 +583,13 @@ impl WindowedIndex {
         }
     }
 
-    /// Best draft across the window. Candidates are ranked by
-    /// `match_len · age_discount^age` (ties → newer epoch), so a much longer
-    /// match in an older epoch can still win, but recency is preferred.
-    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Option<WindowDraft> {
-        if budget == 0 {
-            return None;
-        }
+    fn draft(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+        age_discount: f64,
+    ) -> Option<WindowDraft> {
         let newest = self.newest_epoch()?;
         let mut best: Option<WindowDraft> = None;
         for (epoch, bucket) in self.buckets.iter().rev() {
@@ -110,7 +598,7 @@ impl WindowedIndex {
                 continue;
             }
             let age = (newest - *epoch) as f64;
-            let score = mlen as f64 * self.age_discount.powf(age);
+            let score = mlen as f64 * age_discount.powf(age);
             let better = match &best {
                 None => true,
                 Some(b) => score > b.score,
@@ -131,13 +619,7 @@ impl WindowedIndex {
         best
     }
 
-    /// Total number of probe operations a draft costs (for latency figures:
-    /// window_all pays for every bucket).
-    pub fn probe_cost(&self) -> usize {
-        self.buckets.len()
-    }
-
-    pub fn approx_bytes(&self) -> usize {
+    fn approx_bytes(&self) -> usize {
         self.buckets.iter().map(|(_, b)| b.approx_bytes()).sum()
     }
 }
@@ -194,6 +676,22 @@ mod tests {
     }
 
     #[test]
+    fn fused_recency_and_long_match_ranking() {
+        // The two ranking behaviors above, on the fused (window ≥ 1) path.
+        let mut w = WindowedIndex::new(8, 16);
+        w.insert(0, &[1, 2, 30]);
+        w.insert(5, &[1, 2, 40]);
+        let d = w.draft(&[1, 2], 4, 1).unwrap();
+        assert_eq!((d.epoch, d.tokens.clone()), (5, vec![40]));
+
+        let mut w = WindowedIndex::new(8, 16);
+        w.insert(0, &[1, 2, 3, 4, 5, 6, 7, 8, 60, 61]);
+        w.insert(1, &[8, 50]);
+        let d = w.draft(&[1, 2, 3, 4, 5, 6, 7, 8], 8, 2).unwrap();
+        assert_eq!((d.epoch, d.tokens.clone()), (0, vec![60, 61]));
+    }
+
+    #[test]
     fn roll_epoch_creates_and_evicts() {
         let mut w = WindowedIndex::new(3, 8);
         for e in 0..10 {
@@ -204,12 +702,57 @@ mod tests {
     }
 
     #[test]
-    fn late_arrival_goes_to_newest_bucket() {
+    fn late_arrival_tagged_with_true_epoch() {
+        // Regression for the old promote-to-newest-bucket bug: a rollout
+        // from a sealed epoch must be indexed under ITS epoch, not smuggled
+        // into the newest one.
         let mut w = WindowedIndex::new(4, 8);
         w.insert(3, &[1, 2]);
-        w.insert(1, &[5, 6]); // late: epoch 1 after epoch 3 sealed
-        assert_eq!(w.bucket_count(), 1);
-        assert!(w.draft(&[5], 4, 1).is_some());
+        w.insert(1, &[5, 6]); // late: epoch 1 after epoch 3 opened
+        assert_eq!(w.bucket_count(), 2);
+        let d = w.draft(&[5], 4, 1).unwrap();
+        assert_eq!(d.epoch, 1);
+        assert_eq!(d.tokens, vec![6]);
+    }
+
+    #[test]
+    fn late_arrival_evicts_with_its_cohort() {
+        let mut w = WindowedIndex::new(2, 8);
+        w.insert(0, &[1, 2, 3]);
+        w.roll_epoch(1);
+        w.insert(1, &[4, 5, 6]);
+        // Late arrival from epoch 0: visible now...
+        w.insert(0, &[7, 8, 9]);
+        assert_eq!(w.draft(&[7, 8], 4, 1).unwrap().epoch, 0);
+        // ...but it ages with epoch 0 and evicts when the window moves on —
+        // the old bug kept it alive inside the newest bucket.
+        w.roll_epoch(2);
+        assert!(w.draft(&[7, 8], 4, 1).is_none());
+        // An arrival already outside the window is dropped outright.
+        w.insert(0, &[9, 9, 9]);
+        assert!(w.draft(&[9, 9], 4, 1).is_none());
+        assert_eq!(w.newest_epoch(), Some(2));
+    }
+
+    #[test]
+    fn fused_arena_compacts_after_eviction() {
+        // 300 epochs of disjoint content with window 2: without compaction
+        // the arena would retain every dead epoch's paths forever (~90k
+        // nodes here); the sweep keeps it near the live working set.
+        let mut w = WindowedIndex::new(2, 8);
+        for e in 0..300u32 {
+            w.roll_epoch(e);
+            let r: Vec<u32> = (0..40).map(|i| e * 100 + (i % 37)).collect();
+            w.insert(e, &r);
+        }
+        let newest_ctx = [299 * 100, 299 * 100 + 1];
+        assert!(w.draft(&newest_ctx, 4, 2).is_some(), "live content drafts");
+        assert!(w.draft(&[100, 101], 4, 2).is_none(), "dead content gone");
+        assert!(
+            w.node_count() < 5_000,
+            "dead epochs must be compacted away, arena holds {} nodes",
+            w.node_count()
+        );
     }
 
     #[test]
@@ -242,6 +785,71 @@ mod tests {
                 prop::require(d.match_len >= 1, "match_len >= 1")?;
                 prop::require(!d.tokens.is_empty(), "tokens nonempty")?;
                 prop::require(d.tokens.len() <= 4, "budget respected")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fused_matches_bucket_reference() {
+        // THE equivalence anchor: over random consecutive-epoch histories
+        // (rolls, inserts, late arrivals) the fused epoch-ring must produce
+        // byte-identical drafts to the per-epoch bucket ring.
+        prop::check(96, |g| {
+            let win = 1 + g.usize_in(0, 5);
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let mut fused = WindowedIndex::new(win, 10);
+            let mut reference = BucketRing::new(win, 10);
+            let mut epoch: Epoch = 0;
+            for _ in 0..g.usize_in(1, 30) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        epoch += 1;
+                        fused.roll_epoch(epoch);
+                        reference.roll_epoch(epoch);
+                    }
+                    1 if epoch > 0 => {
+                        // Late arrival from the previous epoch.
+                        let r = g.vec_u32_nonempty(alphabet, 20);
+                        fused.insert(epoch - 1, &r);
+                        reference.insert(epoch - 1, &r);
+                    }
+                    _ => {
+                        let r = g.vec_u32_nonempty(alphabet, 20);
+                        fused.insert(epoch, &r);
+                        reference.insert(epoch, &r);
+                    }
+                }
+                prop::require_eq(
+                    fused.bucket_count(),
+                    reference.buckets.len(),
+                    "live epoch count",
+                )?;
+                prop::require_eq(
+                    fused.tokens_indexed(),
+                    reference.tokens_indexed(),
+                    "tokens indexed",
+                )?;
+                let ctx = g.vec_u32_nonempty(alphabet, 12);
+                let budget = 1 + g.usize_in(0, 5);
+                let a = fused.draft(&ctx, 6, budget);
+                let b = reference.draft(&ctx, 6, budget, fused.age_discount);
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        prop::require_eq(x.tokens, y.tokens, "draft tokens")?;
+                        prop::require_eq(x.epoch, y.epoch, "draft epoch")?;
+                        prop::require_eq(x.match_len, y.match_len, "draft match_len")?;
+                        prop::require_eq(x.confidence, y.confidence, "draft confidence")?;
+                        prop::require((x.score - y.score).abs() < 1e-9, "draft score")?;
+                    }
+                    (a, b) => {
+                        prop::require(
+                            false,
+                            &format!("draft presence diverged: fused={:?} ref={:?}", a, b),
+                        )?;
+                    }
+                }
             }
             Ok(())
         });

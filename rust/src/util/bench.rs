@@ -4,8 +4,16 @@
 //! harness (`[[bench]] harness = false` in Cargo.toml). It does what we need
 //! from criterion: warmup, adaptive iteration counts targeting a fixed
 //! measurement window, and median/mean/p99 reporting with throughput.
+//!
+//! Results can be persisted as machine-readable JSON for the repo's perf
+//! trajectory (`BENCH_*.json` at the repo root): pass `--json <path>` to the
+//! bench binary (`cargo bench --bench suffix_ops -- --json BENCH_suffix.json`)
+//! or set the `BENCH_JSON` env var. See [`Bencher::finish`].
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 pub struct Bencher {
     pub warmup: Duration,
@@ -129,6 +137,77 @@ impl Bencher {
             println!("{}", format_result(r));
         }
     }
+
+    /// Serialize all results as JSON (schema `das-bench-v1`).
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_ns", Json::num(r.mean_ns)),
+                    ("median_ns", Json::num(r.median_ns)),
+                    ("p99_ns", Json::num(r.p99_ns)),
+                    (
+                        "elems",
+                        r.elems.map(|e| Json::num(e as f64)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("das-bench-v1")),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write results to `path` as JSON.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Print the summary and, when a JSON sink was requested via
+    /// `--json <path>` (or the `BENCH_JSON` env fallback), persist the
+    /// results there. `default_name` is used for a bare `--json` /
+    /// `BENCH_JSON=1`, or when `BENCH_JSON` names a directory.
+    pub fn finish(&self, default_name: &str) {
+        self.summary();
+        if let Some(path) = json_sink(default_name) {
+            match self.write_json(&path) {
+                Ok(()) => println!("bench json written to {}", path.display()),
+                Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+            }
+        }
+    }
+}
+
+/// Resolve the requested JSON output path for a bench run: the `--json
+/// <path>` CLI flag wins, the `BENCH_JSON` env var is the fallback, `None`
+/// means no JSON was requested.
+pub fn json_sink(default_name: &str) -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        if a == "--json" {
+            return Some(match args.get(i + 1) {
+                Some(p) if !p.starts_with("--") => PathBuf::from(p),
+                _ => PathBuf::from(default_name),
+            });
+        }
+    }
+    match std::env::var("BENCH_JSON") {
+        Ok(v) if v.is_empty() || v == "1" => Some(PathBuf::from(default_name)),
+        Ok(v) => {
+            let p = PathBuf::from(v);
+            if p.is_dir() {
+                Some(p.join(default_name))
+            } else {
+                Some(p)
+            }
+        }
+        Err(_) => None,
+    }
 }
 
 pub fn format_ns(ns: f64) -> String {
@@ -179,6 +258,29 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.median_ns <= r.p99_ns * 1.001);
         assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn json_roundtrips_results() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(8),
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench_throughput("t", 128, || {
+            acc = black_box(acc.wrapping_add(3));
+        });
+        let j = b.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("das-bench-v1"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("t"));
+        assert_eq!(results[0].get("elems").unwrap().as_f64(), Some(128.0));
+        assert!(results[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        // Serialized text parses back.
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! End-to-end integration over the REAL runtime: artifacts → PJRT → engine.
 //!
-//! These tests need `artifacts/` (run `make artifacts` first); they skip
-//! gracefully when the artifacts are missing so `cargo test` works in a
-//! fresh checkout.
+//! These tests need the `pjrt` cargo feature (default-on; requires the
+//! vendored `xla` crate — build with `--no-default-features` on machines
+//! without it) plus `artifacts/` (run `make artifacts` first); they skip
+//! gracefully when the artifacts are missing.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
