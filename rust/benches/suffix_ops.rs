@@ -45,6 +45,14 @@ fn main() {
             let epoch = (i * 8 / rolls.len()) as u32;
             win.insert(epoch, r);
         }
+        // Unbounded ablation (window_all): same fused trie, growable
+        // epoch-tag table instead of a bucket ring — draft cost scales with
+        // the live epoch span, not with one full walk per epoch.
+        let mut win_all = WindowedIndex::new(0, 24);
+        for (i, r) in rolls.iter().enumerate() {
+            let epoch = (i * 8 / rolls.len()) as u32;
+            win_all.insert(epoch, r);
+        }
 
         // Realistic queries: 8-token contexts cut from the corpus.
         let contexts: Vec<Vec<u32>> = (0..128)
@@ -77,6 +85,12 @@ fn main() {
             let c = &contexts[l % contexts.len()];
             l += 1;
             black_box(win.draft(c, 8, 16));
+        });
+        let mut la = 0;
+        b.bench(&format!("window_all_draft_{}tok", n_tokens), || {
+            let c = &contexts[la % contexts.len()];
+            la += 1;
+            black_box(win_all.draft(c, 8, 16));
         });
 
         // Update: index one fresh 100-token rollout. Tree/trie are

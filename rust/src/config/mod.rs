@@ -59,6 +59,12 @@ pub struct SpecConfig {
     /// History scope for the suffix drafter: "problem", "problem+request",
     /// "global+request" (Fig 6).
     pub scope: String,
+    /// Retrieval substrate behind the suffix drafter's history shards:
+    /// "window" (fused epoch-tagged arena trie — the production path),
+    /// "tree" (online Ukkonen tree, unbounded history), "array"
+    /// (rebuild-per-insert suffix array — the Fig. 5 strawman). Every
+    /// substrate is driven through the `DraftSource` trait.
+    pub substrate: String,
     /// Sliding window size in epochs; 0 = unbounded ("window_all", Fig 7).
     pub window: usize,
     /// Budget policy: "length_aware" (the paper §4.2.3), "optimal" (Eq. 9
@@ -197,6 +203,7 @@ impl DasConfig {
 
         read_field!(j, self, "spec", "drafter", string, self.spec.drafter);
         read_field!(j, self, "spec", "scope", string, self.spec.scope);
+        read_field!(j, self, "spec", "substrate", string, self.spec.substrate);
         read_field!(j, self, "spec", "window", usize, self.spec.window);
         read_field!(j, self, "spec", "budget_policy", string, self.spec.budget_policy);
         read_field!(j, self, "spec", "budget_short", usize, self.spec.budget_short);
@@ -271,6 +278,12 @@ impl DasConfig {
         ) {
             return e(format!("spec.scope invalid: '{}'", self.spec.scope));
         }
+        if !matches!(self.spec.substrate.as_str(), "window" | "tree" | "array") {
+            return e(format!(
+                "spec.substrate must be window|tree|array, got '{}'",
+                self.spec.substrate
+            ));
+        }
         if !matches!(
             self.spec.budget_policy.as_str(),
             "length_aware" | "optimal" | "uniform" | "unlimited"
@@ -322,6 +335,7 @@ impl DasConfig {
                 Json::obj(vec![
                     ("drafter", Json::str(&self.spec.drafter)),
                     ("scope", Json::str(&self.spec.scope)),
+                    ("substrate", Json::str(&self.spec.substrate)),
                     ("window", Json::num(self.spec.window as f64)),
                     ("budget_policy", Json::str(&self.spec.budget_policy)),
                     ("budget_short", Json::num(self.spec.budget_short as f64)),
@@ -394,6 +408,17 @@ mod tests {
         assert_eq!(cfg.model.backend, "pjrt");
         assert!(cfg.set("spec.drafter=bogus").is_err());
         assert!(cfg.set("no_equals_sign").is_err());
+    }
+
+    #[test]
+    fn substrate_parsed_and_validated() {
+        let cfg = DasConfig::from_json_text(r#"{"spec": {"substrate": "tree"}}"#).unwrap();
+        assert_eq!(cfg.spec.substrate, "tree");
+        let mut cfg = DasConfig::default();
+        assert_eq!(cfg.spec.substrate, "window");
+        cfg.set("spec.substrate=array").unwrap();
+        assert_eq!(cfg.spec.substrate, "array");
+        assert!(cfg.set("spec.substrate=bogus").is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
             spec: SpecConfig {
                 drafter: "das".into(),
                 scope: "problem".into(),
+                substrate: "window".into(),
                 window: 16,
                 budget_policy: "length_aware".into(),
                 budget_short: 0,
@@ -80,6 +81,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
             spec: SpecConfig {
                 drafter: "das".into(),
                 scope: "problem".into(),
+                substrate: "window".into(),
                 window: 16,
                 budget_policy: "length_aware".into(),
                 budget_short: 0,
@@ -126,6 +128,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
             spec: SpecConfig {
                 drafter: "das".into(),
                 scope: "problem".into(),
+                substrate: "window".into(),
                 window: 8,
                 budget_policy: "length_aware".into(),
                 budget_short: 0,

@@ -1,11 +1,27 @@
 //! Drafters — the proposal side of speculative decoding (§4.1).
 //!
+//! Two layers:
+//!
+//! * [`DraftSource`] — a retrieval *substrate*: draft-from-context,
+//!   absorb-rollout, epoch-roll. Implemented by every suffix structure in
+//!   the crate ([`crate::suffix::WindowedIndex`],
+//!   [`crate::suffix::SuffixTree`], [`crate::suffix::SuffixArrayIndex`],
+//!   [`crate::suffix::SuffixTrieIndex`]) and by the frozen
+//!   [`StaticNgramDrafter`]. The rollout engine's speculation path never
+//!   names a concrete substrate — everything downstream of the [`Drafter`]
+//!   routing layer flows through this trait, so swapping the fused
+//!   windowed trie for a Ukkonen tree or the rebuild-per-insert suffix
+//!   array (`spec.substrate`) is a config change, not a code path.
+//! * [`Drafter`] — the request/problem *routing* policy above the sources:
+//!   which shard to query, request-local state, scope rules.
+//!
+//! Drafters:
 //! * [`SuffixDrafter`] — the paper's adaptive nonparametric drafter:
-//!   per-problem (or global) sliding-window suffix indexes, optionally
-//!   combined with a request-local index ("+request" scopes of Fig. 6) and a
-//!   prefix-trie router.
-//! * [`StaticNgramDrafter`] — the frozen parametric baseline standing in for
-//!   EAGLE: calibrated once on epoch-0 rollouts, never updated, so its
+//!   per-problem (or global) sliding-window shards, optionally combined
+//!   with a request-local index ("+request" scopes of Fig. 6) and a
+//!   prefix-trie router; every shard is a `Box<dyn DraftSource>`.
+//! * [`StaticNgramDrafter`] — the frozen parametric baseline standing in
+//!   for EAGLE: calibrated once on epoch-0 rollouts, never updated, so its
 //!   acceptance stays flat while the policy drifts (Fig. 4).
 //! * [`NoneDrafter`] — the VeRL no-speculation baseline.
 
@@ -15,6 +31,7 @@ mod suffix_drafter;
 pub use static_ngram::StaticNgramDrafter;
 pub use suffix_drafter::{HistoryScope, SuffixDrafter};
 
+use crate::suffix::{SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
 /// A proposed draft block.
@@ -41,7 +58,152 @@ impl Draft {
     }
 }
 
-/// Common interface for all drafters.
+/// A retrieval substrate speculation can draw from: the §4.1 suffix
+/// structures behind one interface. A source knows nothing about requests,
+/// problems or scopes — that routing lives in [`Drafter`] impls above it.
+pub trait DraftSource: Send {
+    fn source_name(&self) -> &'static str;
+
+    /// Propose up to `budget` tokens continuing `context`, matching at most
+    /// `max_match` trailing context tokens against the index.
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft;
+
+    /// Absorb one rollout produced at `epoch`. Unwindowed substrates
+    /// (tree, array, plain trie) ignore the epoch: their history is
+    /// unbounded by construction.
+    fn absorb(&mut self, epoch: Epoch, tokens: &[TokenId]);
+
+    /// A new epoch started (window maintenance). Default: no-op.
+    fn on_epoch(&mut self, _epoch: Epoch) {}
+
+    /// Tokens currently indexed (diagnostics; the Fig. 6-right
+    /// "bigger index = slower" effect is real work here).
+    fn indexed_tokens(&self) -> usize;
+}
+
+/// The production substrate: fused epoch-tagged sliding-window trie.
+impl DraftSource for WindowedIndex {
+    fn source_name(&self) -> &'static str {
+        "window"
+    }
+
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        match self.draft(context, max_match, budget) {
+            Some(d) => Draft {
+                tokens: d.tokens,
+                confidence: d.confidence,
+                match_len: d.match_len,
+            },
+            None => Draft::empty(),
+        }
+    }
+
+    fn absorb(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        self.insert(epoch, tokens);
+    }
+
+    fn on_epoch(&mut self, epoch: Epoch) {
+        self.roll_epoch(epoch);
+    }
+
+    fn indexed_tokens(&self) -> usize {
+        self.tokens_indexed()
+    }
+}
+
+/// Ukkonen-tree substrate: exact retrieval drafting, unbounded history.
+/// Retrieval copies one stored continuation, so there is no frequency
+/// estimate — confidence is reported as 1.0 per token.
+impl DraftSource for SuffixTree {
+    fn source_name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        let (tokens, match_len) = self.draft_with_match(context, max_match, budget);
+        let confidence = vec![1.0; tokens.len()];
+        Draft {
+            tokens,
+            confidence,
+            match_len,
+        }
+    }
+
+    fn absorb(&mut self, _epoch: Epoch, tokens: &[TokenId]) {
+        self.insert(tokens);
+    }
+
+    fn indexed_tokens(&self) -> usize {
+        self.text_len()
+    }
+}
+
+/// Suffix-array substrate — the Fig. 5 strawman: queries are fine, but
+/// every absorb pays a FULL index rebuild (suffix arrays are static).
+impl DraftSource for SuffixArrayIndex {
+    fn source_name(&self) -> &'static str {
+        "array"
+    }
+
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        let (tokens, match_len) = self.draft_with_match(context, max_match, budget);
+        let confidence = vec![1.0; tokens.len()];
+        Draft {
+            tokens,
+            confidence,
+            match_len,
+        }
+    }
+
+    fn absorb(&mut self, _epoch: Epoch, tokens: &[TokenId]) {
+        self.insert(tokens);
+    }
+
+    fn indexed_tokens(&self) -> usize {
+        self.len_tokens()
+    }
+}
+
+/// Plain counting-trie substrate (also the request-local index of the
+/// "+request" scopes): frequency-weighted drafts, unbounded history.
+impl DraftSource for SuffixTrieIndex {
+    fn source_name(&self) -> &'static str {
+        "trie"
+    }
+
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        let (tokens, confidence, match_len) =
+            self.draft_weighted_with_match(context, max_match, budget);
+        Draft {
+            tokens,
+            confidence,
+            match_len,
+        }
+    }
+
+    fn absorb(&mut self, _epoch: Epoch, tokens: &[TokenId]) {
+        self.insert(tokens);
+    }
+
+    fn indexed_tokens(&self) -> usize {
+        self.tokens_indexed()
+    }
+}
+
+/// Build one history substrate per `spec.substrate`. `window`/`max_depth`
+/// parameterize the windowed substrate; the unwindowed alternatives (the
+/// Fig. 5 subjects) keep unbounded history by construction.
+pub fn source_from_substrate(substrate: &str, window: usize, max_depth: usize) -> Box<dyn DraftSource> {
+    match substrate {
+        "window" => Box::new(WindowedIndex::new(window, max_depth)),
+        "tree" => Box::new(SuffixTree::new()),
+        "array" => Box::new(SuffixArrayIndex::new()),
+        other => panic!("unknown substrate '{other}' (validate() should have caught this)"),
+    }
+}
+
+/// Common interface for all drafters (the routing layer above
+/// [`DraftSource`]).
 pub trait Drafter: Send {
     fn name(&self) -> &'static str;
 
@@ -119,5 +281,44 @@ mod tests {
         assert_eq!(from_config(&cfg).name(), "static-ngram");
         cfg.spec.drafter = "none".into();
         assert_eq!(from_config(&cfg).name(), "none");
+    }
+
+    #[test]
+    fn all_sources_share_the_interface() {
+        // Same corpus through every substrate: all must retrieve the seen
+        // continuation with a consistent match_len, via the trait alone.
+        let corpus: &[u32] = &[1, 2, 3, 4, 5];
+        let mut sources: Vec<Box<dyn DraftSource>> = vec![
+            source_from_substrate("window", 4, 16),
+            source_from_substrate("tree", 4, 16),
+            source_from_substrate("array", 4, 16),
+            Box::new(crate::suffix::SuffixTrieIndex::new(16)),
+        ];
+        for s in &mut sources {
+            s.absorb(0, corpus);
+            let d = s.draft_from(&[2, 3], 8, 2);
+            assert_eq!(d.tokens, vec![4, 5], "substrate {}", s.source_name());
+            assert_eq!(d.match_len, 2, "substrate {}", s.source_name());
+            assert_eq!(d.confidence.len(), 2, "substrate {}", s.source_name());
+            assert!(s.indexed_tokens() >= corpus.len(), "substrate {}", s.source_name());
+            let miss = s.draft_from(&[9, 9], 8, 2);
+            assert!(miss.is_empty(), "substrate {}", s.source_name());
+            s.on_epoch(1); // must be accepted by every substrate
+        }
+    }
+
+    #[test]
+    fn windowed_source_evicts_via_trait_epochs() {
+        let mut s = source_from_substrate("window", 2, 16);
+        s.absorb(0, &[1, 2, 3]);
+        s.on_epoch(1);
+        s.on_epoch(2);
+        assert!(s.draft_from(&[1, 2], 8, 2).is_empty(), "windowed source forgets");
+        // The unwindowed tree keeps everything under the same driving.
+        let mut t = source_from_substrate("tree", 2, 16);
+        t.absorb(0, &[1, 2, 3]);
+        t.on_epoch(1);
+        t.on_epoch(2);
+        assert_eq!(t.draft_from(&[1, 2], 8, 2).tokens, vec![3]);
     }
 }

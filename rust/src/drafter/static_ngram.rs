@@ -10,8 +10,12 @@
 //! index machinery as the adaptive drafter (the arena [`SuffixTrieIndex`])
 //! isolates the variable that matters — *whether the drafter tracks the
 //! policy* — from incidental representation differences.
+//!
+//! The freeze logic lives in the [`DraftSource`] impl (absorb-rollout +
+//! epoch-roll), so this drafter slots into the same substrate interface as
+//! every suffix structure; the [`Drafter`] impl is pure delegation.
 
-use super::{Draft, Drafter};
+use super::{Draft, DraftSource, Drafter};
 use crate::suffix::trie::SuffixTrieIndex;
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
@@ -47,6 +51,50 @@ impl StaticNgramDrafter {
     }
 }
 
+impl DraftSource for StaticNgramDrafter {
+    fn source_name(&self) -> &'static str {
+        "static-ngram"
+    }
+
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        let (tokens, confidence, match_len) =
+            self.index
+                .draft_weighted_with_match(context, max_match.min(self.order), budget);
+        Draft {
+            tokens,
+            confidence,
+            match_len,
+        }
+    }
+
+    fn absorb(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        // Calibration phase only: absorb the first epoch, then freeze.
+        if self.frozen {
+            return;
+        }
+        match self.train_epoch {
+            None => {
+                self.train_epoch = Some(epoch);
+                self.index.insert(tokens);
+            }
+            Some(e) if epoch == e => self.index.insert(tokens),
+            Some(_) => self.frozen = true,
+        }
+    }
+
+    fn on_epoch(&mut self, epoch: Epoch) {
+        if let Some(e) = self.train_epoch {
+            if epoch > e {
+                self.frozen = true;
+            }
+        }
+    }
+
+    fn indexed_tokens(&self) -> usize {
+        self.index.tokens_indexed()
+    }
+}
+
 impl Drafter for StaticNgramDrafter {
     fn name(&self) -> &'static str {
         "static-ngram"
@@ -62,36 +110,15 @@ impl Drafter for StaticNgramDrafter {
         if budget == 0 || context.is_empty() {
             return Draft::empty();
         }
-        let (tokens, confidence) = self.index.draft_weighted(context, self.order, budget);
-        let match_len = self.index.match_len(context, self.order);
-        Draft {
-            tokens,
-            confidence,
-            match_len,
-        }
+        self.draft_from(context, self.order, budget)
     }
 
     fn observe_rollout(&mut self, rollout: &Rollout) {
-        // Calibration phase only: absorb the first epoch, then freeze.
-        if self.frozen {
-            return;
-        }
-        match self.train_epoch {
-            None => {
-                self.train_epoch = Some(rollout.epoch);
-                self.index.insert(&rollout.tokens);
-            }
-            Some(e) if rollout.epoch == e => self.index.insert(&rollout.tokens),
-            Some(_) => self.frozen = true,
-        }
+        self.absorb(rollout.epoch, &rollout.tokens);
     }
 
     fn roll_epoch(&mut self, epoch: Epoch) {
-        if let Some(e) = self.train_epoch {
-            if epoch > e {
-                self.frozen = true;
-            }
-        }
+        self.on_epoch(epoch);
     }
 }
 
@@ -113,7 +140,7 @@ mod tests {
     fn drafts_from_calibration_corpus() {
         let mut d = StaticNgramDrafter::new(4);
         d.train(&[vec![1, 2, 3, 4, 5]]);
-        let draft = d.draft(0, 0, &[2, 3], 2);
+        let draft = Drafter::draft(&mut d, 0, 0, &[2, 3], 2);
         assert_eq!(draft.tokens, vec![4, 5]);
     }
 
@@ -122,13 +149,13 @@ mod tests {
         let mut d = StaticNgramDrafter::new(4);
         d.observe_rollout(&rollout(0, vec![1, 2, 3]));
         assert!(!d.is_frozen());
-        d.roll_epoch(1);
+        Drafter::roll_epoch(&mut d, 1);
         assert!(d.is_frozen());
         // Later rollouts are ignored — the drafter is stale by design.
         d.observe_rollout(&rollout(1, vec![7, 8, 9]));
-        assert!(d.draft(0, 0, &[7, 8], 1).is_empty());
+        assert!(Drafter::draft(&mut d, 0, 0, &[7, 8], 1).is_empty());
         // Epoch-0 patterns still work.
-        assert_eq!(d.draft(0, 0, &[1, 2], 1).tokens, vec![3]);
+        assert_eq!(Drafter::draft(&mut d, 0, 0, &[1, 2], 1).tokens, vec![3]);
     }
 
     #[test]
@@ -137,9 +164,21 @@ mod tests {
         // frozen drafter keeps proposing the old ones.
         let mut d = StaticNgramDrafter::new(4);
         d.observe_rollout(&rollout(0, vec![1, 2, 3, 4]));
-        d.roll_epoch(5);
+        Drafter::roll_epoch(&mut d, 5);
         // New policy would continue [1,2] with 30 — the static drafter
         // still proposes 3.
-        assert_eq!(d.draft(0, 0, &[1, 2], 1).tokens, vec![3]);
+        assert_eq!(Drafter::draft(&mut d, 0, 0, &[1, 2], 1).tokens, vec![3]);
+    }
+
+    #[test]
+    fn works_as_a_plain_draft_source() {
+        let mut d = StaticNgramDrafter::new(4);
+        d.absorb(0, &[1, 2, 3, 4]);
+        assert_eq!(d.draft_from(&[1, 2], 4, 2).tokens, vec![3, 4]);
+        assert_eq!(d.indexed_tokens(), 4);
+        d.on_epoch(1);
+        assert!(d.is_frozen());
+        d.absorb(1, &[7, 8]); // ignored once frozen
+        assert!(d.draft_from(&[7], 4, 1).is_empty());
     }
 }

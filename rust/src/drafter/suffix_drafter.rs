@@ -1,32 +1,32 @@
 //! The DAS adaptive nonparametric drafter (§4.1.2).
 //!
 //! History scoping (Fig. 6):
-//! * `Problem` — one sliding-window suffix index per problem (the paper's
-//!   default: per-problem patterns transfer poorly across problems, and
-//!   small shards are cheap to query).
-//! * `ProblemRequest` — per-problem index PLUS a request-local index over
+//! * `Problem` — one history shard per problem (the paper's default:
+//!   per-problem patterns transfer poorly across problems, and small
+//!   shards are cheap to query).
+//! * `ProblemRequest` — per-problem shard PLUS a request-local index over
 //!   the tokens generated so far in the current request (captures
 //!   self-repetition; higher acceptance, more query cost).
-//! * `GlobalRequest` — one big global index plus the request-local index
+//! * `GlobalRequest` — one big global shard plus the request-local index
 //!   (the strawman that is slower due to the single large tree).
 //!
 //! An optional prefix-trie router (§4.1.2 "per-request suffix trees")
 //! routes the decode prefix to the most similar prior generation's shard
 //! before querying.
 //!
-//! Each windowed shard is a fused epoch-tagged arena trie (see
-//! [`crate::suffix::window`]): a draft call probes one structure with
-//! window-independent cost instead of walking one trie per epoch bucket,
-//! so the per-round speculation overhead the engine measures
-//! (`draft_time`) stays flat as windows grow.
+//! This drafter is the routing layer only: every shard (and the
+//! request-local index) is a `Box<dyn DraftSource>` — the substrate behind
+//! speculation is chosen by `spec.substrate` ("window" = the fused
+//! epoch-tagged arena trie, "tree" = Ukkonen, "array" = rebuild-per-insert
+//! suffix array) and nothing here names a concrete structure. Scope rules,
+//! minimum-match thresholds and router fallbacks apply identically to all
+//! substrates.
 
 use std::collections::HashMap;
 
-use super::{Draft, Drafter};
+use super::{source_from_substrate, Draft, DraftSource, Drafter};
 use crate::config::SpecConfig;
-use crate::suffix::trie::SuffixTrieIndex;
-use crate::suffix::window::WindowedIndex;
-use crate::suffix::PrefixRouter;
+use crate::suffix::{PrefixRouter, SuffixTrieIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,12 +53,16 @@ impl HistoryScope {
 
 pub struct SuffixDrafter {
     scope: HistoryScope,
-    /// Per-problem windowed indexes (Problem / ProblemRequest scopes).
-    shards: HashMap<ProblemId, WindowedIndex>,
-    /// Single global index (GlobalRequest scope).
-    global: WindowedIndex,
-    /// Request-local indexes over the tokens generated so far.
-    request_local: HashMap<RequestId, SuffixTrieIndex>,
+    /// Substrate selector for history shards (`spec.substrate`).
+    substrate: String,
+    /// Per-problem history shards (Problem / ProblemRequest scopes).
+    shards: HashMap<ProblemId, Box<dyn DraftSource>>,
+    /// Single global shard (GlobalRequest scope).
+    global: Box<dyn DraftSource>,
+    /// Request-local indexes over the tokens generated so far (always a
+    /// counting trie: self-repetition wants frequency weighting and dies
+    /// with the request, so windowing is moot).
+    request_local: HashMap<RequestId, Box<dyn DraftSource>>,
     /// Optional prefix router over prior generations of each problem.
     router: Option<PrefixRouter>,
     window: usize,
@@ -74,12 +78,30 @@ pub struct SuffixDrafter {
 }
 
 impl SuffixDrafter {
-    pub fn new(scope: HistoryScope, window: usize, match_len: usize, budget_cap: usize, use_router: bool) -> Self {
+    pub fn new(
+        scope: HistoryScope,
+        window: usize,
+        match_len: usize,
+        budget_cap: usize,
+        use_router: bool,
+    ) -> Self {
+        Self::with_substrate(scope, "window", window, match_len, budget_cap, use_router)
+    }
+
+    pub fn with_substrate(
+        scope: HistoryScope,
+        substrate: &str,
+        window: usize,
+        match_len: usize,
+        budget_cap: usize,
+        use_router: bool,
+    ) -> Self {
         let max_depth = match_len + budget_cap.max(8);
         SuffixDrafter {
             scope,
+            substrate: substrate.to_string(),
             shards: HashMap::new(),
-            global: WindowedIndex::new(window, max_depth),
+            global: source_from_substrate(substrate, window, max_depth),
             request_local: HashMap::new(),
             router: if use_router {
                 Some(PrefixRouter::new(match_len.max(8)))
@@ -99,39 +121,53 @@ impl SuffixDrafter {
 
     pub fn from_config(cfg: &SpecConfig) -> Self {
         let scope = HistoryScope::parse(&cfg.scope).expect("validated scope");
-        SuffixDrafter::new(scope, cfg.window, cfg.match_len, cfg.budget_cap, cfg.prefix_router)
+        SuffixDrafter::with_substrate(
+            scope,
+            &cfg.substrate,
+            cfg.window,
+            cfg.match_len,
+            cfg.budget_cap,
+            cfg.prefix_router,
+        )
     }
 
     pub fn scope(&self) -> HistoryScope {
         self.scope
     }
 
+    /// Name of the substrate backing history shards.
+    pub fn substrate(&self) -> &str {
+        &self.substrate
+    }
+
+    fn new_shard(&self) -> Box<dyn DraftSource> {
+        source_from_substrate(&self.substrate, self.window, self.max_depth)
+    }
+
     /// Total tokens currently indexed across history shards (diagnostics;
     /// Fig. 6-right's "bigger index = slower" effect is real work here).
     pub fn indexed_tokens(&self) -> usize {
         match self.scope {
-            HistoryScope::GlobalRequest => self.global.tokens_indexed(),
-            _ => self.shards.values().map(|w| w.tokens_indexed()).sum(),
+            HistoryScope::GlobalRequest => self.global.indexed_tokens(),
+            _ => self.shards.values().map(|w| w.indexed_tokens()).sum(),
         }
     }
 
     fn history_draft(&self, problem: ProblemId, context: &[TokenId], budget: usize) -> Draft {
-        let index = match self.scope {
-            HistoryScope::GlobalRequest => Some(&self.global),
-            _ => self.shards.get(&problem),
+        let source: Option<&dyn DraftSource> = match self.scope {
+            HistoryScope::GlobalRequest => Some(&*self.global),
+            _ => self.shards.get(&problem).map(|s| &**s),
         };
-        let Some(index) = index else { return Draft::empty() };
-        match index.draft(context, self.match_len, budget) {
-            // Require a minimum match depth: a 1-token suffix match is
-            // usually a coincidental token collision somewhere in history,
-            // and drafting from it wastes verification budget (the same
-            // reason SuffixDecoding thresholds its pattern-match scores).
-            Some(d) if d.match_len >= self.min_match => Draft {
-                tokens: d.tokens,
-                confidence: d.confidence,
-                match_len: d.match_len,
-            },
-            _ => Draft::empty(),
+        let Some(source) = source else { return Draft::empty() };
+        let d = source.draft_from(context, self.match_len, budget);
+        // Require a minimum match depth: a 1-token suffix match is usually
+        // a coincidental token collision somewhere in history, and drafting
+        // from it wastes verification budget (the same reason
+        // SuffixDecoding thresholds its pattern-match scores).
+        if !d.is_empty() && d.match_len >= self.min_match {
+            d
+        } else {
+            Draft::empty()
         }
     }
 }
@@ -155,16 +191,11 @@ impl Drafter for SuffixDrafter {
         // strongest signal when present (loops, repeated derivation steps).
         if self.scope.uses_request_local() {
             if let Some(local) = self.request_local.get(&request) {
-                let (tokens, confidence) = local.draft_weighted(context, self.match_len, budget);
+                let d = local.draft_from(context, self.match_len, budget);
                 // Only trust local matches that are reasonably deep.
-                let mlen = local.match_len(context, self.match_len);
-                if !tokens.is_empty() && mlen >= 3.min(self.match_len) {
+                if !d.is_empty() && d.match_len >= 3.min(self.match_len) {
                     self.local_hits += 1;
-                    return Draft {
-                        tokens,
-                        confidence,
-                        match_len: mlen,
-                    };
+                    return d;
                 }
             }
         }
@@ -201,11 +232,13 @@ impl Drafter for SuffixDrafter {
         }
         // Request-local index: re-index the request's committed tokens.
         // Cheap because requests are bounded and the trie depth is capped.
+        let max_depth = self.max_depth;
+        let epoch = self.epoch;
         let entry = self
             .request_local
             .entry(request)
-            .or_insert_with(|| SuffixTrieIndex::new(self.max_depth));
-        entry.insert(new_tokens);
+            .or_insert_with(|| Box::new(SuffixTrieIndex::new(max_depth)) as Box<dyn DraftSource>);
+        entry.absorb(epoch, new_tokens);
     }
 
     fn end_request(&mut self, request: RequestId) {
@@ -217,12 +250,16 @@ impl Drafter for SuffixDrafter {
             return;
         }
         match self.scope {
-            HistoryScope::GlobalRequest => self.global.insert(rollout.epoch, &rollout.tokens),
+            HistoryScope::GlobalRequest => self.global.absorb(rollout.epoch, &rollout.tokens),
             _ => {
+                if !self.shards.contains_key(&rollout.problem) {
+                    let shard = self.new_shard();
+                    self.shards.insert(rollout.problem, shard);
+                }
                 self.shards
-                    .entry(rollout.problem)
-                    .or_insert_with(|| WindowedIndex::new(self.window, self.max_depth))
-                    .insert(rollout.epoch, &rollout.tokens);
+                    .get_mut(&rollout.problem)
+                    .expect("just inserted")
+                    .absorb(rollout.epoch, &rollout.tokens);
             }
         }
         if let Some(router) = &mut self.router {
@@ -232,9 +269,9 @@ impl Drafter for SuffixDrafter {
 
     fn roll_epoch(&mut self, epoch: Epoch) {
         self.epoch = epoch;
-        self.global.roll_epoch(epoch);
+        self.global.on_epoch(epoch);
         for shard in self.shards.values_mut() {
-            shard.roll_epoch(epoch);
+            shard.on_epoch(epoch);
         }
     }
 }
@@ -334,5 +371,30 @@ mod tests {
         let draft = d.draft(5, 1, &[1, 2], 4);
         // Recent continuation (30,40,...) outvotes the stale one (3,4,...).
         assert_eq!(draft.tokens[0], 30);
+    }
+
+    #[test]
+    fn alternative_substrates_draft_through_same_routing() {
+        // Fig. 5's alternatives behind the same drafter: scope rules and
+        // min-match thresholds apply regardless of the substrate.
+        for substrate in ["tree", "array"] {
+            let mut d = SuffixDrafter::with_substrate(
+                HistoryScope::Problem,
+                substrate,
+                8,
+                8,
+                16,
+                false,
+            );
+            assert_eq!(d.substrate(), substrate);
+            d.observe_rollout(&rollout(1, 0, vec![1, 2, 3, 4, 5]));
+            let draft = d.draft(100, 1, &[1, 2], 3);
+            assert_eq!(draft.tokens, vec![3, 4, 5], "substrate {substrate}");
+            assert!(draft.match_len >= 2, "substrate {substrate}");
+            // Per-problem isolation holds for every substrate.
+            assert!(d.draft(101, 2, &[1, 2], 3).is_empty(), "substrate {substrate}");
+            // A 1-token coincidental match is below min_match: rejected.
+            assert!(d.draft(102, 1, &[9, 2], 3).is_empty(), "substrate {substrate}");
+        }
     }
 }

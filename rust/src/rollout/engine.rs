@@ -11,7 +11,16 @@
 //!   4. exact speculative sampling commits an accepted prefix + one
 //!      correction/bonus token per request — losslessness is enforced here;
 //!   5. finished requests retire, the batcher refills slots, the drafter
-//!      and length statistics absorb the new tokens.
+//!      and length statistics absorb the new tokens (final length AND
+//!      speculation outcome — both halves of the LPT cost key).
+//!
+//! The engine drives speculation only through traits: [`Drafter`] routes a
+//! request to a history shard, and every shard is a
+//! [`crate::drafter::DraftSource`] — the engine never names the substrate
+//! (fused windowed trie, Ukkonen tree, suffix array) behind a draft. The
+//! losslessness guarantee of step 4 is exactly what makes the substrate a
+//! pure perf knob: at temperature 0 the committed tokens are bit-identical
+//! for EVERY substrate, speculating or not (tested below).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -61,6 +70,10 @@ pub struct GenJob {
 pub struct StepReport {
     pub rollouts: Vec<Rollout>,
     pub metrics: StepMetrics,
+    /// Per finished request: (problem, verification rounds, accepted draft
+    /// tokens). Feeds acceptance-aware LPT cost prediction in coordinators
+    /// that aggregate many engines (`DataParallelRollout`).
+    pub accept_obs: Vec<(ProblemId, u64, u64)>,
 }
 
 pub struct RolloutEngine {
@@ -217,11 +230,12 @@ impl RolloutEngine {
         let eos = model.eos();
         let latency = model.latency_model();
         let mut rollouts = Vec::new();
+        let mut accept_obs = Vec::new();
 
         loop {
             let done = batcher.recycle();
             for req in &done {
-                self.finish_request(req, step, &mut rollouts, &mut metrics);
+                self.finish_request(req, step, &mut rollouts, &mut metrics, &mut accept_obs);
             }
             batcher.archive(done);
             if batcher.effective_batch() == 0 {
@@ -313,7 +327,11 @@ impl RolloutEngine {
         metrics.wall_time = wall_start.elapsed().as_secs_f64();
         // All passes this engine saw belong to this step's rounds.
         debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
-        StepReport { rollouts, metrics }
+        StepReport {
+            rollouts,
+            metrics,
+            accept_obs,
+        }
     }
 
     fn finish_request(
@@ -322,10 +340,18 @@ impl RolloutEngine {
         step: u32,
         rollouts: &mut Vec<Rollout>,
         metrics: &mut StepMetrics,
+        accept_obs: &mut Vec<(ProblemId, u64, u64)>,
     ) {
         metrics.completed += 1;
         self.drafter.end_request(req.id);
         self.length_policy.observe(req.problem, req.gen_len());
+        // Both halves of the LPT cost key: final length above, speculation
+        // outcome here (well-speculating problems cost fewer forwards per
+        // token). Also exported so the data-parallel coordinator's
+        // predictor sees the same signal.
+        self.length_policy
+            .observe_acceptance(req.problem, req.rounds as u64, req.accepted);
+        accept_obs.push((req.problem, req.rounds as u64, req.accepted));
         let rollout = Rollout {
             problem: req.problem,
             epoch: self.epoch,
@@ -530,6 +556,86 @@ mod tests {
             e.predict_job_cost(&js[0]),
             e.predict_job_cost(&js[1])
         );
+    }
+
+    #[test]
+    fn greedy_outputs_invariant_across_draft_sources() {
+        // The DraftSource seam: whichever substrate backs speculation
+        // (fused windowed trie, Ukkonen tree, rebuild-per-insert suffix
+        // array — or no speculation at all), greedy outputs are
+        // bit-identical. The substrate is a pure performance knob.
+        let reference = {
+            let c = cfg(0.0, "none", "length_aware");
+            let mut m = sim(&c);
+            let mut e = engine(&c);
+            let rep = e.generate_step(&mut m, &jobs(4, 2), 0);
+            let mut k: Vec<_> = rep
+                .rollouts
+                .iter()
+                .map(|r| (r.problem, r.tokens.clone()))
+                .collect();
+            k.sort();
+            k
+        };
+        for substrate in ["window", "tree", "array"] {
+            let mut c = cfg(0.0, "das", "length_aware");
+            c.spec.substrate = substrate.into();
+            let mut m = sim(&c);
+            let mut e = engine(&c);
+            let rep = e.generate_step(&mut m, &jobs(4, 2), 0);
+            let mut k: Vec<_> = rep
+                .rollouts
+                .iter()
+                .map(|r| (r.problem, r.tokens.clone()))
+                .collect();
+            k.sort();
+            assert_eq!(k, reference, "substrate '{substrate}' broke losslessness");
+        }
+    }
+
+    #[test]
+    fn acceptance_feeds_lpt_cost_key() {
+        // After a speculating step, finished requests' acceptance outcomes
+        // must be exported AND folded into the engine's own job-cost
+        // prediction (well-speculating problems predict cheaper than their
+        // raw length history alone).
+        let c = cfg(0.0, "das", "uniform");
+        let mut m = sim(&c);
+        for _ in 0..60 {
+            m.policy_update(1.0); // sharpen so greedy paths repeat
+        }
+        let mut e = engine(&c);
+        // More samples than batch slots: a problem's stragglers start after
+        // its first wave finished and seeded the shard, guaranteeing
+        // within-step acceptance (same mechanism as
+        // `suffix_drafter_learns_within_step`).
+        let rep = e.generate_step(&mut m, &jobs(2, 6), 0);
+        assert_eq!(rep.accept_obs.len(), 12, "one record per finished request");
+        assert!(rep.accept_obs.iter().all(|&(_, rounds, _)| rounds > 0));
+        let total_acc: u64 = rep.accept_obs.iter().map(|&(_, _, a)| a).sum();
+        assert_eq!(total_acc, rep.metrics.accepted, "obs must account for all acceptance");
+        let (p, _, _) = *rep
+            .accept_obs
+            .iter()
+            .find(|&&(_, _, a)| a > 0)
+            .expect("sharpened greedy run must accept for some problem");
+        let apr = e.length_policy.accepted_per_round(p);
+        assert!(apr > 0.0, "engine must feed acceptance into its length policy");
+        // The prediction must be EXACTLY the length-based expectation
+        // discounted by the acceptance rate — if job_cost dropped the
+        // /(1 + apr) fold, this fails (expected_total is the undiscounted
+        // half of the key).
+        let predicted = e.predict_job_cost(&GenJob {
+            problem: p,
+            prompt: vec![1],
+            samples: 1,
+        });
+        let undiscounted = e.length_policy.expected_total(p);
+        assert!(
+            (predicted - undiscounted / (1.0 + apr)).abs() < 1e-9,
+            "LPT key must fold acceptance: predicted={predicted} undiscounted={undiscounted} apr={apr}"
+        );
+        assert!(predicted < undiscounted, "discount must bite for an accepting problem");
     }
 
     #[test]

@@ -17,8 +17,12 @@
 //! longest-predicted-first onto the least-loaded worker (LPT — the paper's
 //! own makespan argument, §3/Fig. 12, applied across workers) using the
 //! same length statistics that drive the speculation budget, instead of
-//! blind round-robin. DAS shrinks per-worker tails, so it compresses the
-//! cross-worker makespan too (test below).
+//! blind round-robin. The LPT cost key folds in per-problem *acceptance*
+//! history too (each worker report carries its finished requests'
+//! speculation outcomes): a long problem whose drafts are mostly accepted
+//! finishes in far fewer target forwards than its raw length suggests, and
+//! weighting it by length alone would over-pack it. DAS shrinks per-worker
+//! tails, so it compresses the cross-worker makespan too (test below).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::{self, JoinHandle};
@@ -204,6 +208,11 @@ impl DataParallelRollout {
                 // Feed the LPT predictor with every observed final length.
                 self.predictor.observe(roll.problem, roll.tokens.len());
             }
+            // …and with every request's speculation outcome, so the cost
+            // key discounts problems that speculate well.
+            for &(problem, rounds, accepted) in &r.accept_obs {
+                self.predictor.observe_acceptance(problem, rounds, accepted);
+            }
             rollouts.extend(r.rollouts);
             per_worker.push(r.metrics);
         }
@@ -335,6 +344,28 @@ mod tests {
             dp.roll_epoch(step + 1);
         }
         assert_eq!(dp.n_workers(), 2);
+    }
+
+    #[test]
+    fn coordinator_predictor_absorbs_acceptance() {
+        // The coordinator's LPT predictor must see both halves of the cost
+        // key from worker reports: final lengths AND speculation outcomes.
+        // No policy updates: step-1 greedy paths replay step-0 rollouts
+        // exactly, so at least the stably-assigned problems must accept.
+        let mut dp = DataParallelRollout::new(&cfg("das"), 2);
+        for step in 0..3 {
+            dp.generate_step(&jobs(6), step);
+        }
+        let with_acceptance: f64 = (0..6).map(|p| dp.predictor.job_cost(p, 2)).sum();
+        let length_only: f64 = (0..6)
+            .map(|p| {
+                dp.predictor.job_cost(p, 2) * (1.0 + dp.predictor.accepted_per_round(p))
+            })
+            .sum();
+        assert!(
+            with_acceptance < length_only,
+            "after warm steps some problem must speculate and discount its key: {with_acceptance} vs {length_only}"
+        );
     }
 
     #[test]

@@ -58,6 +58,11 @@ pub struct LengthPolicy {
     /// Keep at most this many samples per problem / globally.
     per_problem_cap: usize,
     global_cap: usize,
+    /// Decayed per-problem (verification rounds, accepted draft tokens) —
+    /// the speculation-quality half of the LPT cost key. Exponential decay
+    /// so the estimate follows drafter quality as training drifts.
+    accept_hist: HashMap<ProblemId, (f64, f64)>,
+    accept_decay: f64,
 }
 
 impl LengthPolicy {
@@ -96,6 +101,8 @@ impl LengthPolicy {
             global: Vec::new(),
             per_problem_cap: 64,
             global_cap: 4096,
+            accept_hist: HashMap::new(),
+            accept_decay: 0.9,
         }
     }
 
@@ -124,6 +131,28 @@ impl LengthPolicy {
 
     pub fn observations(&self, problem: ProblemId) -> usize {
         self.history.get(&problem).map(|h| h.len()).unwrap_or(0)
+    }
+
+    /// Record a finished request's speculation outcome: `rounds`
+    /// verification rounds, `accepted` draft tokens kept in total (the
+    /// per-problem aggregate of what [`super::AcceptanceEstimator`]
+    /// observes per round).
+    pub fn observe_acceptance(&mut self, problem: ProblemId, rounds: u64, accepted: u64) {
+        if rounds == 0 {
+            return;
+        }
+        let e = self.accept_hist.entry(problem).or_insert((0.0, 0.0));
+        e.0 = e.0 * self.accept_decay + rounds as f64;
+        e.1 = e.1 * self.accept_decay + accepted as f64;
+    }
+
+    /// Mean accepted draft tokens per verification round for this problem
+    /// (0 with no speculation history).
+    pub fn accepted_per_round(&self, problem: ProblemId) -> f64 {
+        match self.accept_hist.get(&problem) {
+            Some(&(rounds, accepted)) if rounds > 0.0 => accepted / rounds,
+            _ => 0.0,
+        }
     }
 
     /// Step 2: initial class from the problem's historical distribution
@@ -211,12 +240,22 @@ impl LengthPolicy {
         self.expected_remaining(problem, 0, class)
     }
 
-    /// Predicted device cost of one generation job: samples × expected
-    /// total length. The single source of truth for LPT sharding keys
-    /// (used by both `RolloutEngine::predict_job_cost` and the
-    /// data-parallel coordinator).
+    /// Predicted device cost of one generation job. The single source of
+    /// truth for LPT sharding keys (used by both
+    /// `RolloutEngine::predict_job_cost` and the data-parallel
+    /// coordinator).
+    ///
+    /// Cost = samples × expected total length ÷ (1 + accepted-per-round):
+    /// each verification round commits 1 + accepted tokens, so a problem
+    /// that speculates well takes proportionally fewer target forwards per
+    /// generated token. Predicting from final lengths alone over-weighted
+    /// exactly the long problems DAS accelerates the most, so LPT kept
+    /// packing them as if speculation didn't exist. With no acceptance
+    /// history the divisor is 1 and the key reduces to the pure
+    /// length-based prediction.
     pub fn job_cost(&self, problem: ProblemId, samples: usize) -> f64 {
-        self.expected_total(problem) * samples.max(1) as f64
+        let apr = self.accepted_per_round(problem);
+        self.expected_total(problem) * samples.max(1) as f64 / (1.0 + apr)
     }
 
     /// Expected remaining length for a request in a class (used as `l_i` by
@@ -366,6 +405,47 @@ mod tests {
         // Unseen problems fall back to the Medium-class prior.
         let fresh = p.expected_total(777);
         assert!(fresh > 0.0);
+    }
+
+    #[test]
+    fn acceptance_history_discounts_job_cost() {
+        // Two problems with identical length history; one speculates well.
+        let mut p = policy();
+        for _ in 0..10 {
+            p.observe(1, 600);
+            p.observe(2, 600);
+        }
+        let base = p.job_cost(1, 2);
+        assert!((base - p.job_cost(2, 2)).abs() < 1e-9, "same history, same cost");
+        // Problem 1 accepts ~3 draft tokens per round → ~4× fewer forwards.
+        for _ in 0..5 {
+            p.observe_acceptance(1, 100, 300);
+        }
+        let fast = p.job_cost(1, 2);
+        assert!(
+            fast < base * 0.3,
+            "well-speculating problem must stop being over-weighted: {fast} vs {base}"
+        );
+        assert!((p.job_cost(2, 2) - base).abs() < 1e-9, "no-history problem unchanged");
+        assert!((p.accepted_per_round(1) - 3.0).abs() < 1e-9);
+        assert_eq!(p.accepted_per_round(99), 0.0);
+    }
+
+    #[test]
+    fn acceptance_history_decays_with_drift() {
+        let mut p = policy();
+        for _ in 0..20 {
+            p.observe_acceptance(7, 10, 30); // apr 3.0
+        }
+        assert!(p.accepted_per_round(7) > 2.9);
+        // Drafter went stale: rounds keep coming, nothing accepted.
+        for _ in 0..40 {
+            p.observe_acceptance(7, 10, 0);
+        }
+        assert!(p.accepted_per_round(7) < 0.2, "apr={}", p.accepted_per_round(7));
+        // Zero-round observations are ignored.
+        p.observe_acceptance(8, 0, 0);
+        assert_eq!(p.accepted_per_round(8), 0.0);
     }
 
     #[test]

@@ -100,10 +100,20 @@ impl SuffixArray {
 
     /// Retrieval draft, same semantics as `SuffixTree::draft`.
     pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Vec<TokenId> {
+        self.draft_with_match(context, max_match, budget).0
+    }
+
+    /// `draft` plus the achieved match length, from ONE binary-search pass.
+    pub fn draft_with_match(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> (Vec<TokenId>, usize) {
         let (mlen, pos) = self.longest_suffix_match(context, max_match);
-        let Some(mut p) = pos else { return Vec::new() };
+        let Some(mut p) = pos else { return (Vec::new(), 0) };
         if mlen == 0 {
-            return Vec::new();
+            return (Vec::new(), 0);
         }
         let mut out = Vec::with_capacity(budget);
         while out.len() < budget && p < self.text.len() {
@@ -114,7 +124,7 @@ impl SuffixArray {
             out.push(t);
             p += 1;
         }
-        out
+        (out, mlen)
     }
 }
 
@@ -236,6 +246,28 @@ impl SuffixArrayIndex {
         }
     }
 
+    /// `draft` plus the achieved match length in one pass.
+    pub fn draft_with_match(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> (Vec<TokenId>, usize) {
+        match &self.built {
+            Some(sa) => sa.draft_with_match(context, max_match, budget),
+            None => (Vec::new(), 0),
+        }
+    }
+
+    /// Longest context-suffix match length against the built index
+    /// (mirrors `SuffixTree`/`SuffixTrieIndex` diagnostics).
+    pub fn match_len(&self, context: &[TokenId], max_match: usize) -> usize {
+        match &self.built {
+            Some(sa) => sa.longest_suffix_match(context, max_match).0,
+            None => 0,
+        }
+    }
+
     pub fn contains(&self, pattern: &[TokenId]) -> bool {
         match &self.built {
             Some(sa) => sa.contains(pattern),
@@ -280,6 +312,9 @@ mod tests {
         assert!(idx.contains(&[2, 3, 4]));
         assert!(!idx.contains(&[3, 2]));
         assert_eq!(idx.draft(&[9, 1, 2], 4, 2), vec![3]);
+        assert_eq!(idx.match_len(&[9, 1, 2], 4), 2);
+        assert_eq!(idx.match_len(&[9, 9], 4), 0);
+        assert_eq!(SuffixArrayIndex::new().match_len(&[1], 4), 0);
     }
 
     #[test]

@@ -1,0 +1,784 @@
+//! The single arena-trie core every suffix walk in this crate runs on.
+//!
+//! Before this module existed the repo carried three hand-rolled copies of
+//! the same trie machinery — [`super::trie::SuffixTrieIndex`], the fused
+//! epoch trie in [`super::window`], and the HashMap prefix trie in
+//! [`super::router`] — that differed only in *what they count per node*
+//! (a plain occurrence count, an epoch-tagged count ring, a shard-owner
+//! table). They could silently drift; now there is exactly ONE
+//! implementation of locate / insert / deepest-match / greedy-walk,
+//! parameterized over a [`CountStore`].
+//!
+//! # Layout
+//!
+//! Nodes live in one bump-allocated arena (`Vec`, ids are indices, root is
+//! node 0). Child edges use [`ChildTable`]: up to [`INLINE_CHILDREN`]
+//! children as parallel sorted arrays *inside the node*, spilling to a
+//! sorted heap `Vec` only for high-fanout nodes. The inline probe is
+//! **branchless** — all 8 slots are compared with a fixed trip count and the
+//! unique hit extracted from a bitmask, so the compiler can lower it to one
+//! wide vector compare + movemask instead of a data-dependent early-exit
+//! scan. Per-node *counts* live in the [`CountStore`], not in the node, so
+//! the walk code is identical for every substrate.
+//!
+//! # Suffix links
+//!
+//! Every node stores a suffix link: the node whose string is this node's
+//! string minus its FIRST token (root for depth-1 nodes). Two consequences:
+//!
+//! * **Deepest-suffix matching is a single O(m) forward pass**
+//!   (Aho–Corasick style): scan the last `m` context tokens once,
+//!   descending on a child hit and falling back along suffix links on a
+//!   miss. This replaces the previous monotone binary search over suffix
+//!   lengths (O(m log m) root re-walks), and before that an O(m²) rescan.
+//! * **Sliding-context insertion is one left-to-right pass**: at each
+//!   position the suffix-link chain of the current deepest node IS the set
+//!   of parents to extend, so inserting all depth-capped suffixes costs one
+//!   child probe per count bump and never re-walks from the root. The walk
+//!   maintenance itself is O(1) amortized per token; the D count bumps per
+//!   position are information-theoretically required (every suffix node's
+//!   count changes).
+//!
+//! The trie's string set is *substring-closed* (every substring ≤ the depth
+//! cap of anything inserted via [`ArenaTrie::insert_suffixes`] is itself a
+//! path), which gives the invariant the suffix-link machinery relies on:
+//! the link target of every node always exists. Closure also survives
+//! [`ArenaTrie::compact`] (liveness is substring-closed too — see
+//! `window.rs`), so compaction can rebuild all links in one BFS with the
+//! textbook rule `link(child(u, t)) = child(link(u), t)`.
+
+use crate::tokens::TokenId;
+
+/// Children stored inline per node before spilling to a sorted heap vector.
+/// Widened from 4 after the probe became branchless: 8 slots are one u32x8
+/// compare, and deeper-than-root trie nodes almost never exceed it.
+pub(crate) const INLINE_CHILDREN: usize = 8;
+
+/// Sorted child table: inline small-array storage with sorted-`Vec` spill.
+///
+/// Iteration order is always ascending token id, which the draft walks rely
+/// on for deterministic smallest-token tie-breaking.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ChildTable {
+    inline_len: u8,
+    inline_tokens: [TokenId; INLINE_CHILDREN],
+    inline_children: [u32; INLINE_CHILDREN],
+    /// Sorted by token; `Some` once fanout exceeds `INLINE_CHILDREN` (the
+    /// inline arrays are then no longer authoritative).
+    spill: Option<Box<Vec<(TokenId, u32)>>>,
+}
+
+impl ChildTable {
+    #[inline]
+    pub(crate) fn get(&self, tok: TokenId) -> Option<u32> {
+        if let Some(spill) = &self.spill {
+            match spill.binary_search_by_key(&tok, |&(t, _)| t) {
+                Ok(i) => Some(spill[i].1),
+                Err(_) => None,
+            }
+        } else {
+            // Branchless probe: compare ALL slots (fixed trip count, no
+            // early exit), mask to the live prefix, extract the unique hit.
+            let mut mask = 0u32;
+            for i in 0..INLINE_CHILDREN {
+                mask |= ((self.inline_tokens[i] == tok) as u32) << i;
+            }
+            mask &= (1u32 << self.inline_len) - 1;
+            if mask == 0 {
+                None
+            } else {
+                Some(self.inline_children[mask.trailing_zeros() as usize])
+            }
+        }
+    }
+
+    /// Insert a child for a token NOT already present.
+    pub(crate) fn insert(&mut self, tok: TokenId, child: u32) {
+        if let Some(spill) = &mut self.spill {
+            let pos = spill
+                .binary_search_by_key(&tok, |&(t, _)| t)
+                .unwrap_err();
+            spill.insert(pos, (tok, child));
+            return;
+        }
+        let len = self.inline_len as usize;
+        if len < INLINE_CHILDREN {
+            let mut pos = len;
+            for i in 0..len {
+                if self.inline_tokens[i] > tok {
+                    pos = i;
+                    break;
+                }
+            }
+            let mut i = len;
+            while i > pos {
+                self.inline_tokens[i] = self.inline_tokens[i - 1];
+                self.inline_children[i] = self.inline_children[i - 1];
+                i -= 1;
+            }
+            self.inline_tokens[pos] = tok;
+            self.inline_children[pos] = child;
+            self.inline_len = (len + 1) as u8;
+        } else {
+            // Spill: move everything to one sorted heap vector.
+            let mut v: Vec<(TokenId, u32)> = Vec::with_capacity(INLINE_CHILDREN * 2);
+            for i in 0..len {
+                v.push((self.inline_tokens[i], self.inline_children[i]));
+            }
+            let pos = v.binary_search_by_key(&tok, |&(t, _)| t).unwrap_err();
+            v.insert(pos, (tok, child));
+            self.spill = Some(Box::new(v));
+            self.inline_len = 0;
+        }
+    }
+
+    /// Visit children in ascending token order.
+    #[inline]
+    pub(crate) fn for_each<F: FnMut(TokenId, u32)>(&self, mut f: F) {
+        if let Some(spill) = &self.spill {
+            for &(t, c) in spill.iter() {
+                f(t, c);
+            }
+        } else {
+            for i in 0..self.inline_len as usize {
+                f(self.inline_tokens[i], self.inline_children[i]);
+            }
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match &self.spill {
+            Some(spill) => spill.len(),
+            None => self.inline_len as usize,
+        }
+    }
+
+    /// Heap bytes beyond the inline struct (the spill vector, if any).
+    pub(crate) fn heap_bytes(&self) -> usize {
+        match &self.spill {
+            Some(spill) => {
+                std::mem::size_of::<Vec<(TokenId, u32)>>()
+                    + spill.capacity() * std::mem::size_of::<(TokenId, u32)>()
+            }
+            None => 0,
+        }
+    }
+}
+
+/// What a trie counts per node. The walk code in [`ArenaTrie`] is generic
+/// over this, so the counting suffix trie (plain `u64`), the fused epoch
+/// trie (epoch-tagged ring slots) and the prefix router (shard-owner
+/// tables) share one implementation of every traversal.
+pub trait CountStore: Clone + std::fmt::Debug + Send {
+    /// Insert-time context: which stream the bump belongs to (an epoch, a
+    /// shard id, or `()` for plain counting).
+    type Tag: Copy;
+    /// Query-time context: which counts are visible (an epoch filter, or
+    /// `()` when everything counts).
+    type Filter: Copy;
+
+    /// A fresh store with the same configuration and zero nodes (used by
+    /// [`ArenaTrie::compact`] to rebuild).
+    fn new_empty(&self) -> Self;
+    /// A node was appended to the arena; extend per-node storage.
+    fn push_node(&mut self);
+    /// Record one occurrence at `node` under `tag`.
+    fn bump(&mut self, node: usize, tag: Self::Tag);
+    /// Visible weight of `node` under `filter`; 0 means "not present" for
+    /// matching purposes (dead epoch, no owners, …).
+    fn weight(&self, node: usize, filter: Self::Filter) -> u64;
+    /// Append (a copy of) `src`'s payload for node `old` — the compaction
+    /// counterpart of [`CountStore::push_node`].
+    fn copy_node_from(&mut self, src: &Self, old: usize);
+    /// Heap bytes owned by the store (diagnostics).
+    fn heap_bytes(&self) -> usize;
+}
+
+/// Plain occurrence counting — the [`CountStore`] of the production
+/// counting suffix trie (and the reference store for core tests).
+#[derive(Debug, Clone, Default)]
+pub struct Counts {
+    counts: Vec<u64>,
+}
+
+impl Counts {
+    #[inline]
+    pub fn get(&self, node: usize) -> u64 {
+        self.counts[node]
+    }
+}
+
+impl CountStore for Counts {
+    type Tag = ();
+    type Filter = ();
+
+    fn new_empty(&self) -> Self {
+        Counts::default()
+    }
+
+    fn push_node(&mut self) {
+        self.counts.push(0);
+    }
+
+    #[inline]
+    fn bump(&mut self, node: usize, _tag: ()) {
+        self.counts[node] += 1;
+    }
+
+    #[inline]
+    fn weight(&self, node: usize, _filter: ()) -> u64 {
+        self.counts[node]
+    }
+
+    fn copy_node_from(&mut self, src: &Self, old: usize) {
+        self.counts.push(src.counts[old]);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.counts.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct Node {
+    children: ChildTable,
+    /// Node of this node's string minus its first token; root (0) for
+    /// depth-1 nodes. Maintained by `insert_suffixes`; NOT maintained by
+    /// `insert_prefix` (prefix-only tries never suffix-match).
+    suffix_link: u32,
+}
+
+/// Depth-capped arena trie, generic over what each node counts.
+#[derive(Debug, Clone)]
+pub struct ArenaTrie<S: CountStore> {
+    nodes: Vec<Node>,
+    store: S,
+    max_depth: usize,
+}
+
+impl<S: CountStore> ArenaTrie<S> {
+    pub fn new(max_depth: usize, mut store: S) -> Self {
+        store.push_node(); // root payload
+        ArenaTrie {
+            nodes: vec![Node::default()],
+            store,
+            max_depth: max_depth.max(1),
+        }
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn store(&self) -> &S {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut S {
+        &mut self.store
+    }
+
+    /// Suffix link of `node` (root links to itself). Valid only for tries
+    /// built with [`ArenaTrie::insert_suffixes`].
+    #[inline]
+    pub fn suffix_link(&self, node: usize) -> usize {
+        self.nodes[node].suffix_link as usize
+    }
+
+    /// Visit `node`'s children in ascending token order.
+    pub fn for_each_child<F: FnMut(TokenId, usize)>(&self, node: usize, mut f: F) {
+        self.nodes[node].children.for_each(|tok, child| f(tok, child as usize));
+    }
+
+    fn get_or_create_child(&mut self, node: usize, tok: TokenId) -> usize {
+        if let Some(c) = self.nodes[node].children.get(tok) {
+            return c as usize;
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node::default());
+        self.store.push_node();
+        self.nodes[node].children.insert(tok, id as u32);
+        id
+    }
+
+    /// Index every suffix of `tokens` (truncated at `max_depth`), bumping
+    /// counts under `tag` along each path — one left-to-right pass.
+    ///
+    /// The active chain: `deepest` is the node of the longest (depth-capped)
+    /// suffix of the processed prefix; its suffix-link chain enumerates
+    /// every shorter suffix. Appending a token extends each chain node by
+    /// one child (created on demand, link wired to the next chain level),
+    /// so there is exactly one child probe per count bump and no root
+    /// re-walk per start position.
+    pub fn insert_suffixes(&mut self, tokens: &[TokenId], tag: S::Tag) {
+        let mut deepest = 0usize;
+        let mut depth = 0usize;
+        for &tok in tokens {
+            // Root counts one occurrence of the empty context per position.
+            self.store.bump(0, tag);
+            // Deepest parent allowed to grow: depth at most max_depth − 1.
+            let mut q = if depth == self.max_depth {
+                self.nodes[deepest].suffix_link as usize
+            } else {
+                deepest
+            };
+            let mut new_deepest = usize::MAX;
+            let mut prev_child = usize::MAX;
+            loop {
+                let child = self.get_or_create_child(q, tok);
+                self.store.bump(child, tag);
+                if new_deepest == usize::MAX {
+                    new_deepest = child;
+                }
+                if prev_child != usize::MAX {
+                    // The depth-ℓ child's suffix is the depth-(ℓ−1) child.
+                    self.nodes[prev_child].suffix_link = child as u32;
+                }
+                prev_child = child;
+                if q == 0 {
+                    // Depth-1 child: its suffix is the empty string.
+                    self.nodes[prev_child].suffix_link = 0;
+                    break;
+                }
+                q = self.nodes[q].suffix_link as usize;
+            }
+            deepest = new_deepest;
+            depth = (depth + 1).min(self.max_depth);
+        }
+    }
+
+    /// Index ONLY the prefix path of `tokens` (truncated at `max_depth`),
+    /// bumping counts under `tag` along it (the router's registration —
+    /// no suffix links, the root is not counted). Returns the deepest node.
+    pub fn insert_prefix(&mut self, tokens: &[TokenId], tag: S::Tag) -> usize {
+        let mut node = 0usize;
+        for &tok in tokens.iter().take(self.max_depth) {
+            node = self.get_or_create_child(node, tok);
+            self.store.bump(node, tag);
+        }
+        node
+    }
+
+    /// Walk `pattern` exactly from the root; `None` unless fully matched
+    /// (structurally — no count filter).
+    pub fn locate(&self, pattern: &[TokenId]) -> Option<usize> {
+        let mut node = 0usize;
+        for &tok in pattern {
+            node = self.nodes[node].children.get(tok)? as usize;
+        }
+        Some(node)
+    }
+
+    /// Visit the nodes along `tokens`' depth-capped prefix path (root
+    /// excluded), stopping at the first structurally missing child.
+    /// Returns how many tokens matched.
+    pub fn walk_prefix_path<F: FnMut(usize)>(&self, tokens: &[TokenId], mut f: F) -> usize {
+        let mut node = 0usize;
+        let mut matched = 0usize;
+        for &tok in tokens.iter().take(self.max_depth) {
+            let Some(next) = self.nodes[node].children.get(tok) else {
+                break;
+            };
+            node = next as usize;
+            matched += 1;
+            f(node);
+        }
+        matched
+    }
+
+    /// Deepest node along `context`'s prefix (≤ `max_depth`) whose weight
+    /// under `filter` is nonzero; returns `(node, depth)`. Descends through
+    /// zero-weight interior nodes (they may have been drained by eviction)
+    /// but never reports one.
+    pub fn deepest_visible_prefix(
+        &self,
+        context: &[TokenId],
+        filter: S::Filter,
+    ) -> Option<(usize, usize)> {
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        let mut best = None;
+        for &tok in context.iter().take(self.max_depth) {
+            let Some(next) = self.nodes[node].children.get(tok) else {
+                break;
+            };
+            node = next as usize;
+            depth += 1;
+            if self.store.weight(node, filter) > 0 {
+                best = Some((node, depth));
+            }
+        }
+        best
+    }
+
+    /// Longest suffix of `context` (length ≤ `max_len`) whose node is
+    /// visible under `filter`, as ONE O(m) forward pass over the last
+    /// `m = min(len, max_len, max_depth)` context tokens using suffix links
+    /// (Aho–Corasick): descend on a visible child, fall back along links on
+    /// a miss. Returns `(match_len, node)`; `(0, root)` when nothing
+    /// matches. Correct because the visible string set is substring-closed
+    /// (see module docs), which makes suffix presence monotone in length.
+    pub fn deepest_suffix(
+        &self,
+        context: &[TokenId],
+        max_len: usize,
+        filter: S::Filter,
+    ) -> (usize, usize) {
+        let cap = context.len().min(max_len).min(self.max_depth);
+        if cap == 0 {
+            return (0, 0);
+        }
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        for &tok in &context[context.len() - cap..] {
+            loop {
+                let next = self.nodes[node]
+                    .children
+                    .get(tok)
+                    .map(|c| c as usize)
+                    .filter(|&c| self.store.weight(c, filter) > 0);
+                match next {
+                    Some(c) => {
+                        node = c;
+                        depth += 1;
+                        break;
+                    }
+                    None if node == 0 => break,
+                    None => {
+                        node = self.nodes[node].suffix_link as usize;
+                        depth -= 1;
+                    }
+                }
+            }
+        }
+        (depth, node)
+    }
+
+    /// Greedy highest-weight-child walk from `start`: repeatedly step to
+    /// the child with the largest visible weight (ties broken toward the
+    /// smallest token id via ascending iteration + strict `>`), up to
+    /// `budget` tokens. Returns the draft and per-token empirical
+    /// confidence `weight(child)/weight(node)`.
+    pub fn greedy_walk(
+        &self,
+        start: usize,
+        budget: usize,
+        filter: S::Filter,
+    ) -> (Vec<TokenId>, Vec<f32>) {
+        let mut node = start;
+        let mut draft = Vec::with_capacity(budget);
+        let mut conf = Vec::with_capacity(budget);
+        for _ in 0..budget {
+            let parent_w = self.store.weight(node, filter);
+            let mut best: Option<(TokenId, usize, u64)> = None;
+            self.nodes[node].children.for_each(|tok, child| {
+                let w = self.store.weight(child as usize, filter);
+                if w == 0 {
+                    return; // invisible under this filter
+                }
+                match best {
+                    None => best = Some((tok, child as usize, w)),
+                    Some((_, _, bw)) => {
+                        if w > bw {
+                            best = Some((tok, child as usize, w));
+                        }
+                    }
+                }
+            });
+            let Some((tok, child, w)) = best else { break };
+            draft.push(tok);
+            conf.push((w as f64 / parent_w.max(1) as f64) as f32);
+            node = child;
+        }
+        (draft, conf)
+    }
+
+    /// Rebuild the arena keeping only nodes for which `keep` is true
+    /// (liveness must be ancestor-closed: a kept node's parent is kept).
+    /// Payloads are copied verbatim via [`CountStore::copy_node_from`] and
+    /// suffix links are recomputed in one BFS — valid because the kept
+    /// string set stays substring-closed.
+    pub fn compact<F: Fn(&S, usize) -> bool>(&mut self, keep: F) {
+        let mut new_nodes: Vec<Node> = Vec::with_capacity(self.nodes.len() / 2 + 1);
+        let mut new_store = self.store.new_empty();
+        new_nodes.push(Node::default());
+        new_store.copy_node_from(&self.store, 0);
+        let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
+        let mut kept: Vec<(TokenId, usize)> = Vec::new();
+        while let Some((old_id, new_id)) = stack.pop() {
+            kept.clear();
+            self.nodes[old_id].children.for_each(|tok, child| {
+                if keep(&self.store, child as usize) {
+                    kept.push((tok, child as usize));
+                }
+            });
+            for &(tok, child_old) in &kept {
+                let child_new = new_nodes.len();
+                new_nodes.push(Node::default());
+                new_store.copy_node_from(&self.store, child_old);
+                new_nodes[new_id].children.insert(tok, child_new as u32);
+                stack.push((child_old, child_new));
+            }
+        }
+        self.nodes = new_nodes;
+        self.store = new_store;
+        self.rebuild_suffix_links();
+    }
+
+    /// BFS recomputation of every suffix link after compaction:
+    /// `link(child(u, t)) = child(link(u), t)`. Substring-closure of the
+    /// kept set guarantees the target exists; the defensive root fallback
+    /// can only shorten matches, never corrupt them.
+    fn rebuild_suffix_links(&mut self) {
+        let mut queue = std::collections::VecDeque::new();
+        let mut kids: Vec<(TokenId, usize)> = Vec::new();
+        self.nodes[0].children.for_each(|_tok, c| queue.push_back(c as usize));
+        // Depth-1 nodes link to root unconditionally.
+        for i in 0..queue.len() {
+            let c = queue[i];
+            self.nodes[c].suffix_link = 0;
+        }
+        while let Some(u) = queue.pop_front() {
+            let link_u = self.nodes[u].suffix_link as usize;
+            kids.clear();
+            self.nodes[u].children.for_each(|tok, c| kids.push((tok, c as usize)));
+            for &(tok, c) in &kids {
+                let target = self.nodes[link_u].children.get(tok);
+                debug_assert!(
+                    target.is_some(),
+                    "substring closure violated: missing suffix-link target"
+                );
+                self.nodes[c].suffix_link = target.unwrap_or(0);
+                queue.push_back(c);
+            }
+        }
+    }
+
+    /// Approximate heap bytes (arena + child spill + store).
+    pub fn approx_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<Node>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| n.children.heap_bytes())
+                .sum::<usize>()
+            + self.store.heap_bytes()
+    }
+
+    /// Total child-table entries (diagnostics).
+    pub fn edge_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.children.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn plain(max_depth: usize) -> ArenaTrie<Counts> {
+        ArenaTrie::new(max_depth, Counts::default())
+    }
+
+    #[test]
+    fn child_table_inline_and_spill_paths() {
+        let mut t = ChildTable::default();
+        for (i, tok) in [7u32, 3, 9, 1, 12, 5, 20, 15].iter().enumerate() {
+            t.insert(*tok, i as u32 + 10);
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.get(3), Some(11));
+        assert_eq!(t.get(2), None);
+        // Ninth child spills to the sorted vector.
+        t.insert(4, 99);
+        assert_eq!(t.len(), 9);
+        let mut order = Vec::new();
+        t.for_each(|tok, _| order.push(tok));
+        assert_eq!(order, vec![1, 3, 4, 5, 7, 9, 12, 15, 20]);
+        assert_eq!(t.get(4), Some(99));
+        assert_eq!(t.get(7), Some(10));
+        assert!(t.heap_bytes() > 0);
+    }
+
+    #[test]
+    fn child_table_branchless_probe_matches_linear() {
+        // The masked probe must behave exactly like a linear scan for every
+        // fill level, including token id 0 in and out of the table.
+        for fill in 0..=INLINE_CHILDREN {
+            let mut t = ChildTable::default();
+            let toks: Vec<u32> = (0..fill as u32).map(|i| i * 3).collect();
+            for (i, &tok) in toks.iter().enumerate() {
+                t.insert(tok, 100 + i as u32);
+            }
+            for probe in 0..30u32 {
+                let expect = toks.iter().position(|&x| x == probe).map(|i| 100 + i as u32);
+                assert_eq!(t.get(probe), expect, "fill={fill} probe={probe}");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_suffixes_counts_are_occurrences() {
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 1, 2, 3], ());
+        let count = |p: &[u32]| t.locate(p).map(|n| t.store().get(n)).unwrap_or(0);
+        assert_eq!(count(&[1, 2]), 2);
+        assert_eq!(count(&[1, 2, 3]), 1);
+        assert_eq!(count(&[2, 1]), 1);
+        assert_eq!(count(&[3, 1]), 0);
+        assert_eq!(t.store().get(0), 5, "root counts one per position");
+    }
+
+    #[test]
+    fn suffix_links_point_to_one_shorter_suffix() {
+        let mut t = plain(6);
+        t.insert_suffixes(&[4, 7, 9, 7, 9], ());
+        // Node for [4,7,9] links to [7,9] links to [9] links to root.
+        let n479 = t.locate(&[4, 7, 9]).unwrap();
+        let n79 = t.locate(&[7, 9]).unwrap();
+        let n9 = t.locate(&[9]).unwrap();
+        assert_eq!(t.suffix_link(n479), n79);
+        assert_eq!(t.suffix_link(n79), n9);
+        assert_eq!(t.suffix_link(n9), 0);
+    }
+
+    #[test]
+    fn deepest_suffix_single_pass_matches_bruteforce() {
+        let mut t = plain(6);
+        t.insert_suffixes(&[1, 2, 3, 4], ());
+        t.insert_suffixes(&[9, 2, 3, 7], ());
+        // Context ends ...2,3,4 → longest suffix [2,3,4] (depth 3).
+        let (len, node) = t.deepest_suffix(&[8, 8, 2, 3, 4], 6, ());
+        assert_eq!(len, 3);
+        assert_eq!(node, t.locate(&[2, 3, 4]).unwrap());
+        // max_len cap applies.
+        let (len, node) = t.deepest_suffix(&[8, 8, 2, 3, 4], 2, ());
+        assert_eq!(len, 2);
+        assert_eq!(node, t.locate(&[3, 4]).unwrap());
+        // Unseen suffix falls back through links to the seen tail.
+        let (len, _) = t.deepest_suffix(&[1, 2, 99], 6, ());
+        assert_eq!(len, 0);
+        let (len, _) = t.deepest_suffix(&[99, 2, 3], 6, ());
+        assert_eq!(len, 2);
+    }
+
+    #[test]
+    fn greedy_walk_majority_and_tiebreak() {
+        let mut t = plain(8);
+        t.insert_suffixes(&[5, 7, 1], ());
+        t.insert_suffixes(&[5, 7, 2], ());
+        t.insert_suffixes(&[5, 9, 3], ());
+        let n5 = t.locate(&[5]).unwrap();
+        let (draft, conf) = t.greedy_walk(n5, 1, ());
+        assert_eq!(draft, vec![7]);
+        assert!((conf[0] - 2.0 / 3.0).abs() < 1e-6);
+        // Equal counts: smallest token id wins.
+        let mut t = plain(8);
+        t.insert_suffixes(&[5, 7], ());
+        t.insert_suffixes(&[5, 3], ());
+        let n5 = t.locate(&[5]).unwrap();
+        assert_eq!(t.greedy_walk(n5, 4, ()).0, vec![3, /* then nothing */]);
+    }
+
+    #[test]
+    fn prefix_insert_and_visible_prefix() {
+        let mut t = plain(4);
+        t.insert_prefix(&[10, 11, 12, 13, 99], ()); // truncated at depth 4
+        assert!(t.locate(&[10, 11, 12, 13]).is_some());
+        assert!(t.locate(&[10, 11, 12, 13, 99]).is_none());
+        let (node, depth) = t.deepest_visible_prefix(&[10, 11, 20], ()).unwrap();
+        assert_eq!(depth, 2);
+        assert_eq!(node, t.locate(&[10, 11]).unwrap());
+        assert!(t.deepest_visible_prefix(&[7], ()).is_none());
+        let mut seen = Vec::new();
+        let matched = t.walk_prefix_path(&[10, 11, 77], |n| seen.push(n));
+        assert_eq!(matched, 2);
+        assert_eq!(seen.len(), 2);
+    }
+
+    #[test]
+    fn compact_keeps_weighted_nodes_and_links() {
+        let mut t = plain(6);
+        t.insert_suffixes(&[1, 2, 3], ());
+        t.insert_suffixes(&[4, 2, 3], ());
+        let before = t.node_count();
+        // Keep everything: structure and answers unchanged, links intact.
+        t.compact(|s, n| s.weight(n, ()) > 0);
+        assert_eq!(t.node_count(), before);
+        let (len, node) = t.deepest_suffix(&[9, 4, 2, 3], 6, ());
+        assert_eq!(len, 3);
+        assert_eq!(t.suffix_link(node), t.locate(&[2, 3]).unwrap());
+        // Further inserts after compaction keep working.
+        t.insert_suffixes(&[4, 2, 3, 5], ());
+        let (len, _) = t.deepest_suffix(&[4, 2, 3, 5], 6, ());
+        assert_eq!(len, 4);
+    }
+
+    #[test]
+    fn prop_deepest_suffix_equals_descending_rescan() {
+        // The O(m) suffix-link pass must find exactly the length the naive
+        // longest-first rescan finds.
+        prop::check(128, |g| {
+            let alphabet = 1 + g.usize_in(1, 4) as u32;
+            let depth = 2 + g.usize_in(0, 8);
+            let mut t = ArenaTrie::new(depth, Counts::default());
+            for _ in 0..g.usize_in(1, 4) {
+                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 40), ());
+            }
+            let ctx = g.vec_u32_nonempty(alphabet, 20);
+            let max_len = 1 + g.usize_in(0, 10);
+            let naive = {
+                let cap = ctx.len().min(max_len).min(t.max_depth());
+                let mut best = 0;
+                for take in (1..=cap).rev() {
+                    if t.locate(&ctx[ctx.len() - take..]).is_some() {
+                        best = take;
+                        break;
+                    }
+                }
+                best
+            };
+            prop::require_eq(
+                t.deepest_suffix(&ctx, max_len, ()).0,
+                naive,
+                "suffix-link pass vs rescan",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_suffix_links_always_valid() {
+        // Every non-root node's link must name the node of its string minus
+        // the first token — checked by replaying paths.
+        prop::check(64, |g| {
+            let alphabet = 1 + g.usize_in(1, 3) as u32;
+            let mut t = ArenaTrie::new(2 + g.usize_in(0, 5), Counts::default());
+            let mut rollouts = Vec::new();
+            for _ in 0..g.usize_in(1, 3) {
+                let r = g.vec_u32_nonempty(alphabet, 25);
+                t.insert_suffixes(&r, ());
+                rollouts.push(r);
+            }
+            // Enumerate some indexed paths and verify link(path) == path[1..].
+            for r in &rollouts {
+                for start in 0..r.len().min(6) {
+                    let end = (start + t.max_depth()).min(r.len());
+                    let path = &r[start..end];
+                    if path.len() < 2 {
+                        continue;
+                    }
+                    let node = t.locate(path).expect("indexed path");
+                    let link = t.suffix_link(node);
+                    let expect = t.locate(&path[1..]).expect("suffix path indexed");
+                    prop::require_eq(link, expect, "suffix link target")?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

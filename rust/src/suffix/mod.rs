@@ -1,27 +1,43 @@
 //! Suffix-structure substrates for the nonparametric drafter (§4.1).
 //!
+//! * [`self::core`] — THE arena-trie core: one generic, depth-capped trie
+//!   (`ArenaTrie<S: CountStore>`) holding the only implementation of
+//!   locate / insert / deepest-match / greedy-walk in this crate. Flat node
+//!   arena, branchless inline sorted child tables (8 slots before sorted-Vec
+//!   spill), and per-node **suffix links** so deepest-suffix matching is one
+//!   O(m) forward pass (Aho–Corasick fallback) and sliding-context
+//!   insertion is a single left-to-right chain walk. Per-node counts live
+//!   in a pluggable `CountStore`:
+//!   - `core::Counts` — plain occurrence counts → [`trie::SuffixTrieIndex`];
+//!   - `window::EpochStore` (private) — epoch-tagged count slots with a
+//!     growable stride → the fused sliding-window index, including the
+//!     unbounded `window_all` ablation;
+//!   - `router::OwnerStore` (private) — sorted shard-owner tables → the
+//!     prefix router.
 //! * [`tree`] — online Ukkonen suffix tree: the paper's headline structure
 //!   (amortized O(1) appends, O(m) queries, retrieval drafting).
 //! * [`trie`] — depth-capped *counting* suffix trie: the production drafter
 //!   index with per-path occurrence counts for frequency-weighted drafts.
-//!   Flat node arena with inline sorted child storage (≤4 children in the
-//!   node, sorted-Vec spill above that) — no per-probe hashing.
 //! * [`array`] — suffix array + Kasai LCP: the static baseline the paper
 //!   compares against in Fig. 5 (updates = full rebuilds).
-//! * [`router`] — per-request prefix-trie router (§4.1.2).
+//! * [`router`] — per-request prefix-trie router (§4.1.2), now with
+//!   registration eviction (`unregister`, per-shard capacity bounds).
 //! * [`window`] — sliding-window index with age discounting (Fig. 7): one
-//!   fused epoch-tagged trie per shard (per-node count ring,
-//!   window-independent draft cost, O(1) whole-epoch eviction plus a
-//!   compaction sweep); per-epoch buckets only for the unbounded
-//!   `window_all` ablation.
+//!   fused epoch-tagged arena trie per shard for EVERY window size —
+//!   bounded windows get O(1) whole-epoch eviction plus a compaction sweep;
+//!   `window_all` (window = 0) rides the same trie via a growable
+//!   epoch-tag table. The per-epoch bucket ring survives only as the
+//!   property-test reference.
 
 pub mod array;
+pub mod core;
 pub mod router;
 pub mod tree;
 pub mod trie;
 pub mod window;
 
 pub use array::{SuffixArray, SuffixArrayIndex};
+pub use self::core::{ArenaTrie, CountStore, Counts};
 pub use router::PrefixRouter;
 pub use tree::{SuffixTree, SENTINEL_BASE};
 pub use trie::SuffixTrieIndex;

@@ -6,82 +6,184 @@
 //! is workload/model dependent — for small models the CPU overhead can
 //! outweigh the gain — so the router is a config toggle
 //! (`spec.prefix_router`, exercised by the Fig. 6 scope ablation).
+//!
+//! Since the core refactor the router is the third consumer of the shared
+//! [`crate::suffix::core::ArenaTrie`]: the walk machinery is the core's,
+//! and only the per-node payload — a sorted shard-owner table
+//! (`OwnerStore`) — is router-specific. This replaced a hand-rolled
+//! `HashMap`-node trie that re-implemented the same descend loop (the
+//! property test below pins routing equivalence with that implementation).
+//!
+//! Registrations can now also be *evicted*: `unregister` reverses one
+//! registration exactly, and `with_capacity` bounds the registrations kept
+//! per shard FIFO-style, so a long-running router's memory no longer grows
+//! with every generation ever seen.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
+use crate::suffix::core::{ArenaTrie, CountStore};
 use crate::tokens::TokenId;
 
+/// Per-node shard-owner tables: sorted `(shard, count)` pairs, kept small
+/// (a node is owned by the few shards whose generations pass through it).
 #[derive(Debug, Clone, Default)]
-struct RNode {
-    children: HashMap<TokenId, usize>,
-    /// Shards whose indexed generations pass through this node, with visit
-    /// counts (a shard here = one prior request/rollout id).
-    owners: HashMap<u32, u32>,
+struct OwnerStore {
+    owners: Vec<Vec<(u32, u32)>>,
+}
+
+impl OwnerStore {
+    /// Remove one registration of `shard` at `node` (inverse of `bump`).
+    fn unbump(&mut self, node: usize, shard: u32) {
+        let v = &mut self.owners[node];
+        if let Ok(i) = v.binary_search_by_key(&shard, |&(s, _)| s) {
+            v[i].1 -= 1;
+            if v[i].1 == 0 {
+                v.remove(i);
+            }
+        }
+    }
+
+    /// Most frequent owner; count ties break toward the smallest shard id.
+    fn top_owner(&self, node: usize) -> Option<u32> {
+        self.owners[node]
+            .iter()
+            .max_by_key(|&&(id, c)| (c, std::cmp::Reverse(id)))
+            .map(|&(id, _)| id)
+    }
+
+    fn owner_count(&self, node: usize) -> usize {
+        self.owners[node].len()
+    }
+}
+
+impl CountStore for OwnerStore {
+    type Tag = u32; // shard id
+    type Filter = ();
+
+    fn new_empty(&self) -> Self {
+        OwnerStore::default()
+    }
+
+    fn push_node(&mut self) {
+        self.owners.push(Vec::new());
+    }
+
+    fn bump(&mut self, node: usize, shard: u32) {
+        let v = &mut self.owners[node];
+        match v.binary_search_by_key(&shard, |&(s, _)| s) {
+            Ok(i) => v[i].1 += 1,
+            Err(i) => v.insert(i, (shard, 1)),
+        }
+    }
+
+    fn weight(&self, node: usize, _filter: ()) -> u64 {
+        self.owners[node].iter().map(|&(_, c)| c as u64).sum()
+    }
+
+    fn copy_node_from(&mut self, src: &Self, old: usize) {
+        self.owners.push(src.owners[old].clone());
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.owners.capacity() * std::mem::size_of::<Vec<(u32, u32)>>()
+            + self
+                .owners
+                .iter()
+                .map(|v| v.capacity() * std::mem::size_of::<(u32, u32)>())
+                .sum::<usize>()
+    }
 }
 
 /// Routes a decode context to the prior-rollout shard whose prefix it
 /// matches the deepest.
 #[derive(Debug, Clone)]
 pub struct PrefixRouter {
-    nodes: Vec<RNode>,
-    max_depth: usize,
+    trie: ArenaTrie<OwnerStore>,
+    /// Per-shard FIFO of registered (truncated) prefixes, kept only when a
+    /// capacity bound is set so eviction can unregister the oldest.
+    recent: HashMap<u32, VecDeque<Vec<TokenId>>>,
+    max_gens_per_shard: usize,
 }
 
 impl PrefixRouter {
+    /// Unbounded router (the historical behavior: registrations are never
+    /// forgotten).
     pub fn new(max_depth: usize) -> Self {
+        Self::with_capacity(max_depth, usize::MAX)
+    }
+
+    /// Router that keeps at most `max_gens_per_shard` registrations per
+    /// shard; registering beyond the bound evicts the shard's oldest
+    /// registration first (FIFO), bounding memory on long runs.
+    pub fn with_capacity(max_depth: usize, max_gens_per_shard: usize) -> Self {
         PrefixRouter {
-            nodes: vec![RNode::default()],
-            max_depth: max_depth.max(1),
+            trie: ArenaTrie::new(max_depth.max(1), OwnerStore::default()),
+            recent: HashMap::new(),
+            max_gens_per_shard: max_gens_per_shard.max(1),
         }
     }
 
     /// Register a generation's PREFIX under a shard id.
     pub fn register(&mut self, shard: u32, generation: &[TokenId]) {
-        let mut node = 0usize;
-        for &tok in generation.iter().take(self.max_depth) {
-            let next = match self.nodes[node].children.get(&tok) {
-                Some(&n) => n,
-                None => {
-                    let id = self.nodes.len();
-                    self.nodes.push(RNode::default());
-                    self.nodes[node].children.insert(tok, id);
-                    id
-                }
-            };
-            node = next;
-            *self.nodes[node].owners.entry(shard).or_insert(0) += 1;
+        if self.max_gens_per_shard != usize::MAX {
+            let prefix: Vec<TokenId> = generation
+                .iter()
+                .take(self.trie.max_depth())
+                .copied()
+                .collect();
+            let q = self.recent.entry(shard).or_default();
+            if q.len() == self.max_gens_per_shard {
+                let oldest = q.pop_front().expect("nonempty at capacity");
+                Self::unregister_on(&mut self.trie, shard, &oldest);
+            }
+            q.push_back(prefix);
         }
+        self.trie.insert_prefix(generation, shard);
     }
 
-    /// Route a context: deepest trie node the context's PREFIX reaches, then
-    /// the most frequent owner there. Returns (shard, matched_depth).
-    pub fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
-        let mut node = 0usize;
-        let mut depth = 0usize;
-        let mut last_owned: Option<(usize, usize)> = None; // (node, depth)
-        for &tok in context.iter().take(self.max_depth) {
-            match self.nodes[node].children.get(&tok) {
-                Some(&n) => {
-                    node = n;
-                    depth += 1;
-                    if !self.nodes[node].owners.is_empty() {
-                        last_owned = Some((node, depth));
-                    }
-                }
-                None => break,
-            }
+    /// Reverse one `register(shard, generation)` exactly: decrement the
+    /// shard's ownership along the generation's (depth-capped) prefix path,
+    /// dropping zeroed entries. Returns false (and changes nothing) if that
+    /// prefix was never fully registered.
+    pub fn unregister(&mut self, shard: u32, generation: &[TokenId]) -> bool {
+        Self::unregister_on(&mut self.trie, shard, generation)
+    }
+
+    /// Associated form so `register`'s capacity eviction can run it while
+    /// holding a borrow of the `recent` FIFO.
+    fn unregister_on(trie: &mut ArenaTrie<OwnerStore>, shard: u32, generation: &[TokenId]) -> bool {
+        let want = generation.len().min(trie.max_depth());
+        let mut path = Vec::with_capacity(want);
+        let matched = trie.walk_prefix_path(generation, |n| path.push(n));
+        if matched < want {
+            return false;
         }
-        let (node, depth) = last_owned?;
-        let shard = self.nodes[node]
-            .owners
-            .iter()
-            .max_by_key(|(id, c)| (**c, std::cmp::Reverse(**id)))
-            .map(|(&id, _)| id)?;
+        for n in path {
+            trie.store_mut().unbump(n, shard);
+        }
+        true
+    }
+
+    /// Route a context: deepest trie node the context's PREFIX reaches with
+    /// any owners left, then the most frequent owner there (count ties →
+    /// smallest shard id). Returns (shard, matched_depth).
+    pub fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
+        let (node, depth) = self.trie.deepest_visible_prefix(context, ())?;
+        let shard = self.trie.store().top_owner(node)?;
         Some((shard, depth))
     }
 
+    /// Distinct shards owning the deepest routed node for this context
+    /// (diagnostics for routing ambiguity).
+    pub fn owner_count(&self, context: &[TokenId]) -> usize {
+        match self.trie.deepest_visible_prefix(context, ()) {
+            Some((node, _)) => self.trie.store().owner_count(node),
+            None => 0,
+        }
+    }
+
     pub fn node_count(&self) -> usize {
-        self.nodes.len()
+        self.trie.node_count()
     }
 }
 
@@ -130,6 +232,64 @@ mod tests {
     }
 
     #[test]
+    fn routing_depth_is_deepest_owned_prefix() {
+        let mut r = PrefixRouter::new(8);
+        r.register(7, &[1, 2, 3, 4, 5, 6]);
+        // Full-prefix context routes at full depth…
+        assert_eq!(r.route(&[1, 2, 3, 4, 5, 6]).unwrap(), (7, 6));
+        // …a diverging context at the divergence point…
+        assert_eq!(r.route(&[1, 2, 3, 99]).unwrap(), (7, 3));
+        // …and depth never exceeds max_depth.
+        let mut r = PrefixRouter::new(3);
+        r.register(7, &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(r.route(&[1, 2, 3, 4, 5, 6]).unwrap(), (7, 3));
+    }
+
+    #[test]
+    fn owner_count_reports_ambiguity() {
+        let mut r = PrefixRouter::new(4);
+        assert_eq!(r.owner_count(&[3, 4]), 0);
+        r.register(1, &[3, 4]);
+        r.register(2, &[3, 4]);
+        assert_eq!(r.owner_count(&[3, 4]), 2);
+        r.register(3, &[3, 5]);
+        // Deepest node for [3,4] still has exactly shards {1,2}.
+        assert_eq!(r.owner_count(&[3, 4]), 2);
+    }
+
+    #[test]
+    fn unregister_reverses_registration() {
+        let mut r = PrefixRouter::new(8);
+        r.register(1, &[5, 6, 7]);
+        r.register(2, &[5, 6, 8]);
+        assert!(r.unregister(1, &[5, 6, 7]));
+        // Shard 1's route is gone; shard 2 still reachable.
+        assert_eq!(r.route(&[5, 6, 7]).unwrap().0, 2);
+        assert_eq!(r.route(&[5, 6, 8]).unwrap(), (2, 3));
+        // Unregistering an unknown prefix is a no-op.
+        assert!(!r.unregister(2, &[9, 9, 9]));
+        assert_eq!(r.route(&[5, 6, 8]).unwrap(), (2, 3));
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_registration_fifo() {
+        let mut r = PrefixRouter::with_capacity(8, 2);
+        r.register(1, &[10, 11]);
+        r.register(1, &[20, 21]);
+        r.register(1, &[30, 31]); // evicts [10, 11]
+        assert!(r.route(&[10, 11]).is_none(), "oldest registration evicted");
+        assert_eq!(r.route(&[20, 21]).unwrap(), (1, 2));
+        assert_eq!(r.route(&[30, 31]).unwrap(), (1, 2));
+        // Other shards are unaffected by shard 1's churn.
+        let mut r = PrefixRouter::with_capacity(8, 1);
+        r.register(1, &[10, 11]);
+        r.register(2, &[10, 12]);
+        r.register(1, &[20, 21]); // evicts shard 1's [10, 11] only
+        assert_eq!(r.route(&[10, 12]).unwrap(), (2, 2));
+        assert_eq!(r.route(&[10, 11]).unwrap(), (2, 1), "routes to the shared [10] node");
+    }
+
+    #[test]
     fn prop_route_returns_registered_shard() {
         prop::check(96, |g| {
             let mut r = PrefixRouter::new(6);
@@ -143,6 +303,93 @@ mod tests {
             if let Some((shard, depth)) = r.route(&ctx) {
                 prop::require(shards.contains(&shard), "routed shard must exist")?;
                 prop::require(depth >= 1 && depth <= 6, "depth within bounds")?;
+            }
+            Ok(())
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Equivalence with the pre-CountStore HashMap implementation: same
+    // registrations ⇒ identical routing decisions (shard AND depth).
+    // -----------------------------------------------------------------
+    #[derive(Default)]
+    struct HashNode {
+        children: HashMap<TokenId, usize>,
+        owners: HashMap<u32, u32>,
+    }
+
+    struct HashRouterRef {
+        nodes: Vec<HashNode>,
+        max_depth: usize,
+    }
+
+    impl HashRouterRef {
+        fn new(max_depth: usize) -> Self {
+            HashRouterRef {
+                nodes: vec![HashNode::default()],
+                max_depth: max_depth.max(1),
+            }
+        }
+
+        fn register(&mut self, shard: u32, generation: &[TokenId]) {
+            let mut node = 0usize;
+            for &tok in generation.iter().take(self.max_depth) {
+                let next = match self.nodes[node].children.get(&tok) {
+                    Some(&n) => n,
+                    None => {
+                        let id = self.nodes.len();
+                        self.nodes.push(HashNode::default());
+                        self.nodes[node].children.insert(tok, id);
+                        id
+                    }
+                };
+                node = next;
+                *self.nodes[node].owners.entry(shard).or_insert(0) += 1;
+            }
+        }
+
+        fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
+            let mut node = 0usize;
+            let mut depth = 0usize;
+            let mut last_owned: Option<(usize, usize)> = None;
+            for &tok in context.iter().take(self.max_depth) {
+                match self.nodes[node].children.get(&tok) {
+                    Some(&n) => {
+                        node = n;
+                        depth += 1;
+                        if !self.nodes[node].owners.is_empty() {
+                            last_owned = Some((node, depth));
+                        }
+                    }
+                    None => break,
+                }
+            }
+            let (node, depth) = last_owned?;
+            let shard = self.nodes[node]
+                .owners
+                .iter()
+                .max_by_key(|(id, c)| (**c, std::cmp::Reverse(**id)))
+                .map(|(&id, _)| id)?;
+            Some((shard, depth))
+        }
+    }
+
+    #[test]
+    fn prop_matches_hashmap_reference_router() {
+        prop::check(96, |g| {
+            let depth = 1 + g.usize_in(0, 7);
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let mut new = PrefixRouter::new(depth);
+            let mut old = HashRouterRef::new(depth);
+            for _ in 0..g.usize_in(1, 12) {
+                let shard = g.usize_in(0, 4) as u32;
+                let gen = g.vec_u32_nonempty(alphabet, 10);
+                new.register(shard, &gen);
+                old.register(shard, &gen);
+            }
+            for _ in 0..8 {
+                let ctx = g.vec_u32_nonempty(alphabet, 10);
+                prop::require_eq(new.route(&ctx), old.route(&ctx), "routing decision")?;
             }
             Ok(())
         });

@@ -255,10 +255,22 @@ impl SuffixTree {
     /// Retrieval draft: find the longest context-suffix occurrence and copy
     /// up to `budget` following tokens (stopping at any sentinel).
     pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Vec<TokenId> {
+        self.draft_with_match(context, max_match, budget).0
+    }
+
+    /// `draft` plus the achieved match length, from ONE suffix walk —
+    /// callers that need both (the `DraftSource` layer) must not pay the
+    /// match twice.
+    pub fn draft_with_match(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> (Vec<TokenId>, usize) {
         let (mlen, pos) = self.longest_suffix_match(context, max_match);
-        let Some(mut p) = pos else { return Vec::new() };
+        let Some(mut p) = pos else { return (Vec::new(), 0) };
         if mlen == 0 {
-            return Vec::new();
+            return (Vec::new(), 0);
         }
         let mut out = Vec::with_capacity(budget);
         while out.len() < budget && p < self.text.len() {
@@ -269,7 +281,7 @@ impl SuffixTree {
             out.push(t);
             p += 1;
         }
-        out
+        (out, mlen)
     }
 
     /// All distinct first-tokens that can follow the given pattern in the

@@ -10,151 +10,31 @@
 //! (D = max match length + max draft budget), inserting the D-bounded
 //! suffixes of every new rollout and bumping counts along each path.
 //!
-//! # Layout: flat node arena + inline sorted children
-//!
-//! Nodes live in one bump-allocated `Vec` (ids are indices, the root is 0)
-//! and child edges use [`ChildTable`]: up to [`INLINE_CHILDREN`] children are
-//! stored *inside the node* as parallel sorted arrays, spilling to a sorted
-//! heap `Vec` only for high-fanout nodes (in practice just the root and its
-//! immediate children — deeper trie nodes are overwhelmingly low-fanout).
-//! Compared to the original `HashMap<TokenId, usize>` per node this removes
-//! a hash + heap indirection from every (suffix × token) probe on both the
-//! insert and query hot paths, and keeps child scans inside one cache line.
+//! Since the core refactor this type is a thin veneer: all trie machinery —
+//! the flat node arena, the branchless inline `ChildTable`, suffix links,
+//! and the locate / insert / deepest-match / greedy-walk traversals —
+//! lives once in [`super::core::ArenaTrie`], parameterized here with the
+//! plain [`super::core::Counts`] store.
 //!
 //! # Cost model
 //!
-//! * `insert`: O(len · D) child probes, each an inline scan of ≤ 4 slots or
-//!   a binary search of the spill vector.
+//! * `insert`: O(len · D) count bumps, one branchless child probe each, in
+//!   a single left-to-right pass (the suffix-link chain of the deepest
+//!   match is the insertion frontier — no per-start root re-walk).
 //! * `count`/`contains`: O(m) probes.
-//! * longest-suffix match: O(m log m) — suffix *presence* (and counts) are
-//!   monotone under suffix-shortening (every substring of an indexed string
-//!   is itself indexed), so the deepest match is found by binary search on
-//!   the match length instead of the old O(m²) rescan of every candidate.
+//! * longest-suffix match: a **single O(m) forward pass** over the last
+//!   m context tokens using suffix links (Aho–Corasick fallback), replacing
+//!   the earlier monotone binary search (O(m log m)) and the original
+//!   O(m²) rescan.
 //! * greedy draft walk: O(budget · fanout) with sorted, deterministic child
 //!   iteration (ties break toward the smallest token id for free).
 
+use crate::suffix::core::{ArenaTrie, Counts};
 use crate::tokens::TokenId;
-
-/// Children stored inline per node before spilling to a sorted heap vector.
-pub(crate) const INLINE_CHILDREN: usize = 4;
-
-/// Sorted child table: inline small-array storage with sorted-`Vec` spill.
-///
-/// Iteration order is always ascending token id, which the draft walks rely
-/// on for deterministic smallest-token tie-breaking.
-#[derive(Debug, Clone, Default)]
-pub(crate) struct ChildTable {
-    inline_len: u8,
-    inline_tokens: [TokenId; INLINE_CHILDREN],
-    inline_children: [u32; INLINE_CHILDREN],
-    /// Sorted by token; `Some` once fanout exceeds `INLINE_CHILDREN` (the
-    /// inline arrays are then no longer authoritative).
-    spill: Option<Box<Vec<(TokenId, u32)>>>,
-}
-
-impl ChildTable {
-    #[inline]
-    pub(crate) fn get(&self, tok: TokenId) -> Option<u32> {
-        if let Some(spill) = &self.spill {
-            match spill.binary_search_by_key(&tok, |&(t, _)| t) {
-                Ok(i) => Some(spill[i].1),
-                Err(_) => None,
-            }
-        } else {
-            for i in 0..self.inline_len as usize {
-                if self.inline_tokens[i] == tok {
-                    return Some(self.inline_children[i]);
-                }
-            }
-            None
-        }
-    }
-
-    /// Insert a child for a token NOT already present.
-    pub(crate) fn insert(&mut self, tok: TokenId, child: u32) {
-        if let Some(spill) = &mut self.spill {
-            let pos = spill
-                .binary_search_by_key(&tok, |&(t, _)| t)
-                .unwrap_err();
-            spill.insert(pos, (tok, child));
-            return;
-        }
-        let len = self.inline_len as usize;
-        if len < INLINE_CHILDREN {
-            let mut pos = len;
-            for i in 0..len {
-                if self.inline_tokens[i] > tok {
-                    pos = i;
-                    break;
-                }
-            }
-            let mut i = len;
-            while i > pos {
-                self.inline_tokens[i] = self.inline_tokens[i - 1];
-                self.inline_children[i] = self.inline_children[i - 1];
-                i -= 1;
-            }
-            self.inline_tokens[pos] = tok;
-            self.inline_children[pos] = child;
-            self.inline_len = (len + 1) as u8;
-        } else {
-            // Spill: move everything to one sorted heap vector.
-            let mut v: Vec<(TokenId, u32)> = Vec::with_capacity(INLINE_CHILDREN * 2);
-            for i in 0..len {
-                v.push((self.inline_tokens[i], self.inline_children[i]));
-            }
-            let pos = v.binary_search_by_key(&tok, |&(t, _)| t).unwrap_err();
-            v.insert(pos, (tok, child));
-            self.spill = Some(Box::new(v));
-            self.inline_len = 0;
-        }
-    }
-
-    /// Visit children in ascending token order.
-    #[inline]
-    pub(crate) fn for_each<F: FnMut(TokenId, u32)>(&self, mut f: F) {
-        if let Some(spill) = &self.spill {
-            for &(t, c) in spill.iter() {
-                f(t, c);
-            }
-        } else {
-            for i in 0..self.inline_len as usize {
-                f(self.inline_tokens[i], self.inline_children[i]);
-            }
-        }
-    }
-
-    pub(crate) fn len(&self) -> usize {
-        match &self.spill {
-            Some(spill) => spill.len(),
-            None => self.inline_len as usize,
-        }
-    }
-
-    /// Heap bytes beyond the inline struct (the spill vector, if any).
-    pub(crate) fn heap_bytes(&self) -> usize {
-        match &self.spill {
-            Some(spill) => {
-                std::mem::size_of::<Vec<(TokenId, u32)>>()
-                    + spill.capacity() * std::mem::size_of::<(TokenId, u32)>()
-            }
-            None => 0,
-        }
-    }
-}
-
-#[derive(Debug, Clone, Default)]
-struct TrieNode {
-    children: ChildTable,
-    /// Number of (bounded) suffixes whose path passes through this node,
-    /// i.e. occurrences of the path-string in the indexed corpus.
-    count: u64,
-}
 
 #[derive(Debug, Clone)]
 pub struct SuffixTrieIndex {
-    nodes: Vec<TrieNode>,
-    max_depth: usize,
+    trie: ArenaTrie<Counts>,
     tokens_indexed: usize,
     rollouts: usize,
 }
@@ -162,19 +42,18 @@ pub struct SuffixTrieIndex {
 impl SuffixTrieIndex {
     pub fn new(max_depth: usize) -> Self {
         SuffixTrieIndex {
-            nodes: vec![TrieNode::default()],
-            max_depth: max_depth.max(2),
+            trie: ArenaTrie::new(max_depth.max(2), Counts::default()),
             tokens_indexed: 0,
             rollouts: 0,
         }
     }
 
     pub fn max_depth(&self) -> usize {
-        self.max_depth
+        self.trie.max_depth()
     }
 
     pub fn node_count(&self) -> usize {
-        self.nodes.len()
+        self.trie.node_count()
     }
 
     pub fn tokens_indexed(&self) -> usize {
@@ -187,94 +66,31 @@ impl SuffixTrieIndex {
 
     /// Index one rollout: insert every suffix, truncated at `max_depth`.
     pub fn insert(&mut self, tokens: &[TokenId]) {
-        for start in 0..tokens.len() {
-            let end = (start + self.max_depth).min(tokens.len());
-            let mut node = 0usize;
-            self.nodes[0].count += 1;
-            for &tok in &tokens[start..end] {
-                let next = match self.nodes[node].children.get(tok) {
-                    Some(n) => n as usize,
-                    None => {
-                        let id = self.nodes.len();
-                        self.nodes.push(TrieNode::default());
-                        self.nodes[node].children.insert(tok, id as u32);
-                        id
-                    }
-                };
-                node = next;
-                self.nodes[node].count += 1;
-            }
-        }
+        self.trie.insert_suffixes(tokens, ());
         self.tokens_indexed += tokens.len();
         self.rollouts += 1;
-    }
-
-    /// Walk a pattern from the root; returns the node if fully matched.
-    fn locate(&self, pattern: &[TokenId]) -> Option<usize> {
-        let mut node = 0usize;
-        for &tok in pattern {
-            node = self.nodes[node].children.get(tok)? as usize;
-        }
-        Some(node)
     }
 
     /// Occurrence count of `pattern` in the indexed corpus (patterns longer
     /// than `max_depth` report 0).
     pub fn count(&self, pattern: &[TokenId]) -> u64 {
-        if pattern.len() > self.max_depth {
+        if pattern.len() > self.max_depth() {
             return 0;
         }
-        self.locate(pattern).map(|n| self.nodes[n].count).unwrap_or(0)
+        self.trie
+            .locate(pattern)
+            .map(|n| self.trie.store().get(n))
+            .unwrap_or(0)
     }
 
     pub fn contains(&self, pattern: &[TokenId]) -> bool {
         self.count(pattern) > 0
     }
 
-    /// Longest suffix of `context` (≤ `max_len`) with at least `min_count`
-    /// occurrences. Returns (match_len, node).
-    ///
-    /// Presence (and count) of a suffix is monotone in its length: if the
-    /// length-k suffix occurs ≥ c times, every shorter suffix occurs at
-    /// least as often (each occurrence of the longer string contains one of
-    /// the shorter, and both are within the depth cap). So instead of the
-    /// old O(m²) descending rescan of every candidate suffix from the root,
-    /// binary-search the deepest matching length: O(m log m) arena probes.
-    fn longest_suffix_node(
-        &self,
-        context: &[TokenId],
-        max_len: usize,
-        min_count: u64,
-    ) -> (usize, usize) {
-        let cap = context.len().min(max_len).min(self.max_depth);
-        if cap == 0 {
-            return (0, 0);
-        }
-        let probe = |take: usize| -> Option<usize> {
-            self.locate(&context[context.len() - take..])
-                .filter(|&n| self.nodes[n].count >= min_count)
-        };
-        let Some(mut best_node) = probe(1) else {
-            return (0, 0);
-        };
-        let mut lo = 1usize;
-        let mut hi = cap;
-        while lo < hi {
-            let mid = (lo + hi + 1) / 2;
-            match probe(mid) {
-                Some(n) => {
-                    lo = mid;
-                    best_node = n;
-                }
-                None => hi = mid - 1,
-            }
-        }
-        (lo, best_node)
-    }
-
-    /// Frequency-weighted greedy draft: locate the longest context suffix,
-    /// then repeatedly step to the most frequent child (ties broken by
-    /// smallest token id, deterministically), up to `budget` tokens.
+    /// Frequency-weighted greedy draft: locate the longest context suffix
+    /// (one suffix-link pass), then repeatedly step to the most frequent
+    /// child (ties broken by smallest token id, deterministically), up to
+    /// `budget` tokens.
     ///
     /// Returns the draft and, for each draft token, the empirical
     /// confidence `count(child)/count(node)` — used by the acceptance model
@@ -285,49 +101,35 @@ impl SuffixTrieIndex {
         max_match: usize,
         budget: usize,
     ) -> (Vec<TokenId>, Vec<f32>) {
-        let (mlen, mut node) = self.longest_suffix_node(context, max_match, 1);
+        let (tokens, confidence, _) = self.draft_weighted_with_match(context, max_match, budget);
+        (tokens, confidence)
+    }
+
+    /// `draft_weighted` plus the achieved match length, from ONE
+    /// suffix-link pass — callers that need both (the `DraftSource` layer)
+    /// must not pay the match twice.
+    pub fn draft_weighted_with_match(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> (Vec<TokenId>, Vec<f32>, usize) {
+        let (mlen, node) = self.trie.deepest_suffix(context, max_match, ());
         if mlen == 0 || budget == 0 {
-            return (Vec::new(), Vec::new());
+            return (Vec::new(), Vec::new(), mlen);
         }
-        let mut draft = Vec::with_capacity(budget);
-        let mut conf = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let parent_count = self.nodes[node].count;
-            let mut best: Option<(TokenId, usize, u64)> = None;
-            // Ascending-token iteration + strict `>` ⇒ smallest token id
-            // wins count ties, matching the old HashMap scan's tie rule.
-            self.nodes[node].children.for_each(|tok, child| {
-                let c = self.nodes[child as usize].count;
-                match best {
-                    None => best = Some((tok, child as usize, c)),
-                    Some((_, _, bc)) => {
-                        if c > bc {
-                            best = Some((tok, child as usize, c));
-                        }
-                    }
-                }
-            });
-            let Some((tok, child, c)) = best else { break };
-            draft.push(tok);
-            conf.push((c as f64 / parent_count.max(1) as f64) as f32);
-            node = child;
-        }
-        (draft, conf)
+        let (tokens, confidence) = self.trie.greedy_walk(node, budget, ());
+        (tokens, confidence, mlen)
     }
 
     /// Match length the context achieves against the index (diagnostics).
     pub fn match_len(&self, context: &[TokenId], max_len: usize) -> usize {
-        self.longest_suffix_node(context, max_len, 1).0
+        self.trie.deepest_suffix(context, max_len, ()).0
     }
 
     /// Approximate heap bytes.
     pub fn approx_bytes(&self) -> usize {
-        self.nodes.len() * std::mem::size_of::<TrieNode>()
-            + self
-                .nodes
-                .iter()
-                .map(|n| n.children.heap_bytes())
-                .sum::<usize>()
+        self.trie.approx_bytes()
     }
 }
 
@@ -415,26 +217,6 @@ mod tests {
     }
 
     #[test]
-    fn child_table_inline_and_spill_paths() {
-        let mut t = ChildTable::default();
-        for (i, tok) in [7u32, 3, 9, 1].iter().enumerate() {
-            t.insert(*tok, i as u32 + 10);
-        }
-        assert_eq!(t.len(), 4);
-        assert_eq!(t.get(3), Some(11));
-        assert_eq!(t.get(2), None);
-        // Fifth child spills to the sorted vector.
-        t.insert(5, 99);
-        assert_eq!(t.len(), 5);
-        let mut order = Vec::new();
-        t.for_each(|tok, _| order.push(tok));
-        assert_eq!(order, vec![1, 3, 5, 7, 9]);
-        assert_eq!(t.get(5), Some(99));
-        assert_eq!(t.get(7), Some(10));
-        assert!(t.heap_bytes() > 0);
-    }
-
-    #[test]
     fn prop_counts_match_naive() {
         prop::check(128, |g| {
             let alphabet = 1 + g.usize_in(1, 5) as u32;
@@ -498,7 +280,7 @@ mod tests {
 
     #[test]
     fn prop_longest_suffix_matches_naive_rescan() {
-        // Safety net for the monotone binary search: it must find exactly
+        // Safety net for the suffix-link O(m) pass: it must find exactly
         // the length the old descending rescan found.
         prop::check(96, |g| {
             let alphabet = 1 + g.usize_in(1, 4) as u32;

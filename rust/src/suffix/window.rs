@@ -2,50 +2,59 @@
 //!
 //! Policy drift makes old rollouts less predictive (Fig. 2), so the drafter
 //! is built from a sliding window of recent trajectories. Historically this
-//! was one counting suffix-trie *bucket per epoch*, which made every draft
-//! call pay one full trie walk per bucket. The production representation is
-//! now a **fused epoch-tagged trie**: one arena trie per shard whose nodes
-//! carry a per-epoch count ring.
+//! was one counting suffix-trie *bucket per epoch* (one full trie walk per
+//! bucket per draft); the production representation is a **fused
+//! epoch-tagged trie**: one [`crate::suffix::core::ArenaTrie`] per shard
+//! whose [`CountStore`] keeps a per-epoch count slot table per node.
 //!
-//! # Fused layout (window ≥ 1)
+//! # Fused layout (every window size, including `window_all`)
 //!
-//! One [`ChildTable`]-arena trie holds the union of all live epochs' paths.
-//! Each node owns `window` count slots in a flat side array; an insert at
-//! epoch `e` bumps slot `e % window`, tagging it with `e` and lazily
-//! zeroing whatever stale epoch the slot held before (live epochs span
-//! fewer than `window` consecutive values, so live tags never collide).
-//! Rolling the epoch is O(1): slots whose tag falls out of the window are
-//! simply no longer live — whole-epoch eviction without touching a single
-//! node (a periodic compaction sweep reclaims the dead paths once they
-//! dominate the arena). A draft call probes ONE fused trie — a
-//! binary-searched deepest match (O(m log m) arena probes, m = max match
-//! length) plus a descending per-epoch depth scan of at most m short
-//! re-walks — instead of `window` independent O(m²) bucket walks over
-//! `window` separate hash-node tries. It reads each live epoch's match
-//! depth from the visited nodes' rings and ranks candidates by the same
-//! `match_len · age_discount^age` rule as before — identical drafts,
-//! window-independent cost.
+//! One arena trie holds the union of all live epochs' paths. Each node owns
+//! `cap` count slots in a flat side table; an insert at epoch `e` bumps
+//! slot `e % cap`, tagging it with `e` and lazily zeroing whatever stale
+//! epoch the slot held before (live epochs span at most `cap` consecutive
+//! values, so live tags never collide). For a bounded window, `cap =
+//! window` and rolling the epoch is O(1): slots whose tag falls out of the
+//! window are simply no longer live — whole-epoch eviction without touching
+//! a single node (a periodic compaction sweep reclaims dead paths once they
+//! dominate the arena, rebuilding suffix links in the same pass). For the
+//! unbounded `window_all` ablation (window = 0) the slot table is
+//! **growable**: `cap` starts small and re-strides (doubling) whenever the
+//! live epoch span outgrows it, so the same fused trie covers the
+//! no-eviction case too and the per-epoch bucket ring is gone from
+//! production entirely (it survives only as the executable specification
+//! inside the property tests below).
+//!
+//! Memory model of `window_all`: the dense slot rows cost
+//! O(nodes × live-epoch-span), so a run spanning E epochs pays ~E slots
+//! per node and scans them on liveness probes. That is the honest price of
+//! the no-eviction *ablation* — the configuration the paper measures
+//! precisely to show it loses — and it trades the old bucket ring's
+//! one-walk-per-epoch query cost for wider rows. Production windows are
+//! small constants (4–32), where the dense row IS the compact
+//! representation; if `window_all` ever needs to scale past hundreds of
+//! epochs, swap `EpochStore`'s dense rows for sparse per-node
+//! (epoch, count) lists (ROADMAP item) — the `CountStore` seam makes that
+//! a one-file change.
+//!
+//! A draft call probes ONE structure: a single O(m) suffix-link pass finds
+//! the deepest live match, then the match node's suffix-link chain (depths
+//! m, m−1, …, 1 — no re-walks) yields each live epoch's deepest match from
+//! the visited nodes' slots. Candidates are ranked by the same
+//! `match_len · age_discount^age` rule as the old bucket ring — identical
+//! drafts (property-tested), window-independent probe structure.
 //!
 //! Eviction is by epoch *distance* (`newest − e < window`); with the
 //! consecutive epoch advances RL training produces this is exactly the old
-//! keep-the-last-`window`-buckets behavior (property-tested below against
-//! the bucket-ring reference).
-//!
-//! # Bucket layout (window = 0, "window_all" of Fig. 7)
-//!
-//! An unbounded window cannot use a fixed ring, so the ablation baseline
-//! keeps the per-epoch bucket list — and honestly pays one walk per bucket,
-//! which is precisely the cost the ablation measures.
+//! keep-the-last-`window`-buckets behavior.
 //!
 //! Late arrivals (a rollout from an already-sealed epoch) are indexed under
 //! their TRUE epoch so they age and evict with their cohort; arrivals from
 //! epochs already outside the window are dropped (Fig. 2's drift argument).
-//! The old implementation silently promoted them into the newest bucket,
-//! letting stale data outlive its window.
 
 use std::collections::VecDeque;
 
-use crate::suffix::trie::{ChildTable, SuffixTrieIndex};
+use crate::suffix::core::{ArenaTrie, CountStore};
 use crate::tokens::{Epoch, TokenId};
 
 /// One candidate draft from one epoch.
@@ -65,69 +74,41 @@ pub struct WindowedIndex {
     /// Multiplicative per-epoch age discount applied to match length when
     /// ranking candidate drafts across epochs.
     pub age_discount: f64,
-    repr: Repr,
-}
-
-#[derive(Debug, Clone)]
-enum Repr {
-    /// window ≥ 1: one fused epoch-tagged trie.
-    Fused(FusedEpochTrie),
-    /// window == 0: legacy per-epoch buckets (unbounded history).
-    Buckets(BucketRing),
+    fused: FusedEpochTrie,
 }
 
 impl WindowedIndex {
     pub fn new(window: usize, max_depth: usize) -> Self {
-        let repr = if window == 0 {
-            Repr::Buckets(BucketRing::new(0, max_depth))
-        } else {
-            Repr::Fused(FusedEpochTrie::new(window, max_depth))
-        };
         WindowedIndex {
             window,
             age_discount: 0.85,
-            repr,
+            fused: FusedEpochTrie::new(window, max_depth),
         }
     }
 
     /// Number of distinct live epochs currently indexed.
     pub fn bucket_count(&self) -> usize {
-        match &self.repr {
-            Repr::Fused(f) => f.live.len(),
-            Repr::Buckets(b) => b.buckets.len(),
-        }
+        self.fused.live.len()
     }
 
     pub fn tokens_indexed(&self) -> usize {
-        match &self.repr {
-            Repr::Fused(f) => f.live_tokens.iter().sum(),
-            Repr::Buckets(b) => b.tokens_indexed(),
-        }
+        self.fused.live_tokens.iter().sum()
     }
 
     pub fn newest_epoch(&self) -> Option<Epoch> {
-        match &self.repr {
-            Repr::Fused(f) => f.newest,
-            Repr::Buckets(b) => b.newest_epoch(),
-        }
+        self.fused.newest
     }
 
     /// Insert a rollout produced at `epoch`. Epochs are expected to be
     /// non-decreasing; a late arrival is indexed under its true epoch while
     /// it is still inside the window and dropped once it is not.
     pub fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
-        match &mut self.repr {
-            Repr::Fused(f) => f.insert_rollout(epoch, tokens),
-            Repr::Buckets(b) => b.insert(epoch, tokens),
-        }
+        self.fused.insert_rollout(epoch, tokens);
     }
 
     /// Start a new (possibly empty) epoch and evict stale ones.
     pub fn roll_epoch(&mut self, epoch: Epoch) {
-        match &mut self.repr {
-            Repr::Fused(f) => f.roll_epoch(epoch),
-            Repr::Buckets(b) => b.roll_epoch(epoch),
-        }
+        self.fused.roll_epoch(epoch);
     }
 
     /// Best draft across the window. Candidates are ranked by
@@ -137,66 +118,186 @@ impl WindowedIndex {
         if budget == 0 {
             return None;
         }
-        match &self.repr {
-            Repr::Fused(f) => f.draft(context, max_match, budget, self.age_discount),
-            Repr::Buckets(b) => b.draft(context, max_match, budget, self.age_discount),
-        }
+        self.fused.draft(context, max_match, budget, self.age_discount)
     }
 
     /// Number of independent index structures a draft call probes (for
-    /// latency figures): the fused trie is a single structure regardless of
-    /// window size (its probe sequence is O(m log m), window-independent);
-    /// window_all pays one full walk per bucket.
+    /// latency figures): always 1 since the fused trie covers every window
+    /// size, `window_all` included — the unbounded case pays instead in
+    /// per-node slot-scan width (`cap` grows with the live epoch span).
     pub fn probe_cost(&self) -> usize {
-        match &self.repr {
-            Repr::Fused(_) => 1,
-            Repr::Buckets(b) => b.buckets.len(),
-        }
+        1
     }
 
     pub fn approx_bytes(&self) -> usize {
-        match &self.repr {
-            Repr::Fused(f) => f.approx_bytes(),
-            Repr::Buckets(b) => b.approx_bytes(),
-        }
+        self.fused.trie.approx_bytes()
     }
 
     /// Trie nodes currently allocated (diagnostics; bounded by compaction
-    /// on the fused path).
+    /// for windowed shards).
     pub fn node_count(&self) -> usize {
-        match &self.repr {
-            Repr::Fused(f) => f.nodes.len(),
-            Repr::Buckets(b) => b.buckets.iter().map(|(_, t)| t.node_count()).sum(),
-        }
+        self.fused.trie.node_count()
     }
 }
 
 // ---------------------------------------------------------------------------
-// Fused epoch-tagged trie (window ≥ 1)
+// Epoch-slot CountStore
 // ---------------------------------------------------------------------------
 
-/// One per-epoch count slot of a node's ring.
+/// One per-epoch count slot of a node's slot row.
 #[derive(Debug, Clone, Copy, Default)]
 struct Slot {
     epoch: Epoch,
     count: u64,
 }
 
-#[derive(Debug, Clone, Default)]
-struct RingNode {
-    children: ChildTable,
+/// Per-node epoch-tagged count rows: node `i` owns
+/// `slots[i*cap .. (i+1)*cap]`, slot index `epoch % cap`.
+#[derive(Debug, Clone)]
+struct EpochStore {
+    slots: Vec<Slot>,
+    /// Slots per node. Fixed at `window` for bounded windows; grows (with a
+    /// re-stride) as the live epoch span grows when `window == 0`.
+    cap: usize,
+    /// 0 = unbounded (`window_all`).
+    window: usize,
+    n_nodes: usize,
 }
+
+/// Query-time epoch visibility.
+#[derive(Debug, Clone, Copy)]
+enum EpochFilter {
+    /// Visible if ANY live epoch (relative to `newest`) holds a count.
+    AnyLive { newest: Epoch },
+    /// Visible under exactly this epoch.
+    Exact { epoch: Epoch },
+}
+
+impl EpochStore {
+    fn new(window: usize) -> Self {
+        EpochStore {
+            slots: Vec::new(),
+            cap: if window == 0 { 4 } else { window },
+            window,
+            n_nodes: 0,
+        }
+    }
+
+    #[inline]
+    fn in_window(&self, newest: Epoch, epoch: Epoch) -> bool {
+        epoch <= newest && (self.window == 0 || (newest - epoch) < self.window as Epoch)
+    }
+
+    /// Count this node holds for exactly `epoch` (0 if the slot was
+    /// recycled by a colliding epoch).
+    #[inline]
+    fn epoch_count(&self, node: usize, epoch: Epoch) -> u64 {
+        let s = &self.slots[node * self.cap + (epoch as usize % self.cap)];
+        if s.epoch == epoch {
+            s.count
+        } else {
+            0
+        }
+    }
+
+    /// Visit the live (epoch, count) pairs of one node's slot row.
+    fn for_each_live<F: FnMut(Epoch, u64)>(&self, node: usize, newest: Epoch, mut f: F) {
+        let base = node * self.cap;
+        for s in &self.slots[base..base + self.cap] {
+            if s.count > 0 && self.in_window(newest, s.epoch) {
+                f(s.epoch, s.count);
+            }
+        }
+    }
+
+    /// Re-stride every node's slot row to `new_cap` (a multiple of `cap`,
+    /// so no two occupied slots collide in the new layout). Only the
+    /// unbounded window grows.
+    fn grow_to(&mut self, new_cap: usize) {
+        debug_assert!(new_cap > self.cap && new_cap % self.cap == 0);
+        let mut new_slots = vec![Slot::default(); self.n_nodes * new_cap];
+        for node in 0..self.n_nodes {
+            for s in &self.slots[node * self.cap..(node + 1) * self.cap] {
+                if s.count > 0 {
+                    let t = &mut new_slots[node * new_cap + (s.epoch as usize % new_cap)];
+                    debug_assert_eq!(t.count, 0, "re-stride collision");
+                    *t = *s;
+                }
+            }
+        }
+        self.slots = new_slots;
+        self.cap = new_cap;
+    }
+}
+
+impl CountStore for EpochStore {
+    type Tag = Epoch;
+    type Filter = EpochFilter;
+
+    fn new_empty(&self) -> Self {
+        EpochStore {
+            slots: Vec::new(),
+            cap: self.cap,
+            window: self.window,
+            n_nodes: 0,
+        }
+    }
+
+    fn push_node(&mut self) {
+        self.slots.extend(std::iter::repeat(Slot::default()).take(self.cap));
+        self.n_nodes += 1;
+    }
+
+    /// Bump the node's epoch slot, lazily reclaiming a stale tag.
+    #[inline]
+    fn bump(&mut self, node: usize, epoch: Epoch) {
+        let s = &mut self.slots[node * self.cap + (epoch as usize % self.cap)];
+        if s.epoch != epoch {
+            s.epoch = epoch;
+            s.count = 0;
+        }
+        s.count += 1;
+    }
+
+    fn weight(&self, node: usize, filter: EpochFilter) -> u64 {
+        match filter {
+            EpochFilter::Exact { epoch } => self.epoch_count(node, epoch),
+            EpochFilter::AnyLive { newest } => {
+                let base = node * self.cap;
+                let live = self.slots[base..base + self.cap]
+                    .iter()
+                    .any(|s| s.count > 0 && self.in_window(newest, s.epoch));
+                live as u64
+            }
+        }
+    }
+
+    fn copy_node_from(&mut self, src: &Self, old: usize) {
+        debug_assert_eq!(self.cap, src.cap);
+        let base = old * src.cap;
+        self.slots.extend_from_slice(&src.slots[base..base + src.cap]);
+        self.n_nodes += 1;
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.slots.capacity() * std::mem::size_of::<Slot>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused epoch-tagged trie (every window size)
+// ---------------------------------------------------------------------------
+
+/// Don't bother compacting tiny arenas.
+const COMPACT_MIN_NODES: usize = 1024;
 
 #[derive(Debug, Clone)]
 struct FusedEpochTrie {
-    nodes: Vec<RingNode>,
-    /// `window` slots per node: node `i`'s ring is
-    /// `slots[i*window .. (i+1)*window]`, slot index `epoch % window`.
-    slots: Vec<Slot>,
+    trie: ArenaTrie<EpochStore>,
+    /// 0 = unbounded.
     window: usize,
-    max_depth: usize,
     newest: Option<Epoch>,
-    /// Distinct live epochs, ascending (≤ `window` entries).
+    /// Distinct live epochs, ascending (≤ `window` entries when bounded).
     live: VecDeque<Epoch>,
     /// Tokens indexed per live epoch (parallel to `live`).
     live_tokens: VecDeque<usize>,
@@ -204,16 +305,11 @@ struct FusedEpochTrie {
     last_compact_nodes: usize,
 }
 
-/// Don't bother compacting tiny arenas.
-const COMPACT_MIN_NODES: usize = 1024;
-
 impl FusedEpochTrie {
     fn new(window: usize, max_depth: usize) -> Self {
         FusedEpochTrie {
-            nodes: vec![RingNode::default()],
-            slots: vec![Slot::default(); window],
+            trie: ArenaTrie::new(max_depth.max(2), EpochStore::new(window)),
             window,
-            max_depth: max_depth.max(2),
             newest: None,
             live: VecDeque::new(),
             live_tokens: VecDeque::new(),
@@ -221,10 +317,29 @@ impl FusedEpochTrie {
         }
     }
 
-    /// Is `epoch` inside the window relative to `newest`?
     #[inline]
     fn in_window(&self, newest: Epoch, epoch: Epoch) -> bool {
-        epoch <= newest && (newest - epoch) < self.window as Epoch
+        self.trie.store().in_window(newest, epoch)
+    }
+
+    /// Unbounded windows: grow the slot stride whenever the live epoch span
+    /// outgrows it, so live epochs never collide in `epoch % cap`.
+    fn ensure_cap(&mut self) {
+        if self.window != 0 {
+            return;
+        }
+        let (Some(&front), Some(&back)) = (self.live.front(), self.live.back()) else {
+            return;
+        };
+        let span = (back - front) as usize + 1;
+        let cap = self.trie.store().cap;
+        if span > cap {
+            let mut new_cap = cap;
+            while new_cap < span {
+                new_cap *= 2;
+            }
+            self.trie.store_mut().grow_to(new_cap);
+        }
     }
 
     /// Advance `newest` to `epoch` (≥ current), registering it as live and
@@ -242,6 +357,7 @@ impl FusedEpochTrie {
             self.live.pop_front();
             self.live_tokens.pop_front();
         }
+        self.ensure_cap();
         // Epochs can advance via roll_epoch OR direct inserts at a newer
         // epoch; reclaim dead paths on either path (the guard inside is two
         // integer compares, so this is free on the hot path).
@@ -256,44 +372,25 @@ impl FusedEpochTrie {
 
     /// Dead-epoch paths stay in the arena after (lazy) eviction; once the
     /// arena has doubled since the last sweep, rebuild it from the
-    /// live-reachable nodes only. A node is live iff any ring slot holds a
+    /// live-reachable nodes only. A node is live iff any slot holds a
     /// live-epoch count, and liveness propagates to ancestors (counts are
-    /// bumped along whole paths), so one DFS that keeps live children
-    /// reconstructs exactly the reachable live trie. Counts are copied
-    /// verbatim, so drafts are unchanged. Amortized O(1) per insert;
-    /// bounds memory at ~2× the live working set instead of growing with
-    /// every epoch the run has ever seen (the old bucket ring freed whole
-    /// tries on eviction — this is the fused equivalent).
+    /// bumped along whole paths), so the core's keep-live-children DFS
+    /// reconstructs exactly the reachable live trie and re-derives every
+    /// suffix link. Counts are copied verbatim, so drafts are unchanged.
+    /// Amortized O(1) per insert; bounds memory at ~2× the live working
+    /// set. Unbounded windows never evict, hence never compact.
     fn maybe_compact(&mut self) {
-        let n = self.nodes.len();
+        if self.window == 0 {
+            return;
+        }
+        let n = self.trie.node_count();
         if n < COMPACT_MIN_NODES || n < self.last_compact_nodes.saturating_mul(2) {
             return;
         }
         let Some(newest) = self.newest else { return };
-        let mut new_nodes: Vec<RingNode> = Vec::with_capacity(n / 2);
-        let mut new_slots: Vec<Slot> = Vec::with_capacity((n / 2) * self.window);
-        new_nodes.push(RingNode::default());
-        new_slots.extend_from_slice(&self.slots[0..self.window]);
-        let mut stack: Vec<(usize, usize)> = vec![(0, 0)]; // (old id, new id)
-        while let Some((old_id, new_id)) = stack.pop() {
-            let mut live_children: Vec<(TokenId, usize)> = Vec::new();
-            self.nodes[old_id].children.for_each(|tok, child| {
-                if self.live_at(child as usize, newest) {
-                    live_children.push((tok, child as usize));
-                }
-            });
-            for (tok, child_old) in live_children {
-                let child_new = new_nodes.len();
-                new_nodes.push(RingNode::default());
-                let base = child_old * self.window;
-                new_slots.extend_from_slice(&self.slots[base..base + self.window]);
-                new_nodes[new_id].children.insert(tok, child_new as u32);
-                stack.push((child_old, child_new));
-            }
-        }
-        self.nodes = new_nodes;
-        self.slots = new_slots;
-        self.last_compact_nodes = self.nodes.len().max(1);
+        let filter = EpochFilter::AnyLive { newest };
+        self.trie.compact(|store, node| store.weight(node, filter) > 0);
+        self.last_compact_nodes = self.trie.node_count().max(1);
     }
 
     fn insert_rollout(&mut self, epoch: Epoch, tokens: &[TokenId]) {
@@ -314,74 +411,14 @@ impl FusedEpochTrie {
                     self.live.insert(pos, epoch);
                     self.live_tokens.insert(pos, 0);
                 }
+                self.ensure_cap();
             }
             _ => self.advance(epoch),
         }
         if let Some(pos) = self.live.iter().position(|&e| e == epoch) {
             self.live_tokens[pos] += tokens.len();
         }
-        self.insert_paths(epoch, tokens);
-    }
-
-    /// Bump node's epoch slot, lazily reclaiming a stale tag.
-    #[inline]
-    fn bump(&mut self, node: usize, epoch: Epoch) {
-        let s = &mut self.slots[node * self.window + (epoch as usize % self.window)];
-        if s.epoch != epoch {
-            s.epoch = epoch;
-            s.count = 0;
-        }
-        s.count += 1;
-    }
-
-    /// Count this node holds for `epoch` (0 if the slot was recycled).
-    #[inline]
-    fn epoch_count(&self, node: usize, epoch: Epoch) -> u64 {
-        let s = &self.slots[node * self.window + (epoch as usize % self.window)];
-        if s.epoch == epoch {
-            s.count
-        } else {
-            0
-        }
-    }
-
-    /// Does any live epoch pass through this node?
-    fn live_at(&self, node: usize, newest: Epoch) -> bool {
-        let base = node * self.window;
-        self.slots[base..base + self.window]
-            .iter()
-            .any(|s| s.count > 0 && self.in_window(newest, s.epoch))
-    }
-
-    fn insert_paths(&mut self, epoch: Epoch, tokens: &[TokenId]) {
-        for start in 0..tokens.len() {
-            let end = (start + self.max_depth).min(tokens.len());
-            let mut node = 0usize;
-            self.bump(0, epoch);
-            for &tok in &tokens[start..end] {
-                let next = match self.nodes[node].children.get(tok) {
-                    Some(n) => n as usize,
-                    None => {
-                        let id = self.nodes.len();
-                        self.nodes.push(RingNode::default());
-                        self.slots
-                            .extend(std::iter::repeat(Slot::default()).take(self.window));
-                        self.nodes[node].children.insert(tok, id as u32);
-                        id
-                    }
-                };
-                node = next;
-                self.bump(node, epoch);
-            }
-        }
-    }
-
-    fn locate(&self, pattern: &[TokenId]) -> Option<usize> {
-        let mut node = 0usize;
-        for &tok in pattern {
-            node = self.nodes[node].children.get(tok)? as usize;
-        }
-        Some(node)
+        self.trie.insert_suffixes(tokens, epoch);
     }
 
     fn draft(
@@ -392,60 +429,44 @@ impl FusedEpochTrie {
         age_discount: f64,
     ) -> Option<WindowDraft> {
         let newest = self.newest?;
-        let cap = context.len().min(max_match).min(self.max_depth);
-        if cap == 0 {
+        // 1. Deepest match over ANY live epoch — one O(m) suffix-link pass.
+        let (take_max, node) =
+            self.trie
+                .deepest_suffix(context, max_match, EpochFilter::AnyLive { newest });
+        if take_max == 0 {
             return None;
         }
-        // 1. Deepest match over ANY live epoch — monotone in the suffix
-        //    length (see trie.rs), so binary search.
-        let probe = |take: usize| -> Option<usize> {
-            self.locate(&context[context.len() - take..])
-                .filter(|&n| self.live_at(n, newest))
-        };
-        probe(1)?;
-        let mut lo = 1usize;
-        let mut hi = cap;
-        while lo < hi {
-            let mid = (lo + hi + 1) / 2;
-            if probe(mid).is_some() {
-                lo = mid;
-            } else {
-                hi = mid - 1;
-            }
-        }
-        let take_max = lo;
-        // 2. Per-epoch match depths: scan take_max → 1, recording each live
-        //    epoch the first (deepest) time it appears at the matched node.
-        //    Per-epoch presence is monotone too, so first-seen = deepest.
+        // 2. Per-epoch match depths: the suffix-link chain from the match
+        //    node visits exactly the matched suffixes of lengths take_max,
+        //    take_max−1, …, 1 (no re-walks); record each live epoch the
+        //    first (deepest) time it appears in a visited node's slot row.
         let mut cands: Vec<(f64, Epoch, usize, usize)> = Vec::new(); // (score, epoch, mlen, node)
-        for take in (1..=take_max).rev() {
-            let Some(node) = self.locate(&context[context.len() - take..]) else {
-                continue;
-            };
-            let base = node * self.window;
-            for s in &self.slots[base..base + self.window] {
-                if s.count > 0
-                    && self.in_window(newest, s.epoch)
-                    && !cands.iter().any(|&(_, e, _, _)| e == s.epoch)
-                {
-                    let age = (newest - s.epoch) as f64;
+        let mut n = node;
+        let mut take = take_max;
+        loop {
+            self.trie.store().for_each_live(n, newest, |epoch, _count| {
+                if !cands.iter().any(|&(_, e, _, _)| e == epoch) {
+                    let age = (newest - epoch) as f64;
                     let score = take as f64 * age_discount.powf(age);
-                    cands.push((score, s.epoch, take, node));
+                    cands.push((score, epoch, take, n));
                 }
+            });
+            if cands.len() == self.live.len() || take == 1 {
+                break; // every live epoch accounted for, or chain exhausted
             }
-            if cands.len() == self.live.len() {
-                break; // every live epoch accounted for
-            }
+            n = self.trie.suffix_link(n);
+            take -= 1;
         }
-        // 3. Same ranking as the bucket ring: best score, ties to the newer
-        //    epoch, skipping candidates whose greedy walk yields nothing.
+        // 3. Same ranking as the old bucket ring: best score, ties to the
+        //    newer epoch, skipping candidates whose greedy walk is empty.
         cands.sort_by(|a, b| {
             b.0.partial_cmp(&a.0)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(b.1.cmp(&a.1))
         });
         for &(score, epoch, mlen, node) in &cands {
-            let (tokens, confidence) = self.draft_from(node, epoch, budget);
+            let (tokens, confidence) =
+                self.trie.greedy_walk(node, budget, EpochFilter::Exact { epoch });
             if !tokens.is_empty() {
                 return Some(WindowDraft {
                     tokens,
@@ -458,176 +479,125 @@ impl FusedEpochTrie {
         }
         None
     }
-
-    /// Greedy most-frequent-child walk restricted to one epoch's counts.
-    fn draft_from(&self, start: usize, epoch: Epoch, budget: usize) -> (Vec<TokenId>, Vec<f32>) {
-        let mut node = start;
-        let mut draft = Vec::with_capacity(budget);
-        let mut conf = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let parent_count = self.epoch_count(node, epoch);
-            let mut best: Option<(TokenId, usize, u64)> = None;
-            self.nodes[node].children.for_each(|tok, child| {
-                let c = self.epoch_count(child as usize, epoch);
-                if c == 0 {
-                    return; // path belongs to another epoch
-                }
-                match best {
-                    None => best = Some((tok, child as usize, c)),
-                    Some((_, _, bc)) => {
-                        if c > bc {
-                            best = Some((tok, child as usize, c));
-                        }
-                    }
-                }
-            });
-            let Some((tok, child, c)) = best else { break };
-            draft.push(tok);
-            conf.push((c as f64 / parent_count.max(1) as f64) as f32);
-            node = child;
-        }
-        (draft, conf)
-    }
-
-    fn approx_bytes(&self) -> usize {
-        self.nodes.len() * std::mem::size_of::<RingNode>()
-            + self.slots.len() * std::mem::size_of::<Slot>()
-            + self
-                .nodes
-                .iter()
-                .map(|n| n.children.heap_bytes())
-                .sum::<usize>()
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Bucket ring (window = 0 production path; reference impl for the tests)
-// ---------------------------------------------------------------------------
-
-/// Per-epoch trie buckets — the pre-fusion representation. Kept as the
-/// `window_all` implementation (an unbounded window cannot ring-buffer) and
-/// as the executable specification the fused trie is property-tested
-/// against.
-#[derive(Debug, Clone)]
-struct BucketRing {
-    /// Ascending epoch order; newest at the back.
-    buckets: VecDeque<(Epoch, SuffixTrieIndex)>,
-    window: usize,
-    max_depth: usize,
-}
-
-impl BucketRing {
-    fn new(window: usize, max_depth: usize) -> Self {
-        BucketRing {
-            buckets: VecDeque::new(),
-            window,
-            max_depth,
-        }
-    }
-
-    fn tokens_indexed(&self) -> usize {
-        self.buckets.iter().map(|(_, b)| b.tokens_indexed()).sum()
-    }
-
-    fn newest_epoch(&self) -> Option<Epoch> {
-        self.buckets.back().map(|(e, _)| *e)
-    }
-
-    fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
-        let newest = self.newest_epoch();
-        match newest {
-            Some(e) if e == epoch => {
-                self.buckets.back_mut().expect("nonempty").1.insert(tokens);
-            }
-            Some(e) if e > epoch => {
-                // Late arrival: index under its TRUE epoch (creating the
-                // bucket in order if needed); eviction below drops it
-                // immediately when it is already outside the window.
-                if let Some((_, b)) = self.buckets.iter_mut().find(|(e2, _)| *e2 == epoch) {
-                    b.insert(tokens);
-                } else {
-                    let mut bucket = SuffixTrieIndex::new(self.max_depth);
-                    bucket.insert(tokens);
-                    let pos = self
-                        .buckets
-                        .iter()
-                        .position(|(e2, _)| *e2 > epoch)
-                        .unwrap_or(self.buckets.len());
-                    self.buckets.insert(pos, (epoch, bucket));
-                    self.evict();
-                }
-            }
-            _ => {
-                let mut bucket = SuffixTrieIndex::new(self.max_depth);
-                bucket.insert(tokens);
-                self.buckets.push_back((epoch, bucket));
-                self.evict();
-            }
-        }
-    }
-
-    fn roll_epoch(&mut self, epoch: Epoch) {
-        if self.buckets.back().map(|(e, _)| *e < epoch).unwrap_or(true) {
-            self.buckets
-                .push_back((epoch, SuffixTrieIndex::new(self.max_depth)));
-            self.evict();
-        }
-    }
-
-    fn evict(&mut self) {
-        if self.window == 0 {
-            return;
-        }
-        while self.buckets.len() > self.window {
-            self.buckets.pop_front();
-        }
-    }
-
-    fn draft(
-        &self,
-        context: &[TokenId],
-        max_match: usize,
-        budget: usize,
-        age_discount: f64,
-    ) -> Option<WindowDraft> {
-        let newest = self.newest_epoch()?;
-        let mut best: Option<WindowDraft> = None;
-        for (epoch, bucket) in self.buckets.iter().rev() {
-            let mlen = bucket.match_len(context, max_match);
-            if mlen == 0 {
-                continue;
-            }
-            let age = (newest - *epoch) as f64;
-            let score = mlen as f64 * age_discount.powf(age);
-            let better = match &best {
-                None => true,
-                Some(b) => score > b.score,
-            };
-            if better {
-                let (tokens, confidence) = bucket.draft_weighted(context, max_match, budget);
-                if !tokens.is_empty() {
-                    best = Some(WindowDraft {
-                        tokens,
-                        confidence,
-                        match_len: mlen,
-                        epoch: *epoch,
-                        score,
-                    });
-                }
-            }
-        }
-        best
-    }
-
-    fn approx_bytes(&self) -> usize {
-        self.buckets.iter().map(|(_, b)| b.approx_bytes()).sum()
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::suffix::trie::SuffixTrieIndex;
     use crate::util::prop;
+
+    // -----------------------------------------------------------------
+    // The pre-fusion per-epoch bucket ring, kept ONLY as the executable
+    // specification the fused trie is property-tested against. One full
+    // counting-trie walk per bucket per draft — the cost the fused trie
+    // removed — but trivially correct.
+    // -----------------------------------------------------------------
+    #[derive(Debug, Clone)]
+    struct BucketRingRef {
+        /// Ascending epoch order; newest at the back.
+        buckets: VecDeque<(Epoch, SuffixTrieIndex)>,
+        window: usize,
+        max_depth: usize,
+    }
+
+    impl BucketRingRef {
+        fn new(window: usize, max_depth: usize) -> Self {
+            BucketRingRef {
+                buckets: VecDeque::new(),
+                window,
+                max_depth,
+            }
+        }
+
+        fn tokens_indexed(&self) -> usize {
+            self.buckets.iter().map(|(_, b)| b.tokens_indexed()).sum()
+        }
+
+        fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+            match self.buckets.back().map(|(e, _)| *e) {
+                Some(e) if e == epoch => {
+                    self.buckets.back_mut().expect("nonempty").1.insert(tokens);
+                }
+                Some(e) if e > epoch => {
+                    // Late arrival: index under its TRUE epoch; eviction
+                    // drops it when it is already outside the window.
+                    if let Some((_, b)) = self.buckets.iter_mut().find(|(e2, _)| *e2 == epoch) {
+                        b.insert(tokens);
+                    } else {
+                        let mut bucket = SuffixTrieIndex::new(self.max_depth);
+                        bucket.insert(tokens);
+                        let pos = self
+                            .buckets
+                            .iter()
+                            .position(|(e2, _)| *e2 > epoch)
+                            .unwrap_or(self.buckets.len());
+                        self.buckets.insert(pos, (epoch, bucket));
+                        self.evict();
+                    }
+                }
+                _ => {
+                    let mut bucket = SuffixTrieIndex::new(self.max_depth);
+                    bucket.insert(tokens);
+                    self.buckets.push_back((epoch, bucket));
+                    self.evict();
+                }
+            }
+        }
+
+        fn roll_epoch(&mut self, epoch: Epoch) {
+            if self.buckets.back().map(|(e, _)| *e < epoch).unwrap_or(true) {
+                self.buckets
+                    .push_back((epoch, SuffixTrieIndex::new(self.max_depth)));
+                self.evict();
+            }
+        }
+
+        fn evict(&mut self) {
+            if self.window == 0 {
+                return;
+            }
+            while self.buckets.len() > self.window {
+                self.buckets.pop_front();
+            }
+        }
+
+        fn draft(
+            &self,
+            context: &[TokenId],
+            max_match: usize,
+            budget: usize,
+            age_discount: f64,
+        ) -> Option<WindowDraft> {
+            let newest = self.buckets.back().map(|(e, _)| *e)?;
+            let mut best: Option<WindowDraft> = None;
+            for (epoch, bucket) in self.buckets.iter().rev() {
+                let mlen = bucket.match_len(context, max_match);
+                if mlen == 0 {
+                    continue;
+                }
+                let age = (newest - *epoch) as f64;
+                let score = mlen as f64 * age_discount.powf(age);
+                let better = match &best {
+                    None => true,
+                    Some(b) => score > b.score,
+                };
+                if better {
+                    let (tokens, confidence) = bucket.draft_weighted(context, max_match, budget);
+                    if !tokens.is_empty() {
+                        best = Some(WindowDraft {
+                            tokens,
+                            confidence,
+                            match_len: mlen,
+                            epoch: *epoch,
+                            score,
+                        });
+                    }
+                }
+            }
+            best
+        }
+    }
 
     #[test]
     fn window_evicts_old_epochs() {
@@ -651,7 +621,11 @@ mod tests {
             w.insert(e, &[e + 100, e + 101, e + 102]);
         }
         assert_eq!(w.bucket_count(), 20);
+        // Oldest and newest epoch content both still draftable — the
+        // growable epoch-tag table must have re-strided past 4 epochs.
         assert!(w.draft(&[100, 101], 4, 1).is_some());
+        assert!(w.draft(&[119, 120], 4, 1).is_some());
+        assert_eq!(w.probe_cost(), 1, "window_all runs on the fused trie");
     }
 
     #[test]
@@ -677,7 +651,7 @@ mod tests {
 
     #[test]
     fn fused_recency_and_long_match_ranking() {
-        // The two ranking behaviors above, on the fused (window ≥ 1) path.
+        // The two ranking behaviors above, on a bounded window.
         let mut w = WindowedIndex::new(8, 16);
         w.insert(0, &[1, 2, 30]);
         w.insert(5, &[1, 2, 40]);
@@ -756,6 +730,54 @@ mod tests {
     }
 
     #[test]
+    fn window_all_matches_large_window_on_identical_streams() {
+        // Regression for the old split-representation bug: window = 0 used
+        // a bucket ring while window ≥ 1 used the fused trie, and their
+        // `roll_epoch` bookkeeping could diverge. Both now run fused; an
+        // unbounded window and a window larger than the whole run must
+        // behave identically on the same stream (inserts, rolls, late
+        // arrivals) — same drafts, same live-epoch accounting.
+        let mut all = WindowedIndex::new(0, 10);
+        let mut big = WindowedIndex::new(64, 10);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(7);
+        let mut epoch: Epoch = 0;
+        for step in 0..120 {
+            match step % 5 {
+                0 => {
+                    epoch += 1;
+                    all.roll_epoch(epoch);
+                    big.roll_epoch(epoch);
+                }
+                1 if epoch > 0 => {
+                    let r: Vec<u32> = (0..12).map(|_| rng.below(6) as u32).collect();
+                    all.insert(epoch - 1, &r); // late arrival
+                    big.insert(epoch - 1, &r);
+                }
+                _ => {
+                    let r: Vec<u32> = (0..15).map(|_| rng.below(6) as u32).collect();
+                    all.insert(epoch, &r);
+                    big.insert(epoch, &r);
+                }
+            }
+            assert_eq!(all.bucket_count(), big.bucket_count(), "step {step}");
+            assert_eq!(all.tokens_indexed(), big.tokens_indexed(), "step {step}");
+            assert_eq!(all.newest_epoch(), big.newest_epoch(), "step {step}");
+            let ctx: Vec<u32> = (0..8).map(|_| rng.below(6) as u32).collect();
+            let (a, b) = (all.draft(&ctx, 6, 4), big.draft(&ctx, 6, 4));
+            match (a, b) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.tokens, y.tokens, "step {step}");
+                    assert_eq!(x.epoch, y.epoch, "step {step}");
+                    assert_eq!(x.match_len, y.match_len, "step {step}");
+                }
+                (a, b) => panic!("draft presence diverged at step {step}: {a:?} vs {b:?}"),
+            }
+        }
+        assert!(epoch > 20, "stream must span many epochs");
+    }
+
+    #[test]
     fn prop_window_size_never_exceeded() {
         prop::check(64, |g| {
             let win = 1 + g.usize_in(0, 6);
@@ -793,13 +815,14 @@ mod tests {
     #[test]
     fn prop_fused_matches_bucket_reference() {
         // THE equivalence anchor: over random consecutive-epoch histories
-        // (rolls, inserts, late arrivals) the fused epoch-ring must produce
-        // byte-identical drafts to the per-epoch bucket ring.
+        // (rolls, inserts, late arrivals) the fused epoch-slot trie must
+        // produce byte-identical drafts to the per-epoch bucket ring — for
+        // bounded windows AND the unbounded window_all path (win == 0).
         prop::check(96, |g| {
-            let win = 1 + g.usize_in(0, 5);
+            let win = g.usize_in(0, 6); // 0 = window_all
             let alphabet = 1 + g.usize_in(1, 5) as u32;
             let mut fused = WindowedIndex::new(win, 10);
-            let mut reference = BucketRing::new(win, 10);
+            let mut reference = BucketRingRef::new(win, 10);
             let mut epoch: Epoch = 0;
             for _ in 0..g.usize_in(1, 30) {
                 match g.usize_in(0, 3) {

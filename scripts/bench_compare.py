@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Compare two das-bench-v1 JSON files and fail on perf regressions.
+
+Usage: bench_compare.py BASELINE.json FRESH.json [max_regression]
+
+For every named bench present in BOTH files, compare fresh median_ns
+against the baseline's. Exit 1 if any bench regressed by more than
+``max_regression`` (default 0.25, i.e. fresh > 1.25x baseline). Benches
+present in only one file are reported but never fail the run (renames and
+new benches are not regressions). An empty baseline (the seed state before
+CI first refreshes the committed JSON) passes trivially.
+
+This is the first brick of the ROADMAP perf-trajectory gate: CI snapshots
+the committed BENCH_*.json before re-running the benches, then diffs.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "das-bench-v1":
+        sys.exit(f"{path}: not a das-bench-v1 file (schema={doc.get('schema')!r})")
+    return {r["name"]: r for r in doc.get("results", []) if "name" in r}
+
+
+def main():
+    if len(sys.argv) < 3:
+        sys.exit(__doc__)
+    base_path, fresh_path = sys.argv[1], sys.argv[2]
+    max_regression = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
+    base = load(base_path)
+    fresh = load(fresh_path)
+
+    if not base:
+        print(f"baseline {base_path} has no results; nothing to compare (pass)")
+        return
+
+    regressions = []
+    print(f"{'bench':<44} {'base med':>12} {'fresh med':>12} {'ratio':>8}")
+    for name in sorted(set(base) | set(fresh)):
+        b, f = base.get(name), fresh.get(name)
+        if b is None:
+            print(f"{name:<44} {'-':>12} {f['median_ns']:>12.0f} {'new':>8}")
+            continue
+        if f is None:
+            print(f"{name:<44} {b['median_ns']:>12.0f} {'-':>12} {'gone':>8}")
+            continue
+        base_med, fresh_med = b["median_ns"], f["median_ns"]
+        ratio = fresh_med / base_med if base_med > 0 else float("inf")
+        flag = " <-- REGRESSION" if ratio > 1.0 + max_regression else ""
+        print(f"{name:<44} {base_med:>12.0f} {fresh_med:>12.0f} {ratio:>8.2f}{flag}")
+        if ratio > 1.0 + max_regression:
+            regressions.append((name, ratio))
+
+    if regressions:
+        worst = ", ".join(f"{n} ({r:.2f}x)" for n, r in regressions)
+        sys.exit(f"FAIL: {len(regressions)} bench(es) regressed >" f"{max_regression:.0%}: {worst}")
+    print(f"OK: no bench regressed more than {max_regression:.0%}")
+
+
+if __name__ == "__main__":
+    main()
