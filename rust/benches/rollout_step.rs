@@ -46,9 +46,16 @@ fn main() {
         let mut step = 3u32;
         let mut virt = 0.0;
         let mut iters = 0u32;
+        let mut idx_gauges = (0u64, 0u64, 0u64, 0u64);
         b.bench(&format!("rollout_step_{name}"), || {
             let stats = trainer.step_sim(&mut model, step);
             virt += stats.metrics.gen_time;
+            idx_gauges = (
+                stats.metrics.index_nodes,
+                stats.metrics.index_token_positions,
+                stats.metrics.index_bytes,
+                stats.metrics.pool_bytes,
+            );
             step += 1;
             iters += 1;
         });
@@ -56,6 +63,12 @@ fn main() {
             "    └ virtual gen time: {:.3} s/step (model-clock; lower = better)",
             virt / iters.max(1) as f64
         );
+        // End-of-run drafter memory snapshot (zero for non-indexing
+        // drafters): compressed nodes vs per-token-equivalent positions.
+        b.gauge(&format!("rollout_index_nodes_{name}"), idx_gauges.0 as f64);
+        b.gauge(&format!("rollout_index_node_equiv_{name}"), idx_gauges.1 as f64);
+        b.gauge(&format!("rollout_index_bytes_{name}"), idx_gauges.2 as f64);
+        b.gauge(&format!("rollout_pool_bytes_{name}"), idx_gauges.3 as f64);
     }
     b.finish("BENCH_rollout.json");
 }

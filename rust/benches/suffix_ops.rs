@@ -3,7 +3,9 @@
 //! Query and update costs for the Ukkonen suffix tree, the counting suffix
 //! trie (production drafter index) and the suffix array (rebuild-per-insert
 //! baseline) across corpus sizes, plus windowed drafting over the fused
-//! epoch-ring index.
+//! epoch trie — and a **shared-prefix workload** (same-problem rollouts
+//! sharing long boilerplate prefixes, the path-compression target case)
+//! with node/byte gauges so the compression ratio lands in the JSON.
 //!
 //! Flags: `--quick` (small corpus + short windows, for CI),
 //! `--json [path]` / env `BENCH_JSON` (write machine-readable results,
@@ -17,6 +19,22 @@ fn corpus(rng: &mut Rng, rollouts: usize, len: usize, alphabet: usize) -> Vec<Ve
     (0..rollouts)
         .map(|_| (0..len).map(|_| rng.below(alphabet) as u32).collect())
         .collect()
+}
+
+/// Same-problem rollout groups: every rollout in a group repeats the
+/// group's 60-token boilerplate prefix, then diverges into a 40-token tail
+/// (the workload shape "Beat the long tail" resamples across epochs).
+fn shared_prefix_corpus(rng: &mut Rng, groups: usize, per_group: usize) -> Vec<Vec<u32>> {
+    let mut rolls = Vec::with_capacity(groups * per_group);
+    for _ in 0..groups {
+        let prefix: Vec<u32> = (0..60).map(|_| rng.below(512) as u32).collect();
+        for _ in 0..per_group {
+            let mut r = prefix.clone();
+            r.extend((0..40).map(|_| rng.below(512) as u32));
+            rolls.push(r);
+        }
+    }
+    rolls
 }
 
 fn main() {
@@ -118,6 +136,97 @@ fn main() {
         b.bench(&format!("array_rebuild_insert100_{}tok", n_tokens), || {
             let mut a2 = idx.clone();
             a2.insert(black_box(&fresh));
+        });
+
+        // Uniform-corpus size gauges (compression floor: random content).
+        b.gauge(&format!("trie_nodes_{}tok", n_tokens), trie.node_count() as f64);
+        b.gauge(
+            &format!("trie_node_equiv_{}tok", n_tokens),
+            trie.token_positions() as f64,
+        );
+        b.gauge(&format!("trie_bytes_{}tok", n_tokens), trie.approx_bytes() as f64);
+        b.gauge(
+            &format!("trie_pool_tokens_{}tok", n_tokens),
+            trie.pool_stats().live_tokens as f64,
+        );
+
+        // -----------------------------------------------------------------
+        // Shared-prefix workload: the path-compression target case. Same
+        // total token count as the uniform corpus, arranged as same-problem
+        // groups repeating 60-token prefixes.
+        // -----------------------------------------------------------------
+        let groups = (n_tokens / 100 / 20).max(1);
+        let shared = shared_prefix_corpus(&mut rng, groups, 20);
+        let mut strie = SuffixTrieIndex::new(24);
+        for r in &shared {
+            strie.insert(r);
+        }
+        let mut swin = WindowedIndex::new(8, 24);
+        for (i, r) in shared.iter().enumerate() {
+            let epoch = (i * 8 / shared.len()) as u32;
+            swin.insert(epoch, r);
+        }
+        // The acceptance gauge: ≥2× fewer explicit nodes than the
+        // one-node-per-token layout allocated for identical content.
+        let ratio = strie.token_positions() as f64 / strie.node_count().max(1) as f64;
+        b.gauge(
+            &format!("shared_prefix_trie_nodes_{}tok", n_tokens),
+            strie.node_count() as f64,
+        );
+        b.gauge(
+            &format!("shared_prefix_trie_node_equiv_{}tok", n_tokens),
+            strie.token_positions() as f64,
+        );
+        b.gauge(
+            &format!("shared_prefix_compression_ratio_{}tok", n_tokens),
+            ratio,
+        );
+        b.gauge(
+            &format!("shared_prefix_trie_bytes_{}tok", n_tokens),
+            strie.approx_bytes() as f64,
+        );
+        b.gauge(
+            &format!("shared_prefix_pool_tokens_{}tok", n_tokens),
+            strie.pool_stats().live_tokens as f64,
+        );
+        assert!(
+            ratio >= 2.0,
+            "shared-prefix corpus must compress >=2x, got {ratio:.2}x"
+        );
+
+        // Insert cost on the shared-prefix shape: one more rollout of an
+        // EXISTING group (prefix fully present — the common steady-state
+        // insert during RL training).
+        let mut fresh_shared = shared[0][..60].to_vec();
+        fresh_shared.extend((0..40).map(|_| rng.below(512) as u32));
+        let mut strie_live = strie.clone();
+        b.bench(&format!("trie_insert_shared_prefix_{}tok", n_tokens), || {
+            strie_live.insert(black_box(&fresh_shared));
+        });
+        let mut swin_live = swin.clone();
+        b.bench(&format!("window_insert_shared_prefix_{}tok", n_tokens), || {
+            swin_live.insert(7, black_box(&fresh_shared));
+        });
+        // Draft latency on the shared-prefix index (the no-regression gate:
+        // compressed walks must not cost more than the per-token walks did).
+        let sctx: Vec<Vec<u32>> = (0..128)
+            .map(|_| {
+                let r = &shared[rng.below(shared.len())];
+                let s = rng.below(r.len() - 8);
+                r[s..s + 8].to_vec()
+            })
+            .collect();
+        let mut sq = 0;
+        b.bench(&format!("trie_query_shared_prefix_{}tok", n_tokens), || {
+            let c = &sctx[sq % sctx.len()];
+            sq += 1;
+            black_box(strie.draft_weighted(c, 8, 16));
+        });
+        let mut sw = 0;
+        b.bench(&format!("window_draft_shared_prefix_{}tok", n_tokens), || {
+            let c = &sctx[sw % sctx.len()];
+            sw += 1;
+            black_box(swin.draft(c, 8, 16));
         });
     }
     b.finish("BENCH_suffix.json");

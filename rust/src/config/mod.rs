@@ -81,6 +81,10 @@ pub struct SpecConfig {
     /// Enable the per-request prefix-trie router (§4.1.2: off for small
     /// models where routing overhead outweighs the gain).
     pub prefix_router: bool,
+    /// Max generations the prefix router keeps registered per shard (FIFO
+    /// eviction beyond it); 0 = unbounded. Bounds router memory on long
+    /// serving runs.
+    pub router_capacity: usize,
     /// Minimum context suffix length used as the tree query.
     pub match_len: usize,
 }
@@ -211,6 +215,7 @@ impl DasConfig {
         read_field!(j, self, "spec", "budget_long", usize, self.spec.budget_long);
         read_field!(j, self, "spec", "budget_cap", usize, self.spec.budget_cap);
         read_field!(j, self, "spec", "prefix_router", bool, self.spec.prefix_router);
+        read_field!(j, self, "spec", "router_capacity", usize, self.spec.router_capacity);
         read_field!(j, self, "spec", "match_len", usize, self.spec.match_len);
 
         read_field!(j, self, "train", "steps", usize, self.train.steps);
@@ -293,6 +298,15 @@ impl DasConfig {
         if self.spec.budget_long < self.spec.budget_medium {
             return e("spec.budget_long must be >= budget_medium".into());
         }
+        // A tiny bounded router thrashes (every new generation evicts the
+        // previous one before it can ever be routed to); require a sane
+        // floor when a bound is set at all.
+        if self.spec.router_capacity != 0 && self.spec.router_capacity < 4 {
+            return e(format!(
+                "spec.router_capacity must be 0 (unbounded) or >= 4, got {}",
+                self.spec.router_capacity
+            ));
+        }
         if !matches!(self.workload.kind.as_str(), "math" | "code" | "trace") {
             return e(format!("workload.kind must be math|code|trace, got '{}'", self.workload.kind));
         }
@@ -343,6 +357,7 @@ impl DasConfig {
                     ("budget_long", Json::num(self.spec.budget_long as f64)),
                     ("budget_cap", Json::num(self.spec.budget_cap as f64)),
                     ("prefix_router", Json::Bool(self.spec.prefix_router)),
+                    ("router_capacity", Json::num(self.spec.router_capacity as f64)),
                     ("match_len", Json::num(self.spec.match_len as f64)),
                 ]),
             ),
@@ -408,6 +423,18 @@ mod tests {
         assert_eq!(cfg.model.backend, "pjrt");
         assert!(cfg.set("spec.drafter=bogus").is_err());
         assert!(cfg.set("no_equals_sign").is_err());
+    }
+
+    #[test]
+    fn router_capacity_parsed_and_validated() {
+        let cfg =
+            DasConfig::from_json_text(r#"{"spec": {"router_capacity": 64}}"#).unwrap();
+        assert_eq!(cfg.spec.router_capacity, 64);
+        let mut cfg = DasConfig::default();
+        cfg.set("spec.router_capacity=128").unwrap();
+        assert_eq!(cfg.spec.router_capacity, 128);
+        cfg.set("spec.router_capacity=0").unwrap(); // unbounded is fine
+        assert!(cfg.set("spec.router_capacity=2").is_err(), "thrashing bound rejected");
     }
 
     #[test]

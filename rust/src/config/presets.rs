@@ -40,6 +40,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 budget_long: 16,
                 budget_cap: 64,
                 prefix_router: false,
+                router_capacity: 4096,
                 match_len: 8,
             },
             train: TrainConfig {
@@ -89,6 +90,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 budget_long: 12,
                 budget_cap: 64,
                 prefix_router: false,
+                router_capacity: 4096,
                 match_len: 6,
             },
             train: TrainConfig {
@@ -136,6 +138,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 budget_long: 7,
                 budget_cap: 7,
                 prefix_router: false,
+                router_capacity: 512,
                 match_len: 4,
             },
             train: TrainConfig {

@@ -31,8 +31,44 @@ mod suffix_drafter;
 pub use static_ngram::StaticNgramDrafter;
 pub use suffix_drafter::{HistoryScope, SuffixDrafter};
 
-use crate::suffix::{SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
+use crate::suffix::{SharedPool, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
+
+/// Size gauges of one retrieval index (and, summed by the drafter, of the
+/// whole history) — the node/segment/byte telemetry that makes the
+/// path-compression win observable instead of asserted.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IndexStats {
+    /// Explicit (compressed) trie nodes; tree nodes for the Ukkonen tree.
+    pub nodes: usize,
+    /// What a one-node-per-token trie would allocate for the same content
+    /// (0 for substrates where the notion doesn't apply). The compression
+    /// ratio is `token_positions / nodes`.
+    pub token_positions: usize,
+    /// Structure heap bytes (arena + per-node stores), excluding the
+    /// shared segment pool.
+    pub heap_bytes: usize,
+    /// Live interned segments in the shared pool (drafter-level only —
+    /// per-source stats leave these 0 so a shared pool isn't double
+    /// counted).
+    pub pool_segments: usize,
+    /// Live tokens held by the shared pool.
+    pub pool_tokens: usize,
+    /// Approximate heap bytes of the shared pool (live + not-yet-compacted
+    /// dead).
+    pub pool_bytes: usize,
+}
+
+impl IndexStats {
+    pub fn add(&mut self, other: &IndexStats) {
+        self.nodes += other.nodes;
+        self.token_positions += other.token_positions;
+        self.heap_bytes += other.heap_bytes;
+        self.pool_segments += other.pool_segments;
+        self.pool_tokens += other.pool_tokens;
+        self.pool_bytes += other.pool_bytes;
+    }
+}
 
 /// A proposed draft block.
 #[derive(Debug, Clone, Default)]
@@ -79,6 +115,13 @@ pub trait DraftSource: Send {
     /// Tokens currently indexed (diagnostics; the Fig. 6-right
     /// "bigger index = slower" effect is real work here).
     fn indexed_tokens(&self) -> usize;
+
+    /// Structure-size gauges (nodes / uncompressed-equivalent positions /
+    /// bytes). Pool fields stay 0 here; the drafter reports its shared
+    /// pool once. Default: all zero (substrates without a size story).
+    fn index_stats(&self) -> IndexStats {
+        IndexStats::default()
+    }
 }
 
 /// The production substrate: fused epoch-tagged sliding-window trie.
@@ -109,6 +152,15 @@ impl DraftSource for WindowedIndex {
     fn indexed_tokens(&self) -> usize {
         self.tokens_indexed()
     }
+
+    fn index_stats(&self) -> IndexStats {
+        IndexStats {
+            nodes: self.node_count(),
+            token_positions: self.token_positions(),
+            heap_bytes: self.approx_bytes(),
+            ..IndexStats::default()
+        }
+    }
 }
 
 /// Ukkonen-tree substrate: exact retrieval drafting, unbounded history.
@@ -136,6 +188,14 @@ impl DraftSource for SuffixTree {
     fn indexed_tokens(&self) -> usize {
         self.text_len()
     }
+
+    fn index_stats(&self) -> IndexStats {
+        IndexStats {
+            nodes: self.node_count(),
+            heap_bytes: self.approx_bytes(),
+            ..IndexStats::default()
+        }
+    }
 }
 
 /// Suffix-array substrate — the Fig. 5 strawman: queries are fine, but
@@ -161,6 +221,14 @@ impl DraftSource for SuffixArrayIndex {
 
     fn indexed_tokens(&self) -> usize {
         self.len_tokens()
+    }
+
+    fn index_stats(&self) -> IndexStats {
+        IndexStats {
+            // text + suffix array + LCP, all ∝ corpus length.
+            heap_bytes: self.len_tokens() * 20,
+            ..IndexStats::default()
+        }
     }
 }
 
@@ -188,14 +256,39 @@ impl DraftSource for SuffixTrieIndex {
     fn indexed_tokens(&self) -> usize {
         self.tokens_indexed()
     }
+
+    fn index_stats(&self) -> IndexStats {
+        IndexStats {
+            nodes: self.node_count(),
+            token_positions: self.token_positions(),
+            heap_bytes: self.approx_bytes(),
+            ..IndexStats::default()
+        }
+    }
 }
 
 /// Build one history substrate per `spec.substrate`. `window`/`max_depth`
 /// parameterize the windowed substrate; the unwindowed alternatives (the
 /// Fig. 5 subjects) keep unbounded history by construction.
 pub fn source_from_substrate(substrate: &str, window: usize, max_depth: usize) -> Box<dyn DraftSource> {
+    source_from_substrate_pooled(substrate, window, max_depth, None)
+}
+
+/// [`source_from_substrate`] with an optional shared label-segment pool:
+/// every trie-backed shard built on the same pool stores common rollout
+/// content (same-problem resamples, boilerplate prefixes) exactly once.
+/// Tree/array substrates have no edge labels to intern and ignore it.
+pub fn source_from_substrate_pooled(
+    substrate: &str,
+    window: usize,
+    max_depth: usize,
+    pool: Option<&SharedPool>,
+) -> Box<dyn DraftSource> {
     match substrate {
-        "window" => Box::new(WindowedIndex::new(window, max_depth)),
+        "window" => Box::new(match pool {
+            Some(p) => WindowedIndex::with_pool(window, max_depth, p.clone()),
+            None => WindowedIndex::new(window, max_depth),
+        }),
         "tree" => Box::new(SuffixTree::new()),
         "array" => Box::new(SuffixArrayIndex::new()),
         other => panic!("unknown substrate '{other}' (validate() should have caught this)"),
@@ -236,6 +329,12 @@ pub trait Drafter: Send {
 
     /// A new training epoch started (window maintenance). Default: ignore.
     fn roll_epoch(&mut self, _epoch: Epoch) {}
+
+    /// Size gauges of everything this drafter has indexed (history shards,
+    /// request-local indexes, shared segment pool). Default: all zero.
+    fn index_stats(&self) -> IndexStats {
+        IndexStats::default()
+    }
 }
 
 /// The no-speculation baseline: always proposes nothing.
@@ -301,10 +400,31 @@ mod tests {
             assert_eq!(d.match_len, 2, "substrate {}", s.source_name());
             assert_eq!(d.confidence.len(), 2, "substrate {}", s.source_name());
             assert!(s.indexed_tokens() >= corpus.len(), "substrate {}", s.source_name());
+            let stats = s.index_stats();
+            assert!(stats.heap_bytes > 0, "substrate {}", s.source_name());
+            assert_eq!(stats.pool_tokens, 0, "per-source stats never report the pool");
             let miss = s.draft_from(&[9, 9], 8, 2);
             assert!(miss.is_empty(), "substrate {}", s.source_name());
             s.on_epoch(1); // must be accepted by every substrate
         }
+    }
+
+    #[test]
+    fn pooled_sources_share_segments() {
+        let pool = SharedPool::new();
+        let mut a = source_from_substrate_pooled("window", 4, 16, Some(&pool));
+        let mut b = source_from_substrate_pooled("window", 4, 16, Some(&pool));
+        let corpus: Vec<u32> = (0..24).map(|i| i % 9).collect();
+        a.absorb(0, &corpus);
+        let after_a = pool.stats().live_tokens;
+        assert!(after_a > 0);
+        b.absorb(0, &corpus);
+        assert_eq!(
+            pool.stats().live_tokens,
+            after_a,
+            "identical rollout content interns to one segment across shards"
+        );
+        assert_eq!(a.draft_from(&[0, 1], 8, 2).tokens, b.draft_from(&[0, 1], 8, 2).tokens);
     }
 
     #[test]

@@ -21,12 +21,20 @@
 //! suffix array) and nothing here names a concrete structure. Scope rules,
 //! minimum-match thresholds and router fallbacks apply identically to all
 //! substrates.
+//!
+//! Trie-backed shards, request-local indexes AND the prefix router share
+//! one [`SharedPool`]: identical interned content (the same rollout hitting
+//! several shards, a re-sampled problem, a repeated router prefix) is
+//! stored once, and every index's label bytes are visible through the one
+//! pool the drafter reports in its gauges. (The hash-cons dedups whole
+//! token runs — the router's depth-capped prefixes and per-round
+//! request-local fragments mostly intern their own short segments.)
 
 use std::collections::HashMap;
 
-use super::{source_from_substrate, Draft, DraftSource, Drafter};
+use super::{source_from_substrate_pooled, Draft, DraftSource, Drafter, IndexStats};
 use crate::config::SpecConfig;
-use crate::suffix::{PrefixRouter, SuffixTrieIndex};
+use crate::suffix::{PrefixRouter, SharedPool, SuffixTrieIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +73,8 @@ pub struct SuffixDrafter {
     request_local: HashMap<RequestId, Box<dyn DraftSource>>,
     /// Optional prefix router over prior generations of each problem.
     router: Option<PrefixRouter>,
+    /// Label-segment pool shared by every trie-backed shard + the router.
+    pool: SharedPool,
     window: usize,
     match_len: usize,
     /// Minimum context-suffix match depth before a history draft is trusted.
@@ -96,18 +106,44 @@ impl SuffixDrafter {
         budget_cap: usize,
         use_router: bool,
     ) -> Self {
+        Self::configured(scope, substrate, window, match_len, budget_cap, use_router, 0)
+    }
+
+    /// Full constructor: `router_capacity` bounds the registrations the
+    /// prefix router keeps per shard (FIFO eviction); 0 = unbounded (the
+    /// historical behavior). Wired from `spec.router_capacity`.
+    pub fn configured(
+        scope: HistoryScope,
+        substrate: &str,
+        window: usize,
+        match_len: usize,
+        budget_cap: usize,
+        use_router: bool,
+        router_capacity: usize,
+    ) -> Self {
         let max_depth = match_len + budget_cap.max(8);
+        let pool = SharedPool::new();
         SuffixDrafter {
             scope,
             substrate: substrate.to_string(),
             shards: HashMap::new(),
-            global: source_from_substrate(substrate, window, max_depth),
+            global: source_from_substrate_pooled(substrate, window, max_depth, Some(&pool)),
             request_local: HashMap::new(),
             router: if use_router {
-                Some(PrefixRouter::new(match_len.max(8)))
+                let cap = if router_capacity == 0 {
+                    usize::MAX
+                } else {
+                    router_capacity
+                };
+                Some(PrefixRouter::with_capacity_pooled(
+                    match_len.max(8),
+                    cap,
+                    pool.clone(),
+                ))
             } else {
                 None
             },
+            pool,
             window,
             match_len,
             min_match: 2.min(match_len),
@@ -121,13 +157,14 @@ impl SuffixDrafter {
 
     pub fn from_config(cfg: &SpecConfig) -> Self {
         let scope = HistoryScope::parse(&cfg.scope).expect("validated scope");
-        SuffixDrafter::with_substrate(
+        SuffixDrafter::configured(
             scope,
             &cfg.substrate,
             cfg.window,
             cfg.match_len,
             cfg.budget_cap,
             cfg.prefix_router,
+            cfg.router_capacity,
         )
     }
 
@@ -141,7 +178,7 @@ impl SuffixDrafter {
     }
 
     fn new_shard(&self) -> Box<dyn DraftSource> {
-        source_from_substrate(&self.substrate, self.window, self.max_depth)
+        source_from_substrate_pooled(&self.substrate, self.window, self.max_depth, Some(&self.pool))
     }
 
     /// Total tokens currently indexed across history shards (diagnostics;
@@ -232,12 +269,15 @@ impl Drafter for SuffixDrafter {
         }
         // Request-local index: re-index the request's committed tokens.
         // Cheap because requests are bounded and the trie depth is capped.
+        // It shares the drafter pool so its label bytes show up in the
+        // telemetry gauges and die as dead-segment bytes (reclaimed by the
+        // pool's >50%-dead rewrite) when the request ends.
         let max_depth = self.max_depth;
         let epoch = self.epoch;
-        let entry = self
-            .request_local
-            .entry(request)
-            .or_insert_with(|| Box::new(SuffixTrieIndex::new(max_depth)) as Box<dyn DraftSource>);
+        let pool = self.pool.clone();
+        let entry = self.request_local.entry(request).or_insert_with(|| {
+            Box::new(SuffixTrieIndex::with_pool(max_depth, pool)) as Box<dyn DraftSource>
+        });
         entry.absorb(epoch, new_tokens);
     }
 
@@ -273,6 +313,29 @@ impl Drafter for SuffixDrafter {
         for shard in self.shards.values_mut() {
             shard.on_epoch(epoch);
         }
+    }
+
+    /// Sum of every source's structure gauges, plus the shared segment
+    /// pool reported ONCE (per-source stats leave pool fields 0 so a pool
+    /// backing N shards isn't counted N times).
+    fn index_stats(&self) -> IndexStats {
+        let mut s = IndexStats::default();
+        match self.scope {
+            HistoryScope::GlobalRequest => s.add(&self.global.index_stats()),
+            _ => {
+                for shard in self.shards.values() {
+                    s.add(&shard.index_stats());
+                }
+            }
+        }
+        for local in self.request_local.values() {
+            s.add(&local.index_stats());
+        }
+        let ps = self.pool.stats();
+        s.pool_segments = ps.segments;
+        s.pool_tokens = ps.live_tokens;
+        s.pool_bytes = ps.heap_bytes;
+        s
     }
 }
 
@@ -371,6 +434,49 @@ mod tests {
         let draft = d.draft(5, 1, &[1, 2], 4);
         // Recent continuation (30,40,...) outvotes the stale one (3,4,...).
         assert_eq!(draft.tokens[0], 30);
+    }
+
+    #[test]
+    fn shards_share_one_interned_pool() {
+        // Two problems see the SAME rollout content: the second shard's
+        // paths are new trie nodes, but the label bytes hash-cons to the
+        // segment the first shard interned — the cross-shard dedup the
+        // shared pool exists for.
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 8, 8, 16, false);
+        let tokens: Vec<u32> = (0..64).map(|i| i % 13).collect();
+        d.observe_rollout(&rollout(1, 0, tokens.clone()));
+        let after_one = d.index_stats();
+        assert!(after_one.pool_tokens > 0);
+        d.observe_rollout(&rollout(2, 0, tokens.clone()));
+        let after_two = d.index_stats();
+        assert_eq!(
+            after_two.pool_tokens, after_one.pool_tokens,
+            "identical content across shards adds zero pool bytes"
+        );
+        assert!(after_two.nodes > after_one.nodes, "but each shard has its own paths");
+        // Compression gauge: nodes never exceed uncompressed positions.
+        assert!(after_two.nodes <= after_two.token_positions);
+        // Both shards draft independently.
+        assert_eq!(d.draft(100, 1, &[0, 1], 2).tokens, d.draft(101, 2, &[0, 1], 2).tokens);
+    }
+
+    #[test]
+    fn router_capacity_bounds_registrations() {
+        // configured() wires spec.router_capacity into the router's FIFO
+        // eviction: with capacity 1 per shard, only the newest generation
+        // of a problem stays routable.
+        let mut d = SuffixDrafter::configured(HistoryScope::Problem, "window", 8, 8, 16, true, 1);
+        d.observe_rollout(&rollout(1, 0, vec![5, 6, 7, 8]));
+        d.observe_rollout(&rollout(1, 0, vec![20, 21, 22, 23]));
+        // The old generation's route is evicted; its shard content remains
+        // (capacity bounds the ROUTER, not history), so the draft for the
+        // old prefix falls back to the problem shard and still succeeds
+        // when the engine names the right problem.
+        assert_eq!(d.draft(9, 1, &[5, 6, 7], 1).tokens, vec![8]);
+        // A foreign problem id only reaches shard 1 via the router, which
+        // now only knows the newest generation.
+        assert_eq!(d.draft(10, 42, &[20, 21, 22], 1).tokens, vec![23]);
+        assert!(d.draft(11, 42, &[5, 6, 7], 1).is_empty(), "evicted route");
     }
 
     #[test]

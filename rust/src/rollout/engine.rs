@@ -92,7 +92,14 @@ pub struct RolloutEngine {
     next_request: RequestId,
     epoch: Epoch,
     seed: u64,
+    /// Cached drafter size gauges: computing them walks every shard's
+    /// arena, so they refresh on a coarse step cadence instead of per step
+    /// (snapshots may lag up to `INDEX_GAUGE_EVERY − 1` steps).
+    index_gauges: crate::drafter::IndexStats,
 }
+
+/// Steps between drafter index-gauge refreshes.
+const INDEX_GAUGE_EVERY: u32 = 16;
 
 impl RolloutEngine {
     pub fn new(cfg: &DasConfig, drafter: Box<dyn Drafter>) -> Self {
@@ -113,6 +120,7 @@ impl RolloutEngine {
             next_request: 0,
             epoch: 0,
             seed: cfg.seed,
+            index_gauges: crate::drafter::IndexStats::default(),
         }
     }
 
@@ -325,6 +333,23 @@ impl RolloutEngine {
 
         metrics.gen_time = model.elapsed() + latency.c_step;
         metrics.wall_time = wall_start.elapsed().as_secs_f64();
+        // Index-size gauges: how much memory the drafter's history costs
+        // (nodes vs uncompressed-equivalent positions makes the
+        // path-compression win observable). Refreshed on a coarse cadence —
+        // the scan walks every shard arena, which must not become per-step
+        // overhead as history grows.
+        if step % INDEX_GAUGE_EVERY == 0
+            || self.index_gauges == crate::drafter::IndexStats::default()
+        {
+            self.index_gauges = self.drafter.index_stats();
+        }
+        let idx = self.index_gauges;
+        metrics.index_nodes = idx.nodes as u64;
+        metrics.index_token_positions = idx.token_positions as u64;
+        metrics.index_bytes = idx.heap_bytes as u64;
+        metrics.pool_segments = idx.pool_segments as u64;
+        metrics.pool_tokens = idx.pool_tokens as u64;
+        metrics.pool_bytes = idx.pool_bytes as u64;
         // All passes this engine saw belong to this step's rounds.
         debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
         StepReport {
@@ -404,6 +429,28 @@ mod tests {
 
     fn engine(c: &DasConfig) -> RolloutEngine {
         RolloutEngine::new(c, crate::drafter::from_config(c))
+    }
+
+    #[test]
+    fn step_metrics_carry_index_gauges() {
+        let c = cfg(0.6, "das", "length_aware");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let rep = e.generate_step(&mut m, &jobs(6, 2), 0);
+        // After a step the drafter has indexed its rollouts: the gauges
+        // must be populated and the compressed node count can never exceed
+        // the uncompressed-equivalent position count.
+        assert!(rep.metrics.index_nodes > 0, "das drafter indexed something");
+        assert!(rep.metrics.index_token_positions >= rep.metrics.index_nodes);
+        assert!(rep.metrics.index_bytes > 0);
+        assert!(rep.metrics.pool_tokens > 0, "rollout content interned in the pool");
+        // The none drafter reports all-zero gauges.
+        let c = cfg(0.6, "none", "length_aware");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let rep = e.generate_step(&mut m, &jobs(2, 1), 0);
+        assert_eq!(rep.metrics.index_nodes, 0);
+        assert_eq!(rep.metrics.pool_tokens, 0);
     }
 
     #[test]

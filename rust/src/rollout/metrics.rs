@@ -24,6 +24,22 @@ pub struct StepMetrics {
     pub completed: u64,
     /// Effective batch size at the start of every round (Fig. 1 trace).
     pub eff_batch: Vec<u32>,
+
+    // --- drafter index gauges (end-of-step snapshots, not counters) ---
+    // Summing across workers totals the fleet's index memory; across steps
+    // only the latest snapshot is meaningful.
+    /// Explicit (path-compressed) trie nodes across the drafter's indexes.
+    pub index_nodes: u64,
+    /// One-node-per-token equivalent positions (compression denominator).
+    pub index_token_positions: u64,
+    /// Index structure heap bytes (arenas + per-node stores).
+    pub index_bytes: u64,
+    /// Live interned segments in the drafter's shared label pool.
+    pub pool_segments: u64,
+    /// Live tokens held by the shared label pool.
+    pub pool_tokens: u64,
+    /// Approximate heap bytes of the shared label pool.
+    pub pool_bytes: u64,
 }
 
 impl StepMetrics {
@@ -75,6 +91,13 @@ impl StepMetrics {
         self.generated += other.generated;
         self.completed += other.completed;
         self.eff_batch.extend_from_slice(&other.eff_batch);
+        // Gauges sum: merging worker reports totals the fleet's memory.
+        self.index_nodes += other.index_nodes;
+        self.index_token_positions += other.index_token_positions;
+        self.index_bytes += other.index_bytes;
+        self.pool_segments += other.pool_segments;
+        self.pool_tokens += other.pool_tokens;
+        self.pool_bytes += other.pool_bytes;
     }
 }
 

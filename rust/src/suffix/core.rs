@@ -1,60 +1,94 @@
-//! The single arena-trie core every suffix walk in this crate runs on.
+//! The single arena-trie core every suffix walk in this crate runs on —
+//! now **path-compressed** with a shared, deduplicating token-segment pool.
 //!
 //! Before this module existed the repo carried three hand-rolled copies of
 //! the same trie machinery — [`super::trie::SuffixTrieIndex`], the fused
 //! epoch trie in [`super::window`], and the HashMap prefix trie in
-//! [`super::router`] — that differed only in *what they count per node*
-//! (a plain occurrence count, an epoch-tagged count ring, a shard-owner
-//! table). They could silently drift; now there is exactly ONE
-//! implementation of locate / insert / deepest-match / greedy-walk,
-//! parameterized over a [`CountStore`].
+//! [`super::router`] — that differed only in *what they count per node*.
+//! They were unified behind [`CountStore`] (PR 2); this revision collapses
+//! the one-node-per-token layout into a radix-style compressed trie, because
+//! rollouts of the same problem share long common prefixes and reasoning
+//! boilerplate, and a per-token arena burns node count, insert time and
+//! cache footprint on redundant unary chains.
 //!
 //! # Layout
 //!
 //! Nodes live in one bump-allocated arena (`Vec`, ids are indices, root is
-//! node 0). Child edges use [`ChildTable`]: up to [`INLINE_CHILDREN`]
-//! children as parallel sorted arrays *inside the node*, spilling to a
-//! sorted heap `Vec` only for high-fanout nodes. The inline probe is
-//! **branchless** — all 8 slots are compared with a fixed trip count and the
-//! unique hit extracted from a bitmask, so the compiler can lower it to one
-//! wide vector compare + movemask instead of a data-dependent early-exit
-//! scan. Per-node *counts* live in the [`CountStore`], not in the node, so
-//! the walk code is identical for every substrate.
+//! node 0). A node's incoming edge carries a **multi-token label** stored as
+//! a [`SegRef`] — a `(segment, start, len)` sub-range of a [`SegmentPool`]:
+//! an append-only token store deduplicated by a cheap hash-cons (interning a
+//! rollout that was seen before, e.g. the same problem re-sampled across
+//! epochs, adds **zero** bytes). The pool is shared — one [`SharedPool`]
+//! can back every shard of a drafter (and its prefix router), so identical
+//! rollout content is stored once process-wide, not once per shard. Pool
+//! segments are reference-counted by the edges that use them; segments
+//! whose count drops to zero (trie compaction, dropped shards) are dead,
+//! and the pool rewrites itself to drop dead bytes once they dominate.
+//!
+//! Child edges still use [`ChildTable`] keyed by the edge label's FIRST
+//! token: up to [`INLINE_CHILDREN`] children as parallel sorted arrays
+//! inside the node (branchless fixed-trip-count probe), spilling to a
+//! sorted heap `Vec` for high-fanout nodes.
+//!
+//! # Counts on a compressed trie
+//!
+//! Per-node counts live in the [`CountStore`]. The key invariant that makes
+//! counting correct with multi-token edges:
+//!
+//! > **Every position strictly inside an edge `u → v` has exactly the
+//! > counts of `v`.**
+//!
+//! It holds by construction: an edge is **split** (a new explicit node is
+//! inserted, its row initialized as a *copy* of the lower node's via
+//! [`CountStore::split_node`]) whenever (a) two paths diverge mid-edge, or
+//! (b) an insertion *terminates* mid-edge — so any bump that would have
+//! differentiated an interior position forces that position to become
+//! explicit first. Consequently a mid-edge position can answer weight /
+//! epoch-row / owner-table queries by reading the edge's lower node, and
+//! every walk below is bit-identical to the uncompressed per-token trie
+//! (property-tested against an uncompressed reference).
+//!
+//! Positions (explicit or mid-edge) are represented as [`TriePos`].
 //!
 //! # Suffix links
 //!
-//! Every node stores a suffix link: the node whose string is this node's
-//! string minus its FIRST token (root for depth-1 nodes). Two consequences:
+//! Explicit node `v` stores `slink(v)`: an explicit node whose string is a
+//! prefix of `str(v)` minus its first token — *at-or-above* the (possibly
+//! implicit) suffix position. Root is always a valid target, so links are
+//! best-effort tight, never load-bearing for correctness: the O(m)
+//! deepest-suffix scan (Aho–Corasick over compressed edges) falls back via
+//! `slink` and **re-descends by skip/count** — per-edge jumps choosing
+//! children by first token only, with no label comparisons, because the
+//! string set is substring-closed (every substring ≤ the depth cap of
+//! anything inserted via [`ArenaTrie::insert_suffixes`] is itself a path).
+//! [`ArenaTrie::compact`] recomputes exact links in one arena pass.
 //!
-//! * **Deepest-suffix matching is a single O(m) forward pass**
-//!   (Aho–Corasick style): scan the last `m` context tokens once,
-//!   descending on a child hit and falling back along suffix links on a
-//!   miss. This replaces the previous monotone binary search over suffix
-//!   lengths (O(m log m) root re-walks), and before that an O(m²) rescan.
-//! * **Sliding-context insertion is one left-to-right pass**: at each
-//!   position the suffix-link chain of the current deepest node IS the set
-//!   of parents to extend, so inserting all depth-capped suffixes costs one
-//!   child probe per count bump and never re-walks from the root. The walk
-//!   maintenance itself is O(1) amortized per token; the D count bumps per
-//!   position are information-theoretically required (every suffix node's
-//!   count changes).
+//! # Cost model
 //!
-//! The trie's string set is *substring-closed* (every substring ≤ the depth
-//! cap of anything inserted via [`ArenaTrie::insert_suffixes`] is itself a
-//! path), which gives the invariant the suffix-link machinery relies on:
-//! the link target of every node always exists. Closure also survives
-//! [`ArenaTrie::compact`] (liveness is substring-closed too — see
-//! `window.rs`), so compaction can rebuild all links in one BFS with the
-//! textbook rule `link(child(u, t)) = child(link(u), t)`.
+//! * `insert_suffixes`: one skip/count walk per start position — O(edges on
+//!   the path) child probes plus one label comparison run; count bumps are
+//!   per *explicit node*, not per token, so shared-prefix content pays a
+//!   few bumps per position instead of `max_depth`.
+//! * deepest-suffix match: single O(m) forward pass, amortized via links.
+//! * greedy draft walk: O(budget) — inside an edge the continuation is
+//!   forced (no probe at all); at nodes one branchless table scan.
+//! * memory: nodes ∝ branching + termination points (not tokens); label
+//!   bytes interned and deduplicated across every trie sharing the pool.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::tokens::TokenId;
 
 /// Children stored inline per node before spilling to a sorted heap vector.
-/// Widened from 4 after the probe became branchless: 8 slots are one u32x8
-/// compare, and deeper-than-root trie nodes almost never exceed it.
+/// 8 slots are one u32x8 compare, and deeper-than-root trie nodes almost
+/// never exceed it.
 pub(crate) const INLINE_CHILDREN: usize = 8;
 
 /// Sorted child table: inline small-array storage with sorted-`Vec` spill.
+/// Keys are the FIRST token of each child's edge label.
 ///
 /// Iteration order is always ascending token id, which the draft walks rely
 /// on for deterministic smallest-token tie-breaking.
@@ -132,6 +166,26 @@ impl ChildTable {
         }
     }
 
+    /// Repoint an EXISTING token's child (edge splitting rewires the upper
+    /// half of the split edge in place).
+    pub(crate) fn set(&mut self, tok: TokenId, child: u32) {
+        if let Some(spill) = &mut self.spill {
+            if let Ok(i) = spill.binary_search_by_key(&tok, |&(t, _)| t) {
+                spill[i].1 = child;
+                return;
+            }
+        } else {
+            for i in 0..self.inline_len as usize {
+                if self.inline_tokens[i] == tok {
+                    self.inline_children[i] = child;
+                    return;
+                }
+            }
+        }
+        debug_assert!(false, "ChildTable::set on a missing token");
+        self.insert(tok, child);
+    }
+
     /// Visit children in ascending token order.
     #[inline]
     pub(crate) fn for_each<F: FnMut(TokenId, u32)>(&self, mut f: F) {
@@ -165,10 +219,234 @@ impl ChildTable {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Token-segment pool (interned edge labels)
+// ---------------------------------------------------------------------------
+
+/// A sub-range of one pool segment: the label of a trie edge.
+/// `start`/`len` are relative to the segment, so pool compaction (which only
+/// moves whole segments) never has to touch an edge.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SegRef {
+    seg: u32,
+    start: u32,
+    len: u32,
+}
+
+impl SegRef {
+    pub(crate) const EMPTY: SegRef = SegRef { seg: 0, start: 0, len: 0 };
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct SegMeta {
+    off: u32,
+    /// 0 marks a dead/free slot.
+    len: u32,
+    /// Number of trie edges referencing (a sub-range of) this segment.
+    rc: u32,
+}
+
+/// Live-vs-allocated byte accounting of a [`SharedPool`] (diagnostics; the
+/// node/segment/byte telemetry gauges read this).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// Live (referenced) interned segments.
+    pub segments: usize,
+    /// Tokens held by live segments.
+    pub live_tokens: usize,
+    /// Dead interior tokens awaiting pool compaction.
+    pub dead_tokens: usize,
+    /// Approximate heap bytes owned by the pool (token store + metadata).
+    pub heap_bytes: usize,
+}
+
+/// Append-only, hash-consed token store backing every edge label of the
+/// tries that share it. Interning content that is already present returns
+/// the existing segment (zero growth) — the shared-prefix win for repeated
+/// same-problem rollouts. Segments are refcounted by edges; dead segments
+/// are reclaimed by an in-place rewrite once they dominate the store.
+#[derive(Debug, Default)]
+pub(crate) struct SegmentPool {
+    toks: Vec<TokenId>,
+    segs: Vec<SegMeta>,
+    /// Content hash → candidate segment ids (verified on collision).
+    by_hash: HashMap<u64, Vec<u32>>,
+    /// Dead `segs` slots available for reuse.
+    free: Vec<u32>,
+    /// Interior dead tokens (tail deaths are truncated immediately).
+    dead_toks: usize,
+    live_segs: usize,
+}
+
+fn hash_tokens(toks: &[TokenId]) -> u64 {
+    let mut h = DefaultHasher::new();
+    toks.hash(&mut h);
+    h.finish()
+}
+
+impl SegmentPool {
+    /// Intern `toks`, returning a segment id whose content equals `toks`.
+    /// The returned segment may have `rc == 0` (fresh); callers retain it
+    /// per edge created and should [`SegmentPool::release_if_unused`] after
+    /// an insertion that created no edges.
+    pub(crate) fn intern(&mut self, toks: &[TokenId]) -> u32 {
+        debug_assert!(!toks.is_empty());
+        let h = hash_tokens(toks);
+        if let Some(cands) = self.by_hash.get(&h) {
+            for &id in cands {
+                let m = self.segs[id as usize];
+                if m.len as usize == toks.len()
+                    && &self.toks[m.off as usize..(m.off + m.len) as usize] == toks
+                {
+                    return id;
+                }
+            }
+        }
+        let off = self.toks.len() as u32;
+        self.toks.extend_from_slice(toks);
+        let meta = SegMeta { off, len: toks.len() as u32, rc: 0 };
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.segs[id as usize] = meta;
+                id
+            }
+            None => {
+                self.segs.push(meta);
+                (self.segs.len() - 1) as u32
+            }
+        };
+        self.by_hash.entry(h).or_default().push(id);
+        self.live_segs += 1;
+        id
+    }
+
+    #[inline]
+    pub(crate) fn retain(&mut self, seg: u32) {
+        self.segs[seg as usize].rc += 1;
+    }
+
+    pub(crate) fn release(&mut self, seg: u32) {
+        let m = &mut self.segs[seg as usize];
+        debug_assert!(m.rc > 0, "segment over-released");
+        m.rc -= 1;
+        if m.rc == 0 {
+            self.kill(seg);
+            self.maybe_compact();
+        }
+    }
+
+    /// Free a freshly interned segment that ended up with no edges (the
+    /// inserted content was already fully present in the trie).
+    pub(crate) fn release_if_unused(&mut self, seg: u32) {
+        if self.segs[seg as usize].rc == 0 && self.segs[seg as usize].len > 0 {
+            self.kill(seg);
+        }
+    }
+
+    fn kill(&mut self, seg: u32) {
+        let m = self.segs[seg as usize];
+        let h = hash_tokens(&self.toks[m.off as usize..(m.off + m.len) as usize]);
+        if let Some(c) = self.by_hash.get_mut(&h) {
+            c.retain(|&id| id != seg);
+            if c.is_empty() {
+                self.by_hash.remove(&h);
+            }
+        }
+        if (m.off + m.len) as usize == self.toks.len() {
+            // Tail segment: reclaim immediately.
+            self.toks.truncate(m.off as usize);
+        } else {
+            self.dead_toks += m.len as usize;
+        }
+        self.segs[seg as usize] = SegMeta::default();
+        self.free.push(seg);
+        self.live_segs -= 1;
+    }
+
+    /// Token slice of an edge label. Safe for [`SegRef::EMPTY`].
+    #[inline]
+    pub(crate) fn slice(&self, r: SegRef) -> &[TokenId] {
+        if r.len == 0 {
+            return &[];
+        }
+        let m = self.segs[r.seg as usize];
+        let a = (m.off + r.start) as usize;
+        &self.toks[a..a + r.len as usize]
+    }
+
+    /// Rewrite the token store dropping dead interior bytes once they
+    /// outweigh the live ones. Only segment offsets move; every `SegRef`
+    /// (segment id + relative range) stays valid.
+    fn maybe_compact(&mut self) {
+        if self.toks.len() < 4096 || self.dead_toks * 2 <= self.toks.len() {
+            return;
+        }
+        let mut live: Vec<u32> = (0..self.segs.len() as u32)
+            .filter(|&i| self.segs[i as usize].len > 0)
+            .collect();
+        live.sort_by_key(|&i| self.segs[i as usize].off);
+        let mut w = 0usize;
+        for id in live {
+            let m = self.segs[id as usize];
+            let (off, len) = (m.off as usize, m.len as usize);
+            self.toks.copy_within(off..off + len, w);
+            self.segs[id as usize].off = w as u32;
+            w += len;
+        }
+        self.toks.truncate(w);
+        self.dead_toks = 0;
+    }
+
+    pub(crate) fn stats(&self) -> PoolStats {
+        PoolStats {
+            segments: self.live_segs,
+            live_tokens: self.toks.len() - self.dead_toks,
+            dead_tokens: self.dead_toks,
+            heap_bytes: self.toks.capacity() * std::mem::size_of::<TokenId>()
+                + self.segs.capacity() * std::mem::size_of::<SegMeta>()
+                + self.by_hash.len()
+                    * (std::mem::size_of::<u64>() + std::mem::size_of::<Vec<u32>>() + 16),
+        }
+    }
+}
+
+/// Cloneable handle to a [`SegmentPool`] shared by any number of tries
+/// (e.g. every history shard of a drafter plus its prefix router). Interior
+/// mutability via a mutex: every public trie operation locks once — shards
+/// are driven from one thread at a time, so the lock is uncontended; it
+/// exists so the drafter stays `Send`.
+#[derive(Debug, Clone, Default)]
+pub struct SharedPool {
+    inner: Arc<Mutex<SegmentPool>>,
+}
+
+impl SharedPool {
+    pub fn new() -> Self {
+        SharedPool::default()
+    }
+
+    pub(crate) fn lock(&self) -> MutexGuard<'_, SegmentPool> {
+        // Poison recovery: pool mutations are self-contained, and aborting
+        // inside `ArenaTrie::drop` on an unrelated panic would be worse.
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.lock().stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CountStore
+// ---------------------------------------------------------------------------
+
 /// What a trie counts per node. The walk code in [`ArenaTrie`] is generic
 /// over this, so the counting suffix trie (plain `u64`), the fused epoch
-/// trie (epoch-tagged ring slots) and the prefix router (shard-owner
-/// tables) share one implementation of every traversal.
+/// trie (per-epoch rows) and the prefix router (shard-owner tables) share
+/// one implementation of every traversal.
 pub trait CountStore: Clone + std::fmt::Debug + Send {
     /// Insert-time context: which stream the bump belongs to (an epoch, a
     /// shard id, or `()` for plain counting).
@@ -190,6 +468,11 @@ pub trait CountStore: Clone + std::fmt::Debug + Send {
     /// Append (a copy of) `src`'s payload for node `old` — the compaction
     /// counterpart of [`CountStore::push_node`].
     fn copy_node_from(&mut self, src: &Self, old: usize);
+    /// An edge was split: append a row for the NEW upper node, initialized
+    /// as a **copy of `child`'s row** — interior positions of an edge share
+    /// the lower node's counts (the compressed-counting invariant, see
+    /// module docs), so the split must materialize exactly that state.
+    fn split_node(&mut self, child: usize);
     /// Heap bytes owned by the store (diagnostics).
     fn heap_bytes(&self) -> usize;
 }
@@ -234,35 +517,127 @@ impl CountStore for Counts {
         self.counts.push(src.counts[old]);
     }
 
+    fn split_node(&mut self, child: usize) {
+        let c = self.counts[child];
+        self.counts.push(c);
+    }
+
     fn heap_bytes(&self) -> usize {
         self.counts.capacity() * std::mem::size_of::<u64>()
     }
 }
 
-#[derive(Debug, Clone, Default)]
+// ---------------------------------------------------------------------------
+// The compressed arena trie
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
 struct Node {
+    /// Child edges keyed by the first token of the child's label.
     children: ChildTable,
-    /// Node of this node's string minus its first token; root (0) for
-    /// depth-1 nodes. Maintained by `insert_suffixes`; NOT maintained by
-    /// `insert_prefix` (prefix-only tries never suffix-match).
-    suffix_link: u32,
+    /// Incoming edge label ([`SegRef::EMPTY`] for the root).
+    label: SegRef,
+    parent: u32,
+    /// Token depth (= parent depth + label len).
+    depth: u32,
+    /// Explicit node at-or-above the position of `str(self)` minus its
+    /// first token; 0 (root, always valid) when unknown. Maintained
+    /// best-effort by `insert_suffixes`/`split_edge`, recomputed exactly by
+    /// `compact`. NOT meaningful for prefix-only tries (`insert_prefix`).
+    slink: u32,
 }
 
-/// Depth-capped arena trie, generic over what each node counts.
-#[derive(Debug, Clone)]
+impl Node {
+    fn root() -> Node {
+        Node {
+            children: ChildTable::default(),
+            label: SegRef::EMPTY,
+            parent: 0,
+            depth: 0,
+            slink: 0,
+        }
+    }
+}
+
+/// A position in the trie: `matched` tokens of `node`'s incoming edge label
+/// are consumed (`matched == label len` ⇒ exactly at `node`; the root is
+/// `{node: 0, matched: 0}`). Mid-edge positions answer count queries via
+/// [`TriePos::row`] — the edge's lower node — which is exact by the
+/// compressed-counting invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TriePos {
+    node: u32,
+    matched: u32,
+}
+
+impl TriePos {
+    pub const ROOT: TriePos = TriePos { node: 0, matched: 0 };
+
+    /// The [`CountStore`] row visible at this position.
+    #[inline]
+    pub fn row(&self) -> usize {
+        self.node as usize
+    }
+}
+
+/// Depth-capped path-compressed arena trie, generic over what each node
+/// counts, with edge labels interned in a (possibly shared) [`SegmentPool`].
+#[derive(Debug)]
 pub struct ArenaTrie<S: CountStore> {
     nodes: Vec<Node>,
     store: S,
     max_depth: usize,
+    pool: SharedPool,
+    /// Running sum of all edge-label lengths (splits conserve it, leaves
+    /// add, compaction recomputes) so `token_positions` is O(1) — it is
+    /// polled per step by the telemetry gauges.
+    label_tokens: usize,
+}
+
+impl<S: CountStore> Clone for ArenaTrie<S> {
+    fn clone(&self) -> Self {
+        // The clone shares the pool; every cloned edge is one more
+        // reference to its segment.
+        {
+            let mut pg = self.pool.lock();
+            for n in &self.nodes[1..] {
+                pg.retain(n.label.seg);
+            }
+        }
+        ArenaTrie {
+            nodes: self.nodes.clone(),
+            store: self.store.clone(),
+            max_depth: self.max_depth,
+            pool: self.pool.clone(),
+            label_tokens: self.label_tokens,
+        }
+    }
+}
+
+impl<S: CountStore> Drop for ArenaTrie<S> {
+    fn drop(&mut self) {
+        let mut pg = self.pool.lock();
+        for n in &self.nodes[1..] {
+            pg.release(n.label.seg);
+        }
+    }
 }
 
 impl<S: CountStore> ArenaTrie<S> {
-    pub fn new(max_depth: usize, mut store: S) -> Self {
+    pub fn new(max_depth: usize, store: S) -> Self {
+        Self::with_pool(max_depth, store, SharedPool::new())
+    }
+
+    /// Build a trie whose edge labels are interned in `pool` — share one
+    /// pool across shards so identical rollout content is stored once.
+    pub fn with_pool(max_depth: usize, mut store: S, pool: SharedPool) -> Self {
         store.push_node(); // root payload
         ArenaTrie {
-            nodes: vec![Node::default()],
+            nodes: vec![Node::root()],
             store,
             max_depth: max_depth.max(1),
+            pool,
+            label_tokens: 0,
         }
     }
 
@@ -270,8 +645,23 @@ impl<S: CountStore> ArenaTrie<S> {
         self.max_depth
     }
 
+    /// Explicit nodes allocated (root included). With path compression this
+    /// is branching + termination points, NOT indexed token positions.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// What a one-node-per-token trie would allocate for the same content:
+    /// the root plus one position per edge-label token. `token_positions()
+    /// / node_count()` is the compression ratio the telemetry gauges track.
+    /// O(1): maintained incrementally (splits conserve label tokens).
+    pub fn token_positions(&self) -> usize {
+        debug_assert_eq!(
+            self.label_tokens,
+            self.nodes[1..].iter().map(|n| n.label.len as usize).sum::<usize>(),
+            "label-token counter drifted"
+        );
+        1 + self.label_tokens
     }
 
     pub fn store(&self) -> &S {
@@ -282,283 +672,634 @@ impl<S: CountStore> ArenaTrie<S> {
         &mut self.store
     }
 
-    /// Suffix link of `node` (root links to itself). Valid only for tries
-    /// built with [`ArenaTrie::insert_suffixes`].
+    /// Handle to the segment pool backing this trie's edge labels.
+    pub fn pool(&self) -> SharedPool {
+        self.pool.clone()
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
     #[inline]
-    pub fn suffix_link(&self, node: usize) -> usize {
-        self.nodes[node].suffix_link as usize
+    fn label_len(&self, v: u32) -> u32 {
+        self.nodes[v as usize].label.len
     }
 
-    /// Visit `node`'s children in ascending token order.
-    pub fn for_each_child<F: FnMut(TokenId, usize)>(&self, node: usize, mut f: F) {
-        self.nodes[node].children.for_each(|tok, child| f(tok, child as usize));
+    #[inline]
+    fn at_node(&self, p: TriePos) -> bool {
+        p.matched == self.label_len(p.node)
     }
 
-    fn get_or_create_child(&mut self, node: usize, tok: TokenId) -> usize {
-        if let Some(c) = self.nodes[node].children.get(tok) {
-            return c as usize;
-        }
-        let id = self.nodes.len();
-        self.nodes.push(Node::default());
+    /// Append a fresh leaf under `parent`; the caller wires counts.
+    fn add_leaf(&mut self, parent: u32, first_tok: TokenId, label: SegRef) -> u32 {
+        let id = self.nodes.len() as u32;
+        let depth = self.nodes[parent as usize].depth + label.len;
+        self.nodes.push(Node {
+            children: ChildTable::default(),
+            label,
+            parent,
+            depth,
+            slink: 0,
+        });
         self.store.push_node();
-        self.nodes[node].children.insert(tok, id as u32);
+        self.nodes[parent as usize].children.insert(first_tok, id);
+        self.label_tokens += label.len as usize;
         id
     }
 
+    /// Split `child`'s incoming edge after `m` label tokens (1 ≤ m < len),
+    /// inserting a new explicit node `w` between parent and child. `w`'s
+    /// store row is a copy of `child`'s ([`CountStore::split_node`]), which
+    /// is exactly what the interior positions held implicitly.
+    fn split_edge(&mut self, child: u32, m: u32, pg: &mut SegmentPool) -> u32 {
+        let c = child as usize;
+        let lab = self.nodes[c].label;
+        debug_assert!(m >= 1 && m < lab.len);
+        let parent = self.nodes[c].parent;
+        let upper = SegRef { seg: lab.seg, start: lab.start, len: m };
+        let lower = SegRef { seg: lab.seg, start: lab.start + m, len: lab.len - m };
+        let first_upper = pg.slice(upper)[0];
+        let first_lower = pg.slice(lower)[0];
+        pg.retain(lab.seg); // the segment now backs two edges
+        let wdepth = self.nodes[c].depth - lower.len;
+        // The child's at-or-above link stays valid for `w` iff it is not
+        // deeper than w's own suffix position. Otherwise fall back to the
+        // PARENT's link — always valid (str(parent)[1..] is a prefix of
+        // str(w)[1..], and its link sits at-or-above that) and far tighter
+        // than the root for deep splits, which keeps the skip/count
+        // re-descents short even in tries that never compact (window_all).
+        let cslink = self.nodes[c].slink;
+        let wslink = if self.nodes[cslink as usize].depth + 1 <= wdepth {
+            cslink
+        } else {
+            self.nodes[parent as usize].slink
+        };
+        let w = self.nodes.len() as u32;
+        self.nodes.push(Node {
+            children: ChildTable::default(),
+            label: upper,
+            parent,
+            depth: wdepth,
+            slink: wslink,
+        });
+        self.store.split_node(c);
+        self.nodes[w as usize].children.insert(first_lower, child);
+        self.nodes[c].label = lower;
+        self.nodes[c].parent = w;
+        self.nodes[parent as usize].children.set(first_upper, w);
+        w
+    }
+
     /// Index every suffix of `tokens` (truncated at `max_depth`), bumping
-    /// counts under `tag` along each path — one left-to-right pass.
+    /// counts under `tag` along each path.
     ///
-    /// The active chain: `deepest` is the node of the longest (depth-capped)
-    /// suffix of the processed prefix; its suffix-link chain enumerates
-    /// every shorter suffix. Appending a token extends each chain node by
-    /// one child (created on demand, link wired to the next chain level),
-    /// so there is exactly one child probe per count bump and no root
-    /// re-walk per start position.
+    /// The whole rollout is interned ONCE; every edge created below is a
+    /// sub-range of that one segment, so a repeated rollout adds zero pool
+    /// bytes and (once its paths exist) zero nodes. Each start position is
+    /// one skip/count walk; edges are split at divergence and termination
+    /// points so the compressed-counting invariant holds (module docs).
+    /// Suffix links of nodes created at position `i` are resolved against
+    /// position `i+1`'s walk — whose path IS the one-shorter suffix — and
+    /// default to the root (always valid) when the walk can't witness them.
     pub fn insert_suffixes(&mut self, tokens: &[TokenId], tag: S::Tag) {
-        let mut deepest = 0usize;
-        let mut depth = 0usize;
-        for &tok in tokens {
-            // Root counts one occurrence of the empty context per position.
-            self.store.bump(0, tag);
-            // Deepest parent allowed to grow: depth at most max_depth − 1.
-            let mut q = if depth == self.max_depth {
-                self.nodes[deepest].suffix_link as usize
-            } else {
-                deepest
-            };
-            let mut new_deepest = usize::MAX;
-            let mut prev_child = usize::MAX;
+        if tokens.is_empty() {
+            return;
+        }
+        let pool = self.pool.clone();
+        let mut pg = pool.lock();
+        let seg = pg.intern(tokens);
+        // (node, slink target depth) created at the previous start.
+        let mut pending: Vec<(u32, u32)> = Vec::new();
+        let mut next_pending: Vec<(u32, u32)> = Vec::new();
+        // Explicit nodes on the current walk, ascending (node, depth).
+        let mut path: Vec<(u32, u32)> = Vec::new();
+        for i in 0..tokens.len() {
+            let slen = (tokens.len() - i).min(self.max_depth);
+            let s = &tokens[i..i + slen];
+            self.store.bump(0, tag); // root: one occurrence of ε per position
+            path.clear();
+            next_pending.clear();
+            let mut u: u32 = 0;
+            let mut j: usize = 0;
             loop {
-                let child = self.get_or_create_child(q, tok);
-                self.store.bump(child, tag);
-                if new_deepest == usize::MAX {
-                    new_deepest = child;
-                }
-                if prev_child != usize::MAX {
-                    // The depth-ℓ child's suffix is the depth-(ℓ−1) child.
-                    self.nodes[prev_child].suffix_link = child as u32;
-                }
-                prev_child = child;
-                if q == 0 {
-                    // Depth-1 child: its suffix is the empty string.
-                    self.nodes[prev_child].suffix_link = 0;
+                if j == slen {
                     break;
                 }
-                q = self.nodes[q].suffix_link as usize;
+                let t = s[j];
+                let Some(c) = self.nodes[u as usize].children.get(t) else {
+                    // New leaf: the rest of s as one edge.
+                    let label = SegRef {
+                        seg,
+                        start: (i + j) as u32,
+                        len: (slen - j) as u32,
+                    };
+                    pg.retain(seg);
+                    let leaf = self.add_leaf(u, t, label);
+                    self.store.bump(leaf as usize, tag);
+                    path.push((leaf, slen as u32));
+                    next_pending.push((leaf, (slen - 1) as u32));
+                    break;
+                };
+                let lab = self.nodes[c as usize].label;
+                let ll = lab.len as usize;
+                let lim = ll.min(slen - j);
+                let lab_toks = pg.slice(lab);
+                let mut m = 1usize; // first token matched via the child key
+                while m < lim && lab_toks[m] == s[j + m] {
+                    m += 1;
+                }
+                if m == ll {
+                    // Edge fully traversed.
+                    self.store.bump(c as usize, tag);
+                    u = c;
+                    j += m;
+                    path.push((c, j as u32));
+                    continue;
+                }
+                // Terminates or diverges mid-edge: expose the boundary.
+                let w = self.split_edge(c, m as u32, &mut pg);
+                self.store.bump(w as usize, tag);
+                let wd = (j + m) as u32;
+                path.push((w, wd));
+                if j + m == slen {
+                    next_pending.push((w, (slen - 1) as u32));
+                } else {
+                    let label = SegRef {
+                        seg,
+                        start: (i + j + m) as u32,
+                        len: (slen - j - m) as u32,
+                    };
+                    pg.retain(seg);
+                    let leaf = self.add_leaf(w, s[j + m], label);
+                    self.store.bump(leaf as usize, tag);
+                    path.push((leaf, slen as u32));
+                    next_pending.push((w, wd - 1));
+                    next_pending.push((leaf, (slen - 1) as u32));
+                }
+                break;
             }
-            deepest = new_deepest;
-            depth = (depth + 1).min(self.max_depth);
+            // Resolve the previous start's pending links: this walk's path
+            // is its one-shorter suffix (possibly extended by one token),
+            // so the deepest path node within each target depth is a valid
+            // — and tight — link target.
+            for &(node, target) in &pending {
+                let mut best = 0u32;
+                for &(p, d) in &path {
+                    if d <= target {
+                        best = p;
+                    } else {
+                        break;
+                    }
+                }
+                self.nodes[node as usize].slink = best;
+            }
+            std::mem::swap(&mut pending, &mut next_pending);
         }
+        pg.release_if_unused(seg);
     }
 
     /// Index ONLY the prefix path of `tokens` (truncated at `max_depth`),
     /// bumping counts under `tag` along it (the router's registration —
-    /// no suffix links, the root is not counted). Returns the deepest node.
+    /// no suffix links, the root is not counted). Returns the deepest node
+    /// — always explicit: the walk splits an edge it terminates inside.
     pub fn insert_prefix(&mut self, tokens: &[TokenId], tag: S::Tag) -> usize {
-        let mut node = 0usize;
-        for &tok in tokens.iter().take(self.max_depth) {
-            node = self.get_or_create_child(node, tok);
-            self.store.bump(node, tag);
+        let want = tokens.len().min(self.max_depth);
+        if want == 0 {
+            return 0;
         }
-        node
+        let pool = self.pool.clone();
+        let mut pg = pool.lock();
+        let seg = pg.intern(&tokens[..want]);
+        let mut u: u32 = 0;
+        let mut j: usize = 0;
+        let end = loop {
+            if j == want {
+                break u;
+            }
+            let t = tokens[j];
+            let Some(c) = self.nodes[u as usize].children.get(t) else {
+                let label = SegRef { seg, start: j as u32, len: (want - j) as u32 };
+                pg.retain(seg);
+                let leaf = self.add_leaf(u, t, label);
+                self.store.bump(leaf as usize, tag);
+                break leaf;
+            };
+            let lab = self.nodes[c as usize].label;
+            let ll = lab.len as usize;
+            let lim = ll.min(want - j);
+            let lab_toks = pg.slice(lab);
+            let mut m = 1usize;
+            while m < lim && lab_toks[m] == tokens[j + m] {
+                m += 1;
+            }
+            if m == ll {
+                self.store.bump(c as usize, tag);
+                u = c;
+                j += m;
+                continue;
+            }
+            let w = self.split_edge(c, m as u32, &mut pg);
+            self.store.bump(w as usize, tag);
+            if j + m == want {
+                break w;
+            }
+            let label = SegRef {
+                seg,
+                start: (j + m) as u32,
+                len: (want - j - m) as u32,
+            };
+            pg.retain(seg);
+            let leaf = self.add_leaf(w, tokens[j + m], label);
+            self.store.bump(leaf as usize, tag);
+            break leaf;
+        };
+        pg.release_if_unused(seg);
+        end as usize
     }
 
     /// Walk `pattern` exactly from the root; `None` unless fully matched
-    /// (structurally — no count filter).
-    pub fn locate(&self, pattern: &[TokenId]) -> Option<usize> {
-        let mut node = 0usize;
-        for &tok in pattern {
-            node = self.nodes[node].children.get(tok)? as usize;
+    /// (structurally — no count filter). The match may end mid-edge.
+    pub fn locate(&self, pattern: &[TokenId]) -> Option<TriePos> {
+        let pg = self.pool.lock();
+        let mut u: u32 = 0;
+        let mut j = 0usize;
+        while j < pattern.len() {
+            let c = self.nodes[u as usize].children.get(pattern[j])?;
+            let lab = self.nodes[c as usize].label;
+            let lt = pg.slice(lab);
+            let take = (lab.len as usize).min(pattern.len() - j);
+            if lt[..take] != pattern[j..j + take] {
+                return None;
+            }
+            if take < lab.len as usize {
+                return Some(TriePos { node: c, matched: take as u32 });
+            }
+            u = c;
+            j += take;
         }
-        Some(node)
+        Some(TriePos { node: u, matched: self.label_len(u) })
     }
 
-    /// Visit the nodes along `tokens`' depth-capped prefix path (root
-    /// excluded), stopping at the first structurally missing child.
-    /// Returns how many tokens matched.
-    pub fn walk_prefix_path<F: FnMut(usize)>(&self, tokens: &[TokenId], mut f: F) -> usize {
-        let mut node = 0usize;
-        let mut matched = 0usize;
-        for &tok in tokens.iter().take(self.max_depth) {
-            let Some(next) = self.nodes[node].children.get(tok) else {
-                break;
-            };
-            node = next as usize;
-            matched += 1;
-            f(node);
+    /// Walk `tokens`' depth-capped prefix; if it is fully present, ensure
+    /// the walk's end sits on an EXPLICIT node (splitting the final edge
+    /// once if it ends mid-edge) and return the explicit nodes along the
+    /// path in ascending depth. `None` — with nothing modified — when the
+    /// prefix is not fully present. (The router's unregister path: each
+    /// returned node gets exactly one un-bump, mirroring how registration
+    /// bumped once per explicit node on the same boundaries.)
+    pub fn prefix_path_split(&mut self, tokens: &[TokenId]) -> Option<Vec<usize>> {
+        let want = tokens.len().min(self.max_depth);
+        let pool = self.pool.clone();
+        let mut pg = pool.lock();
+        let mut u: u32 = 0;
+        let mut j = 0usize;
+        let mut out: Vec<usize> = Vec::new();
+        while j < want {
+            let c = self.nodes[u as usize].children.get(tokens[j])?;
+            let lab = self.nodes[c as usize].label;
+            let ll = lab.len as usize;
+            let lim = ll.min(want - j);
+            let lt = pg.slice(lab);
+            let mut m = 0usize;
+            while m < lim && lt[m] == tokens[j + m] {
+                m += 1;
+            }
+            if m < lim {
+                return None;
+            }
+            if m < ll {
+                let w = self.split_edge(c, m as u32, &mut pg);
+                out.push(w as usize);
+                return Some(out);
+            }
+            out.push(c as usize);
+            u = c;
+            j += m;
         }
-        matched
+        Some(out)
     }
 
-    /// Deepest node along `context`'s prefix (≤ `max_depth`) whose weight
-    /// under `filter` is nonzero; returns `(node, depth)`. Descends through
-    /// zero-weight interior nodes (they may have been drained by eviction)
-    /// but never reports one.
+    /// Deepest position along `context`'s prefix (≤ `max_depth`) whose
+    /// weight under `filter` is nonzero; returns `(row node, depth)`.
+    /// Descends through zero-weight edges (they may have been drained by
+    /// eviction) but never reports one.
     pub fn deepest_visible_prefix(
         &self,
         context: &[TokenId],
         filter: S::Filter,
     ) -> Option<(usize, usize)> {
-        let mut node = 0usize;
-        let mut depth = 0usize;
+        let pg = self.pool.lock();
+        let cap = context.len().min(self.max_depth);
+        let mut u: u32 = 0;
+        let mut j = 0usize;
         let mut best = None;
-        for &tok in context.iter().take(self.max_depth) {
-            let Some(next) = self.nodes[node].children.get(tok) else {
+        while j < cap {
+            let Some(c) = self.nodes[u as usize].children.get(context[j]) else {
                 break;
             };
-            node = next as usize;
-            depth += 1;
-            if self.store.weight(node, filter) > 0 {
-                best = Some((node, depth));
+            let lab = self.nodes[c as usize].label;
+            let lim = (lab.len as usize).min(cap - j);
+            let lt = pg.slice(lab);
+            let mut m = 0usize;
+            while m < lim && lt[m] == context[j + m] {
+                m += 1;
             }
+            if m > 0 && self.store.weight(c as usize, filter) > 0 {
+                best = Some((c as usize, j + m));
+            }
+            if m < lab.len as usize {
+                break;
+            }
+            u = c;
+            j += m;
         }
         best
     }
 
-    /// Longest suffix of `context` (length ≤ `max_len`) whose node is
+    /// Locate the structurally present string `s` by skip/count, starting
+    /// from explicit node `from` whose string is a known prefix of `s`.
+    /// Presence is guaranteed by substring closure, so children are chosen
+    /// by first token only — O(1) per edge, no label comparisons. Thin
+    /// wrapper over [`ArenaTrie::descend_pos`], the one skip/count descent.
+    fn canonize(&self, from: u32, s: &[TokenId]) -> TriePos {
+        let j = self.nodes[from as usize].depth as usize;
+        debug_assert!(j <= s.len(), "suffix link deeper than its target");
+        let at_from = TriePos { node: from, matched: self.label_len(from) };
+        if j >= s.len() {
+            return at_from;
+        }
+        self.descend_pos(at_from, &s[j..])
+    }
+
+    /// Longest suffix of `context` (length ≤ `max_len`) whose position is
     /// visible under `filter`, as ONE O(m) forward pass over the last
-    /// `m = min(len, max_len, max_depth)` context tokens using suffix links
-    /// (Aho–Corasick): descend on a visible child, fall back along links on
-    /// a miss. Returns `(match_len, node)`; `(0, root)` when nothing
-    /// matches. Correct because the visible string set is substring-closed
-    /// (see module docs), which makes suffix presence monotone in length.
+    /// `m = min(len, max_len, max_depth)` context tokens (Aho–Corasick over
+    /// compressed edges): extend inside the current edge by direct label
+    /// comparison, descend to a visible child edge at nodes, and on a miss
+    /// fall back one token — suffix link of the nearest explicit node, then
+    /// a skip/count re-descent of the (present, by substring closure)
+    /// shorter suffix. Returns `(match_len, position)`; `(0, ROOT)` when
+    /// nothing matches.
     pub fn deepest_suffix(
         &self,
         context: &[TokenId],
         max_len: usize,
         filter: S::Filter,
-    ) -> (usize, usize) {
+    ) -> (usize, TriePos) {
         let cap = context.len().min(max_len).min(self.max_depth);
         if cap == 0 {
-            return (0, 0);
+            return (0, TriePos::ROOT);
         }
-        let mut node = 0usize;
-        let mut depth = 0usize;
-        for &tok in &context[context.len() - cap..] {
+        let tail = &context[context.len() - cap..];
+        let pg = self.pool.lock();
+        let mut v: u32 = 0;
+        let mut k: u32 = 0;
+        let mut d: usize = 0;
+        for idx in 0..tail.len() {
+            let t = tail[idx];
             loop {
-                let next = self.nodes[node]
-                    .children
-                    .get(tok)
-                    .map(|c| c as usize)
-                    .filter(|&c| self.store.weight(c, filter) > 0);
-                match next {
-                    Some(c) => {
-                        node = c;
-                        depth += 1;
+                let ll = self.label_len(v);
+                if k == ll {
+                    // At an explicit node: probe for a visible child edge.
+                    let c = self.nodes[v as usize]
+                        .children
+                        .get(t)
+                        .filter(|&c| self.store.weight(c as usize, filter) > 0);
+                    if let Some(c) = c {
+                        v = c;
+                        k = 1;
+                        d += 1;
                         break;
                     }
-                    None if node == 0 => break,
-                    None => {
-                        node = self.nodes[node].suffix_link as usize;
-                        depth -= 1;
+                } else {
+                    // Inside an edge: the next label token decides.
+                    let lt = pg.slice(self.nodes[v as usize].label);
+                    if lt[k as usize] == t {
+                        k += 1;
+                        d += 1;
+                        break;
                     }
                 }
+                if d == 0 {
+                    break; // token unmatched even at the root
+                }
+                d -= 1;
+                let anchor = if k == ll { v } else { self.nodes[v as usize].parent };
+                let from = self.nodes[anchor as usize].slink;
+                let p = self.canonize(from, &tail[idx - d..idx]);
+                v = p.node;
+                k = p.matched;
             }
         }
-        (depth, node)
+        (d, TriePos { node: v, matched: k })
     }
 
-    /// Greedy highest-weight-child walk from `start`: repeatedly step to
-    /// the child with the largest visible weight (ties broken toward the
-    /// smallest token id via ascending iteration + strict `>`), up to
-    /// `budget` tokens. Returns the draft and per-token empirical
-    /// confidence `weight(child)/weight(node)`.
+    /// Visit every suffix position of `matched` (the deepest matched
+    /// suffix, located at `start`): the callback receives `(depth, pos)`
+    /// for depth = `matched.len(), …, 1` and returns whether to continue.
+    /// One suffix-link + skip/count re-descent per step — the window
+    /// drafter's per-epoch chain scan.
+    pub fn walk_suffix_chain<F: FnMut(usize, TriePos) -> bool>(
+        &self,
+        matched: &[TokenId],
+        start: TriePos,
+        mut f: F,
+    ) {
+        let mut pos = start;
+        let mut d = matched.len();
+        while d > 0 {
+            if !f(d, pos) {
+                return;
+            }
+            if d == 1 {
+                return;
+            }
+            d -= 1;
+            let anchor = if self.at_node(pos) {
+                pos.node
+            } else {
+                self.nodes[pos.node as usize].parent
+            };
+            let from = self.nodes[anchor as usize].slink;
+            pos = self.canonize(from, &matched[matched.len() - d..]);
+        }
+    }
+
+    /// Greedy highest-weight walk from `start`, up to `budget` tokens.
+    /// Inside an edge the continuation is forced (interior positions share
+    /// the lower node's counts, so per-token confidence is exactly 1); at
+    /// explicit nodes the child edge with the largest visible weight wins,
+    /// ties toward the smallest first token. Returns the draft and
+    /// per-token empirical confidence `weight(child)/weight(node)` —
+    /// bit-identical to the uncompressed per-token walk.
     pub fn greedy_walk(
         &self,
-        start: usize,
+        start: TriePos,
         budget: usize,
         filter: S::Filter,
     ) -> (Vec<TokenId>, Vec<f32>) {
-        let mut node = start;
+        let pg = self.pool.lock();
+        let mut v = start.node;
+        let mut k = start.matched;
         let mut draft = Vec::with_capacity(budget);
         let mut conf = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let parent_w = self.store.weight(node, filter);
-            let mut best: Option<(TokenId, usize, u64)> = None;
-            self.nodes[node].children.for_each(|tok, child| {
-                let w = self.store.weight(child as usize, filter);
-                if w == 0 {
-                    return; // invisible under this filter
+        while draft.len() < budget {
+            let ll = self.label_len(v);
+            if k < ll {
+                if self.store.weight(v as usize, filter) == 0 {
+                    break;
                 }
-                match best {
-                    None => best = Some((tok, child as usize, w)),
-                    Some((_, _, bw)) => {
-                        if w > bw {
-                            best = Some((tok, child as usize, w));
+                let lt = pg.slice(self.nodes[v as usize].label);
+                draft.push(lt[k as usize]);
+                conf.push(1.0);
+                k += 1;
+            } else {
+                let parent_w = self.store.weight(v as usize, filter);
+                let mut best: Option<(TokenId, u32, u64)> = None;
+                self.nodes[v as usize].children.for_each(|tok, child| {
+                    let w = self.store.weight(child as usize, filter);
+                    if w == 0 {
+                        return; // invisible under this filter
+                    }
+                    match best {
+                        None => best = Some((tok, child, w)),
+                        Some((_, _, bw)) => {
+                            if w > bw {
+                                best = Some((tok, child, w));
+                            }
                         }
                     }
-                }
-            });
-            let Some((tok, child, w)) = best else { break };
-            draft.push(tok);
-            conf.push((w as f64 / parent_w.max(1) as f64) as f32);
-            node = child;
+                });
+                let Some((tok, child, w)) = best else { break };
+                draft.push(tok);
+                conf.push((w as f64 / parent_w.max(1) as f64) as f32);
+                v = child;
+                k = 1;
+            }
         }
         (draft, conf)
     }
 
     /// Rebuild the arena keeping only nodes for which `keep` is true
-    /// (liveness must be ancestor-closed: a kept node's parent is kept).
-    /// Payloads are copied verbatim via [`CountStore::copy_node_from`] and
-    /// suffix links are recomputed in one BFS — valid because the kept
-    /// string set stays substring-closed.
+    /// (liveness must be ancestor-closed AND substring-closed — true for
+    /// every store here: counts only decrease toward longer strings).
+    /// Payloads are copied verbatim, dropped edges release their pool
+    /// segments, and suffix links are recomputed EXACTLY in one pass.
     pub fn compact<F: Fn(&S, usize) -> bool>(&mut self, keep: F) {
-        let mut new_nodes: Vec<Node> = Vec::with_capacity(self.nodes.len() / 2 + 1);
-        let mut new_store = self.store.new_empty();
-        new_nodes.push(Node::default());
-        new_store.copy_node_from(&self.store, 0);
-        let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
-        let mut kept: Vec<(TokenId, usize)> = Vec::new();
-        while let Some((old_id, new_id)) = stack.pop() {
-            kept.clear();
-            self.nodes[old_id].children.for_each(|tok, child| {
-                if keep(&self.store, child as usize) {
-                    kept.push((tok, child as usize));
+        let pool = self.pool.clone();
+        {
+            let mut pg = pool.lock();
+            let mut new_nodes: Vec<Node> = Vec::with_capacity(self.nodes.len() / 2 + 1);
+            let mut new_store = self.store.new_empty();
+            new_nodes.push(Node::root());
+            new_store.copy_node_from(&self.store, 0);
+            let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
+            let mut kept: Vec<(TokenId, usize)> = Vec::new();
+            let mut kept_label_tokens = 0usize;
+            while let Some((old_id, new_id)) = stack.pop() {
+                kept.clear();
+                self.nodes[old_id].children.for_each(|tok, child| {
+                    if keep(&self.store, child as usize) {
+                        kept.push((tok, child as usize));
+                    }
+                });
+                for &(tok, child_old) in &kept {
+                    let child_new = new_nodes.len();
+                    let old = &self.nodes[child_old];
+                    // Re-intern the label content instead of keeping the
+                    // old SegRef: a kept edge must not pin the (possibly
+                    // huge) original rollout segment it was sliced from —
+                    // after compaction the pool holds only live label
+                    // bytes, deduplicated across identical labels. The
+                    // intern may hand back the old segment itself when the
+                    // label IS its full content; retain/release still
+                    // balance.
+                    let content = pg.slice(old.label).to_vec();
+                    let seg = pg.intern(&content);
+                    pg.retain(seg);
+                    let label = SegRef { seg, start: 0, len: old.label.len };
+                    kept_label_tokens += old.label.len as usize;
+                    new_nodes.push(Node {
+                        children: ChildTable::default(),
+                        label,
+                        parent: new_id as u32,
+                        depth: old.depth,
+                        slink: 0,
+                    });
+                    new_store.copy_node_from(&self.store, child_old);
+                    new_nodes[new_id].children.insert(tok, child_new as u32);
+                    stack.push((child_old, child_new));
                 }
-            });
-            for &(tok, child_old) in &kept {
-                let child_new = new_nodes.len();
-                new_nodes.push(Node::default());
-                new_store.copy_node_from(&self.store, child_old);
-                new_nodes[new_id].children.insert(tok, child_new as u32);
-                stack.push((child_old, child_new));
             }
+            // Every old edge releases its segment (kept ones re-retained
+            // above, so live segments never transit through rc = 0).
+            for n in &self.nodes[1..] {
+                pg.release(n.label.seg);
+            }
+            self.nodes = new_nodes;
+            self.store = new_store;
+            self.label_tokens = kept_label_tokens;
         }
-        self.nodes = new_nodes;
-        self.store = new_store;
         self.rebuild_suffix_links();
     }
 
-    /// BFS recomputation of every suffix link after compaction:
-    /// `link(child(u, t)) = child(link(u), t)`. Substring-closure of the
-    /// kept set guarantees the target exists; the defensive root fallback
-    /// can only shorten matches, never corrupt them.
+    /// Exact suffix-link recomputation: walking the arena in allocation
+    /// order (parents precede children after `compact`'s DFS), the suffix
+    /// position of `v` is its parent's suffix position advanced by `v`'s
+    /// label — one skip/count descent per node, O(arena) total.
     fn rebuild_suffix_links(&mut self) {
-        let mut queue = std::collections::VecDeque::new();
-        let mut kids: Vec<(TokenId, usize)> = Vec::new();
-        self.nodes[0].children.for_each(|_tok, c| queue.push_back(c as usize));
-        // Depth-1 nodes link to root unconditionally.
-        for i in 0..queue.len() {
-            let c = queue[i];
-            self.nodes[c].suffix_link = 0;
-        }
-        while let Some(u) = queue.pop_front() {
-            let link_u = self.nodes[u].suffix_link as usize;
-            kids.clear();
-            self.nodes[u].children.for_each(|tok, c| kids.push((tok, c as usize)));
-            for &(tok, c) in &kids {
-                let target = self.nodes[link_u].children.get(tok);
-                debug_assert!(
-                    target.is_some(),
-                    "substring closure violated: missing suffix-link target"
-                );
-                self.nodes[c].suffix_link = target.unwrap_or(0);
-                queue.push_back(c);
-            }
+        let pool = self.pool.clone();
+        let pg = pool.lock();
+        let n = self.nodes.len();
+        let mut spos: Vec<TriePos> = vec![TriePos::ROOT; n];
+        for v in 1..n {
+            let u = self.nodes[v].parent as usize;
+            debug_assert!(u < v, "arena not in parent-first order");
+            let lab = self.nodes[v].label;
+            let lt = pg.slice(lab);
+            let p = if u == 0 {
+                // Depth-from-root edge: the suffix drops the first token.
+                self.descend_pos(TriePos::ROOT, &lt[1..])
+            } else {
+                self.descend_pos(spos[u], lt)
+            };
+            spos[v] = p;
+            self.nodes[v].slink = if p.matched == self.label_len(p.node) {
+                p.node
+            } else {
+                self.nodes[p.node as usize].parent
+            };
         }
     }
 
-    /// Approximate heap bytes (arena + child spill + store).
+    /// Advance a position by `toks`, skip/count (presence guaranteed by
+    /// substring closure of the kept set).
+    fn descend_pos(&self, from: TriePos, toks: &[TokenId]) -> TriePos {
+        let mut v = from.node;
+        let mut k = from.matched;
+        let mut i = 0usize;
+        while i < toks.len() {
+            let ll = self.label_len(v);
+            if k == ll {
+                let Some(c) = self.nodes[v as usize].children.get(toks[i]) else {
+                    debug_assert!(false, "substring closure violated in descend");
+                    return TriePos::ROOT;
+                };
+                v = c;
+                k = 0;
+                continue;
+            }
+            let step = ((ll - k) as usize).min(toks.len() - i);
+            k += step as u32;
+            i += step;
+        }
+        TriePos { node: v, matched: k }
+    }
+
+    /// Approximate heap bytes (arena + child spill + store). Pool bytes are
+    /// reported separately ([`ArenaTrie::pool_stats`]) because the pool may
+    /// be shared by many tries.
     pub fn approx_bytes(&self) -> usize {
         self.nodes.len() * std::mem::size_of::<Node>()
             + self
@@ -584,6 +1325,147 @@ mod tests {
         ArenaTrie::new(max_depth, Counts::default())
     }
 
+    fn count(t: &ArenaTrie<Counts>, p: &[u32]) -> u64 {
+        t.locate(p).map(|pos| t.store().get(pos.row())).unwrap_or(0)
+    }
+
+    /// Reconstruct the string of an explicit node from parent pointers —
+    /// test-only helper for checking suffix-link validity.
+    fn string_of(t: &ArenaTrie<Counts>, node: usize) -> Vec<u32> {
+        let mut parts: Vec<Vec<u32>> = Vec::new();
+        let mut v = node;
+        while v != 0 {
+            let pg = t.pool.lock();
+            parts.push(pg.slice(t.nodes[v].label).to_vec());
+            v = t.nodes[v].parent as usize;
+        }
+        parts.reverse();
+        parts.concat()
+    }
+
+    // -----------------------------------------------------------------
+    // The pre-compression one-node-per-token trie, kept ONLY as the
+    // executable specification the compressed walks are property-tested
+    // against: same CountStore rows, same bump pattern, naive walks.
+    // -----------------------------------------------------------------
+    struct RefTrie {
+        children: Vec<std::collections::BTreeMap<u32, usize>>,
+        counts: Vec<u64>,
+        max_depth: usize,
+    }
+
+    impl RefTrie {
+        fn new(max_depth: usize) -> RefTrie {
+            RefTrie {
+                children: vec![Default::default()],
+                counts: vec![0],
+                max_depth: max_depth.max(1),
+            }
+        }
+
+        fn child(&mut self, u: usize, t: u32) -> usize {
+            if let Some(&c) = self.children[u].get(&t) {
+                return c;
+            }
+            let id = self.children.len();
+            self.children.push(Default::default());
+            self.counts.push(0);
+            self.children[u].insert(t, id);
+            id
+        }
+
+        fn insert_suffixes(&mut self, tokens: &[u32]) {
+            for i in 0..tokens.len() {
+                self.counts[0] += 1;
+                let mut u = 0;
+                for &t in &tokens[i..(i + self.max_depth).min(tokens.len())] {
+                    u = self.child(u, t);
+                    self.counts[u] += 1;
+                }
+            }
+        }
+
+        fn locate(&self, p: &[u32]) -> Option<usize> {
+            let mut u = 0;
+            for t in p {
+                u = *self.children[u].get(t)?;
+            }
+            Some(u)
+        }
+
+        fn count(&self, p: &[u32]) -> u64 {
+            self.locate(p).map(|u| self.counts[u]).unwrap_or(0)
+        }
+
+        fn deepest_suffix(&self, ctx: &[u32], max_len: usize) -> usize {
+            let cap = ctx.len().min(max_len).min(self.max_depth);
+            for take in (1..=cap).rev() {
+                if self.locate(&ctx[ctx.len() - take..]).is_some() {
+                    return take;
+                }
+            }
+            0
+        }
+
+        fn greedy(&self, ctx: &[u32], max_match: usize, budget: usize) -> (Vec<u32>, Vec<f32>) {
+            let mlen = self.deepest_suffix(ctx, max_match);
+            if mlen == 0 || budget == 0 {
+                return (Vec::new(), Vec::new());
+            }
+            let mut u = self.locate(&ctx[ctx.len() - mlen..]).unwrap();
+            let mut draft = Vec::new();
+            let mut conf = Vec::new();
+            for _ in 0..budget {
+                let parent_w = self.counts[u];
+                let mut best: Option<(u32, usize, u64)> = None;
+                for (&t, &c) in &self.children[u] {
+                    let w = self.counts[c];
+                    if w == 0 {
+                        continue;
+                    }
+                    match best {
+                        None => best = Some((t, c, w)),
+                        Some((_, _, bw)) => {
+                            if w > bw {
+                                best = Some((t, c, w));
+                            }
+                        }
+                    }
+                }
+                let Some((t, c, w)) = best else { break };
+                draft.push(t);
+                conf.push((w as f64 / parent_w.max(1) as f64) as f32);
+                u = c;
+            }
+            (draft, conf)
+        }
+
+        /// Rebuild keeping nodes whose count passes `pred` (threshold
+        /// predicates are ancestor-closed: counts shrink with depth).
+        fn compact(&mut self, min_count: u64) {
+            let mut keep_children: Vec<std::collections::BTreeMap<u32, usize>> =
+                vec![Default::default()];
+            let mut keep_counts = vec![self.counts[0]];
+            let mut stack = vec![(0usize, 0usize)];
+            while let Some((old, new)) = stack.pop() {
+                let kids: Vec<(u32, usize)> =
+                    self.children[old].iter().map(|(&t, &c)| (t, c)).collect();
+                for (t, c) in kids {
+                    if self.counts[c] < min_count {
+                        continue;
+                    }
+                    let id = keep_counts.len();
+                    keep_children.push(Default::default());
+                    keep_counts.push(self.counts[c]);
+                    keep_children[new].insert(t, id);
+                    stack.push((c, id));
+                }
+            }
+            self.children = keep_children;
+            self.counts = keep_counts;
+        }
+    }
+
     #[test]
     fn child_table_inline_and_spill_paths() {
         let mut t = ChildTable::default();
@@ -593,6 +1475,8 @@ mod tests {
         assert_eq!(t.len(), 8);
         assert_eq!(t.get(3), Some(11));
         assert_eq!(t.get(2), None);
+        t.set(3, 77);
+        assert_eq!(t.get(3), Some(77));
         // Ninth child spills to the sorted vector.
         t.insert(4, 99);
         assert_eq!(t.len(), 9);
@@ -601,6 +1485,8 @@ mod tests {
         assert_eq!(order, vec![1, 3, 4, 5, 7, 9, 12, 15, 20]);
         assert_eq!(t.get(4), Some(99));
         assert_eq!(t.get(7), Some(10));
+        t.set(4, 100);
+        assert_eq!(t.get(4), Some(100));
         assert!(t.heap_bytes() > 0);
     }
 
@@ -622,28 +1508,135 @@ mod tests {
     }
 
     #[test]
-    fn insert_suffixes_counts_are_occurrences() {
-        let mut t = plain(8);
-        t.insert_suffixes(&[1, 2, 1, 2, 3], ());
-        let count = |p: &[u32]| t.locate(p).map(|n| t.store().get(n)).unwrap_or(0);
-        assert_eq!(count(&[1, 2]), 2);
-        assert_eq!(count(&[1, 2, 3]), 1);
-        assert_eq!(count(&[2, 1]), 1);
-        assert_eq!(count(&[3, 1]), 0);
-        assert_eq!(t.store().get(0), 5, "root counts one per position");
+    fn pool_interns_and_dedups() {
+        let pool = SharedPool::new();
+        let mut pg = pool.lock();
+        let a = pg.intern(&[1, 2, 3, 4]);
+        pg.retain(a);
+        let b = pg.intern(&[1, 2, 3, 4]);
+        assert_eq!(a, b, "identical content hash-conses to one segment");
+        let c = pg.intern(&[9, 9]);
+        pg.retain(c);
+        assert_ne!(a, c);
+        let st = pg.stats();
+        assert_eq!(st.segments, 2);
+        assert_eq!(st.live_tokens, 6);
+        // Releasing the last reference kills the segment.
+        pg.release(c);
+        let st = pg.stats();
+        assert_eq!(st.segments, 1);
+        assert_eq!(st.live_tokens, 4, "tail death truncates immediately");
+        // Re-interning dead content allocates fresh bytes.
+        let c2 = pg.intern(&[9, 9]);
+        pg.retain(c2);
+        assert_eq!(pg.stats().live_tokens, 6);
+        assert_eq!(pg.stats().segments, 2);
     }
 
     #[test]
-    fn suffix_links_point_to_one_shorter_suffix() {
-        let mut t = plain(6);
-        t.insert_suffixes(&[4, 7, 9, 7, 9], ());
-        // Node for [4,7,9] links to [7,9] links to [9] links to root.
-        let n479 = t.locate(&[4, 7, 9]).unwrap();
-        let n79 = t.locate(&[7, 9]).unwrap();
-        let n9 = t.locate(&[9]).unwrap();
-        assert_eq!(t.suffix_link(n479), n79);
-        assert_eq!(t.suffix_link(n79), n9);
-        assert_eq!(t.suffix_link(n9), 0);
+    fn pool_compaction_preserves_slices() {
+        let pool = SharedPool::new();
+        let mut pg = pool.lock();
+        // Many segments, then kill most of them interleaved → interior
+        // dead bytes overtake live ones → compaction rewrites offsets;
+        // surviving SegRefs (segment id + relative range) stay valid.
+        let mut ids = Vec::new();
+        for i in 0..64u32 {
+            let content: Vec<u32> = (0..128).map(|j| i * 1000 + j).collect();
+            let id = pg.intern(&content);
+            pg.retain(id);
+            ids.push(id);
+        }
+        // Release evens, then odds past 32: 48 of 64 dead → the >50% dead
+        // trigger fires mid-loop.
+        for &id in ids.iter().step_by(2) {
+            pg.release(id);
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            if i % 2 == 1 && i > 32 {
+                pg.release(id);
+            }
+        }
+        // 16 odd ids ≤ 32 survive (the 33rd interior death crossed the >50%
+        // threshold and forced a rewrite mid-loop).
+        assert_eq!(pg.stats().segments, 16);
+        assert_eq!(pg.stats().live_tokens, 16 * 128);
+        // Survivors still read back their exact content through SegRefs.
+        for (i, &id) in ids.iter().enumerate() {
+            if i % 2 == 1 && i <= 32 {
+                let r = SegRef { seg: id, start: 5, len: 7 };
+                let expect: Vec<u32> = (5..12).map(|j| i as u32 * 1000 + j).collect();
+                assert_eq!(pg.slice(r), expect.as_slice(), "seg {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_suffixes_counts_are_occurrences() {
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 1, 2, 3], ());
+        assert_eq!(count(&t, &[1, 2]), 2);
+        assert_eq!(count(&t, &[1, 2, 3]), 1);
+        assert_eq!(count(&t, &[2, 1]), 1);
+        assert_eq!(count(&t, &[3, 1]), 0);
+        assert_eq!(t.store().get(0), 5, "root counts one per position");
+        // Path compression: fewer explicit nodes than token positions.
+        assert!(t.node_count() < t.token_positions());
+    }
+
+    #[test]
+    fn repeated_rollout_adds_no_nodes_or_bytes() {
+        let mut t = plain(12);
+        let r: Vec<u32> = (0..40).map(|i| (i * 7) % 23).collect();
+        t.insert_suffixes(&r, ());
+        let nodes = t.node_count();
+        let toks = t.pool_stats().live_tokens;
+        for _ in 0..5 {
+            t.insert_suffixes(&r, ());
+        }
+        assert_eq!(t.node_count(), nodes, "repeat inserts reuse every path");
+        assert_eq!(
+            t.pool_stats().live_tokens,
+            toks,
+            "repeat inserts hash-cons to the existing segment"
+        );
+        // r's period is 23, so r[..12] occurs at offsets 0 and 23 of every
+        // one of the 6 inserted copies.
+        assert_eq!(count(&t, &r[..12]), 12);
+    }
+
+    #[test]
+    fn shared_pool_interns_across_tries() {
+        let pool = SharedPool::new();
+        let mut a: ArenaTrie<Counts> = ArenaTrie::with_pool(8, Counts::default(), pool.clone());
+        let mut b: ArenaTrie<Counts> = ArenaTrie::with_pool(8, Counts::default(), pool.clone());
+        let r: Vec<u32> = (0..30).map(|i| i % 11).collect();
+        a.insert_suffixes(&r, ());
+        let after_a = pool.stats().live_tokens;
+        b.insert_suffixes(&r, ());
+        assert_eq!(
+            pool.stats().live_tokens,
+            after_a,
+            "second shard reuses the interned segment"
+        );
+        // Dropping one trie keeps the other's labels alive. ([1,2] occurs
+        // at offsets 1, 12 and 23 of the period-11 rollout.)
+        drop(a);
+        assert_eq!(count(&b, &[1, 2]), 3);
+        assert_eq!(pool.stats().live_tokens, after_a);
+        drop(b);
+        assert_eq!(pool.stats().segments, 0, "all references released");
+    }
+
+    #[test]
+    fn clone_shares_pool_and_survives_original_drop() {
+        let mut t = plain(8);
+        t.insert_suffixes(&[5, 6, 7, 8], ());
+        let c = t.clone();
+        drop(t);
+        assert_eq!(count(&c, &[6, 7, 8]), 1, "clone's labels stay live");
+        let (len, _) = c.deepest_suffix(&[5, 6, 7], 8, ());
+        assert_eq!(len, 3);
     }
 
     #[test]
@@ -652,13 +1645,13 @@ mod tests {
         t.insert_suffixes(&[1, 2, 3, 4], ());
         t.insert_suffixes(&[9, 2, 3, 7], ());
         // Context ends ...2,3,4 → longest suffix [2,3,4] (depth 3).
-        let (len, node) = t.deepest_suffix(&[8, 8, 2, 3, 4], 6, ());
+        let (len, pos) = t.deepest_suffix(&[8, 8, 2, 3, 4], 6, ());
         assert_eq!(len, 3);
-        assert_eq!(node, t.locate(&[2, 3, 4]).unwrap());
+        assert_eq!(Some(pos), t.locate(&[2, 3, 4]));
         // max_len cap applies.
-        let (len, node) = t.deepest_suffix(&[8, 8, 2, 3, 4], 2, ());
+        let (len, pos) = t.deepest_suffix(&[8, 8, 2, 3, 4], 2, ());
         assert_eq!(len, 2);
-        assert_eq!(node, t.locate(&[3, 4]).unwrap());
+        assert_eq!(Some(pos), t.locate(&[3, 4]));
         // Unseen suffix falls back through links to the seen tail.
         let (len, _) = t.deepest_suffix(&[1, 2, 99], 6, ());
         assert_eq!(len, 0);
@@ -672,16 +1665,28 @@ mod tests {
         t.insert_suffixes(&[5, 7, 1], ());
         t.insert_suffixes(&[5, 7, 2], ());
         t.insert_suffixes(&[5, 9, 3], ());
-        let n5 = t.locate(&[5]).unwrap();
-        let (draft, conf) = t.greedy_walk(n5, 1, ());
+        let p5 = t.locate(&[5]).unwrap();
+        let (draft, conf) = t.greedy_walk(p5, 1, ());
         assert_eq!(draft, vec![7]);
         assert!((conf[0] - 2.0 / 3.0).abs() < 1e-6);
         // Equal counts: smallest token id wins.
         let mut t = plain(8);
         t.insert_suffixes(&[5, 7], ());
         t.insert_suffixes(&[5, 3], ());
-        let n5 = t.locate(&[5]).unwrap();
-        assert_eq!(t.greedy_walk(n5, 4, ()).0, vec![3, /* then nothing */]);
+        let p5 = t.locate(&[5]).unwrap();
+        assert_eq!(t.greedy_walk(p5, 4, ()).0, vec![3, /* then nothing */]);
+    }
+
+    #[test]
+    fn greedy_walk_emits_through_edges() {
+        // A long unary path is one edge; the walk must stream its label.
+        let mut t = plain(16);
+        t.insert_suffixes(&[1, 2, 3, 4, 5, 6], ());
+        let (len, pos) = t.deepest_suffix(&[1], 16, ());
+        assert_eq!(len, 1);
+        let (draft, conf) = t.greedy_walk(pos, 4, ());
+        assert_eq!(draft, vec![2, 3, 4, 5]);
+        assert!(conf.iter().all(|&c| (c - 1.0).abs() < 1e-6));
     }
 
     #[test]
@@ -692,12 +1697,24 @@ mod tests {
         assert!(t.locate(&[10, 11, 12, 13, 99]).is_none());
         let (node, depth) = t.deepest_visible_prefix(&[10, 11, 20], ()).unwrap();
         assert_eq!(depth, 2);
-        assert_eq!(node, t.locate(&[10, 11]).unwrap());
+        assert_eq!(node, t.locate(&[10, 11]).unwrap().row());
         assert!(t.deepest_visible_prefix(&[7], ()).is_none());
-        let mut seen = Vec::new();
-        let matched = t.walk_prefix_path(&[10, 11, 77], |n| seen.push(n));
-        assert_eq!(matched, 2);
-        assert_eq!(seen.len(), 2);
+        // A mid-edge unregister walk splits the boundary it needs.
+        let path = t.prefix_path_split(&[10, 11]).unwrap();
+        assert_eq!(path.len(), 1, "one explicit node on the [10,11] path");
+        assert!(t.prefix_path_split(&[10, 77]).is_none());
+    }
+
+    #[test]
+    fn insert_prefix_returns_explicit_terminal() {
+        let mut t = plain(8);
+        let a = t.insert_prefix(&[1, 2, 3, 4], ());
+        // A shorter registration terminates mid-edge → split → its own node.
+        let b = t.insert_prefix(&[1, 2], ());
+        assert_ne!(a, b);
+        assert_eq!(t.locate(&[1, 2]).unwrap().row(), b);
+        assert_eq!(t.store().get(b), 2, "split copied the deep count, then bumped");
+        assert_eq!(t.store().get(a), 1);
     }
 
     #[test]
@@ -706,77 +1723,162 @@ mod tests {
         t.insert_suffixes(&[1, 2, 3], ());
         t.insert_suffixes(&[4, 2, 3], ());
         let before = t.node_count();
-        // Keep everything: structure and answers unchanged, links intact.
+        // Keep everything: structure and answers unchanged, links exact.
         t.compact(|s, n| s.weight(n, ()) > 0);
         assert_eq!(t.node_count(), before);
-        let (len, node) = t.deepest_suffix(&[9, 4, 2, 3], 6, ());
+        let (len, _) = t.deepest_suffix(&[9, 4, 2, 3], 6, ());
         assert_eq!(len, 3);
-        assert_eq!(t.suffix_link(node), t.locate(&[2, 3]).unwrap());
         // Further inserts after compaction keep working.
         t.insert_suffixes(&[4, 2, 3, 5], ());
         let (len, _) = t.deepest_suffix(&[4, 2, 3, 5], 6, ());
         assert_eq!(len, 4);
+        assert_eq!(count(&t, &[2, 3]), 3);
     }
 
     #[test]
-    fn prop_deepest_suffix_equals_descending_rescan() {
-        // The O(m) suffix-link pass must find exactly the length the naive
-        // longest-first rescan finds.
-        prop::check(128, |g| {
-            let alphabet = 1 + g.usize_in(1, 4) as u32;
+    fn compact_reinterns_labels_and_frees_pinned_segments() {
+        // One long rollout (one 400-token pool segment) plus a re-seen
+        // 10-token prefix. Compacting away the once-seen paths must NOT
+        // leave the survivors pinning the 400-token segment: labels are
+        // re-interned, so the pool shrinks to the live label bytes.
+        let mut t = plain(8);
+        let big: Vec<u32> = (0..400).collect();
+        t.insert_suffixes(&big, ());
+        t.insert_suffixes(&big[..10], ());
+        let before = t.pool_stats().live_tokens;
+        assert!(before >= 400);
+        t.compact(|s, n| s.weight(n, ()) >= 2);
+        let after = t.pool_stats().live_tokens;
+        assert!(
+            after * 4 < before,
+            "survivors must not pin the dead rollout's segment: {after} vs {before}"
+        );
+        // The twice-seen content still answers correctly.
+        assert_eq!(count(&t, &[0, 1, 2]), 2);
+        let (len, _) = t.deepest_suffix(&[99, 0, 1, 2], 8, ());
+        assert_eq!(len, 3);
+        assert_eq!(count(&t, &[200, 201]), 0, "once-seen paths were dropped");
+    }
+
+    #[test]
+    fn prop_matches_uncompressed_reference() {
+        // THE tentpole anchor: on random insert/compaction streams the
+        // compressed trie must answer counts, deepest-suffix matches and
+        // greedy drafts (tokens AND confidences) bit-identically to the
+        // one-node-per-token reference. Small alphabets force heavy edge
+        // splitting; compaction exercises the pool-release + exact-slink
+        // rebuild path.
+        prop::check(160, |g| {
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
             let depth = 2 + g.usize_in(0, 8);
             let mut t = ArenaTrie::new(depth, Counts::default());
-            for _ in 0..g.usize_in(1, 4) {
-                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 40), ());
-            }
-            let ctx = g.vec_u32_nonempty(alphabet, 20);
-            let max_len = 1 + g.usize_in(0, 10);
-            let naive = {
-                let cap = ctx.len().min(max_len).min(t.max_depth());
-                let mut best = 0;
-                for take in (1..=cap).rev() {
-                    if t.locate(&ctx[ctx.len() - take..]).is_some() {
-                        best = take;
-                        break;
-                    }
+            let mut r = RefTrie::new(depth);
+            for _ in 0..g.usize_in(1, 5) {
+                let roll = g.vec_u32_nonempty(alphabet, 40);
+                t.insert_suffixes(&roll, ());
+                r.insert_suffixes(&roll);
+                if g.usize_in(0, 4) == 0 {
+                    // Same threshold compaction on both sides. Thresholds
+                    // are substring-closed (counts shrink with length), the
+                    // precondition the compressed compact requires.
+                    let min = 1 + g.usize_in(0, 1) as u64;
+                    t.compact(move |s, n| s.weight(n, ()) >= min);
+                    r.compact(min);
                 }
-                best
-            };
+                for _ in 0..8 {
+                    let pat = g.vec_u32_nonempty(alphabet, depth + 2);
+                    prop::require_eq(count(&t, &pat), r.count(&pat), "count")?;
+                }
+                let ctx = g.vec_u32_nonempty(alphabet, 16);
+                let max_match = 1 + g.usize_in(0, 8);
+                let budget = g.usize_in(0, 6);
+                prop::require_eq(
+                    t.deepest_suffix(&ctx, max_match, ()).0,
+                    r.deepest_suffix(&ctx, max_match),
+                    "deepest suffix length",
+                )?;
+                let (mlen, pos) = t.deepest_suffix(&ctx, max_match, ());
+                let (dt, ct) = if mlen == 0 || budget == 0 {
+                    (Vec::new(), Vec::new())
+                } else {
+                    t.greedy_walk(pos, budget, ())
+                };
+                let (dr, cr) = r.greedy(&ctx, max_match, budget);
+                prop::require_eq(dt, dr, "greedy draft tokens")?;
+                prop::require_eq(ct, cr, "greedy draft confidences")?;
+            }
+            // Structural accounting: the reference's node count IS the
+            // compressed trie's token-position count.
             prop::require_eq(
-                t.deepest_suffix(&ctx, max_len, ()).0,
-                naive,
-                "suffix-link pass vs rescan",
+                t.token_positions(),
+                r.counts.len(),
+                "token positions == uncompressed nodes",
+            )?;
+            prop::require(
+                t.node_count() <= t.token_positions(),
+                "compression never inflates",
             )?;
             Ok(())
         });
     }
 
     #[test]
-    fn prop_suffix_links_always_valid() {
-        // Every non-root node's link must name the node of its string minus
-        // the first token — checked by replaying paths.
+    fn prop_suffix_links_at_or_above_their_target() {
+        // Every explicit node's link must name a node whose string is a
+        // prefix of the node's string minus its first token — the exact
+        // invariant the O(m) walk's canonize step relies on.
         prop::check(64, |g| {
             let alphabet = 1 + g.usize_in(1, 3) as u32;
             let mut t = ArenaTrie::new(2 + g.usize_in(0, 5), Counts::default());
-            let mut rollouts = Vec::new();
-            for _ in 0..g.usize_in(1, 3) {
-                let r = g.vec_u32_nonempty(alphabet, 25);
-                t.insert_suffixes(&r, ());
-                rollouts.push(r);
+            for _ in 0..g.usize_in(1, 4) {
+                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 25), ());
             }
-            // Enumerate some indexed paths and verify link(path) == path[1..].
-            for r in &rollouts {
-                for start in 0..r.len().min(6) {
-                    let end = (start + t.max_depth()).min(r.len());
-                    let path = &r[start..end];
-                    if path.len() < 2 {
-                        continue;
-                    }
-                    let node = t.locate(path).expect("indexed path");
-                    let link = t.suffix_link(node);
-                    let expect = t.locate(&path[1..]).expect("suffix path indexed");
-                    prop::require_eq(link, expect, "suffix link target")?;
-                }
+            if g.bool() {
+                t.compact(|s, n| s.weight(n, ()) > 0);
+            }
+            for v in 1..t.node_count() {
+                let s = string_of(&t, v);
+                let link = t.nodes[v].slink as usize;
+                let ls = string_of(&t, link);
+                prop::require(
+                    ls.len() <= s.len() - 1,
+                    "link not deeper than the suffix",
+                )?;
+                prop::require_eq(
+                    &s[1..1 + ls.len()],
+                    ls.as_slice(),
+                    "link string is a prefix of the suffix",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_walk_suffix_chain_rows_match_locate() {
+        // The chain must visit, for every suffix length, exactly the row
+        // `locate` reports for that suffix.
+        prop::check(64, |g| {
+            let alphabet = 1 + g.usize_in(1, 4) as u32;
+            let mut t = ArenaTrie::new(2 + g.usize_in(0, 8), Counts::default());
+            for _ in 0..g.usize_in(1, 4) {
+                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 30), ());
+            }
+            let ctx = g.vec_u32_nonempty(alphabet, 12);
+            let (mlen, pos) = t.deepest_suffix(&ctx, 10, ());
+            if mlen == 0 {
+                return Ok(());
+            }
+            let matched = &ctx[ctx.len() - mlen..];
+            let mut seen: Vec<(usize, usize)> = Vec::new();
+            t.walk_suffix_chain(matched, pos, |d, p| {
+                seen.push((d, p.row()));
+                true
+            });
+            prop::require_eq(seen.len(), mlen, "chain visits every length")?;
+            for &(d, row) in &seen {
+                let expect = t.locate(&matched[mlen - d..]).expect("suffix present");
+                prop::require_eq(row, expect.row(), "chain row == locate row")?;
             }
             Ok(())
         });

@@ -1,17 +1,21 @@
 //! Suffix-structure substrates for the nonparametric drafter (§4.1).
 //!
-//! * [`self::core`] — THE arena-trie core: one generic, depth-capped trie
-//!   (`ArenaTrie<S: CountStore>`) holding the only implementation of
-//!   locate / insert / deepest-match / greedy-walk in this crate. Flat node
-//!   arena, branchless inline sorted child tables (8 slots before sorted-Vec
-//!   spill), and per-node **suffix links** so deepest-suffix matching is one
-//!   O(m) forward pass (Aho–Corasick fallback) and sliding-context
-//!   insertion is a single left-to-right chain walk. Per-node counts live
-//!   in a pluggable `CountStore`:
+//! * [`self::core`] — THE arena-trie core: one generic, depth-capped,
+//!   **path-compressed** trie (`ArenaTrie<S: CountStore>`) holding the only
+//!   implementation of locate / insert / deepest-match / greedy-walk in
+//!   this crate. Flat node arena whose edges carry multi-token labels —
+//!   `(segment, start, len)` slices into a hash-consed, refcounted
+//!   [`core::SharedPool`] token store shareable across tries — branchless
+//!   inline sorted child tables (8 slots before sorted-Vec spill), node
+//!   splitting on divergence/termination (so mid-edge positions share the
+//!   lower node's counts exactly), and **suffix links over compressed
+//!   edges** so deepest-suffix matching is one O(m) forward pass with
+//!   skip/count re-descents. Per-node counts live in a pluggable
+//!   `CountStore` (with a `split_node` hook for edge splits):
 //!   - `core::Counts` — plain occurrence counts → [`trie::SuffixTrieIndex`];
-//!   - `window::EpochStore` (private) — epoch-tagged count slots with a
-//!     growable stride → the fused sliding-window index, including the
-//!     unbounded `window_all` ablation;
+//!   - `window::EpochStore` (private) — dense epoch rings (bounded
+//!     windows) or sparse per-node (epoch, count) lists (`window_all`) →
+//!     the fused sliding-window index;
 //!   - `router::OwnerStore` (private) — sorted shard-owner tables → the
 //!     prefix router.
 //! * [`tree`] — online Ukkonen suffix tree: the paper's headline structure
@@ -20,14 +24,15 @@
 //!   index with per-path occurrence counts for frequency-weighted drafts.
 //! * [`array`] — suffix array + Kasai LCP: the static baseline the paper
 //!   compares against in Fig. 5 (updates = full rebuilds).
-//! * [`router`] — per-request prefix-trie router (§4.1.2), now with
-//!   registration eviction (`unregister`, per-shard capacity bounds).
+//! * [`router`] — per-request prefix-trie router (§4.1.2), with
+//!   registration eviction (`unregister`, per-shard capacity bounds wired
+//!   to `spec.router_capacity`) and pool sharing with the drafter shards.
 //! * [`window`] — sliding-window index with age discounting (Fig. 7): one
 //!   fused epoch-tagged arena trie per shard for EVERY window size —
-//!   bounded windows get O(1) whole-epoch eviction plus a compaction sweep;
-//!   `window_all` (window = 0) rides the same trie via a growable
-//!   epoch-tag table. The per-epoch bucket ring survives only as the
-//!   property-test reference.
+//!   bounded windows get O(1) whole-epoch eviction plus a compaction sweep
+//!   that also releases dead pool segments; `window_all` (window = 0)
+//!   rides the same trie on sparse rows, linear in indexed tokens. The
+//!   per-epoch bucket ring survives only as the property-test reference.
 
 pub mod array;
 pub mod core;
@@ -37,7 +42,7 @@ pub mod trie;
 pub mod window;
 
 pub use array::{SuffixArray, SuffixArrayIndex};
-pub use self::core::{ArenaTrie, CountStore, Counts};
+pub use self::core::{ArenaTrie, CountStore, Counts, PoolStats, SharedPool, TriePos};
 pub use router::PrefixRouter;
 pub use tree::{SuffixTree, SENTINEL_BASE};
 pub use trie::SuffixTrieIndex;

@@ -8,20 +8,31 @@
 //! (`spec.prefix_router`, exercised by the Fig. 6 scope ablation).
 //!
 //! Since the core refactor the router is the third consumer of the shared
-//! [`crate::suffix::core::ArenaTrie`]: the walk machinery is the core's,
-//! and only the per-node payload — a sorted shard-owner table
-//! (`OwnerStore`) — is router-specific. This replaced a hand-rolled
-//! `HashMap`-node trie that re-implemented the same descend loop (the
-//! property test below pins routing equivalence with that implementation).
+//! [`crate::suffix::core::ArenaTrie`]: the walk machinery (now
+//! path-compressed — a registered generation is typically ONE edge until
+//! another generation diverges from it) is the core's, and only the
+//! per-node payload — a sorted shard-owner table (`OwnerStore`) — is
+//! router-specific. Mid-edge positions share the edge's lower owner table
+//! (the compressed-counting invariant), and un/registration boundaries are
+//! exposed by edge splitting, so routing decisions are bit-identical to the
+//! old per-token trie (property-tested below). Registered (depth-capped)
+//! prefixes are interned in the router's segment pool — hand the drafter's
+//! [`crate::suffix::core::SharedPool`] to
+//! [`PrefixRouter::with_capacity_pooled`] so repeated registrations of the
+//! same prefix are stored once and the router's bytes appear in the shared
+//! pool gauges. (The hash-cons works on whole token runs, so a router
+//! prefix only dedups against a shard's *full-rollout* segment when the
+//! generation is no longer than the router depth — cross-structure dedup
+//! is a bonus, not the design goal.)
 //!
-//! Registrations can now also be *evicted*: `unregister` reverses one
+//! Registrations can also be *evicted*: `unregister` reverses one
 //! registration exactly, and `with_capacity` bounds the registrations kept
 //! per shard FIFO-style, so a long-running router's memory no longer grows
-//! with every generation ever seen.
+//! with every generation ever seen (`spec.router_capacity`).
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::suffix::core::{ArenaTrie, CountStore};
+use crate::suffix::core::{ArenaTrie, CountStore, SharedPool};
 use crate::tokens::TokenId;
 
 /// Per-node shard-owner tables: sorted `(shard, count)` pairs, kept small
@@ -84,6 +95,13 @@ impl CountStore for OwnerStore {
         self.owners.push(src.owners[old].clone());
     }
 
+    fn split_node(&mut self, child: usize) {
+        // Interior positions of an edge share the lower node's owner table;
+        // the new upper node materializes exactly that.
+        let row = self.owners[child].clone();
+        self.owners.push(row);
+    }
+
     fn heap_bytes(&self) -> usize {
         self.owners.capacity() * std::mem::size_of::<Vec<(u32, u32)>>()
             + self
@@ -116,8 +134,19 @@ impl PrefixRouter {
     /// shard; registering beyond the bound evicts the shard's oldest
     /// registration first (FIFO), bounding memory on long runs.
     pub fn with_capacity(max_depth: usize, max_gens_per_shard: usize) -> Self {
+        Self::with_capacity_pooled(max_depth, max_gens_per_shard, SharedPool::new())
+    }
+
+    /// [`PrefixRouter::with_capacity`] with the label-segment pool shared
+    /// with the caller (the drafter passes its shard pool, so registered
+    /// generations reuse the bytes the shards already interned).
+    pub fn with_capacity_pooled(
+        max_depth: usize,
+        max_gens_per_shard: usize,
+        pool: SharedPool,
+    ) -> Self {
         PrefixRouter {
-            trie: ArenaTrie::new(max_depth.max(1), OwnerStore::default()),
+            trie: ArenaTrie::with_pool(max_depth.max(1), OwnerStore::default(), pool),
             recent: HashMap::new(),
             max_gens_per_shard: max_gens_per_shard.max(1),
         }
@@ -150,21 +179,21 @@ impl PrefixRouter {
     }
 
     /// Associated form so `register`'s capacity eviction can run it while
-    /// holding a borrow of the `recent` FIFO.
+    /// holding a borrow of the `recent` FIFO. The path walk splits the
+    /// final edge if the prefix ends mid-edge, so the un-bumps hit exactly
+    /// the explicit-node boundaries the registration's bumps (plus later
+    /// splits, which copy owner rows) established.
     fn unregister_on(trie: &mut ArenaTrie<OwnerStore>, shard: u32, generation: &[TokenId]) -> bool {
-        let want = generation.len().min(trie.max_depth());
-        let mut path = Vec::with_capacity(want);
-        let matched = trie.walk_prefix_path(generation, |n| path.push(n));
-        if matched < want {
+        let Some(path) = trie.prefix_path_split(generation) else {
             return false;
-        }
+        };
         for n in path {
             trie.store_mut().unbump(n, shard);
         }
         true
     }
 
-    /// Route a context: deepest trie node the context's PREFIX reaches with
+    /// Route a context: deepest position the context's PREFIX reaches with
     /// any owners left, then the most frequent owner there (count ties →
     /// smallest shard id). Returns (shard, matched_depth).
     pub fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
@@ -173,7 +202,7 @@ impl PrefixRouter {
         Some((shard, depth))
     }
 
-    /// Distinct shards owning the deepest routed node for this context
+    /// Distinct shards owning the deepest routed position for this context
     /// (diagnostics for routing ambiguity).
     pub fn owner_count(&self, context: &[TokenId]) -> usize {
         match self.trie.deepest_visible_prefix(context, ()) {
@@ -182,6 +211,7 @@ impl PrefixRouter {
         }
     }
 
+    /// Explicit (compressed) trie nodes.
     pub fn node_count(&self) -> usize {
         self.trie.node_count()
     }
@@ -237,7 +267,8 @@ mod tests {
         r.register(7, &[1, 2, 3, 4, 5, 6]);
         // Full-prefix context routes at full depth…
         assert_eq!(r.route(&[1, 2, 3, 4, 5, 6]).unwrap(), (7, 6));
-        // …a diverging context at the divergence point…
+        // …a diverging context at the divergence point (mid-edge: the
+        // position shares the edge's owner table)…
         assert_eq!(r.route(&[1, 2, 3, 99]).unwrap(), (7, 3));
         // …and depth never exceeds max_depth.
         let mut r = PrefixRouter::new(3);
@@ -253,7 +284,7 @@ mod tests {
         r.register(2, &[3, 4]);
         assert_eq!(r.owner_count(&[3, 4]), 2);
         r.register(3, &[3, 5]);
-        // Deepest node for [3,4] still has exactly shards {1,2}.
+        // Deepest position for [3,4] still has exactly shards {1,2}.
         assert_eq!(r.owner_count(&[3, 4]), 2);
     }
 
@@ -272,6 +303,24 @@ mod tests {
     }
 
     #[test]
+    fn unregister_shorter_prefix_splits_the_boundary() {
+        // Registering a long generation makes ONE edge; unregistering a
+        // shorter prefix of it must only strip ownership of the shallow
+        // part — the deeper half keeps its registration.
+        let mut r = PrefixRouter::new(8);
+        r.register(1, &[1, 2, 3, 4]);
+        r.register(1, &[1, 2]);
+        assert!(r.unregister(1, &[1, 2]));
+        // The deep registration still owns the full path…
+        assert_eq!(r.route(&[1, 2, 3, 4]).unwrap(), (1, 4));
+        // …and the shallow levels still carry the deep registration's
+        // ownership (exactly one each), so a second unregister of the deep
+        // generation empties the router.
+        assert!(r.unregister(1, &[1, 2, 3, 4]));
+        assert!(r.route(&[1, 2, 3, 4]).is_none());
+    }
+
+    #[test]
     fn capacity_evicts_oldest_registration_fifo() {
         let mut r = PrefixRouter::with_capacity(8, 2);
         r.register(1, &[10, 11]);
@@ -287,6 +336,20 @@ mod tests {
         r.register(1, &[20, 21]); // evicts shard 1's [10, 11] only
         assert_eq!(r.route(&[10, 12]).unwrap(), (2, 2));
         assert_eq!(r.route(&[10, 11]).unwrap(), (2, 1), "routes to the shared [10] node");
+    }
+
+    #[test]
+    fn pooled_router_shares_label_bytes() {
+        let pool = SharedPool::new();
+        let mut a = PrefixRouter::with_capacity_pooled(8, usize::MAX, pool.clone());
+        let mut b = PrefixRouter::with_capacity_pooled(8, usize::MAX, pool.clone());
+        let generation: Vec<u32> = (0..8).collect();
+        a.register(1, &generation);
+        let after_a = pool.stats().live_tokens;
+        b.register(2, &generation);
+        assert_eq!(pool.stats().live_tokens, after_a, "same prefix, same segment");
+        assert_eq!(a.route(&generation).unwrap().0, 1);
+        assert_eq!(b.route(&generation).unwrap().0, 2);
     }
 
     #[test]
@@ -310,7 +373,9 @@ mod tests {
 
     // -----------------------------------------------------------------
     // Equivalence with the pre-CountStore HashMap implementation: same
-    // registrations ⇒ identical routing decisions (shard AND depth).
+    // registrations AND unregistrations ⇒ identical routing decisions
+    // (shard AND depth). Unregister streams force edge splits on the
+    // compressed side; the per-token reference never needs them.
     // -----------------------------------------------------------------
     #[derive(Default)]
     struct HashNode {
@@ -348,6 +413,30 @@ mod tests {
             }
         }
 
+        fn unregister(&mut self, shard: u32, generation: &[TokenId]) -> bool {
+            let want = generation.len().min(self.max_depth);
+            let mut node = 0usize;
+            let mut path = Vec::with_capacity(want);
+            for &tok in generation.iter().take(want) {
+                match self.nodes[node].children.get(&tok) {
+                    Some(&n) => {
+                        node = n;
+                        path.push(n);
+                    }
+                    None => return false,
+                }
+            }
+            for n in path {
+                if let Some(c) = self.nodes[n].owners.get_mut(&shard) {
+                    *c -= 1;
+                    if *c == 0 {
+                        self.nodes[n].owners.remove(&shard);
+                    }
+                }
+            }
+            true
+        }
+
         fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
             let mut node = 0usize;
             let mut depth = 0usize;
@@ -381,15 +470,32 @@ mod tests {
             let alphabet = 1 + g.usize_in(1, 5) as u32;
             let mut new = PrefixRouter::new(depth);
             let mut old = HashRouterRef::new(depth);
-            for _ in 0..g.usize_in(1, 12) {
-                let shard = g.usize_in(0, 4) as u32;
-                let gen = g.vec_u32_nonempty(alphabet, 10);
-                new.register(shard, &gen);
-                old.register(shard, &gen);
-            }
-            for _ in 0..8 {
-                let ctx = g.vec_u32_nonempty(alphabet, 10);
-                prop::require_eq(new.route(&ctx), old.route(&ctx), "routing decision")?;
+            let mut registered: Vec<(u32, Vec<u32>)> = Vec::new();
+            for _ in 0..g.usize_in(1, 16) {
+                if !registered.is_empty() && g.usize_in(0, 3) == 0 {
+                    // Unregister something that was registered (or a random
+                    // never-registered prefix — both sides must agree).
+                    let (shard, gen) = if g.bool() {
+                        registered.remove(g.usize_in(0, registered.len() - 1))
+                    } else {
+                        (g.usize_in(0, 4) as u32, g.vec_u32_nonempty(alphabet, 10))
+                    };
+                    prop::require_eq(
+                        new.unregister(shard, &gen),
+                        old.unregister(shard, &gen),
+                        "unregister outcome",
+                    )?;
+                } else {
+                    let shard = g.usize_in(0, 4) as u32;
+                    let gen = g.vec_u32_nonempty(alphabet, 10);
+                    new.register(shard, &gen);
+                    old.register(shard, &gen);
+                    registered.push((shard, gen));
+                }
+                for _ in 0..6 {
+                    let ctx = g.vec_u32_nonempty(alphabet, 10);
+                    prop::require_eq(new.route(&ctx), old.route(&ctx), "routing decision")?;
+                }
             }
             Ok(())
         });

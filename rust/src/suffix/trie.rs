@@ -11,25 +11,27 @@
 //! suffixes of every new rollout and bumping counts along each path.
 //!
 //! Since the core refactor this type is a thin veneer: all trie machinery —
-//! the flat node arena, the branchless inline `ChildTable`, suffix links,
-//! and the locate / insert / deepest-match / greedy-walk traversals —
-//! lives once in [`super::core::ArenaTrie`], parameterized here with the
-//! plain [`super::core::Counts`] store.
+//! the **path-compressed** flat node arena, the interned token-segment pool
+//! (shareable across shards via [`super::core::SharedPool`]), the branchless
+//! inline `ChildTable`, suffix links over compressed edges, and the locate /
+//! insert / deepest-match / greedy-walk traversals — lives once in
+//! [`super::core::ArenaTrie`], parameterized here with the plain
+//! [`super::core::Counts`] store.
 //!
 //! # Cost model
 //!
-//! * `insert`: O(len · D) count bumps, one branchless child probe each, in
-//!   a single left-to-right pass (the suffix-link chain of the deepest
-//!   match is the insertion frontier — no per-start root re-walk).
-//! * `count`/`contains`: O(m) probes.
-//! * longest-suffix match: a **single O(m) forward pass** over the last
-//!   m context tokens using suffix links (Aho–Corasick fallback), replacing
-//!   the earlier monotone binary search (O(m log m)) and the original
-//!   O(m²) rescan.
-//! * greedy draft walk: O(budget · fanout) with sorted, deterministic child
-//!   iteration (ties break toward the smallest token id for free).
+//! * `insert`: one skip/count walk per start position; count bumps are per
+//!   *explicit node* (branching/termination points), not per token, so
+//!   shared-prefix rollouts pay a few bumps per position instead of D. The
+//!   whole rollout is interned once — repeats add zero pool bytes.
+//! * `count`/`contains`: O(m) label comparison (may end mid-edge).
+//! * longest-suffix match: a **single O(m) forward pass** using suffix
+//!   links generalized to compressed edges (skip/count re-descents).
+//! * greedy draft walk: O(budget) — forced (probe-free) inside an edge,
+//!   one sorted branchless table scan at explicit nodes; deterministic
+//!   smallest-token tie-breaking either way.
 
-use crate::suffix::core::{ArenaTrie, Counts};
+use crate::suffix::core::{ArenaTrie, Counts, PoolStats, SharedPool};
 use crate::tokens::TokenId;
 
 #[derive(Debug, Clone)]
@@ -41,8 +43,14 @@ pub struct SuffixTrieIndex {
 
 impl SuffixTrieIndex {
     pub fn new(max_depth: usize) -> Self {
+        Self::with_pool(max_depth, SharedPool::new())
+    }
+
+    /// Index whose edge labels are interned in `pool` (shared-prefix
+    /// deduplication across every index on the same pool).
+    pub fn with_pool(max_depth: usize, pool: SharedPool) -> Self {
         SuffixTrieIndex {
-            trie: ArenaTrie::new(max_depth.max(2), Counts::default()),
+            trie: ArenaTrie::with_pool(max_depth.max(2), Counts::default(), pool),
             tokens_indexed: 0,
             rollouts: 0,
         }
@@ -52,8 +60,20 @@ impl SuffixTrieIndex {
         self.trie.max_depth()
     }
 
+    /// Explicit (compressed) trie nodes. See
+    /// [`SuffixTrieIndex::token_positions`] for the uncompressed equivalent.
     pub fn node_count(&self) -> usize {
         self.trie.node_count()
+    }
+
+    /// What a one-node-per-token trie would allocate for the same content.
+    pub fn token_positions(&self) -> usize {
+        self.trie.token_positions()
+    }
+
+    /// Live/dead accounting of the (possibly shared) segment pool.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.trie.pool_stats()
     }
 
     pub fn tokens_indexed(&self) -> usize {
@@ -72,14 +92,15 @@ impl SuffixTrieIndex {
     }
 
     /// Occurrence count of `pattern` in the indexed corpus (patterns longer
-    /// than `max_depth` report 0).
+    /// than `max_depth` report 0). Mid-edge matches read the edge's lower
+    /// node — exact by the compressed-counting invariant.
     pub fn count(&self, pattern: &[TokenId]) -> u64 {
         if pattern.len() > self.max_depth() {
             return 0;
         }
         self.trie
             .locate(pattern)
-            .map(|n| self.trie.store().get(n))
+            .map(|p| self.trie.store().get(p.row()))
             .unwrap_or(0)
     }
 
@@ -89,8 +110,8 @@ impl SuffixTrieIndex {
 
     /// Frequency-weighted greedy draft: locate the longest context suffix
     /// (one suffix-link pass), then repeatedly step to the most frequent
-    /// child (ties broken by smallest token id, deterministically), up to
-    /// `budget` tokens.
+    /// continuation (ties broken by smallest token id, deterministically),
+    /// up to `budget` tokens.
     ///
     /// Returns the draft and, for each draft token, the empirical
     /// confidence `count(child)/count(node)` — used by the acceptance model
@@ -114,11 +135,11 @@ impl SuffixTrieIndex {
         max_match: usize,
         budget: usize,
     ) -> (Vec<TokenId>, Vec<f32>, usize) {
-        let (mlen, node) = self.trie.deepest_suffix(context, max_match, ());
+        let (mlen, pos) = self.trie.deepest_suffix(context, max_match, ());
         if mlen == 0 || budget == 0 {
             return (Vec::new(), Vec::new(), mlen);
         }
-        let (tokens, confidence) = self.trie.greedy_walk(node, budget, ());
+        let (tokens, confidence) = self.trie.greedy_walk(pos, budget, ());
         (tokens, confidence, mlen)
     }
 
@@ -127,7 +148,8 @@ impl SuffixTrieIndex {
         self.trie.deepest_suffix(context, max_len, ()).0
     }
 
-    /// Approximate heap bytes.
+    /// Approximate heap bytes (arena + store; pool bytes are reported
+    /// separately since the pool may be shared).
     pub fn approx_bytes(&self) -> usize {
         self.trie.approx_bytes()
     }
@@ -197,6 +219,29 @@ mod tests {
         assert_eq!(idx.count(&[2, 3]), 10);
         assert_eq!(idx.rollouts(), 10);
         assert_eq!(idx.tokens_indexed(), 30);
+    }
+
+    #[test]
+    fn compression_collapses_shared_prefixes() {
+        // Rollouts sharing a long boilerplate prefix: explicit nodes stay
+        // close to the branching structure while the token-position count
+        // (what the uncompressed trie allocated) keeps growing.
+        let mut idx = SuffixTrieIndex::new(24);
+        let prefix: Vec<u32> = (0..40).map(|i| 100 + i).collect();
+        for tail in 0..8u32 {
+            let mut r = prefix.clone();
+            r.extend((0..10).map(|j| 200 + tail * 10 + j));
+            idx.insert(&r);
+        }
+        assert!(
+            idx.node_count() * 2 < idx.token_positions(),
+            "shared-prefix corpus must compress ≥2×: {} nodes vs {} positions",
+            idx.node_count(),
+            idx.token_positions()
+        );
+        // Drafting through the shared prefix still works.
+        let (draft, _) = idx.draft_weighted(&[100, 101, 102], 8, 4);
+        assert_eq!(draft, vec![103, 104, 105, 106]);
     }
 
     #[test]
@@ -280,8 +325,8 @@ mod tests {
 
     #[test]
     fn prop_longest_suffix_matches_naive_rescan() {
-        // Safety net for the suffix-link O(m) pass: it must find exactly
-        // the length the old descending rescan found.
+        // Safety net for the compressed suffix-link O(m) pass: it must find
+        // exactly the length the old descending rescan found.
         prop::check(96, |g| {
             let alphabet = 1 + g.usize_in(1, 4) as u32;
             let depth = 2 + g.usize_in(0, 10);
@@ -309,9 +354,9 @@ mod tests {
 
     #[test]
     fn prop_agrees_with_suffix_tree() {
-        // Cross-structure agreement: the arena trie and the Ukkonen tree
-        // must answer containment and longest-suffix-match identically for
-        // patterns within the trie's depth cap.
+        // Cross-structure agreement: the compressed arena trie and the
+        // Ukkonen tree must answer containment and longest-suffix-match
+        // identically for patterns within the trie's depth cap.
         prop::check(96, |g| {
             let alphabet = 1 + g.usize_in(1, 5) as u32;
             let mut trie = SuffixTrieIndex::new(16);

@@ -5,42 +5,34 @@
 //! was one counting suffix-trie *bucket per epoch* (one full trie walk per
 //! bucket per draft); the production representation is a **fused
 //! epoch-tagged trie**: one [`crate::suffix::core::ArenaTrie`] per shard
-//! whose [`CountStore`] keeps a per-epoch count slot table per node.
+//! (path-compressed, labels interned in the shared segment pool) whose
+//! [`CountStore`] keeps per-epoch counts per node.
 //!
 //! # Fused layout (every window size, including `window_all`)
 //!
-//! One arena trie holds the union of all live epochs' paths. Each node owns
-//! `cap` count slots in a flat side table; an insert at epoch `e` bumps
-//! slot `e % cap`, tagging it with `e` and lazily zeroing whatever stale
-//! epoch the slot held before (live epochs span at most `cap` consecutive
-//! values, so live tags never collide). For a bounded window, `cap =
-//! window` and rolling the epoch is O(1): slots whose tag falls out of the
-//! window are simply no longer live — whole-epoch eviction without touching
-//! a single node (a periodic compaction sweep reclaims dead paths once they
-//! dominate the arena, rebuilding suffix links in the same pass). For the
-//! unbounded `window_all` ablation (window = 0) the slot table is
-//! **growable**: `cap` starts small and re-strides (doubling) whenever the
-//! live epoch span outgrows it, so the same fused trie covers the
-//! no-eviction case too and the per-epoch bucket ring is gone from
-//! production entirely (it survives only as the executable specification
-//! inside the property tests below).
+//! One arena trie holds the union of all live epochs' paths. Per-epoch
+//! counts come in two row layouts behind the same `CountStore`:
 //!
-//! Memory model of `window_all`: the dense slot rows cost
-//! O(nodes × live-epoch-span), so a run spanning E epochs pays ~E slots
-//! per node and scans them on liveness probes. That is the honest price of
-//! the no-eviction *ablation* — the configuration the paper measures
-//! precisely to show it loses — and it trades the old bucket ring's
-//! one-walk-per-epoch query cost for wider rows. Production windows are
-//! small constants (4–32), where the dense row IS the compact
-//! representation; if `window_all` ever needs to scale past hundreds of
-//! epochs, swap `EpochStore`'s dense rows for sparse per-node
-//! (epoch, count) lists (ROADMAP item) — the `CountStore` seam makes that
-//! a one-file change.
+//! * **Bounded windows** (`window ≥ 1`): a dense ring of `window` slots per
+//!   node, slot `epoch % window`, each tagged with the epoch it last
+//!   counted (live epochs span at most `window` consecutive values, so live
+//!   tags never collide). Rolling the epoch is O(1): slots whose tag falls
+//!   out of the window are simply no longer live — whole-epoch eviction
+//!   without touching a single node; a periodic compaction sweep reclaims
+//!   dead paths (and their pool segments) once they dominate the arena.
+//! * **`window_all`** (`window == 0`, the no-eviction ablation): a sparse
+//!   per-node `(epoch, count)` list, kept sorted by epoch. Memory is linear
+//!   in *distinct (node, epoch) pairs* — i.e. linear in indexed tokens —
+//!   instead of the old dense O(nodes × live-epoch-span) slot rows that
+//!   re-strided (doubling) as the run aged. Bumps are O(1) amortized
+//!   (epochs arrive in nondecreasing order, so the append fast-path hits),
+//!   liveness is an is-empty check, and exact-epoch reads binary-search.
 //!
-//! A draft call probes ONE structure: a single O(m) suffix-link pass finds
-//! the deepest live match, then the match node's suffix-link chain (depths
-//! m, m−1, …, 1 — no re-walks) yields each live epoch's deepest match from
-//! the visited nodes' slots. Candidates are ranked by the same
+//! A draft call probes ONE structure: a single O(m) compressed-edge
+//! suffix-link pass finds the deepest live match position, then the
+//! suffix-chain walk (positions of depths m, m−1, …, 1 — skip/count
+//! re-descents, no root re-walks) yields each live epoch's deepest match
+//! from the visited rows. Candidates are ranked by the same
 //! `match_len · age_discount^age` rule as the old bucket ring — identical
 //! drafts (property-tested), window-independent probe structure.
 //!
@@ -54,7 +46,7 @@
 
 use std::collections::VecDeque;
 
-use crate::suffix::core::{ArenaTrie, CountStore};
+use crate::suffix::core::{ArenaTrie, CountStore, PoolStats, SharedPool, TriePos};
 use crate::tokens::{Epoch, TokenId};
 
 /// One candidate draft from one epoch.
@@ -79,10 +71,16 @@ pub struct WindowedIndex {
 
 impl WindowedIndex {
     pub fn new(window: usize, max_depth: usize) -> Self {
+        Self::with_pool(window, max_depth, SharedPool::new())
+    }
+
+    /// Index whose edge labels are interned in `pool` — the drafter shares
+    /// one pool across every shard so common rollout content is stored once.
+    pub fn with_pool(window: usize, max_depth: usize, pool: SharedPool) -> Self {
         WindowedIndex {
             window,
             age_discount: 0.85,
-            fused: FusedEpochTrie::new(window, max_depth),
+            fused: FusedEpochTrie::new(window, max_depth, pool),
         }
     }
 
@@ -122,9 +120,9 @@ impl WindowedIndex {
     }
 
     /// Number of independent index structures a draft call probes (for
-    /// latency figures): always 1 since the fused trie covers every window
-    /// size, `window_all` included — the unbounded case pays instead in
-    /// per-node slot-scan width (`cap` grows with the live epoch span).
+    /// latency figures): always 1 — the fused trie covers every window
+    /// size, `window_all` included (its sparse rows keep even the unbounded
+    /// path linear in indexed tokens).
     pub fn probe_cost(&self) -> usize {
         1
     }
@@ -133,32 +131,61 @@ impl WindowedIndex {
         self.fused.trie.approx_bytes()
     }
 
-    /// Trie nodes currently allocated (diagnostics; bounded by compaction
-    /// for windowed shards).
+    /// Explicit trie nodes currently allocated (diagnostics; bounded by
+    /// compaction for windowed shards). With path compression this counts
+    /// branching/termination points, not indexed token positions — see
+    /// [`WindowedIndex::token_positions`].
     pub fn node_count(&self) -> usize {
         self.fused.trie.node_count()
+    }
+
+    /// What a one-node-per-token trie would allocate for the same content
+    /// (the compression-ratio denominator in the telemetry gauges).
+    pub fn token_positions(&self) -> usize {
+        self.fused.trie.token_positions()
+    }
+
+    /// Live/dead byte accounting of the (possibly shared) segment pool.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.fused.trie.pool_stats()
+    }
+
+    /// Test hook: run the dead-epoch compaction sweep immediately instead
+    /// of waiting for the arena-doubling trigger (used by the equivalence
+    /// property test to exercise compaction on small arenas).
+    #[cfg(test)]
+    pub(crate) fn compact_now(&mut self) {
+        self.fused.compact_now();
     }
 }
 
 // ---------------------------------------------------------------------------
-// Epoch-slot CountStore
+// Epoch-count CountStore: dense ring (bounded) / sparse rows (window_all)
 // ---------------------------------------------------------------------------
 
-/// One per-epoch count slot of a node's slot row.
+/// One per-epoch count slot of a bounded window's dense ring row.
 #[derive(Debug, Clone, Copy, Default)]
 struct Slot {
     epoch: Epoch,
     count: u64,
 }
 
-/// Per-node epoch-tagged count rows: node `i` owns
-/// `slots[i*cap .. (i+1)*cap]`, slot index `epoch % cap`.
+/// Per-node epoch row storage. Both layouts answer the same three
+/// questions — exact-epoch count, any-live-epoch liveness, live-pair
+/// iteration — so the trie walks never know which one is underneath.
+#[derive(Debug, Clone)]
+enum Rows {
+    /// Bounded window: node `i` owns `slots[i*cap .. (i+1)*cap]`, slot
+    /// index `epoch % cap`, lazily reclaimed on tag mismatch.
+    Dense { slots: Vec<Slot>, cap: usize },
+    /// `window_all`: per-node sorted `(epoch, count)` lists — linear in
+    /// distinct (node, epoch) pairs, no re-striding, unbounded epochs.
+    Sparse { rows: Vec<Vec<(Epoch, u64)>> },
+}
+
 #[derive(Debug, Clone)]
 struct EpochStore {
-    slots: Vec<Slot>,
-    /// Slots per node. Fixed at `window` for bounded windows; grows (with a
-    /// re-stride) as the live epoch span grows when `window == 0`.
-    cap: usize,
+    rows: Rows,
     /// 0 = unbounded (`window_all`).
     window: usize,
     n_nodes: usize,
@@ -176,8 +203,11 @@ enum EpochFilter {
 impl EpochStore {
     fn new(window: usize) -> Self {
         EpochStore {
-            slots: Vec::new(),
-            cap: if window == 0 { 4 } else { window },
+            rows: if window == 0 {
+                Rows::Sparse { rows: Vec::new() }
+            } else {
+                Rows::Dense { slots: Vec::new(), cap: window }
+            },
             window,
             n_nodes: 0,
         }
@@ -188,45 +218,43 @@ impl EpochStore {
         epoch <= newest && (self.window == 0 || (newest - epoch) < self.window as Epoch)
     }
 
-    /// Count this node holds for exactly `epoch` (0 if the slot was
-    /// recycled by a colliding epoch).
+    /// Count this node holds for exactly `epoch`.
     #[inline]
     fn epoch_count(&self, node: usize, epoch: Epoch) -> u64 {
-        let s = &self.slots[node * self.cap + (epoch as usize % self.cap)];
-        if s.epoch == epoch {
-            s.count
-        } else {
-            0
-        }
-    }
-
-    /// Visit the live (epoch, count) pairs of one node's slot row.
-    fn for_each_live<F: FnMut(Epoch, u64)>(&self, node: usize, newest: Epoch, mut f: F) {
-        let base = node * self.cap;
-        for s in &self.slots[base..base + self.cap] {
-            if s.count > 0 && self.in_window(newest, s.epoch) {
-                f(s.epoch, s.count);
+        match &self.rows {
+            Rows::Dense { slots, cap } => {
+                let s = &slots[node * cap + (epoch as usize % cap)];
+                if s.epoch == epoch {
+                    s.count
+                } else {
+                    0
+                }
             }
+            Rows::Sparse { rows } => rows[node]
+                .binary_search_by_key(&epoch, |&(e, _)| e)
+                .map(|i| rows[node][i].1)
+                .unwrap_or(0),
         }
     }
 
-    /// Re-stride every node's slot row to `new_cap` (a multiple of `cap`,
-    /// so no two occupied slots collide in the new layout). Only the
-    /// unbounded window grows.
-    fn grow_to(&mut self, new_cap: usize) {
-        debug_assert!(new_cap > self.cap && new_cap % self.cap == 0);
-        let mut new_slots = vec![Slot::default(); self.n_nodes * new_cap];
-        for node in 0..self.n_nodes {
-            for s in &self.slots[node * self.cap..(node + 1) * self.cap] {
-                if s.count > 0 {
-                    let t = &mut new_slots[node * new_cap + (s.epoch as usize % new_cap)];
-                    debug_assert_eq!(t.count, 0, "re-stride collision");
-                    *t = *s;
+    /// Visit the live (epoch, count) pairs of one node's row.
+    fn for_each_live<F: FnMut(Epoch, u64)>(&self, node: usize, newest: Epoch, mut f: F) {
+        match &self.rows {
+            Rows::Dense { slots, cap } => {
+                for s in &slots[node * cap..(node + 1) * cap] {
+                    if s.count > 0 && self.in_window(newest, s.epoch) {
+                        f(s.epoch, s.count);
+                    }
+                }
+            }
+            Rows::Sparse { rows } => {
+                for &(e, c) in &rows[node] {
+                    if c > 0 && self.in_window(newest, e) {
+                        f(e, c);
+                    }
                 }
             }
         }
-        self.slots = new_slots;
-        self.cap = new_cap;
     }
 }
 
@@ -236,51 +264,111 @@ impl CountStore for EpochStore {
 
     fn new_empty(&self) -> Self {
         EpochStore {
-            slots: Vec::new(),
-            cap: self.cap,
+            rows: match &self.rows {
+                Rows::Dense { cap, .. } => Rows::Dense { slots: Vec::new(), cap: *cap },
+                Rows::Sparse { .. } => Rows::Sparse { rows: Vec::new() },
+            },
             window: self.window,
             n_nodes: 0,
         }
     }
 
     fn push_node(&mut self) {
-        self.slots.extend(std::iter::repeat(Slot::default()).take(self.cap));
+        match &mut self.rows {
+            Rows::Dense { slots, cap } => {
+                slots.extend(std::iter::repeat(Slot::default()).take(*cap));
+            }
+            Rows::Sparse { rows } => rows.push(Vec::new()),
+        }
         self.n_nodes += 1;
     }
 
-    /// Bump the node's epoch slot, lazily reclaiming a stale tag.
+    /// Bump the node's epoch count. Dense: lazily reclaim a stale tag.
+    /// Sparse: append fast-path (epochs are non-decreasing), binary-search
+    /// insert for late arrivals.
     #[inline]
     fn bump(&mut self, node: usize, epoch: Epoch) {
-        let s = &mut self.slots[node * self.cap + (epoch as usize % self.cap)];
-        if s.epoch != epoch {
-            s.epoch = epoch;
-            s.count = 0;
+        match &mut self.rows {
+            Rows::Dense { slots, cap } => {
+                let s = &mut slots[node * *cap + (epoch as usize % *cap)];
+                if s.epoch != epoch {
+                    s.epoch = epoch;
+                    s.count = 0;
+                }
+                s.count += 1;
+            }
+            Rows::Sparse { rows } => {
+                let row = &mut rows[node];
+                match row.last().copied() {
+                    Some((e, _)) if e == epoch => row.last_mut().expect("nonempty").1 += 1,
+                    Some((e, _)) if e < epoch => row.push((epoch, 1)),
+                    None => row.push((epoch, 1)),
+                    // Late arrival behind the row's newest epoch.
+                    Some(_) => match row.binary_search_by_key(&epoch, |&(e, _)| e) {
+                        Ok(i) => row[i].1 += 1,
+                        Err(i) => row.insert(i, (epoch, 1)),
+                    },
+                }
+            }
         }
-        s.count += 1;
     }
 
     fn weight(&self, node: usize, filter: EpochFilter) -> u64 {
         match filter {
             EpochFilter::Exact { epoch } => self.epoch_count(node, epoch),
-            EpochFilter::AnyLive { newest } => {
-                let base = node * self.cap;
-                let live = self.slots[base..base + self.cap]
-                    .iter()
-                    .any(|s| s.count > 0 && self.in_window(newest, s.epoch));
-                live as u64
-            }
+            EpochFilter::AnyLive { newest } => match &self.rows {
+                Rows::Dense { slots, cap } => {
+                    let live = slots[node * cap..(node + 1) * cap]
+                        .iter()
+                        .any(|s| s.count > 0 && self.in_window(newest, s.epoch));
+                    live as u64
+                }
+                // window_all never evicts: any recorded epoch is live.
+                Rows::Sparse { rows } => (!rows[node].is_empty()) as u64,
+            },
         }
     }
 
     fn copy_node_from(&mut self, src: &Self, old: usize) {
-        debug_assert_eq!(self.cap, src.cap);
-        let base = old * src.cap;
-        self.slots.extend_from_slice(&src.slots[base..base + src.cap]);
+        match (&mut self.rows, &src.rows) {
+            (Rows::Dense { slots, cap }, Rows::Dense { slots: ss, cap: sc }) => {
+                debug_assert_eq!(*cap, *sc);
+                slots.extend_from_slice(&ss[old * sc..(old + 1) * sc]);
+            }
+            (Rows::Sparse { rows }, Rows::Sparse { rows: sr }) => {
+                rows.push(sr[old].clone());
+            }
+            _ => unreachable!("epoch row layouts never mix"),
+        }
+        self.n_nodes += 1;
+    }
+
+    fn split_node(&mut self, child: usize) {
+        match &mut self.rows {
+            Rows::Dense { slots, cap } => {
+                let base = child * *cap;
+                let row: Vec<Slot> = slots[base..base + *cap].to_vec();
+                slots.extend_from_slice(&row);
+            }
+            Rows::Sparse { rows } => {
+                let row = rows[child].clone();
+                rows.push(row);
+            }
+        }
         self.n_nodes += 1;
     }
 
     fn heap_bytes(&self) -> usize {
-        self.slots.capacity() * std::mem::size_of::<Slot>()
+        match &self.rows {
+            Rows::Dense { slots, .. } => slots.capacity() * std::mem::size_of::<Slot>(),
+            Rows::Sparse { rows } => {
+                rows.capacity() * std::mem::size_of::<Vec<(Epoch, u64)>>()
+                    + rows
+                        .iter()
+                        .map(|r| r.capacity() * std::mem::size_of::<(Epoch, u64)>())
+                        .sum::<usize>()
+            }
+        }
     }
 }
 
@@ -306,9 +394,9 @@ struct FusedEpochTrie {
 }
 
 impl FusedEpochTrie {
-    fn new(window: usize, max_depth: usize) -> Self {
+    fn new(window: usize, max_depth: usize, pool: SharedPool) -> Self {
         FusedEpochTrie {
-            trie: ArenaTrie::new(max_depth.max(2), EpochStore::new(window)),
+            trie: ArenaTrie::with_pool(max_depth.max(2), EpochStore::new(window), pool),
             window,
             newest: None,
             live: VecDeque::new(),
@@ -320,26 +408,6 @@ impl FusedEpochTrie {
     #[inline]
     fn in_window(&self, newest: Epoch, epoch: Epoch) -> bool {
         self.trie.store().in_window(newest, epoch)
-    }
-
-    /// Unbounded windows: grow the slot stride whenever the live epoch span
-    /// outgrows it, so live epochs never collide in `epoch % cap`.
-    fn ensure_cap(&mut self) {
-        if self.window != 0 {
-            return;
-        }
-        let (Some(&front), Some(&back)) = (self.live.front(), self.live.back()) else {
-            return;
-        };
-        let span = (back - front) as usize + 1;
-        let cap = self.trie.store().cap;
-        if span > cap {
-            let mut new_cap = cap;
-            while new_cap < span {
-                new_cap *= 2;
-            }
-            self.trie.store_mut().grow_to(new_cap);
-        }
     }
 
     /// Advance `newest` to `epoch` (≥ current), registering it as live and
@@ -357,7 +425,6 @@ impl FusedEpochTrie {
             self.live.pop_front();
             self.live_tokens.pop_front();
         }
-        self.ensure_cap();
         // Epochs can advance via roll_epoch OR direct inserts at a newer
         // epoch; reclaim dead paths on either path (the guard inside is two
         // integer compares, so this is free on the hot path).
@@ -372,13 +439,14 @@ impl FusedEpochTrie {
 
     /// Dead-epoch paths stay in the arena after (lazy) eviction; once the
     /// arena has doubled since the last sweep, rebuild it from the
-    /// live-reachable nodes only. A node is live iff any slot holds a
+    /// live-reachable nodes only. A node is live iff any row entry holds a
     /// live-epoch count, and liveness propagates to ancestors (counts are
     /// bumped along whole paths), so the core's keep-live-children DFS
-    /// reconstructs exactly the reachable live trie and re-derives every
-    /// suffix link. Counts are copied verbatim, so drafts are unchanged.
-    /// Amortized O(1) per insert; bounds memory at ~2× the live working
-    /// set. Unbounded windows never evict, hence never compact.
+    /// reconstructs exactly the reachable live trie, releases the dropped
+    /// edges' pool segments, and re-derives every suffix link. Counts are
+    /// copied verbatim, so drafts are unchanged. Amortized O(1) per insert;
+    /// bounds memory at ~2× the live working set. Unbounded windows never
+    /// evict, hence never compact.
     fn maybe_compact(&mut self) {
         if self.window == 0 {
             return;
@@ -387,10 +455,21 @@ impl FusedEpochTrie {
         if n < COMPACT_MIN_NODES || n < self.last_compact_nodes.saturating_mul(2) {
             return;
         }
+        self.compact_live();
+    }
+
+    fn compact_live(&mut self) {
         let Some(newest) = self.newest else { return };
         let filter = EpochFilter::AnyLive { newest };
         self.trie.compact(|store, node| store.weight(node, filter) > 0);
         self.last_compact_nodes = self.trie.node_count().max(1);
+    }
+
+    #[cfg(test)]
+    fn compact_now(&mut self) {
+        if self.window != 0 {
+            self.compact_live();
+        }
     }
 
     fn insert_rollout(&mut self, epoch: Epoch, tokens: &[TokenId]) {
@@ -411,7 +490,6 @@ impl FusedEpochTrie {
                     self.live.insert(pos, epoch);
                     self.live_tokens.insert(pos, 0);
                 }
-                self.ensure_cap();
             }
             _ => self.advance(epoch),
         }
@@ -429,34 +507,34 @@ impl FusedEpochTrie {
         age_discount: f64,
     ) -> Option<WindowDraft> {
         let newest = self.newest?;
-        // 1. Deepest match over ANY live epoch — one O(m) suffix-link pass.
-        let (take_max, node) =
+        // 1. Deepest match over ANY live epoch — one O(m) compressed-edge
+        //    suffix-link pass; the position may sit mid-edge.
+        let (take_max, pos) =
             self.trie
                 .deepest_suffix(context, max_match, EpochFilter::AnyLive { newest });
         if take_max == 0 {
             return None;
         }
-        // 2. Per-epoch match depths: the suffix-link chain from the match
-        //    node visits exactly the matched suffixes of lengths take_max,
-        //    take_max−1, …, 1 (no re-walks); record each live epoch the
-        //    first (deepest) time it appears in a visited node's slot row.
-        let mut cands: Vec<(f64, Epoch, usize, usize)> = Vec::new(); // (score, epoch, mlen, node)
-        let mut n = node;
-        let mut take = take_max;
-        loop {
-            self.trie.store().for_each_live(n, newest, |epoch, _count| {
+        // 2. Per-epoch match depths: the suffix chain from the match
+        //    position visits exactly the matched suffixes of lengths
+        //    take_max, take_max−1, …, 1 (skip/count re-descents, no root
+        //    re-walks); record each live epoch the first (deepest) time it
+        //    appears in a visited position's row.
+        let matched = &context[context.len() - take_max..];
+        let live_total = self.live.len();
+        let mut cands: Vec<(f64, Epoch, usize, TriePos)> = Vec::new();
+        self.trie.walk_suffix_chain(matched, pos, |take, p| {
+            self.trie.store().for_each_live(p.row(), newest, |epoch, _count| {
                 if !cands.iter().any(|&(_, e, _, _)| e == epoch) {
                     let age = (newest - epoch) as f64;
                     let score = take as f64 * age_discount.powf(age);
-                    cands.push((score, epoch, take, n));
+                    cands.push((score, epoch, take, p));
                 }
             });
-            if cands.len() == self.live.len() || take == 1 {
-                break; // every live epoch accounted for, or chain exhausted
-            }
-            n = self.trie.suffix_link(n);
-            take -= 1;
-        }
+            // Continue until every live epoch is accounted for (the chain
+            // stops at depth 1 on its own).
+            cands.len() < live_total
+        });
         // 3. Same ranking as the old bucket ring: best score, ties to the
         //    newer epoch, skipping candidates whose greedy walk is empty.
         cands.sort_by(|a, b| {
@@ -464,9 +542,9 @@ impl FusedEpochTrie {
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(b.1.cmp(&a.1))
         });
-        for &(score, epoch, mlen, node) in &cands {
+        for &(score, epoch, mlen, p) in &cands {
             let (tokens, confidence) =
-                self.trie.greedy_walk(node, budget, EpochFilter::Exact { epoch });
+                self.trie.greedy_walk(p, budget, EpochFilter::Exact { epoch });
             if !tokens.is_empty() {
                 return Some(WindowDraft {
                     tokens,
@@ -621,11 +699,32 @@ mod tests {
             w.insert(e, &[e + 100, e + 101, e + 102]);
         }
         assert_eq!(w.bucket_count(), 20);
-        // Oldest and newest epoch content both still draftable — the
-        // growable epoch-tag table must have re-strided past 4 epochs.
+        // Oldest and newest epoch content both still draftable from the
+        // sparse per-node rows.
         assert!(w.draft(&[100, 101], 4, 1).is_some());
         assert!(w.draft(&[119, 120], 4, 1).is_some());
         assert_eq!(w.probe_cost(), 1, "window_all runs on the fused trie");
+    }
+
+    #[test]
+    fn sparse_rows_stay_linear_in_content() {
+        // The ROADMAP complaint the sparse rows fix: with dense rows the
+        // unbounded window paid O(nodes × epoch-span); sparse rows pay per
+        // (node, epoch) pair. 200 epochs of the SAME rollout must not grow
+        // per-epoch storage superlinearly — every path node carries one
+        // entry per epoch it was seen in, and the trie itself stays
+        // single-rollout-sized.
+        let mut w = WindowedIndex::new(0, 8);
+        let r: Vec<u32> = (0..30).map(|i| i % 7).collect();
+        w.insert(0, &r);
+        let nodes_once = w.node_count();
+        for e in 1..200u32 {
+            w.insert(e, &r);
+        }
+        assert_eq!(w.node_count(), nodes_once, "same content, same paths");
+        assert_eq!(w.bucket_count(), 200);
+        // Exact-epoch drafting still works across the whole span.
+        assert!(w.draft(&[0, 1], 4, 2).is_some());
     }
 
     #[test]
@@ -711,8 +810,9 @@ mod tests {
     #[test]
     fn fused_arena_compacts_after_eviction() {
         // 300 epochs of disjoint content with window 2: without compaction
-        // the arena would retain every dead epoch's paths forever (~90k
-        // nodes here); the sweep keeps it near the live working set.
+        // the arena would retain every dead epoch's paths forever; the
+        // sweep keeps it near the live working set — and the segment pool
+        // must shed dead epochs' label bytes too, not just nodes.
         let mut w = WindowedIndex::new(2, 8);
         for e in 0..300u32 {
             w.roll_epoch(e);
@@ -727,16 +827,23 @@ mod tests {
             "dead epochs must be compacted away, arena holds {} nodes",
             w.node_count()
         );
+        let ps = w.pool_stats();
+        assert!(
+            ps.live_tokens < 40 * 300 / 2,
+            "dead epochs' segments must be released, pool holds {} live tokens",
+            ps.live_tokens
+        );
     }
 
     #[test]
     fn window_all_matches_large_window_on_identical_streams() {
         // Regression for the old split-representation bug: window = 0 used
         // a bucket ring while window ≥ 1 used the fused trie, and their
-        // `roll_epoch` bookkeeping could diverge. Both now run fused; an
-        // unbounded window and a window larger than the whole run must
-        // behave identically on the same stream (inserts, rolls, late
-        // arrivals) — same drafts, same live-epoch accounting.
+        // `roll_epoch` bookkeeping could diverge. Both now run fused (one
+        // on sparse rows, one on the dense ring); an unbounded window and a
+        // window larger than the whole run must behave identically on the
+        // same stream (inserts, rolls, late arrivals) — same drafts, same
+        // live-epoch accounting.
         let mut all = WindowedIndex::new(0, 10);
         let mut big = WindowedIndex::new(64, 10);
         let mut rng = crate::util::rng::Rng::seed_from_u64(7);
@@ -815,9 +922,10 @@ mod tests {
     #[test]
     fn prop_fused_matches_bucket_reference() {
         // THE equivalence anchor: over random consecutive-epoch histories
-        // (rolls, inserts, late arrivals) the fused epoch-slot trie must
-        // produce byte-identical drafts to the per-epoch bucket ring — for
-        // bounded windows AND the unbounded window_all path (win == 0).
+        // (rolls, inserts, late arrivals, forced compaction sweeps) the
+        // fused compressed epoch trie must produce byte-identical drafts to
+        // the per-epoch bucket ring — for bounded windows AND the unbounded
+        // window_all path (win == 0, sparse rows).
         prop::check(96, |g| {
             let win = g.usize_in(0, 6); // 0 = window_all
             let alphabet = 1 + g.usize_in(1, 5) as u32;
@@ -842,6 +950,11 @@ mod tests {
                         fused.insert(epoch, &r);
                         reference.insert(epoch, &r);
                     }
+                }
+                if g.usize_in(0, 7) == 0 {
+                    // Sweep dead epochs right now (reference unaffected):
+                    // drafts must not change across a compaction.
+                    fused.compact_now();
                 }
                 prop::require_eq(
                     fused.bucket_count(),

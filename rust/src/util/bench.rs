@@ -20,6 +20,11 @@ pub struct Bencher {
     pub measure: Duration,
     pub min_iters: u64,
     results: Vec<BenchResult>,
+    /// Named scalar measurements (node counts, byte footprints, ratios)
+    /// recorded alongside the timings and persisted into the JSON under
+    /// `"gauges"`. `bench_compare.py` only diffs `"results"`, so gauges
+    /// never trip the regression gate — they make memory wins observable.
+    gauges: Vec<(String, f64)>,
 }
 
 #[derive(Debug, Clone)]
@@ -40,6 +45,7 @@ impl Default for Bencher {
             measure: Duration::from_millis(800),
             min_iters: 10,
             results: Vec::new(),
+            gauges: Vec::new(),
         }
     }
 }
@@ -63,7 +69,14 @@ impl Bencher {
             measure: Duration::from_millis(200),
             min_iters: 5,
             results: Vec::new(),
+            gauges: Vec::new(),
         }
+    }
+
+    /// Record a named scalar gauge (memory footprint, node count, ratio).
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        println!("{:<44} gauge  {:>14.2}", name, value);
+        self.gauges.push((name.to_string(), value));
     }
 
     /// Benchmark `f`, which performs ONE logical iteration per call.
@@ -136,6 +149,9 @@ impl Bencher {
         for r in &self.results {
             println!("{}", format_result(r));
         }
+        for (name, value) in &self.gauges {
+            println!("{:<44} gauge  {:>14.2}", name, value);
+        }
     }
 
     /// Serialize all results as JSON (schema `das-bench-v1`).
@@ -157,9 +173,17 @@ impl Bencher {
                 ])
             })
             .collect();
+        let gauges: Vec<Json> = self
+            .gauges
+            .iter()
+            .map(|(name, value)| {
+                Json::obj(vec![("name", Json::str(name)), ("value", Json::num(*value))])
+            })
+            .collect();
         Json::obj(vec![
             ("schema", Json::str("das-bench-v1")),
             ("results", Json::Arr(results)),
+            ("gauges", Json::Arr(gauges)),
         ])
     }
 
@@ -248,6 +272,7 @@ mod tests {
             measure: Duration::from_millis(20),
             min_iters: 3,
             results: Vec::new(),
+            gauges: Vec::new(),
         };
         let mut acc = 0u64;
         let r = b
@@ -267,11 +292,13 @@ mod tests {
             measure: Duration::from_millis(8),
             min_iters: 3,
             results: Vec::new(),
+            gauges: Vec::new(),
         };
         let mut acc = 0u64;
         b.bench_throughput("t", 128, || {
             acc = black_box(acc.wrapping_add(3));
         });
+        b.gauge("trie_nodes", 1234.0);
         let j = b.to_json();
         assert_eq!(j.get("schema").unwrap().as_str(), Some("das-bench-v1"));
         let results = j.get("results").unwrap().as_arr().unwrap();
@@ -279,6 +306,10 @@ mod tests {
         assert_eq!(results[0].get("name").unwrap().as_str(), Some("t"));
         assert_eq!(results[0].get("elems").unwrap().as_f64(), Some(128.0));
         assert!(results[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        let gauges = j.get("gauges").unwrap().as_arr().unwrap();
+        assert_eq!(gauges.len(), 1);
+        assert_eq!(gauges[0].get("name").unwrap().as_str(), Some("trie_nodes"));
+        assert_eq!(gauges[0].get("value").unwrap().as_f64(), Some(1234.0));
         // Serialized text parses back.
         assert!(Json::parse(&j.to_string()).is_ok());
     }

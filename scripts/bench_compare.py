@@ -35,7 +35,16 @@ def main():
     fresh = load(fresh_path)
 
     if not base:
-        print(f"baseline {base_path} has no results; nothing to compare (pass)")
+        # Pass, but LOUDLY: an empty baseline means the perf gate is not
+        # actually gating anything. CI surfaces stderr, so a quietly-stale
+        # committed baseline can't masquerade as a green perf check.
+        print(
+            f"WARNING: baseline {base_path} has empty 'results' — the perf "
+            f"gate cannot detect regressions until a populated baseline is "
+            f"committed (run the bench with --json {base_path} on a quiet "
+            f"machine and commit the refreshed file)",
+            file=sys.stderr,
+        )
         return
 
     regressions = []
