@@ -57,6 +57,11 @@ pub struct IndexStats {
     /// Approximate heap bytes of the shared pool (live + not-yet-compacted
     /// dead).
     pub pool_bytes: usize,
+    /// Exact suffix-link rebuilds the trie cores have run (compaction
+    /// sweeps plus the insert-count-triggered refresh that keeps
+    /// never-compacting tries — `window_all`, the plain counting trie —
+    /// on exact links). 0 for substrates without suffix links.
+    pub link_rebuilds: u64,
 }
 
 impl IndexStats {
@@ -67,6 +72,7 @@ impl IndexStats {
         self.pool_segments += other.pool_segments;
         self.pool_tokens += other.pool_tokens;
         self.pool_bytes += other.pool_bytes;
+        self.link_rebuilds += other.link_rebuilds;
     }
 }
 
@@ -158,6 +164,7 @@ impl DraftSource for WindowedIndex {
             nodes: self.node_count(),
             token_positions: self.token_positions(),
             heap_bytes: self.approx_bytes(),
+            link_rebuilds: self.link_rebuilds(),
             ..IndexStats::default()
         }
     }
@@ -262,6 +269,7 @@ impl DraftSource for SuffixTrieIndex {
             nodes: self.node_count(),
             token_positions: self.token_positions(),
             heap_bytes: self.approx_bytes(),
+            link_rebuilds: self.link_rebuilds(),
             ..IndexStats::default()
         }
     }

@@ -350,6 +350,7 @@ impl RolloutEngine {
         metrics.pool_segments = idx.pool_segments as u64;
         metrics.pool_tokens = idx.pool_tokens as u64;
         metrics.pool_bytes = idx.pool_bytes as u64;
+        metrics.index_link_rebuilds = idx.link_rebuilds;
         // All passes this engine saw belong to this step's rounds.
         debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
         StepReport {

@@ -40,6 +40,10 @@ pub struct StepMetrics {
     pub pool_tokens: u64,
     /// Approximate heap bytes of the shared label pool.
     pub pool_bytes: u64,
+    /// Exact suffix-link rebuilds across the drafter's trie cores —
+    /// compaction sweeps plus the insert-count refresh that keeps the
+    /// never-compacting `window_all` path on exact links.
+    pub index_link_rebuilds: u64,
 }
 
 impl StepMetrics {
@@ -98,6 +102,7 @@ impl StepMetrics {
         self.pool_segments += other.pool_segments;
         self.pool_tokens += other.pool_tokens;
         self.pool_bytes += other.pool_bytes;
+        self.index_link_rebuilds += other.index_link_rebuilds;
     }
 }
 

@@ -50,6 +50,49 @@
 //!
 //! Positions (explicit or mid-edge) are represented as [`TriePos`].
 //!
+//! # Mutating walks: one [`EdgeCursor`]
+//!
+//! Every walk that may *modify* the trie — suffix indexing
+//! ([`ArenaTrie::insert_suffixes`]), prefix registration
+//! ([`ArenaTrie::insert_prefix`]) and the unregister path
+//! ([`ArenaTrie::prefix_path_split`]) — is a thin driver over one shared
+//! [`EdgeCursor`]: the single implementation of the
+//! probe → label-compare → split-on-divergence/terminal → add-leaf step.
+//! The cursor owns the *mechanics*; drivers own only *policy*. The
+//! division of labor is load-bearing:
+//!
+//! * **Who compares:** [`EdgeCursor::probe`] classifies one step. The
+//!   label comparison starts at index 1 — the [`ChildTable`] is keyed by
+//!   each edge label's FIRST token, so a probed child's `label[0]` equals
+//!   the next target token by construction (debug-asserted). No driver
+//!   re-compares token 0.
+//! * **Who retains pool segments:** the cursor, exactly once per edge it
+//!   creates. [`EdgeCursor::add_leaf`] retains the driver's interned
+//!   segment for the one new leaf edge; [`ArenaTrie::split_edge`] retains
+//!   the split edge's segment once because one edge became two. Drivers
+//!   never touch refcounts (they only `release_if_unused` the segment they
+//!   interned, in case the walk created no edges).
+//! * **Who bumps:** drivers, never the cursor. `insert_suffixes` bumps the
+//!   root once per start position (ε occurs at every position) and every
+//!   explicit node its walk touches or creates; `insert_prefix` bumps the
+//!   same way but NEVER the root (the router does not count ε);
+//!   `prefix_path_split` bumps nothing at all (the router un-bumps the
+//!   returned path itself). Bumps always happen AFTER a split: the new
+//!   upper node must copy the lower node's **pre-bump** row
+//!   ([`CountStore::split_node`]) or interior positions of the old edge
+//!   would inherit counts they never saw.
+//! * **Who may split:** the insert drivers split on BOTH divergence and
+//!   mid-edge termination (the compressed-counting invariant above).
+//!   `prefix_path_split` is read-mostly: it refuses divergence (`None`,
+//!   nothing modified, no leaf ever) and splits only the terminal boundary
+//!   of a fully present prefix, so un-bumps hit exactly the registration's
+//!   explicit nodes.
+//! * **Who maintains links:** only `insert_suffixes` resolves the pending
+//!   suffix links of newly created nodes (against the next start's walk)
+//!   and may trigger the exact-link refresh below. Prefix-only tries are
+//!   not substring-closed, so their links are meaningless and must never
+//!   be rebuilt.
+//!
 //! # Suffix links
 //!
 //! Explicit node `v` stores `slink(v)`: an explicit node whose string is a
@@ -61,7 +104,15 @@
 //! children by first token only, with no label comparisons, because the
 //! string set is substring-closed (every substring ≤ the depth cap of
 //! anything inserted via [`ArenaTrie::insert_suffixes`] is itself a path).
-//! [`ArenaTrie::compact`] recomputes exact links in one arena pass.
+//! [`ArenaTrie::compact`] recomputes exact links in one arena pass — and so
+//! does a threshold-triggered refresh for tries that never compact: every
+//! node created (leaf or split) counts toward `links_dirty`, and once the
+//! approximate links cover half the arena, `insert_suffixes` runs
+//! [`ArenaTrie::rebuild_suffix_links`] itself. This closes the `window_all`
+//! hole (unbounded epoch tries never evict, hence never compacted, so their
+//! split links used to stay parent-fallback-approximate forever); the
+//! rebuild is O(arena) and the trigger is geometric, so the amortized cost
+//! per created node is constant.
 //!
 //! # Cost model
 //!
@@ -86,6 +137,11 @@ use crate::tokens::TokenId;
 /// 8 slots are one u32x8 compare, and deeper-than-root trie nodes almost
 /// never exceed it.
 pub(crate) const INLINE_CHILDREN: usize = 8;
+
+/// Below this arena size the `links_dirty` exact-link refresh never fires:
+/// on tiny tries the O(arena) rebuild costs more than the short re-descents
+/// approximate links cause. Tries that compact get exact links there anyway.
+const LINK_REBUILD_MIN_NODES: usize = 512;
 
 /// Sorted child table: inline small-array storage with sorted-`Vec` spill.
 /// Keys are the FIRST token of each child's edge label.
@@ -580,6 +636,132 @@ impl TriePos {
     }
 }
 
+/// What one [`EdgeCursor::probe`] step found, before any mutation.
+#[derive(Debug, Clone, Copy)]
+enum Probe {
+    /// No child edge below the cursor starts with the next target token.
+    NoChild,
+    /// Child `child`'s whole label matches the target: the cursor may
+    /// descend to that explicit node.
+    FullEdge { child: u32 },
+    /// The walk stops inside `child`'s edge after `matched`
+    /// (1 ≤ matched < label len) label tokens: `divergent` when the next
+    /// target token mismatches the label, terminal (target exhausted)
+    /// otherwise.
+    MidEdge { child: u32, matched: u32, divergent: bool },
+}
+
+/// THE mutating edge-walk state machine: one probe → label-compare →
+/// split-on-divergence/terminal → add-leaf step, shared by
+/// [`ArenaTrie::insert_suffixes`], [`ArenaTrie::insert_prefix`] and
+/// [`ArenaTrie::prefix_path_split`], which keep only their policy (what to
+/// bump, what to record, whether divergence aborts). See the module docs
+/// ("Mutating walks") for the invariant split between cursor and drivers.
+///
+/// The cursor is plain state — `(node, consumed)` — so drivers can
+/// interleave [`CountStore`] bumps between steps without borrow gymnastics;
+/// every method takes the trie (and, for mutations, the locked pool)
+/// explicitly.
+#[derive(Debug, Clone, Copy)]
+struct EdgeCursor {
+    /// Explicit node the walk is at (or whose edge it last split into).
+    node: u32,
+    /// Target tokens consumed so far (= token depth of `node`).
+    consumed: usize,
+}
+
+impl EdgeCursor {
+    fn at_root() -> EdgeCursor {
+        EdgeCursor { node: 0, consumed: 0 }
+    }
+
+    /// The walk consumed its whole target (always ends on an explicit
+    /// node: mid-edge stops are split before the drivers proceed).
+    fn done(&self, target: &[TokenId]) -> bool {
+        self.consumed == target.len()
+    }
+
+    /// Classify the next step toward `target[self.consumed..]` without
+    /// mutating anything. The label comparison starts at index 1: the
+    /// [`ChildTable`] is keyed by each label's first token, so a probed
+    /// child's `label[0]` equals the next target token by construction.
+    fn probe<S: CountStore>(
+        &self,
+        trie: &ArenaTrie<S>,
+        pg: &SegmentPool,
+        target: &[TokenId],
+    ) -> Probe {
+        debug_assert!(self.consumed < target.len(), "probe past the target");
+        let t = target[self.consumed];
+        let Some(child) = trie.nodes[self.node as usize].children.get(t) else {
+            return Probe::NoChild;
+        };
+        let lab = trie.nodes[child as usize].label;
+        let ll = lab.len as usize;
+        let lim = ll.min(target.len() - self.consumed);
+        let lab_toks = pg.slice(lab);
+        debug_assert_eq!(lab_toks[0], t, "child table key != first label token");
+        let mut m = 1usize;
+        while m < lim && lab_toks[m] == target[self.consumed + m] {
+            m += 1;
+        }
+        if m == ll {
+            Probe::FullEdge { child }
+        } else {
+            Probe::MidEdge { child, matched: m as u32, divergent: m < lim }
+        }
+    }
+
+    /// Consume a fully matched edge ([`Probe::FullEdge`]).
+    fn descend<S: CountStore>(&mut self, trie: &ArenaTrie<S>, child: u32) {
+        self.consumed += trie.label_len(child) as usize;
+        self.node = child;
+    }
+
+    /// Expose a mid-edge boundary ([`Probe::MidEdge`]) as an explicit node
+    /// via [`ArenaTrie::split_edge`] (which retains the segment for the
+    /// extra edge and copies the lower node's row pre-bump); the cursor
+    /// moves onto the new upper node.
+    fn split<S: CountStore>(
+        &mut self,
+        trie: &mut ArenaTrie<S>,
+        pg: &mut SegmentPool,
+        child: u32,
+        matched: u32,
+    ) -> u32 {
+        let w = trie.split_edge(child, matched, pg);
+        self.consumed += matched as usize;
+        self.node = w;
+        w
+    }
+
+    /// Append the rest of the target as ONE leaf edge below the cursor,
+    /// retaining the driver's interned segment once for the new edge.
+    /// `seg_off` is where the target starts inside `seg` (a suffix walk
+    /// slices one whole-rollout segment; prefix walks intern exactly their
+    /// target, offset 0). Consumes the target: the walk is done after.
+    fn add_leaf<S: CountStore>(
+        &mut self,
+        trie: &mut ArenaTrie<S>,
+        pg: &mut SegmentPool,
+        seg: u32,
+        seg_off: usize,
+        target: &[TokenId],
+    ) -> u32 {
+        debug_assert!(self.consumed < target.len(), "leaf with an empty label");
+        let label = SegRef {
+            seg,
+            start: (seg_off + self.consumed) as u32,
+            len: (target.len() - self.consumed) as u32,
+        };
+        pg.retain(seg);
+        let leaf = trie.add_leaf(self.node, target[self.consumed], label);
+        self.consumed = target.len();
+        self.node = leaf;
+        leaf
+    }
+}
+
 /// Depth-capped path-compressed arena trie, generic over what each node
 /// counts, with edge labels interned in a (possibly shared) [`SegmentPool`].
 #[derive(Debug)]
@@ -592,6 +774,14 @@ pub struct ArenaTrie<S: CountStore> {
     /// add, compaction recomputes) so `token_positions` is O(1) — it is
     /// polled per step by the telemetry gauges.
     label_tokens: usize,
+    /// Nodes created (leaves + splits) since the last exact link rebuild —
+    /// each may carry an approximate (at-or-above) suffix link. Once they
+    /// cover half the arena, `insert_suffixes` refreshes the links exactly
+    /// (the `window_all` path never compacts, so this is its only refresh).
+    links_dirty: usize,
+    /// Exact link rebuilds performed (compaction or threshold-triggered) —
+    /// a lifetime counter surfaced by the telemetry gauges.
+    link_rebuilds: u64,
 }
 
 impl<S: CountStore> Clone for ArenaTrie<S> {
@@ -610,6 +800,8 @@ impl<S: CountStore> Clone for ArenaTrie<S> {
             max_depth: self.max_depth,
             pool: self.pool.clone(),
             label_tokens: self.label_tokens,
+            links_dirty: self.links_dirty,
+            link_rebuilds: self.link_rebuilds,
         }
     }
 }
@@ -638,6 +830,8 @@ impl<S: CountStore> ArenaTrie<S> {
             max_depth: max_depth.max(1),
             pool,
             label_tokens: 0,
+            links_dirty: 0,
+            link_rebuilds: 0,
         }
     }
 
@@ -705,6 +899,7 @@ impl<S: CountStore> ArenaTrie<S> {
         self.store.push_node();
         self.nodes[parent as usize].children.insert(first_tok, id);
         self.label_tokens += label.len as usize;
+        self.links_dirty += 1;
         id
     }
 
@@ -748,6 +943,7 @@ impl<S: CountStore> ArenaTrie<S> {
         self.nodes[c].label = lower;
         self.nodes[c].parent = w;
         self.nodes[parent as usize].children.set(first_upper, w);
+        self.links_dirty += 1;
         w
     }
 
@@ -757,165 +953,122 @@ impl<S: CountStore> ArenaTrie<S> {
     /// The whole rollout is interned ONCE; every edge created below is a
     /// sub-range of that one segment, so a repeated rollout adds zero pool
     /// bytes and (once its paths exist) zero nodes. Each start position is
-    /// one skip/count walk; edges are split at divergence and termination
-    /// points so the compressed-counting invariant holds (module docs).
-    /// Suffix links of nodes created at position `i` are resolved against
-    /// position `i+1`'s walk — whose path IS the one-shorter suffix — and
-    /// default to the root (always valid) when the walk can't witness them.
+    /// one [`EdgeCursor`] walk; edges are split at divergence and
+    /// termination points so the compressed-counting invariant holds
+    /// (module docs). Suffix links of nodes created at position `i` —
+    /// leaves AND terminal-split nodes — are resolved against position
+    /// `i+1`'s walk, whose path IS the one-shorter suffix, and default to
+    /// the root (always valid) when the walk can't witness them.
     pub fn insert_suffixes(&mut self, tokens: &[TokenId], tag: S::Tag) {
         if tokens.is_empty() {
             return;
         }
         let pool = self.pool.clone();
-        let mut pg = pool.lock();
-        let seg = pg.intern(tokens);
-        // (node, slink target depth) created at the previous start.
-        let mut pending: Vec<(u32, u32)> = Vec::new();
-        let mut next_pending: Vec<(u32, u32)> = Vec::new();
-        // Explicit nodes on the current walk, ascending (node, depth).
-        let mut path: Vec<(u32, u32)> = Vec::new();
-        for i in 0..tokens.len() {
-            let slen = (tokens.len() - i).min(self.max_depth);
-            let s = &tokens[i..i + slen];
-            self.store.bump(0, tag); // root: one occurrence of ε per position
-            path.clear();
-            next_pending.clear();
-            let mut u: u32 = 0;
-            let mut j: usize = 0;
-            loop {
-                if j == slen {
-                    break;
-                }
-                let t = s[j];
-                let Some(c) = self.nodes[u as usize].children.get(t) else {
-                    // New leaf: the rest of s as one edge.
-                    let label = SegRef {
-                        seg,
-                        start: (i + j) as u32,
-                        len: (slen - j) as u32,
-                    };
-                    pg.retain(seg);
-                    let leaf = self.add_leaf(u, t, label);
-                    self.store.bump(leaf as usize, tag);
-                    path.push((leaf, slen as u32));
-                    next_pending.push((leaf, (slen - 1) as u32));
-                    break;
-                };
-                let lab = self.nodes[c as usize].label;
-                let ll = lab.len as usize;
-                let lim = ll.min(slen - j);
-                let lab_toks = pg.slice(lab);
-                let mut m = 1usize; // first token matched via the child key
-                while m < lim && lab_toks[m] == s[j + m] {
-                    m += 1;
-                }
-                if m == ll {
-                    // Edge fully traversed.
-                    self.store.bump(c as usize, tag);
-                    u = c;
-                    j += m;
-                    path.push((c, j as u32));
-                    continue;
-                }
-                // Terminates or diverges mid-edge: expose the boundary.
-                let w = self.split_edge(c, m as u32, &mut pg);
-                self.store.bump(w as usize, tag);
-                let wd = (j + m) as u32;
-                path.push((w, wd));
-                if j + m == slen {
-                    next_pending.push((w, (slen - 1) as u32));
-                } else {
-                    let label = SegRef {
-                        seg,
-                        start: (i + j + m) as u32,
-                        len: (slen - j - m) as u32,
-                    };
-                    pg.retain(seg);
-                    let leaf = self.add_leaf(w, s[j + m], label);
-                    self.store.bump(leaf as usize, tag);
-                    path.push((leaf, slen as u32));
-                    next_pending.push((w, wd - 1));
-                    next_pending.push((leaf, (slen - 1) as u32));
-                }
-                break;
-            }
-            // Resolve the previous start's pending links: this walk's path
-            // is its one-shorter suffix (possibly extended by one token),
-            // so the deepest path node within each target depth is a valid
-            // — and tight — link target.
-            for &(node, target) in &pending {
-                let mut best = 0u32;
-                for &(p, d) in &path {
-                    if d <= target {
-                        best = p;
-                    } else {
-                        break;
+        {
+            let mut pg = pool.lock();
+            let seg = pg.intern(tokens);
+            // (node, slink target depth) created at the previous start.
+            let mut pending: Vec<(u32, u32)> = Vec::new();
+            let mut next_pending: Vec<(u32, u32)> = Vec::new();
+            // Explicit nodes on the current walk, ascending (node, depth).
+            let mut path: Vec<(u32, u32)> = Vec::new();
+            for i in 0..tokens.len() {
+                let slen = (tokens.len() - i).min(self.max_depth);
+                let s = &tokens[i..i + slen];
+                self.store.bump(0, tag); // root: one ε occurrence per position
+                path.clear();
+                next_pending.clear();
+                let mut cur = EdgeCursor::at_root();
+                while !cur.done(s) {
+                    match cur.probe(self, &pg, s) {
+                        Probe::FullEdge { child } => {
+                            cur.descend(self, child);
+                            self.store.bump(child as usize, tag);
+                            path.push((child, cur.consumed as u32));
+                        }
+                        Probe::NoChild => {
+                            let leaf = cur.add_leaf(self, &mut pg, seg, i, s);
+                            self.store.bump(leaf as usize, tag);
+                            path.push((leaf, slen as u32));
+                            next_pending.push((leaf, (slen - 1) as u32));
+                        }
+                        Probe::MidEdge { child, matched, divergent } => {
+                            let w = cur.split(self, &mut pg, child, matched);
+                            self.store.bump(w as usize, tag);
+                            let wd = cur.consumed as u32;
+                            path.push((w, wd));
+                            next_pending.push((w, wd - 1));
+                            if divergent {
+                                let leaf = cur.add_leaf(self, &mut pg, seg, i, s);
+                                self.store.bump(leaf as usize, tag);
+                                path.push((leaf, slen as u32));
+                                next_pending.push((leaf, (slen - 1) as u32));
+                            }
+                        }
                     }
                 }
-                self.nodes[node as usize].slink = best;
+                // Resolve the previous start's pending links: this walk's
+                // path is its one-shorter suffix (possibly extended by one
+                // token), so the deepest path node within each target depth
+                // is a valid — and tight — link target.
+                for &(node, target) in &pending {
+                    let mut best = 0u32;
+                    for &(p, d) in &path {
+                        if d <= target {
+                            best = p;
+                        } else {
+                            break;
+                        }
+                    }
+                    self.nodes[node as usize].slink = best;
+                }
+                std::mem::swap(&mut pending, &mut next_pending);
             }
-            std::mem::swap(&mut pending, &mut next_pending);
+            pg.release_if_unused(seg);
         }
-        pg.release_if_unused(seg);
+        // Suffix tries are substring-closed, so an exact link refresh is
+        // legal here; prefix-only tries must never reach this (see
+        // `insert_prefix`).
+        self.maybe_refresh_links();
     }
 
     /// Index ONLY the prefix path of `tokens` (truncated at `max_depth`),
     /// bumping counts under `tag` along it (the router's registration —
     /// no suffix links, the root is not counted). Returns the deepest node
     /// — always explicit: the walk splits an edge it terminates inside.
+    /// Empty input registers nothing and returns the root.
     pub fn insert_prefix(&mut self, tokens: &[TokenId], tag: S::Tag) -> usize {
         let want = tokens.len().min(self.max_depth);
         if want == 0 {
             return 0;
         }
+        let target = &tokens[..want];
         let pool = self.pool.clone();
         let mut pg = pool.lock();
-        let seg = pg.intern(&tokens[..want]);
-        let mut u: u32 = 0;
-        let mut j: usize = 0;
-        let end = loop {
-            if j == want {
-                break u;
+        let seg = pg.intern(target);
+        let mut cur = EdgeCursor::at_root();
+        while !cur.done(target) {
+            match cur.probe(self, &pg, target) {
+                Probe::FullEdge { child } => {
+                    cur.descend(self, child);
+                    self.store.bump(child as usize, tag);
+                }
+                Probe::NoChild => {
+                    let leaf = cur.add_leaf(self, &mut pg, seg, 0, target);
+                    self.store.bump(leaf as usize, tag);
+                }
+                Probe::MidEdge { child, matched, divergent } => {
+                    let w = cur.split(self, &mut pg, child, matched);
+                    self.store.bump(w as usize, tag);
+                    if divergent {
+                        let leaf = cur.add_leaf(self, &mut pg, seg, 0, target);
+                        self.store.bump(leaf as usize, tag);
+                    }
+                }
             }
-            let t = tokens[j];
-            let Some(c) = self.nodes[u as usize].children.get(t) else {
-                let label = SegRef { seg, start: j as u32, len: (want - j) as u32 };
-                pg.retain(seg);
-                let leaf = self.add_leaf(u, t, label);
-                self.store.bump(leaf as usize, tag);
-                break leaf;
-            };
-            let lab = self.nodes[c as usize].label;
-            let ll = lab.len as usize;
-            let lim = ll.min(want - j);
-            let lab_toks = pg.slice(lab);
-            let mut m = 1usize;
-            while m < lim && lab_toks[m] == tokens[j + m] {
-                m += 1;
-            }
-            if m == ll {
-                self.store.bump(c as usize, tag);
-                u = c;
-                j += m;
-                continue;
-            }
-            let w = self.split_edge(c, m as u32, &mut pg);
-            self.store.bump(w as usize, tag);
-            if j + m == want {
-                break w;
-            }
-            let label = SegRef {
-                seg,
-                start: (j + m) as u32,
-                len: (want - j - m) as u32,
-            };
-            pg.retain(seg);
-            let leaf = self.add_leaf(w, tokens[j + m], label);
-            self.store.bump(leaf as usize, tag);
-            break leaf;
-        };
+        }
         pg.release_if_unused(seg);
-        end as usize
+        cur.node as usize
     }
 
     /// Walk `pattern` exactly from the root; `None` unless fully matched
@@ -945,37 +1098,38 @@ impl<S: CountStore> ArenaTrie<S> {
     /// the walk's end sits on an EXPLICIT node (splitting the final edge
     /// once if it ends mid-edge) and return the explicit nodes along the
     /// path in ascending depth. `None` — with nothing modified — when the
-    /// prefix is not fully present. (The router's unregister path: each
-    /// returned node gets exactly one un-bump, mirroring how registration
-    /// bumped once per explicit node on the same boundaries.)
+    /// prefix is not fully present, and also for an EMPTY prefix: an empty
+    /// generation is never registered ([`ArenaTrie::insert_prefix`] bumps
+    /// nothing for it), so there is nothing to reverse — the inverse the
+    /// router's unregister relies on. (Each returned node gets exactly one
+    /// un-bump, mirroring how registration bumped once per explicit node
+    /// on the same boundaries.)
     pub fn prefix_path_split(&mut self, tokens: &[TokenId]) -> Option<Vec<usize>> {
         let want = tokens.len().min(self.max_depth);
+        if want == 0 {
+            return None;
+        }
+        let target = &tokens[..want];
         let pool = self.pool.clone();
         let mut pg = pool.lock();
-        let mut u: u32 = 0;
-        let mut j = 0usize;
         let mut out: Vec<usize> = Vec::new();
-        while j < want {
-            let c = self.nodes[u as usize].children.get(tokens[j])?;
-            let lab = self.nodes[c as usize].label;
-            let ll = lab.len as usize;
-            let lim = ll.min(want - j);
-            let lt = pg.slice(lab);
-            let mut m = 0usize;
-            while m < lim && lt[m] == tokens[j + m] {
-                m += 1;
+        let mut cur = EdgeCursor::at_root();
+        while !cur.done(target) {
+            match cur.probe(self, &pg, target) {
+                Probe::FullEdge { child } => {
+                    cur.descend(self, child);
+                    out.push(child as usize);
+                }
+                // Read-mostly policy: a miss or divergence means the prefix
+                // was never (fully) registered — refuse, mutating nothing.
+                Probe::NoChild | Probe::MidEdge { divergent: true, .. } => return None,
+                // Terminal mid-edge: the prefix IS present; expose its
+                // boundary so the caller's un-bumps hit explicit nodes.
+                Probe::MidEdge { child, matched, divergent: false } => {
+                    let w = cur.split(self, &mut pg, child, matched);
+                    out.push(w as usize);
+                }
             }
-            if m < lim {
-                return None;
-            }
-            if m < ll {
-                let w = self.split_edge(c, m as u32, &mut pg);
-                out.push(w as usize);
-                return Some(out);
-            }
-            out.push(c as usize);
-            u = c;
-            j += m;
         }
         Some(out)
     }
@@ -1244,33 +1398,62 @@ impl<S: CountStore> ArenaTrie<S> {
         self.rebuild_suffix_links();
     }
 
-    /// Exact suffix-link recomputation: walking the arena in allocation
-    /// order (parents precede children after `compact`'s DFS), the suffix
-    /// position of `v` is its parent's suffix position advanced by `v`'s
-    /// label — one skip/count descent per node, O(arena) total.
-    fn rebuild_suffix_links(&mut self) {
-        let pool = self.pool.clone();
-        let pg = pool.lock();
-        let n = self.nodes.len();
-        let mut spos: Vec<TriePos> = vec![TriePos::ROOT; n];
-        for v in 1..n {
-            let u = self.nodes[v].parent as usize;
-            debug_assert!(u < v, "arena not in parent-first order");
-            let lab = self.nodes[v].label;
-            let lt = pg.slice(lab);
-            let p = if u == 0 {
-                // Depth-from-root edge: the suffix drops the first token.
-                self.descend_pos(TriePos::ROOT, &lt[1..])
-            } else {
-                self.descend_pos(spos[u], lt)
-            };
-            spos[v] = p;
-            self.nodes[v].slink = if p.matched == self.label_len(p.node) {
-                p.node
-            } else {
-                self.nodes[p.node as usize].parent
-            };
+    /// Refresh links when the approximate ones cover half the arena — the
+    /// exact-link path for suffix tries that never compact (`window_all`'s
+    /// sparse epoch rows, the plain counting trie). The trigger is
+    /// geometric (each rebuild resets `links_dirty`, which must regrow to
+    /// half of an arena that grew with it), so the O(arena) rebuild costs
+    /// amortized O(1) per created node. Small arenas skip it: their
+    /// re-descents are short even through root fallbacks.
+    fn maybe_refresh_links(&mut self) {
+        if self.nodes.len() >= LINK_REBUILD_MIN_NODES && self.links_dirty * 2 >= self.nodes.len() {
+            self.rebuild_suffix_links();
         }
+    }
+
+    /// Exact link rebuilds performed so far (compaction or the
+    /// `links_dirty` threshold) — telemetry for the `window_all` refresh.
+    pub fn link_rebuilds(&self) -> u64 {
+        self.link_rebuilds
+    }
+
+    /// Exact suffix-link recomputation, O(arena): the suffix position of
+    /// `v` is its parent's suffix position advanced by `v`'s label — one
+    /// skip/count descent per node. Nodes are visited parent-first via the
+    /// child tables, NOT in allocation order: a split allocates the upper
+    /// node AFTER its lower half, so allocation order is only parent-first
+    /// right after `compact`'s DFS, and this must also run on tries that
+    /// never compact. Only valid on substring-closed (suffix) tries.
+    pub(crate) fn rebuild_suffix_links(&mut self) {
+        let pool = self.pool.clone();
+        {
+            let pg = pool.lock();
+            let n = self.nodes.len();
+            let mut spos: Vec<TriePos> = vec![TriePos::ROOT; n];
+            let mut stack: Vec<u32> = Vec::new();
+            self.nodes[0].children.for_each(|_, c| stack.push(c));
+            while let Some(v) = stack.pop() {
+                let vi = v as usize;
+                self.nodes[vi].children.for_each(|_, c| stack.push(c));
+                let u = self.nodes[vi].parent as usize;
+                let lab = self.nodes[vi].label;
+                let lt = pg.slice(lab);
+                let p = if u == 0 {
+                    // Depth-from-root edge: the suffix drops the first token.
+                    self.descend_pos(TriePos::ROOT, &lt[1..])
+                } else {
+                    self.descend_pos(spos[u], lt)
+                };
+                spos[vi] = p;
+                self.nodes[vi].slink = if p.matched == self.label_len(p.node) {
+                    p.node
+                } else {
+                    self.nodes[p.node as usize].parent
+                };
+            }
+        }
+        self.links_dirty = 0;
+        self.link_rebuilds += 1;
     }
 
     /// Advance a position by `toks`, skip/count (presence guaranteed by
@@ -1848,6 +2031,201 @@ mod tests {
                     &s[1..1 + ls.len()],
                     ls.as_slice(),
                     "link string is a prefix of the suffix",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn divergence_at_second_label_token_splits_after_one() {
+        // The child table is keyed by first label tokens, so the shared
+        // cursor compares labels from index 1 (a probed child's label[0]
+        // matches by construction — NOT a policy difference between the
+        // walks). A mismatch at the SECOND token must split after exactly
+        // one matched token in both insert drivers and refuse — mutating
+        // nothing — in the read-mostly driver.
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3], ());
+        t.insert_suffixes(&[1, 9], ());
+        let p1 = t.locate(&[1]).expect("present");
+        assert!(t.at_node(p1), "divergence after one matched token exposes [1]");
+        assert_eq!(count(&t, &[1]), 2);
+
+        let mut p = plain(8);
+        p.insert_prefix(&[5, 6, 7], ());
+        p.insert_prefix(&[5, 9], ());
+        let p5 = p.locate(&[5]).expect("present");
+        assert!(p.at_node(p5), "prefix driver splits on the same boundary");
+
+        let before = p.node_count();
+        assert!(p.prefix_path_split(&[5, 6, 9]).is_none(), "divergence refused");
+        assert_eq!(before, p.node_count(), "read-mostly walk must not mutate on divergence");
+    }
+
+    #[test]
+    fn root_bump_is_suffix_policy_only() {
+        // Which driver bumps the root is policy, not mechanics: suffix
+        // indexing counts one ε occurrence per start position, prefix
+        // registration never counts the root.
+        let mut t = plain(8);
+        t.insert_prefix(&[1, 2], ());
+        assert_eq!(t.store().get(0), 0, "prefix registration never counts the root");
+        t.insert_suffixes(&[3, 4], ());
+        assert_eq!(t.store().get(0), 2, "suffix indexing counts ε once per start");
+    }
+
+    #[test]
+    fn split_copies_row_before_the_terminal_bump() {
+        // Bump-AFTER-split is load-bearing: the upper node must copy the
+        // lower node's pre-bump row, then take the terminal bump alone —
+        // otherwise positions below the terminal would inherit an
+        // occurrence they never saw.
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3, 4], ());
+        t.insert_suffixes(&[1, 2], ());
+        assert_eq!(count(&t, &[1, 2]), 2, "terminal node: copied 1, bumped to 2");
+        assert_eq!(count(&t, &[1, 2, 3]), 1, "below the terminal: pre-bump copy only");
+        assert_eq!(count(&t, &[1]), 2, "mid-edge above the terminal reads the split node");
+    }
+
+    #[test]
+    fn empty_prefix_is_never_registered_nor_unregisterable() {
+        // Satellite regression: insert_prefix on an empty prefix lands on
+        // the root without bumping, so prefix_path_split must report "was
+        // never registered" (None) instead of a hollow Some(vec![]) — the
+        // inverse the router relies on.
+        let mut t = plain(8);
+        assert_eq!(t.insert_prefix(&[], ()), 0, "empty registration lands on the root");
+        assert_eq!(t.store().get(0), 0, "...without bumping it");
+        assert_eq!(t.node_count(), 1);
+        assert!(t.prefix_path_split(&[]).is_none(), "nothing to reverse");
+    }
+
+    #[test]
+    fn pending_slinks_resolve_to_existing_deep_targets() {
+        // The resolving walk creates NOTHING — it only traverses an
+        // existing path — yet the previous start's pending links must land
+        // on the deepest explicit node of that walk, not default to root.
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3], ());
+        t.insert_suffixes(&[9, 1, 2, 3], ());
+        let leaf = t.locate(&[9, 1, 2, 3]).expect("new leaf");
+        let target = t.locate(&[1, 2, 3]).expect("pre-existing path");
+        assert!(t.at_node(leaf) && t.at_node(target));
+        assert_eq!(
+            t.nodes[leaf.row()].slink,
+            target.node,
+            "pending slink must land on the deepest valid target"
+        );
+    }
+
+    #[test]
+    fn pending_slinks_resolve_through_pure_in_edge_terminations() {
+        // The resolving walk terminates INSIDE one long edge — a pure
+        // in-edge termination whose only explicit path node is the
+        // terminal split itself. The pending link must land on that split
+        // node (a cursor driver that forgot to record terminal splits in
+        // the walk path would silently default every such link to root).
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3, 4, 5], ());
+        t.insert_suffixes(&[9, 1, 2, 3], ());
+        let leaf = t.locate(&[9, 1, 2, 3]).expect("new leaf");
+        let split = t.locate(&[1, 2, 3]).expect("present");
+        assert!(t.at_node(split), "the in-edge termination split its boundary");
+        assert_eq!(t.nodes[leaf.row()].slink, split.node);
+        // The chain continues through the shorter suffixes' terminal
+        // splits: [1,2,3] → [2,3].
+        let s23 = t.locate(&[2, 3]).expect("present");
+        assert!(t.at_node(s23));
+        assert_eq!(t.nodes[split.row()].slink, s23.node);
+    }
+
+    #[test]
+    fn cursor_retains_one_segment_ref_per_edge() {
+        // Segment refcounts are owned by the cursor (one retain per leaf
+        // edge) and split_edge (one retain when one edge becomes two),
+        // identically across all three drivers; dropping the trie must
+        // release every reference the walks ever took.
+        let pool = SharedPool::new();
+        {
+            let mut t: ArenaTrie<Counts> =
+                ArenaTrie::with_pool(8, Counts::default(), pool.clone());
+            t.insert_suffixes(&[1, 2, 3, 4], ());
+            t.insert_suffixes(&[1, 2, 9, 9], ()); // divergent splits + leaves
+            t.insert_prefix(&[1, 2, 3], ()); // prefix termination split
+            assert!(t.prefix_path_split(&[1]).is_some()); // read-path split
+            assert!(pool.stats().segments > 0);
+        }
+        let st = pool.stats();
+        assert_eq!(st.segments, 0, "every cursor retain must match one release");
+        assert_eq!(st.live_tokens, 0);
+    }
+
+    #[test]
+    fn link_refresh_triggers_on_uncompacted_growth() {
+        // A plain counting trie never compacts; once the arena passes the
+        // minimum size with enough fresh (approximately linked) nodes, the
+        // links_dirty threshold must fire the exact rebuild on its own.
+        let mut t = plain(12);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(11);
+        for _ in 0..40 {
+            let r: Vec<u32> = (0..40).map(|_| rng.below(50) as u32).collect();
+            t.insert_suffixes(&r, ());
+        }
+        assert!(t.node_count() > LINK_REBUILD_MIN_NODES);
+        assert!(t.link_rebuilds() >= 1, "threshold refresh never fired");
+        // Queries stay exact regardless of when the trigger last ran.
+        let (len, pos) = t.deepest_suffix(&[50, 50], 8, ());
+        assert_eq!((len, pos), (0, TriePos::ROOT), "token 50 was never inserted");
+    }
+
+    /// The exact link target for `v`: deepest explicit node at-or-above
+    /// the position of `str(v)[1..]` — what `rebuild_suffix_links` must
+    /// produce (test-only oracle via `locate`).
+    fn exact_slink(t: &ArenaTrie<Counts>, v: usize) -> usize {
+        let s = string_of(t, v);
+        if s.len() <= 1 {
+            return 0;
+        }
+        let p = t.locate(&s[1..]).expect("suffix present by substring closure");
+        if t.at_node(p) {
+            p.node as usize
+        } else {
+            t.nodes[p.node as usize].parent as usize
+        }
+    }
+
+    #[test]
+    fn prop_deepest_suffix_unchanged_by_link_rebuild() {
+        // Links are an accelerator, never an answer: after a long mixed
+        // insert/split stream, a trie still carrying approximate links and
+        // a clone whose links were freshly rebuilt must agree on every
+        // deepest-suffix query (length AND position) — and every rebuilt
+        // link must name the DEEPEST valid at-or-above target.
+        prop::check(96, |g| {
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let depth = 2 + g.usize_in(0, 8);
+            let mut t = ArenaTrie::new(depth, Counts::default());
+            for _ in 0..g.usize_in(1, 6) {
+                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 40), ());
+            }
+            let mut exact = t.clone();
+            exact.rebuild_suffix_links();
+            for v in 1..exact.node_count() {
+                prop::require_eq(
+                    exact.nodes[v].slink as usize,
+                    exact_slink(&exact, v),
+                    "rebuilt link must be the deepest valid target",
+                )?;
+            }
+            for _ in 0..12 {
+                let ctx = g.vec_u32_nonempty(alphabet, 18);
+                let max_len = 1 + g.usize_in(0, 10);
+                prop::require_eq(
+                    t.deepest_suffix(&ctx, max_len, ()),
+                    exact.deepest_suffix(&ctx, max_len, ()),
+                    "deepest suffix approx vs exact links",
                 )?;
             }
             Ok(())

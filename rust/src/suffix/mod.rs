@@ -10,7 +10,12 @@
 //!   splitting on divergence/termination (so mid-edge positions share the
 //!   lower node's counts exactly), and **suffix links over compressed
 //!   edges** so deepest-suffix matching is one O(m) forward pass with
-//!   skip/count re-descents. Per-node counts live in a pluggable
+//!   skip/count re-descents. All three mutating walks (suffix indexing,
+//!   prefix registration, the unregister path) are thin drivers over ONE
+//!   internal edge cursor — a single probe/compare/split/leaf step — and
+//!   suffix links are refreshed exactly on an insert-count trigger for
+//!   tries that never compact (`window_all`, the plain counting trie).
+//!   Per-node counts live in a pluggable
 //!   `CountStore` (with a `split_node` hook for edge splits):
 //!   - `core::Counts` — plain occurrence counts → [`trie::SuffixTrieIndex`];
 //!   - `window::EpochStore` (private) — dense epoch rings (bounded

@@ -152,8 +152,14 @@ impl PrefixRouter {
         }
     }
 
-    /// Register a generation's PREFIX under a shard id.
+    /// Register a generation's PREFIX under a shard id. An empty
+    /// generation registers nothing (and occupies no capacity slot), so
+    /// `unregister` on the same input reporting `false` keeps the pair
+    /// exactly inverse.
     pub fn register(&mut self, shard: u32, generation: &[TokenId]) {
+        if generation.is_empty() {
+            return;
+        }
         if self.max_gens_per_shard != usize::MAX {
             let prefix: Vec<TokenId> = generation
                 .iter()
@@ -173,7 +179,8 @@ impl PrefixRouter {
     /// Reverse one `register(shard, generation)` exactly: decrement the
     /// shard's ownership along the generation's (depth-capped) prefix path,
     /// dropping zeroed entries. Returns false (and changes nothing) if that
-    /// prefix was never fully registered.
+    /// prefix was never fully registered — including the empty generation,
+    /// which `register` never registers.
     pub fn unregister(&mut self, shard: u32, generation: &[TokenId]) -> bool {
         Self::unregister_on(&mut self.trie, shard, generation)
     }
@@ -321,6 +328,30 @@ mod tests {
     }
 
     #[test]
+    fn register_unregister_inverse_on_empty_and_overdepth_inputs() {
+        // Satellite regression: register(&[]) used to be a silent no-op
+        // while unregister(&[]) reported success (Some(vec![]) from the
+        // core walk) — and, worse, an empty registration occupied a
+        // capacity FIFO slot whose eviction could unregister a REAL
+        // generation. Both directions must now be exactly inverse.
+        let mut r = PrefixRouter::new(4);
+        r.register(1, &[]);
+        assert_eq!(r.node_count(), 1, "empty registration allocates nothing");
+        assert!(!r.unregister(1, &[]), "nothing to reverse for an empty generation");
+        // Over-max_depth inputs truncate identically on both sides.
+        r.register(2, &[7, 8, 9, 10, 11, 12]);
+        assert_eq!(r.route(&[7, 8, 9, 10]).unwrap(), (2, 4));
+        assert!(r.unregister(2, &[7, 8, 9, 10, 11, 12]));
+        assert!(r.route(&[7, 8, 9, 10]).is_none(), "inverse through truncation");
+        // Capacity bookkeeping: an empty registration must not occupy a
+        // FIFO slot (it used to evict the newest real registration here).
+        let mut r = PrefixRouter::with_capacity(4, 1);
+        r.register(1, &[5, 6]);
+        r.register(1, &[]);
+        assert_eq!(r.route(&[5, 6]).unwrap(), (1, 2), "real registration survives");
+    }
+
+    #[test]
     fn capacity_evicts_oldest_registration_fifo() {
         let mut r = PrefixRouter::with_capacity(8, 2);
         r.register(1, &[10, 11]);
@@ -415,6 +446,11 @@ mod tests {
 
         fn unregister(&mut self, shard: u32, generation: &[TokenId]) -> bool {
             let want = generation.len().min(self.max_depth);
+            if want == 0 {
+                // Mirrors the production router: empty generations are
+                // never registered, so there is nothing to reverse.
+                return false;
+            }
             let mut node = 0usize;
             let mut path = Vec::with_capacity(want);
             for &tok in generation.iter().take(want) {
@@ -474,20 +510,31 @@ mod tests {
             for _ in 0..g.usize_in(1, 16) {
                 if !registered.is_empty() && g.usize_in(0, 3) == 0 {
                     // Unregister something that was registered (or a random
-                    // never-registered prefix — both sides must agree).
+                    // never-registered — possibly empty — prefix; both
+                    // sides must agree, including that empty generations
+                    // always report false).
                     let (shard, gen) = if g.bool() {
                         registered.remove(g.usize_in(0, registered.len() - 1))
                     } else {
-                        (g.usize_in(0, 4) as u32, g.vec_u32_nonempty(alphabet, 10))
+                        (g.usize_in(0, 4) as u32, g.vec_u32(alphabet, 10))
                     };
                     prop::require_eq(
                         new.unregister(shard, &gen),
                         old.unregister(shard, &gen),
                         "unregister outcome",
                     )?;
+                    if gen.is_empty() {
+                        prop::require(!new.unregister(shard, &gen), "empty is never registered")?;
+                    }
                 } else {
+                    // Occasionally an empty generation: a no-op on both
+                    // sides (and on the capacity FIFO).
                     let shard = g.usize_in(0, 4) as u32;
-                    let gen = g.vec_u32_nonempty(alphabet, 10);
+                    let gen = if g.usize_in(0, 7) == 0 {
+                        Vec::new()
+                    } else {
+                        g.vec_u32_nonempty(alphabet, 10)
+                    };
                     new.register(shard, &gen);
                     old.register(shard, &gen);
                     registered.push((shard, gen));

@@ -76,6 +76,13 @@ impl SuffixTrieIndex {
         self.trie.pool_stats()
     }
 
+    /// Exact suffix-link rebuilds the core has run for this index (the
+    /// plain trie never compacts, so these are all insert-count-triggered
+    /// refreshes).
+    pub fn link_rebuilds(&self) -> u64 {
+        self.trie.link_rebuilds()
+    }
+
     pub fn tokens_indexed(&self) -> usize {
         self.tokens_indexed
     }

@@ -27,6 +27,11 @@
 //!   re-strided (doubling) as the run aged. Bumps are O(1) amortized
 //!   (epochs arrive in nondecreasing order, so the append fast-path hits),
 //!   liveness is an is-empty check, and exact-epoch reads binary-search.
+//!   These tries never evict, hence never compact — exact suffix links
+//!   come from the core's insert-count-triggered
+//!   `rebuild_suffix_links` refresh instead, so the unbounded ablation's
+//!   O(m) match pass re-descends exactly one edge per fallback, like the
+//!   bounded path after a compaction sweep.
 //!
 //! A draft call probes ONE structure: a single O(m) compressed-edge
 //! suffix-link pass finds the deepest live match position, then the
@@ -148,6 +153,13 @@ impl WindowedIndex {
     /// Live/dead byte accounting of the (possibly shared) segment pool.
     pub fn pool_stats(&self) -> PoolStats {
         self.fused.trie.pool_stats()
+    }
+
+    /// Exact suffix-link rebuilds this shard's trie has run — compaction
+    /// sweeps (bounded windows) plus the insert-count-triggered refresh
+    /// that keeps the never-compacting `window_all` path's links exact.
+    pub fn link_rebuilds(&self) -> u64 {
+        self.fused.trie.link_rebuilds()
     }
 
     /// Test hook: run the dead-epoch compaction sweep immediately instead
@@ -446,7 +458,8 @@ impl FusedEpochTrie {
     /// edges' pool segments, and re-derives every suffix link. Counts are
     /// copied verbatim, so drafts are unchanged. Amortized O(1) per insert;
     /// bounds memory at ~2× the live working set. Unbounded windows never
-    /// evict, hence never compact.
+    /// evict, hence never compact — their suffix links are refreshed by
+    /// the core's insert-count trigger instead.
     fn maybe_compact(&mut self) {
         if self.window == 0 {
             return;
@@ -882,6 +895,159 @@ mod tests {
             }
         }
         assert!(epoch > 20, "stream must span many epochs");
+    }
+
+    #[test]
+    fn deepest_visible_prefix_skips_drained_dense_edges() {
+        // Satellite regression: a partial-edge match reports the edge's
+        // lower node ONLY when that node's filtered weight is nonzero.
+        // Dense rows drain by eviction: epoch 0 falls out of a window of
+        // 1, the path stays in the arena (no compaction below the size
+        // floor), and the drained edge must be descended through but
+        // never reported.
+        let mut w = WindowedIndex::new(1, 8);
+        w.insert(0, &[1, 2, 3, 4]);
+        w.insert(1, &[1, 9]); // splits [1,2,3,4] at depth 1; evicts epoch 0
+        let trie = &w.fused.trie;
+        assert!(trie.locate(&[1, 2]).is_some(), "drained path still in the arena");
+        let live = EpochFilter::AnyLive { newest: 1 };
+        let one = trie.locate(&[1]).expect("explicit after the split");
+        // Context [1,2,3]: the [1] node is live (epoch 1); the partial
+        // match inside the drained [2,3,4] edge must not be reported.
+        assert_eq!(trie.deepest_visible_prefix(&[1, 2, 3], live), Some((one.row(), 1)));
+        assert_eq!(
+            trie.deepest_visible_prefix(&[1, 2, 3], EpochFilter::Exact { epoch: 1 }),
+            Some((one.row(), 1))
+        );
+        assert_eq!(
+            trie.deepest_visible_prefix(&[1, 2, 3], EpochFilter::Exact { epoch: 7 }),
+            None,
+            "an epoch nothing was indexed under sees no position at all"
+        );
+    }
+
+    #[test]
+    fn deepest_visible_prefix_mid_edge_on_sparse_rows() {
+        // The sparse (window_all) counterpart: nothing ever drains under
+        // AnyLive, so the partial-edge match reports the lower node's row
+        // across arbitrary epoch distance — while exact-epoch filters
+        // still distinguish which epochs each node saw.
+        let mut w = WindowedIndex::new(0, 8);
+        w.insert(0, &[1, 2, 3, 4]);
+        w.insert(5, &[1, 9]);
+        let trie = &w.fused.trie;
+        let live = EpochFilter::AnyLive { newest: 5 };
+        let lower = trie.locate(&[1, 2, 3, 4]).expect("present");
+        let one = trie.locate(&[1]).expect("explicit after the split");
+        assert_eq!(
+            trie.deepest_visible_prefix(&[1, 2, 3], live),
+            Some((lower.row(), 3)),
+            "partial-edge match reports the lower node's row at matched depth"
+        );
+        assert_eq!(
+            trie.deepest_visible_prefix(&[1, 2, 3], EpochFilter::Exact { epoch: 0 }),
+            Some((lower.row(), 3)),
+            "epoch 0 still holds the deep counts"
+        );
+        assert_eq!(
+            trie.deepest_visible_prefix(&[1, 2, 3], EpochFilter::Exact { epoch: 5 }),
+            Some((one.row(), 1)),
+            "epoch 5 only ever reached the split boundary"
+        );
+        assert_eq!(
+            trie.deepest_visible_prefix(&[1, 2, 3], EpochFilter::Exact { epoch: 3 }),
+            None
+        );
+    }
+
+    #[test]
+    fn window_all_link_refresh_fires_and_preserves_drafts() {
+        // The ROADMAP hole this PR closes: window_all tries never compact,
+        // so their split links stayed approximate forever. The
+        // insert-count trigger must fire on a long stream — and change
+        // nothing observable: drafts stay identical to the bucket-ring
+        // reference throughout.
+        let mut all = WindowedIndex::new(0, 10);
+        let mut reference = BucketRingRef::new(0, 10);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(42);
+        for e in 0..60u32 {
+            all.roll_epoch(e);
+            reference.roll_epoch(e);
+            for _ in 0..3 {
+                let r: Vec<u32> = (0..25).map(|_| rng.below(9) as u32).collect();
+                all.insert(e, &r);
+                reference.insert(e, &r);
+            }
+            let ctx: Vec<u32> = (0..6).map(|_| rng.below(9) as u32).collect();
+            let (a, b) = (all.draft(&ctx, 8, 4), reference.draft(&ctx, 8, 4, all.age_discount));
+            match (a, b) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.tokens, y.tokens, "epoch {e}");
+                    assert_eq!(x.epoch, y.epoch, "epoch {e}");
+                }
+                (a, b) => panic!("draft presence diverged at epoch {e}: {a:?} vs {b:?}"),
+            }
+        }
+        assert!(
+            all.link_rebuilds() >= 1,
+            "the insert-count refresh must fire on the unbounded path"
+        );
+    }
+
+    #[test]
+    fn prop_window_all_exact_links_match_approximate() {
+        // Tentpole anchor for the window_all refresh: a trie carrying
+        // whatever mix of approximate and threshold-refreshed links must
+        // answer every deepest-suffix query — and every draft —
+        // identically to a clone whose links were just rebuilt exactly,
+        // after long mixed insert/roll/late-arrival streams.
+        prop::check(64, |g| {
+            let alphabet = 1 + g.usize_in(1, 6) as u32;
+            let mut w = WindowedIndex::new(0, 8);
+            let mut epoch: Epoch = 0;
+            for _ in 0..g.usize_in(1, 40) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        epoch += 1;
+                        w.roll_epoch(epoch);
+                    }
+                    1 if epoch > 0 => {
+                        let r = g.vec_u32_nonempty(alphabet, 24);
+                        w.insert(epoch - 1, &r); // late arrival
+                    }
+                    _ => {
+                        let r = g.vec_u32_nonempty(alphabet, 24);
+                        w.insert(epoch, &r);
+                    }
+                }
+            }
+            let Some(newest) = w.fused.newest else { return Ok(()) };
+            let mut exact = w.clone();
+            exact.fused.trie.rebuild_suffix_links();
+            for _ in 0..12 {
+                let ctx = g.vec_u32_nonempty(alphabet, 12);
+                let f = EpochFilter::AnyLive { newest };
+                prop::require_eq(
+                    w.fused.trie.deepest_suffix(&ctx, 8, f),
+                    exact.fused.trie.deepest_suffix(&ctx, 8, f),
+                    "window_all deepest suffix, approximate vs exact links",
+                )?;
+                let budget = 1 + g.usize_in(0, 4);
+                match (w.draft(&ctx, 8, budget), exact.draft(&ctx, 8, budget)) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        prop::require_eq(x.tokens, y.tokens, "draft tokens")?;
+                        prop::require_eq(x.epoch, y.epoch, "draft epoch")?;
+                        prop::require_eq(x.match_len, y.match_len, "draft match_len")?;
+                    }
+                    (a, b) => {
+                        prop::require(false, &format!("presence diverged: {a:?} vs {b:?}"))?
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

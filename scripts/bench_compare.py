@@ -15,6 +15,7 @@ the committed BENCH_*.json before re-running the benches, then diffs.
 """
 
 import json
+import os
 import sys
 
 
@@ -38,13 +39,17 @@ def main():
         # Pass, but LOUDLY: an empty baseline means the perf gate is not
         # actually gating anything. CI surfaces stderr, so a quietly-stale
         # committed baseline can't masquerade as a green perf check.
-        print(
-            f"WARNING: baseline {base_path} has empty 'results' — the perf "
-            f"gate cannot detect regressions until a populated baseline is "
+        msg = (
+            f"baseline {base_path} has empty 'results' — the perf gate "
+            f"cannot detect regressions until a populated baseline is "
             f"committed (run the bench with --json {base_path} on a quiet "
-            f"machine and commit the refreshed file)",
-            file=sys.stderr,
+            f"machine and commit the refreshed file)"
         )
+        print(f"WARNING: {msg}", file=sys.stderr)
+        if os.environ.get("GITHUB_ACTIONS") == "true":
+            # Workflow-command annotation: shows on the run summary and the
+            # PR checks tab, not just buried in the step log.
+            print(f"::warning title=bench_compare: empty baseline::{msg}")
         return
 
     regressions = []
