@@ -11,7 +11,10 @@
 //! `--json [path]` / env `BENCH_JSON` (write machine-readable results,
 //! default `BENCH_suffix.json`).
 
-use das::suffix::{SuffixArray, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
+use das::store::{Reader, Writer};
+use das::suffix::{
+    SharedPool, SuffixArray, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex,
+};
 use das::util::bench::{black_box, Bencher};
 use das::util::rng::Rng;
 
@@ -227,6 +230,36 @@ fn main() {
             let c = &sctx[sw % sctx.len()];
             sw += 1;
             black_box(swin.draft(c, 8, 16));
+        });
+
+        // -----------------------------------------------------------------
+        // Persistent store: das-store-v1 serialization cost of the
+        // windowed index (the per-snapshot price the engine pays every
+        // `spec.snapshot_every` epochs), plus the warm-start load cost and
+        // the snapshot's size gauge.
+        // -----------------------------------------------------------------
+        let snapshot_bytes = {
+            let mut w = Writer::new();
+            swin.pool().save_state(&mut w);
+            swin.save_state(&mut w);
+            w.into_bytes()
+        };
+        b.gauge(
+            &format!("store_snapshot_bytes_{}tok", n_tokens),
+            snapshot_bytes.len() as f64,
+        );
+        b.bench(&format!("store_snapshot_save_{}tok", n_tokens), || {
+            let mut w = Writer::new();
+            swin.pool().save_state(&mut w);
+            swin.save_state(&mut w);
+            black_box(w.len());
+        });
+        b.bench(&format!("store_snapshot_load_{}tok", n_tokens), || {
+            let mut r = Reader::new(black_box(&snapshot_bytes));
+            let (pool, _) = SharedPool::load_state(&mut r).expect("pool loads");
+            let mut restored = WindowedIndex::with_pool(8, 24, pool);
+            restored.load_state(&mut r).expect("index loads");
+            black_box(restored.node_count());
         });
     }
     b.finish("BENCH_suffix.json");

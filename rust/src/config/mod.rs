@@ -87,6 +87,15 @@ pub struct SpecConfig {
     pub router_capacity: usize,
     /// Minimum context suffix length used as the tree query.
     pub match_len: usize,
+    /// Directory for the persistent history store (snapshot + WAL of
+    /// drafter state — see `rust/src/store/`). Empty = no persistence
+    /// (the historical cold-start behavior). Data-parallel runs place one
+    /// store per worker under `<store_dir>/worker<i>`.
+    pub store_dir: String,
+    /// Epochs between snapshot commits when the store is enabled (the WAL
+    /// covers mutations in between, so recovery replays at most this many
+    /// epochs of records). Must be >= 1.
+    pub snapshot_every: usize,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -201,7 +210,14 @@ impl DasConfig {
         read_field!(j, self, "model", "artifacts_dir", string, self.model.artifacts_dir);
 
         read_field!(j, self, "rollout", "max_batch", usize, self.rollout.max_batch);
-        read_field!(j, self, "rollout", "samples_per_problem", usize, self.rollout.samples_per_problem);
+        read_field!(
+            j,
+            self,
+            "rollout",
+            "samples_per_problem",
+            usize,
+            self.rollout.samples_per_problem
+        );
         read_field!(j, self, "rollout", "max_new_tokens", usize, self.rollout.max_new_tokens);
         read_field!(j, self, "rollout", "temperature", f64, self.rollout.temperature);
 
@@ -217,6 +233,8 @@ impl DasConfig {
         read_field!(j, self, "spec", "prefix_router", bool, self.spec.prefix_router);
         read_field!(j, self, "spec", "router_capacity", usize, self.spec.router_capacity);
         read_field!(j, self, "spec", "match_len", usize, self.spec.match_len);
+        read_field!(j, self, "spec", "store_dir", string, self.spec.store_dir);
+        read_field!(j, self, "spec", "snapshot_every", usize, self.spec.snapshot_every);
 
         read_field!(j, self, "train", "steps", usize, self.train.steps);
         read_field!(j, self, "train", "problems_per_step", usize, self.train.problems_per_step);
@@ -307,8 +325,14 @@ impl DasConfig {
                 self.spec.router_capacity
             ));
         }
+        if self.spec.snapshot_every == 0 {
+            return e("spec.snapshot_every must be >= 1".into());
+        }
         if !matches!(self.workload.kind.as_str(), "math" | "code" | "trace") {
-            return e(format!("workload.kind must be math|code|trace, got '{}'", self.workload.kind));
+            return e(format!(
+                "workload.kind must be math|code|trace, got '{}'",
+                self.workload.kind
+            ));
         }
         if self.workload.n_problems == 0 {
             return e("workload.n_problems must be > 0".into());
@@ -359,6 +383,8 @@ impl DasConfig {
                     ("prefix_router", Json::Bool(self.spec.prefix_router)),
                     ("router_capacity", Json::num(self.spec.router_capacity as f64)),
                     ("match_len", Json::num(self.spec.match_len as f64)),
+                    ("store_dir", Json::str(&self.spec.store_dir)),
+                    ("snapshot_every", Json::num(self.spec.snapshot_every as f64)),
                 ]),
             ),
             (
@@ -435,6 +461,23 @@ mod tests {
         assert_eq!(cfg.spec.router_capacity, 128);
         cfg.set("spec.router_capacity=0").unwrap(); // unbounded is fine
         assert!(cfg.set("spec.router_capacity=2").is_err(), "thrashing bound rejected");
+    }
+
+    #[test]
+    fn store_settings_parsed_and_validated() {
+        let cfg = DasConfig::from_json_text(
+            r#"{"spec": {"store_dir": "/tmp/das-store", "snapshot_every": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.store_dir, "/tmp/das-store");
+        assert_eq!(cfg.spec.snapshot_every, 8);
+        let mut cfg = DasConfig::default();
+        assert!(cfg.spec.store_dir.is_empty(), "persistence is opt-in");
+        cfg.set("spec.store_dir=run1/store").unwrap();
+        assert_eq!(cfg.spec.store_dir, "run1/store");
+        assert!(cfg.set("spec.snapshot_every=0").is_err(), "zero cadence rejected");
+        cfg.set("spec.snapshot_every=2").unwrap();
+        assert_eq!(cfg.spec.snapshot_every, 2);
     }
 
     #[test]

@@ -42,6 +42,8 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 prefix_router: false,
                 router_capacity: 4096,
                 match_len: 8,
+                store_dir: String::new(),
+                snapshot_every: 4,
             },
             train: TrainConfig {
                 steps: 30,
@@ -92,6 +94,8 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 prefix_router: false,
                 router_capacity: 4096,
                 match_len: 6,
+                store_dir: String::new(),
+                snapshot_every: 4,
             },
             train: TrainConfig {
                 steps: 30,
@@ -140,6 +144,8 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 prefix_router: false,
                 router_capacity: 512,
                 match_len: 4,
+                store_dir: String::new(),
+                snapshot_every: 2,
             },
             train: TrainConfig {
                 steps: 40,

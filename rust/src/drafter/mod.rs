@@ -31,6 +31,7 @@ mod suffix_drafter;
 pub use static_ngram::StaticNgramDrafter;
 pub use suffix_drafter::{HistoryScope, SuffixDrafter};
 
+use crate::store::wire::{Reader, StoreError, Writer};
 use crate::suffix::{SharedPool, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
@@ -128,6 +129,29 @@ pub trait DraftSource: Send {
     fn index_stats(&self) -> IndexStats {
         IndexStats::default()
     }
+
+    /// Serialize this substrate's complete state as one `das-store-v1`
+    /// source blob (trie-backed substrates write pool `SegRef`s — the pool
+    /// itself is saved once by the owning drafter). The blob is tagged, so
+    /// [`DraftSource::load_state`] rejects a blob written by a different
+    /// substrate instead of misreading it. Default: a tagged empty blob
+    /// (stateless substrate).
+    fn save_state(&self, w: &mut Writer) {
+        w.str(self.source_name());
+        w.u8(0);
+    }
+
+    /// Restore from [`DraftSource::save_state`]'s blob. The receiver must
+    /// be a freshly constructed substrate of the same kind and config —
+    /// and, for trie-backed substrates, built on the pool that already
+    /// holds the snapshot's segments.
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        r.expect_str(self.source_name(), "source blob tag")?;
+        if r.u8()? != 0 {
+            return Err(StoreError::Corrupt("stateless source with a payload".into()));
+        }
+        Ok(())
+    }
 }
 
 /// The production substrate: fused epoch-tagged sliding-window trie.
@@ -168,6 +192,14 @@ impl DraftSource for WindowedIndex {
             ..IndexStats::default()
         }
     }
+
+    fn save_state(&self, w: &mut Writer) {
+        WindowedIndex::save_state(self, w);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        WindowedIndex::load_state(self, r)
+    }
 }
 
 /// Ukkonen-tree substrate: exact retrieval drafting, unbounded history.
@@ -203,6 +235,23 @@ impl DraftSource for SuffixTree {
             ..IndexStats::default()
         }
     }
+
+    /// The persistence payload is the build INPUT (raw sentinel-terminated
+    /// text): Ukkonen construction is deterministic, so replaying it on
+    /// load yields a structurally identical tree.
+    fn save_state(&self, w: &mut Writer) {
+        w.str("tree");
+        w.tokens(self.text());
+        w.u32(self.sentinel_cursor());
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        r.expect_str("tree", "source blob tag")?;
+        let text = r.tokens()?;
+        let sentinel = r.u32()?;
+        *self = SuffixTree::from_text(&text, sentinel);
+        Ok(())
+    }
 }
 
 /// Suffix-array substrate — the Fig. 5 strawman: queries are fine, but
@@ -236,6 +285,24 @@ impl DraftSource for SuffixArrayIndex {
             heap_bytes: self.len_tokens() * 20,
             ..IndexStats::default()
         }
+    }
+
+    /// Persist the corpus only — SA + LCP are derived and rebuilt once on
+    /// load (one build, not one per historical insert).
+    fn save_state(&self, w: &mut Writer) {
+        w.str("array");
+        w.tokens(self.corpus());
+        w.u32(self.sentinel_cursor());
+        w.usize(self.rebuilds);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        r.expect_str("array", "source blob tag")?;
+        let corpus = r.tokens()?;
+        let sentinel = r.u32()?;
+        let rebuilds = r.usize()?;
+        *self = SuffixArrayIndex::from_parts(corpus, sentinel, rebuilds);
+        Ok(())
     }
 }
 
@@ -273,12 +340,24 @@ impl DraftSource for SuffixTrieIndex {
             ..IndexStats::default()
         }
     }
+
+    fn save_state(&self, w: &mut Writer) {
+        SuffixTrieIndex::save_state(self, w);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        SuffixTrieIndex::load_state(self, r)
+    }
 }
 
 /// Build one history substrate per `spec.substrate`. `window`/`max_depth`
 /// parameterize the windowed substrate; the unwindowed alternatives (the
 /// Fig. 5 subjects) keep unbounded history by construction.
-pub fn source_from_substrate(substrate: &str, window: usize, max_depth: usize) -> Box<dyn DraftSource> {
+pub fn source_from_substrate(
+    substrate: &str,
+    window: usize,
+    max_depth: usize,
+) -> Box<dyn DraftSource> {
     source_from_substrate_pooled(substrate, window, max_depth, None)
 }
 
@@ -343,6 +422,33 @@ pub trait Drafter: Send {
     fn index_stats(&self) -> IndexStats {
         IndexStats::default()
     }
+
+    /// Whether this drafter carries history worth persisting. Gates the
+    /// whole store machinery: the engine opens no [`crate::store`] files
+    /// for stateless drafters (none/static baselines).
+    fn persistent(&self) -> bool {
+        false
+    }
+
+    /// Serialize the drafter's complete history as the `das-store-v1`
+    /// snapshot payload. Empty for non-persistent drafters.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore history from a [`Drafter::save_state`] payload (warm
+    /// start). Implementations must verify the payload's parameters
+    /// against their live configuration and answer
+    /// [`StoreError::Mismatch`] instead of silently reinterpreting a
+    /// snapshot taken under different settings.
+    fn load_state(&mut self, _bytes: &[u8]) -> Result<(), StoreError> {
+        Err(StoreError::Unsupported("this drafter keeps no persistent state"))
+    }
+
+    /// Replay hook for standalone router registrations
+    /// ([`crate::store::WalRecord::Register`]). Default: ignore (drafters
+    /// without a prefix router).
+    fn register_route(&mut self, _shard: u32, _tokens: &[TokenId]) {}
 }
 
 /// The no-speculation baseline: always proposes nothing.

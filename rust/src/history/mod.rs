@@ -10,12 +10,11 @@ use std::collections::{HashMap, HashSet};
 
 use crate::tokens::{Epoch, ProblemId, Rollout, TokenId};
 
-/// N-gram reuse: fraction of `text`'s n-grams that occur anywhere in
-/// `corpus` (the Fig. 2-left metric).
-pub fn ngram_reuse(corpus: &[&[TokenId]], text: &[TokenId], n: usize) -> f64 {
-    if text.len() < n {
-        return 0.0;
-    }
+/// The n-gram set of a corpus, built ONCE and queried per text. The Fig. 2
+/// metrics used to rebuild this set inside every per-text call, which made
+/// `set_similarity` (and hence the epoch similarity matrix) quadratic in
+/// corpus size; hoisting the set makes them linear.
+fn gram_set<'a>(corpus: &[&'a [TokenId]], n: usize) -> HashSet<&'a [TokenId]> {
     let mut grams: HashSet<&[TokenId]> = HashSet::new();
     for seq in corpus {
         if seq.len() >= n {
@@ -24,19 +23,40 @@ pub fn ngram_reuse(corpus: &[&[TokenId]], text: &[TokenId], n: usize) -> f64 {
             }
         }
     }
+    grams
+}
+
+/// Fraction of `text`'s n-grams present in a prebuilt gram set.
+fn reuse_against(grams: &HashSet<&[TokenId]>, text: &[TokenId], n: usize) -> f64 {
+    if text.len() < n {
+        return 0.0;
+    }
     let total = text.len() - n + 1;
     let hit = text.windows(n).filter(|w| grams.contains(*w)).count();
     hit as f64 / total as f64
 }
 
+/// N-gram reuse: fraction of `text`'s n-grams that occur anywhere in
+/// `corpus` (the Fig. 2-left metric). One-shot API — callers scoring many
+/// texts against the same corpus go through the hoisted gram set instead.
+pub fn ngram_reuse(corpus: &[&[TokenId]], text: &[TokenId], n: usize) -> f64 {
+    if text.len() < n {
+        return 0.0;
+    }
+    reuse_against(&gram_set(corpus, n), text, n)
+}
+
 /// Symmetric similarity between two rollout sets: mean of directional
-/// n-gram reuse both ways.
+/// n-gram reuse both ways. Each direction builds its gram set ONCE —
+/// linear in total corpus size, not |from| × |to| (values are pinned
+/// identical to the per-text-rebuild definition by a regression test).
 pub fn set_similarity(a: &[&[TokenId]], b: &[&[TokenId]], n: usize) -> f64 {
     if a.is_empty() || b.is_empty() {
         return 0.0;
     }
     let dir = |from: &[&[TokenId]], to: &[&[TokenId]]| -> f64 {
-        let vals: Vec<f64> = to.iter().map(|t| ngram_reuse(from, t, n)).collect();
+        let grams = gram_set(from, n);
+        let vals: Vec<f64> = to.iter().map(|t| reuse_against(&grams, t, n)).collect();
         crate::util::stats::mean(&vals)
     };
     0.5 * (dir(a, b) + dir(b, a))
@@ -99,8 +119,11 @@ impl RolloutHistory {
                 if prev_set.is_empty() {
                     continue;
                 }
+                // Gram set hoisted: one build per (problem, epoch) pair,
+                // not one per scored rollout.
+                let grams = gram_set(&prev_set, n);
                 for t in texts {
-                    vals.push(ngram_reuse(&prev_set, t, n));
+                    vals.push(reuse_against(&grams, t, n));
                 }
             }
             out.push((cur, crate::util::stats::mean(&vals)));
@@ -164,6 +187,43 @@ mod tests {
         assert!((ngram_reuse(&corpus, &[1, 2, 9, 9], 2) - 1.0 / 3.0).abs() < 1e-12);
         // Text shorter than n.
         assert_eq!(ngram_reuse(&corpus, &[1], 3), 0.0);
+    }
+
+    #[test]
+    fn set_similarity_matches_per_text_rebuild_definition() {
+        // Regression pin for the gram-set hoist: the linear-time
+        // set_similarity must produce EXACTLY the values of the original
+        // definition, which rebuilt `from`'s n-gram set once per `to`
+        // element via ngram_reuse.
+        let slow = |a: &[&[u32]], b: &[&[u32]], n: usize| -> f64 {
+            if a.is_empty() || b.is_empty() {
+                return 0.0;
+            }
+            let dir = |from: &[&[u32]], to: &[&[u32]]| -> f64 {
+                let vals: Vec<f64> = to.iter().map(|t| ngram_reuse(from, t, n)).collect();
+                crate::util::stats::mean(&vals)
+            };
+            0.5 * (dir(a, b) + dir(b, a))
+        };
+        let mut rng = crate::util::rng::Rng::seed_from_u64(11);
+        for case in 0..32 {
+            let gen = |rng: &mut crate::util::rng::Rng| -> Vec<Vec<u32>> {
+                (0..1 + rng.below(4))
+                    .map(|_| (0..rng.below(30)).map(|_| rng.below(6) as u32).collect())
+                    .collect()
+            };
+            let (sa, sb) = (gen(&mut rng), gen(&mut rng));
+            let a: Vec<&[u32]> = sa.iter().map(|v| v.as_slice()).collect();
+            let b: Vec<&[u32]> = sb.iter().map(|v| v.as_slice()).collect();
+            for n in 1..4 {
+                let fast = set_similarity(&a, &b, n);
+                let reference = slow(&a, &b, n);
+                assert!(
+                    (fast - reference).abs() < 1e-15 || fast == reference,
+                    "case {case} n {n}: {fast} != {reference}"
+                );
+            }
+        }
     }
 
     #[test]

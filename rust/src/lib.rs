@@ -24,6 +24,7 @@ pub mod rl;
 pub mod figures;
 pub mod drafter;
 pub mod spec;
+pub mod store;
 pub mod suffix;
 pub mod tokens;
 pub mod util;

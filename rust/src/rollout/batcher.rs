@@ -10,13 +10,23 @@ use std::collections::VecDeque;
 
 use super::request::{RequestState, RolloutRequest};
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Batcher {
     pending: VecDeque<RolloutRequest>,
     active: Vec<RolloutRequest>,
     finished: Vec<RolloutRequest>,
     max_batch: usize,
     submitted: usize,
+}
+
+impl Default for Batcher {
+    /// Single-slot batcher. (A derived Default would set `max_batch: 0`,
+    /// bypassing the `max(1)` floor in [`Batcher::new`] — a batcher that
+    /// can never activate anything and strands every submission in the
+    /// pending queue.)
+    fn default() -> Self {
+        Batcher::new(1)
+    }
 }
 
 impl Batcher {
@@ -58,10 +68,6 @@ impl Batcher {
         }
         for r in &done {
             debug_assert!(r.is_done());
-        }
-        self.finished.reserve(done.len());
-        for r in &done {
-            let _ = r;
         }
         done
     }
@@ -160,6 +166,137 @@ mod tests {
         assert!(b.is_drained());
         assert_eq!(b.finished().len(), 4);
         assert!(b.conserved());
+    }
+
+    #[test]
+    fn default_batcher_can_activate_requests() {
+        // Regression: the derived Default used to carry max_batch = 0 —
+        // a batcher that never activated anything and stranded every
+        // submission in pending forever.
+        let mut b = Batcher::default();
+        b.submit(req(1));
+        b.recycle();
+        assert_eq!(b.effective_batch(), 1);
+        assert!(b.conserved());
+    }
+
+    #[test]
+    fn late_resubmit_after_drain_refills_and_conserves() {
+        // Fig. 1 collapse in progress: the pending queue drained, actives
+        // are retiring one by one — and new work arrives mid-collapse. The
+        // late submissions must flow through the same refill path, and
+        // every request (old wave + late wave) must come back exactly once.
+        let mut b = Batcher::new(2);
+        for i in 0..3 {
+            b.submit(req(i));
+        }
+        b.recycle();
+        assert_eq!(b.pending_len(), 1);
+        // Finish everything active, drain pending into the batch.
+        for r in b.active_mut() {
+            r.state = RequestState::FinishedEos;
+        }
+        let done = b.recycle();
+        b.archive(done);
+        assert_eq!(b.pending_len(), 0, "queue first drained");
+        assert_eq!(b.effective_batch(), 1, "collapse under way");
+        // Late re-submit mid-collapse.
+        for i in 10..14 {
+            b.submit(req(i));
+        }
+        assert!(b.conserved(), "conservation across the late submit");
+        for r in b.active_mut() {
+            r.state = RequestState::FinishedLength;
+        }
+        let done = b.recycle();
+        b.archive(done);
+        assert_eq!(b.effective_batch(), 2, "late wave refills to max_batch");
+        // Drain to empty and check exactly-once delivery.
+        let mut guard = 0;
+        while !b.is_drained() {
+            for r in b.active_mut() {
+                r.state = RequestState::FinishedEos;
+            }
+            let done = b.recycle();
+            b.archive(done);
+            guard += 1;
+            assert!(guard < 100, "late wave must drain");
+        }
+        assert!(b.conserved());
+        let mut ids: Vec<u64> = b.finished().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn max_batch_one_serializes_requests() {
+        // The degenerate slot count: requests must run strictly one at a
+        // time, in submission order, with conservation at every step.
+        let mut b = Batcher::new(1);
+        for i in 0..4 {
+            b.submit(req(i));
+        }
+        let mut served = Vec::new();
+        let mut guard = 0;
+        while !b.is_drained() {
+            let done = b.recycle();
+            b.archive(done);
+            assert!(b.effective_batch() <= 1, "never more than one active");
+            assert!(b.conserved());
+            if let Some(r) = b.active_mut().first_mut() {
+                served.push(r.id);
+                r.state = RequestState::FinishedEos;
+            }
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert_eq!(served, vec![0, 1, 2, 3], "strict submission order");
+        assert_eq!(b.finished().len(), 4);
+    }
+
+    #[test]
+    fn prop_conservation_under_random_submit_and_recycle_stream() {
+        // Interleave submissions INTO a running batcher with random
+        // completions and recycles: every request must be returned exactly
+        // once, conservation must hold at every observation point, and the
+        // batch bound must never be exceeded — including max_batch = 1 and
+        // submissions that arrive after the queue has fully drained.
+        prop::check(96, |g| {
+            let max_batch = 1 + g.usize_in(0, 7);
+            let mut b = Batcher::new(max_batch);
+            let mut next_id = 0u64;
+            let mut expected: Vec<u64> = Vec::new();
+            let mut guard = 0;
+            // Random event stream: bursts of submits, completions, drains.
+            while guard < 10_000 && (next_id < 25 || !b.is_drained()) {
+                guard += 1;
+                if next_id < 25 && g.rng.chance(0.35) {
+                    for _ in 0..1 + g.usize_in(0, 3) {
+                        if next_id < 25 {
+                            b.submit(req(next_id));
+                            expected.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                }
+                let done = b.recycle();
+                for r in &done {
+                    prop::require(r.is_done(), "recycle returns finished only")?;
+                }
+                b.archive(done);
+                prop::require(b.conserved(), "conservation")?;
+                prop::require(b.effective_batch() <= max_batch, "batch bound")?;
+                for r in b.active_mut() {
+                    if g.rng.chance(0.4) {
+                        r.state = RequestState::FinishedEos;
+                    }
+                }
+            }
+            prop::require(b.is_drained(), "stream must drain")?;
+            let mut got: Vec<u64> = b.finished().iter().map(|r| r.id).collect();
+            got.sort_unstable();
+            prop::require_eq(got, expected, "every request returned exactly once")
+        });
     }
 
     #[test]

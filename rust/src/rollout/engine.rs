@@ -23,6 +23,7 @@
 //! for EVERY substrate, speculating or not (tested below).
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::time::Instant;
 
 use super::batcher::Batcher;
@@ -33,6 +34,7 @@ use crate::drafter::Drafter;
 use crate::model::{StepInput, TargetModel};
 use crate::spec::budget::{solve as solve_budget, BudgetRequest};
 use crate::spec::{verify_greedy, verify_sampling, AcceptanceEstimator, LengthClass, LengthPolicy};
+use crate::store::{replay_wal, HistoryStore, StoreStatus, WalRecord};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 use crate::util::rng::Rng;
 
@@ -96,6 +98,15 @@ pub struct RolloutEngine {
     /// arena, so they refresh on a coarse step cadence instead of per step
     /// (snapshots may lag up to `INDEX_GAUGE_EVERY − 1` steps).
     index_gauges: crate::drafter::IndexStats,
+    /// Persistent history store (`spec.store_dir`): WAL per absorbed
+    /// rollout, snapshot every `snapshot_every` epochs. `None` when
+    /// persistence is off or the drafter is stateless.
+    store: Option<HistoryStore>,
+    snapshot_every: Epoch,
+    /// Last epoch whose roll was persisted (snapshot or WAL record) — the
+    /// trainer re-announces the current epoch every step, and only the
+    /// first announcement must touch the store.
+    last_roll_persisted: Option<Epoch>,
 }
 
 /// Steps between drafter index-gauge refreshes.
@@ -105,6 +116,62 @@ impl RolloutEngine {
     pub fn new(cfg: &DasConfig, drafter: Box<dyn Drafter>) -> Self {
         let budget_policy =
             BudgetPolicy::parse(&cfg.spec.budget_policy).expect("validated budget policy");
+        let mut drafter = drafter;
+        // Warm start: restore the snapshot and replay the WAL tail from a
+        // READ-ONLY view first — a store this engine ends up refusing
+        // (parameter drift, corruption) must come through untouched, repair
+        // side effects included. Only once the drafter accepted the state
+        // is the store opened for writing (which repairs torn tails /
+        // discards subsumed logs — yielding exactly the records the view
+        // reported, since both run the same scan). Persistence failures
+        // NEVER take the engine down — they fall back to the historical
+        // cold-start behavior (and disable the store rather than write
+        // records on top of a snapshot that was not restored).
+        let store = if cfg.spec.store_dir.is_empty() || !drafter.persistent() {
+            None
+        } else {
+            match HistoryStore::peek(Path::new(&cfg.spec.store_dir)) {
+                Ok(view) => {
+                    let restored = match &view.snapshot {
+                        Some(snap) => match drafter.load_state(snap) {
+                            Ok(()) => true,
+                            Err(e) => {
+                                eprintln!(
+                                    "das-store: warm start from '{}' skipped ({e}); \
+                                     running cold without persistence",
+                                    cfg.spec.store_dir
+                                );
+                                false
+                            }
+                        },
+                        None => true, // fresh store: nothing to restore yet
+                    };
+                    if restored {
+                        replay_wal(&mut *drafter, &view.wal);
+                        match HistoryStore::open(Path::new(&cfg.spec.store_dir)) {
+                            Ok(store) => Some(store),
+                            Err(e) => {
+                                eprintln!(
+                                    "das-store: cannot open '{}' for writing ({e}); \
+                                     continuing without persistence",
+                                    cfg.spec.store_dir
+                                );
+                                None
+                            }
+                        }
+                    } else {
+                        None
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "das-store: cannot read '{}' ({e}); running without persistence",
+                        cfg.spec.store_dir
+                    );
+                    None
+                }
+            }
+        };
         RolloutEngine {
             drafter,
             length_policy: LengthPolicy::from_das(cfg),
@@ -121,6 +188,11 @@ impl RolloutEngine {
             epoch: 0,
             seed: cfg.seed,
             index_gauges: crate::drafter::IndexStats::default(),
+            store,
+            // Clamp BEFORE the narrowing cast: a usize that is a multiple
+            // of 2^32 must not truncate to a zero divisor.
+            snapshot_every: (cfg.spec.snapshot_every.min(Epoch::MAX as usize) as Epoch).max(1),
+            last_roll_persisted: None,
         }
     }
 
@@ -128,10 +200,34 @@ impl RolloutEngine {
         self.temperature = t;
     }
 
-    /// Advance the epoch (window maintenance in the drafter).
+    /// Advance the epoch (window maintenance in the drafter). With a store
+    /// configured, the FIRST announcement of each epoch also persists: a
+    /// full snapshot commit every `spec.snapshot_every` epochs (resetting
+    /// the WAL it subsumes), a `RollEpoch` WAL record otherwise.
     pub fn roll_epoch(&mut self, epoch: Epoch) {
         self.epoch = epoch;
         self.drafter.roll_epoch(epoch);
+        if self.store.is_some() && self.last_roll_persisted != Some(epoch) {
+            self.last_roll_persisted = Some(epoch);
+            let result = if epoch % self.snapshot_every == 0 {
+                let payload = self.drafter.save_state();
+                self.store.as_mut().expect("checked").commit_snapshot(&payload)
+            } else {
+                self.store
+                    .as_mut()
+                    .expect("checked")
+                    .append(&WalRecord::RollEpoch(epoch))
+            };
+            if let Err(e) = result {
+                eprintln!("das-store: persist failed ({e}); disabling persistence");
+                self.store = None;
+            }
+        }
+    }
+
+    /// Size/latency gauges of the persistent store, if one is attached.
+    pub fn store_status(&self) -> Option<StoreStatus> {
+        self.store.as_ref().map(|s| s.status())
     }
 
     pub fn epoch(&self) -> Epoch {
@@ -154,7 +250,11 @@ impl RolloutEngine {
     }
 
     /// Decide per-request draft budgets for this round.
-    fn budgets(&self, active: &[RolloutRequest], model: &dyn Fn() -> crate::cost::LatencyModel) -> Vec<usize> {
+    fn budgets(
+        &self,
+        active: &[RolloutRequest],
+        model: &dyn Fn() -> crate::cost::LatencyModel,
+    ) -> Vec<usize> {
         match self.budget_policy {
             BudgetPolicy::Uniform => vec![self.budget_medium.max(1); active.len()],
             BudgetPolicy::Unlimited => vec![self.budget_cap; active.len()],
@@ -351,6 +451,13 @@ impl RolloutEngine {
         metrics.pool_tokens = idx.pool_tokens as u64;
         metrics.pool_bytes = idx.pool_bytes as u64;
         metrics.index_link_rebuilds = idx.link_rebuilds;
+        if let Some(store) = &self.store {
+            let st = store.status();
+            metrics.store_snapshot_bytes = st.snapshot_bytes;
+            metrics.store_wal_records = st.wal_records;
+            metrics.store_wal_bytes = st.wal_bytes;
+            metrics.store_persist_s = st.last_persist_secs;
+        }
         // All passes this engine saw belong to this step's rounds.
         debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
         StepReport {
@@ -385,6 +492,19 @@ impl RolloutEngine {
             tokens: req.generated().to_vec(),
             reward: 0.0,
         };
+        // Write-ahead: the rollout is durable BEFORE it enters the
+        // in-memory history, so a crash replays exactly what was indexed.
+        if let Some(store) = &mut self.store {
+            let rec = WalRecord::Absorb {
+                problem: rollout.problem,
+                epoch: rollout.epoch,
+                tokens: rollout.tokens.clone(),
+            };
+            if let Err(e) = store.append(&rec) {
+                eprintln!("das-store: WAL append failed ({e}); disabling persistence");
+                self.store = None;
+            }
+        }
         // Online drafter refresh: newly finished trajectories immediately
         // become draft material for still-running stragglers — exactly the
         // idle-slack exploitation the paper describes.
@@ -684,6 +804,144 @@ mod tests {
             "LPT key must fold acceptance: predicted={predicted} undiscounted={undiscounted} apr={apr}"
         );
         assert!(predicted < undiscounted, "discount must bite for an accepting problem");
+    }
+
+    fn sorted_rollouts(rep: &StepReport) -> Vec<(u32, Vec<u32>)> {
+        let mut k: Vec<_> = rep
+            .rollouts
+            .iter()
+            .map(|r| (r.problem, r.tokens.clone()))
+            .collect();
+        k.sort();
+        k
+    }
+
+    #[test]
+    fn two_phase_warm_start_matches_uninterrupted_run() {
+        // THE store acceptance test: train → kill → resume from the store
+        // must (a) report nonzero restored index_token_positions on its
+        // first step and (b) produce rollouts AND speculation outcomes
+        // identical to a control run that was never killed.
+        let dir = crate::store::test_dir("engine-two-phase");
+        let mut c = cfg(0.0, "das", "uniform");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        c.spec.snapshot_every = 2;
+        let mut c_ctrl = c.clone();
+        c_ctrl.spec.store_dir = String::new();
+        // Control: five uninterrupted steps.
+        let mut control = Vec::new();
+        {
+            let mut m = sim(&c_ctrl);
+            let mut e = engine(&c_ctrl);
+            for step in 0..5 {
+                e.roll_epoch(step);
+                let rep = e.generate_step(&mut m, &jobs(4, 2), step);
+                control.push((sorted_rollouts(&rep), rep.metrics.accepted));
+                m.policy_update(1.0);
+            }
+        }
+        // Phase 1: three steps with the store, then crash (drop mid-epoch:
+        // the last step's rollouts live only in the WAL, not a snapshot).
+        {
+            let mut m = sim(&c);
+            let mut e = engine(&c);
+            for step in 0..3 {
+                e.roll_epoch(step);
+                let rep = e.generate_step(&mut m, &jobs(4, 2), step);
+                assert_eq!(sorted_rollouts(&rep), control[step as usize].0, "phase-1 step {step}");
+                assert!(
+                    rep.metrics.store_snapshot_bytes > 0,
+                    "snapshot gauge populated (epoch-0 commit)"
+                );
+                if step == 2 {
+                    assert!(rep.metrics.store_wal_records > 0, "tail rollouts in the WAL");
+                }
+                m.policy_update(1.0);
+            }
+        }
+        // Phase 2: fresh process — same config, model rebuilt and advanced
+        // by the same number of learner updates; engine warm-starts.
+        let mut m = sim(&c);
+        for _ in 0..3 {
+            m.policy_update(1.0);
+        }
+        let mut e = engine(&c);
+        for step in 3..5u32 {
+            e.roll_epoch(step);
+            let rep = e.generate_step(&mut m, &jobs(4, 2), step);
+            if step == 3 {
+                assert!(
+                    rep.metrics.index_token_positions > 0,
+                    "first resumed step must report restored history"
+                );
+            }
+            assert_eq!(sorted_rollouts(&rep), control[step as usize].0, "resumed step {step}");
+            assert_eq!(
+                rep.metrics.accepted, control[step as usize].1,
+                "resumed drafts must match the never-killed control at step {step}"
+            );
+            m.policy_update(1.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stateless_drafters_never_touch_the_store() {
+        // persistent() gates the machinery: a "none" drafter with a
+        // store_dir configured must not even create the directory.
+        let dir = crate::store::test_dir("engine-none-store");
+        let mut c = cfg(0.6, "none", "length_aware");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        e.roll_epoch(0);
+        let rep = e.generate_step(&mut m, &jobs(2, 1), 0);
+        assert_eq!(rep.metrics.store_snapshot_bytes, 0);
+        assert_eq!(rep.metrics.store_wal_records, 0);
+        assert!(!dir.exists(), "no store files for stateless drafters");
+    }
+
+    #[test]
+    fn config_drift_falls_back_to_cold_start() {
+        // A snapshot taken under window=16 resumed under window=4: the
+        // engine must refuse the warm start (Mismatch), run cold, and
+        // disable persistence rather than corrupt the store.
+        let dir = crate::store::test_dir("engine-drift");
+        let mut c = cfg(0.0, "das", "uniform");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        {
+            let mut m = sim(&c);
+            let mut e = engine(&c);
+            e.roll_epoch(0);
+            e.generate_step(&mut m, &jobs(2, 2), 0);
+        }
+        let before = std::fs::read(dir.join("wal.das")).unwrap();
+        let mut c2 = c.clone();
+        c2.spec.window = 4;
+        let mut m = sim(&c2);
+        let mut e = engine(&c2);
+        e.roll_epoch(1);
+        let rep = e.generate_step(&mut m, &jobs(2, 2), 1);
+        assert_eq!(rep.metrics.completed, 4, "cold run proceeds normally");
+        assert_eq!(rep.metrics.store_wal_records, 0, "persistence disabled");
+        let after = std::fs::read(dir.join("wal.das")).unwrap();
+        assert_eq!(before, after, "refused warm start never writes the store");
+        // Forensics path: even a DAMAGED log (torn tail — the kind the
+        // writing open would repair in place) must survive a refused warm
+        // start byte-for-byte, because the engine peeks read-only before
+        // deciding.
+        let mut torn = before.clone();
+        torn.truncate(torn.len() - 3);
+        std::fs::write(dir.join("wal.das"), &torn).unwrap();
+        let mut e = engine(&c2);
+        e.roll_epoch(1);
+        assert!(e.store_status().is_none(), "still refused");
+        assert_eq!(
+            std::fs::read(dir.join("wal.das")).unwrap(),
+            torn,
+            "refused warm start leaves even damaged stores untouched"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

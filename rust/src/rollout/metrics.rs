@@ -44,6 +44,16 @@ pub struct StepMetrics {
     /// compaction sweeps plus the insert-count refresh that keeps the
     /// never-compacting `window_all` path on exact links.
     pub index_link_rebuilds: u64,
+
+    // --- persistent history store gauges (0 when no store is configured) ---
+    /// Payload bytes of the last committed (or warm-start-loaded) snapshot.
+    pub store_snapshot_bytes: u64,
+    /// WAL records accumulated since the last snapshot commit.
+    pub store_wal_records: u64,
+    /// WAL bytes accumulated since the last snapshot commit.
+    pub store_wal_bytes: u64,
+    /// Wall seconds the last snapshot commit took (0 until one happens).
+    pub store_persist_s: f64,
 }
 
 impl StepMetrics {
@@ -103,6 +113,13 @@ impl StepMetrics {
         self.pool_tokens += other.pool_tokens;
         self.pool_bytes += other.pool_bytes;
         self.index_link_rebuilds += other.index_link_rebuilds;
+        self.store_snapshot_bytes += other.store_snapshot_bytes;
+        self.store_wal_records += other.store_wal_records;
+        self.store_wal_bytes += other.store_wal_bytes;
+        // Persist latency is a per-store duration, not a fleet total: the
+        // merged view keeps the straggler (commits run inside epoch rolls,
+        // so the slowest worker's commit is the one the learner waits on).
+        self.store_persist_s = self.store_persist_s.max(other.store_persist_s);
     }
 }
 

@@ -108,6 +108,13 @@ impl DataParallelRollout {
                 // Worker-local engine seed: shifts request RNG forks, not
                 // the policy (the sim replica keeps the shared seed).
                 wcfg.seed = cfg.seed ^ ((w as u64 + 1) << 32);
+                // Worker-local history store: drafters are worker-local, so
+                // each persists (and warm-starts) under its own
+                // subdirectory — resuming with the same worker count
+                // restores every replica's history.
+                if !wcfg.spec.store_dir.is_empty() {
+                    wcfg.spec.store_dir = format!("{}/worker{w}", wcfg.spec.store_dir);
+                }
                 let model_cfg = SimModelConfig::from_das(cfg);
                 let (cmd_tx, cmd_rx) = channel::<Command>();
                 let (report_tx, report_rx) = channel::<StepReport>();
@@ -366,6 +373,60 @@ mod tests {
             with_acceptance < length_only,
             "after warm steps some problem must speculate and discount its key: {with_acceptance} vs {length_only}"
         );
+    }
+
+    #[test]
+    fn dp_two_phase_warm_start_restores_worker_history() {
+        // Per-worker stores under <dir>/worker<i>: kill the pool after two
+        // steps, rebuild it, and the resumed run must report restored
+        // history on its first step while producing the same greedy
+        // rollouts as a never-killed control pool.
+        let dir = crate::store::test_dir("dp-two-phase");
+        let mut c = cfg("das");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        c.spec.snapshot_every = 1;
+        let mut c_ctrl = c.clone();
+        c_ctrl.spec.store_dir = String::new();
+        let key = |r: &Rollout| (r.problem, r.tokens.clone());
+        let mut control = Vec::new();
+        {
+            let mut dp = DataParallelRollout::new(&c_ctrl, 2);
+            for step in 0..4 {
+                dp.roll_epoch(step);
+                let rep = dp.generate_step(&jobs(6), step);
+                let mut k: Vec<_> = rep.rollouts.iter().map(key).collect();
+                k.sort();
+                control.push(k);
+            }
+        }
+        {
+            let mut dp = DataParallelRollout::new(&c, 2);
+            for step in 0..2 {
+                dp.roll_epoch(step);
+                dp.generate_step(&jobs(6), step);
+            }
+        } // kill: Drop joins the workers, so all persists have landed
+        assert!(
+            dir.join("worker0").exists() && dir.join("worker1").exists(),
+            "one store per worker"
+        );
+        let mut dp = DataParallelRollout::new(&c, 2);
+        for step in 2..4u32 {
+            dp.roll_epoch(step);
+            let rep = dp.generate_step(&jobs(6), step);
+            if step == 2 {
+                let restored: u64 = rep
+                    .per_worker
+                    .iter()
+                    .map(|m| m.index_token_positions)
+                    .sum();
+                assert!(restored > 0, "first resumed step reports restored history");
+            }
+            let mut k: Vec<_> = rep.rollouts.iter().map(key).collect();
+            k.sort();
+            assert_eq!(k, control[step as usize], "resumed rollouts match control");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Binary wire codec for the `das-store-v1` persistence format.
+//!
+//! Deliberately tiny: fixed-width little-endian scalars, length-prefixed
+//! strings/token runs, and an FNV-1a content checksum. No self-describing
+//! schema — every section of the format is written and read by the same
+//! release of this crate, and cross-version compatibility is handled at the
+//! FILE level by the magic/version header ([`super::HistoryStore`] rejects
+//! unknown versions with [`StoreError::Version`] instead of guessing).
+//!
+//! Every read returns `Result`: a short buffer is [`StoreError::Truncated`],
+//! never a panic — the WAL crash-safety property (§ module docs of
+//! [`super`]) rests on that.
+
+use std::fmt;
+
+/// Everything that can go wrong opening, replaying or writing a store.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// Filesystem-level failure (message carries the `std::io::Error`).
+    Io(String),
+    /// The file's magic/version header names a format this build does not
+    /// speak (or is not a das-store file at all).
+    Version(String),
+    /// Structurally invalid content behind a VALID header/checksum — a
+    /// writer bug or deliberate tampering, never a torn write.
+    Corrupt(String),
+    /// Ran out of bytes mid-structure (torn tail write; callers treat the
+    /// valid prefix as the state).
+    Truncated,
+    /// Snapshot parameters disagree with the live configuration (e.g. a
+    /// snapshot taken under a different substrate/scope/window).
+    Mismatch(String),
+    /// The drafter/source has no persistent state to save or load.
+    Unsupported(&'static str),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(m) => write!(f, "store io error: {m}"),
+            StoreError::Version(m) => write!(f, "store version error: {m}"),
+            StoreError::Corrupt(m) => write!(f, "store corrupt: {m}"),
+            StoreError::Truncated => write!(f, "store data truncated"),
+            StoreError::Mismatch(m) => write!(f, "store/config mismatch: {m}"),
+            StoreError::Unsupported(m) => write!(f, "store unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e.to_string())
+    }
+}
+
+/// FNV-1a over `bytes` — cheap, dependency-free, and plenty to detect the
+/// torn writes and bit rot the store guards against (not an integrity MAC).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only byte sink for one format section.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// UTF-8 string, u32 length prefix.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Token run, u32 length prefix.
+    pub fn tokens(&mut self, toks: &[u32]) {
+        self.u32(toks.len() as u32);
+        for &t in toks {
+            self.u32(t);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor over one format section. Every accessor is bounds-checked and
+/// returns [`StoreError::Truncated`] instead of panicking.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if self.remaining() < n {
+            return Err(StoreError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Raw byte run of a known length.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        self.take(n)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, StoreError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, StoreError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, StoreError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| StoreError::Corrupt(format!("usize overflow: {v}")))
+    }
+
+    /// A u64-encoded count that bounds a following repetition. Rejects
+    /// counts that could not possibly fit in the remaining bytes (each
+    /// element needs at least `min_elem_bytes`), so corrupt lengths fail
+    /// fast instead of driving huge allocations.
+    pub fn count(&mut self, min_elem_bytes: usize) -> Result<usize, StoreError> {
+        let n = self.usize()?;
+        if n.saturating_mul(min_elem_bytes.max(1)) > self.remaining() {
+            return Err(StoreError::Truncated);
+        }
+        Ok(n)
+    }
+
+    pub fn f64(&mut self) -> Result<f64, StoreError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn str(&mut self) -> Result<String, StoreError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| StoreError::Corrupt("non-UTF-8 string".into()))
+    }
+
+    pub fn tokens(&mut self) -> Result<Vec<u32>, StoreError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(4) > self.remaining() {
+            return Err(StoreError::Truncated);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    /// Assert a section tag written by [`Writer::str`].
+    pub fn expect_str(&mut self, want: &str, what: &str) -> Result<(), StoreError> {
+        let got = self.str()?;
+        if got != want {
+            return Err(StoreError::Corrupt(format!(
+                "{what}: expected '{want}', found '{got}'"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.usize(123_456);
+        w.f64(-0.25);
+        w.str("das-store");
+        w.tokens(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize().unwrap(), 123_456);
+        assert_eq!(r.f64().unwrap(), -0.25);
+        assert_eq!(r.str().unwrap(), "das-store");
+        assert_eq!(r.tokens().unwrap(), vec![1, 2, 3]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncation_is_an_error_never_a_panic() {
+        let mut w = Writer::new();
+        w.u64(42);
+        w.str("hello");
+        w.tokens(&[9, 9, 9]);
+        let bytes = w.into_bytes();
+        // Every proper prefix must fail with Truncated on SOME read, and
+        // never panic. (The full buffer parses cleanly.)
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            let res = (|| -> Result<(), StoreError> {
+                r.u64()?;
+                r.str()?;
+                r.tokens()?;
+                Ok(())
+            })();
+            assert_eq!(res, Err(StoreError::Truncated), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn hostile_counts_rejected() {
+        // A corrupt length prefix larger than the remaining bytes must be
+        // rejected before any allocation is attempted.
+        let mut w = Writer::new();
+        w.u32(u32::MAX); // token-count prefix with no payload behind it
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.tokens(), Err(StoreError::Truncated));
+        let mut w = Writer::new();
+        w.u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.count(8).is_err());
+    }
+
+    #[test]
+    fn checksum_is_stable_and_sensitive() {
+        let a = checksum(b"das-store-v1");
+        assert_eq!(a, checksum(b"das-store-v1"), "deterministic");
+        assert_ne!(a, checksum(b"das-store-v2"), "content-sensitive");
+        assert_ne!(checksum(b""), 0);
+    }
+}

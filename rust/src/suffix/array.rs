@@ -87,7 +87,11 @@ impl SuffixArray {
 
     /// Longest suffix of `context` (≤ `max_len`) present in the text, plus
     /// the end position of one occurrence (mirrors `SuffixTree`).
-    pub fn longest_suffix_match(&self, context: &[TokenId], max_len: usize) -> (usize, Option<usize>) {
+    pub fn longest_suffix_match(
+        &self,
+        context: &[TokenId],
+        max_len: usize,
+    ) -> (usize, Option<usize>) {
         let cap = context.len().min(max_len);
         for take in (1..=cap).rev() {
             let suffix = &context[context.len() - take..];
@@ -233,6 +237,34 @@ impl SuffixArrayIndex {
         self.next_sentinel += 1;
         self.built = Some(SuffixArray::build(&self.corpus));
         self.rebuilds += 1;
+    }
+
+    /// The raw sentinel-terminated corpus (the `das-store-v1` persistence
+    /// payload for this substrate — SA + LCP are derived data).
+    pub fn corpus(&self) -> &[TokenId] {
+        &self.corpus
+    }
+
+    /// Sentinel id the next insert will consume.
+    pub fn sentinel_cursor(&self) -> TokenId {
+        self.next_sentinel
+    }
+
+    /// Rebuild from a stored corpus: ONE build (not one per historical
+    /// insert — the restored index answers identically either way; the
+    /// `rebuilds` diagnostic is restored to the saved lifetime count).
+    pub fn from_parts(corpus: Vec<TokenId>, next_sentinel: TokenId, rebuilds: usize) -> Self {
+        let built = if corpus.is_empty() {
+            None
+        } else {
+            Some(SuffixArray::build(&corpus))
+        };
+        SuffixArrayIndex {
+            corpus,
+            built,
+            next_sentinel: next_sentinel.max(SENTINEL_BASE),
+            rebuilds,
+        }
     }
 
     pub fn len_tokens(&self) -> usize {

@@ -131,6 +131,7 @@ use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use crate::store::wire::{Reader, StoreError, Writer};
 use crate::tokens::TokenId;
 
 /// Children stored inline per node before spilling to a sorted heap vector.
@@ -264,11 +265,13 @@ impl ChildTable {
     }
 
     /// Heap bytes beyond the inline struct (the spill vector, if any).
+    /// Length-based (not capacity) so the gauge is a pure function of
+    /// content — a snapshot-restored table reports identical bytes.
     pub(crate) fn heap_bytes(&self) -> usize {
         match &self.spill {
             Some(spill) => {
                 std::mem::size_of::<Vec<(TokenId, u32)>>()
-                    + spill.capacity() * std::mem::size_of::<(TokenId, u32)>()
+                    + spill.len() * std::mem::size_of::<(TokenId, u32)>()
             }
             None => 0,
         }
@@ -458,11 +461,99 @@ impl SegmentPool {
             segments: self.live_segs,
             live_tokens: self.toks.len() - self.dead_toks,
             dead_tokens: self.dead_toks,
-            heap_bytes: self.toks.capacity() * std::mem::size_of::<TokenId>()
-                + self.segs.capacity() * std::mem::size_of::<SegMeta>()
+            heap_bytes: self.toks.len() * std::mem::size_of::<TokenId>()
+                + self.segs.len() * std::mem::size_of::<SegMeta>()
                 + self.by_hash.len()
                     * (std::mem::size_of::<u64>() + std::mem::size_of::<Vec<u32>>() + 16),
         }
+    }
+
+    /// Length of a live segment; `None` for dead/free/out-of-range slots
+    /// (snapshot-load validation of edge `SegRef`s).
+    pub(crate) fn seg_len(&self, seg: u32) -> Option<u32> {
+        self.segs
+            .get(seg as usize)
+            .filter(|m| m.len > 0)
+            .map(|m| m.len)
+    }
+
+    /// Current edge refcount of a segment (0 for dead slots; `das store
+    /// verify` compares these against the snapshot's recorded counts).
+    pub(crate) fn refcount(&self, seg: u32) -> u32 {
+        self.segs.get(seg as usize).map(|m| m.rc).unwrap_or(0)
+    }
+
+    /// Serialize every LIVE segment — id, recorded edge refcount, content.
+    /// Dead interior bytes are not written: the loaded pool is the
+    /// compacted equivalent of this one (same live content, same ids).
+    pub(crate) fn save_state(&self, w: &mut Writer) {
+        w.str("pool");
+        w.usize(self.segs.len());
+        w.usize(self.live_segs);
+        for (id, m) in self.segs.iter().enumerate() {
+            if m.len == 0 {
+                continue;
+            }
+            w.u32(id as u32);
+            w.u32(m.rc);
+            w.tokens(&self.toks[m.off as usize..(m.off + m.len) as usize]);
+        }
+    }
+
+    /// Rebuild a pool from [`SegmentPool::save_state`]. Segment IDS ARE
+    /// PRESERVED (edge `SegRef`s in the trie sections refer to them), the
+    /// hash-cons table is rebuilt, and every refcount starts at 0 — each
+    /// deserialized trie edge re-retains its segment, re-deriving the
+    /// counts from the structures that actually loaded. Returns the pool
+    /// plus the RECORDED `(segment, refcount)` pairs for verification.
+    pub(crate) fn load_state(
+        r: &mut Reader<'_>,
+    ) -> Result<(SegmentPool, Vec<(u32, u32)>), StoreError> {
+        r.expect_str("pool", "pool section tag")?;
+        // Slot-table size (NOT stream-bounded: dead slots occupy no bytes).
+        // Slot ids stay compact — the free list reuses dead slots before
+        // growing the table — so an absurd size is corruption, not scale.
+        let slots = r.usize()?;
+        if slots > (1 << 26) {
+            return Err(StoreError::Corrupt(format!("pool slot table too large: {slots}")));
+        }
+        let live = r.count(12)?;
+        if live > slots {
+            return Err(StoreError::Corrupt(format!(
+                "pool live segments ({live}) > slots ({slots})"
+            )));
+        }
+        let mut pool = SegmentPool::default();
+        pool.segs.resize(slots, SegMeta::default());
+        let mut recorded: Vec<(u32, u32)> = Vec::with_capacity(live);
+        for _ in 0..live {
+            let id = r.u32()?;
+            let rc = r.u32()?;
+            let toks = r.tokens()?;
+            let slot = pool
+                .segs
+                .get_mut(id as usize)
+                .ok_or_else(|| StoreError::Corrupt(format!("pool segment id {id} out of range")))?;
+            if slot.len != 0 {
+                return Err(StoreError::Corrupt(format!("pool segment id {id} duplicated")));
+            }
+            if toks.is_empty() {
+                return Err(StoreError::Corrupt(format!("pool segment id {id} is empty")));
+            }
+            *slot = SegMeta {
+                off: pool.toks.len() as u32,
+                len: toks.len() as u32,
+                rc: 0,
+            };
+            pool.by_hash.entry(hash_tokens(&toks)).or_default().push(id);
+            pool.toks.extend_from_slice(&toks);
+            recorded.push((id, rc));
+        }
+        pool.live_segs = live;
+        pool.free = (0..slots as u32)
+            .filter(|&i| pool.segs[i as usize].len == 0)
+            .collect();
+        Ok((pool, recorded))
     }
 }
 
@@ -492,6 +583,44 @@ impl SharedPool {
 
     pub fn stats(&self) -> PoolStats {
         self.lock().stats()
+    }
+
+    /// Serialize the pool's live segments (ids, recorded refcounts,
+    /// content) as one `das-store-v1` section.
+    pub fn save_state(&self, w: &mut Writer) {
+        self.lock().save_state(w);
+    }
+
+    /// Rebuild a pool from [`SharedPool::save_state`] with segment ids
+    /// preserved and all refcounts ZERO — deserialized trie edges re-retain
+    /// as they load. Returns the recorded `(segment, refcount)` pairs;
+    /// finish with [`SharedPool::reconcile_recorded`] once every consumer
+    /// has loaded.
+    pub fn load_state(r: &mut Reader<'_>) -> Result<(SharedPool, Vec<(u32, u32)>), StoreError> {
+        let (pool, recorded) = SegmentPool::load_state(r)?;
+        Ok((
+            SharedPool {
+                inner: Arc::new(Mutex::new(pool)),
+            },
+            recorded,
+        ))
+    }
+
+    /// After every snapshot consumer has loaded: drop segments no loaded
+    /// edge references (e.g. labels of the ephemeral request-local indexes
+    /// that are not persisted) and return how many recorded refcounts
+    /// disagree with the re-derived ones (0 for a quiescent snapshot —
+    /// `das store verify` surfaces this).
+    pub fn reconcile_recorded(&self, recorded: &[(u32, u32)]) -> usize {
+        let mut pg = self.lock();
+        let mut mismatches = 0usize;
+        for &(id, rc) in recorded {
+            if pg.refcount(id) != rc {
+                mismatches += 1;
+            }
+            pg.release_if_unused(id);
+        }
+        mismatches
     }
 }
 
@@ -529,8 +658,19 @@ pub trait CountStore: Clone + std::fmt::Debug + Send {
     /// the lower node's counts (the compressed-counting invariant, see
     /// module docs), so the split must materialize exactly that state.
     fn split_node(&mut self, child: usize);
-    /// Heap bytes owned by the store (diagnostics).
+    /// Heap bytes owned by the store (diagnostics). Length-based, not
+    /// capacity-based, so a snapshot-restored store reports identical
+    /// bytes to the live store it was saved from.
     fn heap_bytes(&self) -> usize;
+    /// Serialize the per-node rows (and any layout config) into the
+    /// `das-store-v1` node-store section of a trie snapshot.
+    fn save_rows(&self, w: &mut Writer);
+    /// Rebuild from a [`CountStore::save_rows`] section covering exactly
+    /// `n_nodes` arena nodes (validated — a row/arena count mismatch is
+    /// [`StoreError::Corrupt`], never an out-of-bounds read later).
+    fn load_rows(r: &mut Reader<'_>, n_nodes: usize) -> Result<Self, StoreError>
+    where
+        Self: Sized;
 }
 
 /// Plain occurrence counting — the [`CountStore`] of the production
@@ -579,7 +719,30 @@ impl CountStore for Counts {
     }
 
     fn heap_bytes(&self) -> usize {
-        self.counts.capacity() * std::mem::size_of::<u64>()
+        self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    fn save_rows(&self, w: &mut Writer) {
+        w.str("counts");
+        w.usize(self.counts.len());
+        for &c in &self.counts {
+            w.u64(c);
+        }
+    }
+
+    fn load_rows(r: &mut Reader<'_>, n_nodes: usize) -> Result<Self, StoreError> {
+        r.expect_str("counts", "count-store tag")?;
+        let n = r.count(8)?;
+        if n != n_nodes {
+            return Err(StoreError::Corrupt(format!(
+                "counts rows ({n}) != arena nodes ({n_nodes})"
+            )));
+        }
+        let mut counts = Vec::with_capacity(n);
+        for _ in 0..n {
+            counts.push(r.u64()?);
+        }
+        Ok(Counts { counts })
     }
 }
 
@@ -1497,6 +1660,129 @@ impl<S: CountStore> ArenaTrie<S> {
     pub fn edge_count(&self) -> usize {
         self.nodes.iter().map(|n| n.children.len()).sum()
     }
+
+    /// Serialize the complete trie as one `das-store-v1` section: every
+    /// arena node (edge label as a pool `SegRef`, parent, depth, suffix
+    /// link), the exact-or-dirty link bookkeeping (`links_dirty`,
+    /// `link_rebuilds`), and the [`CountStore`] rows. The segment pool is
+    /// NOT written here — it may back many tries and is saved once by the
+    /// owner (see [`SharedPool::save_state`]).
+    pub fn save_state(&self, w: &mut Writer) {
+        w.str("trie");
+        w.usize(self.max_depth);
+        w.usize(self.nodes.len());
+        w.usize(self.links_dirty);
+        w.u64(self.link_rebuilds);
+        for n in &self.nodes {
+            w.u32(n.label.seg);
+            w.u32(n.label.start);
+            w.u32(n.label.len);
+            w.u32(n.parent);
+            w.u32(n.depth);
+            w.u32(n.slink);
+        }
+        self.store.save_rows(w);
+    }
+
+    /// Rebuild a trie from [`ArenaTrie::save_state`] against `pool`, which
+    /// must already hold the snapshot's segments under their original ids
+    /// (load the pool section first — [`SharedPool::load_state`]). Child
+    /// tables are reconstructed from parent pointers + first label tokens;
+    /// every structural invariant is validated BEFORE any pool refcount is
+    /// touched, so a corrupt section fails with [`StoreError::Corrupt`] and
+    /// leaves the pool exactly as it was. Each loaded edge retains its
+    /// segment, re-deriving refcounts from the structures that exist.
+    pub fn load_state(r: &mut Reader<'_>, pool: SharedPool) -> Result<Self, StoreError> {
+        r.expect_str("trie", "trie section tag")?;
+        let max_depth = r.usize()?;
+        let n = r.count(24)?;
+        if n == 0 {
+            return Err(StoreError::Corrupt("trie without a root node".into()));
+        }
+        let links_dirty = r.usize()?.min(n);
+        let link_rebuilds = r.u64()?;
+        let mut raw: Vec<(SegRef, u32, u32, u32)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = SegRef {
+                seg: r.u32()?,
+                start: r.u32()?,
+                len: r.u32()?,
+            };
+            raw.push((label, r.u32()?, r.u32()?, r.u32()?));
+        }
+        let store = S::load_rows(r, n)?;
+        fn corrupt(m: String) -> StoreError {
+            StoreError::Corrupt(m)
+        }
+        let mut nodes: Vec<Node> = Vec::with_capacity(n);
+        {
+            let mut pg = pool.lock();
+            let (rl, rp, rd, rs) = raw[0];
+            if rl.len != 0 || rp != 0 || rd != 0 || rs != 0 {
+                return Err(corrupt("trie root must be label-less at depth 0".into()));
+            }
+            nodes.push(Node::root());
+            for (v, &(label, parent, depth, slink)) in raw.iter().enumerate().skip(1) {
+                if label.len == 0 {
+                    return Err(corrupt(format!("node {v}: empty edge label")));
+                }
+                let seg_len = pg
+                    .seg_len(label.seg)
+                    .ok_or_else(|| corrupt(format!("node {v}: dead pool segment {}", label.seg)))?;
+                let end = label
+                    .start
+                    .checked_add(label.len)
+                    .ok_or_else(|| corrupt(format!("node {v}: label range overflow")))?;
+                if end > seg_len {
+                    return Err(corrupt(format!("node {v}: label past segment end")));
+                }
+                if parent as usize >= n || slink as usize >= n {
+                    return Err(corrupt(format!("node {v}: parent/slink out of range")));
+                }
+                // depth = parent depth + label len (labels are nonempty, so
+                // this also rules out parent cycles), and a suffix link may
+                // only point at-or-above the one-shorter suffix position.
+                if depth != raw[parent as usize].2 + label.len {
+                    return Err(corrupt(format!("node {v}: inconsistent depth")));
+                }
+                if raw[slink as usize].2 + 1 > depth {
+                    return Err(corrupt(format!("node {v}: suffix link below suffix depth")));
+                }
+                nodes.push(Node {
+                    children: ChildTable::default(),
+                    label,
+                    parent,
+                    depth,
+                    slink,
+                });
+            }
+            // Child tables: keyed by each edge's first label token, one
+            // edge per (parent, token).
+            for v in 1..n {
+                let label = nodes[v].label;
+                let parent = nodes[v].parent as usize;
+                let first = pg.slice(label)[0];
+                if nodes[parent].children.get(first).is_some() {
+                    return Err(corrupt(format!("node {v}: duplicate child token {first}")));
+                }
+                nodes[parent].children.insert(first, v as u32);
+            }
+            // Everything validated: NOW take the pool references.
+            for node in &nodes[1..] {
+                pg.retain(node.label.seg);
+            }
+        }
+        let label_tokens = nodes[1..].iter().map(|nd| nd.label.len as usize).sum();
+        Ok(ArenaTrie {
+            nodes,
+            store,
+            max_depth: max_depth.max(1),
+            pool,
+            label_tokens,
+            links_dirty,
+            link_rebuilds,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -2258,6 +2544,123 @@ mod tests {
                 let expect = t.locate(&matched[mlen - d..]).expect("suffix present");
                 prop::require_eq(row, expect.row(), "chain row == locate row")?;
             }
+            Ok(())
+        });
+    }
+
+    /// Save pool + trie, load into a FRESH pool, and return the restored
+    /// trie (the das-store-v1 round trip at the core layer).
+    fn roundtrip(t: &ArenaTrie<Counts>) -> ArenaTrie<Counts> {
+        let mut w = Writer::new();
+        t.pool().save_state(&mut w);
+        t.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let (pool, recorded) = SharedPool::load_state(&mut r).unwrap();
+        let restored = ArenaTrie::load_state(&mut r, pool.clone()).unwrap();
+        assert!(r.is_empty(), "round trip consumed every byte");
+        assert_eq!(
+            pool.reconcile_recorded(&recorded),
+            0,
+            "single-trie snapshot refcounts re-derive exactly"
+        );
+        restored
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_identical() {
+        let mut t = plain(10);
+        t.insert_suffixes(&[1, 2, 3, 4, 2, 3, 9], ());
+        t.insert_suffixes(&[1, 2, 7, 7], ());
+        let r = roundtrip(&t);
+        assert_eq!(r.node_count(), t.node_count());
+        assert_eq!(r.token_positions(), t.token_positions());
+        assert_eq!(r.approx_bytes(), t.approx_bytes(), "length-based bytes restore exactly");
+        assert_eq!(r.pool_stats().live_tokens, t.pool_stats().live_tokens);
+        assert_eq!(r.link_rebuilds(), t.link_rebuilds());
+        for pat in [&[1u32, 2][..], &[2, 3], &[2, 3, 9], &[7], &[9, 9]] {
+            assert_eq!(count(&r, pat), count(&t, pat), "counts for {pat:?}");
+        }
+        let ctx = [5u32, 1, 2, 3];
+        assert_eq!(r.deepest_suffix(&ctx, 8, ()), t.deepest_suffix(&ctx, 8, ()));
+        let (_, pos) = r.deepest_suffix(&ctx, 8, ());
+        assert_eq!(r.greedy_walk(pos, 4, ()), t.greedy_walk(pos, 4, ()));
+        // The restored trie keeps absorbing: inserts extend it identically.
+        let mut t2 = t.clone();
+        let mut r2 = r;
+        t2.insert_suffixes(&[2, 3, 9, 9], ());
+        r2.insert_suffixes(&[2, 3, 9, 9], ());
+        assert_eq!(r2.node_count(), t2.node_count());
+        assert_eq!(count(&r2, &[9, 9]), count(&t2, &[9, 9]));
+    }
+
+    #[test]
+    fn corrupt_trie_sections_error_and_leave_pool_untouched() {
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3, 4, 5], ());
+        let mut w = Writer::new();
+        t.pool().save_state(&mut w);
+        t.save_state(&mut w);
+        let bytes = w.into_bytes();
+        // Damage node 1's parent pointer in the trie section: load must
+        // reject with Corrupt, and the freshly loaded pool must keep every
+        // refcount at zero (validation happens before any retain).
+        let mut r = Reader::new(&bytes);
+        let (pool, recorded) = SharedPool::load_state(&mut r).unwrap();
+        let consumed = bytes.len() - r.remaining();
+        let mut bad = bytes[consumed..].to_vec();
+        // Section layout: "trie" tag (8) + 4 scalars (32) = 40-byte header,
+        // then 24-byte node records; node 1's parent field is bytes 12..16
+        // of its record.
+        let off = 40 + 24 + 12;
+        bad[off..off + 4].copy_from_slice(&9999u32.to_le_bytes());
+        let mut br = Reader::new(&bad);
+        match ArenaTrie::<Counts>::load_state(&mut br, pool.clone()) {
+            Err(StoreError::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {:?}", other.map(|t| t.node_count())),
+        }
+        // Every recorded refcount disagrees with the (all-zero) derived
+        // ones — proof that the failed load never touched the pool.
+        assert_eq!(pool.reconcile_recorded(&recorded), recorded.len());
+        // Whatever happened above, reloading the pristine section works.
+        let mut r2 = Reader::new(&bytes);
+        let (pool2, _) = SharedPool::load_state(&mut r2).unwrap();
+        let t2 = ArenaTrie::<Counts>::load_state(&mut r2, pool2).unwrap();
+        assert_eq!(t2.node_count(), t.node_count());
+    }
+
+    #[test]
+    fn prop_snapshot_roundtrip_matches_on_random_streams() {
+        // Random insert/compaction streams: the restored trie must answer
+        // counts, deepest-suffix and greedy drafts exactly like the
+        // original, and keep behaving identically under further inserts.
+        prop::check(64, |g| {
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let depth = 2 + g.usize_in(0, 8);
+            let mut t = plain(depth);
+            for _ in 0..g.usize_in(1, 5) {
+                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 40), ());
+            }
+            if g.bool() {
+                t.compact(|s, n| s.get(n) >= 1);
+            }
+            let r = roundtrip(&t);
+            prop::require_eq(r.node_count(), t.node_count(), "nodes")?;
+            prop::require_eq(r.token_positions(), t.token_positions(), "positions")?;
+            prop::require_eq(r.approx_bytes(), t.approx_bytes(), "heap bytes")?;
+            for _ in 0..8 {
+                let pat = g.vec_u32_nonempty(alphabet, depth);
+                prop::require_eq(count(&r, &pat), count(&t, &pat), "count")?;
+            }
+            let ctx = g.vec_u32_nonempty(alphabet, 16);
+            let (ml, pa) = t.deepest_suffix(&ctx, 12, ());
+            let (rl, pb) = r.deepest_suffix(&ctx, 12, ());
+            prop::require_eq(rl, ml, "deepest suffix len")?;
+            prop::require_eq(
+                r.greedy_walk(pb, 6, ()),
+                t.greedy_walk(pa, 6, ()),
+                "greedy draft",
+            )?;
             Ok(())
         });
     }

@@ -32,6 +32,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::store::wire::{Reader, StoreError, Writer};
 use crate::suffix::core::{ArenaTrie, CountStore, SharedPool};
 use crate::tokens::TokenId;
 
@@ -103,12 +104,54 @@ impl CountStore for OwnerStore {
     }
 
     fn heap_bytes(&self) -> usize {
-        self.owners.capacity() * std::mem::size_of::<Vec<(u32, u32)>>()
+        self.owners.len() * std::mem::size_of::<Vec<(u32, u32)>>()
             + self
                 .owners
                 .iter()
-                .map(|v| v.capacity() * std::mem::size_of::<(u32, u32)>())
+                .map(|v| v.len() * std::mem::size_of::<(u32, u32)>())
                 .sum::<usize>()
+    }
+
+    fn save_rows(&self, w: &mut Writer) {
+        w.str("owner");
+        w.usize(self.owners.len());
+        for row in &self.owners {
+            w.usize(row.len());
+            for &(shard, count) in row {
+                w.u32(shard);
+                w.u32(count);
+            }
+        }
+    }
+
+    fn load_rows(r: &mut Reader<'_>, n_nodes: usize) -> Result<Self, StoreError> {
+        r.expect_str("owner", "count-store tag")?;
+        let n = r.usize()?;
+        if n != n_nodes {
+            return Err(StoreError::Corrupt(format!(
+                "owner rows ({n}) != arena nodes ({n_nodes})"
+            )));
+        }
+        let mut owners = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = r.count(8)?;
+            let mut row = Vec::with_capacity(len);
+            let mut prev: Option<u32> = None;
+            for _ in 0..len {
+                let shard = r.u32()?;
+                let count = r.u32()?;
+                if prev.map(|p| p >= shard).unwrap_or(false) {
+                    return Err(StoreError::Corrupt("owner row not sorted by shard".into()));
+                }
+                if count == 0 {
+                    return Err(StoreError::Corrupt("zero-count owner entry".into()));
+                }
+                prev = Some(shard);
+                row.push((shard, count));
+            }
+            owners.push(row);
+        }
+        Ok(OwnerStore { owners })
     }
 }
 
@@ -222,12 +265,111 @@ impl PrefixRouter {
     pub fn node_count(&self) -> usize {
         self.trie.node_count()
     }
+
+    /// Registrations kept per shard (`usize::MAX` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.max_gens_per_shard
+    }
+
+    /// Serialize the router — capacity bound, owner trie, per-shard FIFO of
+    /// registered prefixes — as one `das-store-v1` section (the pool is
+    /// saved once by the owner).
+    pub fn save_state(&self, w: &mut Writer) {
+        w.str("router");
+        w.u64(self.max_gens_per_shard as u64);
+        w.usize(self.trie.max_depth());
+        self.trie.save_state(w);
+        w.usize(self.recent.len());
+        // Deterministic output: shards in ascending id order.
+        let mut shards: Vec<&u32> = self.recent.keys().collect();
+        shards.sort_unstable();
+        for &shard in shards {
+            w.u32(shard);
+            let q = &self.recent[&shard];
+            w.usize(q.len());
+            for prefix in q {
+                w.tokens(prefix);
+            }
+        }
+    }
+
+    /// Restore a router from [`PrefixRouter::save_state`] against `pool`
+    /// (which must already hold the snapshot's segments).
+    pub fn load_state(r: &mut Reader<'_>, pool: SharedPool) -> Result<PrefixRouter, StoreError> {
+        r.expect_str("router", "router section tag")?;
+        let cap = r.u64()?;
+        let max_gens_per_shard = usize::try_from(cap).unwrap_or(usize::MAX).max(1);
+        let max_depth = r.usize()?;
+        let trie = ArenaTrie::load_state(r, pool)?;
+        if trie.max_depth() != max_depth.max(1) {
+            return Err(StoreError::Corrupt("router depth disagrees with trie".into()));
+        }
+        let n_shards = r.count(12)?;
+        let mut recent: HashMap<u32, VecDeque<Vec<TokenId>>> = HashMap::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let shard = r.u32()?;
+            let len = r.count(4)?;
+            if len > max_gens_per_shard {
+                return Err(StoreError::Corrupt(format!(
+                    "shard {shard} FIFO over capacity ({len} > {max_gens_per_shard})"
+                )));
+            }
+            let mut q = VecDeque::with_capacity(len);
+            for _ in 0..len {
+                q.push_back(r.tokens()?);
+            }
+            if recent.insert(shard, q).is_some() {
+                return Err(StoreError::Corrupt(format!("shard {shard} FIFO duplicated")));
+            }
+        }
+        Ok(PrefixRouter {
+            trie,
+            recent,
+            max_gens_per_shard,
+        })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop;
+
+    #[test]
+    fn snapshot_roundtrip_preserves_routing_and_capacity() {
+        // das-store-v1 round trip of the router: registration stream with
+        // an unregister (forces the OwnerStore rows through real churn),
+        // then save → fresh-pool load. Routing decisions, node count and
+        // the capacity FIFO must survive, and post-restore registrations
+        // (incl. FIFO eviction) must land identically on both routers.
+        let mut r = PrefixRouter::with_capacity(8, 2);
+        r.register(1, &[10, 11, 12, 13]);
+        r.register(2, &[10, 11, 20, 21]);
+        r.register(1, &[10, 11, 12, 99]);
+        assert!(r.unregister(2, &[10, 11, 20, 21]));
+        let mut w = Writer::new();
+        let pool = r.trie.pool();
+        pool.save_state(&mut w);
+        r.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut rd = Reader::new(&bytes);
+        let (pool2, recorded) = SharedPool::load_state(&mut rd).unwrap();
+        let mut restored = PrefixRouter::load_state(&mut rd, pool2.clone()).unwrap();
+        assert!(rd.is_empty(), "round trip consumed every byte");
+        assert_eq!(pool2.reconcile_recorded(&recorded), 0, "refcounts re-derive");
+        assert_eq!(restored.capacity(), 2);
+        assert_eq!(restored.node_count(), r.node_count());
+        for ctx in [&[10u32, 11, 12][..], &[10, 11, 20, 21], &[10, 11, 12, 99], &[7]] {
+            assert_eq!(restored.route(ctx), r.route(ctx), "route for {ctx:?}");
+        }
+        // Third registration for shard 1: the restored FIFO must evict the
+        // same oldest prefix the live one does.
+        r.register(1, &[50, 51]);
+        restored.register(1, &[50, 51]);
+        assert_eq!(restored.route(&[10, 11, 12, 13]), r.route(&[10, 11, 12, 13]));
+        assert_eq!(restored.route(&[50, 51]), r.route(&[50, 51]));
+        assert_eq!(restored.node_count(), r.node_count());
+    }
 
     #[test]
     fn routes_to_deepest_match() {

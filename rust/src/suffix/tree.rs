@@ -87,6 +87,27 @@ impl SuffixTree {
         t
     }
 
+    /// Rebuild a tree from a previously stored raw text (sentinels
+    /// INCLUDED — [`SuffixTree::text`] of the saved tree) plus its sentinel
+    /// cursor. Ukkonen construction is deterministic in the text, so the
+    /// restored tree is structurally identical to the saved one — the
+    /// `das-store-v1` persistence path for this substrate serializes the
+    /// build input, not the node arena.
+    pub fn from_text(text: &[TokenId], next_sentinel: TokenId) -> Self {
+        let mut t = Self::new();
+        for &tok in text {
+            t.extend(tok);
+        }
+        t.next_sentinel = next_sentinel.max(SENTINEL_BASE);
+        t
+    }
+
+    /// The sentinel id the next [`SuffixTree::insert`] will consume
+    /// (persisted so restored trees keep allocating fresh sentinels).
+    pub fn sentinel_cursor(&self) -> TokenId {
+        self.next_sentinel
+    }
+
     /// Number of tokens stored (including sentinels).
     pub fn text_len(&self) -> usize {
         self.text.len()
@@ -239,7 +260,11 @@ impl SuffixTree {
     /// probe is O(suffix_len) so the total is O(max_len²) worst case, with
     /// max_len a small constant (the configured `match_len`, ≤ 64) — in
     /// practice cheaper than maintaining a matching-statistics automaton.
-    pub fn longest_suffix_match(&self, context: &[TokenId], max_len: usize) -> (usize, Option<usize>) {
+    pub fn longest_suffix_match(
+        &self,
+        context: &[TokenId],
+        max_len: usize,
+    ) -> (usize, Option<usize>) {
         let cap = context.len().min(max_len);
         for take in (1..=cap).rev() {
             let suffix = &context[context.len() - take..];
@@ -329,12 +354,14 @@ impl SuffixTree {
 
     /// Approximate heap footprint in bytes (for the Fig. 5 space comparison).
     pub fn approx_bytes(&self) -> usize {
+        // Length-based (not capacity) so the gauge is a pure function of
+        // content — clones and snapshot-restored trees report identically.
         self.text.len() * std::mem::size_of::<TokenId>()
             + self.nodes.len() * std::mem::size_of::<Node>()
             + self
                 .nodes
                 .iter()
-                .map(|n| n.children.capacity() * (std::mem::size_of::<(TokenId, usize)>() + 8))
+                .map(|n| n.children.len() * (std::mem::size_of::<(TokenId, usize)>() + 8))
                 .sum::<usize>()
     }
 }

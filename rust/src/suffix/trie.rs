@@ -31,6 +31,7 @@
 //!   one sorted branchless table scan at explicit nodes; deterministic
 //!   smallest-token tie-breaking either way.
 
+use crate::store::wire::{Reader, StoreError, Writer};
 use crate::suffix::core::{ArenaTrie, Counts, PoolStats, SharedPool};
 use crate::tokens::TokenId;
 
@@ -159,6 +160,42 @@ impl SuffixTrieIndex {
     /// separately since the pool may be shared).
     pub fn approx_bytes(&self) -> usize {
         self.trie.approx_bytes()
+    }
+
+    /// Handle to the segment pool backing this index's edge labels.
+    pub fn pool(&self) -> SharedPool {
+        self.trie.pool()
+    }
+
+    /// Serialize the index (counters + counting trie) as one
+    /// `das-store-v1` source blob; the pool is saved once by the owner.
+    pub fn save_state(&self, w: &mut Writer) {
+        w.str("trie-index");
+        w.usize(self.max_depth());
+        w.usize(self.tokens_indexed);
+        w.usize(self.rollouts);
+        self.trie.save_state(w);
+    }
+
+    /// Restore from [`SuffixTrieIndex::save_state`] into this instance
+    /// (constructed on the pool holding the snapshot's segments). A depth
+    /// cap that disagrees with the configured one is a
+    /// [`StoreError::Mismatch`].
+    pub fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        r.expect_str("trie-index", "source blob tag")?;
+        let max_depth = r.usize()?;
+        if max_depth != self.max_depth() {
+            return Err(StoreError::Mismatch(format!(
+                "snapshot depth cap {max_depth} != configured {}",
+                self.max_depth()
+            )));
+        }
+        let tokens_indexed = r.usize()?;
+        let rollouts = r.usize()?;
+        self.trie = ArenaTrie::load_state(r, self.trie.pool())?;
+        self.tokens_indexed = tokens_indexed;
+        self.rollouts = rollouts;
+        Ok(())
     }
 }
 

@@ -51,6 +51,7 @@
 
 use std::collections::VecDeque;
 
+use crate::store::wire::{Reader, StoreError, Writer};
 use crate::suffix::core::{ArenaTrie, CountStore, PoolStats, SharedPool, TriePos};
 use crate::tokens::{Epoch, TokenId};
 
@@ -117,7 +118,12 @@ impl WindowedIndex {
     /// Best draft across the window. Candidates are ranked by
     /// `match_len · age_discount^age` (ties → newer epoch), so a much longer
     /// match in an older epoch can still win, but recency is preferred.
-    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Option<WindowDraft> {
+    pub fn draft(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> Option<WindowDraft> {
         if budget == 0 {
             return None;
         }
@@ -160,6 +166,86 @@ impl WindowedIndex {
     /// that keeps the never-compacting `window_all` path's links exact.
     pub fn link_rebuilds(&self) -> u64 {
         self.fused.trie.link_rebuilds()
+    }
+
+    /// Handle to the segment pool backing this index's edge labels.
+    pub fn pool(&self) -> SharedPool {
+        self.fused.trie.pool()
+    }
+
+    /// Serialize the full index — window/ranking config, live-epoch
+    /// bookkeeping, and the fused epoch trie — as one `das-store-v1`
+    /// source blob (pool saved separately by the owner).
+    pub fn save_state(&self, w: &mut Writer) {
+        w.str("window");
+        w.usize(self.window);
+        w.f64(self.age_discount);
+        match self.fused.newest {
+            Some(e) => {
+                w.u8(1);
+                w.u32(e);
+            }
+            None => w.u8(0),
+        }
+        w.usize(self.fused.live.len());
+        for (&e, &t) in self.fused.live.iter().zip(self.fused.live_tokens.iter()) {
+            w.u32(e);
+            w.usize(t);
+        }
+        w.usize(self.fused.last_compact_nodes);
+        self.fused.trie.save_state(w);
+    }
+
+    /// Restore from [`WindowedIndex::save_state`] into this instance, whose
+    /// pool must already hold the snapshot's segments (the drafter loads
+    /// the pool section first and constructs shards on it). The window size
+    /// is part of the format — a snapshot taken under a different window is
+    /// a [`StoreError::Mismatch`], not a silent reinterpretation.
+    pub fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        r.expect_str("window", "source blob tag")?;
+        let window = r.usize()?;
+        if window != self.window {
+            return Err(StoreError::Mismatch(format!(
+                "snapshot window {window} != configured {}",
+                self.window
+            )));
+        }
+        let age_discount = r.f64()?;
+        let newest = match r.u8()? {
+            0 => None,
+            1 => Some(r.u32()?),
+            t => return Err(StoreError::Corrupt(format!("bad newest flag {t}"))),
+        };
+        let n_live = r.count(12)?;
+        let mut live = VecDeque::with_capacity(n_live);
+        let mut live_tokens = VecDeque::with_capacity(n_live);
+        let mut prev: Option<Epoch> = None;
+        for _ in 0..n_live {
+            let e = r.u32()?;
+            if prev.map(|p| p >= e).unwrap_or(false) {
+                return Err(StoreError::Corrupt("live epochs not ascending".into()));
+            }
+            prev = Some(e);
+            live.push_back(e);
+            live_tokens.push_back(r.usize()?);
+        }
+        let last_compact_nodes = r.usize()?.max(1);
+        let trie = ArenaTrie::load_state(r, self.fused.trie.pool())?;
+        if trie.store().window != window {
+            return Err(StoreError::Corrupt(
+                "epoch-store window disagrees with index window".into(),
+            ));
+        }
+        self.age_discount = age_discount;
+        self.fused = FusedEpochTrie {
+            trie,
+            window,
+            newest,
+            live,
+            live_tokens,
+            last_compact_nodes,
+        };
+        Ok(())
     }
 
     /// Test hook: run the dead-epoch compaction sweep immediately instead
@@ -372,15 +458,110 @@ impl CountStore for EpochStore {
 
     fn heap_bytes(&self) -> usize {
         match &self.rows {
-            Rows::Dense { slots, .. } => slots.capacity() * std::mem::size_of::<Slot>(),
+            Rows::Dense { slots, .. } => slots.len() * std::mem::size_of::<Slot>(),
             Rows::Sparse { rows } => {
-                rows.capacity() * std::mem::size_of::<Vec<(Epoch, u64)>>()
+                rows.len() * std::mem::size_of::<Vec<(Epoch, u64)>>()
                     + rows
                         .iter()
-                        .map(|r| r.capacity() * std::mem::size_of::<(Epoch, u64)>())
+                        .map(|r| r.len() * std::mem::size_of::<(Epoch, u64)>())
                         .sum::<usize>()
             }
         }
+    }
+
+    fn save_rows(&self, w: &mut Writer) {
+        w.str("epoch");
+        w.usize(self.window);
+        w.usize(self.n_nodes);
+        match &self.rows {
+            Rows::Dense { slots, cap } => {
+                w.u8(0);
+                w.usize(*cap);
+                for s in slots {
+                    w.u32(s.epoch);
+                    w.u64(s.count);
+                }
+            }
+            Rows::Sparse { rows } => {
+                w.u8(1);
+                for row in rows {
+                    w.usize(row.len());
+                    for &(e, c) in row {
+                        w.u32(e);
+                        w.u64(c);
+                    }
+                }
+            }
+        }
+    }
+
+    fn load_rows(r: &mut Reader<'_>, n_nodes: usize) -> Result<Self, StoreError> {
+        r.expect_str("epoch", "count-store tag")?;
+        let window = r.usize()?;
+        let n = r.usize()?;
+        if n != n_nodes {
+            return Err(StoreError::Corrupt(format!(
+                "epoch rows ({n}) != arena nodes ({n_nodes})"
+            )));
+        }
+        let rows = match r.u8()? {
+            0 => {
+                let cap = r.usize()?;
+                if window == 0 || cap != window {
+                    return Err(StoreError::Corrupt(format!(
+                        "dense epoch rows with cap {cap} under window {window}"
+                    )));
+                }
+                let total = n
+                    .checked_mul(cap)
+                    .ok_or_else(|| StoreError::Corrupt("epoch slot count overflow".into()))?;
+                if total.saturating_mul(12) > r.remaining() {
+                    return Err(StoreError::Truncated);
+                }
+                let mut slots = Vec::with_capacity(total);
+                for _ in 0..total {
+                    slots.push(Slot {
+                        epoch: r.u32()?,
+                        count: r.u64()?,
+                    });
+                }
+                Rows::Dense { slots, cap }
+            }
+            1 => {
+                if window != 0 {
+                    return Err(StoreError::Corrupt(format!(
+                        "sparse epoch rows under bounded window {window}"
+                    )));
+                }
+                let mut rows = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let len = r.count(12)?;
+                    let mut row = Vec::with_capacity(len);
+                    let mut prev: Option<Epoch> = None;
+                    for _ in 0..len {
+                        let e = r.u32()?;
+                        let c = r.u64()?;
+                        if prev.map(|p| p >= e).unwrap_or(false) {
+                            return Err(StoreError::Corrupt(
+                                "sparse epoch row not strictly ascending".into(),
+                            ));
+                        }
+                        prev = Some(e);
+                        row.push((e, c));
+                    }
+                    rows.push(row);
+                }
+                Rows::Sparse { rows }
+            }
+            t => {
+                return Err(StoreError::Corrupt(format!("unknown epoch row layout {t}")));
+            }
+        };
+        Ok(EpochStore {
+            rows,
+            window,
+            n_nodes: n,
+        })
     }
 }
 
@@ -1155,5 +1336,100 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// `das-store-v1` round trip of one windowed index (pool + source blob
+    /// into fresh instances).
+    fn roundtrip(w: &WindowedIndex) -> WindowedIndex {
+        use crate::store::wire::{Reader, Writer};
+        let mut out = Writer::new();
+        w.pool().save_state(&mut out);
+        w.save_state(&mut out);
+        let bytes = out.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let (pool, recorded) = SharedPool::load_state(&mut r).expect("pool loads");
+        let mut restored =
+            WindowedIndex::with_pool(w.window, w.fused.trie.max_depth(), pool.clone());
+        restored.load_state(&mut r).expect("index loads");
+        assert!(r.is_empty());
+        assert_eq!(pool.reconcile_recorded(&recorded), 0, "refcounts re-derive");
+        restored
+    }
+
+    #[test]
+    fn prop_snapshot_roundtrip_matches_live_index() {
+        // Dense (bounded window, incl. mid-stream compaction sweeps) AND
+        // sparse (window_all, incl. the threshold link rebuild counter)
+        // layouts: the restored index must draft bit-identically, report
+        // identical gauges, and stay identical under further epoch rolls
+        // and inserts.
+        prop::check(48, |g| {
+            let window = if g.bool() { 0 } else { 1 + g.usize_in(0, 4) };
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let mut w = WindowedIndex::new(window, 10);
+            let mut epoch = 0u32;
+            for _ in 0..g.usize_in(1, 6) {
+                if g.bool() {
+                    epoch += 1 + g.usize_in(0, 2) as u32;
+                    w.roll_epoch(epoch);
+                }
+                w.insert(epoch, &g.vec_u32_nonempty(alphabet, 30));
+                if window != 0 && g.usize_in(0, 5) == 0 {
+                    w.compact_now(); // mid-stream compaction in the record
+                }
+            }
+            let mut restored = roundtrip(&w);
+            prop::require_eq(restored.node_count(), w.node_count(), "nodes")?;
+            prop::require_eq(restored.token_positions(), w.token_positions(), "positions")?;
+            prop::require_eq(restored.approx_bytes(), w.approx_bytes(), "heap bytes")?;
+            prop::require_eq(restored.tokens_indexed(), w.tokens_indexed(), "tokens")?;
+            prop::require_eq(restored.bucket_count(), w.bucket_count(), "live epochs")?;
+            prop::require_eq(restored.newest_epoch(), w.newest_epoch(), "newest epoch")?;
+            prop::require_eq(restored.link_rebuilds(), w.link_rebuilds(), "link rebuilds")?;
+            for _ in 0..4 {
+                let ctx = g.vec_u32_nonempty(alphabet, 12);
+                let a = w.draft(&ctx, 6, 4);
+                let b = restored.draft(&ctx, 6, 4);
+                prop::require_eq(
+                    a.as_ref().map(|d| (&d.tokens, &d.confidence, d.match_len, d.epoch)),
+                    b.as_ref().map(|d| (&d.tokens, &d.confidence, d.match_len, d.epoch)),
+                    "draft",
+                )?;
+            }
+            // Further stream: rolls (evicting in the bounded case) and
+            // inserts land identically on both.
+            epoch += 1;
+            w.roll_epoch(epoch);
+            restored.roll_epoch(epoch);
+            let extra = g.vec_u32_nonempty(alphabet, 20);
+            w.insert(epoch, &extra);
+            restored.insert(epoch, &extra);
+            prop::require_eq(restored.node_count(), w.node_count(), "post-restore nodes")?;
+            let ctx = g.vec_u32_nonempty(alphabet, 8);
+            prop::require_eq(
+                w.draft(&ctx, 6, 4).map(|d| d.tokens),
+                restored.draft(&ctx, 6, 4).map(|d| d.tokens),
+                "post-restore draft",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn window_mismatch_rejected_on_load() {
+        use crate::store::wire::{Reader, StoreError, Writer};
+        let mut w = WindowedIndex::new(4, 10);
+        w.insert(0, &[1, 2, 3]);
+        let mut out = Writer::new();
+        w.pool().save_state(&mut out);
+        w.save_state(&mut out);
+        let bytes = out.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let (pool, _) = SharedPool::load_state(&mut r).unwrap();
+        let mut other = WindowedIndex::with_pool(8, 10, pool);
+        match other.load_state(&mut r) {
+            Err(StoreError::Mismatch(_)) => {}
+            other => panic!("expected Mismatch, got {other:?}"),
+        }
     }
 }

@@ -61,7 +61,12 @@ impl Command {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.args.push(ArgSpec {
             name,
             help,
