@@ -48,6 +48,13 @@ pub struct RolloutConfig {
     /// Hard cap on generated tokens per rollout.
     pub max_new_tokens: usize,
     pub temperature: f64,
+    /// Data-parallel rollout workers (the supervised pool in
+    /// `rollout/parallel.rs`). 1 = a single worker thread.
+    pub n_workers: usize,
+    /// Deterministic fault-injection plan (see `rollout/faults.rs` for the
+    /// directive syntax). Empty = no injection; non-empty plans drive the
+    /// chaos harness (`das train --fault-plan`) and chaos tests.
+    pub fault_plan: String,
 }
 
 /// Speculation settings — the paper's §4 knobs.
@@ -220,6 +227,8 @@ impl DasConfig {
         );
         read_field!(j, self, "rollout", "max_new_tokens", usize, self.rollout.max_new_tokens);
         read_field!(j, self, "rollout", "temperature", f64, self.rollout.temperature);
+        read_field!(j, self, "rollout", "n_workers", usize, self.rollout.n_workers);
+        read_field!(j, self, "rollout", "fault_plan", string, self.rollout.fault_plan);
 
         read_field!(j, self, "spec", "drafter", string, self.spec.drafter);
         read_field!(j, self, "spec", "scope", string, self.spec.scope);
@@ -291,6 +300,12 @@ impl DasConfig {
         }
         if self.rollout.temperature < 0.0 {
             return e("rollout.temperature must be >= 0".into());
+        }
+        if self.rollout.n_workers == 0 {
+            return e("rollout.n_workers must be >= 1".into());
+        }
+        if let Err(m) = crate::rollout::faults::FaultPlan::parse(&self.rollout.fault_plan) {
+            return e(format!("rollout.fault_plan invalid: {m}"));
         }
         if !matches!(self.spec.drafter.as_str(), "das" | "static" | "none") {
             return e(format!("spec.drafter must be das|static|none, got '{}'", self.spec.drafter));
@@ -366,6 +381,8 @@ impl DasConfig {
                     ),
                     ("max_new_tokens", Json::num(self.rollout.max_new_tokens as f64)),
                     ("temperature", Json::num(self.rollout.temperature)),
+                    ("n_workers", Json::num(self.rollout.n_workers as f64)),
+                    ("fault_plan", Json::str(&self.rollout.fault_plan)),
                 ]),
             ),
             (
@@ -489,6 +506,22 @@ mod tests {
         cfg.set("spec.substrate=array").unwrap();
         assert_eq!(cfg.spec.substrate, "array");
         assert!(cfg.set("spec.substrate=bogus").is_err());
+    }
+
+    #[test]
+    fn supervision_settings_parsed_and_validated() {
+        let cfg = DasConfig::from_json_text(
+            r#"{"rollout": {"n_workers": 8, "fault_plan": "panic worker=1 step=3"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.rollout.n_workers, 8);
+        assert_eq!(cfg.rollout.fault_plan, "panic worker=1 step=3");
+        let mut cfg = DasConfig::default();
+        assert!(cfg.rollout.fault_plan.is_empty(), "injection is opt-in");
+        cfg.set("rollout.fault_plan=store-fail epoch=2").unwrap();
+        assert_eq!(cfg.rollout.fault_plan, "store-fail epoch=2");
+        assert!(cfg.set("rollout.fault_plan=reboot now").is_err(), "plans are validated");
+        assert!(cfg.set("rollout.n_workers=0").is_err(), "zero workers rejected");
     }
 
     #[test]

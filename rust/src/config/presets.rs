@@ -28,6 +28,8 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 samples_per_problem: 8,
                 max_new_tokens: 2048,
                 temperature: 0.6,
+                n_workers: 4,
+                fault_plan: String::new(),
             },
             spec: SpecConfig {
                 drafter: "das".into(),
@@ -80,6 +82,8 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 samples_per_problem: 8,
                 max_new_tokens: 2048,
                 temperature: 0.6,
+                n_workers: 4,
+                fault_plan: String::new(),
             },
             spec: SpecConfig {
                 drafter: "das".into(),
@@ -130,6 +134,8 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 samples_per_problem: 4,
                 max_new_tokens: 48,
                 temperature: 0.8,
+                n_workers: 1,
+                fault_plan: String::new(),
             },
             spec: SpecConfig {
                 drafter: "das".into(),

@@ -389,6 +389,14 @@ pub trait Drafter: Send {
 
     /// Propose up to `budget` tokens continuing `context` for a request of
     /// the given problem.
+    ///
+    /// Fault contract: drafts are *advisory*. The rollout engine runs this
+    /// under `catch_unwind` and treats a panic as "no draft" — it degrades
+    /// the request to plain decoding (outputs unchanged at temperature 0,
+    /// `StepMetrics::degraded_requests` incremented) rather than letting a
+    /// drafter bug take down the worker. Implementations therefore never
+    /// need to pre-validate their index state defensively, but they also
+    /// must not rely on being called again for a degraded request.
     fn draft(
         &mut self,
         request: RequestId,

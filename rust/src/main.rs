@@ -55,6 +55,7 @@ fn print_usage() {
          subcommands:\n\
            figures    --fig <N>|--all [--full] [--out results] [--seed N]\n\
            train      [--config file.json] [--preset name] [--set k=v] [--steps N] [--out results]\n\
+                      [--fault-plan \"panic worker=1 step=2; ...\"] [--workers N]  (chaos harness)\n\
            serve      [--preset name] [--steps N] (rollout-only, trace workload)\n\
            calibrate  [--reps N] (requires `make artifacts`)\n\
            config     [--preset name | --config file.json]\n\
@@ -121,11 +122,21 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("set", "single key=value override", None)
         .opt("steps", "training steps (overrides config)", None)
         .opt("seed", "random seed", None)
-        .opt("out", "CSV output directory", Some("results"));
+        .opt("out", "CSV output directory", Some("results"))
+        .opt(
+            "fault-plan",
+            "inject deterministic faults and verify chaos equivalence (see rollout/faults.rs)",
+            None,
+        )
+        .opt("workers", "data-parallel rollout workers (chaos harness)", None);
     let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
     let mut cfg = load_config(&args)?;
     if let Some(steps) = args.get_usize("steps") {
         cfg.train.steps = steps;
+    }
+    if let Some(plan) = args.get("fault-plan") {
+        let workers = args.get_usize("workers").unwrap_or(cfg.rollout.n_workers);
+        return run_chaos_harness(cfg, plan, workers);
     }
     println!("resolved config: {}", cfg.to_json().to_string());
     let mut table = Table::new(
@@ -179,6 +190,150 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", "results"));
     let path = table.write_csv(&out)?;
     println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Chaos harness (`das train --fault-plan "..."`): run the SAME workload
+/// through an undisturbed control pool and a fault-injected chaos pool, and
+/// verify the supervision contract end to end — greedy outputs identical,
+/// no job lost or duplicated, every injected fault fired, every recovery
+/// visible in the gauges. Exits non-zero on any violation, so CI can gate
+/// on it.
+fn run_chaos_harness(mut cfg: DasConfig, plan: &str, workers: usize) -> Result<()> {
+    use das::rollout::{DataParallelRollout, FaultPlan, GenJob};
+    use das::workload::Workload;
+
+    // Validate the plan up front: an unparseable plan must fail the run,
+    // not silently degrade to "no faults injected".
+    let parsed = FaultPlan::parse(plan).map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?;
+    anyhow::ensure!(!parsed.is_empty(), "--fault-plan parsed to zero directives");
+    // Equivalence is a greedy (temperature 0) property: speculation, shard
+    // placement and recovery are all output-invariant only when decoding is
+    // deterministic.
+    if cfg.rollout.temperature != 0.0 {
+        println!(
+            "chaos: forcing temperature {} -> 0 (equivalence needs greedy decoding)",
+            cfg.rollout.temperature
+        );
+        cfg.rollout.temperature = 0.0;
+    }
+    let workers = workers.max(1);
+    let steps = cfg.train.steps.max(1);
+
+    let mut chaos_cfg = cfg.clone();
+    chaos_cfg.rollout.fault_plan = plan.to_string();
+    // store-fail directives need a live store to fail; give the chaos arm a
+    // scratch one when the config has none.
+    let scratch = if plan.contains("store-fail") && chaos_cfg.spec.store_dir.is_empty() {
+        let dir = std::env::temp_dir().join(format!("das-chaos-store-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        chaos_cfg.spec.store_dir = dir.to_string_lossy().into_owned();
+        println!("chaos: store-fail injected; scratch store at {}", dir.display());
+        Some(dir)
+    } else {
+        None
+    };
+    // The control arm never sees faults or the store: it is the pure
+    // in-memory reference the chaos arm must reproduce byte for byte.
+    let mut control_cfg = cfg.clone();
+    control_cfg.rollout.fault_plan = String::new();
+    control_cfg.spec.store_dir = String::new();
+
+    let workload = Workload::from_config(&cfg);
+    anyhow::ensure!(!workload.problems.is_empty(), "empty workload");
+    let per_step = cfg.train.problems_per_step.max(1).min(workload.problems.len());
+    let jobs_for = |step: usize| -> Vec<GenJob> {
+        (0..per_step)
+            .map(|i| {
+                let p = &workload.problems[(step * per_step + i) % workload.problems.len()];
+                GenJob {
+                    problem: p.id,
+                    prompt: p.prompt.clone(),
+                    samples: cfg.rollout.samples_per_problem.max(1),
+                }
+            })
+            .collect()
+    };
+    let sorted_keys = |rollouts: &[das::tokens::Rollout]| {
+        let mut k: Vec<_> = rollouts
+            .iter()
+            .map(|r| (r.problem, r.tokens.clone()))
+            .collect();
+        k.sort();
+        k
+    };
+
+    println!(
+        "chaos harness: {workers} workers, {steps} steps, plan \"{plan}\" \
+         ({} directives)",
+        parsed.len()
+    );
+    let control: Vec<_> = {
+        let mut dp = DataParallelRollout::new(&control_cfg, workers);
+        (0..steps)
+            .map(|step| {
+                dp.roll_epoch(step as u32);
+                let rep = dp.generate_step(&jobs_for(step), step as u32);
+                dp.policy_update(1.0);
+                sorted_keys(&rep.rollouts)
+            })
+            .collect()
+    };
+
+    let mut dp = DataParallelRollout::new(&chaos_cfg, workers);
+    let mut totals = das::rollout::StepMetrics::default();
+    let mut violations = 0usize;
+    for step in 0..steps {
+        dp.roll_epoch(step as u32);
+        let rep = dp.generate_step(&jobs_for(step), step as u32);
+        dp.policy_update(1.0);
+        let keys = sorted_keys(&rep.rollouts);
+        let expected: usize = jobs_for(step).iter().map(|j| j.samples).sum();
+        let ok = keys == control[step] && keys.len() == expected;
+        if !ok {
+            violations += 1;
+        }
+        totals.merge(&rep.supervision);
+        for m in &rep.per_worker {
+            totals.degraded_requests += m.degraded_requests;
+            totals.store_failures += m.store_failures;
+        }
+        println!(
+            "step {:>3}  {}  rollouts {:>4}  restarts {}  redispatched {}  steals {}  \
+             degraded {}  store-failures {}",
+            step,
+            if ok { "match" } else { "MISMATCH" },
+            keys.len(),
+            rep.supervision.worker_restarts,
+            rep.supervision.jobs_redispatched,
+            rep.supervision.deadline_steals,
+            rep.per_worker.iter().map(|m| m.degraded_requests).sum::<u64>(),
+            rep.per_worker.iter().map(|m| m.store_failures).sum::<u64>(),
+        );
+    }
+    let unfired = dp.fault_plan().unfired();
+    drop(dp);
+    if let Some(dir) = scratch {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    println!(
+        "chaos totals: restarts {}  redispatched {}  steals {}  degraded {}  store-failures {}",
+        totals.worker_restarts,
+        totals.jobs_redispatched,
+        totals.deadline_steals,
+        totals.degraded_requests,
+        totals.store_failures
+    );
+    anyhow::ensure!(
+        violations == 0,
+        "{violations} step(s) diverged from the fault-free control run"
+    );
+    anyhow::ensure!(
+        unfired.is_empty(),
+        "fault directives never fired (out-of-range worker/step/epoch?): {}",
+        unfired.join("; ")
+    );
+    println!("chaos equivalence OK: outputs identical, all {} faults fired", parsed.len());
     Ok(())
 }
 

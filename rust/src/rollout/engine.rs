@@ -22,11 +22,14 @@
 //! pure perf knob: at temperature 0 the committed tokens are bit-identical
 //! for EVERY substrate, speculating or not (tested below).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::batcher::Batcher;
+use super::faults::FaultPlan;
 use super::metrics::StepMetrics;
 use super::request::RolloutRequest;
 use crate::config::DasConfig;
@@ -34,7 +37,7 @@ use crate::drafter::Drafter;
 use crate::model::{StepInput, TargetModel};
 use crate::spec::budget::{solve as solve_budget, BudgetRequest};
 use crate::spec::{verify_greedy, verify_sampling, AcceptanceEstimator, LengthClass, LengthPolicy};
-use crate::store::{replay_wal, HistoryStore, StoreStatus, WalRecord};
+use crate::store::{replay_wal, HistoryStore, StoreError, StoreStatus, WalRecord};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 use crate::util::rng::Rng;
 
@@ -107,6 +110,18 @@ pub struct RolloutEngine {
     /// trainer re-announces the current epoch every step, and only the
     /// first announcement must touch the store.
     last_roll_persisted: Option<Epoch>,
+    /// Deterministic fault injection (shared with the supervising pool so
+    /// one-shot faults stay one-shot across worker respawns). Empty plan =
+    /// every seam is a constant-time miss.
+    faults: Arc<FaultPlan>,
+    /// Requests whose drafter errored mid-step: speculation is disabled for
+    /// the rest of the request (plain decoding — outputs unchanged at any
+    /// temperature, just slower). Entries retire with their request.
+    degraded: HashSet<RequestId>,
+    /// Store failures observed since the last step report (drained into
+    /// `StepMetrics::store_failures` once per step — failures in
+    /// `roll_epoch` happen outside any step and would otherwise be lost).
+    pending_store_failures: u64,
 }
 
 /// Steps between drafter index-gauge refreshes.
@@ -193,11 +208,27 @@ impl RolloutEngine {
             // of 2^32 must not truncate to a zero divisor.
             snapshot_every: (cfg.spec.snapshot_every.min(Epoch::MAX as usize) as Epoch).max(1),
             last_roll_persisted: None,
+            faults: Arc::new(FaultPlan::parse(&cfg.rollout.fault_plan).unwrap_or_else(|e| {
+                // Config validation rejects bad plans before they get here;
+                // a standalone engine built from a hand-rolled config just
+                // runs without injection.
+                eprintln!("das: invalid rollout.fault_plan ({e}); ignoring");
+                FaultPlan::default()
+            })),
+            degraded: HashSet::new(),
+            pending_store_failures: 0,
         }
     }
 
     pub fn set_temperature(&mut self, t: f64) {
         self.temperature = t;
+    }
+
+    /// Share a fault plan across engines: the supervising pool hands every
+    /// worker incarnation the same `Arc` so one-shot injections fire once
+    /// fleet-wide, not once per respawn.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = plan;
     }
 
     /// Advance the epoch (window maintenance in the drafter). With a store
@@ -209,7 +240,9 @@ impl RolloutEngine {
         self.drafter.roll_epoch(epoch);
         if self.store.is_some() && self.last_roll_persisted != Some(epoch) {
             self.last_roll_persisted = Some(epoch);
-            let result = if epoch % self.snapshot_every == 0 {
+            let result = if self.faults.store_fails(epoch) {
+                Err(StoreError::Io("injected write failure (fault plan)".into()))
+            } else if epoch % self.snapshot_every == 0 {
                 let payload = self.drafter.save_state();
                 self.store.as_mut().expect("checked").commit_snapshot(&payload)
             } else {
@@ -221,6 +254,7 @@ impl RolloutEngine {
             if let Err(e) = result {
                 eprintln!("das-store: persist failed ({e}); disabling persistence");
                 self.store = None;
+                self.pending_store_failures += 1;
             }
         }
     }
@@ -369,12 +403,30 @@ impl RolloutEngine {
                     // the guaranteed extra token).
                     let room = self.max_new_tokens.saturating_sub(req.gen_len() + 1);
                     let b = budget.min(room);
-                    let d = if b == 0 {
+                    let d = if b == 0 || self.degraded.contains(&req.id) {
                         Vec::new()
                     } else {
-                        self.drafter
-                            .draft(req.id, req.problem, req.context(), b)
-                            .tokens
+                        // Degradation ladder, rung 1: a panicking drafter
+                        // must not unwind out of the decode loop. The
+                        // request falls back to plain decoding (an empty
+                        // draft every round) — losslessness makes that a
+                        // pure slowdown, never an output change.
+                        let drafter = &mut self.drafter;
+                        let faults = &self.faults;
+                        let attempt = catch_unwind(AssertUnwindSafe(|| {
+                            if faults.should_poison_draft(step) {
+                                panic!("fault plan: poisoned draft at step {step}");
+                            }
+                            drafter.draft(req.id, req.problem, req.context(), b).tokens
+                        }));
+                        match attempt {
+                            Ok(tokens) => tokens,
+                            Err(_) => {
+                                self.degraded.insert(req.id);
+                                metrics.degraded_requests += 1;
+                                Vec::new()
+                            }
+                        }
                     };
                     drafts.push(d);
                 }
@@ -458,6 +510,9 @@ impl RolloutEngine {
             metrics.store_wal_bytes = st.wal_bytes;
             metrics.store_persist_s = st.last_persist_secs;
         }
+        // Surface store failures exactly once, including those from epoch
+        // rolls between steps.
+        metrics.store_failures = std::mem::take(&mut self.pending_store_failures);
         // All passes this engine saw belong to this step's rounds.
         debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
         StepReport {
@@ -476,6 +531,7 @@ impl RolloutEngine {
         accept_obs: &mut Vec<(ProblemId, u64, u64)>,
     ) {
         metrics.completed += 1;
+        self.degraded.remove(&req.id);
         self.drafter.end_request(req.id);
         self.length_policy.observe(req.problem, req.gen_len());
         // Both halves of the LPT cost key: final length above, speculation
@@ -500,9 +556,18 @@ impl RolloutEngine {
                 epoch: rollout.epoch,
                 tokens: rollout.tokens.clone(),
             };
-            if let Err(e) = store.append(&rec) {
+            // Degradation ladder, rung 2: mid-run IO errors (real or
+            // injected) disable persistence and count a failure; the run
+            // itself continues on the historical no-store behavior.
+            let result = if self.faults.store_fails(self.epoch) {
+                Err(StoreError::Io("injected write failure (fault plan)".into()))
+            } else {
+                store.append(&rec)
+            };
+            if let Err(e) = result {
                 eprintln!("das-store: WAL append failed ({e}); disabling persistence");
                 self.store = None;
+                self.pending_store_failures += 1;
             }
         }
         // Online drafter refresh: newly finished trajectories immediately
@@ -941,6 +1006,69 @@ mod tests {
             torn,
             "refused warm start leaves even damaged stores untouched"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn poisoned_drafter_degrades_to_plain_decoding() {
+        // Degradation ladder rung 1: a drafter panic at T=0 must not change
+        // a single output token — the poisoned request just stops
+        // speculating, and the recovery is visible in the gauge.
+        let c_ctrl = cfg(0.0, "das", "uniform");
+        let mut c_chaos = c_ctrl.clone();
+        c_chaos.rollout.fault_plan = "poison-draft step=1".into();
+        let mut m1 = sim(&c_ctrl);
+        let mut m2 = sim(&c_chaos);
+        let mut e1 = engine(&c_ctrl);
+        let mut e2 = engine(&c_chaos);
+        for step in 0..3 {
+            let r1 = e1.generate_step(&mut m1, &jobs(4, 2), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(4, 2), step);
+            assert_eq!(
+                sorted_rollouts(&r1),
+                sorted_rollouts(&r2),
+                "degraded outputs diverged at step {step}"
+            );
+            let expect = u64::from(step == 1);
+            assert_eq!(r2.metrics.degraded_requests, expect, "gauge at step {step}");
+            assert_eq!(r1.metrics.degraded_requests, 0, "control stays clean");
+        }
+    }
+
+    #[test]
+    fn injected_store_failure_disables_persistence_midrun() {
+        // Degradation ladder rung 2: a store that starts failing at epoch 2
+        // is dropped (counted once), and the run continues as if no store
+        // had been configured — same outputs, store gauges zeroed.
+        let dir = crate::store::test_dir("engine-store-fail");
+        let mut c = cfg(0.0, "das", "uniform");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        c.rollout.fault_plan = "store-fail epoch=2".into();
+        let mut c_ctrl = c.clone();
+        c_ctrl.spec.store_dir = String::new();
+        c_ctrl.rollout.fault_plan = String::new();
+        let mut m = sim(&c);
+        let mut m_ctrl = sim(&c_ctrl);
+        let mut e = engine(&c);
+        let mut e_ctrl = engine(&c_ctrl);
+        let mut failures = 0u64;
+        for step in 0..4u32 {
+            e.roll_epoch(step);
+            e_ctrl.roll_epoch(step);
+            let rep = e.generate_step(&mut m, &jobs(3, 2), step);
+            let ctrl = e_ctrl.generate_step(&mut m_ctrl, &jobs(3, 2), step);
+            assert_eq!(sorted_rollouts(&rep), sorted_rollouts(&ctrl), "step {step}");
+            failures += rep.metrics.store_failures;
+            if step < 2 {
+                assert!(e.store_status().is_some(), "store healthy before epoch 2");
+            } else {
+                assert!(e.store_status().is_none(), "sick store dropped at epoch 2");
+                assert_eq!(rep.metrics.store_wal_records, 0, "gauges read from no store");
+            }
+            m.policy_update(1.0);
+            m_ctrl.policy_update(1.0);
+        }
+        assert_eq!(failures, 1, "exactly one failure counted, at the disable point");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,280 @@
+//! Deterministic fault injection for the supervised rollout pool.
+//!
+//! A [`FaultPlan`] is a declarative list of failures consumed at fixed seams
+//! in the coordinator/worker/engine pipeline, so chaos runs are exactly
+//! reproducible: the same plan against the same config produces the same
+//! panics, delays and IO failures at the same steps, every run. The paper's
+//! losslessness guarantee (greedy outputs are independent of drafter and
+//! scheduling state) turns that reproducibility into an oracle — a chaos run
+//! must produce rollouts byte-identical to an uninterrupted control run.
+//!
+//! Plan syntax: semicolon-separated directives, each `kind key=value ...`:
+//!
+//! ```text
+//! panic worker=1 step=3          # worker 1 panics on its first chunk of step 3
+//! delay worker=0 step=2 ms=40    # worker 0 sleeps 40ms before that chunk
+//! store-fail epoch=2             # store writes fail from epoch 2 onward
+//! poison-draft step=5            # one drafter call panics at step 5
+//! ```
+//!
+//! `panic`, `delay` and `poison-draft` are one-shot: a per-entry atomic flag
+//! marks them fired, so a respawned worker sharing the plan (the pool hands
+//! every incarnation the same `Arc<FaultPlan>`) does not re-trigger the
+//! injection and panic-loop. `store-fail` is level-triggered — every store
+//! write at `epoch >= N` fails, modelling a persistently sick disk — but its
+//! flag is still set on first trigger so [`FaultPlan::unfired`] can audit
+//! whether a plan actually exercised every seam it named.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    /// Panic worker `worker` when it receives its first chunk of `step`.
+    PanicWorker { worker: usize, step: u32 },
+    /// Delay worker `worker`'s first chunk of `step` by `ms` milliseconds.
+    DelayWorker { worker: usize, step: u32, ms: u64 },
+    /// Fail every store write (WAL append / snapshot commit) from `epoch` on.
+    StoreFail { epoch: u32 },
+    /// Panic one drafter call at `step` (exercises the degradation ladder).
+    PoisonDraft { step: u32 },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Fault::PanicWorker { worker, step } => write!(f, "panic worker={worker} step={step}"),
+            Fault::DelayWorker { worker, step, ms } => {
+                write!(f, "delay worker={worker} step={step} ms={ms}")
+            }
+            Fault::StoreFail { epoch } => write!(f, "store-fail epoch={epoch}"),
+            Fault::PoisonDraft { step } => write!(f, "poison-draft step={step}"),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    fault: Fault,
+    fired: AtomicBool,
+}
+
+/// A parsed, shareable fault plan. See the module docs for syntax and
+/// firing semantics. An empty plan (the default) injects nothing and all
+/// query methods are cheap constant-time misses.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<Entry>,
+}
+
+fn take_key(
+    kv: &mut Vec<(String, u64)>,
+    key: &str,
+    directive: &str,
+) -> Result<u64, String> {
+    match kv.iter().position(|(k, _)| k == key) {
+        Some(i) => Ok(kv.remove(i).1),
+        None => Err(format!("fault directive '{directive}': missing '{key}='")),
+    }
+}
+
+impl FaultPlan {
+    /// Parse a plan string. The empty string (and any all-whitespace or
+    /// empty-directive remnants like trailing `;`) yields an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut entries = Vec::new();
+        for directive in spec.split(';') {
+            let directive = directive.trim();
+            if directive.is_empty() {
+                continue;
+            }
+            let mut words = directive.split_whitespace();
+            let kind = words.next().unwrap_or_default();
+            let mut kv: Vec<(String, u64)> = Vec::new();
+            for w in words {
+                let (k, v) = w.split_once('=').ok_or_else(|| {
+                    format!("fault directive '{directive}': expected key=value, got '{w}'")
+                })?;
+                let n: u64 = v.parse().map_err(|_| {
+                    format!("fault directive '{directive}': '{k}' must be a non-negative integer")
+                })?;
+                if kv.iter().any(|(seen, _)| seen == k) {
+                    return Err(format!("fault directive '{directive}': duplicate key '{k}'"));
+                }
+                kv.push((k.to_string(), n));
+            }
+            let step_u32 = |n: u64| {
+                u32::try_from(n)
+                    .map_err(|_| format!("fault directive '{directive}': value {n} out of range"))
+            };
+            let fault = match kind {
+                "panic" => Fault::PanicWorker {
+                    worker: take_key(&mut kv, "worker", directive)? as usize,
+                    step: step_u32(take_key(&mut kv, "step", directive)?)?,
+                },
+                "delay" => Fault::DelayWorker {
+                    worker: take_key(&mut kv, "worker", directive)? as usize,
+                    step: step_u32(take_key(&mut kv, "step", directive)?)?,
+                    ms: take_key(&mut kv, "ms", directive)?,
+                },
+                "store-fail" => Fault::StoreFail {
+                    epoch: step_u32(take_key(&mut kv, "epoch", directive)?)?,
+                },
+                "poison-draft" => Fault::PoisonDraft {
+                    step: step_u32(take_key(&mut kv, "step", directive)?)?,
+                },
+                other => {
+                    return Err(format!(
+                        "unknown fault kind '{other}' \
+                         (known: panic, delay, store-fail, poison-draft)"
+                    ))
+                }
+            };
+            if let Some((k, _)) = kv.first() {
+                return Err(format!("fault directive '{directive}': unknown key '{k}'"));
+            }
+            entries.push(Entry {
+                fault,
+                fired: AtomicBool::new(false),
+            });
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// One-shot: true exactly once for a matching `panic` directive.
+    pub fn should_panic(&self, worker: usize, step: u32) -> bool {
+        self.fire_first(|f| matches!(f, Fault::PanicWorker { worker: w, step: s } if *w == worker && *s == step))
+            .is_some()
+    }
+
+    /// One-shot: the delay for a matching `delay` directive, exactly once.
+    pub fn delay_ms(&self, worker: usize, step: u32) -> Option<u64> {
+        self.fire_first(|f| matches!(f, Fault::DelayWorker { worker: w, step: s, .. } if *w == worker && *s == step))
+            .map(|f| match f {
+                Fault::DelayWorker { ms, .. } => ms,
+                _ => 0,
+            })
+    }
+
+    /// Level-triggered: true for EVERY store write at `epoch >= N` once any
+    /// `store-fail` directive covers it (a sick disk stays sick).
+    pub fn store_fails(&self, epoch: u32) -> bool {
+        let mut hit = false;
+        for e in &self.entries {
+            if let Fault::StoreFail { epoch: from } = e.fault {
+                if epoch >= from {
+                    e.fired.store(true, Ordering::Relaxed);
+                    hit = true;
+                }
+            }
+        }
+        hit
+    }
+
+    /// One-shot: true exactly once for a matching `poison-draft` directive.
+    pub fn should_poison_draft(&self, step: u32) -> bool {
+        self.fire_first(|f| matches!(f, Fault::PoisonDraft { step: s } if *s == step))
+            .is_some()
+    }
+
+    /// Directives that never fired — a chaos harness treats a plan with
+    /// unfired entries as misconfigured (the seam it targeted never ran).
+    pub fn unfired(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|e| !e.fired.load(Ordering::Relaxed))
+            .map(|e| e.fault.to_string())
+            .collect()
+    }
+
+    /// Atomically consume the first unfired entry matching `pred`.
+    fn fire_first(&self, pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+        for e in &self.entries {
+            if pred(&e.fault) && !e.fired.swap(true, Ordering::Relaxed) {
+                return Some(e.fault);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_plans_parse_to_nothing() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn full_plan_parses() {
+        let p = FaultPlan::parse(
+            "panic worker=1 step=3; delay worker=0 step=2 ms=40; \
+             store-fail epoch=2; poison-draft step=5",
+        )
+        .unwrap();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.unfired().len(), 4);
+    }
+
+    #[test]
+    fn malformed_directives_are_rejected() {
+        assert!(FaultPlan::parse("panic worker=1").is_err(), "missing step");
+        assert!(FaultPlan::parse("panic worker=1 step=x").is_err(), "non-numeric");
+        assert!(FaultPlan::parse("panic worker=1 step=1 step=2").is_err(), "dup key");
+        assert!(FaultPlan::parse("panic worker=1 step=1 foo=2").is_err(), "unknown key");
+        assert!(FaultPlan::parse("reboot worker=1").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("delay worker=0 step=0").is_err(), "missing ms");
+    }
+
+    #[test]
+    fn one_shot_faults_fire_exactly_once() {
+        let p = FaultPlan::parse("panic worker=1 step=3; poison-draft step=5").unwrap();
+        assert!(!p.should_panic(0, 3), "wrong worker");
+        assert!(!p.should_panic(1, 2), "wrong step");
+        assert!(p.should_panic(1, 3), "first match fires");
+        assert!(!p.should_panic(1, 3), "consumed — a respawn must not re-panic");
+        assert!(p.should_poison_draft(5));
+        assert!(!p.should_poison_draft(5));
+        assert!(p.unfired().is_empty());
+    }
+
+    #[test]
+    fn delay_fires_once_with_its_duration() {
+        let p = FaultPlan::parse("delay worker=2 step=1 ms=40").unwrap();
+        assert_eq!(p.delay_ms(2, 0), None);
+        assert_eq!(p.delay_ms(2, 1), Some(40));
+        assert_eq!(p.delay_ms(2, 1), None, "consumed");
+    }
+
+    #[test]
+    fn store_fail_is_level_triggered_from_its_epoch() {
+        let p = FaultPlan::parse("store-fail epoch=2").unwrap();
+        assert!(!p.store_fails(0));
+        assert!(!p.store_fails(1));
+        assert_eq!(p.unfired().len(), 1, "not yet triggered");
+        assert!(p.store_fails(2));
+        assert!(p.store_fails(3), "stays failed — sick disks do not heal");
+        assert!(p.store_fails(2), "and keeps failing at the trigger epoch");
+        assert!(p.unfired().is_empty());
+    }
+
+    #[test]
+    fn unfired_reports_untouched_directives() {
+        let p = FaultPlan::parse("panic worker=7 step=9; delay worker=0 step=0 ms=1").unwrap();
+        assert_eq!(p.delay_ms(0, 0), Some(1));
+        let left = p.unfired();
+        assert_eq!(left, vec!["panic worker=7 step=9".to_string()]);
+    }
+}

@@ -54,6 +54,22 @@ pub struct StepMetrics {
     pub store_wal_bytes: u64,
     /// Wall seconds the last snapshot commit took (0 until one happens).
     pub store_persist_s: f64,
+
+    // --- fault-tolerance counters (supervised pool + degradation ladder) ---
+    // Every recovery the supervisor performs is visible here; an all-zero
+    // row means the step ran clean.
+    /// Worker threads respawned after a panic (coordinator-side).
+    pub worker_restarts: u64,
+    /// Jobs re-dispatched off a dead worker's in-flight chunk.
+    pub jobs_redispatched: u64,
+    /// Queued jobs moved from a straggler to an idle worker by the
+    /// deadline policy (work stealing).
+    pub deadline_steals: u64,
+    /// Requests whose drafter errored mid-step and fell back to plain
+    /// (non-speculative) decoding for the rest of the request.
+    pub degraded_requests: u64,
+    /// Store write failures that disabled persistence mid-run.
+    pub store_failures: u64,
 }
 
 impl StepMetrics {
@@ -120,6 +136,11 @@ impl StepMetrics {
         // merged view keeps the straggler (commits run inside epoch rolls,
         // so the slowest worker's commit is the one the learner waits on).
         self.store_persist_s = self.store_persist_s.max(other.store_persist_s);
+        self.worker_restarts += other.worker_restarts;
+        self.jobs_redispatched += other.jobs_redispatched;
+        self.deadline_steals += other.deadline_steals;
+        self.degraded_requests += other.degraded_requests;
+        self.store_failures += other.store_failures;
     }
 }
 
@@ -167,5 +188,31 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.rounds, 3);
         assert_eq!(a.eff_batch, vec![4, 3, 2]);
+    }
+
+    #[test]
+    fn merge_sums_fault_tolerance_counters() {
+        let mut a = StepMetrics {
+            worker_restarts: 1,
+            jobs_redispatched: 3,
+            deadline_steals: 2,
+            degraded_requests: 1,
+            store_failures: 0,
+            ..Default::default()
+        };
+        let b = StepMetrics {
+            worker_restarts: 2,
+            jobs_redispatched: 1,
+            deadline_steals: 0,
+            degraded_requests: 4,
+            store_failures: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.worker_restarts, 3);
+        assert_eq!(a.jobs_redispatched, 4);
+        assert_eq!(a.deadline_steals, 2);
+        assert_eq!(a.degraded_requests, 5);
+        assert_eq!(a.store_failures, 1);
     }
 }

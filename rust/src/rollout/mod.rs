@@ -3,11 +3,13 @@
 pub mod batcher;
 pub mod parallel;
 pub mod engine;
+pub mod faults;
 pub mod metrics;
 pub mod request;
 
 pub use batcher::Batcher;
 pub use parallel::{DataParallelRollout, ParallelStepReport};
 pub use engine::{BudgetPolicy, GenJob, RolloutEngine, StepReport};
+pub use faults::FaultPlan;
 pub use metrics::StepMetrics;
 pub use request::{RequestState, RolloutRequest};

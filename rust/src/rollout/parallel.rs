@@ -5,11 +5,9 @@
 //! an OS thread holding a policy replica plus its own [`RolloutEngine`]
 //! (drafter state is worker-local, exactly like per-actor suffix trees in
 //! the paper's deployment). Threads and channels are created ONCE in
-//! [`DataParallelRollout::new`]; every `generate_step` just enqueues a shard
-//! per worker and collects reports, so per-step coordination cost is two
-//! channel hops instead of `n` thread spawns/joins. Epoch rolls and policy
-//! updates ride the same command queues, which keeps them ordered with
-//! respect to steps without any locking.
+//! [`DataParallelRollout::new`]; epoch rolls and policy updates ride the
+//! same command queues as work, which keeps them ordered with respect to
+//! steps without any locking.
 //!
 //! The step's *makespan* is the slowest worker's generation time, which is
 //! precisely where the long-tail problem bites at the cluster level: one
@@ -23,36 +21,135 @@
 //! finishes in far fewer target forwards than its raw length suggests, and
 //! weighting it by length alone would over-pack it. DAS shrinks per-worker
 //! tails, so it compresses the cross-worker makespan too (test below).
+//!
+//! # Supervision
+//!
+//! The coordinator is a *supervisor*, not a fan-out barrier. Each worker's
+//! shard is split into **chunks** (≈ one full decode batch each) that are
+//! dispatched one at a time; only the single in-flight chunk per worker is
+//! committed to an engine, everything else sits in coordinator-side queues
+//! where it can still be moved:
+//!
+//! - **Panic isolation + respawn.** Worker loops run every command under
+//!   `catch_unwind`; a panic exits the thread, the channels disconnect, and
+//!   the coordinator — which never `expect`s on a channel — respawns the
+//!   slot. The replacement replays the recorded learner-gain log into a
+//!   fresh policy replica (bit-identical to the survivors', since
+//!   `policy_update` consumes the replica RNG deterministically),
+//!   re-announces the current epoch, and warm-starts its drafter from the
+//!   per-worker store when one is configured. The dead worker's unreported
+//!   in-flight chunk is re-dispatched exactly once; reports it delivered
+//!   before dying are kept (mpsc drains buffered messages before
+//!   disconnecting), so no job is lost or duplicated.
+//! - **Deadline work-stealing.** The coordinator learns a wall-seconds-per-
+//!   predicted-cost rate from completed chunks; a worker whose in-flight
+//!   chunk exceeds a generous multiple of its predicted cost is treated as
+//!   a straggler and its *queued* chunks migrate to idle workers. At
+//!   temperature 0 a spurious steal is harmless — outputs are sharding-
+//!   invariant — so the deadline can be aggressive without a correctness
+//!   risk.
+//! - **Deterministic chaos.** A [`FaultPlan`] (config `rollout.fault_plan`)
+//!   is shared by every worker incarnation, so injected panics/delays fire
+//!   exactly once at fixed seams and chaos runs are reproducible. Every
+//!   recovery is visible in [`ParallelStepReport::supervision`].
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
 
 use super::engine::{GenJob, RolloutEngine, StepReport};
+use super::faults::FaultPlan;
 use super::metrics::StepMetrics;
 use crate::config::DasConfig;
 use crate::model::sim::{SimModel, SimModelConfig};
 use crate::spec::LengthPolicy;
+use crate::store::{checksum, Reader, StoreError, Writer};
 use crate::tokens::{Epoch, Rollout};
 
+/// Wall-clock floor below which a busy worker is never called a straggler
+/// (sub-floor chunks finish faster than stealing could help).
+const STEAL_DEADLINE_FLOOR: Duration = Duration::from_millis(50);
+/// Deadline = floor + this multiple of the chunk's rate-predicted wall time.
+const STEAL_DEADLINE_MULT: f64 = 4.0;
+/// Coordinator poll cadence when a sweep made no progress.
+const SWEEP_SLEEP: Duration = Duration::from_micros(100);
+/// Drop grace before detaching a worker that will not finish (never block
+/// teardown forever on a wedged thread).
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(1);
+/// Backstop against respawn storms inside one step: a slot that cannot even
+/// reach its command loop this many times is a programming error (e.g. an
+/// engine that panics in its constructor), not a runtime fault to absorb.
+const RESPAWN_LIMIT_PER_STEP: u64 = 8;
+
 pub struct DataParallelRollout {
-    workers: Vec<WorkerHandle>,
+    /// The pool's own config (workers are spawned/respawned from it).
+    cfg: DasConfig,
+    /// Shared across every worker incarnation: one-shot faults stay
+    /// one-shot through respawns.
+    faults: Arc<FaultPlan>,
+    workers: Vec<WorkerSlot>,
     /// Coordinator-side length statistics feeding the LPT sharder (fed by
     /// every finished rollout; the same survival-statistics predictor the
-    /// engines use for speculation budgets).
+    /// engines use for speculation budgets). Persisted to
+    /// `<store_dir>/coordinator.das` so a resumed pool does not re-learn
+    /// its job costs.
     predictor: LengthPolicy,
+    /// Ordered learner gains since pool start — the respawn catch-up tape.
+    gain_log: Vec<f64>,
+    /// Last epoch announced via [`roll_epoch`](Self::roll_epoch);
+    /// re-announced to respawned workers.
+    current_epoch: Option<Epoch>,
+    /// Monotone chunk sequence numbers (delivery-tracking keys).
+    next_seq: u64,
+    /// EMA of wall seconds per unit of predicted chunk cost, learned from
+    /// completed chunks; drives the straggler deadline.
+    rate_ema: Option<f64>,
+    /// Supervision counters accumulated since the last step report.
+    restarts: u64,
+    redispatched: u64,
+    steals: u64,
+    last_saved_epoch: Option<Epoch>,
 }
 
 enum Command {
-    Step { jobs: Vec<GenJob>, step: u32 },
+    Chunk { jobs: Vec<GenJob>, step: u32, seq: u64 },
     RollEpoch(Epoch),
     PolicyUpdate(f64),
     Shutdown,
 }
 
-struct WorkerHandle {
+/// A worker's answer to one [`Command::Chunk`], echoing its sequence number
+/// so the coordinator can retire exactly that delivery.
+struct WorkerReport {
+    seq: u64,
+    report: StepReport,
+}
+
+struct WorkerSlot {
     cmd_tx: Sender<Command>,
-    report_rx: Receiver<StepReport>,
+    report_rx: Receiver<WorkerReport>,
     thread: Option<JoinHandle<()>>,
+    /// Incarnation counter (respawns bump it; thread names carry it).
+    generation: u32,
+}
+
+/// A coordinator-side unit of dispatch: enough jobs to fill roughly one
+/// decode batch. Queued chunks are still the coordinator's to move (steal,
+/// re-dispatch); only in-flight chunks are committed to a worker.
+struct ChunkTask {
+    seq: u64,
+    jobs: Vec<GenJob>,
+    /// Sum of the jobs' predicted costs (deadline + load accounting).
+    cost: f64,
+}
+
+struct InFlight {
+    chunk: ChunkTask,
+    sent: Instant,
 }
 
 /// Merged outcome of one data-parallel step.
@@ -64,21 +161,23 @@ pub struct ParallelStepReport {
     /// Sum of worker generation times (device-seconds; utilization proxy).
     pub total_device_time: f64,
     pub per_worker: Vec<StepMetrics>,
+    /// Coordinator-side recovery counters for this step: worker restarts,
+    /// jobs re-dispatched off dead workers, deadline steals. (Engine-side
+    /// recoveries — degraded requests, store failures — arrive through
+    /// `per_worker`.)
+    pub supervision: StepMetrics,
 }
 
 /// Longest-processing-time-first assignment: jobs (by predicted cost) are
 /// placed heaviest-first onto the currently least-loaded worker. Returns a
 /// worker index per job. Deterministic: cost ties keep submission order,
-/// load ties pick the lowest worker index.
+/// load ties pick the lowest worker index. NaN-safe: `total_cmp` keeps the
+/// sort a total order and non-finite costs fall back to a unit load, so one
+/// poisoned prediction cannot scramble the schedule.
 fn lpt_assignment(costs: &[f64], n_workers: usize) -> Vec<usize> {
     let n = n_workers.max(1);
     let mut order: Vec<usize> = (0..costs.len()).collect();
-    order.sort_by(|&a, &b| {
-        costs[b]
-            .partial_cmp(&costs[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]).then(a.cmp(&b)));
     let mut assignment = vec![0usize; costs.len()];
     let mut load = vec![0.0f64; n];
     for job in order {
@@ -89,68 +188,207 @@ fn lpt_assignment(costs: &[f64], n_workers: usize) -> Vec<usize> {
             }
         }
         assignment[job] = best;
-        // Floor at 1 so zero-cost predictions still spread across workers.
-        load[best] += costs[job].max(1.0);
+        // Floor at 1 so zero-cost (or non-finite) predictions still spread
+        // across workers instead of piling onto one.
+        let c = costs[job];
+        load[best] += if c.is_finite() { c.max(1.0) } else { 1.0 };
     }
     assignment
 }
 
+/// Magic for the coordinator's persisted predictor state.
+const COORD_MAGIC: &str = "das-coord-v1";
+
+fn coordinator_state_path(dir: &Path) -> std::path::PathBuf {
+    dir.join("coordinator.das")
+}
+
+fn save_coordinator_state(dir: &Path, predictor: &LengthPolicy) -> Result<(), StoreError> {
+    std::fs::create_dir_all(dir)?;
+    let mut body = Writer::new();
+    predictor.save_state(&mut body);
+    let mut w = Writer::new();
+    w.str(COORD_MAGIC);
+    w.u64(checksum(body.as_bytes()));
+    w.usize(body.len());
+    let mut bytes = w.into_bytes();
+    bytes.extend_from_slice(body.as_bytes());
+    // Write-then-rename: a crash mid-save leaves the previous state intact.
+    let tmp = dir.join("coordinator.das.tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, coordinator_state_path(dir))?;
+    Ok(())
+}
+
+fn load_coordinator_state(dir: &Path) -> Result<Option<LengthPolicy>, StoreError> {
+    let path = coordinator_state_path(dir);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let bytes = std::fs::read(&path)?;
+    let mut r = Reader::new(&bytes);
+    r.expect_str(COORD_MAGIC, "coordinator state magic")?;
+    let sum = r.u64()?;
+    let len = r.usize()?;
+    let body = r.bytes(len)?;
+    if checksum(body) != sum {
+        return Err(StoreError::Corrupt(
+            "coordinator state checksum mismatch".into(),
+        ));
+    }
+    let mut br = Reader::new(body);
+    Ok(Some(LengthPolicy::load_state(&mut br)?))
+}
+
+/// Spawn one worker incarnation. `gains` + `epoch` are the catch-up tape: a
+/// respawn replays the learner updates its predecessor had applied (the sim
+/// replica consumes its RNG deterministically, so the replayed replica is
+/// bit-identical to the survivors') and re-announces the current epoch; the
+/// engine warm-starts from the per-worker store when one is configured.
+fn spawn_worker(
+    cfg: &DasConfig,
+    w: usize,
+    generation: u32,
+    faults: &Arc<FaultPlan>,
+    gains: &[f64],
+    epoch: Option<Epoch>,
+) -> WorkerSlot {
+    let mut wcfg = cfg.clone();
+    // Worker-local engine seed: shifts request RNG forks, not the policy
+    // (the sim replica keeps the shared seed).
+    wcfg.seed = cfg.seed ^ ((w as u64 + 1) << 32);
+    // Worker-local history store: drafters are worker-local, so each
+    // persists (and warm-starts) under its own subdirectory — resuming
+    // with the same worker count restores every replica's history.
+    if !wcfg.spec.store_dir.is_empty() {
+        wcfg.spec.store_dir = format!("{}/worker{w}", wcfg.spec.store_dir);
+    }
+    // The pool owns the plan: every incarnation gets the SAME shared plan
+    // (one-shot faults must not re-fire after a respawn), so keep the
+    // engine from parsing a private copy out of the config.
+    wcfg.rollout.fault_plan = String::new();
+    let model_cfg = SimModelConfig::from_das(cfg);
+    let faults = Arc::clone(faults);
+    let gains: Vec<f64> = gains.to_vec();
+    let (cmd_tx, cmd_rx) = channel::<Command>();
+    let (report_tx, report_rx) = channel::<WorkerReport>();
+    let thread = thread::Builder::new()
+        .name(format!("dp-worker-{w}.{generation}"))
+        .spawn(move || {
+            let mut model = SimModel::new(model_cfg);
+            for &g in &gains {
+                model.policy_update(g);
+            }
+            let mut engine = RolloutEngine::new(&wcfg, crate::drafter::from_config(&wcfg));
+            engine.set_fault_plan(Arc::clone(&faults));
+            if let Some(e) = epoch {
+                engine.roll_epoch(e);
+            }
+            worker_loop(&mut model, &mut engine, w, &faults, &cmd_rx, &report_tx);
+            // Close the store BEFORE the captured channels drop (locals
+            // drop first, but make the ordering contract explicit): once
+            // the coordinator observes the disconnect, the worker's store
+            // directory is safe to reopen.
+            drop(engine);
+        })
+        .expect("spawn rollout worker thread");
+    WorkerSlot {
+        cmd_tx,
+        report_rx,
+        thread: Some(thread),
+        generation,
+    }
+}
+
+/// The worker's command loop. Every command body runs under `catch_unwind`:
+/// a panic (injected or real) breaks the loop instead of unwinding into the
+/// runtime, which disconnects the channels — the coordinator's death
+/// signal. Shutdown and send-failure (coordinator gone) also break.
+fn worker_loop(
+    model: &mut SimModel,
+    engine: &mut RolloutEngine,
+    w: usize,
+    faults: &FaultPlan,
+    cmd_rx: &Receiver<Command>,
+    report_tx: &Sender<WorkerReport>,
+) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        let outcome = catch_unwind(AssertUnwindSafe(|| match cmd {
+            Command::Chunk { jobs, step, seq } => {
+                if let Some(ms) = faults.delay_ms(w, step) {
+                    thread::sleep(Duration::from_millis(ms));
+                }
+                if faults.should_panic(w, step) {
+                    panic!("fault plan: panic worker {w} at step {step}");
+                }
+                let report = engine.generate_step(model, &jobs, step);
+                report_tx.send(WorkerReport { seq, report }).is_ok()
+            }
+            Command::RollEpoch(e) => {
+                engine.roll_epoch(e);
+                true
+            }
+            Command::PolicyUpdate(gain) => {
+                model.policy_update(gain);
+                true
+            }
+            Command::Shutdown => false,
+        }));
+        match outcome {
+            Ok(true) => {}
+            Ok(false) | Err(_) => break,
+        }
+    }
+}
+
 impl DataParallelRollout {
     /// Build `n_workers` replicas ONCE: each worker thread owns its policy
-    /// replica and engine for the lifetime of the pool. Policy replicas
-    /// share the seed (data parallelism: same weights everywhere); engines
-    /// get distinct request id spaces via the config seed offset so RNG
-    /// streams never collide.
+    /// replica and engine for the lifetime of the pool (respawns replace
+    /// single slots, never the pool). Policy replicas share the seed (data
+    /// parallelism: same weights everywhere); engines get distinct request
+    /// id spaces via the config seed offset so RNG streams never collide.
     pub fn new(cfg: &DasConfig, n_workers: usize) -> Self {
+        let faults = Arc::new(FaultPlan::parse(&cfg.rollout.fault_plan).unwrap_or_else(|e| {
+            eprintln!("das: invalid rollout.fault_plan ({e}); ignoring");
+            FaultPlan::default()
+        }));
         let workers = (0..n_workers.max(1))
-            .map(|w| {
-                let mut wcfg = cfg.clone();
-                // Worker-local engine seed: shifts request RNG forks, not
-                // the policy (the sim replica keeps the shared seed).
-                wcfg.seed = cfg.seed ^ ((w as u64 + 1) << 32);
-                // Worker-local history store: drafters are worker-local, so
-                // each persists (and warm-starts) under its own
-                // subdirectory — resuming with the same worker count
-                // restores every replica's history.
-                if !wcfg.spec.store_dir.is_empty() {
-                    wcfg.spec.store_dir = format!("{}/worker{w}", wcfg.spec.store_dir);
-                }
-                let model_cfg = SimModelConfig::from_das(cfg);
-                let (cmd_tx, cmd_rx) = channel::<Command>();
-                let (report_tx, report_rx) = channel::<StepReport>();
-                let thread = thread::Builder::new()
-                    .name(format!("dp-worker-{w}"))
-                    .spawn(move || {
-                        let mut model = SimModel::new(model_cfg);
-                        let mut engine =
-                            RolloutEngine::new(&wcfg, crate::drafter::from_config(&wcfg));
-                        while let Ok(cmd) = cmd_rx.recv() {
-                            match cmd {
-                                Command::Step { jobs, step } => {
-                                    let report = engine.generate_step(&mut model, &jobs, step);
-                                    if report_tx.send(report).is_err() {
-                                        break;
-                                    }
-                                }
-                                Command::RollEpoch(e) => engine.roll_epoch(e),
-                                Command::PolicyUpdate(gain) => model.policy_update(gain),
-                                Command::Shutdown => break,
-                            }
-                        }
-                    })
-                    .expect("spawn rollout worker thread");
-                WorkerHandle {
-                    cmd_tx,
-                    report_rx,
-                    thread: Some(thread),
-                }
-            })
+            .map(|w| spawn_worker(cfg, w, 0, &faults, &[], None))
             .collect();
+        // Same thresholds as the worker engines, so the coordinator's LPT
+        // keys classify lengths exactly like the engines do. With a store
+        // configured, resume the persisted predictor instead of re-learning
+        // job costs from scratch.
+        let mut predictor = LengthPolicy::from_das(cfg);
+        if !cfg.spec.store_dir.is_empty() {
+            match load_coordinator_state(Path::new(&cfg.spec.store_dir)) {
+                Ok(Some(p)) if p.t_short == predictor.t_short && p.t_long == predictor.t_long => {
+                    predictor = p;
+                }
+                Ok(Some(_)) => eprintln!(
+                    "das-store: coordinator state was saved under different length \
+                     thresholds; starting the LPT predictor cold"
+                ),
+                Ok(None) => {}
+                Err(e) => eprintln!(
+                    "das-store: coordinator state unreadable ({e}); starting the LPT \
+                     predictor cold"
+                ),
+            }
+        }
         DataParallelRollout {
+            cfg: cfg.clone(),
+            faults,
             workers,
-            // Same thresholds as the worker engines, so the coordinator's
-            // LPT keys classify lengths exactly like the engines do.
-            predictor: LengthPolicy::from_das(cfg),
+            predictor,
+            gain_log: Vec::new(),
+            current_epoch: None,
+            next_seq: 0,
+            rate_ema: None,
+            restarts: 0,
+            redispatched: 0,
+            steals: 0,
+            last_saved_epoch: None,
         }
     }
 
@@ -158,89 +396,349 @@ impl DataParallelRollout {
         self.workers.len()
     }
 
+    /// The shared fault plan (chaos harnesses audit it for unfired
+    /// directives after a run).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Respawn slot `w` after its thread died. The dead thread's store is
+    /// already closed: the worker body drops its engine BEFORE its channel
+    /// ends disconnect, so observing the disconnect guarantees the
+    /// replacement can safely reopen the worker's store directory.
+    fn restart_worker(&mut self, w: usize) {
+        self.restarts += 1;
+        let generation = self.workers[w].generation + 1;
+        // The old thread already exited (its channels disconnected), so
+        // replacing the slot just drops a finished JoinHandle.
+        self.workers[w] = spawn_worker(
+            &self.cfg,
+            w,
+            generation,
+            &self.faults,
+            &self.gain_log,
+            self.current_epoch,
+        );
+    }
+
     /// Advance every replica's epoch (window maintenance). Enqueued on the
-    /// command channels, so it is ordered with respect to steps.
+    /// command channels, so it is ordered with respect to steps. A worker
+    /// found dead here is respawned; the replacement re-announces this
+    /// epoch itself (it is part of the spawn catch-up tape).
     pub fn roll_epoch(&mut self, epoch: u32) {
-        for w in &self.workers {
-            w.cmd_tx
+        self.current_epoch = Some(epoch);
+        for w in 0..self.workers.len() {
+            if self.workers[w]
+                .cmd_tx
                 .send(Command::RollEpoch(epoch))
-                .expect("worker alive");
+                .is_err()
+            {
+                self.restart_worker(w);
+            }
+        }
+        // Epoch boundaries are the predictor's durability points (cheap:
+        // a few KB per save).
+        if self.last_saved_epoch != Some(epoch) {
+            self.last_saved_epoch = Some(epoch);
+            self.save_predictor();
         }
     }
 
     /// Apply the learner update to every policy replica (data parallelism:
     /// identical weights — the sim replicas share seed, so drift stays
-    /// bit-identical across workers).
+    /// bit-identical across workers). Recorded to the gain log FIRST, so a
+    /// worker respawned at any later point replays the exact sequence.
     pub fn policy_update(&mut self, gain: f64) {
-        for w in &self.workers {
-            w.cmd_tx
+        self.gain_log.push(gain);
+        for w in 0..self.workers.len() {
+            if self.workers[w]
+                .cmd_tx
                 .send(Command::PolicyUpdate(gain))
-                .expect("worker alive");
+                .is_err()
+            {
+                // The replacement replays the full gain log (including this
+                // gain) into a fresh replica — applied exactly once.
+                self.restart_worker(w);
+            }
         }
     }
 
-    /// Shard `jobs` longest-predicted-first and run all workers
-    /// concurrently on the persistent pool.
+    fn save_predictor(&mut self) {
+        if self.cfg.spec.store_dir.is_empty() {
+            return;
+        }
+        if let Err(e) = save_coordinator_state(Path::new(&self.cfg.spec.store_dir), &self.predictor)
+        {
+            eprintln!("das-store: coordinator state save failed ({e}); continuing");
+        }
+    }
+
+    /// Shard `jobs` longest-predicted-first into per-worker chunk queues
+    /// and supervise the pool until every chunk is delivered exactly once:
+    /// deaths respawn the slot and re-dispatch the unreported chunk,
+    /// stragglers lose their queued chunks to idle workers.
     pub fn generate_step(&mut self, jobs: &[GenJob], step: u32) -> ParallelStepReport {
         let n = self.workers.len();
         let costs: Vec<f64> = jobs
             .iter()
-            .map(|j| self.predictor.job_cost(j.problem, j.samples))
+            .map(|j| {
+                // Sanitize before scheduling: a NaN/∞ cost key must not
+                // poison deadlines or load accounting downstream.
+                let c = self.predictor.job_cost(j.problem, j.samples);
+                if c.is_finite() {
+                    c.max(0.0)
+                } else {
+                    1.0
+                }
+            })
             .collect();
         let assignment = lpt_assignment(&costs, n);
-        let mut shards: Vec<Vec<GenJob>> = vec![Vec::new(); n];
-        for (job, &w) in jobs.iter().zip(&assignment) {
-            shards[w].push(job.clone());
+        // Chunk each worker's shard: ≈ one decode batch per chunk, so the
+        // queue keeps work the coordinator can still move. Sequence numbers
+        // are assigned here, in deterministic shard order — observations
+        // are later folded into the predictor in seq order, which keeps
+        // predictor evolution independent of which worker finished first.
+        let max_batch = self.cfg.rollout.max_batch.max(1);
+        let mut queues: Vec<VecDeque<ChunkTask>> = (0..n).map(|_| VecDeque::new()).collect();
+        for (w, queue) in queues.iter_mut().enumerate() {
+            let mut chunk_jobs: Vec<GenJob> = Vec::new();
+            let mut chunk_cost = 0.0;
+            let mut samples = 0usize;
+            for (i, job) in jobs.iter().enumerate() {
+                if assignment[i] != w {
+                    continue;
+                }
+                samples += job.samples.max(1);
+                chunk_cost += costs[i];
+                chunk_jobs.push(job.clone());
+                if samples >= max_batch {
+                    queue.push_back(ChunkTask {
+                        seq: self.next_seq,
+                        jobs: std::mem::take(&mut chunk_jobs),
+                        cost: chunk_cost,
+                    });
+                    self.next_seq += 1;
+                    chunk_cost = 0.0;
+                    samples = 0;
+                }
+            }
+            if !chunk_jobs.is_empty() {
+                queue.push_back(ChunkTask {
+                    seq: self.next_seq,
+                    jobs: chunk_jobs,
+                    cost: chunk_cost,
+                });
+                self.next_seq += 1;
+            }
         }
-        for (worker, shard) in self.workers.iter().zip(shards) {
-            worker
-                .cmd_tx
-                .send(Command::Step { jobs: shard, step })
-                .expect("worker alive");
+
+        let mut inflight: Vec<Option<InFlight>> = (0..n).map(|_| None).collect();
+        let mut completed: Vec<(u64, StepReport, usize)> = Vec::new();
+        let restarts_at_entry = self.restarts;
+
+        loop {
+            let mut progressed = false;
+            for w in 0..n {
+                // Dispatch: commit the head of the queue to an idle worker.
+                while inflight[w].is_none() {
+                    let Some(chunk) = queues[w].pop_front() else { break };
+                    let cmd = Command::Chunk {
+                        jobs: chunk.jobs.clone(),
+                        step,
+                        seq: chunk.seq,
+                    };
+                    if self.workers[w].cmd_tx.send(cmd).is_ok() {
+                        inflight[w] = Some(InFlight {
+                            chunk,
+                            sent: Instant::now(),
+                        });
+                        progressed = true;
+                    } else {
+                        // Died between steps: nothing was committed to it.
+                        queues[w].push_front(chunk);
+                        self.check_respawn_storm(restarts_at_entry);
+                        self.restart_worker(w);
+                        progressed = true;
+                    }
+                }
+                if inflight[w].is_none() {
+                    continue;
+                }
+                match self.workers[w].report_rx.try_recv() {
+                    Ok(WorkerReport { seq, report }) => {
+                        if let Some(inf) = inflight[w].take() {
+                            debug_assert_eq!(inf.chunk.seq, seq, "reports retire in order");
+                            // Learn the wall-per-cost rate for deadlines.
+                            let wall = inf.sent.elapsed().as_secs_f64();
+                            let rate = wall / inf.chunk.cost.max(1.0);
+                            self.rate_ema = Some(match self.rate_ema {
+                                Some(ema) => 0.7 * ema + 0.3 * rate,
+                                None => rate,
+                            });
+                            completed.push((seq, report, w));
+                        }
+                        progressed = true;
+                    }
+                    Err(TryRecvError::Empty) => {
+                        if self.steal_from_straggler(w, &mut queues, &inflight) {
+                            progressed = true;
+                        }
+                    }
+                    Err(TryRecvError::Disconnected) => {
+                        // Death. Buffered reports were drained by the Ok arm
+                        // (mpsc yields queued messages before Disconnected),
+                        // so whatever is still in flight was never reported:
+                        // re-dispatch it exactly once, onto the least-loaded
+                        // live queue.
+                        let inf = inflight[w].take();
+                        self.check_respawn_storm(restarts_at_entry);
+                        self.restart_worker(w);
+                        if let Some(inf) = inf {
+                            self.redispatched += inf.chunk.jobs.len() as u64;
+                            let target = least_loaded_queue(&queues, &inflight);
+                            queues[target].push_front(inf.chunk);
+                        }
+                        progressed = true;
+                    }
+                }
+            }
+            if inflight.iter().all(Option::is_none) && queues.iter().all(VecDeque::is_empty) {
+                break;
+            }
+            if !progressed {
+                thread::sleep(SWEEP_SLEEP);
+            }
         }
-        let reports: Vec<StepReport> = self
-            .workers
-            .iter()
-            .map(|w| w.report_rx.recv().expect("worker panicked"))
-            .collect();
-        let makespan = reports
-            .iter()
-            .map(|r| r.metrics.gen_time)
-            .fold(0.0_f64, f64::max);
-        let total_device_time: f64 = reports.iter().map(|r| r.metrics.gen_time).sum();
+
+        // Retire in chunk-creation order: merged metrics, rollouts and
+        // predictor updates are then independent of completion order, so
+        // respawns/steals never change what the next step's LPT keys see.
+        completed.sort_by_key(|&(seq, _, _)| seq);
+        let mut per_worker: Vec<StepMetrics> = (0..n).map(|_| StepMetrics::default()).collect();
         let mut rollouts = Vec::new();
-        let mut per_worker = Vec::new();
-        for r in reports {
-            for roll in &r.rollouts {
-                // Feed the LPT predictor with every observed final length.
+        for (_, report, w) in completed {
+            for roll in &report.rollouts {
+                // Feed the LPT predictor with every observed final length…
                 self.predictor.observe(roll.problem, roll.tokens.len());
             }
             // …and with every request's speculation outcome, so the cost
             // key discounts problems that speculate well.
-            for &(problem, rounds, accepted) in &r.accept_obs {
+            for &(problem, rounds, accepted) in &report.accept_obs {
                 self.predictor.observe_acceptance(problem, rounds, accepted);
             }
-            rollouts.extend(r.rollouts);
-            per_worker.push(r.metrics);
+            per_worker[w].merge(&report.metrics);
+            rollouts.extend(report.rollouts);
         }
+        let makespan = per_worker
+            .iter()
+            .map(|m| m.gen_time)
+            .fold(0.0_f64, f64::max);
+        let total_device_time: f64 = per_worker.iter().map(|m| m.gen_time).sum();
+        let supervision = StepMetrics {
+            worker_restarts: std::mem::take(&mut self.restarts),
+            jobs_redispatched: std::mem::take(&mut self.redispatched),
+            deadline_steals: std::mem::take(&mut self.steals),
+            ..Default::default()
+        };
         ParallelStepReport {
             rollouts,
             makespan,
             total_device_time,
             per_worker,
+            supervision,
         }
     }
+
+    /// Deadline policy: when busy worker `w` has exceeded the predicted
+    /// wall time of its in-flight chunk by a wide margin, move its queued
+    /// chunks to fully idle workers. Only queued work moves — the in-flight
+    /// chunk is already committed — so at temperature 0 the outputs cannot
+    /// change, only the makespan. Returns true if anything moved.
+    fn steal_from_straggler(
+        &mut self,
+        w: usize,
+        queues: &mut [VecDeque<ChunkTask>],
+        inflight: &[Option<InFlight>],
+    ) -> bool {
+        if queues[w].is_empty() {
+            return false;
+        }
+        let (Some(rate), Some(inf)) = (self.rate_ema, inflight[w].as_ref()) else {
+            return false;
+        };
+        let predicted = (rate * inf.chunk.cost.max(1.0) * STEAL_DEADLINE_MULT).clamp(0.0, 3600.0);
+        let deadline = STEAL_DEADLINE_FLOOR + Duration::from_secs_f64(predicted);
+        if inf.sent.elapsed() <= deadline {
+            return false;
+        }
+        let mut moved = false;
+        for t in 0..queues.len() {
+            if t == w || inflight[t].is_some() || !queues[t].is_empty() {
+                continue;
+            }
+            // Steal from the tail: the head stays next in line on the
+            // straggler itself if it ever wakes.
+            let Some(chunk) = queues[w].pop_back() else { break };
+            self.steals += chunk.jobs.len() as u64;
+            queues[t].push_back(chunk);
+            moved = true;
+            if queues[w].is_empty() {
+                break;
+            }
+        }
+        moved
+    }
+
+    fn check_respawn_storm(&self, restarts_at_entry: u64) {
+        assert!(
+            self.restarts - restarts_at_entry < RESPAWN_LIMIT_PER_STEP,
+            "rollout worker respawn storm: {} deaths within one step — the worker \
+             cannot reach its command loop (constructor bug?), refusing to livelock",
+            self.restarts - restarts_at_entry
+        );
+    }
+}
+
+/// Pick the queue with the least remaining predicted work (queued cost plus
+/// the committed in-flight chunk); ties go to the lowest index.
+fn least_loaded_queue(queues: &[VecDeque<ChunkTask>], inflight: &[Option<InFlight>]) -> usize {
+    let mut best = 0usize;
+    let mut best_load = f64::INFINITY;
+    for (w, queue) in queues.iter().enumerate() {
+        let mut load: f64 = queue.iter().map(|c| c.cost.max(1.0)).sum();
+        if let Some(inf) = &inflight[w] {
+            load += inf.chunk.cost.max(1.0);
+        }
+        if load < best_load {
+            best_load = load;
+            best = w;
+        }
+    }
+    best
 }
 
 impl Drop for DataParallelRollout {
     fn drop(&mut self) {
+        // Final predictor durability point (covers observations since the
+        // last epoch roll).
+        self.save_predictor();
         for w in &self.workers {
             let _ = w.cmd_tx.send(Command::Shutdown);
         }
+        // Join within a grace window, then detach: a worker that died
+        // mid-step joins immediately; a wedged one must not hang teardown.
+        // No-fault pools are idle here, so joins are immediate and every
+        // store flush has landed before Drop returns.
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
         for w in &mut self.workers {
-            if let Some(t) = w.thread.take() {
+            let Some(t) = w.thread.take() else { continue };
+            while !t.is_finished() && Instant::now() < deadline {
+                thread::sleep(Duration::from_millis(1));
+            }
+            if t.is_finished() {
                 let _ = t.join();
             }
+            // else: handle dropped → thread detached.
         }
     }
 }
@@ -271,6 +769,15 @@ mod tests {
                 samples: 2,
             })
             .collect()
+    }
+
+    fn sorted_keys(rollouts: &[Rollout]) -> Vec<(u32, Vec<u32>)> {
+        let mut k: Vec<_> = rollouts
+            .iter()
+            .map(|r| (r.problem, r.tokens.clone()))
+            .collect();
+        k.sort();
+        k
     }
 
     #[test]
@@ -463,5 +970,142 @@ mod tests {
         }
         assert_eq!(per_worker.iter().max(), Some(&3));
         assert_eq!(per_worker.iter().min(), Some(&2));
+    }
+
+    #[test]
+    fn lpt_sanitizes_non_finite_costs() {
+        // A poisoned predictor (NaN/∞ cost keys) must neither panic the
+        // sort nor pile every job onto one worker: non-finite costs count
+        // as unit load, so the spread matches the equal-cost case.
+        let costs = vec![f64::NAN; 10];
+        let assign = lpt_assignment(&costs, 4);
+        let mut per_worker = [0usize; 4];
+        for &w in &assign {
+            per_worker[w] += 1;
+        }
+        assert_eq!(per_worker.iter().max(), Some(&3));
+        assert_eq!(per_worker.iter().min(), Some(&2));
+        // Mixed finite/non-finite stays a total order (no panic) and every
+        // job gets exactly one worker.
+        let mixed = [f64::INFINITY, 1.0, f64::NAN, 2.0, f64::NEG_INFINITY];
+        let assign = lpt_assignment(&mixed, 2);
+        assert_eq!(assign.len(), 5);
+        assert!(assign.iter().all(|&w| w < 2));
+    }
+
+    #[test]
+    fn chaos_panics_preserve_greedy_outputs_and_lose_no_jobs() {
+        // The chaos-equivalence oracle: kill a different worker at every
+        // step boundary and the merged greedy rollouts must stay identical
+        // to an undisturbed control pool — no lost jobs, no duplicates —
+        // with every recovery visible in the supervision gauges.
+        let control = {
+            let mut dp = DataParallelRollout::new(&cfg("das"), 3);
+            let mut out = Vec::new();
+            for step in 0..4 {
+                dp.roll_epoch(step);
+                let rep = dp.generate_step(&jobs(12), step);
+                out.push(sorted_keys(&rep.rollouts));
+                dp.policy_update(1.0);
+            }
+            out
+        };
+        let mut c = cfg("das");
+        c.rollout.fault_plan =
+            "panic worker=0 step=1; panic worker=1 step=2; panic worker=2 step=3".into();
+        let mut dp = DataParallelRollout::new(&c, 3);
+        let mut restarts = 0u64;
+        let mut redispatched = 0u64;
+        for step in 0..4 {
+            dp.roll_epoch(step);
+            let rep = dp.generate_step(&jobs(12), step);
+            assert_eq!(rep.rollouts.len(), 24, "no lost or duplicated jobs, step {step}");
+            assert_eq!(
+                sorted_keys(&rep.rollouts),
+                control[step as usize],
+                "chaos run must match control at step {step}"
+            );
+            restarts += rep.supervision.worker_restarts;
+            redispatched += rep.supervision.jobs_redispatched;
+            dp.policy_update(1.0);
+        }
+        assert_eq!(restarts, 3, "one respawn per injected panic");
+        assert!(
+            redispatched >= 3,
+            "each panic strands an in-flight chunk to re-dispatch: {redispatched}"
+        );
+        assert!(dp.fault_plan().unfired().is_empty(), "all faults fired");
+    }
+
+    #[test]
+    fn deadline_policy_steals_queued_jobs_from_a_straggler() {
+        // One worker sleeps through its first chunk; the deadline policy
+        // must move its queued chunks to the idle peer without changing the
+        // greedy outputs.
+        let control = {
+            let mut dp = DataParallelRollout::new(&cfg("none"), 2);
+            sorted_keys(&dp.generate_step(&jobs(8), 0).rollouts)
+        };
+        let mut c = cfg("none");
+        c.rollout.fault_plan = "delay worker=0 step=0 ms=400".into();
+        let mut dp = DataParallelRollout::new(&c, 2);
+        let rep = dp.generate_step(&jobs(8), 0);
+        assert_eq!(sorted_keys(&rep.rollouts), control, "steals never change outputs");
+        assert!(
+            rep.supervision.deadline_steals > 0,
+            "straggler's queued jobs must migrate: {:?}",
+            rep.supervision
+        );
+        assert_eq!(rep.supervision.worker_restarts, 0, "a slow worker is not dead");
+    }
+
+    #[test]
+    fn dropping_pool_with_panicked_worker_returns_promptly() {
+        // Teardown must not block forever on a dead (or wedged) worker:
+        // Drop joins within the grace window and detaches otherwise.
+        let mut c = cfg("none");
+        c.rollout.fault_plan = "panic worker=1 step=0".into();
+        let mut dp = DataParallelRollout::new(&c, 2);
+        let rep = dp.generate_step(&jobs(6), 0);
+        assert_eq!(rep.rollouts.len(), 12);
+        assert_eq!(rep.supervision.worker_restarts, 1);
+        let t = Instant::now();
+        drop(dp);
+        assert!(
+            t.elapsed() < SHUTDOWN_GRACE + Duration::from_secs(1),
+            "drop must return within the shutdown grace window"
+        );
+    }
+
+    #[test]
+    fn coordinator_predictor_state_survives_restart() {
+        // The coordinator's LPT predictor persists to
+        // <store_dir>/coordinator.das: a rebuilt pool must score every
+        // problem exactly like the pool that was dropped.
+        let dir = crate::store::test_dir("dp-coord-state");
+        let mut c = cfg("das");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        c.spec.snapshot_every = 1;
+        let before: Vec<f64> = {
+            let mut dp = DataParallelRollout::new(&c, 2);
+            for step in 0..3 {
+                dp.roll_epoch(step);
+                dp.generate_step(&jobs(12), step);
+            }
+            (0..12).map(|p| dp.predictor.job_cost(p, 2)).collect()
+        }; // Drop saves the final predictor state
+        assert!(
+            dir.join("coordinator.das").exists(),
+            "coordinator state file written"
+        );
+        let dp = DataParallelRollout::new(&c, 2);
+        for (p, want) in before.iter().enumerate() {
+            let got = dp.predictor.job_cost(p as u32, 2);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "problem {p}: restored cost {got} != saved cost {want}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

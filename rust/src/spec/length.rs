@@ -14,6 +14,7 @@
 
 use std::collections::HashMap;
 
+use crate::store::{Reader, StoreError, Writer};
 use crate::tokens::ProblemId;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -287,6 +288,76 @@ impl LengthPolicy {
         };
         (mean_final - partial_len as f64).max(1.0)
     }
+
+    /// Serialize the full predictor state (thresholds + length history +
+    /// decayed acceptance aggregates) into a wire section. Hash maps are
+    /// emitted sorted by problem id so identical states produce identical
+    /// bytes — the coordinator checksums this section.
+    pub fn save_state(&self, w: &mut Writer) {
+        w.str("length-policy");
+        w.usize(self.t_short);
+        w.usize(self.t_long);
+        let mut pids: Vec<ProblemId> = self.history.keys().copied().collect();
+        pids.sort_unstable();
+        w.usize(pids.len());
+        for p in pids {
+            w.u32(p);
+            let h = &self.history[&p];
+            w.usize(h.len());
+            for &l in h {
+                w.usize(l);
+            }
+        }
+        w.usize(self.global.len());
+        for &l in &self.global {
+            w.usize(l);
+        }
+        let mut aids: Vec<ProblemId> = self.accept_hist.keys().copied().collect();
+        aids.sort_unstable();
+        w.usize(aids.len());
+        for p in aids {
+            let (rounds, accepted) = self.accept_hist[&p];
+            w.u32(p);
+            w.f64(rounds);
+            w.f64(accepted);
+        }
+    }
+
+    /// Inverse of [`save_state`](Self::save_state). Caps and decay are code
+    /// constants (not persisted); restored series are re-capped so a state
+    /// saved by a build with larger caps still loads bounded.
+    pub fn load_state(r: &mut Reader) -> Result<LengthPolicy, StoreError> {
+        r.expect_str("length-policy", "length policy section")?;
+        let t_short = r.usize()?;
+        let t_long = r.usize()?;
+        let mut policy = LengthPolicy::new(t_short, t_long);
+        let n_problems = r.count(12)?;
+        for _ in 0..n_problems {
+            let p = r.u32()?;
+            let n_lens = r.count(8)?;
+            let mut lens = Vec::with_capacity(n_lens);
+            for _ in 0..n_lens {
+                lens.push(r.usize()?);
+            }
+            let skip = lens.len().saturating_sub(policy.per_problem_cap);
+            policy.history.insert(p, lens.split_off(skip));
+        }
+        let n_global = r.count(8)?;
+        let mut global = Vec::with_capacity(n_global);
+        for _ in 0..n_global {
+            global.push(r.usize()?);
+        }
+        let skip = global.len().saturating_sub(policy.global_cap);
+        policy.global = global.split_off(skip);
+        let n_accept = r.count(20)?;
+        for _ in 0..n_accept {
+            let p = r.u32()?;
+            let rounds = r.f64()?;
+            let accepted = r.f64()?;
+            policy.accept_hist.insert(p, (rounds, accepted));
+        }
+        Ok(policy)
+    }
 }
 
 #[cfg(test)]
@@ -446,6 +517,53 @@ mod tests {
         // Zero-round observations are ignored.
         p.observe_acceptance(8, 0, 0);
         assert_eq!(p.accepted_per_round(8), 0.0);
+    }
+
+    #[test]
+    fn state_roundtrips_with_identical_job_costs() {
+        let mut p = policy();
+        for i in 0..12u32 {
+            for k in 0..(5 + i as usize) {
+                p.observe(i, 30 + 60 * k);
+            }
+            p.observe_acceptance(i, 10 + i as u64, 2 * i as u64);
+        }
+        let mut w = Writer::new();
+        p.save_state(&mut w);
+        let bytes = w.into_bytes();
+        // Deterministic bytes: saving the same state twice is bit-identical.
+        let mut w2 = Writer::new();
+        p.save_state(&mut w2);
+        assert_eq!(bytes, w2.into_bytes());
+        let q = LengthPolicy::load_state(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(q.t_short, p.t_short);
+        assert_eq!(q.t_long, p.t_long);
+        for i in 0..12u32 {
+            assert_eq!(q.observations(i), p.observations(i));
+            for samples in [1, 2, 8] {
+                let (a, b) = (p.job_cost(i, samples), q.job_cost(i, samples));
+                assert!((a - b).abs() < 1e-12, "job_cost({i},{samples}): {a} vs {b}");
+            }
+            assert!((p.accepted_per_round(i) - q.accepted_per_round(i)).abs() < 1e-12);
+        }
+        // Unseen problems agree too (global pool restored).
+        assert!((p.job_cost(999, 2) - q.job_cost(999, 2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncated_state_is_an_error_not_a_panic() {
+        let mut p = policy();
+        p.observe(1, 50);
+        p.observe_acceptance(1, 4, 8);
+        let mut w = Writer::new();
+        p.save_state(&mut w);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                LengthPolicy::load_state(&mut Reader::new(&bytes[..cut])).is_err(),
+                "cut at {cut}"
+            );
+        }
     }
 
     #[test]

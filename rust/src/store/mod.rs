@@ -74,6 +74,21 @@
 //! 4. `das store inspect|verify|compact` operate on a store directory
 //!    offline: print its shape, prove the snapshot+WAL replay to a
 //!    consistent index, or fold the WAL into a fresh snapshot.
+//!
+//! # Mid-run failure semantics
+//!
+//! Persistence is an *accelerator*, never a liveness dependency: when an
+//! append or snapshot commit fails mid-run (disk full, permissions yanked,
+//! an injected `store-fail` fault), the rollout engine logs it, counts it
+//! in `StepMetrics::store_failures`, **drops the store and decodes on** —
+//! the run continues without persistence rather than crashing or blocking.
+//! The on-disk state stays a valid prefix (the failed record was never
+//! acknowledged), so the next warm start simply resumes from slightly
+//! older history. The DP coordinator keeps its own small sidecar in the
+//! same directory (`coordinator.das`, written by atomic rename) holding
+//! the LPT predictor's length/acceptance statistics; it follows the same
+//! rule — unreadable or stale state means a cold predictor, never a
+//! failed run.
 
 pub mod wire;
 

@@ -122,7 +122,7 @@ impl Bencher {
                 break;
             }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_samples(&mut samples);
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let median = samples[samples.len() / 2];
         let p99 = samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)];
@@ -234,6 +234,13 @@ pub fn json_sink(default_name: &str) -> Option<PathBuf> {
     }
 }
 
+/// NaN-safe ascending sort for timing samples: `total_cmp` imposes the IEEE
+/// total order, so a non-finite sample lands at an end of the slice instead
+/// of panicking the harness mid-benchmark.
+fn sort_samples(samples: &mut [f64]) {
+    samples.sort_by(|a, b| a.total_cmp(b));
+}
+
 pub fn format_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.1} ns")
@@ -312,6 +319,17 @@ mod tests {
         assert_eq!(gauges[0].get("value").unwrap().as_f64(), Some(1234.0));
         // Serialized text parses back.
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn sample_sort_tolerates_non_finite_values() {
+        // Regression: sort_by(partial_cmp().unwrap()) panicked on NaN.
+        let mut s = [f64::NAN, 1.0, f64::NEG_INFINITY, 0.5];
+        sort_samples(&mut s);
+        assert_eq!(s[0], f64::NEG_INFINITY);
+        assert_eq!(s[1], 0.5);
+        assert_eq!(s[2], 1.0);
+        assert!(s[3].is_nan());
     }
 
     #[test]

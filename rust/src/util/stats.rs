@@ -28,7 +28,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN in the series must not panic the figure harness —
+    // it sorts to the end instead (IEEE total order).
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (q / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -155,6 +157,16 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
         assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: sort_by(partial_cmp().unwrap()) panicked here. NaN now
+        // sorts to the top of the order, so finite percentiles stay sane.
+        let xs = [f64::NAN, 2.0, 1.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.0).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]
