@@ -103,6 +103,12 @@ pub struct SpecConfig {
     /// covers mutations in between, so recovery replays at most this many
     /// epochs of records). Must be >= 1.
     pub snapshot_every: usize,
+    /// Reader threads for the snapshot draft path inside one engine step.
+    /// 0 = auto (available parallelism, capped at 8), 1 = serial drafting
+    /// against the live structures (the historical behavior), N > 1 = that
+    /// many workers drafting against a published snapshot while the writer
+    /// absorbs finished rollouts concurrently.
+    pub draft_threads: usize,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -244,6 +250,7 @@ impl DasConfig {
         read_field!(j, self, "spec", "match_len", usize, self.spec.match_len);
         read_field!(j, self, "spec", "store_dir", string, self.spec.store_dir);
         read_field!(j, self, "spec", "snapshot_every", usize, self.spec.snapshot_every);
+        read_field!(j, self, "spec", "draft_threads", usize, self.spec.draft_threads);
 
         read_field!(j, self, "train", "steps", usize, self.train.steps);
         read_field!(j, self, "train", "problems_per_step", usize, self.train.problems_per_step);
@@ -402,6 +409,7 @@ impl DasConfig {
                     ("match_len", Json::num(self.spec.match_len as f64)),
                     ("store_dir", Json::str(&self.spec.store_dir)),
                     ("snapshot_every", Json::num(self.spec.snapshot_every as f64)),
+                    ("draft_threads", Json::num(self.spec.draft_threads as f64)),
                 ]),
             ),
             (
@@ -506,6 +514,16 @@ mod tests {
         cfg.set("spec.substrate=array").unwrap();
         assert_eq!(cfg.spec.substrate, "array");
         assert!(cfg.set("spec.substrate=bogus").is_err());
+    }
+
+    #[test]
+    fn draft_threads_parsed_with_auto_default() {
+        let mut cfg = DasConfig::default();
+        assert_eq!(cfg.spec.draft_threads, 0, "auto is the default");
+        cfg.set("spec.draft_threads=4").unwrap();
+        assert_eq!(cfg.spec.draft_threads, 4);
+        let cfg = DasConfig::from_json_text(r#"{"spec": {"draft_threads": 1}}"#).unwrap();
+        assert_eq!(cfg.spec.draft_threads, 1);
     }
 
     #[test]

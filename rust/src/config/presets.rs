@@ -46,6 +46,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 match_len: 8,
                 store_dir: String::new(),
                 snapshot_every: 4,
+                draft_threads: 0,
             },
             train: TrainConfig {
                 steps: 30,
@@ -100,6 +101,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 match_len: 6,
                 store_dir: String::new(),
                 snapshot_every: 4,
+                draft_threads: 0,
             },
             train: TrainConfig {
                 steps: 30,
@@ -152,6 +154,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 match_len: 4,
                 store_dir: String::new(),
                 snapshot_every: 2,
+                draft_threads: 0,
             },
             train: TrainConfig {
                 steps: 40,

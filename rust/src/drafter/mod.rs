@@ -15,6 +15,17 @@
 //! * [`Drafter`] — the request/problem *routing* policy above the sources:
 //!   which shard to query, request-local state, scope rules.
 //!
+//! Concurrency: each substrate also *publishes* an immutable
+//! [`DraftSnapshot`] ([`DraftSource::snapshot`]) — a lock-free read view
+//! drafting threads can query while the owning writer keeps absorbing
+//! rollouts. [`DraftSnapshot::draft_from`] is bit-identical to the
+//! substrate's own `draft_from` at the publish point; a snapshot never
+//! changes after publication (staleness, not tearing, is the only
+//! divergence mode). Trie-backed substrates publish cheap chunk-shared
+//! views; the tree/array baselines publish whole-structure clones (they
+//! pay O(n) per absorb anyway, so the clone does not change their
+//! complexity class).
+//!
 //! Drafters:
 //! * [`SuffixDrafter`] — the paper's adaptive nonparametric drafter:
 //!   per-problem (or global) sliding-window shards, optionally combined
@@ -29,10 +40,16 @@ mod static_ngram;
 mod suffix_drafter;
 
 pub use static_ngram::StaticNgramDrafter;
+use suffix_drafter::SuffixDrafterSnapshot;
 pub use suffix_drafter::{HistoryScope, SuffixDrafter};
 
+use std::sync::Arc;
+
 use crate::store::wire::{Reader, StoreError, Writer};
-use crate::suffix::{SharedPool, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, WindowedIndex};
+use crate::suffix::{
+    SharedPool, SuffixArrayIndex, SuffixTree, SuffixTrieIndex, SuffixTrieSnapshot, WindowSnapshot,
+    WindowedIndex,
+};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
 /// Size gauges of one retrieval index (and, summed by the drafter, of the
@@ -63,6 +80,10 @@ pub struct IndexStats {
     /// never-compacting tries — `window_all`, the plain counting trie —
     /// on exact links). 0 for substrates without suffix links.
     pub link_rebuilds: u64,
+    /// Distinct snapshots this index has published ([`DraftSource::snapshot`]
+    /// cache misses — repeated publishes between mutations are coalesced and
+    /// not counted). 0 for substrates that publish by whole-structure clone.
+    pub snapshot_publishes: u64,
 }
 
 impl IndexStats {
@@ -74,6 +95,7 @@ impl IndexStats {
         self.pool_tokens += other.pool_tokens;
         self.pool_bytes += other.pool_bytes;
         self.link_rebuilds += other.link_rebuilds;
+        self.snapshot_publishes += other.snapshot_publishes;
     }
 }
 
@@ -101,6 +123,136 @@ impl Draft {
     }
 }
 
+/// An immutable, lock-free draft view of one substrate, published at an
+/// absorb/epoch boundary by [`DraftSource::snapshot`].
+///
+/// Cloning is cheap (`Arc` bumps), the value is `Send + Sync`, and
+/// [`DraftSnapshot::draft_from`] takes `&self` with no interior locking —
+/// any number of reader threads can draft from one snapshot while the
+/// owning writer keeps mutating its substrate. Every variant's drafting is
+/// bit-identical to the corresponding live substrate's `draft_from` at the
+/// moment of publication; afterwards the snapshot is frozen and can only
+/// go *stale* (answers the old history), never torn.
+#[derive(Debug, Clone)]
+pub enum DraftSnapshot {
+    /// Fused sliding-window trie: chunk-shared arena + pool snapshot.
+    Window(Arc<WindowSnapshot>),
+    /// Ukkonen tree baseline: whole-structure clone (pure reader).
+    Tree(Arc<SuffixTree>),
+    /// Suffix-array baseline: whole-structure clone (pure reader).
+    Array(Arc<SuffixArrayIndex>),
+    /// Plain counting trie: chunk-shared arena + pool snapshot.
+    Trie(Arc<SuffixTrieSnapshot>),
+    /// Frozen n-gram baseline: its trie snapshot plus the order clamp the
+    /// live drafter applies to `max_match`.
+    Static {
+        index: Arc<SuffixTrieSnapshot>,
+        order: usize,
+    },
+}
+
+// The whole point of the snapshot path: it must be shareable across draft
+// worker threads without locks. Compile-time pin.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<DraftSnapshot>();
+    assert_send_sync::<DrafterSnapshot>();
+};
+
+impl DraftSnapshot {
+    /// Lock-free equivalent of [`DraftSource::draft_from`] over the
+    /// published state. The per-variant mappings replicate the live trait
+    /// impls exactly (window: score-ranked epoch walk; tree/array: copied
+    /// continuation with unit confidence; trie/static: frequency weights).
+    pub fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        match self {
+            DraftSnapshot::Window(s) => match s.draft(context, max_match, budget) {
+                Some(d) => Draft {
+                    tokens: d.tokens,
+                    confidence: d.confidence,
+                    match_len: d.match_len,
+                },
+                None => Draft::empty(),
+            },
+            DraftSnapshot::Tree(t) => {
+                let (tokens, match_len) = t.draft_with_match(context, max_match, budget);
+                let confidence = vec![1.0; tokens.len()];
+                Draft {
+                    tokens,
+                    confidence,
+                    match_len,
+                }
+            }
+            DraftSnapshot::Array(a) => {
+                let (tokens, match_len) = a.draft_with_match(context, max_match, budget);
+                let confidence = vec![1.0; tokens.len()];
+                Draft {
+                    tokens,
+                    confidence,
+                    match_len,
+                }
+            }
+            DraftSnapshot::Trie(t) => {
+                let (tokens, confidence, match_len) =
+                    t.draft_weighted_with_match(context, max_match, budget);
+                Draft {
+                    tokens,
+                    confidence,
+                    match_len,
+                }
+            }
+            DraftSnapshot::Static { index, order } => {
+                let (tokens, confidence, match_len) =
+                    index.draft_weighted_with_match(context, max_match.min(*order), budget);
+                Draft {
+                    tokens,
+                    confidence,
+                    match_len,
+                }
+            }
+        }
+    }
+
+    /// Structure gauges carried by the publication itself — stamped once at
+    /// publish time for trie-backed substrates, so reading them costs
+    /// nothing per step (this is what retired the engine's interval-cached
+    /// index-gauge refresh). Pool fields stay 0, mirroring per-source
+    /// [`DraftSource::index_stats`].
+    pub fn index_stats(&self) -> IndexStats {
+        match self {
+            DraftSnapshot::Window(s) => {
+                let st = s.stats();
+                IndexStats {
+                    nodes: st.nodes,
+                    token_positions: st.token_positions,
+                    heap_bytes: st.heap_bytes,
+                    link_rebuilds: st.link_rebuilds,
+                    ..IndexStats::default()
+                }
+            }
+            DraftSnapshot::Tree(t) => IndexStats {
+                nodes: t.node_count(),
+                heap_bytes: t.approx_bytes(),
+                ..IndexStats::default()
+            },
+            DraftSnapshot::Array(a) => IndexStats {
+                heap_bytes: a.len_tokens() * 20,
+                ..IndexStats::default()
+            },
+            DraftSnapshot::Trie(t) | DraftSnapshot::Static { index: t, .. } => {
+                let st = t.stats();
+                IndexStats {
+                    nodes: st.nodes,
+                    token_positions: st.token_positions,
+                    heap_bytes: st.heap_bytes,
+                    link_rebuilds: st.link_rebuilds,
+                    ..IndexStats::default()
+                }
+            }
+        }
+    }
+}
+
 /// A retrieval substrate speculation can draw from: the §4.1 suffix
 /// structures behind one interface. A source knows nothing about requests,
 /// problems or scopes — that routing lives in [`Drafter`] impls above it.
@@ -110,6 +262,13 @@ pub trait DraftSource: Send {
     /// Propose up to `budget` tokens continuing `context`, matching at most
     /// `max_match` trailing context tokens against the index.
     fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft;
+
+    /// Publish the immutable lock-free read view of this substrate as of
+    /// now. `&mut self` lets trie-backed substrates reuse a cached view
+    /// until the next mutation invalidates it (repeat publishes between
+    /// absorbs are `Arc` clones, and only cache misses count toward
+    /// [`IndexStats::snapshot_publishes`]).
+    fn snapshot(&mut self) -> DraftSnapshot;
 
     /// Absorb one rollout produced at `epoch`. Unwindowed substrates
     /// (tree, array, plain trie) ignore the epoch: their history is
@@ -171,6 +330,10 @@ impl DraftSource for WindowedIndex {
         }
     }
 
+    fn snapshot(&mut self) -> DraftSnapshot {
+        DraftSnapshot::Window(self.publish())
+    }
+
     fn absorb(&mut self, epoch: Epoch, tokens: &[TokenId]) {
         self.insert(epoch, tokens);
     }
@@ -189,6 +352,7 @@ impl DraftSource for WindowedIndex {
             token_positions: self.token_positions(),
             heap_bytes: self.approx_bytes(),
             link_rebuilds: self.link_rebuilds(),
+            snapshot_publishes: self.snapshot_publishes(),
             ..IndexStats::default()
         }
     }
@@ -218,6 +382,14 @@ impl DraftSource for SuffixTree {
             confidence,
             match_len,
         }
+    }
+
+    /// Whole-structure clone: the tree is a pure reader after construction,
+    /// and absorb is already O(n)-ish, so the clone keeps the baseline's
+    /// complexity class. No publish cache — the engine snapshots once per
+    /// absorb round.
+    fn snapshot(&mut self) -> DraftSnapshot {
+        DraftSnapshot::Tree(Arc::new(self.clone()))
     }
 
     fn absorb(&mut self, _epoch: Epoch, tokens: &[TokenId]) {
@@ -271,6 +443,13 @@ impl DraftSource for SuffixArrayIndex {
         }
     }
 
+    /// Whole-structure clone — the array rebuilds fully on every absorb
+    /// anyway (the Fig. 5 strawman), so cloning does not change its cost
+    /// profile.
+    fn snapshot(&mut self) -> DraftSnapshot {
+        DraftSnapshot::Array(Arc::new(self.clone()))
+    }
+
     fn absorb(&mut self, _epoch: Epoch, tokens: &[TokenId]) {
         self.insert(tokens);
     }
@@ -321,6 +500,10 @@ impl DraftSource for SuffixTrieIndex {
             confidence,
             match_len,
         }
+    }
+
+    fn snapshot(&mut self) -> DraftSnapshot {
+        DraftSnapshot::Trie(Arc::new(self.publish()))
     }
 
     fn absorb(&mut self, _epoch: Epoch, tokens: &[TokenId]) {
@@ -382,6 +565,106 @@ pub fn source_from_substrate_pooled(
     }
 }
 
+/// How a drafter-level draft was answered. Snapshot drafting cannot bump
+/// the drafter's own hit/miss diagnostics (the snapshot is immutable and
+/// shared across threads), so [`DrafterSnapshot::draft`] reports the
+/// outcome alongside the draft and the engine folds the counts back in
+/// via [`Drafter::apply_draft_outcomes`] after the round joins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftOutcome {
+    /// Answered from the request-local index.
+    Local,
+    /// Answered from a history shard (routed or own-problem).
+    Shard,
+    /// Queried history but found nothing above thresholds.
+    Miss,
+    /// Drafting skipped (zero budget / empty context / no-speculation
+    /// drafter) — no counter moves, matching the serial early returns.
+    Skipped,
+}
+
+/// An immutable snapshot of a whole [`Drafter`] — routing policy plus the
+/// published [`DraftSnapshot`] of every shard, request-local index, and
+/// the prefix router — for lock-free concurrent drafting. `draft` takes
+/// `&self` and acquires no lock; worker threads share one `Arc` of this
+/// while the owning drafter keeps absorbing rollouts on the writer thread.
+#[derive(Debug, Clone)]
+pub struct DrafterSnapshot {
+    /// The epoch the drafter was last rolled to when this was published —
+    /// the reference point for the `draft_snapshot_lag_epochs` gauge.
+    epoch: Epoch,
+    inner: DrafterSnapInner,
+}
+
+#[derive(Debug, Clone)]
+enum DrafterSnapInner {
+    /// Never drafts (no-speculation baselines).
+    Empty,
+    /// One substrate, no routing (the frozen static baseline — its
+    /// [`DraftSnapshot::Static`] variant carries the order clamp).
+    Single(DraftSnapshot),
+    /// The full adaptive-drafter routing state.
+    Suffix(SuffixDrafterSnapshot),
+}
+
+impl DrafterSnapshot {
+    /// Snapshot of a drafter that never proposes anything.
+    pub fn empty(epoch: Epoch) -> Self {
+        DrafterSnapshot {
+            epoch,
+            inner: DrafterSnapInner::Empty,
+        }
+    }
+
+    /// Snapshot of a single-substrate drafter without routing.
+    pub fn single(epoch: Epoch, snap: DraftSnapshot) -> Self {
+        DrafterSnapshot {
+            epoch,
+            inner: DrafterSnapInner::Single(snap),
+        }
+    }
+
+    pub(crate) fn suffix(epoch: Epoch, snap: SuffixDrafterSnapshot) -> Self {
+        DrafterSnapshot {
+            epoch,
+            inner: DrafterSnapInner::Suffix(snap),
+        }
+    }
+
+    /// Drafter epoch at publication.
+    pub fn epoch(&self) -> Epoch {
+        self.epoch
+    }
+
+    /// Lock-free equivalent of [`Drafter::draft`] over the published
+    /// state, with the same scope rules, routing, and minimum-match
+    /// thresholds — bit-identical to the serial path at the publish point.
+    pub fn draft(
+        &self,
+        request: RequestId,
+        problem: ProblemId,
+        context: &[TokenId],
+        budget: usize,
+    ) -> (Draft, DraftOutcome) {
+        if budget == 0 || context.is_empty() {
+            return (Draft::empty(), DraftOutcome::Skipped);
+        }
+        match &self.inner {
+            DrafterSnapInner::Empty => (Draft::empty(), DraftOutcome::Skipped),
+            DrafterSnapInner::Single(s) => {
+                let d = s.draft_from(context, usize::MAX, budget);
+                let outcome = if d.is_empty() {
+                    DraftOutcome::Miss
+                } else {
+                    DraftOutcome::Shard
+                };
+                (d, outcome)
+            }
+            DrafterSnapInner::Suffix(s) => s.draft(request, problem, context, budget),
+        }
+    }
+}
+
 /// Common interface for all drafters (the routing layer above
 /// [`DraftSource`]).
 pub trait Drafter: Send {
@@ -404,6 +687,21 @@ pub trait Drafter: Send {
         context: &[TokenId],
         budget: usize,
     ) -> Draft;
+
+    /// Publish an immutable [`DrafterSnapshot`] for lock-free concurrent
+    /// drafting, or `None` if this drafter only supports the serial
+    /// `&mut self` path (the engine then keeps drafting inline).
+    /// Implementations cache the snapshot until the next mutation, so
+    /// repeat calls between absorbs are `Arc` clones. Default: `None`.
+    fn snapshot(&mut self) -> Option<Arc<DrafterSnapshot>> {
+        None
+    }
+
+    /// Fold the outcome counts of a concurrent draft round back into the
+    /// drafter's diagnostics ([`DraftOutcome`] per draft, summed by the
+    /// engine after the round joins). Default: ignore (drafters without
+    /// hit/miss counters).
+    fn apply_draft_outcomes(&mut self, _local_hits: u64, _shard_hits: u64, _misses: u64) {}
 
     /// Feed freshly *committed* (verified) tokens of an in-flight request —
     /// powers the "+request" scopes. Default: ignore.
@@ -547,6 +845,100 @@ mod tests {
             "identical rollout content interns to one segment across shards"
         );
         assert_eq!(a.draft_from(&[0, 1], 8, 2).tokens, b.draft_from(&[0, 1], 8, 2).tokens);
+    }
+
+    #[test]
+    fn snapshots_draft_bit_identical_to_live_sources_and_freeze() {
+        // The substrate-level acceptance property: for every one of the
+        // five substrates, a published DraftSnapshot answers draft_from
+        // bit-identically to the live source at the publish point, carries
+        // the same size gauges, and is frozen — later absorbs change the
+        // live answers but never the snapshot's.
+        let mut sources: Vec<Box<dyn DraftSource>> = vec![
+            source_from_substrate("window", 4, 16),
+            source_from_substrate("tree", 4, 16),
+            source_from_substrate("array", 4, 16),
+            Box::new(crate::suffix::SuffixTrieIndex::new(16)),
+            Box::new(StaticNgramDrafter::new(8)),
+        ];
+        let corpora: [&[u32]; 3] = [&[1, 2, 3, 4, 5], &[1, 2, 3, 9, 9], &[6, 1, 2, 3, 4]];
+        let probes: [&[u32]; 5] = [&[2, 3], &[1, 2, 3], &[9], &[4, 5], &[8, 8]];
+        for s in &mut sources {
+            let name = s.source_name();
+            for c in corpora {
+                s.absorb(0, c);
+            }
+            let snap = s.snapshot();
+            for p in probes {
+                let live = s.draft_from(p, 8, 4);
+                let shot = snap.draft_from(p, 8, 4);
+                assert_eq!(live.tokens, shot.tokens, "{name} probe {p:?}");
+                assert_eq!(live.confidence, shot.confidence, "{name} probe {p:?}");
+                assert_eq!(live.match_len, shot.match_len, "{name} probe {p:?}");
+            }
+            let (ls, ss) = (s.index_stats(), snap.index_stats());
+            assert_eq!(ls.nodes, ss.nodes, "{name}: nodes");
+            assert_eq!(ls.token_positions, ss.token_positions, "{name}: positions");
+            assert_eq!(ls.heap_bytes, ss.heap_bytes, "{name}: heap bytes");
+            assert_eq!(ls.link_rebuilds, ss.link_rebuilds, "{name}: link rebuilds");
+            // Freeze: absorb a diverging continuation of a probed context.
+            let before = snap.draft_from(&[2, 3], 8, 2);
+            s.absorb(0, &[2, 3, 77, 77]);
+            let stale = snap.draft_from(&[2, 3], 8, 2);
+            assert_eq!(stale.tokens, before.tokens, "{name}: snapshot froze");
+            assert_eq!(stale.match_len, before.match_len, "{name}: snapshot froze");
+        }
+    }
+
+    #[test]
+    fn republish_without_mutation_is_cached_for_trie_substrates() {
+        let mut s = source_from_substrate("window", 4, 16);
+        s.absorb(0, &[1, 2, 3, 4]);
+        let _ = s.snapshot();
+        let _ = s.snapshot(); // cache hit — not a new publication
+        assert_eq!(s.index_stats().snapshot_publishes, 1);
+        s.absorb(0, &[5, 6, 7]);
+        let _ = s.snapshot();
+        assert_eq!(s.index_stats().snapshot_publishes, 2);
+    }
+
+    #[test]
+    fn concurrent_snapshot_readers_match_publish_time_answers() {
+        // Satellite stress at the substrate boundary: 4 reader threads keep
+        // drafting from whatever snapshot is currently published while the
+        // writer absorbs rollouts and republishes. Every read must
+        // reproduce the answer the live (locked, single-threaded reference)
+        // source gave at that snapshot's publish point — any torn read or
+        // cross-publish smearing breaks the equality.
+        use std::sync::Mutex;
+        let probe: &[u32] = &[3, 4];
+        let mut src = source_from_substrate("window", 4, 16);
+        src.absorb(0, &[3, 4, 5, 6]);
+        let first = (0u64, src.snapshot(), src.draft_from(probe, 8, 3));
+        let cell = Mutex::new(first);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..400 {
+                        let (gen, snap, want) = {
+                            let g = cell.lock().unwrap();
+                            (g.0, g.1.clone(), g.2.clone())
+                        };
+                        let got = snap.draft_from(probe, 8, 3);
+                        assert_eq!(got.tokens, want.tokens, "publish {gen}");
+                        assert_eq!(got.confidence, want.confidence, "publish {gen}");
+                        assert_eq!(got.match_len, want.match_len, "publish {gen}");
+                    }
+                });
+            }
+            for i in 1..=48u32 {
+                src.absorb(0, &[3, 4, 10 + (i % 7), 20 + (i % 5)]);
+                let snap = src.snapshot();
+                let want = src.draft_from(probe, 8, 3);
+                *cell.lock().unwrap() = (u64::from(i), snap, want);
+            }
+        });
+        assert_eq!(src.index_stats().snapshot_publishes, 49);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! epoch-roll), so this drafter slots into the same substrate interface as
 //! every suffix structure; the [`Drafter`] impl is pure delegation.
 
-use super::{Draft, DraftSource, Drafter};
+use std::sync::Arc;
+
+use super::{Draft, DraftSnapshot, DraftSource, Drafter, DrafterSnapshot, IndexStats};
 use crate::suffix::trie::SuffixTrieIndex;
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
@@ -25,6 +27,9 @@ pub struct StaticNgramDrafter {
     train_epoch: Option<Epoch>,
     frozen: bool,
     order: usize,
+    /// Last epoch rolled to (snapshot-staleness reference only — the
+    /// drafter itself is frozen by design).
+    epoch: Epoch,
 }
 
 impl StaticNgramDrafter {
@@ -35,6 +40,7 @@ impl StaticNgramDrafter {
             train_epoch: None,
             frozen: false,
             order,
+            epoch: 0,
         }
     }
 
@@ -67,6 +73,17 @@ impl DraftSource for StaticNgramDrafter {
         }
     }
 
+    /// Snapshot of the calibration index plus the order clamp. Once the
+    /// drafter freezes (its designed steady state) the underlying trie
+    /// never mutates again, so repeated publishes are pure chunk-table
+    /// clones of an unchanged arena.
+    fn snapshot(&mut self) -> DraftSnapshot {
+        DraftSnapshot::Static {
+            index: Arc::new(self.index.publish()),
+            order: self.order,
+        }
+    }
+
     fn absorb(&mut self, epoch: Epoch, tokens: &[TokenId]) {
         // Calibration phase only: absorb the first epoch, then freeze.
         if self.frozen {
@@ -93,6 +110,16 @@ impl DraftSource for StaticNgramDrafter {
     fn indexed_tokens(&self) -> usize {
         self.index.tokens_indexed()
     }
+
+    fn index_stats(&self) -> IndexStats {
+        IndexStats {
+            nodes: self.index.node_count(),
+            token_positions: self.index.token_positions(),
+            heap_bytes: self.index.approx_bytes(),
+            link_rebuilds: self.index.link_rebuilds(),
+            ..IndexStats::default()
+        }
+    }
 }
 
 impl Drafter for StaticNgramDrafter {
@@ -113,11 +140,19 @@ impl Drafter for StaticNgramDrafter {
         self.draft_from(context, self.order, budget)
     }
 
+    fn snapshot(&mut self) -> Option<Arc<DrafterSnapshot>> {
+        Some(Arc::new(DrafterSnapshot::single(
+            self.epoch,
+            DraftSource::snapshot(self),
+        )))
+    }
+
     fn observe_rollout(&mut self, rollout: &Rollout) {
         self.absorb(rollout.epoch, &rollout.tokens);
     }
 
     fn roll_epoch(&mut self, epoch: Epoch) {
+        self.epoch = epoch;
         self.on_epoch(epoch);
     }
 }

@@ -31,11 +31,15 @@
 //! request-local fragments mostly intern their own short segments.)
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use super::{source_from_substrate_pooled, Draft, DraftSource, Drafter, IndexStats};
+use super::{
+    source_from_substrate_pooled, Draft, DraftOutcome, DraftSnapshot, DraftSource, Drafter,
+    DrafterSnapshot, IndexStats,
+};
 use crate::config::SpecConfig;
 use crate::store::wire::{Reader, StoreError, Writer};
-use crate::suffix::{PrefixRouter, SharedPool, SuffixTrieIndex};
+use crate::suffix::{PrefixRouter, RouterSnapshot, SharedPool, SuffixTrieIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +99,11 @@ pub struct SuffixDrafter {
     pub local_hits: u64,
     pub shard_hits: u64,
     pub misses: u64,
+    /// Cached drafter-level snapshot, invalidated by every history
+    /// mutation (absorb / partial / end-request / epoch roll / route
+    /// registration / warm start) — repeat publishes between mutations are
+    /// `Arc` clones.
+    snap: Option<Arc<DrafterSnapshot>>,
 }
 
 impl SuffixDrafter {
@@ -162,6 +171,7 @@ impl SuffixDrafter {
             local_hits: 0,
             shard_hits: 0,
             misses: 0,
+            snap: None,
         }
     }
 
@@ -283,6 +293,7 @@ impl SuffixDrafter {
                 local_hits,
                 shard_hits,
                 misses,
+                snap: None,
             },
             mismatches,
         ))
@@ -309,6 +320,82 @@ impl SuffixDrafter {
         } else {
             Draft::empty()
         }
+    }
+}
+
+/// The adaptive drafter's routing state, frozen at a publish point: every
+/// shard's (and request-local index's) [`DraftSnapshot`] plus the router
+/// snapshot, with the same scope rules and minimum-match thresholds as the
+/// serial path. Built by [`Drafter::snapshot`] on [`SuffixDrafter`];
+/// drafting takes `&self` and acquires no lock.
+#[derive(Debug, Clone)]
+pub(super) struct SuffixDrafterSnapshot {
+    scope: HistoryScope,
+    match_len: usize,
+    min_match: usize,
+    /// Per-problem shard snapshots (Problem / ProblemRequest scopes).
+    shards: HashMap<ProblemId, DraftSnapshot>,
+    /// Global shard snapshot (GlobalRequest scope).
+    global: Option<DraftSnapshot>,
+    /// Request-local index snapshots ("+request" scopes).
+    request_local: HashMap<RequestId, DraftSnapshot>,
+    router: Option<Arc<RouterSnapshot>>,
+}
+
+impl SuffixDrafterSnapshot {
+    /// Mirrors [`SuffixDrafter::history_draft`] over the published shards.
+    fn history_draft(&self, problem: ProblemId, context: &[TokenId], budget: usize) -> Draft {
+        let source = match self.scope {
+            HistoryScope::GlobalRequest => self.global.as_ref(),
+            _ => self.shards.get(&problem),
+        };
+        let Some(source) = source else { return Draft::empty() };
+        let d = source.draft_from(context, self.match_len, budget);
+        if !d.is_empty() && d.match_len >= self.min_match {
+            d
+        } else {
+            Draft::empty()
+        }
+    }
+
+    /// Mirrors the serial `Drafter::draft` routing exactly (request-local
+    /// first, then router redirect, then own-problem fallback), reporting
+    /// the outcome instead of bumping counters.
+    pub(super) fn draft(
+        &self,
+        request: RequestId,
+        problem: ProblemId,
+        context: &[TokenId],
+        budget: usize,
+    ) -> (Draft, DraftOutcome) {
+        if self.scope.uses_request_local() {
+            if let Some(local) = self.request_local.get(&request) {
+                let d = local.draft_from(context, self.match_len, budget);
+                if !d.is_empty() && d.match_len >= 3.min(self.match_len) {
+                    return (d, DraftOutcome::Local);
+                }
+            }
+        }
+        let routed_problem = match &self.router {
+            Some(r) => r.route(context).map(|(shard, _)| shard).unwrap_or(problem),
+            None => problem,
+        };
+        let d = self.history_draft(routed_problem, context, budget);
+        if d.is_empty() && routed_problem != problem {
+            let d2 = self.history_draft(problem, context, budget);
+            let outcome = if d2.is_empty() {
+                DraftOutcome::Miss
+            } else {
+                DraftOutcome::Shard
+            };
+            return (d2, outcome);
+        }
+        let outcome = if d.is_empty() {
+            DraftOutcome::Miss
+        } else {
+            DraftOutcome::Shard
+        };
+        (d, outcome)
     }
 }
 
@@ -366,10 +453,57 @@ impl Drafter for SuffixDrafter {
         d
     }
 
+    /// Publish (or reuse) the drafter-level snapshot: every shard and
+    /// request-local index publishes its substrate snapshot (each cached at
+    /// that level too), the router publishes its trie view, and the whole
+    /// bundle is frozen behind one `Arc` for the draft worker threads.
+    fn snapshot(&mut self) -> Option<Arc<DrafterSnapshot>> {
+        if let Some(s) = &self.snap {
+            return Some(Arc::clone(s));
+        }
+        let mut shards = HashMap::with_capacity(self.shards.len());
+        let mut global = None;
+        match self.scope {
+            HistoryScope::GlobalRequest => global = Some(self.global.snapshot()),
+            _ => {
+                for (problem, shard) in self.shards.iter_mut() {
+                    shards.insert(*problem, shard.snapshot());
+                }
+            }
+        }
+        let request_local = self
+            .request_local
+            .iter_mut()
+            .map(|(request, local)| (*request, local.snapshot()))
+            .collect();
+        let router = self.router.as_mut().map(|r| r.publish());
+        let s = Arc::new(DrafterSnapshot::suffix(
+            self.epoch,
+            SuffixDrafterSnapshot {
+                scope: self.scope,
+                match_len: self.match_len,
+                min_match: self.min_match,
+                shards,
+                global,
+                request_local,
+                router,
+            },
+        ));
+        self.snap = Some(Arc::clone(&s));
+        Some(s)
+    }
+
+    fn apply_draft_outcomes(&mut self, local_hits: u64, shard_hits: u64, misses: u64) {
+        self.local_hits += local_hits;
+        self.shard_hits += shard_hits;
+        self.misses += misses;
+    }
+
     fn observe_partial(&mut self, request: RequestId, _problem: ProblemId, new_tokens: &[TokenId]) {
         if !self.scope.uses_request_local() || new_tokens.is_empty() {
             return;
         }
+        self.snap = None;
         // Request-local index: re-index the request's committed tokens.
         // Cheap because requests are bounded and the trie depth is capped.
         // It shares the drafter pool so its label bytes show up in the
@@ -385,13 +519,16 @@ impl Drafter for SuffixDrafter {
     }
 
     fn end_request(&mut self, request: RequestId) {
-        self.request_local.remove(&request);
+        if self.request_local.remove(&request).is_some() {
+            self.snap = None;
+        }
     }
 
     fn observe_rollout(&mut self, rollout: &Rollout) {
         if rollout.tokens.is_empty() {
             return;
         }
+        self.snap = None;
         match self.scope {
             HistoryScope::GlobalRequest => self.global.absorb(rollout.epoch, &rollout.tokens),
             _ => {
@@ -411,6 +548,7 @@ impl Drafter for SuffixDrafter {
     }
 
     fn roll_epoch(&mut self, epoch: Epoch) {
+        self.snap = None;
         self.epoch = epoch;
         self.global.on_epoch(epoch);
         for shard in self.shards.values_mut() {
@@ -502,6 +640,7 @@ impl Drafter for SuffixDrafter {
 
     fn register_route(&mut self, shard: u32, tokens: &[TokenId]) {
         if let Some(router) = &mut self.router {
+            self.snap = None;
             router.register(shard, tokens);
         }
     }
@@ -866,6 +1005,95 @@ mod tests {
         );
         assert_eq!(resumed.draft(1, 1, &[1, 2], 2).tokens, vec![9, 5]);
         assert_eq!(resumed.indexed_tokens(), live.indexed_tokens());
+    }
+
+    #[test]
+    fn drafter_snapshot_matches_serial_draft_and_counters() {
+        // Two identically-built drafters per (scope, substrate, router)
+        // combo: one drafts serially (the locked single-threaded
+        // reference), the other through a published snapshot +
+        // apply_draft_outcomes. Drafts must be bit-identical and the
+        // hit/miss counters must end equal.
+        use crate::drafter::DraftOutcome;
+        let combos = [
+            (HistoryScope::Problem, "window", false),
+            (HistoryScope::Problem, "tree", true),
+            (HistoryScope::ProblemRequest, "window", true),
+            (HistoryScope::GlobalRequest, "array", false),
+        ];
+        for (scope, substrate, router) in combos {
+            let build = || {
+                let mut d =
+                    SuffixDrafter::with_substrate(scope, substrate, 4, 8, 16, router);
+                for e in 0..2 {
+                    d.roll_epoch(e);
+                    for p in 1..4u32 {
+                        let t: Vec<u32> = (0..24).map(|i| (i * (p + 2) + e) % 11).collect();
+                        d.observe_rollout(&rollout(p, e, t));
+                    }
+                }
+                d.observe_partial(70, 1, &[10, 11, 12, 13, 10, 11, 12]);
+                d
+            };
+            let mut serial = build();
+            let mut conc = build();
+            let snap = conc.snapshot().expect("suffix drafter publishes a snapshot");
+            assert_eq!(snap.epoch(), serial.epoch());
+            let mut probes: Vec<(RequestId, ProblemId, Vec<u32>)> = vec![
+                (70, 1, vec![10, 11, 12]),   // request-local repetition
+                (100, 9, vec![1, 2, 3]),     // unknown problem → router or miss
+                (101, 2, vec![9, 9]),        // junk context
+            ];
+            for p in 1..4u32 {
+                probes.push((102 + p as u64, p, (0..3).map(|i| (i * (p + 2) + 1) % 11).collect()));
+                probes.push((110 + p as u64, p, (2..5).map(|i| (i * (p + 2)) % 11).collect()));
+            }
+            let (mut local, mut shard, mut miss) = (0u64, 0u64, 0u64);
+            for (req, problem, ctx) in &probes {
+                let a = serial.draft(*req, *problem, ctx, 5);
+                let (b, outcome) = snap.draft(*req, *problem, ctx, 5);
+                let tag = format!("{scope:?}/{substrate}/router={router} ctx {ctx:?}");
+                assert_eq!(a.tokens, b.tokens, "{tag}");
+                assert_eq!(a.confidence, b.confidence, "{tag}");
+                assert_eq!(a.match_len, b.match_len, "{tag}");
+                match outcome {
+                    DraftOutcome::Local => local += 1,
+                    DraftOutcome::Shard => shard += 1,
+                    DraftOutcome::Miss => miss += 1,
+                    DraftOutcome::Skipped => panic!("{tag}: non-empty probe skipped"),
+                }
+            }
+            // Zero-budget / empty-context short-circuit matches the serial
+            // early return: no draft, no counter movement.
+            assert!(matches!(snap.draft(1, 1, &[1, 2], 0).1, DraftOutcome::Skipped));
+            assert!(matches!(snap.draft(1, 1, &[], 5).1, DraftOutcome::Skipped));
+            conc.apply_draft_outcomes(local, shard, miss);
+            assert_eq!(
+                (conc.local_hits, conc.shard_hits, conc.misses),
+                (serial.local_hits, serial.shard_hits, serial.misses),
+                "{scope:?}/{substrate}/router={router}: outcome counts reconcile"
+            );
+        }
+    }
+
+    #[test]
+    fn drafter_snapshot_is_cached_and_invalidated() {
+        let mut d = SuffixDrafter::new(HistoryScope::Problem, 4, 8, 16, false);
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 3, 4]));
+        let a = d.snapshot().unwrap();
+        let b = d.snapshot().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "no mutation → cached Arc");
+        d.observe_rollout(&rollout(1, 0, vec![1, 2, 9, 9]));
+        let c = d.snapshot().unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "absorb invalidates");
+        // The old snapshot is frozen on the pre-absorb history...
+        assert_eq!(a.draft(5, 1, &[1, 2], 2).0.tokens, vec![3, 4]);
+        // ...while the new one matches the live serial answer.
+        assert_eq!(c.draft(5, 1, &[1, 2], 2).0.tokens, d.draft(5, 1, &[1, 2], 2).tokens);
+        d.roll_epoch(1);
+        let e = d.snapshot().unwrap();
+        assert!(!Arc::ptr_eq(&c, &e), "epoch roll invalidates");
+        assert_eq!(e.epoch(), 1);
     }
 
     #[test]

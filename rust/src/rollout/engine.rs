@@ -14,6 +14,12 @@
 //!      and length statistics absorb the new tokens (final length AND
 //!      speculation outcome — both halves of the LPT cost key).
 //!
+//! With `spec.draft_threads` ≠ 1, step 2 runs on worker threads against an
+//! immutable [`crate::drafter::DrafterSnapshot`] while the writer thread
+//! absorbs previously finished rollouts concurrently — drafts may lag the
+//! newest history by one verification round, which losslessness (step 4)
+//! makes a pure perf effect, never an output change.
+//!
 //! The engine drives speculation only through traits: [`Drafter`] routes a
 //! request to a history shard, and every shard is a
 //! [`crate::drafter::DraftSource`] — the engine never names the substrate
@@ -33,7 +39,7 @@ use super::faults::FaultPlan;
 use super::metrics::StepMetrics;
 use super::request::RolloutRequest;
 use crate::config::DasConfig;
-use crate::drafter::Drafter;
+use crate::drafter::{DraftOutcome, Drafter};
 use crate::model::{StepInput, TargetModel};
 use crate::spec::budget::{solve as solve_budget, BudgetRequest};
 use crate::spec::{verify_greedy, verify_sampling, AcceptanceEstimator, LengthClass, LengthPolicy};
@@ -97,10 +103,9 @@ pub struct RolloutEngine {
     next_request: RequestId,
     epoch: Epoch,
     seed: u64,
-    /// Cached drafter size gauges: computing them walks every shard's
-    /// arena, so they refresh on a coarse step cadence instead of per step
-    /// (snapshots may lag up to `INDEX_GAUGE_EVERY − 1` steps).
-    index_gauges: crate::drafter::IndexStats,
+    /// Reader threads for the snapshot draft path (`spec.draft_threads`;
+    /// 0 = auto-detect, 1 = serial drafting against the live structures).
+    draft_threads: usize,
     /// Persistent history store (`spec.store_dir`): WAL per absorbed
     /// rollout, snapshot every `snapshot_every` epochs. `None` when
     /// persistence is off or the drafter is stateless.
@@ -124,8 +129,17 @@ pub struct RolloutEngine {
     pending_store_failures: u64,
 }
 
-/// Steps between drafter index-gauge refreshes.
-const INDEX_GAUGE_EVERY: u32 = 16;
+/// Absorb every not-yet-indexed finished rollout into the drafter,
+/// advancing the step's absorb cursor. Rollouts become durable (WAL) the
+/// moment they finish, but enter the in-memory history here — either
+/// right before a serial draft round (the historical visibility) or on
+/// the writer thread while snapshot readers draft (the concurrent path).
+fn absorb_pending(drafter: &mut dyn Drafter, rollouts: &[Rollout], absorbed: &mut usize) {
+    while *absorbed < rollouts.len() {
+        drafter.observe_rollout(&rollouts[*absorbed]);
+        *absorbed += 1;
+    }
+}
 
 impl RolloutEngine {
     pub fn new(cfg: &DasConfig, drafter: Box<dyn Drafter>) -> Self {
@@ -202,7 +216,7 @@ impl RolloutEngine {
             next_request: 0,
             epoch: 0,
             seed: cfg.seed,
-            index_gauges: crate::drafter::IndexStats::default(),
+            draft_threads: cfg.spec.draft_threads,
             store,
             // Clamp BEFORE the narrowing cast: a usize that is a multiple
             // of 2^32 must not truncate to a zero divisor.
@@ -273,6 +287,21 @@ impl RolloutEngine {
     /// jobs longest-predicted-first (LPT) instead of round-robin.
     pub fn predict_job_cost(&self, job: &GenJob) -> f64 {
         self.length_policy.job_cost(job.problem, job.samples)
+    }
+
+    /// Reader threads for one round's draft phase: `spec.draft_threads`,
+    /// with 0 = auto (available parallelism, capped at 8 — draft batches
+    /// rarely scale past that), never more than one thread per request.
+    fn draft_thread_count(&self, active: usize) -> usize {
+        let configured = if self.draft_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8)
+        } else {
+            self.draft_threads
+        };
+        configured.min(active)
     }
 
     fn class_budget(&self, class: LengthClass) -> usize {
@@ -373,6 +402,11 @@ impl RolloutEngine {
         let latency = model.latency_model();
         let mut rollouts = Vec::new();
         let mut accept_obs = Vec::new();
+        // Absorb cursor into `rollouts`: finished trajectories become WAL
+        // records immediately (in `finish_request`) but enter the drafter's
+        // in-memory history lazily, so the concurrent path can overlap
+        // absorption with snapshot drafting.
+        let mut absorbed = 0usize;
 
         loop {
             let done = batcher.recycle();
@@ -393,10 +427,125 @@ impl RolloutEngine {
 
             // 2. Drafts (speculation overhead measured in wall time). The
             // decode context is a zero-copy slice of each request's token
-            // buffer — no per-round materialization.
+            // buffer — no per-round materialization. With more than one
+            // draft thread and a snapshot-capable drafter, drafting runs
+            // lock-free on worker threads against the last published
+            // snapshot while this (writer) thread absorbs pending rollouts;
+            // otherwise the serial path drafts against the live structures.
+            let threads = self.draft_thread_count(batcher.effective_batch());
+            let snap = if threads > 1 { self.drafter.snapshot() } else { None };
+            if snap.is_none() {
+                // Serial visibility: every rollout finished so far is
+                // indexed before this round's drafts are computed.
+                absorb_pending(&mut *self.drafter, &rollouts, &mut absorbed);
+            }
             let draft_start = Instant::now();
             let mut drafts: Vec<Vec<TokenId>> = Vec::with_capacity(budgets.len());
-            {
+            if let Some(snap) = snap {
+                // Snapshots may trail the live history by the rollouts still
+                // pending absorption (one round), never by epochs unless the
+                // drafter skipped a publish — surfaced as a staleness gauge.
+                metrics.draft_snapshot_lag_epochs = metrics
+                    .draft_snapshot_lag_epochs
+                    .max(u64::from(self.epoch.saturating_sub(snap.epoch())));
+                let specs: Vec<(RequestId, ProblemId, usize, bool)> = {
+                    let active = batcher.active();
+                    active
+                        .iter()
+                        .zip(&budgets)
+                        .map(|(req, &budget)| {
+                            // Never draft past the generation cap (leave
+                            // room for the guaranteed extra token).
+                            let room =
+                                self.max_new_tokens.saturating_sub(req.gen_len() + 1);
+                            (
+                                req.id,
+                                req.problem,
+                                budget.min(room),
+                                self.degraded.contains(&req.id),
+                            )
+                        })
+                        .collect()
+                };
+                let faults = Arc::clone(&self.faults);
+                let chunk = specs.len().div_ceil(threads);
+                let mut results: Vec<(Vec<TokenId>, DraftOutcome, bool)> =
+                    Vec::with_capacity(specs.len());
+                {
+                    let active = batcher.active();
+                    std::thread::scope(|s| {
+                        let mut handles = Vec::with_capacity(threads);
+                        for (ci, chunk_specs) in specs.chunks(chunk).enumerate() {
+                            let lo = ci * chunk;
+                            let snap = &snap;
+                            let faults = &faults;
+                            handles.push(s.spawn(move || {
+                                chunk_specs
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(j, &(id, problem, b, degraded))| {
+                                        if b == 0 || degraded {
+                                            return (
+                                                Vec::new(),
+                                                DraftOutcome::Skipped,
+                                                false,
+                                            );
+                                        }
+                                        // Degradation ladder, rung 1: a
+                                        // panicking draft must not unwind
+                                        // out of its worker. The request
+                                        // falls back to plain decoding —
+                                        // losslessness makes that a pure
+                                        // slowdown, never an output change.
+                                        let context = active[lo + j].context();
+                                        let attempt =
+                                            catch_unwind(AssertUnwindSafe(|| {
+                                                if faults.should_poison_draft(step) {
+                                                    panic!(
+                                                        "fault plan: poisoned draft at step {step}"
+                                                    );
+                                                }
+                                                snap.draft(id, problem, context, b)
+                                            }));
+                                        match attempt {
+                                            Ok((d, outcome)) => (d.tokens, outcome, false),
+                                            Err(_) => {
+                                                (Vec::new(), DraftOutcome::Skipped, true)
+                                            }
+                                        }
+                                    })
+                                    .collect::<Vec<_>>()
+                            }));
+                        }
+                        // Writer overlap: index rollouts finished in earlier
+                        // rounds while the readers draft off the snapshot.
+                        absorb_pending(&mut *self.drafter, &rollouts, &mut absorbed);
+                        for h in handles {
+                            let part =
+                                h.join().expect("draft worker hosts its own catch_unwind");
+                            results.extend(part);
+                        }
+                    });
+                }
+                // Fold the round's outcomes back into the drafter's
+                // hit/miss diagnostics (snapshots cannot bump them) and
+                // mark panicked requests degraded.
+                let (mut local_hits, mut shard_hits, mut misses) = (0u64, 0u64, 0u64);
+                for (i, (tokens, outcome, panicked)) in results.into_iter().enumerate() {
+                    if panicked {
+                        self.degraded.insert(specs[i].0);
+                        metrics.degraded_requests += 1;
+                    }
+                    match outcome {
+                        DraftOutcome::Local => local_hits += 1,
+                        DraftOutcome::Shard => shard_hits += 1,
+                        DraftOutcome::Miss => misses += 1,
+                        DraftOutcome::Skipped => {}
+                    }
+                    drafts.push(tokens);
+                }
+                self.drafter.apply_draft_outcomes(local_hits, shard_hits, misses);
+            } else {
                 let active = batcher.active();
                 for (req, &budget) in active.iter().zip(&budgets) {
                     // Never draft past the generation cap (leave room for
@@ -483,19 +632,19 @@ impl RolloutEngine {
             }
         }
 
+        // The final recycle's rollouts are still pending when the loop
+        // breaks — index them now so cross-step drafter state is identical
+        // whether this step drafted serially or concurrently.
+        absorb_pending(&mut *self.drafter, &rollouts, &mut absorbed);
+
         metrics.gen_time = model.elapsed() + latency.c_step;
         metrics.wall_time = wall_start.elapsed().as_secs_f64();
         // Index-size gauges: how much memory the drafter's history costs
         // (nodes vs uncompressed-equivalent positions makes the
-        // path-compression win observable). Refreshed on a coarse cadence —
-        // the scan walks every shard arena, which must not become per-step
-        // overhead as history grows.
-        if step % INDEX_GAUGE_EVERY == 0
-            || self.index_gauges == crate::drafter::IndexStats::default()
-        {
-            self.index_gauges = self.drafter.index_stats();
-        }
-        let idx = self.index_gauges;
+        // path-compression win observable). Cheap per step: every count is
+        // maintained incrementally by the arena core and stamped onto
+        // publications, so no shard walk happens here.
+        let idx = self.drafter.index_stats();
         metrics.index_nodes = idx.nodes as u64;
         metrics.index_token_positions = idx.token_positions as u64;
         metrics.index_bytes = idx.heap_bytes as u64;
@@ -503,6 +652,7 @@ impl RolloutEngine {
         metrics.pool_tokens = idx.pool_tokens as u64;
         metrics.pool_bytes = idx.pool_bytes as u64;
         metrics.index_link_rebuilds = idx.link_rebuilds;
+        metrics.index_snapshot_publishes = idx.snapshot_publishes;
         if let Some(store) = &self.store {
             let st = store.status();
             metrics.store_snapshot_bytes = st.snapshot_bytes;
@@ -570,10 +720,11 @@ impl RolloutEngine {
                 self.pending_store_failures += 1;
             }
         }
-        // Online drafter refresh: newly finished trajectories immediately
-        // become draft material for still-running stragglers — exactly the
-        // idle-slack exploitation the paper describes.
-        self.drafter.observe_rollout(&rollout);
+        // Online drafter refresh: newly finished trajectories become draft
+        // material for still-running stragglers — exactly the idle-slack
+        // exploitation the paper describes. The actual indexing is deferred
+        // to the step loop's absorb cursor (`absorb_pending`) so the
+        // concurrent path can overlap it with snapshot drafting.
         rollouts.push(rollout);
     }
 }
@@ -1093,5 +1244,111 @@ mod tests {
             rep.metrics.accepted > 0,
             "same-step reuse should already speculate"
         );
+    }
+
+    #[test]
+    fn concurrent_drafting_is_lossless_across_substrates() {
+        // Tentpole acceptance: snapshot drafting on worker threads may see
+        // history one round staler than the live writer, but at T=0
+        // losslessness pins every committed token — a concurrent run and a
+        // forced-serial run must agree bit for bit, step after step, for
+        // every substrate and for the frozen n-gram baseline.
+        for (drafter, substrate) in
+            [("das", "window"), ("das", "tree"), ("das", "array"), ("static", "window")]
+        {
+            let mut c_ser = cfg(0.0, drafter, "uniform");
+            c_ser.spec.substrate = substrate.into();
+            c_ser.spec.draft_threads = 1;
+            let mut c_conc = c_ser.clone();
+            c_conc.spec.draft_threads = 4;
+            let mut m1 = sim(&c_ser);
+            let mut m2 = sim(&c_conc);
+            let mut e1 = engine(&c_ser);
+            let mut e2 = engine(&c_conc);
+            for step in 0..3 {
+                e1.roll_epoch(step);
+                e2.roll_epoch(step);
+                let r1 = e1.generate_step(&mut m1, &jobs(4, 3), step);
+                let r2 = e2.generate_step(&mut m2, &jobs(4, 3), step);
+                assert_eq!(
+                    sorted_rollouts(&r1),
+                    sorted_rollouts(&r2),
+                    "{drafter}/{substrate} diverged at step {step}"
+                );
+                assert_eq!(r1.metrics.completed, r2.metrics.completed);
+                m1.policy_update(1.0);
+                m2.policy_update(1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_mode_records_snapshot_gauges() {
+        let mut c = cfg(0.6, "das", "uniform");
+        c.spec.draft_threads = 4;
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        e.roll_epoch(0);
+        let rep = e.generate_step(&mut m, &jobs(4, 3), 0);
+        assert!(
+            rep.metrics.index_snapshot_publishes > 0,
+            "concurrent drafting must publish snapshots"
+        );
+        assert_eq!(
+            rep.metrics.draft_snapshot_lag_epochs, 0,
+            "publishes track the drafter's current epoch"
+        );
+        assert!(rep.metrics.index_nodes > 0, "per-step gauges stay populated");
+    }
+
+    #[test]
+    fn poisoned_draft_under_concurrent_mode_stays_lossless() {
+        // The chaos rung on the snapshot path: the one-shot poison panics
+        // inside exactly one worker's catch_unwind; which request degrades
+        // is scheduling-dependent, but the count is pinned at one and T=0
+        // outputs never change.
+        let mut c_ctrl = cfg(0.0, "das", "uniform");
+        c_ctrl.spec.draft_threads = 4;
+        let mut c_chaos = c_ctrl.clone();
+        c_chaos.rollout.fault_plan = "poison-draft step=1".into();
+        let mut m1 = sim(&c_ctrl);
+        let mut m2 = sim(&c_chaos);
+        let mut e1 = engine(&c_ctrl);
+        let mut e2 = engine(&c_chaos);
+        for step in 0..3 {
+            let r1 = e1.generate_step(&mut m1, &jobs(4, 2), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(4, 2), step);
+            assert_eq!(
+                sorted_rollouts(&r1),
+                sorted_rollouts(&r2),
+                "degraded outputs diverged at step {step}"
+            );
+            let expect = u64::from(step == 1);
+            assert_eq!(r2.metrics.degraded_requests, expect, "gauge at step {step}");
+        }
+    }
+
+    #[test]
+    fn concurrent_stress_many_readers_while_writer_absorbs() {
+        // Satellite stress: eight reader threads over a queue deeper than
+        // the batch, across epoch rolls and policy drift — every request
+        // must complete with a well-formed rollout and no panics escape the
+        // draft workers.
+        let mut c = cfg(0.8, "das", "uniform");
+        c.spec.draft_threads = 8;
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let mut total = 0u64;
+        for step in 0..4u32 {
+            e.roll_epoch(step);
+            let rep = e.generate_step(&mut m, &jobs(6, 4), step);
+            total += rep.metrics.completed;
+            for r in &rep.rollouts {
+                assert!(!r.tokens.is_empty());
+                assert!(r.tokens.len() <= 128);
+            }
+            m.policy_update(1.0);
+        }
+        assert_eq!(total, 4 * 24, "no request lost under concurrent drafting");
     }
 }

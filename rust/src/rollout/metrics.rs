@@ -44,6 +44,13 @@ pub struct StepMetrics {
     /// compaction sweeps plus the insert-count refresh that keeps the
     /// never-compacting `window_all` path on exact links.
     pub index_link_rebuilds: u64,
+    /// Distinct draft snapshots the drafter's indexes have published
+    /// (cache misses only — unchanged republications are coalesced).
+    pub index_snapshot_publishes: u64,
+    /// Worst staleness of any snapshot the concurrent draft path read this
+    /// step, in epochs behind the drafter's current epoch (0 = every draft
+    /// saw the current epoch's publish; serial drafting leaves it 0).
+    pub draft_snapshot_lag_epochs: u64,
 
     // --- persistent history store gauges (0 when no store is configured) ---
     /// Payload bytes of the last committed (or warm-start-loaded) snapshot.
@@ -129,6 +136,10 @@ impl StepMetrics {
         self.pool_tokens += other.pool_tokens;
         self.pool_bytes += other.pool_bytes;
         self.index_link_rebuilds += other.index_link_rebuilds;
+        self.index_snapshot_publishes += other.index_snapshot_publishes;
+        // Staleness is a worst-case gauge, not a fleet total.
+        self.draft_snapshot_lag_epochs =
+            self.draft_snapshot_lag_epochs.max(other.draft_snapshot_lag_epochs);
         self.store_snapshot_bytes += other.store_snapshot_bytes;
         self.store_wal_records += other.store_wal_records;
         self.store_wal_bytes += other.store_wal_bytes;

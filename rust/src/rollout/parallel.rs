@@ -9,6 +9,13 @@
 //! same command queues as work, which keeps them ordered with respect to
 //! steps without any locking.
 //!
+//! Two levels of parallelism compose here: data parallelism across worker
+//! replicas (this module), and snapshot-read parallelism inside each
+//! replica's decode loop (`spec.draft_threads` — the engine drafts on
+//! reader threads against a published [`crate::drafter::DrafterSnapshot`]
+//! while its writer half absorbs finished rollouts). Worker-local drafter
+//! state means the levels never share mutable structures.
+//!
 //! The step's *makespan* is the slowest worker's generation time, which is
 //! precisely where the long-tail problem bites at the cluster level: one
 //! straggler worker holds up the learner. Jobs are therefore sharded

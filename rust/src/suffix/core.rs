@@ -93,6 +93,32 @@
 //!   not substring-closed, so their links are meaningless and must never
 //!   be rebuilt.
 //!
+//! # Snapshot reads
+//!
+//! Draft-serving reads run LOCK-FREE against published snapshots
+//! ([`TrieSnapshot`], built by [`ArenaTrie::publish`]): the node arena and
+//! the pool's slot table are chunked copy-on-write vectors
+//! ([`crate::util::cow::CowVec`]), so publication is O(chunks touched since
+//! the last publish) pointer copies, and segment content is immutable
+//! behind `Arc`s — a reader can never observe a torn or moved label no
+//! matter what the writer interns, splits or frees after the publish. The
+//! snapshot API takes only `&self` over `Arc`-shared state, so holding a
+//! lock on the draft path is unrepresentable by construction. Invariants:
+//!
+//! * **Single writer.** All mutation stays on `&mut ArenaTrie` (one writer
+//!   per shard); readers hold `Arc<TrieSnapshot>`s and never synchronize
+//!   with the writer or each other.
+//! * **Publish points are the unit of visibility.** A snapshot is the trie
+//!   exactly as of its `publish` call; every read against it is
+//!   bit-identical to the locked walk on the writer at that instant
+//!   (property-tested below), and later writer mutations are invisible.
+//! * **One read implementation, two label sources.** Every read walk is a
+//!   single implementation generic over [`Labels`] (locked [`SegmentPool`]
+//!   vs [`PoolSnapshot`]), so the locked and lock-free paths cannot drift.
+//! * **Stats ride the publish.** [`ArenaTrie::publish`] stamps the
+//!   snapshot with precomputed size gauges ([`SnapshotStats`]) maintained
+//!   incrementally by the writer — consumers never rescan the arena.
+//!
 //! # Suffix links
 //!
 //! Explicit node `v` stores `slink(v)`: an explicit node whose string is a
@@ -133,6 +159,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::store::wire::{Reader, StoreError, Writer};
 use crate::tokens::TokenId;
+use crate::util::cow::CowVec;
 
 /// Children stored inline per node before spilling to a sorted heap vector.
 /// 8 slots are one u32x8 compare, and deeper-than-root trie nodes almost
@@ -283,8 +310,9 @@ impl ChildTable {
 // ---------------------------------------------------------------------------
 
 /// A sub-range of one pool segment: the label of a trie edge.
-/// `start`/`len` are relative to the segment, so pool compaction (which only
-/// moves whole segments) never has to touch an edge.
+/// `start`/`len` are relative to the segment, whose content is immutable
+/// once interned — a `SegRef` resolves to the same tokens for its entire
+/// lifetime, on the writer and on every published snapshot.
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct SegRef {
     seg: u32,
@@ -296,11 +324,13 @@ impl SegRef {
     pub(crate) const EMPTY: SegRef = SegRef { seg: 0, start: 0, len: 0 };
 }
 
-#[derive(Debug, Clone, Copy, Default)]
-struct SegMeta {
-    off: u32,
-    /// 0 marks a dead/free slot.
-    len: u32,
+/// One live pool segment: its token content behind an `Arc` — shared
+/// verbatim with every published [`PoolSnapshot`], so freeing or reusing
+/// the slot on the writer can never invalidate a reader's label — plus the
+/// edge refcount (writer-side bookkeeping only).
+#[derive(Debug, Clone)]
+struct SegSlot {
+    data: Arc<Vec<TokenId>>,
     /// Number of trie edges referencing (a sub-range of) this segment.
     rc: u32,
 }
@@ -313,28 +343,31 @@ pub struct PoolStats {
     pub segments: usize,
     /// Tokens held by live segments.
     pub live_tokens: usize,
-    /// Dead interior tokens awaiting pool compaction.
+    /// Always 0: per-segment storage frees a segment's tokens the moment
+    /// its refcount drops to zero (kept for gauge-schema stability).
     pub dead_tokens: usize,
     /// Approximate heap bytes owned by the pool (token store + metadata).
     pub heap_bytes: usize,
 }
 
-/// Append-only, hash-consed token store backing every edge label of the
-/// tries that share it. Interning content that is already present returns
-/// the existing segment (zero growth) — the shared-prefix win for repeated
-/// same-problem rollouts. Segments are refcounted by edges; dead segments
-/// are reclaimed by an in-place rewrite once they dominate the store.
+/// Hash-consed token store backing every edge label of the tries that
+/// share it. Interning content that is already present returns the
+/// existing segment (zero growth) — the shared-prefix win for repeated
+/// same-problem rollouts. Segments are refcounted by edges and freed the
+/// moment their refcount reaches zero; content lives behind per-segment
+/// `Arc`s in a copy-on-write slot table, so publishing a [`PoolSnapshot`]
+/// is O(chunks touched since the last publish) and snapshots keep freed
+/// segments alive for as long as any reader holds them.
 #[derive(Debug, Default)]
 pub(crate) struct SegmentPool {
-    toks: Vec<TokenId>,
-    segs: Vec<SegMeta>,
+    /// Slot table; `None` is a dead/free slot.
+    slots: CowVec<Option<SegSlot>>,
     /// Content hash → candidate segment ids (verified on collision).
     by_hash: HashMap<u64, Vec<u32>>,
-    /// Dead `segs` slots available for reuse.
+    /// Dead slots available for reuse.
     free: Vec<u32>,
-    /// Interior dead tokens (tail deaths are truncated immediately).
-    dead_toks: usize,
     live_segs: usize,
+    live_toks: usize,
 }
 
 fn hash_tokens(toks: &[TokenId]) -> u64 {
@@ -353,73 +386,76 @@ impl SegmentPool {
         let h = hash_tokens(toks);
         if let Some(cands) = self.by_hash.get(&h) {
             for &id in cands {
-                let m = self.segs[id as usize];
-                if m.len as usize == toks.len()
-                    && &self.toks[m.off as usize..(m.off + m.len) as usize] == toks
-                {
-                    return id;
+                if let Some(slot) = &self.slots[id as usize] {
+                    if slot.data.as_slice() == toks {
+                        return id;
+                    }
                 }
             }
         }
-        let off = self.toks.len() as u32;
-        self.toks.extend_from_slice(toks);
-        let meta = SegMeta { off, len: toks.len() as u32, rc: 0 };
+        let slot = Some(SegSlot { data: Arc::new(toks.to_vec()), rc: 0 });
         let id = match self.free.pop() {
             Some(id) => {
-                self.segs[id as usize] = meta;
+                self.slots[id as usize] = slot;
                 id
             }
             None => {
-                self.segs.push(meta);
-                (self.segs.len() - 1) as u32
+                self.slots.push(slot);
+                (self.slots.len() - 1) as u32
             }
         };
         self.by_hash.entry(h).or_default().push(id);
         self.live_segs += 1;
+        self.live_toks += toks.len();
         id
     }
 
     #[inline]
     pub(crate) fn retain(&mut self, seg: u32) {
-        self.segs[seg as usize].rc += 1;
+        let slot = self.slots[seg as usize]
+            .as_mut()
+            .expect("retain on a dead segment");
+        slot.rc += 1;
     }
 
     pub(crate) fn release(&mut self, seg: u32) {
-        let m = &mut self.segs[seg as usize];
-        debug_assert!(m.rc > 0, "segment over-released");
-        m.rc -= 1;
-        if m.rc == 0 {
+        let slot = self.slots[seg as usize]
+            .as_mut()
+            .expect("release on a dead segment");
+        debug_assert!(slot.rc > 0, "segment over-released");
+        slot.rc -= 1;
+        if slot.rc == 0 {
             self.kill(seg);
-            self.maybe_compact();
         }
     }
 
     /// Free a freshly interned segment that ended up with no edges (the
     /// inserted content was already fully present in the trie).
     pub(crate) fn release_if_unused(&mut self, seg: u32) {
-        if self.segs[seg as usize].rc == 0 && self.segs[seg as usize].len > 0 {
-            self.kill(seg);
+        if let Some(slot) = &self.slots[seg as usize] {
+            if slot.rc == 0 {
+                self.kill(seg);
+            }
         }
     }
 
     fn kill(&mut self, seg: u32) {
-        let m = self.segs[seg as usize];
-        let h = hash_tokens(&self.toks[m.off as usize..(m.off + m.len) as usize]);
+        let slot = self.slots[seg as usize]
+            .take()
+            .expect("kill on a dead segment");
+        let h = hash_tokens(&slot.data);
         if let Some(c) = self.by_hash.get_mut(&h) {
             c.retain(|&id| id != seg);
             if c.is_empty() {
                 self.by_hash.remove(&h);
             }
         }
-        if (m.off + m.len) as usize == self.toks.len() {
-            // Tail segment: reclaim immediately.
-            self.toks.truncate(m.off as usize);
-        } else {
-            self.dead_toks += m.len as usize;
-        }
-        self.segs[seg as usize] = SegMeta::default();
         self.free.push(seg);
         self.live_segs -= 1;
+        self.live_toks -= slot.data.len();
+        // `slot.data` drops here — unless a published snapshot still holds
+        // the Arc, in which case the content outlives the slot for exactly
+        // as long as readers need it.
     }
 
     /// Token slice of an edge label. Safe for [`SegRef::EMPTY`].
@@ -428,41 +464,27 @@ impl SegmentPool {
         if r.len == 0 {
             return &[];
         }
-        let m = self.segs[r.seg as usize];
-        let a = (m.off + r.start) as usize;
-        &self.toks[a..a + r.len as usize]
+        let slot = self.slots[r.seg as usize]
+            .as_ref()
+            .expect("slice of a dead segment");
+        let a = r.start as usize;
+        &slot.data[a..a + r.len as usize]
     }
 
-    /// Rewrite the token store dropping dead interior bytes once they
-    /// outweigh the live ones. Only segment offsets move; every `SegRef`
-    /// (segment id + relative range) stays valid.
-    fn maybe_compact(&mut self) {
-        if self.toks.len() < 4096 || self.dead_toks * 2 <= self.toks.len() {
-            return;
-        }
-        let mut live: Vec<u32> = (0..self.segs.len() as u32)
-            .filter(|&i| self.segs[i as usize].len > 0)
-            .collect();
-        live.sort_by_key(|&i| self.segs[i as usize].off);
-        let mut w = 0usize;
-        for id in live {
-            let m = self.segs[id as usize];
-            let (off, len) = (m.off as usize, m.len as usize);
-            self.toks.copy_within(off..off + len, w);
-            self.segs[id as usize].off = w as u32;
-            w += len;
-        }
-        self.toks.truncate(w);
-        self.dead_toks = 0;
+    /// Publish an immutable view of the slot table: O(chunks) pointer
+    /// copies, after which the writer copies only the chunks it next
+    /// touches ([`CowVec`] copy-on-write).
+    pub(crate) fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot { slots: self.slots.clone() }
     }
 
     pub(crate) fn stats(&self) -> PoolStats {
         PoolStats {
             segments: self.live_segs,
-            live_tokens: self.toks.len() - self.dead_toks,
-            dead_tokens: self.dead_toks,
-            heap_bytes: self.toks.len() * std::mem::size_of::<TokenId>()
-                + self.segs.len() * std::mem::size_of::<SegMeta>()
+            live_tokens: self.live_toks,
+            dead_tokens: 0,
+            heap_bytes: self.live_toks * std::mem::size_of::<TokenId>()
+                + self.slots.len() * std::mem::size_of::<Option<SegSlot>>()
                 + self.by_hash.len()
                     * (std::mem::size_of::<u64>() + std::mem::size_of::<Vec<u32>>() + 16),
         }
@@ -471,32 +493,34 @@ impl SegmentPool {
     /// Length of a live segment; `None` for dead/free/out-of-range slots
     /// (snapshot-load validation of edge `SegRef`s).
     pub(crate) fn seg_len(&self, seg: u32) -> Option<u32> {
-        self.segs
-            .get(seg as usize)
-            .filter(|m| m.len > 0)
-            .map(|m| m.len)
+        self.slots
+            .get(seg as usize)?
+            .as_ref()
+            .map(|s| s.data.len() as u32)
     }
 
     /// Current edge refcount of a segment (0 for dead slots; `das store
     /// verify` compares these against the snapshot's recorded counts).
     pub(crate) fn refcount(&self, seg: u32) -> u32 {
-        self.segs.get(seg as usize).map(|m| m.rc).unwrap_or(0)
+        self.slots
+            .get(seg as usize)
+            .and_then(|s| s.as_ref())
+            .map(|s| s.rc)
+            .unwrap_or(0)
     }
 
     /// Serialize every LIVE segment — id, recorded edge refcount, content.
-    /// Dead interior bytes are not written: the loaded pool is the
-    /// compacted equivalent of this one (same live content, same ids).
+    /// Dead slots occupy no stream bytes: the loaded pool holds exactly the
+    /// live content under the same ids.
     pub(crate) fn save_state(&self, w: &mut Writer) {
         w.str("pool");
-        w.usize(self.segs.len());
+        w.usize(self.slots.len());
         w.usize(self.live_segs);
-        for (id, m) in self.segs.iter().enumerate() {
-            if m.len == 0 {
-                continue;
-            }
+        for (id, slot) in self.slots.iter().enumerate() {
+            let Some(slot) = slot else { continue };
             w.u32(id as u32);
-            w.u32(m.rc);
-            w.tokens(&self.toks[m.off as usize..(m.off + m.len) as usize]);
+            w.u32(slot.rc);
+            w.tokens(&slot.data);
         }
     }
 
@@ -524,36 +548,74 @@ impl SegmentPool {
             )));
         }
         let mut pool = SegmentPool::default();
-        pool.segs.resize(slots, SegMeta::default());
+        for _ in 0..slots {
+            pool.slots.push(None);
+        }
         let mut recorded: Vec<(u32, u32)> = Vec::with_capacity(live);
         for _ in 0..live {
             let id = r.u32()?;
             let rc = r.u32()?;
             let toks = r.tokens()?;
-            let slot = pool
-                .segs
-                .get_mut(id as usize)
-                .ok_or_else(|| StoreError::Corrupt(format!("pool segment id {id} out of range")))?;
-            if slot.len != 0 {
+            if id as usize >= slots {
+                return Err(StoreError::Corrupt(format!("pool segment id {id} out of range")));
+            }
+            if pool.slots[id as usize].is_some() {
                 return Err(StoreError::Corrupt(format!("pool segment id {id} duplicated")));
             }
             if toks.is_empty() {
                 return Err(StoreError::Corrupt(format!("pool segment id {id} is empty")));
             }
-            *slot = SegMeta {
-                off: pool.toks.len() as u32,
-                len: toks.len() as u32,
-                rc: 0,
-            };
             pool.by_hash.entry(hash_tokens(&toks)).or_default().push(id);
-            pool.toks.extend_from_slice(&toks);
+            pool.live_toks += toks.len();
+            pool.slots[id as usize] = Some(SegSlot { data: Arc::new(toks), rc: 0 });
             recorded.push((id, rc));
         }
         pool.live_segs = live;
         pool.free = (0..slots as u32)
-            .filter(|&i| pool.segs[i as usize].len == 0)
+            .filter(|&i| pool.slots[i as usize].is_none())
             .collect();
         Ok((pool, recorded))
+    }
+}
+
+/// An immutable, lock-free view of the pool's slot table, published by
+/// [`SegmentPool::snapshot`] under the writer's lock. Segment content is
+/// behind `Arc`s that are immutable once interned, so a reader can never
+/// observe a torn, moved or reused label no matter what the writer interns
+/// or frees after the publish — freed segments simply outlive their slot
+/// until the last snapshot holding them drops.
+#[derive(Debug, Clone, Default)]
+pub struct PoolSnapshot {
+    slots: CowVec<Option<SegSlot>>,
+}
+
+/// Where a read walk resolves edge-label [`SegRef`]s: the live (locked)
+/// [`SegmentPool`] on the writer path, or a [`PoolSnapshot`] on the
+/// lock-free draft path. Every read walk is one implementation generic
+/// over this trait (see [`TrieRead`]), so the two paths are bit-identical
+/// by construction.
+pub(crate) trait Labels {
+    fn slice(&self, r: SegRef) -> &[TokenId];
+}
+
+impl Labels for SegmentPool {
+    #[inline]
+    fn slice(&self, r: SegRef) -> &[TokenId] {
+        SegmentPool::slice(self, r)
+    }
+}
+
+impl Labels for PoolSnapshot {
+    #[inline]
+    fn slice(&self, r: SegRef) -> &[TokenId] {
+        if r.len == 0 {
+            return &[];
+        }
+        let slot = self.slots[r.seg as usize]
+            .as_ref()
+            .expect("snapshot slice of a dead segment");
+        let a = r.start as usize;
+        &slot.data[a..a + r.len as usize]
     }
 }
 
@@ -583,6 +645,12 @@ impl SharedPool {
 
     pub fn stats(&self) -> PoolStats {
         self.lock().stats()
+    }
+
+    /// Publish an immutable, lock-free view of the pool (one lock for the
+    /// O(chunks) slot-table clone; reads against the snapshot never lock).
+    pub fn snapshot(&self) -> PoolSnapshot {
+        self.lock().snapshot()
     }
 
     /// Serialize the pool's live segments (ids, recorded refcounts,
@@ -674,10 +742,12 @@ pub trait CountStore: Clone + std::fmt::Debug + Send {
 }
 
 /// Plain occurrence counting — the [`CountStore`] of the production
-/// counting suffix trie (and the reference store for core tests).
+/// counting suffix trie (and the reference store for core tests). Rows
+/// live in a [`CowVec`] so cloning the store at a snapshot publish is
+/// O(chunks), not O(nodes).
 #[derive(Debug, Clone, Default)]
 pub struct Counts {
-    counts: Vec<u64>,
+    counts: CowVec<u64>,
 }
 
 impl Counts {
@@ -719,13 +789,13 @@ impl CountStore for Counts {
     }
 
     fn heap_bytes(&self) -> usize {
-        self.counts.len() * std::mem::size_of::<u64>()
+        self.counts.heap_bytes()
     }
 
     fn save_rows(&self, w: &mut Writer) {
         w.str("counts");
         w.usize(self.counts.len());
-        for &c in &self.counts {
+        for &c in self.counts.iter() {
             w.u64(c);
         }
     }
@@ -738,7 +808,7 @@ impl CountStore for Counts {
                 "counts rows ({n}) != arena nodes ({n_nodes})"
             )));
         }
-        let mut counts = Vec::with_capacity(n);
+        let mut counts = CowVec::new();
         for _ in 0..n {
             counts.push(r.u64()?);
         }
@@ -927,9 +997,15 @@ impl EdgeCursor {
 
 /// Depth-capped path-compressed arena trie, generic over what each node
 /// counts, with edge labels interned in a (possibly shared) [`SegmentPool`].
+///
+/// This is the WRITER half of the snapshot split: all mutation happens
+/// here behind `&mut`; [`ArenaTrie::publish`] hands out an immutable
+/// [`TrieSnapshot`] for lock-free reads (see module docs, "Snapshot
+/// reads"). The arena is a [`CowVec`] so publication shares every chunk
+/// the writer hasn't touched since.
 #[derive(Debug)]
 pub struct ArenaTrie<S: CountStore> {
-    nodes: Vec<Node>,
+    nodes: CowVec<Node>,
     store: S,
     max_depth: usize,
     pool: SharedPool,
@@ -945,6 +1021,10 @@ pub struct ArenaTrie<S: CountStore> {
     /// Exact link rebuilds performed (compaction or threshold-triggered) —
     /// a lifetime counter surfaced by the telemetry gauges.
     link_rebuilds: u64,
+    /// Running sum of child-table spill bytes (maintained at the insert
+    /// sites, recomputed by compaction/load) so [`ArenaTrie::approx_bytes`]
+    /// is O(1) — snapshot publication stamps size gauges per publish.
+    spill_bytes: usize,
 }
 
 impl<S: CountStore> Clone for ArenaTrie<S> {
@@ -953,7 +1033,7 @@ impl<S: CountStore> Clone for ArenaTrie<S> {
         // reference to its segment.
         {
             let mut pg = self.pool.lock();
-            for n in &self.nodes[1..] {
+            for n in self.nodes.iter().skip(1) {
                 pg.retain(n.label.seg);
             }
         }
@@ -965,6 +1045,7 @@ impl<S: CountStore> Clone for ArenaTrie<S> {
             label_tokens: self.label_tokens,
             links_dirty: self.links_dirty,
             link_rebuilds: self.link_rebuilds,
+            spill_bytes: self.spill_bytes,
         }
     }
 }
@@ -972,7 +1053,7 @@ impl<S: CountStore> Clone for ArenaTrie<S> {
 impl<S: CountStore> Drop for ArenaTrie<S> {
     fn drop(&mut self) {
         let mut pg = self.pool.lock();
-        for n in &self.nodes[1..] {
+        for n in self.nodes.iter().skip(1) {
             pg.release(n.label.seg);
         }
     }
@@ -987,14 +1068,17 @@ impl<S: CountStore> ArenaTrie<S> {
     /// pool across shards so identical rollout content is stored once.
     pub fn with_pool(max_depth: usize, mut store: S, pool: SharedPool) -> Self {
         store.push_node(); // root payload
+        let mut nodes = CowVec::new();
+        nodes.push(Node::root());
         ArenaTrie {
-            nodes: vec![Node::root()],
+            nodes,
             store,
             max_depth: max_depth.max(1),
             pool,
             label_tokens: 0,
             links_dirty: 0,
             link_rebuilds: 0,
+            spill_bytes: 0,
         }
     }
 
@@ -1015,7 +1099,11 @@ impl<S: CountStore> ArenaTrie<S> {
     pub fn token_positions(&self) -> usize {
         debug_assert_eq!(
             self.label_tokens,
-            self.nodes[1..].iter().map(|n| n.label.len as usize).sum::<usize>(),
+            self.nodes
+                .iter()
+                .skip(1)
+                .map(|n| n.label.len as usize)
+                .sum::<usize>(),
             "label-token counter drifted"
         );
         1 + self.label_tokens
@@ -1043,7 +1131,8 @@ impl<S: CountStore> ArenaTrie<S> {
         self.nodes[v as usize].label.len
     }
 
-    #[inline]
+    /// Test-only probe: the read walks use [`label_len_of`] directly.
+    #[cfg(test)]
     fn at_node(&self, p: TriePos) -> bool {
         p.matched == self.label_len(p.node)
     }
@@ -1060,7 +1149,13 @@ impl<S: CountStore> ArenaTrie<S> {
             slink: 0,
         });
         self.store.push_node();
+        // The only site where an existing child table grows (splits insert
+        // into a fresh, spill-free table): account spill growth here so
+        // `approx_bytes` stays O(1).
+        let before = self.nodes[parent as usize].children.heap_bytes();
         self.nodes[parent as usize].children.insert(first_tok, id);
+        let after = self.nodes[parent as usize].children.heap_bytes();
+        self.spill_bytes += after - before;
         self.label_tokens += label.len as usize;
         self.links_dirty += 1;
         id
@@ -1234,27 +1329,23 @@ impl<S: CountStore> ArenaTrie<S> {
         cur.node as usize
     }
 
+    /// One [`TrieRead`] view over this trie's current state and the given
+    /// label source — the single implementation every read walk (locked
+    /// writer-side AND lock-free snapshot-side) goes through.
+    fn read<'a, L: Labels>(&'a self, labels: &'a L) -> TrieRead<'a, S, L> {
+        TrieRead {
+            nodes: &self.nodes,
+            store: &self.store,
+            labels,
+            max_depth: self.max_depth,
+        }
+    }
+
     /// Walk `pattern` exactly from the root; `None` unless fully matched
     /// (structurally — no count filter). The match may end mid-edge.
     pub fn locate(&self, pattern: &[TokenId]) -> Option<TriePos> {
         let pg = self.pool.lock();
-        let mut u: u32 = 0;
-        let mut j = 0usize;
-        while j < pattern.len() {
-            let c = self.nodes[u as usize].children.get(pattern[j])?;
-            let lab = self.nodes[c as usize].label;
-            let lt = pg.slice(lab);
-            let take = (lab.len as usize).min(pattern.len() - j);
-            if lt[..take] != pattern[j..j + take] {
-                return None;
-            }
-            if take < lab.len as usize {
-                return Some(TriePos { node: c, matched: take as u32 });
-            }
-            u = c;
-            j += take;
-        }
-        Some(TriePos { node: u, matched: self.label_len(u) })
+        self.read(&*pg).locate(pattern)
     }
 
     /// Walk `tokens`' depth-capped prefix; if it is fully present, ensure
@@ -1307,46 +1398,7 @@ impl<S: CountStore> ArenaTrie<S> {
         filter: S::Filter,
     ) -> Option<(usize, usize)> {
         let pg = self.pool.lock();
-        let cap = context.len().min(self.max_depth);
-        let mut u: u32 = 0;
-        let mut j = 0usize;
-        let mut best = None;
-        while j < cap {
-            let Some(c) = self.nodes[u as usize].children.get(context[j]) else {
-                break;
-            };
-            let lab = self.nodes[c as usize].label;
-            let lim = (lab.len as usize).min(cap - j);
-            let lt = pg.slice(lab);
-            let mut m = 0usize;
-            while m < lim && lt[m] == context[j + m] {
-                m += 1;
-            }
-            if m > 0 && self.store.weight(c as usize, filter) > 0 {
-                best = Some((c as usize, j + m));
-            }
-            if m < lab.len as usize {
-                break;
-            }
-            u = c;
-            j += m;
-        }
-        best
-    }
-
-    /// Locate the structurally present string `s` by skip/count, starting
-    /// from explicit node `from` whose string is a known prefix of `s`.
-    /// Presence is guaranteed by substring closure, so children are chosen
-    /// by first token only — O(1) per edge, no label comparisons. Thin
-    /// wrapper over [`ArenaTrie::descend_pos`], the one skip/count descent.
-    fn canonize(&self, from: u32, s: &[TokenId]) -> TriePos {
-        let j = self.nodes[from as usize].depth as usize;
-        debug_assert!(j <= s.len(), "suffix link deeper than its target");
-        let at_from = TriePos { node: from, matched: self.label_len(from) };
-        if j >= s.len() {
-            return at_from;
-        }
-        self.descend_pos(at_from, &s[j..])
+        self.read(&*pg).deepest_visible_prefix(context, filter)
     }
 
     /// Longest suffix of `context` (length ≤ `max_len`) whose position is
@@ -1364,83 +1416,23 @@ impl<S: CountStore> ArenaTrie<S> {
         max_len: usize,
         filter: S::Filter,
     ) -> (usize, TriePos) {
-        let cap = context.len().min(max_len).min(self.max_depth);
-        if cap == 0 {
-            return (0, TriePos::ROOT);
-        }
-        let tail = &context[context.len() - cap..];
         let pg = self.pool.lock();
-        let mut v: u32 = 0;
-        let mut k: u32 = 0;
-        let mut d: usize = 0;
-        for idx in 0..tail.len() {
-            let t = tail[idx];
-            loop {
-                let ll = self.label_len(v);
-                if k == ll {
-                    // At an explicit node: probe for a visible child edge.
-                    let c = self.nodes[v as usize]
-                        .children
-                        .get(t)
-                        .filter(|&c| self.store.weight(c as usize, filter) > 0);
-                    if let Some(c) = c {
-                        v = c;
-                        k = 1;
-                        d += 1;
-                        break;
-                    }
-                } else {
-                    // Inside an edge: the next label token decides.
-                    let lt = pg.slice(self.nodes[v as usize].label);
-                    if lt[k as usize] == t {
-                        k += 1;
-                        d += 1;
-                        break;
-                    }
-                }
-                if d == 0 {
-                    break; // token unmatched even at the root
-                }
-                d -= 1;
-                let anchor = if k == ll { v } else { self.nodes[v as usize].parent };
-                let from = self.nodes[anchor as usize].slink;
-                let p = self.canonize(from, &tail[idx - d..idx]);
-                v = p.node;
-                k = p.matched;
-            }
-        }
-        (d, TriePos { node: v, matched: k })
+        self.read(&*pg).deepest_suffix(context, max_len, filter)
     }
 
     /// Visit every suffix position of `matched` (the deepest matched
     /// suffix, located at `start`): the callback receives `(depth, pos)`
     /// for depth = `matched.len(), …, 1` and returns whether to continue.
     /// One suffix-link + skip/count re-descent per step — the window
-    /// drafter's per-epoch chain scan.
+    /// drafter's per-epoch chain scan. Label-free (skip/count chooses
+    /// children by first token), so no pool access is needed.
     pub fn walk_suffix_chain<F: FnMut(usize, TriePos) -> bool>(
         &self,
         matched: &[TokenId],
         start: TriePos,
-        mut f: F,
+        f: F,
     ) {
-        let mut pos = start;
-        let mut d = matched.len();
-        while d > 0 {
-            if !f(d, pos) {
-                return;
-            }
-            if d == 1 {
-                return;
-            }
-            d -= 1;
-            let anchor = if self.at_node(pos) {
-                pos.node
-            } else {
-                self.nodes[pos.node as usize].parent
-            };
-            let from = self.nodes[anchor as usize].slink;
-            pos = self.canonize(from, &matched[matched.len() - d..]);
-        }
+        walk_chain_nodes(&self.nodes, matched, start, f)
     }
 
     /// Greedy highest-weight walk from `start`, up to `budget` tokens.
@@ -1457,45 +1449,7 @@ impl<S: CountStore> ArenaTrie<S> {
         filter: S::Filter,
     ) -> (Vec<TokenId>, Vec<f32>) {
         let pg = self.pool.lock();
-        let mut v = start.node;
-        let mut k = start.matched;
-        let mut draft = Vec::with_capacity(budget);
-        let mut conf = Vec::with_capacity(budget);
-        while draft.len() < budget {
-            let ll = self.label_len(v);
-            if k < ll {
-                if self.store.weight(v as usize, filter) == 0 {
-                    break;
-                }
-                let lt = pg.slice(self.nodes[v as usize].label);
-                draft.push(lt[k as usize]);
-                conf.push(1.0);
-                k += 1;
-            } else {
-                let parent_w = self.store.weight(v as usize, filter);
-                let mut best: Option<(TokenId, u32, u64)> = None;
-                self.nodes[v as usize].children.for_each(|tok, child| {
-                    let w = self.store.weight(child as usize, filter);
-                    if w == 0 {
-                        return; // invisible under this filter
-                    }
-                    match best {
-                        None => best = Some((tok, child, w)),
-                        Some((_, _, bw)) => {
-                            if w > bw {
-                                best = Some((tok, child, w));
-                            }
-                        }
-                    }
-                });
-                let Some((tok, child, w)) = best else { break };
-                draft.push(tok);
-                conf.push((w as f64 / parent_w.max(1) as f64) as f32);
-                v = child;
-                k = 1;
-            }
-        }
-        (draft, conf)
+        self.read(&*pg).greedy_walk(start, budget, filter)
     }
 
     /// Rebuild the arena keeping only nodes for which `keep` is true
@@ -1507,7 +1461,7 @@ impl<S: CountStore> ArenaTrie<S> {
         let pool = self.pool.clone();
         {
             let mut pg = pool.lock();
-            let mut new_nodes: Vec<Node> = Vec::with_capacity(self.nodes.len() / 2 + 1);
+            let mut new_nodes: CowVec<Node> = CowVec::new();
             let mut new_store = self.store.new_empty();
             new_nodes.push(Node::root());
             new_store.copy_node_from(&self.store, 0);
@@ -1551,9 +1505,10 @@ impl<S: CountStore> ArenaTrie<S> {
             }
             // Every old edge releases its segment (kept ones re-retained
             // above, so live segments never transit through rc = 0).
-            for n in &self.nodes[1..] {
+            for n in self.nodes.iter().skip(1) {
                 pg.release(n.label.seg);
             }
+            self.spill_bytes = new_nodes.iter().map(|n| n.children.heap_bytes()).sum();
             self.nodes = new_nodes;
             self.store = new_store;
             self.label_tokens = kept_label_tokens;
@@ -1603,57 +1558,35 @@ impl<S: CountStore> ArenaTrie<S> {
                 let lt = pg.slice(lab);
                 let p = if u == 0 {
                     // Depth-from-root edge: the suffix drops the first token.
-                    self.descend_pos(TriePos::ROOT, &lt[1..])
+                    descend_nodes(&self.nodes, TriePos::ROOT, &lt[1..])
                 } else {
-                    self.descend_pos(spos[u], lt)
+                    descend_nodes(&self.nodes, spos[u], lt)
                 };
-                spos[vi] = p;
-                self.nodes[vi].slink = if p.matched == self.label_len(p.node) {
+                let slink = if p.matched == label_len_of(&self.nodes, p.node) {
                     p.node
                 } else {
                     self.nodes[p.node as usize].parent
                 };
+                spos[vi] = p;
+                self.nodes[vi].slink = slink;
             }
         }
         self.links_dirty = 0;
         self.link_rebuilds += 1;
     }
 
-    /// Advance a position by `toks`, skip/count (presence guaranteed by
-    /// substring closure of the kept set).
-    fn descend_pos(&self, from: TriePos, toks: &[TokenId]) -> TriePos {
-        let mut v = from.node;
-        let mut k = from.matched;
-        let mut i = 0usize;
-        while i < toks.len() {
-            let ll = self.label_len(v);
-            if k == ll {
-                let Some(c) = self.nodes[v as usize].children.get(toks[i]) else {
-                    debug_assert!(false, "substring closure violated in descend");
-                    return TriePos::ROOT;
-                };
-                v = c;
-                k = 0;
-                continue;
-            }
-            let step = ((ll - k) as usize).min(toks.len() - i);
-            k += step as u32;
-            i += step;
-        }
-        TriePos { node: v, matched: k }
-    }
-
     /// Approximate heap bytes (arena + child spill + store). Pool bytes are
     /// reported separately ([`ArenaTrie::pool_stats`]) because the pool may
-    /// be shared by many tries.
+    /// be shared by many tries. O(1): the spill sum is maintained
+    /// incrementally so snapshot publication can stamp size gauges on
+    /// every publish without rescanning the arena.
     pub fn approx_bytes(&self) -> usize {
-        self.nodes.len() * std::mem::size_of::<Node>()
-            + self
-                .nodes
-                .iter()
-                .map(|n| n.children.heap_bytes())
-                .sum::<usize>()
-            + self.store.heap_bytes()
+        debug_assert_eq!(
+            self.spill_bytes,
+            self.nodes.iter().map(|n| n.children.heap_bytes()).sum::<usize>(),
+            "child-spill byte counter drifted"
+        );
+        self.nodes.len() * std::mem::size_of::<Node>() + self.spill_bytes + self.store.heap_bytes()
     }
 
     /// Total child-table entries (diagnostics).
@@ -1673,7 +1606,7 @@ impl<S: CountStore> ArenaTrie<S> {
         w.usize(self.nodes.len());
         w.usize(self.links_dirty);
         w.u64(self.link_rebuilds);
-        for n in &self.nodes {
+        for n in self.nodes.iter() {
             w.u32(n.label.seg);
             w.u32(n.label.start);
             w.u32(n.label.len);
@@ -1773,15 +1706,389 @@ impl<S: CountStore> ArenaTrie<S> {
             }
         }
         let label_tokens = nodes[1..].iter().map(|nd| nd.label.len as usize).sum();
+        let spill_bytes = nodes.iter().map(|nd| nd.children.heap_bytes()).sum();
         Ok(ArenaTrie {
-            nodes,
+            nodes: nodes.into_iter().collect(),
             store,
             max_depth: max_depth.max(1),
             pool,
             label_tokens,
             links_dirty,
             link_rebuilds,
+            spill_bytes,
         })
+    }
+
+    /// Publish an immutable [`TrieSnapshot`] of the current state for
+    /// lock-free concurrent reads. Cost: one pool lock plus O(chunks
+    /// touched since the last publish) pointer copies (arena, count rows
+    /// and pool slot table are all copy-on-write) — publication never
+    /// rescans the arena; the size gauges stamped on the snapshot are the
+    /// writer's incrementally maintained counters.
+    pub fn publish(&self) -> TrieSnapshot<S> {
+        TrieSnapshot {
+            stats: SnapshotStats {
+                nodes: self.node_count(),
+                token_positions: self.token_positions(),
+                heap_bytes: self.approx_bytes(),
+                link_rebuilds: self.link_rebuilds,
+            },
+            nodes: self.nodes.clone(),
+            store: self.store.clone(),
+            labels: self.pool.snapshot(),
+            max_depth: self.max_depth,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared read walks + published snapshots
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn label_len_of(nodes: &CowVec<Node>, v: u32) -> u32 {
+    nodes[v as usize].label.len
+}
+
+/// Advance a position by `toks`, skip/count (presence guaranteed by
+/// substring closure of the kept set). Chooses children by first token
+/// only — label-free, so it serves locked and snapshot walks alike.
+fn descend_nodes(nodes: &CowVec<Node>, from: TriePos, toks: &[TokenId]) -> TriePos {
+    let mut v = from.node;
+    let mut k = from.matched;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let ll = label_len_of(nodes, v);
+        if k == ll {
+            let Some(c) = nodes[v as usize].children.get(toks[i]) else {
+                debug_assert!(false, "substring closure violated in descend");
+                return TriePos::ROOT;
+            };
+            v = c;
+            k = 0;
+            continue;
+        }
+        let step = ((ll - k) as usize).min(toks.len() - i);
+        k += step as u32;
+        i += step;
+    }
+    TriePos { node: v, matched: k }
+}
+
+/// Locate the structurally present string `s` by skip/count, starting
+/// from explicit node `from` whose string is a known prefix of `s`.
+/// Presence is guaranteed by substring closure, so children are chosen
+/// by first token only — O(1) per edge, no label comparisons. Thin
+/// wrapper over [`descend_nodes`], the one skip/count descent.
+fn canonize_nodes(nodes: &CowVec<Node>, from: u32, s: &[TokenId]) -> TriePos {
+    let j = nodes[from as usize].depth as usize;
+    debug_assert!(j <= s.len(), "suffix link deeper than its target");
+    let at_from = TriePos { node: from, matched: label_len_of(nodes, from) };
+    if j >= s.len() {
+        return at_from;
+    }
+    descend_nodes(nodes, at_from, &s[j..])
+}
+
+/// Suffix-chain visit (the body of [`ArenaTrie::walk_suffix_chain`] and
+/// [`TrieSnapshot::walk_suffix_chain`]): one suffix-link + skip/count
+/// re-descent per step, label-free.
+fn walk_chain_nodes<F: FnMut(usize, TriePos) -> bool>(
+    nodes: &CowVec<Node>,
+    matched: &[TokenId],
+    start: TriePos,
+    mut f: F,
+) {
+    let mut pos = start;
+    let mut d = matched.len();
+    while d > 0 {
+        if !f(d, pos) {
+            return;
+        }
+        if d == 1 {
+            return;
+        }
+        d -= 1;
+        let anchor = if pos.matched == label_len_of(nodes, pos.node) {
+            pos.node
+        } else {
+            nodes[pos.node as usize].parent
+        };
+        let from = nodes[anchor as usize].slink;
+        pos = canonize_nodes(nodes, from, &matched[matched.len() - d..]);
+    }
+}
+
+/// THE read-walk implementation, generic over where edge labels resolve
+/// ([`Labels`]): [`ArenaTrie`] instantiates it with the locked
+/// [`SegmentPool`] (writer path), [`TrieSnapshot`] with its
+/// [`PoolSnapshot`] (lock-free draft path). Both run literally the same
+/// code, so snapshot reads are bit-identical to locked reads by
+/// construction — the property tests below pin this at every publish
+/// point.
+pub(crate) struct TrieRead<'a, S, L> {
+    nodes: &'a CowVec<Node>,
+    store: &'a S,
+    labels: &'a L,
+    max_depth: usize,
+}
+
+impl<'a, S: CountStore, L: Labels> TrieRead<'a, S, L> {
+    fn locate(&self, pattern: &[TokenId]) -> Option<TriePos> {
+        let mut u: u32 = 0;
+        let mut j = 0usize;
+        while j < pattern.len() {
+            let c = self.nodes[u as usize].children.get(pattern[j])?;
+            let lab = self.nodes[c as usize].label;
+            let lt = self.labels.slice(lab);
+            let take = (lab.len as usize).min(pattern.len() - j);
+            if lt[..take] != pattern[j..j + take] {
+                return None;
+            }
+            if take < lab.len as usize {
+                return Some(TriePos { node: c, matched: take as u32 });
+            }
+            u = c;
+            j += take;
+        }
+        Some(TriePos { node: u, matched: label_len_of(self.nodes, u) })
+    }
+
+    fn deepest_visible_prefix(
+        &self,
+        context: &[TokenId],
+        filter: S::Filter,
+    ) -> Option<(usize, usize)> {
+        let cap = context.len().min(self.max_depth);
+        let mut u: u32 = 0;
+        let mut j = 0usize;
+        let mut best = None;
+        while j < cap {
+            let Some(c) = self.nodes[u as usize].children.get(context[j]) else {
+                break;
+            };
+            let lab = self.nodes[c as usize].label;
+            let lim = (lab.len as usize).min(cap - j);
+            let lt = self.labels.slice(lab);
+            let mut m = 0usize;
+            while m < lim && lt[m] == context[j + m] {
+                m += 1;
+            }
+            if m > 0 && self.store.weight(c as usize, filter) > 0 {
+                best = Some((c as usize, j + m));
+            }
+            if m < lab.len as usize {
+                break;
+            }
+            u = c;
+            j += m;
+        }
+        best
+    }
+
+    fn deepest_suffix(
+        &self,
+        context: &[TokenId],
+        max_len: usize,
+        filter: S::Filter,
+    ) -> (usize, TriePos) {
+        let cap = context.len().min(max_len).min(self.max_depth);
+        if cap == 0 {
+            return (0, TriePos::ROOT);
+        }
+        let tail = &context[context.len() - cap..];
+        let mut v: u32 = 0;
+        let mut k: u32 = 0;
+        let mut d: usize = 0;
+        for idx in 0..tail.len() {
+            let t = tail[idx];
+            loop {
+                let ll = label_len_of(self.nodes, v);
+                if k == ll {
+                    // At an explicit node: probe for a visible child edge.
+                    let c = self.nodes[v as usize]
+                        .children
+                        .get(t)
+                        .filter(|&c| self.store.weight(c as usize, filter) > 0);
+                    if let Some(c) = c {
+                        v = c;
+                        k = 1;
+                        d += 1;
+                        break;
+                    }
+                } else {
+                    // Inside an edge: the next label token decides.
+                    let lt = self.labels.slice(self.nodes[v as usize].label);
+                    if lt[k as usize] == t {
+                        k += 1;
+                        d += 1;
+                        break;
+                    }
+                }
+                if d == 0 {
+                    break; // token unmatched even at the root
+                }
+                d -= 1;
+                let anchor = if k == ll { v } else { self.nodes[v as usize].parent };
+                let from = self.nodes[anchor as usize].slink;
+                let p = canonize_nodes(self.nodes, from, &tail[idx - d..idx]);
+                v = p.node;
+                k = p.matched;
+            }
+        }
+        (d, TriePos { node: v, matched: k })
+    }
+
+    fn greedy_walk(
+        &self,
+        start: TriePos,
+        budget: usize,
+        filter: S::Filter,
+    ) -> (Vec<TokenId>, Vec<f32>) {
+        let mut v = start.node;
+        let mut k = start.matched;
+        let mut draft = Vec::with_capacity(budget);
+        let mut conf = Vec::with_capacity(budget);
+        while draft.len() < budget {
+            let ll = label_len_of(self.nodes, v);
+            if k < ll {
+                if self.store.weight(v as usize, filter) == 0 {
+                    break;
+                }
+                let lt = self.labels.slice(self.nodes[v as usize].label);
+                draft.push(lt[k as usize]);
+                conf.push(1.0);
+                k += 1;
+            } else {
+                let parent_w = self.store.weight(v as usize, filter);
+                let mut best: Option<(TokenId, u32, u64)> = None;
+                self.nodes[v as usize].children.for_each(|tok, child| {
+                    let w = self.store.weight(child as usize, filter);
+                    if w == 0 {
+                        return; // invisible under this filter
+                    }
+                    match best {
+                        None => best = Some((tok, child, w)),
+                        Some((_, _, bw)) => {
+                            if w > bw {
+                                best = Some((tok, child, w));
+                            }
+                        }
+                    }
+                });
+                let Some((tok, child, w)) = best else { break };
+                draft.push(tok);
+                conf.push((w as f64 / parent_w.max(1) as f64) as f32);
+                v = child;
+                k = 1;
+            }
+        }
+        (draft, conf)
+    }
+}
+
+/// Size gauges stamped onto a [`TrieSnapshot`] at publish time —
+/// precomputed from the writer's incrementally maintained counters, so
+/// per-step telemetry never rescans the arena.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SnapshotStats {
+    /// Explicit nodes allocated (root included).
+    pub nodes: usize,
+    /// Uncompressed-equivalent node count (see
+    /// [`ArenaTrie::token_positions`]).
+    pub token_positions: usize,
+    /// Approximate heap bytes (see [`ArenaTrie::approx_bytes`]).
+    pub heap_bytes: usize,
+    /// Exact suffix-link rebuilds performed by the writer so far.
+    pub link_rebuilds: u64,
+}
+
+/// The READ half of the snapshot split: an immutable view of one
+/// [`ArenaTrie`] exactly as of its [`ArenaTrie::publish`] call. All state
+/// is chunk-shared (`Arc`) with the writer; every method takes `&self` and
+/// acquires no lock — a `TrieSnapshot` holds no [`SharedPool`], so lock
+/// acquisition on the draft path is unrepresentable. `Send + Sync` and
+/// O(chunk-table) to clone: any number of reader threads can walk one
+/// snapshot (or their own clones) concurrently with the writer mutating.
+#[derive(Debug, Clone)]
+pub struct TrieSnapshot<S: CountStore> {
+    nodes: CowVec<Node>,
+    store: S,
+    labels: PoolSnapshot,
+    max_depth: usize,
+    stats: SnapshotStats,
+}
+
+impl<S: CountStore> TrieSnapshot<S> {
+    fn read(&self) -> TrieRead<'_, S, PoolSnapshot> {
+        TrieRead {
+            nodes: &self.nodes,
+            store: &self.store,
+            labels: &self.labels,
+            max_depth: self.max_depth,
+        }
+    }
+
+    /// The count rows as of the publish (filters evaluate against these).
+    pub fn store(&self) -> &S {
+        &self.store
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    /// Size gauges as of the publish (no rescan — see [`SnapshotStats`]).
+    pub fn stats(&self) -> SnapshotStats {
+        self.stats
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.stats.nodes
+    }
+
+    /// See [`ArenaTrie::locate`] — same implementation, snapshot labels.
+    pub fn locate(&self, pattern: &[TokenId]) -> Option<TriePos> {
+        self.read().locate(pattern)
+    }
+
+    /// See [`ArenaTrie::deepest_visible_prefix`].
+    pub fn deepest_visible_prefix(
+        &self,
+        context: &[TokenId],
+        filter: S::Filter,
+    ) -> Option<(usize, usize)> {
+        self.read().deepest_visible_prefix(context, filter)
+    }
+
+    /// See [`ArenaTrie::deepest_suffix`].
+    pub fn deepest_suffix(
+        &self,
+        context: &[TokenId],
+        max_len: usize,
+        filter: S::Filter,
+    ) -> (usize, TriePos) {
+        self.read().deepest_suffix(context, max_len, filter)
+    }
+
+    /// See [`ArenaTrie::walk_suffix_chain`].
+    pub fn walk_suffix_chain<F: FnMut(usize, TriePos) -> bool>(
+        &self,
+        matched: &[TokenId],
+        start: TriePos,
+        f: F,
+    ) {
+        walk_chain_nodes(&self.nodes, matched, start, f)
+    }
+
+    /// See [`ArenaTrie::greedy_walk`].
+    pub fn greedy_walk(
+        &self,
+        start: TriePos,
+        budget: usize,
+        filter: S::Filter,
+    ) -> (Vec<TokenId>, Vec<f32>) {
+        self.read().greedy_walk(start, budget, filter)
     }
 }
 
@@ -1994,7 +2301,7 @@ mod tests {
         pg.release(c);
         let st = pg.stats();
         assert_eq!(st.segments, 1);
-        assert_eq!(st.live_tokens, 4, "tail death truncates immediately");
+        assert_eq!(st.live_tokens, 4, "death frees its tokens immediately");
         // Re-interning dead content allocates fresh bytes.
         let c2 = pg.intern(&[9, 9]);
         pg.retain(c2);
@@ -2003,12 +2310,13 @@ mod tests {
     }
 
     #[test]
-    fn pool_compaction_preserves_slices() {
+    fn pool_frees_dead_segments_and_preserves_survivor_slices() {
         let pool = SharedPool::new();
         let mut pg = pool.lock();
-        // Many segments, then kill most of them interleaved → interior
-        // dead bytes overtake live ones → compaction rewrites offsets;
-        // surviving SegRefs (segment id + relative range) stay valid.
+        // Many segments, then kill most of them interleaved: per-segment
+        // storage frees each dead segment's tokens immediately (no deferred
+        // compaction pass), and surviving SegRefs (segment id + relative
+        // range) stay valid throughout.
         let mut ids = Vec::new();
         for i in 0..64u32 {
             let content: Vec<u32> = (0..128).map(|j| i * 1000 + j).collect();
@@ -2016,8 +2324,6 @@ mod tests {
             pg.retain(id);
             ids.push(id);
         }
-        // Release evens, then odds past 32: 48 of 64 dead → the >50% dead
-        // trigger fires mid-loop.
         for &id in ids.iter().step_by(2) {
             pg.release(id);
         }
@@ -2026,10 +2332,11 @@ mod tests {
                 pg.release(id);
             }
         }
-        // 16 odd ids ≤ 32 survive (the 33rd interior death crossed the >50%
-        // threshold and forced a rewrite mid-loop).
+        // 16 odd ids ≤ 32 survive; everything else freed its tokens at
+        // release time.
         assert_eq!(pg.stats().segments, 16);
         assert_eq!(pg.stats().live_tokens, 16 * 128);
+        assert_eq!(pg.stats().dead_tokens, 0, "no deferred dead bytes");
         // Survivors still read back their exact content through SegRefs.
         for (i, &id) in ids.iter().enumerate() {
             if i % 2 == 1 && i <= 32 {
@@ -2663,5 +2970,146 @@ mod tests {
             )?;
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_published_snapshot_reads_match_locked_reference() {
+        // THE snapshot anchor: at every publish point, every read the
+        // lock-free snapshot answers — locate + counts, deepest suffix,
+        // greedy drafts (tokens AND confidences), visible prefixes — must
+        // be bit-identical to the locked walk on the writer, across random
+        // insert/compaction streams. And once the writer mutates past a
+        // publish, the old snapshot must keep answering from its frozen
+        // state (stats included).
+        prop::check(96, |g| {
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let depth = 2 + g.usize_in(0, 8);
+            let mut t = plain(depth);
+            for _ in 0..g.usize_in(1, 5) {
+                t.insert_suffixes(&g.vec_u32_nonempty(alphabet, 40), ());
+                if g.usize_in(0, 4) == 0 {
+                    t.compact(|s, n| s.weight(n, ()) >= 1);
+                }
+                let snap = t.publish();
+                prop::require_eq(snap.stats().nodes, t.node_count(), "stat nodes")?;
+                prop::require_eq(
+                    snap.stats().token_positions,
+                    t.token_positions(),
+                    "stat positions",
+                )?;
+                prop::require_eq(snap.stats().heap_bytes, t.approx_bytes(), "stat bytes")?;
+                for _ in 0..6 {
+                    let pat = g.vec_u32_nonempty(alphabet, depth + 2);
+                    prop::require_eq(snap.locate(&pat), t.locate(&pat), "locate")?;
+                    let sc = snap.locate(&pat).map(|p| snap.store().get(p.row()));
+                    let tc = t.locate(&pat).map(|p| t.store().get(p.row()));
+                    prop::require_eq(sc, tc, "count at position")?;
+                    let ctx = g.vec_u32_nonempty(alphabet, 16);
+                    let max_match = 1 + g.usize_in(0, 8);
+                    prop::require_eq(
+                        snap.deepest_suffix(&ctx, max_match, ()),
+                        t.deepest_suffix(&ctx, max_match, ()),
+                        "deepest suffix",
+                    )?;
+                    let (ml, pos) = snap.deepest_suffix(&ctx, max_match, ());
+                    if ml > 0 {
+                        prop::require_eq(
+                            snap.greedy_walk(pos, 6, ()),
+                            t.greedy_walk(pos, 6, ()),
+                            "greedy draft",
+                        )?;
+                        let mut srows: Vec<(usize, TriePos)> = Vec::new();
+                        let mut trows: Vec<(usize, TriePos)> = Vec::new();
+                        let matched = &ctx[ctx.len() - ml.min(ctx.len())..];
+                        snap.walk_suffix_chain(matched, pos, |d, p| {
+                            srows.push((d, p));
+                            true
+                        });
+                        t.walk_suffix_chain(matched, pos, |d, p| {
+                            trows.push((d, p));
+                            true
+                        });
+                        prop::require_eq(srows, trows, "suffix chain")?;
+                    }
+                    prop::require_eq(
+                        snap.deepest_visible_prefix(&ctx, ()),
+                        t.deepest_visible_prefix(&ctx, ()),
+                        "visible prefix",
+                    )?;
+                }
+            }
+            // Staleness semantics: a snapshot is frozen at its publish.
+            let snap = t.publish();
+            let frozen = snap.stats();
+            let probe = g.vec_u32_nonempty(alphabet, 12);
+            let before = snap.locate(&probe).map(|p| snap.store().get(p.row()));
+            t.insert_suffixes(&probe, ());
+            prop::require_eq(snap.stats(), frozen, "stats frozen after writer mutates")?;
+            prop::require_eq(
+                snap.locate(&probe).map(|p| snap.store().get(p.row())),
+                before,
+                "reads frozen after writer mutates",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn snapshot_outlives_writer_and_freed_segments() {
+        // A published snapshot holds its labels via per-segment Arcs: the
+        // writer can compact, free every segment, and even drop entirely —
+        // the snapshot keeps answering from exactly its publish state.
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3, 4, 5], ());
+        t.insert_suffixes(&[1, 2, 9], ());
+        let snap = t.publish();
+        let pool = t.pool();
+        drop(t); // releases every edge segment in the pool
+        assert_eq!(pool.stats().segments, 0, "writer drop freed all segments");
+        let (len, pos) = snap.deepest_suffix(&[0, 1, 2, 3], 8, ());
+        assert_eq!(len, 3);
+        let (draft, conf) = snap.greedy_walk(pos, 2, ());
+        assert_eq!(draft, vec![4, 5]);
+        assert_eq!(conf.len(), 2);
+        assert!(snap.locate(&[1, 2, 9]).is_some());
+    }
+
+    #[test]
+    fn concurrent_readers_draft_while_writer_absorbs() {
+        // Stress the writer/reader split: one writer keeps inserting and
+        // publishing into a shared cell while reader threads draft from
+        // whatever snapshot is current. Every draft must be valid against
+        // the exact snapshot it came from (recomputed post-hoc on the same
+        // Arc — no torn reads, no panics).
+        use crate::util::cow::SnapshotCell;
+        let mut t = plain(8);
+        t.insert_suffixes(&[1, 2, 3, 4], ());
+        let cell = Arc::new(SnapshotCell::new(Arc::new(t.publish())));
+        let rolls: Vec<Vec<u32>> = (0..48)
+            .map(|i| (0..20).map(|j| 1 + ((i * 7 + j) % 5) as u32).collect())
+            .collect();
+        std::thread::scope(|s| {
+            for r in 0..4 {
+                let cell = Arc::clone(&cell);
+                s.spawn(move || {
+                    for i in 0..400usize {
+                        let snap = cell.load();
+                        let ctx = [1 + ((r + i) % 5) as u32, 1 + (i % 5) as u32];
+                        let (ml, pos) = snap.deepest_suffix(&ctx, 8, ());
+                        let (draft, conf) = snap.greedy_walk(pos, 4, ());
+                        // Recompute against the SAME snapshot: a torn read
+                        // would make these disagree (or panic above).
+                        assert_eq!(snap.deepest_suffix(&ctx, 8, ()), (ml, pos));
+                        assert_eq!(snap.greedy_walk(pos, 4, ()), (draft, conf));
+                        assert_eq!(draft.len(), conf.len());
+                    }
+                });
+            }
+            for roll in &rolls {
+                t.insert_suffixes(roll, ());
+                cell.store(Arc::new(t.publish()));
+            }
+        });
+        assert_eq!(cell.generation(), rolls.len() as u64);
     }
 }

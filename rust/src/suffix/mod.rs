@@ -47,8 +47,11 @@ pub mod trie;
 pub mod window;
 
 pub use array::{SuffixArray, SuffixArrayIndex};
-pub use self::core::{ArenaTrie, CountStore, Counts, PoolStats, SharedPool, TriePos};
-pub use router::PrefixRouter;
+pub use self::core::{
+    ArenaTrie, CountStore, Counts, PoolSnapshot, PoolStats, SharedPool, SnapshotStats, TriePos,
+    TrieSnapshot,
+};
+pub use router::{PrefixRouter, RouterSnapshot};
 pub use tree::{SuffixTree, SENTINEL_BASE};
-pub use trie::SuffixTrieIndex;
-pub use window::{WindowDraft, WindowedIndex};
+pub use trie::{SuffixTrieIndex, SuffixTrieSnapshot};
+pub use window::{WindowDraft, WindowSnapshot, WindowedIndex};

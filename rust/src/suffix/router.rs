@@ -31,9 +31,10 @@
 //! with every generation ever seen (`spec.router_capacity`).
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::store::wire::{Reader, StoreError, Writer};
-use crate::suffix::core::{ArenaTrie, CountStore, SharedPool};
+use crate::suffix::core::{ArenaTrie, CountStore, SharedPool, TrieSnapshot};
 use crate::tokens::TokenId;
 
 /// Per-node shard-owner tables: sorted `(shard, count)` pairs, kept small
@@ -164,6 +165,9 @@ pub struct PrefixRouter {
     /// capacity bound is set so eviction can unregister the oldest.
     recent: HashMap<u32, VecDeque<Vec<TokenId>>>,
     max_gens_per_shard: usize,
+    /// Cached published read view; invalidated by register/unregister so
+    /// [`PrefixRouter::publish`] re-snapshots once per mutation boundary.
+    snap: Option<Arc<RouterSnapshot>>,
 }
 
 impl PrefixRouter {
@@ -192,6 +196,7 @@ impl PrefixRouter {
             trie: ArenaTrie::with_pool(max_depth.max(1), OwnerStore::default(), pool),
             recent: HashMap::new(),
             max_gens_per_shard: max_gens_per_shard.max(1),
+            snap: None,
         }
     }
 
@@ -203,6 +208,7 @@ impl PrefixRouter {
         if generation.is_empty() {
             return;
         }
+        self.snap = None;
         if self.max_gens_per_shard != usize::MAX {
             let prefix: Vec<TokenId> = generation
                 .iter()
@@ -225,7 +231,21 @@ impl PrefixRouter {
     /// prefix was never fully registered — including the empty generation,
     /// which `register` never registers.
     pub fn unregister(&mut self, shard: u32, generation: &[TokenId]) -> bool {
+        self.snap = None;
         Self::unregister_on(&mut self.trie, shard, generation)
+    }
+
+    /// Publish (or reuse) the immutable lock-free routing view covering
+    /// every un/registration so far.
+    pub fn publish(&mut self) -> Arc<RouterSnapshot> {
+        if let Some(s) = &self.snap {
+            return Arc::clone(s);
+        }
+        let s = Arc::new(RouterSnapshot {
+            trie: self.trie.publish(),
+        });
+        self.snap = Some(Arc::clone(&s));
+        s
     }
 
     /// Associated form so `register`'s capacity eviction can run it while
@@ -326,7 +346,34 @@ impl PrefixRouter {
             trie,
             recent,
             max_gens_per_shard,
+            snap: None,
         })
+    }
+}
+
+/// Immutable published view of one [`PrefixRouter`]: the owner trie's
+/// [`TrieSnapshot`], frozen at the publish. Routing takes `&self` over
+/// `Arc`-shared state and acquires no lock — draft-path routing runs on
+/// reader threads while the writer registers/unregisters concurrently.
+#[derive(Debug, Clone)]
+pub struct RouterSnapshot {
+    trie: TrieSnapshot<OwnerStore>,
+}
+
+impl RouterSnapshot {
+    /// See [`PrefixRouter::route`] — same decision, snapshot state.
+    pub fn route(&self, context: &[TokenId]) -> Option<(u32, usize)> {
+        let (node, depth) = self.trie.deepest_visible_prefix(context, ())?;
+        let shard = self.trie.store().top_owner(node)?;
+        Some((shard, depth))
+    }
+
+    /// See [`PrefixRouter::owner_count`].
+    pub fn owner_count(&self, context: &[TokenId]) -> usize {
+        match self.trie.deepest_visible_prefix(context, ()) {
+            Some((node, _)) => self.trie.store().owner_count(node),
+            None => 0,
+        }
     }
 }
 
@@ -369,6 +416,26 @@ mod tests {
         assert_eq!(restored.route(&[10, 11, 12, 13]), r.route(&[10, 11, 12, 13]));
         assert_eq!(restored.route(&[50, 51]), r.route(&[50, 51]));
         assert_eq!(restored.node_count(), r.node_count());
+    }
+
+    #[test]
+    fn published_snapshot_routes_like_live_router_and_freezes() {
+        let mut r = PrefixRouter::new(8);
+        r.register(1, &[10, 11, 12, 13]);
+        r.register(2, &[10, 11, 20, 21]);
+        let snap = r.publish();
+        for ctx in [&[10u32, 11, 12][..], &[10, 11, 20, 99], &[10, 11], &[7]] {
+            assert_eq!(snap.route(ctx), r.route(ctx), "route for {ctx:?}");
+            assert_eq!(snap.owner_count(ctx), r.owner_count(ctx), "owners for {ctx:?}");
+        }
+        let again = r.publish();
+        assert!(Arc::ptr_eq(&snap, &again), "no mutation → cached snapshot");
+        // The writer mutates; the snapshot keeps its publish-point answers.
+        assert!(r.unregister(1, &[10, 11, 12, 13]));
+        assert_eq!(snap.route(&[10, 11, 12]), Some((1, 3)), "frozen at publish");
+        let fresh = r.publish();
+        assert!(!Arc::ptr_eq(&snap, &fresh), "mutation → fresh snapshot");
+        assert_eq!(fresh.route(&[10, 11, 12]), Some((2, 2)));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //!   smallest-token tie-breaking either way.
 
 use crate::store::wire::{Reader, StoreError, Writer};
-use crate::suffix::core::{ArenaTrie, Counts, PoolStats, SharedPool};
+use crate::suffix::core::{ArenaTrie, Counts, PoolStats, SharedPool, SnapshotStats, TrieSnapshot};
 use crate::tokens::TokenId;
 
 #[derive(Debug, Clone)]
@@ -167,6 +167,17 @@ impl SuffixTrieIndex {
         self.trie.pool()
     }
 
+    /// Publish an immutable lock-free read view of the index as of every
+    /// insert so far (an O(chunk-table) clone; see
+    /// [`crate::suffix::core::TrieSnapshot`]).
+    pub fn publish(&self) -> SuffixTrieSnapshot {
+        SuffixTrieSnapshot {
+            trie: self.trie.publish(),
+            tokens_indexed: self.tokens_indexed,
+            rollouts: self.rollouts,
+        }
+    }
+
     /// Serialize the index (counters + counting trie) as one
     /// `das-store-v1` source blob; the pool is saved once by the owner.
     pub fn save_state(&self, w: &mut Writer) {
@@ -199,11 +210,95 @@ impl SuffixTrieIndex {
     }
 }
 
+/// Immutable published view of one [`SuffixTrieIndex`]: the same count /
+/// match / frequency-weighted draft walks over a
+/// [`crate::suffix::core::TrieSnapshot`], frozen at the publish and
+/// answering with zero lock acquisitions. Bit-identical to the live index
+/// at the publish point (property-tested in the drafter layer).
+#[derive(Debug, Clone)]
+pub struct SuffixTrieSnapshot {
+    trie: TrieSnapshot<Counts>,
+    tokens_indexed: usize,
+    rollouts: usize,
+}
+
+impl SuffixTrieSnapshot {
+    pub fn max_depth(&self) -> usize {
+        self.trie.max_depth()
+    }
+
+    /// Size gauges precomputed at publish (no arena rescan).
+    pub fn stats(&self) -> SnapshotStats {
+        self.trie.stats()
+    }
+
+    pub fn tokens_indexed(&self) -> usize {
+        self.tokens_indexed
+    }
+
+    pub fn rollouts(&self) -> usize {
+        self.rollouts
+    }
+
+    /// See [`SuffixTrieIndex::count`].
+    pub fn count(&self, pattern: &[TokenId]) -> u64 {
+        if pattern.len() > self.max_depth() {
+            return 0;
+        }
+        self.trie
+            .locate(pattern)
+            .map(|p| self.trie.store().get(p.row()))
+            .unwrap_or(0)
+    }
+
+    /// See [`SuffixTrieIndex::match_len`].
+    pub fn match_len(&self, context: &[TokenId], max_len: usize) -> usize {
+        self.trie.deepest_suffix(context, max_len, ()).0
+    }
+
+    /// See [`SuffixTrieIndex::draft_weighted_with_match`].
+    pub fn draft_weighted_with_match(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> (Vec<TokenId>, Vec<f32>, usize) {
+        let (mlen, pos) = self.trie.deepest_suffix(context, max_match, ());
+        if mlen == 0 || budget == 0 {
+            return (Vec::new(), Vec::new(), mlen);
+        }
+        let (tokens, confidence) = self.trie.greedy_walk(pos, budget, ());
+        (tokens, confidence, mlen)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::suffix::tree::SuffixTree;
     use crate::util::prop;
+
+    #[test]
+    fn published_snapshot_answers_like_live_index_and_freezes() {
+        let mut idx = SuffixTrieIndex::new(8);
+        idx.insert(&[5, 7, 1]);
+        idx.insert(&[5, 7, 2]);
+        idx.insert(&[5, 9, 3]);
+        let snap = idx.publish();
+        assert_eq!(snap.count(&[5, 7]), idx.count(&[5, 7]));
+        assert_eq!(snap.match_len(&[0, 5, 7], 4), idx.match_len(&[0, 5, 7], 4));
+        assert_eq!(
+            snap.draft_weighted_with_match(&[0, 0, 5], 4, 2),
+            idx.draft_weighted_with_match(&[0, 0, 5], 4, 2),
+        );
+        assert_eq!(snap.stats().nodes, idx.node_count());
+        assert_eq!(snap.stats().heap_bytes, idx.approx_bytes());
+        assert_eq!((snap.tokens_indexed(), snap.rollouts()), (9, 3));
+        // Mutating the writer leaves the snapshot at its publish point.
+        idx.insert(&[5, 9, 4]);
+        assert_eq!(snap.count(&[5, 9]), 1);
+        assert_eq!(idx.count(&[5, 9]), 2);
+    }
 
     #[test]
     fn counts_are_occurrences() {

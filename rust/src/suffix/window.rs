@@ -50,10 +50,14 @@
 //! epochs already outside the window are dropped (Fig. 2's drift argument).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::store::wire::{Reader, StoreError, Writer};
-use crate::suffix::core::{ArenaTrie, CountStore, PoolStats, SharedPool, TriePos};
+use crate::suffix::core::{
+    ArenaTrie, CountStore, PoolStats, SharedPool, SnapshotStats, TriePos, TrieSnapshot,
+};
 use crate::tokens::{Epoch, TokenId};
+use crate::util::cow::CowVec;
 
 /// One candidate draft from one epoch.
 #[derive(Debug, Clone)]
@@ -70,9 +74,17 @@ pub struct WindowedIndex {
     /// Window size in epochs; 0 = unbounded ("window_all" in Fig. 7).
     pub window: usize,
     /// Multiplicative per-epoch age discount applied to match length when
-    /// ranking candidate drafts across epochs.
+    /// ranking candidate drafts across epochs. Baked into each published
+    /// snapshot — a change takes effect at the next publish boundary.
     pub age_discount: f64,
     fused: FusedEpochTrie,
+    /// Cached published read view; invalidated by every mutation so
+    /// [`WindowedIndex::publish`] re-snapshots exactly once per
+    /// absorb/epoch boundary and is free between them.
+    snap: Option<Arc<WindowSnapshot>>,
+    /// Distinct snapshots actually published (cache misses) — the
+    /// `IndexStats::snapshot_publishes` gauge.
+    publishes: u64,
 }
 
 impl WindowedIndex {
@@ -87,6 +99,8 @@ impl WindowedIndex {
             window,
             age_discount: 0.85,
             fused: FusedEpochTrie::new(window, max_depth, pool),
+            snap: None,
+            publishes: 0,
         }
     }
 
@@ -107,12 +121,39 @@ impl WindowedIndex {
     /// non-decreasing; a late arrival is indexed under its true epoch while
     /// it is still inside the window and dropped once it is not.
     pub fn insert(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        self.snap = None;
         self.fused.insert_rollout(epoch, tokens);
     }
 
     /// Start a new (possibly empty) epoch and evict stale ones.
     pub fn roll_epoch(&mut self, epoch: Epoch) {
+        self.snap = None;
         self.fused.roll_epoch(epoch);
+    }
+
+    /// Publish (or reuse) the immutable lock-free read view covering every
+    /// mutation so far. Cheap between mutations (an `Arc` clone of the
+    /// cached view); after an `insert`/`roll_epoch` the first call
+    /// re-publishes — O(chunk-table) clones of the arena, count rows, and
+    /// pool slots, with size gauges precomputed onto the snapshot.
+    pub fn publish(&mut self) -> Arc<WindowSnapshot> {
+        if let Some(s) = &self.snap {
+            return Arc::clone(s);
+        }
+        self.publishes += 1;
+        let s = Arc::new(WindowSnapshot {
+            trie: self.fused.trie.publish(),
+            newest: self.fused.newest,
+            live: self.fused.live.iter().copied().collect(),
+            age_discount: self.age_discount,
+        });
+        self.snap = Some(Arc::clone(&s));
+        s
+    }
+
+    /// Distinct snapshots published so far (cache hits excluded).
+    pub fn snapshot_publishes(&self) -> u64 {
+        self.publishes
     }
 
     /// Best draft across the window. Candidates are ranked by
@@ -237,6 +278,7 @@ impl WindowedIndex {
             ));
         }
         self.age_discount = age_discount;
+        self.snap = None;
         self.fused = FusedEpochTrie {
             trie,
             window,
@@ -253,7 +295,95 @@ impl WindowedIndex {
     /// property test to exercise compaction on small arenas).
     #[cfg(test)]
     pub(crate) fn compact_now(&mut self) {
+        self.snap = None;
         self.fused.compact_now();
+    }
+}
+
+/// Immutable published view of one [`WindowedIndex`]: the fused epoch
+/// trie's [`TrieSnapshot`] plus the live-epoch bookkeeping the ranking
+/// rule needs, frozen exactly as of the [`WindowedIndex::publish`] call.
+/// `draft` takes `&self` over `Arc`-shared state and acquires no lock —
+/// any number of reader threads draft concurrently while the writer
+/// absorbs; they simply see the window as of the last publish boundary
+/// (one absorb round of staleness, surfaced by the
+/// `draft_snapshot_lag_epochs` gauge).
+#[derive(Debug, Clone)]
+pub struct WindowSnapshot {
+    trie: TrieSnapshot<EpochStore>,
+    newest: Option<Epoch>,
+    /// Distinct live epochs at publish, ascending.
+    live: Vec<Epoch>,
+    age_discount: f64,
+}
+
+impl WindowSnapshot {
+    pub fn newest_epoch(&self) -> Option<Epoch> {
+        self.newest
+    }
+
+    /// Distinct live epochs as of the publish.
+    pub fn bucket_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Size gauges precomputed at publish (no arena rescan).
+    pub fn stats(&self) -> SnapshotStats {
+        self.trie.stats()
+    }
+
+    /// Best draft across the window as of the publish — the same
+    /// deepest-match → suffix-chain → `match_len · age_discount^age`
+    /// pipeline as [`WindowedIndex::draft`], walking the snapshot. Given
+    /// the same publish point the two are bit-identical (property-tested).
+    pub fn draft(
+        &self,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> Option<WindowDraft> {
+        if budget == 0 {
+            return None;
+        }
+        let newest = self.newest?;
+        let (take_max, pos) =
+            self.trie
+                .deepest_suffix(context, max_match, EpochFilter::AnyLive { newest });
+        if take_max == 0 {
+            return None;
+        }
+        let matched = &context[context.len() - take_max..];
+        let live_total = self.live.len();
+        let mut cands: Vec<(f64, Epoch, usize, TriePos)> = Vec::new();
+        self.trie.walk_suffix_chain(matched, pos, |take, p| {
+            self.trie.store().for_each_live(p.row(), newest, |epoch, _count| {
+                if !cands.iter().any(|&(_, e, _, _)| e == epoch) {
+                    let age = (newest - epoch) as f64;
+                    let score = take as f64 * self.age_discount.powf(age);
+                    cands.push((score, epoch, take, p));
+                }
+            });
+            cands.len() < live_total
+        });
+        cands.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.1.cmp(&a.1))
+        });
+        for &(score, epoch, mlen, p) in &cands {
+            let (tokens, confidence) =
+                self.trie.greedy_walk(p, budget, EpochFilter::Exact { epoch });
+            if !tokens.is_empty() {
+                return Some(WindowDraft {
+                    tokens,
+                    confidence,
+                    match_len: mlen,
+                    epoch,
+                    score,
+                });
+            }
+        }
+        None
     }
 }
 
@@ -275,10 +405,16 @@ struct Slot {
 enum Rows {
     /// Bounded window: node `i` owns `slots[i*cap .. (i+1)*cap]`, slot
     /// index `epoch % cap`, lazily reclaimed on tag mismatch.
-    Dense { slots: Vec<Slot>, cap: usize },
+    Dense { slots: CowVec<Slot>, cap: usize },
     /// `window_all`: per-node sorted `(epoch, count)` lists — linear in
     /// distinct (node, epoch) pairs, no re-striding, unbounded epochs.
-    Sparse { rows: Vec<Vec<(Epoch, u64)>> },
+    /// `entries` counts the total (epoch, count) pairs across all rows so
+    /// `heap_bytes` stays O(1) — publication stamps it onto every
+    /// snapshot, and a rescan per publish would defeat that.
+    Sparse {
+        rows: CowVec<Vec<(Epoch, u64)>>,
+        entries: usize,
+    },
 }
 
 #[derive(Debug, Clone)]
@@ -302,9 +438,9 @@ impl EpochStore {
     fn new(window: usize) -> Self {
         EpochStore {
             rows: if window == 0 {
-                Rows::Sparse { rows: Vec::new() }
+                Rows::Sparse { rows: CowVec::new(), entries: 0 }
             } else {
-                Rows::Dense { slots: Vec::new(), cap: window }
+                Rows::Dense { slots: CowVec::new(), cap: window }
             },
             window,
             n_nodes: 0,
@@ -328,7 +464,7 @@ impl EpochStore {
                     0
                 }
             }
-            Rows::Sparse { rows } => rows[node]
+            Rows::Sparse { rows, .. } => rows[node]
                 .binary_search_by_key(&epoch, |&(e, _)| e)
                 .map(|i| rows[node][i].1)
                 .unwrap_or(0),
@@ -339,13 +475,14 @@ impl EpochStore {
     fn for_each_live<F: FnMut(Epoch, u64)>(&self, node: usize, newest: Epoch, mut f: F) {
         match &self.rows {
             Rows::Dense { slots, cap } => {
-                for s in &slots[node * cap..(node + 1) * cap] {
+                for i in node * cap..(node + 1) * cap {
+                    let s = &slots[i];
                     if s.count > 0 && self.in_window(newest, s.epoch) {
                         f(s.epoch, s.count);
                     }
                 }
             }
-            Rows::Sparse { rows } => {
+            Rows::Sparse { rows, .. } => {
                 for &(e, c) in &rows[node] {
                     if c > 0 && self.in_window(newest, e) {
                         f(e, c);
@@ -363,8 +500,8 @@ impl CountStore for EpochStore {
     fn new_empty(&self) -> Self {
         EpochStore {
             rows: match &self.rows {
-                Rows::Dense { cap, .. } => Rows::Dense { slots: Vec::new(), cap: *cap },
-                Rows::Sparse { .. } => Rows::Sparse { rows: Vec::new() },
+                Rows::Dense { cap, .. } => Rows::Dense { slots: CowVec::new(), cap: *cap },
+                Rows::Sparse { .. } => Rows::Sparse { rows: CowVec::new(), entries: 0 },
             },
             window: self.window,
             n_nodes: 0,
@@ -374,9 +511,11 @@ impl CountStore for EpochStore {
     fn push_node(&mut self) {
         match &mut self.rows {
             Rows::Dense { slots, cap } => {
-                slots.extend(std::iter::repeat(Slot::default()).take(*cap));
+                for _ in 0..*cap {
+                    slots.push(Slot::default());
+                }
             }
-            Rows::Sparse { rows } => rows.push(Vec::new()),
+            Rows::Sparse { rows, .. } => rows.push(Vec::new()),
         }
         self.n_nodes += 1;
     }
@@ -395,16 +534,25 @@ impl CountStore for EpochStore {
                 }
                 s.count += 1;
             }
-            Rows::Sparse { rows } => {
+            Rows::Sparse { rows, entries } => {
                 let row = &mut rows[node];
                 match row.last().copied() {
                     Some((e, _)) if e == epoch => row.last_mut().expect("nonempty").1 += 1,
-                    Some((e, _)) if e < epoch => row.push((epoch, 1)),
-                    None => row.push((epoch, 1)),
+                    Some((e, _)) if e < epoch => {
+                        row.push((epoch, 1));
+                        *entries += 1;
+                    }
+                    None => {
+                        row.push((epoch, 1));
+                        *entries += 1;
+                    }
                     // Late arrival behind the row's newest epoch.
                     Some(_) => match row.binary_search_by_key(&epoch, |&(e, _)| e) {
                         Ok(i) => row[i].1 += 1,
-                        Err(i) => row.insert(i, (epoch, 1)),
+                        Err(i) => {
+                            row.insert(i, (epoch, 1));
+                            *entries += 1;
+                        }
                     },
                 }
             }
@@ -416,13 +564,12 @@ impl CountStore for EpochStore {
             EpochFilter::Exact { epoch } => self.epoch_count(node, epoch),
             EpochFilter::AnyLive { newest } => match &self.rows {
                 Rows::Dense { slots, cap } => {
-                    let live = slots[node * cap..(node + 1) * cap]
-                        .iter()
-                        .any(|s| s.count > 0 && self.in_window(newest, s.epoch));
+                    let live = (node * cap..(node + 1) * cap)
+                        .any(|i| slots[i].count > 0 && self.in_window(newest, slots[i].epoch));
                     live as u64
                 }
                 // window_all never evicts: any recorded epoch is live.
-                Rows::Sparse { rows } => (!rows[node].is_empty()) as u64,
+                Rows::Sparse { rows, .. } => (!rows[node].is_empty()) as u64,
             },
         }
     }
@@ -431,10 +578,14 @@ impl CountStore for EpochStore {
         match (&mut self.rows, &src.rows) {
             (Rows::Dense { slots, cap }, Rows::Dense { slots: ss, cap: sc }) => {
                 debug_assert_eq!(*cap, *sc);
-                slots.extend_from_slice(&ss[old * sc..(old + 1) * sc]);
+                for i in old * sc..(old + 1) * sc {
+                    slots.push(ss[i]);
+                }
             }
-            (Rows::Sparse { rows }, Rows::Sparse { rows: sr }) => {
-                rows.push(sr[old].clone());
+            (Rows::Sparse { rows, entries }, Rows::Sparse { rows: sr, .. }) => {
+                let row = sr[old].clone();
+                *entries += row.len();
+                rows.push(row);
             }
             _ => unreachable!("epoch row layouts never mix"),
         }
@@ -445,11 +596,14 @@ impl CountStore for EpochStore {
         match &mut self.rows {
             Rows::Dense { slots, cap } => {
                 let base = child * *cap;
-                let row: Vec<Slot> = slots[base..base + *cap].to_vec();
-                slots.extend_from_slice(&row);
+                for i in base..base + *cap {
+                    let s = slots[i];
+                    slots.push(s);
+                }
             }
-            Rows::Sparse { rows } => {
+            Rows::Sparse { rows, entries } => {
                 let row = rows[child].clone();
+                *entries += row.len();
                 rows.push(row);
             }
         }
@@ -457,14 +611,18 @@ impl CountStore for EpochStore {
     }
 
     fn heap_bytes(&self) -> usize {
+        // O(1) on both layouts: publication stamps this onto every
+        // snapshot, so it must not rescan the rows.
         match &self.rows {
-            Rows::Dense { slots, .. } => slots.len() * std::mem::size_of::<Slot>(),
-            Rows::Sparse { rows } => {
+            Rows::Dense { slots, .. } => slots.heap_bytes(),
+            Rows::Sparse { rows, entries } => {
+                debug_assert_eq!(
+                    *entries,
+                    rows.iter().map(|r| r.len()).sum::<usize>(),
+                    "sparse epoch-entry counter drifted"
+                );
                 rows.len() * std::mem::size_of::<Vec<(Epoch, u64)>>()
-                    + rows
-                        .iter()
-                        .map(|r| r.len() * std::mem::size_of::<(Epoch, u64)>())
-                        .sum::<usize>()
+                    + *entries * std::mem::size_of::<(Epoch, u64)>()
             }
         }
     }
@@ -477,14 +635,14 @@ impl CountStore for EpochStore {
             Rows::Dense { slots, cap } => {
                 w.u8(0);
                 w.usize(*cap);
-                for s in slots {
+                for s in slots.iter() {
                     w.u32(s.epoch);
                     w.u64(s.count);
                 }
             }
-            Rows::Sparse { rows } => {
+            Rows::Sparse { rows, .. } => {
                 w.u8(1);
-                for row in rows {
+                for row in rows.iter() {
                     w.usize(row.len());
                     for &(e, c) in row {
                         w.u32(e);
@@ -518,7 +676,7 @@ impl CountStore for EpochStore {
                 if total.saturating_mul(12) > r.remaining() {
                     return Err(StoreError::Truncated);
                 }
-                let mut slots = Vec::with_capacity(total);
+                let mut slots = CowVec::new();
                 for _ in 0..total {
                     slots.push(Slot {
                         epoch: r.u32()?,
@@ -533,7 +691,8 @@ impl CountStore for EpochStore {
                         "sparse epoch rows under bounded window {window}"
                     )));
                 }
-                let mut rows = Vec::with_capacity(n);
+                let mut rows = CowVec::new();
+                let mut entries = 0usize;
                 for _ in 0..n {
                     let len = r.count(12)?;
                     let mut row = Vec::with_capacity(len);
@@ -549,9 +708,10 @@ impl CountStore for EpochStore {
                         prev = Some(e);
                         row.push((e, c));
                     }
+                    entries += row.len();
                     rows.push(row);
                 }
-                Rows::Sparse { rows }
+                Rows::Sparse { rows, entries }
             }
             t => {
                 return Err(StoreError::Corrupt(format!("unknown epoch row layout {t}")));
@@ -1413,6 +1573,105 @@ mod tests {
             )?;
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_published_snapshot_drafts_match_live_index() {
+        // Tentpole anchor for the window layer: at every publish point, the
+        // lock-free WindowSnapshot must draft bit-identically (tokens,
+        // confidences, match_len, epoch, score) to the live locked index —
+        // bounded windows AND window_all, across rolls, late arrivals, and
+        // forced compaction sweeps. And a snapshot taken before a mutation
+        // must keep answering from its publish state afterwards.
+        prop::check(96, |g| {
+            let win = g.usize_in(0, 6); // 0 = window_all
+            let alphabet = 1 + g.usize_in(1, 5) as u32;
+            let mut w = WindowedIndex::new(win, 10);
+            let mut epoch: Epoch = 0;
+            let mut stale: Option<(Arc<WindowSnapshot>, Vec<u32>, Option<WindowDraft>)> = None;
+            for _ in 0..g.usize_in(1, 25) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        epoch += 1;
+                        w.roll_epoch(epoch);
+                    }
+                    1 if epoch > 0 => {
+                        let r = g.vec_u32_nonempty(alphabet, 20);
+                        w.insert(epoch - 1, &r); // late arrival
+                    }
+                    _ => {
+                        let r = g.vec_u32_nonempty(alphabet, 20);
+                        w.insert(epoch, &r);
+                    }
+                }
+                if win != 0 && g.usize_in(0, 7) == 0 {
+                    w.compact_now();
+                }
+                let snap = w.publish();
+                prop::require_eq(snap.newest_epoch(), w.newest_epoch(), "newest epoch")?;
+                prop::require_eq(snap.bucket_count(), w.bucket_count(), "live epochs")?;
+                prop::require_eq(snap.stats().nodes, w.node_count(), "stat nodes")?;
+                prop::require_eq(snap.stats().heap_bytes, w.approx_bytes(), "stat bytes")?;
+                for _ in 0..4 {
+                    let ctx = g.vec_u32_nonempty(alphabet, 12);
+                    let budget = 1 + g.usize_in(0, 5);
+                    let a = snap.draft(&ctx, 6, budget);
+                    let b = w.draft(&ctx, 6, budget);
+                    match (a, b) {
+                        (None, None) => {}
+                        (Some(x), Some(y)) => {
+                            prop::require_eq(x.tokens, y.tokens, "draft tokens")?;
+                            prop::require_eq(x.confidence, y.confidence, "draft confidence")?;
+                            prop::require_eq(x.match_len, y.match_len, "draft match_len")?;
+                            prop::require_eq(x.epoch, y.epoch, "draft epoch")?;
+                            prop::require((x.score - y.score).abs() < 1e-12, "draft score")?;
+                        }
+                        (a, b) => prop::require(
+                            false,
+                            &format!("presence diverged: snap={a:?} live={b:?}"),
+                        )?,
+                    }
+                }
+                // Record one (snapshot, probe, answer) triple to check
+                // staleness freezing at the end of the stream.
+                if stale.is_none() {
+                    let probe = g.vec_u32_nonempty(alphabet, 8);
+                    let ans = snap.draft(&probe, 6, 4);
+                    stale = Some((snap, probe, ans));
+                }
+            }
+            if let Some((snap, probe, ans)) = stale {
+                let now = snap.draft(&probe, 6, 4);
+                prop::require_eq(
+                    now.map(|d| (d.tokens, d.epoch)),
+                    ans.map(|d| (d.tokens, d.epoch)),
+                    "snapshot frozen at its publish point",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn publish_is_cached_between_mutations() {
+        let mut w = WindowedIndex::new(4, 8);
+        w.insert(0, &[1, 2, 3]);
+        let a = w.publish();
+        let b = w.publish();
+        assert!(Arc::ptr_eq(&a, &b), "no mutation → same snapshot");
+        assert_eq!(w.snapshot_publishes(), 1);
+        w.insert(0, &[4, 5, 6]);
+        let c = w.publish();
+        assert!(!Arc::ptr_eq(&a, &c), "mutation → fresh snapshot");
+        assert_eq!(w.snapshot_publishes(), 2);
+        w.roll_epoch(1);
+        w.publish();
+        assert_eq!(w.snapshot_publishes(), 3);
+        // The stale snapshot still answers from its own publish point.
+        assert!(a.draft(&[1, 2], 4, 1).is_some());
+        assert!(a.draft(&[4, 5], 4, 1).is_none(), "post-publish insert invisible");
+        assert!(c.draft(&[4, 5], 4, 1).is_some());
+        assert_eq!(a.newest_epoch(), Some(0));
     }
 
     #[test]

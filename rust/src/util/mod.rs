@@ -9,6 +9,7 @@
 
 pub mod argparse;
 pub mod bench;
+pub mod cow;
 pub mod json;
 pub mod prop;
 pub mod rng;

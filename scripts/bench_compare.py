@@ -1,17 +1,18 @@
 #!/usr/bin/env python3
 """Compare two das-bench-v1 JSON files and fail on perf regressions.
 
-Usage: bench_compare.py BASELINE.json FRESH.json [max_regression]
+Usage: bench_compare.py [--require-baseline] BASELINE.json FRESH.json [max_regression]
 
 For every named bench present in BOTH files, compare fresh median_ns
 against the baseline's. Exit 1 if any bench regressed by more than
 ``max_regression`` (default 0.25, i.e. fresh > 1.25x baseline). Benches
 present in only one file are reported but never fail the run (renames and
-new benches are not regressions). An empty baseline (the seed state before
-CI first refreshes the committed JSON) passes trivially.
+new benches are not regressions).
 
-This is the first brick of the ROADMAP perf-trajectory gate: CI snapshots
-the committed BENCH_*.json before re-running the benches, then diffs.
+An empty baseline passes with a loud warning by default (the historical
+committed-JSON seed state), or fails outright under ``--require-baseline``
+— the mode CI uses now that the baseline is regenerated from the merge
+base on every run, where "empty" can only mean the gate is broken.
 """
 
 import json
@@ -28,23 +29,26 @@ def load(path):
 
 
 def main():
-    if len(sys.argv) < 3:
+    require_baseline = "--require-baseline" in sys.argv[1:]
+    args = [a for a in sys.argv[1:] if a != "--require-baseline"]
+    if len(args) < 2:
         sys.exit(__doc__)
-    base_path, fresh_path = sys.argv[1], sys.argv[2]
-    max_regression = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
+    base_path, fresh_path = args[0], args[1]
+    max_regression = float(args[2]) if len(args) > 2 else 0.25
     base = load(base_path)
     fresh = load(fresh_path)
 
     if not base:
-        # Pass, but LOUDLY: an empty baseline means the perf gate is not
-        # actually gating anything. CI surfaces stderr, so a quietly-stale
-        # committed baseline can't masquerade as a green perf check.
         msg = (
             f"baseline {base_path} has empty 'results' — the perf gate "
-            f"cannot detect regressions until a populated baseline is "
-            f"committed (run the bench with --json {base_path} on a quiet "
-            f"machine and commit the refreshed file)"
+            f"cannot detect regressions against it"
         )
+        if require_baseline:
+            # CI regenerates the baseline from the merge base, so an empty
+            # one means the gate itself is broken — fail, don't warn.
+            sys.exit(f"FAIL: {msg} (--require-baseline)")
+        # Legacy committed-JSON mode: pass, but LOUDLY, so a quietly-stale
+        # baseline can't masquerade as a green perf check.
         print(f"WARNING: {msg}", file=sys.stderr)
         if os.environ.get("GITHUB_ACTIONS") == "true":
             # Workflow-command annotation: shows on the run summary and the
