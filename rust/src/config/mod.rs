@@ -109,6 +109,13 @@ pub struct SpecConfig {
     /// many workers drafting against a published snapshot while the writer
     /// absorbs finished rollouts concurrently.
     pub draft_threads: usize,
+    /// Speculative-budget multiplier for requests resumed after a
+    /// preemption (checkpointed off a straggler, migrated to an idle
+    /// worker). A migrated request is a known straggler, so drafting
+    /// deeper is nearly free on the otherwise-idle destination. 1.0 = no
+    /// escalation; clamped to [1, 8] and always bounded by
+    /// `spec.budget_cap` at apply time.
+    pub resume_budget_boost: f64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -251,6 +258,14 @@ impl DasConfig {
         read_field!(j, self, "spec", "store_dir", string, self.spec.store_dir);
         read_field!(j, self, "spec", "snapshot_every", usize, self.spec.snapshot_every);
         read_field!(j, self, "spec", "draft_threads", usize, self.spec.draft_threads);
+        read_field!(
+            j,
+            self,
+            "spec",
+            "resume_budget_boost",
+            f64,
+            self.spec.resume_budget_boost
+        );
 
         read_field!(j, self, "train", "steps", usize, self.train.steps);
         read_field!(j, self, "train", "problems_per_step", usize, self.train.problems_per_step);
@@ -311,8 +326,11 @@ impl DasConfig {
         if self.rollout.n_workers == 0 {
             return e("rollout.n_workers must be >= 1".into());
         }
-        if let Err(m) = crate::rollout::faults::FaultPlan::parse(&self.rollout.fault_plan) {
-            return e(format!("rollout.fault_plan invalid: {m}"));
+        match crate::rollout::faults::FaultPlan::parse(&self.rollout.fault_plan) {
+            Err(m) => return e(format!("rollout.fault_plan invalid: {m}")),
+            // Syntax check only — this plan is never installed, so its
+            // drop-time unfired audit must stay quiet.
+            Ok(p) => p.disarm_drop_audit(),
         }
         if !matches!(self.spec.drafter.as_str(), "das" | "static" | "none") {
             return e(format!("spec.drafter must be das|static|none, got '{}'", self.spec.drafter));
@@ -349,6 +367,14 @@ impl DasConfig {
         }
         if self.spec.snapshot_every == 0 {
             return e("spec.snapshot_every must be >= 1".into());
+        }
+        if !self.spec.resume_budget_boost.is_finite()
+            || !(1.0..=8.0).contains(&self.spec.resume_budget_boost)
+        {
+            return e(format!(
+                "spec.resume_budget_boost must be a finite number in [1, 8], got {}",
+                self.spec.resume_budget_boost
+            ));
         }
         if !matches!(self.workload.kind.as_str(), "math" | "code" | "trace") {
             return e(format!(
@@ -410,6 +436,10 @@ impl DasConfig {
                     ("store_dir", Json::str(&self.spec.store_dir)),
                     ("snapshot_every", Json::num(self.spec.snapshot_every as f64)),
                     ("draft_threads", Json::num(self.spec.draft_threads as f64)),
+                    (
+                        "resume_budget_boost",
+                        Json::num(self.spec.resume_budget_boost),
+                    ),
                 ]),
             ),
             (
@@ -540,6 +570,24 @@ mod tests {
         assert_eq!(cfg.rollout.fault_plan, "store-fail epoch=2");
         assert!(cfg.set("rollout.fault_plan=reboot now").is_err(), "plans are validated");
         assert!(cfg.set("rollout.n_workers=0").is_err(), "zero workers rejected");
+    }
+
+    #[test]
+    fn resume_budget_boost_parsed_and_clamped() {
+        let mut cfg = DasConfig::default();
+        assert!(
+            cfg.spec.resume_budget_boost >= 1.0,
+            "presets escalate resumed stragglers"
+        );
+        cfg.set("spec.resume_budget_boost=1.5").unwrap();
+        assert!((cfg.spec.resume_budget_boost - 1.5).abs() < 1e-12);
+        cfg.set("spec.resume_budget_boost=1").unwrap(); // no escalation is legal
+        assert!(cfg.set("spec.resume_budget_boost=0.5").is_err(), "shrinking rejected");
+        assert!(cfg.set("spec.resume_budget_boost=9").is_err(), "runaway rejected");
+        assert!(cfg.set("spec.resume_budget_boost=nan").is_err(), "non-finite rejected");
+        let cfg = DasConfig::from_json_text(r#"{"spec": {"resume_budget_boost": 3.0}}"#)
+            .unwrap();
+        assert!((cfg.spec.resume_budget_boost - 3.0).abs() < 1e-12);
     }
 
     #[test]

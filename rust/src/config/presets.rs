@@ -47,6 +47,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 store_dir: String::new(),
                 snapshot_every: 4,
                 draft_threads: 0,
+                resume_budget_boost: 2.0,
             },
             train: TrainConfig {
                 steps: 30,
@@ -102,6 +103,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 store_dir: String::new(),
                 snapshot_every: 4,
                 draft_threads: 0,
+                resume_budget_boost: 2.0,
             },
             train: TrainConfig {
                 steps: 30,
@@ -155,6 +157,7 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 store_dir: String::new(),
                 snapshot_every: 2,
                 draft_threads: 0,
+                resume_budget_boost: 2.0,
             },
             train: TrainConfig {
                 steps: 40,

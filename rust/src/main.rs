@@ -297,18 +297,23 @@ fn run_chaos_harness(mut cfg: DasConfig, plan: &str, workers: usize) -> Result<(
         for m in &rep.per_worker {
             totals.degraded_requests += m.degraded_requests;
             totals.store_failures += m.store_failures;
+            totals.preemptions += m.preemptions;
+            totals.resume_budget_boost = totals.resume_budget_boost.max(m.resume_budget_boost);
         }
         println!(
             "step {:>3}  {}  rollouts {:>4}  restarts {}  redispatched {}  steals {}  \
-             degraded {}  store-failures {}",
+             preempted {}  migrated {}  degraded {}  store-failures {}  makespan/oracle {:.2}",
             step,
             if ok { "match" } else { "MISMATCH" },
             keys.len(),
             rep.supervision.worker_restarts,
             rep.supervision.jobs_redispatched,
             rep.supervision.deadline_steals,
+            rep.per_worker.iter().map(|m| m.preemptions).sum::<u64>(),
+            rep.supervision.migrated_requests,
             rep.per_worker.iter().map(|m| m.degraded_requests).sum::<u64>(),
             rep.per_worker.iter().map(|m| m.store_failures).sum::<u64>(),
+            rep.supervision.makespan_vs_oracle,
         );
     }
     let unfired = dp.fault_plan().unfired();
@@ -317,12 +322,16 @@ fn run_chaos_harness(mut cfg: DasConfig, plan: &str, workers: usize) -> Result<(
         std::fs::remove_dir_all(&dir).ok();
     }
     println!(
-        "chaos totals: restarts {}  redispatched {}  steals {}  degraded {}  store-failures {}",
+        "chaos totals: restarts {}  redispatched {}  steals {}  preempted {}  migrated {}  \
+         degraded {}  store-failures {}  worst makespan/oracle {:.2}",
         totals.worker_restarts,
         totals.jobs_redispatched,
         totals.deadline_steals,
+        totals.preemptions,
+        totals.migrated_requests,
         totals.degraded_requests,
-        totals.store_failures
+        totals.store_failures,
+        totals.makespan_vs_oracle,
     );
     anyhow::ensure!(
         violations == 0,
@@ -333,6 +342,22 @@ fn run_chaos_harness(mut cfg: DasConfig, plan: &str, workers: usize) -> Result<(
         "fault directives never fired (out-of-range worker/step/epoch?): {}",
         unfired.join("; ")
     );
+    if parsed.preempt_count() > 0 {
+        // A fired preempt directive must leave its full footprint: a frozen
+        // chunk, migrated checkpoints, and the escalated-budget gauge.
+        anyhow::ensure!(
+            totals.preemptions > 0 && totals.migrated_requests > 0,
+            "preempt directive fired but left no preemption footprint \
+             (preemptions {}, migrated {})",
+            totals.preemptions,
+            totals.migrated_requests
+        );
+        anyhow::ensure!(
+            totals.resume_budget_boost >= 1.0,
+            "resumed requests must surface their budget boost (got {})",
+            totals.resume_budget_boost
+        );
+    }
     println!("chaos equivalence OK: outputs identical, all {} faults fired", parsed.len());
     Ok(())
 }
@@ -412,6 +437,17 @@ fn cmd_store(argv: &[String]) -> Result<()> {
     let dir = args
         .get("dir")
         .ok_or_else(|| anyhow::anyhow!("--dir required\n{usage}"))?;
+    // Coordinator sidecar (DP runs write <dir>/coordinator.das next to the
+    // per-worker stores): checksum it on the same read-only path. Drift is
+    // fatal for `verify`, reported-but-tolerated for inspect/compact.
+    match das::rollout::verify_coordinator_sidecar(Path::new(dir)) {
+        Ok(None) => {}
+        Ok(Some(bytes)) => println!("coordinator sidecar: {bytes} bytes, checksum OK"),
+        Err(e) if action == "verify" => {
+            anyhow::bail!("coordinator sidecar corrupt or unreadable: {e}")
+        }
+        Err(e) => println!("coordinator sidecar: CORRUPT ({e})"),
+    }
     // inspect/verify are diagnostics: go through the read-only view so
     // they never repair (truncate/reset) the store being examined and work
     // on read-only media; only compact opens for writing.

@@ -106,6 +106,17 @@ impl Batcher {
         std::mem::take(&mut self.finished)
     }
 
+    /// Drain every request that has NOT finished — active slots and the
+    /// pending queue — handing them to the caller for checkpointing. The
+    /// drained requests leave this batcher's conservation ledger (they will
+    /// be re-submitted elsewhere), so `conserved()` keeps holding here.
+    pub fn take_unfinished(&mut self) -> Vec<RolloutRequest> {
+        let mut out: Vec<RolloutRequest> = self.active.drain(..).collect();
+        out.extend(self.pending.drain(..));
+        self.submitted -= out.len();
+        out
+    }
+
     /// Conservation check: submitted == active + pending + finished.
     pub fn conserved(&self) -> bool {
         self.submitted == self.active.len() + self.pending.len() + self.finished.len()
@@ -252,6 +263,31 @@ mod tests {
         }
         assert_eq!(served, vec![0, 1, 2, 3], "strict submission order");
         assert_eq!(b.finished().len(), 4);
+    }
+
+    #[test]
+    fn take_unfinished_drains_active_and_pending_and_conserves() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.submit(req(i));
+        }
+        b.recycle();
+        b.active_mut()[0].state = RequestState::FinishedEos;
+        let done = b.recycle();
+        b.archive(done);
+        assert_eq!(b.finished().len(), 1);
+        // 4 unfinished remain: 2 active + 2 pending.
+        let taken = b.take_unfinished();
+        assert_eq!(taken.len(), 4);
+        assert!(b.conserved(), "ledger shrinks with the drained requests");
+        assert_eq!(b.effective_batch(), 0);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.finished().len(), 1, "finished stay archived");
+        let mut ids: Vec<u64> = taken.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        // Exactly the four requests that had not finished, each once.
+        assert_eq!(ids.len(), 4);
+        assert!(ids.iter().all(|&i| i < 5));
     }
 
     #[test]

@@ -31,17 +31,18 @@
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::batcher::Batcher;
 use super::faults::FaultPlan;
 use super::metrics::StepMetrics;
-use super::request::RolloutRequest;
+use super::request::{RequestCheckpoint, RolloutRequest};
 use crate::config::DasConfig;
 use crate::drafter::{DraftOutcome, Drafter};
 use crate::model::{StepInput, TargetModel};
-use crate::spec::budget::{solve as solve_budget, BudgetRequest};
+use crate::spec::budget::{escalate, solve as solve_budget, BudgetRequest};
 use crate::spec::{verify_greedy, verify_sampling, AcceptanceEstimator, LengthClass, LengthPolicy};
 use crate::store::{replay_wal, HistoryStore, StoreError, StoreStatus, WalRecord};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
@@ -85,6 +86,11 @@ pub struct StepReport {
     /// tokens). Feeds acceptance-aware LPT cost prediction in coordinators
     /// that aggregate many engines (`DataParallelRollout`).
     pub accept_obs: Vec<(ProblemId, u64, u64)>,
+    /// Unfinished requests frozen at a verification-round boundary when the
+    /// step was preempted (empty on a normal step). The coordinator
+    /// re-dispatches these to idle workers; `RolloutEngine::resume_step`
+    /// continues each one bit-identically.
+    pub checkpoints: Vec<RequestCheckpoint>,
 }
 
 pub struct RolloutEngine {
@@ -123,6 +129,17 @@ pub struct RolloutEngine {
     /// the rest of the request (plain decoding — outputs unchanged at any
     /// temperature, just slower). Entries retire with their request.
     degraded: HashSet<RequestId>,
+    /// Which pool slot this engine occupies (0 for standalone engines) —
+    /// addressed by `preempt worker=W step=S` fault directives.
+    worker_index: usize,
+    /// Coordinator-armed preemption latch: when the supervising pool sets
+    /// it, the decode loop freezes every unfinished request at the next
+    /// verification-round boundary and returns their checkpoints. Checked
+    /// with `swap(false)` so one arm triggers exactly one freeze.
+    preempt_latch: Option<Arc<AtomicBool>>,
+    /// Speculative-budget multiplier applied inside `resume_step` (config
+    /// `spec.resume_budget_boost`, validated to [1, 8]).
+    resume_budget_boost: f64,
     /// Store failures observed since the last step report (drained into
     /// `StepMetrics::store_failures` once per step — failures in
     /// `roll_epoch` happen outside any step and would otherwise be lost).
@@ -230,8 +247,22 @@ impl RolloutEngine {
                 FaultPlan::default()
             })),
             degraded: HashSet::new(),
+            worker_index: 0,
+            preempt_latch: None,
+            resume_budget_boost: cfg.spec.resume_budget_boost.clamp(1.0, 8.0),
             pending_store_failures: 0,
         }
+    }
+
+    /// Tell the engine which pool slot it occupies, so `preempt worker=W`
+    /// fault directives can address it.
+    pub fn set_worker_index(&mut self, w: usize) {
+        self.worker_index = w;
+    }
+
+    /// Install the coordinator's preemption latch for this engine's slot.
+    pub fn set_preempt_latch(&mut self, latch: Arc<AtomicBool>) {
+        self.preempt_latch = Some(latch);
     }
 
     pub fn set_temperature(&mut self, t: f64) {
@@ -375,10 +406,6 @@ impl RolloutEngine {
         jobs: &[GenJob],
         step: u32,
     ) -> StepReport {
-        let wall_start = Instant::now();
-        model.reset_clock();
-        let fwd0 = model.forward_passes();
-        let mut metrics = StepMetrics::default();
         let mut batcher = Batcher::new(self.max_batch);
         let mut step_rng = Rng::seed_from_u64(
             self.seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -398,10 +425,70 @@ impl RolloutEngine {
                 ));
             }
         }
+        self.run_decode(model, batcher, step, 1.0)
+    }
+
+    /// Resume checkpointed requests migrated from another worker. Each one
+    /// continues from its freeze point bit-identically: the RNG stream is
+    /// restored verbatim (never re-forked — worker seeds differ), the
+    /// per-request drafter scope is rebuilt by replaying the origin's
+    /// commit-chunk boundaries, and degraded requests stay degraded. Draft
+    /// budgets are escalated by `spec.resume_budget_boost`: a migrated
+    /// request is a known straggler on an otherwise-idle worker, where
+    /// deeper speculation is nearly free — and at temperature 0,
+    /// losslessness makes the deeper budget a pure latency effect.
+    pub fn resume_step<M: TargetModel>(
+        &mut self,
+        model: &mut M,
+        checkpoints: &[RequestCheckpoint],
+        step: u32,
+    ) -> StepReport {
+        let mut batcher = Batcher::new(self.max_batch);
+        for ck in checkpoints {
+            let id = self.next_request;
+            self.next_request += 1;
+            // Rebuild the drafter's request-local scope exactly: absorb the
+            // origin's committed runs chunk-by-chunk (chunks never
+            // cross-connect inside the request-local index, so boundaries
+            // matter, not just the token stream).
+            let mut off = 0usize;
+            for &c in &ck.commit_chunks {
+                let end = off + c as usize;
+                self.drafter.observe_partial(id, ck.problem, &ck.generated[off..end]);
+                off = end;
+            }
+            if ck.degraded {
+                // A poisoned drafter must stay poisoned across migration.
+                self.degraded.insert(id);
+            }
+            batcher.submit(RolloutRequest::from_checkpoint(id, ck));
+        }
+        let boost = self.resume_budget_boost;
+        self.run_decode(model, batcher, step, boost)
+    }
+
+    /// The decode loop shared by fresh steps and resumed checkpoints.
+    /// `boost` > 1 escalates every per-round draft budget (clamped to
+    /// `spec.budget_cap`); 1.0 is the plain path.
+    fn run_decode<M: TargetModel>(
+        &mut self,
+        model: &mut M,
+        mut batcher: Batcher,
+        step: u32,
+        boost: f64,
+    ) -> StepReport {
+        let wall_start = Instant::now();
+        model.reset_clock();
+        let fwd0 = model.forward_passes();
+        let mut metrics = StepMetrics::default();
+        if boost > 1.0 && batcher.pending_len() > 0 {
+            metrics.resume_budget_boost = boost;
+        }
         let eos = model.eos();
         let latency = model.latency_model();
         let mut rollouts = Vec::new();
         let mut accept_obs = Vec::new();
+        let mut checkpoints: Vec<RequestCheckpoint> = Vec::new();
         // Absorb cursor into `rollouts`: finished trajectories become WAL
         // records immediately (in `finish_request`) but enter the drafter's
         // in-memory history lazily, so the concurrent path can overlap
@@ -417,12 +504,46 @@ impl RolloutEngine {
             if batcher.effective_batch() == 0 {
                 break;
             }
+            // Preemption seam: verification-round boundaries are the only
+            // points where every in-flight request is self-consistent
+            // (tokens committed, drafter scope absorbed, RNG between
+            // draws), so freezing here makes the checkpoint sufficient for
+            // a bit-identical resume elsewhere. Guard on rounds > 0 FIRST:
+            // `should_preempt` is one-shot, and consuming it before any
+            // work ran would freeze an empty step.
+            let preempted = metrics.rounds > 0
+                && (self.faults.should_preempt(self.worker_index, step)
+                    || self
+                        .preempt_latch
+                        .as_ref()
+                        .is_some_and(|l| l.swap(false, Ordering::Relaxed)));
+            if preempted {
+                for req in batcher.take_unfinished() {
+                    let degraded = self.degraded.remove(&req.id);
+                    // The request's scope leaves this drafter; the
+                    // destination rebuilds it from the checkpoint's
+                    // commit-chunk boundaries.
+                    self.drafter.end_request(req.id);
+                    checkpoints.push(req.checkpoint(degraded));
+                }
+                metrics.preemptions += 1;
+                break;
+            }
             metrics.eff_batch.push(batcher.effective_batch() as u32);
 
-            // 1. Budgets.
+            // 1. Budgets. Resumed stragglers get escalated depth: the boost
+            // multiplies every per-round budget (clamped to budget_cap), and
+            // at temperature 0 losslessness guarantees the deeper draft is a
+            // pure latency effect — outputs cannot change.
             let budgets = {
                 let active = batcher.active();
-                self.budgets(active, &|| latency)
+                let mut b = self.budgets(active, &|| latency);
+                if boost > 1.0 {
+                    for budget in &mut b {
+                        *budget = escalate(*budget, boost, self.budget_cap);
+                    }
+                }
+                b
             };
 
             // 2. Drafts (speculation overhead measured in wall time). The
@@ -479,7 +600,18 @@ impl RolloutEngine {
                             let lo = ci * chunk;
                             let snap = &snap;
                             let faults = &faults;
-                            handles.push(s.spawn(move || {
+                            let n = chunk_specs.len();
+                            let handle = s.spawn(move || {
+                                // Degradation ladder, rung 1b: this panic
+                                // fires OUTSIDE the per-request
+                                // catch_unwind — the host thread itself
+                                // dies, exercising the join-side recovery
+                                // below (a real reader host can die in the
+                                // slicing/setup code around the guarded
+                                // draft call).
+                                if faults.should_poison_host(step) {
+                                    panic!("fault plan: poisoned draft host at step {step}");
+                                }
                                 chunk_specs
                                     .iter()
                                     .enumerate()
@@ -515,15 +647,28 @@ impl RolloutEngine {
                                         }
                                     })
                                     .collect::<Vec<_>>()
-                            }));
+                            });
+                            handles.push((handle, n));
                         }
                         // Writer overlap: index rollouts finished in earlier
                         // rounds while the readers draft off the snapshot.
                         absorb_pending(&mut *self.drafter, &rollouts, &mut absorbed);
-                        for h in handles {
-                            let part =
-                                h.join().expect("draft worker hosts its own catch_unwind");
-                            results.extend(part);
+                        for (h, n) in handles {
+                            match h.join() {
+                                Ok(part) => results.extend(part),
+                                // A reader host died outside the per-request
+                                // catch_unwind. Don't abort the step: every
+                                // request in the dead host's chunk degrades
+                                // to plain decoding (empty draft, counted
+                                // below), and the round continues on
+                                // whatever the surviving hosts produced.
+                                Err(_) => results.extend(
+                                    std::iter::repeat_with(|| {
+                                        (Vec::new(), DraftOutcome::Skipped, true)
+                                    })
+                                    .take(n),
+                                ),
+                            }
                         }
                     });
                 }
@@ -669,6 +814,7 @@ impl RolloutEngine {
             rollouts,
             metrics,
             accept_obs,
+            checkpoints,
         }
     }
 
@@ -1350,5 +1496,153 @@ mod tests {
             m.policy_update(1.0);
         }
         assert_eq!(total, 4 * 24, "no request lost under concurrent drafting");
+    }
+
+    #[test]
+    fn poisoned_draft_host_degrades_chunk_not_step() {
+        // Satellite regression: a reader HOST thread dying outside the
+        // per-request catch_unwind used to abort the whole step through
+        // `h.join().expect(...)`. Now the dead host's chunk degrades to
+        // plain decoding, the step completes, and T=0 outputs are pinned.
+        let mut c_ctrl = cfg(0.0, "das", "uniform");
+        c_ctrl.spec.draft_threads = 4;
+        let mut c_chaos = c_ctrl.clone();
+        c_chaos.rollout.fault_plan = "poison-host step=1".into();
+        let mut m1 = sim(&c_ctrl);
+        let mut m2 = sim(&c_chaos);
+        let mut e1 = engine(&c_ctrl);
+        let mut e2 = engine(&c_chaos);
+        for step in 0..3 {
+            let r1 = e1.generate_step(&mut m1, &jobs(4, 2), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(4, 2), step);
+            assert_eq!(
+                sorted_rollouts(&r1),
+                sorted_rollouts(&r2),
+                "host death changed outputs at step {step}"
+            );
+            assert_eq!(r2.metrics.completed, 8, "step completes despite dead host");
+            if step == 1 {
+                assert!(
+                    r2.metrics.degraded_requests >= 1,
+                    "the dead host's whole chunk degrades"
+                );
+            } else {
+                assert_eq!(r2.metrics.degraded_requests, 0, "one-shot fault");
+            }
+        }
+    }
+
+    #[test]
+    fn freeze_migrate_resume_is_bit_identical_across_substrates() {
+        // Tentpole acceptance at the engine seam: preempt a step at a
+        // verification-round boundary, push every unfinished request
+        // through the wire codec, resume on a DIFFERENT engine (fresh
+        // drafter history, escalated budgets) — and the union of rollouts
+        // must equal an uninterrupted control bit for bit, per substrate.
+        for substrate in ["window", "tree", "array"] {
+            let mut c = cfg(0.0, "das", "uniform");
+            c.spec.substrate = substrate.into();
+            let control = {
+                let mut m = sim(&c);
+                let mut e = engine(&c);
+                sorted_rollouts(&e.generate_step(&mut m, &jobs(4, 2), 0))
+            };
+            let mut c_origin = c.clone();
+            c_origin.rollout.fault_plan = "preempt worker=0 step=0".into();
+            let mut m_origin = sim(&c_origin);
+            let mut e_origin = engine(&c_origin);
+            let rep = e_origin.generate_step(&mut m_origin, &jobs(4, 2), 0);
+            assert_eq!(rep.metrics.preemptions, 1, "{substrate}: freeze fired");
+            assert!(!rep.checkpoints.is_empty(), "{substrate}: in-flight work frozen");
+            assert!(
+                rep.checkpoints.iter().any(|ck| !ck.generated.is_empty()),
+                "{substrate}: at least one request frozen mid-generation"
+            );
+            // Migration is a byte hop: everything the destination sees went
+            // through the checksummed wire format.
+            let thawed: Vec<RequestCheckpoint> = rep
+                .checkpoints
+                .iter()
+                .map(|ck| {
+                    let bytes = ck.to_bytes();
+                    let back = RequestCheckpoint::from_bytes(&bytes).expect("round trip");
+                    assert_eq!(&back, ck);
+                    back
+                })
+                .collect();
+            let mut m_dst = sim(&c);
+            let mut e_dst = engine(&c);
+            let resumed = e_dst.resume_step(&mut m_dst, &thawed, 0);
+            assert_eq!(
+                resumed.metrics.completed as usize,
+                thawed.len(),
+                "{substrate}: every migrated request finishes"
+            );
+            assert!(
+                (resumed.metrics.resume_budget_boost - 2.0).abs() < 1e-12,
+                "{substrate}: escalation gauge reports the configured boost"
+            );
+            let mut union: Vec<(u32, Vec<u32>)> = rep
+                .rollouts
+                .iter()
+                .chain(resumed.rollouts.iter())
+                .map(|r| (r.problem, r.tokens.clone()))
+                .collect();
+            union.sort();
+            assert_eq!(
+                union, control,
+                "{substrate}: origin + resumed rollouts must equal the \
+                 uninterrupted control exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn preempt_latch_freezes_at_round_boundary() {
+        // The coordinator-facing seam: an armed latch (no fault plan)
+        // freezes the step exactly once, and the latch reads cleared
+        // afterwards so the next step runs normally.
+        let c = cfg(0.0, "das", "uniform");
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let latch = Arc::new(AtomicBool::new(true));
+        e.set_preempt_latch(Arc::clone(&latch));
+        let rep = e.generate_step(&mut m, &jobs(4, 2), 0);
+        assert_eq!(rep.metrics.preemptions, 1);
+        assert!(!rep.checkpoints.is_empty());
+        assert!(!latch.load(Ordering::Relaxed), "latch consumed by the freeze");
+        // Next step: latch stays clear, no freeze.
+        let rep2 = e.generate_step(&mut m, &jobs(4, 2), 1);
+        assert_eq!(rep2.metrics.preemptions, 0);
+        assert!(rep2.checkpoints.is_empty());
+        assert_eq!(rep2.metrics.completed, 8);
+    }
+
+    #[test]
+    fn resumed_degraded_request_stays_degraded() {
+        // A request that fell off the speculation ladder before the freeze
+        // must not silently re-arm its drafter on the destination: the
+        // degraded flag rides the checkpoint.
+        let c = cfg(0.0, "das", "uniform");
+        let mut ck = {
+            let mut c_origin = c.clone();
+            c_origin.rollout.fault_plan = "preempt worker=0 step=0".into();
+            let mut m = sim(&c_origin);
+            let mut e = engine(&c_origin);
+            let rep = e.generate_step(&mut m, &jobs(4, 2), 0);
+            rep.checkpoints
+                .into_iter()
+                .find(|ck| !ck.generated.is_empty())
+                .expect("mid-flight checkpoint")
+        };
+        ck.degraded = true;
+        let mut m = sim(&c);
+        let mut e = engine(&c);
+        let resumed = e.resume_step(&mut m, &[ck], 0);
+        assert_eq!(resumed.metrics.completed, 1);
+        assert_eq!(
+            resumed.metrics.proposed, 0,
+            "a degraded request never speculates after migration"
+        );
     }
 }

@@ -15,9 +15,12 @@
 //! delay worker=0 step=2 ms=40    # worker 0 sleeps 40ms before that chunk
 //! store-fail epoch=2             # store writes fail from epoch 2 onward
 //! poison-draft step=5            # one drafter call panics at step 5
+//! preempt worker=0 step=1        # worker 0 freezes + migrates its in-flight chunk at step 1
+//! poison-host step=2             # one draft-reader HOST thread panics at step 2
 //! ```
 //!
-//! `panic`, `delay` and `poison-draft` are one-shot: a per-entry atomic flag
+//! `panic`, `delay`, `poison-draft`, `preempt` and `poison-host` are
+//! one-shot: a per-entry atomic flag
 //! marks them fired, so a respawned worker sharing the plan (the pool hands
 //! every incarnation the same `Arc<FaultPlan>`) does not re-trigger the
 //! injection and panic-loop. `store-fail` is level-triggered — every store
@@ -38,6 +41,14 @@ enum Fault {
     StoreFail { epoch: u32 },
     /// Panic one drafter call at `step` (exercises the degradation ladder).
     PoisonDraft { step: u32 },
+    /// Force worker `worker` to preempt its in-flight chunk at `step`:
+    /// every unfinished request is checkpointed at the next
+    /// verification-round boundary and migrated to an idle peer.
+    Preempt { worker: usize, step: u32 },
+    /// Panic one draft-reader HOST thread at `step` — outside the
+    /// per-request `catch_unwind`, so it exercises the thread-join
+    /// degradation path rather than the per-request ladder.
+    PoisonHost { step: u32 },
 }
 
 impl fmt::Display for Fault {
@@ -49,6 +60,10 @@ impl fmt::Display for Fault {
             }
             Fault::StoreFail { epoch } => write!(f, "store-fail epoch={epoch}"),
             Fault::PoisonDraft { step } => write!(f, "poison-draft step={step}"),
+            Fault::Preempt { worker, step } => {
+                write!(f, "preempt worker={worker} step={step}")
+            }
+            Fault::PoisonHost { step } => write!(f, "poison-host step={step}"),
         }
     }
 }
@@ -65,6 +80,10 @@ struct Entry {
 #[derive(Debug, Default)]
 pub struct FaultPlan {
     entries: Vec<Entry>,
+    /// When set, dropping the plan skips the unfired-directive audit (the
+    /// chaos harness asserts on `unfired()` itself; config validation only
+    /// checks syntax and never runs the plan).
+    drop_audit_disarmed: AtomicBool,
 }
 
 fn take_key(
@@ -123,10 +142,17 @@ impl FaultPlan {
                 "poison-draft" => Fault::PoisonDraft {
                     step: step_u32(take_key(&mut kv, "step", directive)?)?,
                 },
+                "preempt" => Fault::Preempt {
+                    worker: take_key(&mut kv, "worker", directive)? as usize,
+                    step: step_u32(take_key(&mut kv, "step", directive)?)?,
+                },
+                "poison-host" => Fault::PoisonHost {
+                    step: step_u32(take_key(&mut kv, "step", directive)?)?,
+                },
                 other => {
                     return Err(format!(
-                        "unknown fault kind '{other}' \
-                         (known: panic, delay, store-fail, poison-draft)"
+                        "unknown fault kind '{other}' (known: panic, delay, \
+                         store-fail, poison-draft, preempt, poison-host)"
                     ))
                 }
             };
@@ -138,7 +164,10 @@ impl FaultPlan {
                 fired: AtomicBool::new(false),
             });
         }
-        Ok(FaultPlan { entries })
+        Ok(FaultPlan {
+            entries,
+            drop_audit_disarmed: AtomicBool::new(false),
+        })
     }
 
     pub fn is_empty(&self) -> bool {
@@ -185,6 +214,27 @@ impl FaultPlan {
             .is_some()
     }
 
+    /// One-shot: true exactly once for a matching `preempt` directive.
+    pub fn should_preempt(&self, worker: usize, step: u32) -> bool {
+        self.fire_first(|f| matches!(f, Fault::Preempt { worker: w, step: s } if *w == worker && *s == step))
+            .is_some()
+    }
+
+    /// One-shot: true exactly once for a matching `poison-host` directive.
+    pub fn should_poison_host(&self, step: u32) -> bool {
+        self.fire_first(|f| matches!(f, Fault::PoisonHost { step: s } if *s == step))
+            .is_some()
+    }
+
+    /// How many `preempt` directives the plan carries (fired or not) — the
+    /// chaos harness uses this to decide which gauges it must assert on.
+    pub fn preempt_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e.fault, Fault::Preempt { .. }))
+            .count()
+    }
+
     /// Directives that never fired — a chaos harness treats a plan with
     /// unfired entries as misconfigured (the seam it targeted never ran).
     pub fn unfired(&self) -> Vec<String> {
@@ -204,6 +254,45 @@ impl FaultPlan {
         }
         None
     }
+
+    /// Turn off the drop-time unfired audit. Call this where unfired
+    /// entries are checked (or expected): the chaos harness asserts on
+    /// `unfired()` itself, and config validation only parses for syntax.
+    pub fn disarm_drop_audit(&self) {
+        self.drop_audit_disarmed.store(true, Ordering::Relaxed);
+    }
+
+    /// The warning the drop audit will print, if any — exposed so tests
+    /// can exercise the audit without racing on captured stderr.
+    pub fn drop_warning(&self) -> Option<String> {
+        if self.drop_audit_disarmed.load(Ordering::Relaxed) || self.entries.is_empty() {
+            return None;
+        }
+        let left = self.unfired();
+        if left.is_empty() {
+            return None;
+        }
+        Some(format!(
+            "WARNING: fault plan dropped with {} unfired directive(s) — the \
+             seams they target never ran (typo'd worker/step, or a run too \
+             short to reach them): [{}]",
+            left.len(),
+            left.join("; ")
+        ))
+    }
+}
+
+/// A fault plan names exact seams; a directive that never fires means the
+/// injection silently no-opped (misaddressed worker, a step past the end of
+/// the run, a typo'd `rollout.fault_plan`). Outside the chaos harness —
+/// which asserts `unfired()` is empty itself — nothing else would notice,
+/// so the plan audits itself on the way out.
+impl Drop for FaultPlan {
+    fn drop(&mut self) {
+        if let Some(w) = self.drop_warning() {
+            eprintln!("{w}");
+        }
+    }
 }
 
 #[cfg(test)]
@@ -221,11 +310,14 @@ mod tests {
     fn full_plan_parses() {
         let p = FaultPlan::parse(
             "panic worker=1 step=3; delay worker=0 step=2 ms=40; \
-             store-fail epoch=2; poison-draft step=5",
+             store-fail epoch=2; poison-draft step=5; \
+             preempt worker=0 step=1; poison-host step=2",
         )
         .unwrap();
-        assert_eq!(p.len(), 4);
-        assert_eq!(p.unfired().len(), 4);
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.unfired().len(), 6);
+        assert_eq!(p.preempt_count(), 1);
+        p.disarm_drop_audit();
     }
 
     #[test]
@@ -276,5 +368,51 @@ mod tests {
         assert_eq!(p.delay_ms(0, 0), Some(1));
         let left = p.unfired();
         assert_eq!(left, vec!["panic worker=7 step=9".to_string()]);
+        p.disarm_drop_audit();
+    }
+
+    #[test]
+    fn preempt_fires_once_per_directive() {
+        let p = FaultPlan::parse("preempt worker=2 step=1").unwrap();
+        assert!(!p.should_preempt(1, 1), "wrong worker");
+        assert!(!p.should_preempt(2, 0), "wrong step");
+        assert!(p.should_preempt(2, 1));
+        assert!(!p.should_preempt(2, 1), "consumed");
+        assert_eq!(p.preempt_count(), 1, "count is static, not fired-state");
+        assert!(p.unfired().is_empty());
+    }
+
+    #[test]
+    fn poison_host_fires_once() {
+        let p = FaultPlan::parse("poison-host step=2").unwrap();
+        assert!(!p.should_poison_host(1));
+        assert!(p.should_poison_host(2));
+        assert!(!p.should_poison_host(2), "consumed");
+    }
+
+    #[test]
+    fn drop_audit_warns_on_unfired_entries_only() {
+        let p = FaultPlan::parse("panic worker=7 step=9; preempt worker=0 step=0").unwrap();
+        let w = p.drop_warning().expect("nothing fired — must warn");
+        assert!(w.contains("panic worker=7 step=9"), "{w}");
+        assert!(w.contains("preempt worker=0 step=0"), "{w}");
+        assert!(w.contains("2 unfired"), "{w}");
+        // Fire one: the warning narrows to what is still pending.
+        assert!(p.should_panic(7, 9));
+        let w = p.drop_warning().expect("one entry still unfired");
+        assert!(!w.contains("panic"), "{w}");
+        assert!(w.contains("preempt worker=0 step=0"), "{w}");
+        // Fire the rest: fully-exercised plans drop silently.
+        assert!(p.should_preempt(0, 0));
+        assert_eq!(p.drop_warning(), None);
+    }
+
+    #[test]
+    fn drop_audit_is_silent_for_empty_and_disarmed_plans() {
+        assert_eq!(FaultPlan::default().drop_warning(), None);
+        assert_eq!(FaultPlan::parse("").unwrap().drop_warning(), None);
+        let p = FaultPlan::parse("panic worker=1 step=1").unwrap();
+        p.disarm_drop_audit();
+        assert_eq!(p.drop_warning(), None, "disarmed — harness audits itself");
     }
 }

@@ -77,6 +77,21 @@ pub struct StepMetrics {
     pub degraded_requests: u64,
     /// Store write failures that disabled persistence mid-run.
     pub store_failures: u64,
+
+    // --- preemption / migration (straggler shaping) ---
+    /// In-flight chunks frozen off a deadline-blown (or fault-injected)
+    /// straggler at a verification-round boundary.
+    pub preemptions: u64,
+    /// Checkpointed requests re-dispatched to another worker and resumed.
+    pub migrated_requests: u64,
+    /// The speculative-budget multiplier applied to resumed requests this
+    /// step (gauge; 0 until a migration happens, then the configured boost).
+    pub resume_budget_boost: f64,
+    /// Measured step wall time over the LPT-with-perfect-lengths lower
+    /// bound (total per-chunk device time / workers): 1.0 = the schedule
+    /// was as good as an oracle packing, higher = makespan left on the
+    /// table by stragglers. 0 until the coordinator computes it.
+    pub makespan_vs_oracle: f64,
 }
 
 impl StepMetrics {
@@ -152,6 +167,11 @@ impl StepMetrics {
         self.deadline_steals += other.deadline_steals;
         self.degraded_requests += other.degraded_requests;
         self.store_failures += other.store_failures;
+        self.preemptions += other.preemptions;
+        self.migrated_requests += other.migrated_requests;
+        // Per-step gauges, not fleet totals: keep the worst observation.
+        self.resume_budget_boost = self.resume_budget_boost.max(other.resume_budget_boost);
+        self.makespan_vs_oracle = self.makespan_vs_oracle.max(other.makespan_vs_oracle);
     }
 }
 
@@ -209,6 +229,8 @@ mod tests {
             deadline_steals: 2,
             degraded_requests: 1,
             store_failures: 0,
+            preemptions: 1,
+            migrated_requests: 2,
             ..Default::default()
         };
         let b = StepMetrics {
@@ -217,6 +239,8 @@ mod tests {
             deadline_steals: 0,
             degraded_requests: 4,
             store_failures: 1,
+            preemptions: 2,
+            migrated_requests: 5,
             ..Default::default()
         };
         a.merge(&b);
@@ -225,5 +249,24 @@ mod tests {
         assert_eq!(a.deadline_steals, 2);
         assert_eq!(a.degraded_requests, 5);
         assert_eq!(a.store_failures, 1);
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.migrated_requests, 7);
+    }
+
+    #[test]
+    fn merge_keeps_worst_scheduling_gauges() {
+        let mut a = StepMetrics {
+            resume_budget_boost: 2.0,
+            makespan_vs_oracle: 1.1,
+            ..Default::default()
+        };
+        let b = StepMetrics {
+            resume_budget_boost: 0.0,
+            makespan_vs_oracle: 1.7,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert!((a.resume_budget_boost - 2.0).abs() < 1e-12);
+        assert!((a.makespan_vs_oracle - 1.7).abs() < 1e-12);
     }
 }

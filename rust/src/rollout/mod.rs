@@ -8,8 +8,8 @@ pub mod metrics;
 pub mod request;
 
 pub use batcher::Batcher;
-pub use parallel::{DataParallelRollout, ParallelStepReport};
+pub use parallel::{verify_coordinator_sidecar, DataParallelRollout, ParallelStepReport};
 pub use engine::{BudgetPolicy, GenJob, RolloutEngine, StepReport};
 pub use faults::FaultPlan;
 pub use metrics::StepMetrics;
-pub use request::{RequestState, RolloutRequest};
+pub use request::{RequestCheckpoint, RequestState, RolloutRequest};

@@ -55,6 +55,20 @@
 //!   temperature 0 a spurious steal is harmless — outputs are sharding-
 //!   invariant — so the deadline can be aggressive without a correctness
 //!   risk.
+//! - **Checkpointed preemption.** Stealing only moves *queued* chunks; a
+//!   straggler whose queue is already empty keeps the whole step hostage
+//!   with its one in-flight chunk. When that chunk blows the same learned
+//!   deadline AND a peer sits fully idle, the coordinator arms the worker's
+//!   preempt latch: the engine freezes every unfinished request at the next
+//!   verification-round boundary into [`RequestCheckpoint`]s, which travel
+//!   back on the report channel, hop through the checksummed wire codec,
+//!   and re-enter the queues as a first-class resume chunk (stealable,
+//!   re-dispatchable like any other). The resuming engine restores each
+//!   RNG stream verbatim and replays the drafter scope, so outputs are
+//!   bit-identical to an uninterrupted run — preemption, like stealing, is
+//!   purely a makespan lever. Resumed requests run with escalated draft
+//!   budgets (`spec.resume_budget_boost`): a known straggler on an idle
+//!   worker is exactly where deeper speculation is cheapest.
 //! - **Deterministic chaos.** A [`FaultPlan`] (config `rollout.fault_plan`)
 //!   is shared by every worker incarnation, so injected panics/delays fire
 //!   exactly once at fixed seams and chaos runs are reproducible. Every
@@ -63,6 +77,7 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
@@ -71,6 +86,7 @@ use std::time::{Duration, Instant};
 use super::engine::{GenJob, RolloutEngine, StepReport};
 use super::faults::FaultPlan;
 use super::metrics::StepMetrics;
+use super::request::RequestCheckpoint;
 use crate::config::DasConfig;
 use crate::model::sim::{SimModel, SimModelConfig};
 use crate::spec::LengthPolicy;
@@ -119,11 +135,23 @@ pub struct DataParallelRollout {
     restarts: u64,
     redispatched: u64,
     steals: u64,
+    migrated: u64,
     last_saved_epoch: Option<Epoch>,
 }
 
 enum Command {
-    Chunk { jobs: Vec<GenJob>, step: u32, seq: u64 },
+    Chunk {
+        jobs: Vec<GenJob>,
+        step: u32,
+        seq: u64,
+    },
+    /// Checkpointed requests frozen off another worker: resume them
+    /// bit-identically with escalated draft budgets.
+    Resume {
+        checkpoints: Vec<RequestCheckpoint>,
+        step: u32,
+        seq: u64,
+    },
     RollEpoch(Epoch),
     PolicyUpdate(f64),
     Shutdown,
@@ -142,6 +170,19 @@ struct WorkerSlot {
     thread: Option<JoinHandle<()>>,
     /// Incarnation counter (respawns bump it; thread names carry it).
     generation: u32,
+    /// Preempt latch shared with this incarnation's engine: the
+    /// coordinator arms it, the engine consumes it at the next
+    /// verification-round boundary (the only seam where a queued command
+    /// could never reach a worker mid-step).
+    preempt: Arc<AtomicBool>,
+}
+
+/// What a queued chunk carries: fresh jobs, or checkpoints migrating off a
+/// preempted straggler. Resume chunks are first-class — stealable and
+/// re-dispatchable exactly like fresh work.
+enum ChunkWork {
+    Fresh(Vec<GenJob>),
+    Resume(Vec<RequestCheckpoint>),
 }
 
 /// A coordinator-side unit of dispatch: enough jobs to fill roughly one
@@ -149,9 +190,20 @@ struct WorkerSlot {
 /// re-dispatch); only in-flight chunks are committed to a worker.
 struct ChunkTask {
     seq: u64,
-    jobs: Vec<GenJob>,
+    work: ChunkWork,
     /// Sum of the jobs' predicted costs (deadline + load accounting).
     cost: f64,
+}
+
+impl ChunkTask {
+    /// Dispatchable units inside (jobs or checkpointed requests) — the
+    /// denominator for re-dispatch/steal accounting.
+    fn len(&self) -> usize {
+        match &self.work {
+            ChunkWork::Fresh(jobs) => jobs.len(),
+            ChunkWork::Resume(cks) => cks.len(),
+        }
+    }
 }
 
 struct InFlight {
@@ -247,6 +299,38 @@ fn load_coordinator_state(dir: &Path) -> Result<Option<LengthPolicy>, StoreError
     Ok(Some(LengthPolicy::load_state(&mut br)?))
 }
 
+/// Read-only integrity check of the `<store_dir>/coordinator.das` sidecar
+/// (`das store verify`): magic, checksum, and a full predictor-state parse.
+/// Returns the sidecar's byte size, `Ok(None)` when no sidecar exists, and
+/// never writes — a corrupted file is reported, not repaired.
+pub fn verify_coordinator_sidecar(dir: &Path) -> Result<Option<u64>, StoreError> {
+    let path = coordinator_state_path(dir);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let size = std::fs::metadata(&path)?.len();
+    load_coordinator_state(dir)?;
+    Ok(Some(size))
+}
+
+/// The migration byte hop: every checkpoint crossing workers goes through
+/// the checksummed wire format. An in-memory round trip can only fail on a
+/// codec bug; if it ever does, resume from the original rather than lose
+/// the request.
+fn thaw_checkpoints(cks: &[RequestCheckpoint]) -> Vec<RequestCheckpoint> {
+    cks.iter()
+        .map(|ck| {
+            RequestCheckpoint::from_bytes(&ck.to_bytes()).unwrap_or_else(|e| {
+                eprintln!(
+                    "das: checkpoint wire round-trip failed ({e}); resuming from \
+                     the in-memory copy"
+                );
+                ck.clone()
+            })
+        })
+        .collect()
+}
+
 /// Spawn one worker incarnation. `gains` + `epoch` are the catch-up tape: a
 /// respawn replays the learner updates its predecessor had applied (the sim
 /// replica consumes its RNG deterministically, so the replayed replica is
@@ -279,6 +363,8 @@ fn spawn_worker(
     let gains: Vec<f64> = gains.to_vec();
     let (cmd_tx, cmd_rx) = channel::<Command>();
     let (report_tx, report_rx) = channel::<WorkerReport>();
+    let preempt = Arc::new(AtomicBool::new(false));
+    let latch = Arc::clone(&preempt);
     let thread = thread::Builder::new()
         .name(format!("dp-worker-{w}.{generation}"))
         .spawn(move || {
@@ -288,6 +374,8 @@ fn spawn_worker(
             }
             let mut engine = RolloutEngine::new(&wcfg, crate::drafter::from_config(&wcfg));
             engine.set_fault_plan(Arc::clone(&faults));
+            engine.set_worker_index(w);
+            engine.set_preempt_latch(latch);
             if let Some(e) = epoch {
                 engine.roll_epoch(e);
             }
@@ -304,6 +392,7 @@ fn spawn_worker(
         report_rx,
         thread: Some(thread),
         generation,
+        preempt,
     }
 }
 
@@ -329,6 +418,14 @@ fn worker_loop(
                     panic!("fault plan: panic worker {w} at step {step}");
                 }
                 let report = engine.generate_step(model, &jobs, step);
+                report_tx.send(WorkerReport { seq, report }).is_ok()
+            }
+            Command::Resume {
+                checkpoints,
+                step,
+                seq,
+            } => {
+                let report = engine.resume_step(model, &checkpoints, step);
                 report_tx.send(WorkerReport { seq, report }).is_ok()
             }
             Command::RollEpoch(e) => {
@@ -395,6 +492,7 @@ impl DataParallelRollout {
             restarts: 0,
             redispatched: 0,
             steals: 0,
+            migrated: 0,
             last_saved_epoch: None,
         }
     }
@@ -521,7 +619,7 @@ impl DataParallelRollout {
                 if samples >= max_batch {
                     queue.push_back(ChunkTask {
                         seq: self.next_seq,
-                        jobs: std::mem::take(&mut chunk_jobs),
+                        work: ChunkWork::Fresh(std::mem::take(&mut chunk_jobs)),
                         cost: chunk_cost,
                     });
                     self.next_seq += 1;
@@ -532,7 +630,7 @@ impl DataParallelRollout {
             if !chunk_jobs.is_empty() {
                 queue.push_back(ChunkTask {
                     seq: self.next_seq,
-                    jobs: chunk_jobs,
+                    work: ChunkWork::Fresh(chunk_jobs),
                     cost: chunk_cost,
                 });
                 self.next_seq += 1;
@@ -549,11 +647,21 @@ impl DataParallelRollout {
                 // Dispatch: commit the head of the queue to an idle worker.
                 while inflight[w].is_none() {
                     let Some(chunk) = queues[w].pop_front() else { break };
-                    let cmd = Command::Chunk {
-                        jobs: chunk.jobs.clone(),
-                        step,
-                        seq: chunk.seq,
+                    let cmd = match &chunk.work {
+                        ChunkWork::Fresh(jobs) => Command::Chunk {
+                            jobs: jobs.clone(),
+                            step,
+                            seq: chunk.seq,
+                        },
+                        ChunkWork::Resume(cks) => Command::Resume {
+                            checkpoints: cks.clone(),
+                            step,
+                            seq: chunk.seq,
+                        },
                     };
+                    // A latch armed for a chunk this worker already finished
+                    // must not leak into the new dispatch.
+                    self.workers[w].preempt.store(false, Ordering::Relaxed);
                     if self.workers[w].cmd_tx.send(cmd).is_ok() {
                         inflight[w] = Some(InFlight {
                             chunk,
@@ -575,19 +683,54 @@ impl DataParallelRollout {
                     Ok(WorkerReport { seq, report }) => {
                         if let Some(inf) = inflight[w].take() {
                             debug_assert_eq!(inf.chunk.seq, seq, "reports retire in order");
-                            // Learn the wall-per-cost rate for deadlines.
-                            let wall = inf.sent.elapsed().as_secs_f64();
-                            let rate = wall / inf.chunk.cost.max(1.0);
-                            self.rate_ema = Some(match self.rate_ema {
-                                Some(ema) => 0.7 * ema + 0.3 * rate,
-                                None => rate,
-                            });
+                            if report.checkpoints.is_empty() {
+                                // Learn the wall-per-cost rate for deadlines
+                                // (whole chunks only: a preempted chunk's
+                                // wall time measures the freeze, not the
+                                // work, and would drag the EMA down).
+                                let wall = inf.sent.elapsed().as_secs_f64();
+                                let rate = wall / inf.chunk.cost.max(1.0);
+                                self.rate_ema = Some(match self.rate_ema {
+                                    Some(ema) => 0.7 * ema + 0.3 * rate,
+                                    None => rate,
+                                });
+                            } else {
+                                // Migration: the frozen requests re-enter
+                                // the queues as a first-class resume chunk
+                                // on the least-loaded peer — after a hop
+                                // through the checksummed wire format, so
+                                // the serialized contract is load-bearing
+                                // on the hot path, not just in tests.
+                                let thawed = thaw_checkpoints(&report.checkpoints);
+                                self.migrated += thawed.len() as u64;
+                                let cost: f64 = thawed
+                                    .iter()
+                                    .map(|ck| {
+                                        let c = self.predictor.job_cost(ck.problem, 1);
+                                        if c.is_finite() {
+                                            c.max(0.0)
+                                        } else {
+                                            1.0
+                                        }
+                                    })
+                                    .sum();
+                                let resume_seq = self.next_seq;
+                                self.next_seq += 1;
+                                let target = least_loaded_queue(&queues, &inflight);
+                                queues[target].push_back(ChunkTask {
+                                    seq: resume_seq,
+                                    work: ChunkWork::Resume(thawed),
+                                    cost,
+                                });
+                            }
                             completed.push((seq, report, w));
                         }
                         progressed = true;
                     }
                     Err(TryRecvError::Empty) => {
-                        if self.steal_from_straggler(w, &mut queues, &inflight) {
+                        if self.steal_from_straggler(w, &mut queues, &inflight)
+                            || self.maybe_preempt_straggler(w, &queues, &inflight)
+                        {
                             progressed = true;
                         }
                     }
@@ -601,7 +744,7 @@ impl DataParallelRollout {
                         self.check_respawn_storm(restarts_at_entry);
                         self.restart_worker(w);
                         if let Some(inf) = inf {
-                            self.redispatched += inf.chunk.jobs.len() as u64;
+                            self.redispatched += inf.chunk.len() as u64;
                             let target = least_loaded_queue(&queues, &inflight);
                             queues[target].push_front(inf.chunk);
                         }
@@ -641,10 +784,20 @@ impl DataParallelRollout {
             .map(|m| m.gen_time)
             .fold(0.0_f64, f64::max);
         let total_device_time: f64 = per_worker.iter().map(|m| m.gen_time).sum();
+        // Makespan vs the LPT-with-perfect-lengths lower bound: no schedule
+        // can beat perfectly even work (total device time / workers), so the
+        // ratio is ≥ 1 and measures makespan left on the table by stragglers.
+        let makespan_vs_oracle = if total_device_time > 0.0 {
+            makespan / (total_device_time / n as f64).max(f64::EPSILON)
+        } else {
+            0.0
+        };
         let supervision = StepMetrics {
             worker_restarts: std::mem::take(&mut self.restarts),
             jobs_redispatched: std::mem::take(&mut self.redispatched),
             deadline_steals: std::mem::take(&mut self.steals),
+            migrated_requests: std::mem::take(&mut self.migrated),
+            makespan_vs_oracle,
             ..Default::default()
         };
         ParallelStepReport {
@@ -670,12 +823,7 @@ impl DataParallelRollout {
         if queues[w].is_empty() {
             return false;
         }
-        let (Some(rate), Some(inf)) = (self.rate_ema, inflight[w].as_ref()) else {
-            return false;
-        };
-        let predicted = (rate * inf.chunk.cost.max(1.0) * STEAL_DEADLINE_MULT).clamp(0.0, 3600.0);
-        let deadline = STEAL_DEADLINE_FLOOR + Duration::from_secs_f64(predicted);
-        if inf.sent.elapsed() <= deadline {
+        if !self.deadline_blown(inflight[w].as_ref()) {
             return false;
         }
         let mut moved = false;
@@ -686,7 +834,7 @@ impl DataParallelRollout {
             // Steal from the tail: the head stays next in line on the
             // straggler itself if it ever wakes.
             let Some(chunk) = queues[w].pop_back() else { break };
-            self.steals += chunk.jobs.len() as u64;
+            self.steals += chunk.len() as u64;
             queues[t].push_back(chunk);
             moved = true;
             if queues[w].is_empty() {
@@ -694,6 +842,48 @@ impl DataParallelRollout {
             }
         }
         moved
+    }
+
+    /// The learned straggler deadline: a generous multiple of the in-flight
+    /// chunk's rate-predicted wall time. `false` while the rate is unknown
+    /// or the worker is idle.
+    fn deadline_blown(&self, inf: Option<&InFlight>) -> bool {
+        let (Some(rate), Some(inf)) = (self.rate_ema, inf) else {
+            return false;
+        };
+        let predicted = (rate * inf.chunk.cost.max(1.0) * STEAL_DEADLINE_MULT).clamp(0.0, 3600.0);
+        let deadline = STEAL_DEADLINE_FLOOR + Duration::from_secs_f64(predicted);
+        inf.sent.elapsed() > deadline
+    }
+
+    /// Preemption policy — the escalation past work-stealing. Stealing only
+    /// helps while the straggler still has QUEUED chunks; once its queue is
+    /// empty the in-flight chunk itself holds the step hostage. When that
+    /// chunk blows the learned deadline and at least one peer is fully idle
+    /// (so the frozen work has somewhere better to go), arm the worker's
+    /// preempt latch. The engine freezes at its next verification-round
+    /// boundary and the checkpoints come back on the report channel.
+    /// Returns true only on the arming transition.
+    fn maybe_preempt_straggler(
+        &mut self,
+        w: usize,
+        queues: &[VecDeque<ChunkTask>],
+        inflight: &[Option<InFlight>],
+    ) -> bool {
+        if !queues[w].is_empty() {
+            // Queued work exists: stealing is the cheaper remedy.
+            return false;
+        }
+        if !self.deadline_blown(inflight[w].as_ref()) {
+            return false;
+        }
+        let idle_peer_exists = (0..queues.len())
+            .any(|t| t != w && inflight[t].is_none() && queues[t].is_empty());
+        if !idle_peer_exists {
+            return false;
+        }
+        // swap → true only on the 0→1 transition (re-arming is a no-op).
+        !self.workers[w].preempt.swap(true, Ordering::Relaxed)
     }
 
     fn check_respawn_storm(&self, restarts_at_entry: u64) {
@@ -1082,6 +1272,129 @@ mod tests {
             t.elapsed() < SHUTDOWN_GRACE + Duration::from_secs(1),
             "drop must return within the shutdown grace window"
         );
+    }
+
+    #[test]
+    fn forced_preemption_migrates_and_preserves_greedy_outputs() {
+        // ISSUE acceptance: a `preempt` directive freezes worker 0's
+        // in-flight chunk mid-step; the checkpoints hop the wire codec and
+        // resume elsewhere with escalated budgets — and the merged greedy
+        // rollouts stay byte-identical to an undisturbed control pool, with
+        // the recovery visible in the preemption gauges.
+        let control = {
+            let mut dp = DataParallelRollout::new(&cfg("das"), 2);
+            let mut out = Vec::new();
+            for step in 0..3 {
+                dp.roll_epoch(step);
+                out.push(sorted_keys(&dp.generate_step(&jobs(8), step).rollouts));
+                dp.policy_update(1.0);
+            }
+            out
+        };
+        let mut c = cfg("das");
+        c.rollout.fault_plan = "preempt worker=0 step=1".into();
+        let mut dp = DataParallelRollout::new(&c, 2);
+        let mut preemptions = 0u64;
+        let mut migrated = 0u64;
+        for step in 0..3 {
+            dp.roll_epoch(step);
+            let rep = dp.generate_step(&jobs(8), step);
+            assert_eq!(rep.rollouts.len(), 16, "no lost or duplicated requests, step {step}");
+            assert_eq!(
+                sorted_keys(&rep.rollouts),
+                control[step as usize],
+                "preempted run must match control at step {step}"
+            );
+            preemptions += rep.per_worker.iter().map(|m| m.preemptions).sum::<u64>();
+            migrated += rep.supervision.migrated_requests;
+            if rep.supervision.migrated_requests > 0 {
+                let boost = rep
+                    .per_worker
+                    .iter()
+                    .map(|m| m.resume_budget_boost)
+                    .fold(0.0_f64, f64::max);
+                assert!(
+                    (boost - 2.0).abs() < 1e-12,
+                    "resumed requests must report the escalated budget: {boost}"
+                );
+            }
+            assert!(
+                rep.supervision.makespan_vs_oracle >= 1.0,
+                "measured makespan can never beat the oracle bound: {}",
+                rep.supervision.makespan_vs_oracle
+            );
+            dp.policy_update(1.0);
+        }
+        // ≥, not ==: the deadline policy may legitimately add a preemption
+        // on a slow machine (harmless at T=0 — outputs already asserted).
+        assert!(preemptions >= 1, "the directive must freeze a chunk: {preemptions}");
+        assert!(migrated >= 1, "frozen requests must migrate: {migrated}");
+        assert_eq!(dp.fault_plan().preempt_count(), 1);
+        assert!(dp.fault_plan().unfired().is_empty(), "all faults fired");
+    }
+
+    #[test]
+    fn deadline_blown_straggler_with_empty_queue_is_preempted() {
+        // The policy path (no fault injection): worker 0 sleeps 500 ms
+        // before its only chunk while worker 1 finishes and idles with an
+        // empty queue — stealing has nothing to move, so the coordinator
+        // must arm the preempt latch and migrate the frozen requests.
+        let control = {
+            let mut dp = DataParallelRollout::new(&cfg("none"), 2);
+            sorted_keys(&dp.generate_step(&jobs(2), 0).rollouts)
+        };
+        let mut c = cfg("none");
+        c.rollout.fault_plan = "delay worker=0 step=0 ms=500".into();
+        let mut dp = DataParallelRollout::new(&c, 2);
+        let rep = dp.generate_step(&jobs(2), 0);
+        assert_eq!(sorted_keys(&rep.rollouts), control, "preemption never changes outputs");
+        let preemptions: u64 = rep.per_worker.iter().map(|m| m.preemptions).sum();
+        assert!(
+            preemptions >= 1 && rep.supervision.migrated_requests >= 1,
+            "sleepy straggler must be frozen and its requests migrated: {:?}",
+            rep.supervision
+        );
+        assert_eq!(rep.supervision.worker_restarts, 0, "a slow worker is not dead");
+    }
+
+    #[test]
+    fn corrupted_coordinator_sidecar_is_reported_and_tolerated() {
+        // Satellite: `das store verify` must flag a bad sidecar without
+        // panicking, the read-only peek must not repair or delete it, and a
+        // rebuilt pool must fall back to a cold predictor.
+        let dir = crate::store::test_dir("dp-coord-corrupt");
+        let mut c = cfg("das");
+        c.spec.store_dir = dir.to_string_lossy().into_owned();
+        {
+            let mut dp = DataParallelRollout::new(&c, 2);
+            dp.roll_epoch(0);
+            dp.generate_step(&jobs(6), 0);
+        } // Drop saves coordinator.das
+        let path = dir.join("coordinator.das");
+        let ok = verify_coordinator_sidecar(&dir).expect("pristine sidecar verifies");
+        assert_eq!(ok, Some(std::fs::metadata(&path).unwrap().len()));
+        // Flip one body byte: checksum must catch it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(
+            verify_coordinator_sidecar(&dir).is_err(),
+            "bit flip must be reported"
+        );
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            bytes,
+            "verify is read-only: corrupted sidecar left byte-identical"
+        );
+        // Truncation (torn write) must be an error too, not a panic.
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(verify_coordinator_sidecar(&dir).is_err(), "torn sidecar reported");
+        // A pool built over the corrupt sidecar starts cold but works.
+        let mut dp = DataParallelRollout::new(&c, 2);
+        let rep = dp.generate_step(&jobs(4), 1);
+        assert_eq!(rep.rollouts.len(), 8, "cold-start pool still serves steps");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Rollout request state machine.
+//! Rollout request state machine, plus the serializable freeze format
+//! ([`RequestCheckpoint`]) that lets an in-flight request migrate between
+//! workers at a verification-round boundary and resume bit-identically.
 
 use crate::spec::LengthClass;
+use crate::store::wire::{checksum, Reader, StoreError, Writer};
 use crate::tokens::{ProblemId, RequestId, TokenId};
 use crate::util::rng::Rng;
 
@@ -34,6 +37,13 @@ pub struct RolloutRequest {
     /// Draft tokens proposed / accepted for this request (diagnostics).
     pub proposed: u64,
     pub accepted: u64,
+    /// Length of each committed token run, in commit order. The drafter's
+    /// per-request scope absorbs committed runs chunk-at-a-time
+    /// (`observe_partial`), and chunks never cross-connect inside the
+    /// request-local index — so reconstructing that scope on another worker
+    /// requires replaying the *same* chunk boundaries, not just the same
+    /// token stream. This is the checkpoint's record of those boundaries.
+    commit_chunks: Vec<u32>,
 }
 
 impl RolloutRequest {
@@ -56,6 +66,7 @@ impl RolloutRequest {
             rounds: 0,
             proposed: 0,
             accepted: 0,
+            commit_chunks: Vec::new(),
         }
     }
 
@@ -92,14 +103,207 @@ impl RolloutRequest {
             committed += 1;
             if t == eos {
                 self.state = RequestState::FinishedEos;
-                return committed;
+                break;
             }
             if self.gen_len() >= max_new_tokens {
                 self.state = RequestState::FinishedLength;
-                return committed;
+                break;
             }
         }
+        if committed > 0 {
+            self.commit_chunks.push(committed as u32);
+        }
         committed
+    }
+
+    /// Per-round committed run lengths (see the field doc).
+    pub fn commit_chunks(&self) -> &[u32] {
+        &self.commit_chunks
+    }
+
+    /// Freeze this request into a serializable checkpoint. Only meaningful
+    /// at a verification-round boundary (nothing half-committed); the
+    /// engine enforces that by checkpointing between rounds.
+    pub fn checkpoint(&self, degraded: bool) -> RequestCheckpoint {
+        RequestCheckpoint {
+            origin_id: self.id,
+            problem: self.problem,
+            prompt: self.tokens[..self.prompt_len].to_vec(),
+            generated: self.tokens[self.prompt_len..].to_vec(),
+            commit_chunks: self.commit_chunks.clone(),
+            rng_state: self.rng.state(),
+            init_class: self.init_class,
+            rounds: self.rounds,
+            proposed: self.proposed,
+            accepted: self.accepted,
+            degraded,
+        }
+    }
+
+    /// Thaw a checkpoint on a (possibly different) worker. The resuming
+    /// engine assigns a fresh local `id` — request ids are engine-local and
+    /// collide across workers — while the RNG stream, committed tokens and
+    /// acceptance bookkeeping continue exactly where the origin froze them.
+    pub fn from_checkpoint(id: RequestId, ckpt: &RequestCheckpoint) -> RolloutRequest {
+        let mut tokens =
+            Vec::with_capacity(ckpt.prompt.len() + ckpt.generated.len());
+        tokens.extend_from_slice(&ckpt.prompt);
+        tokens.extend_from_slice(&ckpt.generated);
+        RolloutRequest {
+            id,
+            problem: ckpt.problem,
+            tokens,
+            prompt_len: ckpt.prompt.len(),
+            state: RequestState::Pending,
+            rng: Rng::from_state(ckpt.rng_state),
+            init_class: ckpt.init_class,
+            rounds: ckpt.rounds,
+            proposed: ckpt.proposed,
+            accepted: ckpt.accepted,
+            commit_chunks: ckpt.commit_chunks.clone(),
+        }
+    }
+}
+
+/// Magic tag heading every serialized checkpoint.
+pub const CKPT_MAGIC: &str = "das-ckpt-v1";
+
+fn class_to_u8(c: LengthClass) -> u8 {
+    match c {
+        LengthClass::Short => 0,
+        LengthClass::Medium => 1,
+        LengthClass::Long => 2,
+    }
+}
+
+fn class_from_u8(v: u8) -> Result<LengthClass, StoreError> {
+    match v {
+        0 => Ok(LengthClass::Short),
+        1 => Ok(LengthClass::Medium),
+        2 => Ok(LengthClass::Long),
+        _ => Err(StoreError::Corrupt(format!("unknown length class {v}"))),
+    }
+}
+
+/// Everything needed to resume an in-flight request bit-identically on a
+/// different worker: the token state, the private RNG cursor, the
+/// acceptance bookkeeping the `LengthPolicy` learns from, and the commit
+/// chunk boundaries that reconstruct the per-request drafter scope.
+///
+/// Serialized with the `das-store-v1` wire codec: magic tag, FNV-1a body
+/// checksum, length-guarded body. Torn or tampered bytes are rejected with
+/// a [`StoreError`], never a panic — checkpoints cross a channel today but
+/// the format is built to survive a disk or a socket tomorrow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestCheckpoint {
+    /// Request id on the worker that froze it (provenance/diagnostics only;
+    /// ids are engine-local, so the resuming engine assigns a fresh one).
+    pub origin_id: RequestId,
+    pub problem: ProblemId,
+    pub prompt: Vec<TokenId>,
+    pub generated: Vec<TokenId>,
+    /// Committed run lengths per verification round, in order.
+    pub commit_chunks: Vec<u32>,
+    /// Raw Xoshiro256** state — carried verbatim, never re-forked: worker
+    /// seeds differ, so re-deriving the stream would change sampled output.
+    pub rng_state: [u64; 4],
+    pub init_class: LengthClass,
+    pub rounds: u32,
+    pub proposed: u64,
+    pub accepted: u64,
+    /// Whether the origin had already degraded this request to plain
+    /// decoding (a poisoned drafter must stay degraded after migration).
+    pub degraded: bool,
+}
+
+impl RequestCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Writer::new();
+        body.u64(self.origin_id);
+        body.u32(self.problem);
+        body.tokens(&self.prompt);
+        body.tokens(&self.generated);
+        body.tokens(&self.commit_chunks);
+        for w in self.rng_state {
+            body.u64(w);
+        }
+        body.u8(class_to_u8(self.init_class));
+        body.u32(self.rounds);
+        body.u64(self.proposed);
+        body.u64(self.accepted);
+        body.u8(self.degraded as u8);
+        let body = body.into_bytes();
+        let mut out = Writer::new();
+        out.str(CKPT_MAGIC);
+        out.u64(checksum(&body));
+        out.usize(body.len());
+        let mut bytes = out.into_bytes();
+        bytes.extend_from_slice(&body);
+        bytes
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<RequestCheckpoint, StoreError> {
+        let mut r = Reader::new(bytes);
+        r.expect_str(CKPT_MAGIC, "checkpoint magic")?;
+        let want = r.u64()?;
+        let len = r.count(1)?;
+        let body = r.bytes(len)?;
+        if checksum(body) != want {
+            return Err(StoreError::Corrupt(
+                "checkpoint checksum mismatch".into(),
+            ));
+        }
+        let mut r = Reader::new(body);
+        let origin_id = r.u64()?;
+        let problem = r.u32()?;
+        let prompt = r.tokens()?;
+        let generated = r.tokens()?;
+        let commit_chunks = r.tokens()?;
+        let mut rng_state = [0u64; 4];
+        for w in rng_state.iter_mut() {
+            *w = r.u64()?;
+        }
+        let init_class = class_from_u8(r.u8()?)?;
+        let rounds = r.u32()?;
+        let proposed = r.u64()?;
+        let accepted = r.u64()?;
+        let degraded = match r.u8()? {
+            0 => false,
+            1 => true,
+            v => {
+                return Err(StoreError::Corrupt(format!(
+                    "bad degraded flag {v}"
+                )))
+            }
+        };
+        if !r.is_empty() {
+            return Err(StoreError::Corrupt(format!(
+                "{} trailing bytes after checkpoint body",
+                r.remaining()
+            )));
+        }
+        // Chunk lengths must tile the generated run exactly, or the drafter
+        // scope replay on the destination would diverge from the origin.
+        let tiled: u64 = commit_chunks.iter().map(|&c| c as u64).sum();
+        if tiled != generated.len() as u64 {
+            return Err(StoreError::Corrupt(format!(
+                "commit chunks cover {tiled} tokens but {} were generated",
+                generated.len()
+            )));
+        }
+        Ok(RequestCheckpoint {
+            origin_id,
+            problem,
+            prompt,
+            generated,
+            commit_chunks,
+            rng_state,
+            init_class,
+            rounds,
+            proposed,
+            accepted,
+            degraded,
+        })
     }
 }
 
@@ -135,5 +339,100 @@ mod tests {
         assert_eq!(r.context(), &[9, 8, 5]);
         assert_eq!(r.gen_len(), 1);
         assert!(!r.is_done());
+    }
+
+    #[test]
+    fn commit_records_chunk_boundaries() {
+        let mut r = req();
+        r.commit(&[1, 2], 63, 100);
+        r.commit(&[3], 63, 100);
+        r.commit(&[4, 5, 63, 7], 63, 100); // EOS truncates the run to 3
+        assert_eq!(r.commit_chunks(), &[2, 1, 3]);
+        assert_eq!(r.gen_len(), 6);
+    }
+
+    fn ckpt() -> RequestCheckpoint {
+        let mut r = RolloutRequest::new(
+            7,
+            3,
+            vec![10, 11, 12],
+            Rng::seed_from_u64(41),
+            LengthClass::Long,
+        );
+        r.rng.next_u64(); // advance the stream so the cursor is non-trivial
+        r.commit(&[20, 21], 63, 100);
+        r.commit(&[22], 63, 100);
+        r.rounds = 2;
+        r.proposed = 5;
+        r.accepted = 3;
+        r.checkpoint(true)
+    }
+
+    #[test]
+    fn checkpoint_round_trip_is_identity() {
+        let c = ckpt();
+        let bytes = c.to_bytes();
+        let back = RequestCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn checkpoint_truncation_rejected_at_every_cut() {
+        let bytes = ckpt().to_bytes();
+        for cut in 0..bytes.len() {
+            let res = RequestCheckpoint::from_bytes(&bytes[..cut]);
+            assert!(res.is_err(), "cut at {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn checkpoint_bit_flips_rejected() {
+        let bytes = ckpt().to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            // Every single-bit corruption must surface as an error — a
+            // flipped magic byte, checksum word, length, or body byte.
+            assert!(
+                RequestCheckpoint::from_bytes(&bad).is_err(),
+                "flip at {i} parsed"
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_untiled_chunks() {
+        let mut c = ckpt();
+        c.commit_chunks = vec![1]; // covers 1 of 3 generated tokens
+        let err = RequestCheckpoint::from_bytes(&c.to_bytes()).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt(_)), "{err}");
+    }
+
+    #[test]
+    fn thawed_request_continues_rng_and_tokens_exactly() {
+        let mut orig = RolloutRequest::new(
+            7,
+            3,
+            vec![10, 11],
+            Rng::seed_from_u64(17),
+            LengthClass::Medium,
+        );
+        orig.commit(&[30, 31], 63, 100);
+        orig.rng.next_u64();
+        let c = c_round_trip(&orig.checkpoint(false));
+        let mut thawed = RolloutRequest::from_checkpoint(99, &c);
+        assert_eq!(thawed.id, 99);
+        assert_eq!(thawed.context(), orig.context());
+        assert_eq!(thawed.prompt_len(), orig.prompt_len());
+        assert_eq!(thawed.commit_chunks(), orig.commit_chunks());
+        assert_eq!(thawed.state, RequestState::Pending);
+        // The RNG stream continues where the origin stopped.
+        for _ in 0..32 {
+            assert_eq!(thawed.rng.next_u64(), orig.rng.next_u64());
+        }
+    }
+
+    fn c_round_trip(c: &RequestCheckpoint) -> RequestCheckpoint {
+        RequestCheckpoint::from_bytes(&c.to_bytes()).unwrap()
     }
 }

@@ -115,6 +115,27 @@ pub fn objective(reqs: &[BudgetRequest], cost: &LatencyModel, n_fwd: f64) -> f64
     j
 }
 
+/// Escalate a per-round speculative budget for a request resumed after
+/// preemption. A migrated request is a *known* straggler landing on an
+/// otherwise-idle worker, where deeper drafting is nearly free (the
+/// EfficientRollout observation), so its budget is multiplied by `boost`
+/// and clamped: never below the un-escalated budget (a boost < 1 cannot
+/// sneak a shrink past validation) and never above `cap`
+/// (`spec.budget_cap` — the same ceiling every other budget respects).
+pub fn escalate(budget: usize, boost: f64, cap: usize) -> usize {
+    if budget == 0 {
+        // Zero means "do not speculate" (short class / degraded request);
+        // escalation must not conjure speculation out of nothing.
+        return 0;
+    }
+    let boosted = if boost.is_finite() && boost > 1.0 {
+        (budget as f64 * boost).round() as usize
+    } else {
+        budget
+    };
+    boosted.max(budget).min(cap.max(budget))
+}
+
 /// Solve for the optimal `N_fwd` and per-request budgets.
 pub fn solve(reqs: &[BudgetRequest], cost: &LatencyModel) -> BudgetSolution {
     if reqs.is_empty() {
@@ -263,6 +284,18 @@ mod tests {
             a.n_fwd,
             b.n_fwd
         );
+    }
+
+    #[test]
+    fn escalate_multiplies_and_clamps() {
+        assert_eq!(escalate(8, 2.0, 64), 16);
+        assert_eq!(escalate(8, 1.0, 64), 8, "no-op boost");
+        assert_eq!(escalate(8, 2.5, 64), 20, "rounded, not truncated");
+        assert_eq!(escalate(40, 4.0, 64), 64, "budget_cap ceiling");
+        assert_eq!(escalate(8, 0.5, 64), 8, "never shrinks");
+        assert_eq!(escalate(8, f64::NAN, 64), 8, "non-finite is a no-op");
+        assert_eq!(escalate(0, 4.0, 64), 0, "zero budget stays zero");
+        assert_eq!(escalate(10, 2.0, 4), 10, "cap below budget keeps budget");
     }
 
     #[test]

@@ -36,6 +36,18 @@ impl Rng {
         Rng { s }
     }
 
+    /// Raw generator state, for checkpoint serialization. Restoring via
+    /// [`Rng::from_state`] continues the exact stream — required for
+    /// bit-identical resume of a migrated request.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from previously captured [`Rng::state`] words.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Derive an independent stream for a sub-task (e.g. one per request).
     /// Mixes the label into fresh state so streams don't overlap in practice.
     pub fn fork(&mut self, label: u64) -> Rng {
@@ -246,6 +258,18 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_round_trip_continues_stream() {
+        let mut a = Rng::seed_from_u64(2024);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -7,12 +7,19 @@ For every named bench present in BOTH files, compare fresh median_ns
 against the baseline's. Exit 1 if any bench regressed by more than
 ``max_regression`` (default 0.25, i.e. fresh > 1.25x baseline). Benches
 present in only one file are reported but never fail the run (renames and
-new benches are not regressions).
+new benches are not regressions). Benches with a missing or zero median on
+either side (``--quick`` runs can produce sub-resolution timings) are
+reported as ``n/a`` and never fail the run — a 0ns median is a measurement
+artifact, not a 0ns bench.
 
 An empty baseline passes with a loud warning by default (the historical
 committed-JSON seed state), or fails outright under ``--require-baseline``
 — the mode CI uses now that the baseline is regenerated from the merge
 base on every run, where "empty" can only mean the gate is broken.
+
+When ``GITHUB_STEP_SUMMARY`` is set, a per-bench delta table is appended to
+it so the comparison shows on the workflow run page without digging
+through step logs.
 """
 
 import json
@@ -26,6 +33,43 @@ def load(path):
     if doc.get("schema") != "das-bench-v1":
         sys.exit(f"{path}: not a das-bench-v1 file (schema={doc.get('schema')!r})")
     return {r["name"]: r for r in doc.get("results", []) if "name" in r}
+
+
+def median_of(result):
+    """A usable median or None: --quick runs can emit missing/zero/negative
+    medians (timer resolution), which must not fake an infinite ratio."""
+    if result is None:
+        return None
+    med = result.get("median_ns")
+    if not isinstance(med, (int, float)) or med <= 0:
+        return None
+    return float(med)
+
+
+def fmt_ns(med):
+    return f"{med:.0f}" if med is not None else "-"
+
+
+def write_step_summary(rows, max_regression, n_regressions):
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "### Bench comparison",
+        "",
+        "| bench | base median (ns) | fresh median (ns) | delta |",
+        "| --- | ---: | ---: | --- |",
+    ]
+    for name, base_med, fresh_med, note in rows:
+        lines.append(f"| `{name}` | {fmt_ns(base_med)} | {fmt_ns(fresh_med)} | {note} |")
+    verdict = (
+        f"**FAIL**: {n_regressions} bench(es) regressed > {max_regression:.0%}"
+        if n_regressions
+        else f"**OK**: no bench regressed more than {max_regression:.0%}"
+    )
+    lines += ["", verdict, ""]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main():
@@ -57,22 +101,34 @@ def main():
         return
 
     regressions = []
+    rows = []  # (name, base_med, fresh_med, note) for the step summary
     print(f"{'bench':<44} {'base med':>12} {'fresh med':>12} {'ratio':>8}")
     for name in sorted(set(base) | set(fresh)):
-        b, f = base.get(name), fresh.get(name)
-        if b is None:
-            print(f"{name:<44} {'-':>12} {f['median_ns']:>12.0f} {'new':>8}")
+        base_med = median_of(base.get(name))
+        fresh_med = median_of(fresh.get(name))
+        if name not in base:
+            print(f"{name:<44} {'-':>12} {fmt_ns(fresh_med):>12} {'new':>8}")
+            rows.append((name, None, fresh_med, "new"))
             continue
-        if f is None:
-            print(f"{name:<44} {b['median_ns']:>12.0f} {'-':>12} {'gone':>8}")
+        if name not in fresh:
+            print(f"{name:<44} {fmt_ns(base_med):>12} {'-':>12} {'gone':>8}")
+            rows.append((name, base_med, None, "gone"))
             continue
-        base_med, fresh_med = b["median_ns"], f["median_ns"]
-        ratio = fresh_med / base_med if base_med > 0 else float("inf")
-        flag = " <-- REGRESSION" if ratio > 1.0 + max_regression else ""
+        if base_med is None or fresh_med is None:
+            # A missing/zero median on either side makes the ratio
+            # meaningless — surface it, never fail on it.
+            print(f"{name:<44} {fmt_ns(base_med):>12} {fmt_ns(fresh_med):>12} {'n/a':>8}")
+            rows.append((name, base_med, fresh_med, "n/a (unusable median)"))
+            continue
+        ratio = fresh_med / base_med
+        regressed = ratio > 1.0 + max_regression
+        flag = " <-- REGRESSION" if regressed else ""
         print(f"{name:<44} {base_med:>12.0f} {fresh_med:>12.0f} {ratio:>8.2f}{flag}")
-        if ratio > 1.0 + max_regression:
+        rows.append((name, base_med, fresh_med, f"{ratio:.2f}x" + (" ⚠️" if regressed else "")))
+        if regressed:
             regressions.append((name, ratio))
 
+    write_step_summary(rows, max_regression, len(regressions))
     if regressions:
         worst = ", ".join(f"{n} ({r:.2f}x)" for n, r in regressions)
         sys.exit(f"FAIL: {len(regressions)} bench(es) regressed >" f"{max_regression:.0%}: {worst}")
