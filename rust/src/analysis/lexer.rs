@@ -1,0 +1,492 @@
+//! Comment/string-aware lexical scanner behind `das audit`.
+//!
+//! The audit rules are lexical, so their precision rests entirely on this
+//! module: a violation token inside a string literal, a raw string, a char
+//! literal, or any flavor of comment must be invisible to the rules, and a
+//! token inside `#[cfg(test)]` / `mod tests` regions must be attributable
+//! as test code. The scanner therefore produces, per source line:
+//!
+//! - `code`: the line with every comment and literal *content* blanked to
+//!   spaces (delimiters kept), so rules can do plain substring matching
+//!   without literal false positives;
+//! - `comment`: the concatenated comment text of the line (pragmas like
+//!   `// audit: allow(panic-path) -- reason` live here);
+//! - `has_comment`: whether any part of the line is commented (the
+//!   `atomic-ordering` rule accepts a justification on the same line or the
+//!   line directly above);
+//! - `in_test`: whether the line sits inside a test region, tracked by
+//!   brace depth from the `#[cfg(test)]` attribute or `mod tests` item that
+//!   opened it.
+//!
+//! Handled literal forms: `"…"` with escapes, byte strings `b"…"`, raw
+//! strings `r"…"` / `r#"…"#` (any hash count, `br#"…"#` too), char and byte
+//! char literals (`'a'`, `'\n'`, `b'x'`) disambiguated from lifetimes
+//! (`'static`), line comments (incl. `///` and `//!` doc forms) and nested
+//! block comments.
+
+/// One scanned source line (see module docs for field semantics).
+#[derive(Debug, Default)]
+pub struct LineInfo {
+    pub code: String,
+    pub comment: String,
+    pub has_comment: bool,
+    pub in_test: bool,
+}
+
+/// A whole scanned file: lines are 0-indexed here, findings report 1-based.
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    pub lines: Vec<LineInfo>,
+}
+
+/// A suppression pragma found in a comment: `audit:` followed by the rule
+/// in `allow(…)` and a `-- <reason>` tail (the module docs show the full
+/// form). A pragma suppresses findings of `rule` on its own line and on
+/// the line directly below — and is itself a violation when `reason_ok` is
+/// false (no `--` reason, or an empty one).
+#[derive(Debug)]
+pub struct Pragma {
+    /// 0-based line the pragma's comment sits on.
+    pub line: usize,
+    pub rule: String,
+    pub reason_ok: bool,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+/// Match a string-literal opener at `i`: optional `b`, optional `r` +
+/// hashes, then `"`. Returns (prefix length including the quote, raw hash
+/// count — `None` for an escaping string).
+fn string_opener(chars: &[char], i: usize) -> Option<(usize, Option<u32>)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'r') {
+        j += 1;
+        let mut hashes = 0u32;
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if chars.get(j) == Some(&'"') {
+            return Some((j + 1 - i, Some(hashes)));
+        }
+        return None;
+    }
+    if chars.get(j) == Some(&'"') {
+        return Some((j + 1 - i, None));
+    }
+    None
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `source` into per-line code/comment views (see module docs).
+pub fn lex(source: &str) -> LexedFile {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines: Vec<LineInfo> = Vec::new();
+    let mut line = LineInfo::default();
+    let mut state = State::Code;
+    // The char last appended to `code` — a raw-string prefix (`r`/`b`) is
+    // only an opener when it does not continue an identifier (`for`,
+    // `attr` end in valid prefix letters).
+    let mut prev_code: char = '\n';
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            if matches!(state, State::BlockComment(_)) {
+                line.has_comment = true;
+            }
+            lines.push(std::mem::take(&mut line));
+            if let State::BlockComment(_) = state {
+                line.has_comment = true;
+            }
+            prev_code = '\n';
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    line.has_comment = true;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    line.has_comment = true;
+                    i += 2;
+                    continue;
+                }
+                let may_open = c == '"' || ((c == 'r' || c == 'b') && !is_ident(prev_code));
+                if may_open {
+                    if let Some((len, raw)) = string_opener(&chars, i) {
+                        for k in 0..len {
+                            line.code.push(chars[i + k]);
+                        }
+                        state = match raw {
+                            Some(h) => State::RawStr(h),
+                            None => State::Str,
+                        };
+                        prev_code = '"';
+                        i += len;
+                        continue;
+                    }
+                }
+                let byte_quote =
+                    c == 'b' && chars.get(i + 1) == Some(&'\'') && !is_ident(prev_code);
+                if c == '\'' || byte_quote {
+                    let q = if byte_quote { i + 1 } else { i };
+                    if chars.get(q) == Some(&'\'') {
+                        let next = chars.get(q + 1);
+                        let is_char = next == Some(&'\\')
+                            || (next.is_some() && chars.get(q + 2) == Some(&'\''));
+                        if is_char {
+                            for k in i..=q {
+                                line.code.push(chars[k]);
+                            }
+                            state = State::CharLit;
+                            prev_code = '\'';
+                            i = q + 1;
+                            continue;
+                        }
+                    }
+                    // Lifetime (or lone quote): plain code.
+                    line.code.push(c);
+                    prev_code = c;
+                    i += 1;
+                    continue;
+                }
+                line.code.push(c);
+                prev_code = c;
+                i += 1;
+            }
+            State::LineComment => {
+                line.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    line.code.push(' ');
+                    if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                        line.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    line.code.push('"');
+                    state = State::Code;
+                    prev_code = '"';
+                    i += 1;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let closes = c == '"'
+                    && (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'));
+                if closes {
+                    line.code.push('"');
+                    for _ in 0..hashes {
+                        line.code.push('#');
+                    }
+                    state = State::Code;
+                    prev_code = '"';
+                    i += 1 + hashes as usize;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    line.code.push(' ');
+                    if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                        line.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    line.code.push('\'');
+                    state = State::Code;
+                    prev_code = '\'';
+                    i += 1;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if matches!(state, State::BlockComment(_)) {
+        line.has_comment = true;
+    }
+    if !line.code.is_empty() || !line.comment.is_empty() || line.has_comment {
+        lines.push(line);
+    }
+    let mut file = LexedFile { lines };
+    mark_test_regions(&mut file);
+    file
+}
+
+/// Does `hay[at..]` start with `needle`, with identifier boundaries on both
+/// sides (so `mod tests` never matches inside `mod tests_util`)?
+fn token_at(hay: &[char], at: usize, needle: &str) -> bool {
+    let n: Vec<char> = needle.chars().collect();
+    if at + n.len() > hay.len() || hay[at..at + n.len()] != n[..] {
+        return false;
+    }
+    let before_ok = at == 0 || !is_ident(hay[at - 1]);
+    let last = n[n.len() - 1];
+    let after_ok = !is_ident(last) || hay.get(at + n.len()).is_none_or(|&c| !is_ident(c));
+    before_ok && after_ok
+}
+
+/// Second pass: brace-depth tracking of `#[cfg(test)]` / `mod tests`
+/// regions over the scrubbed code (string/comment occurrences can no
+/// longer confuse it). A pending marker attaches to the next `{` opened at
+/// its own depth and is cancelled by a `;` there (attribute on a bodyless
+/// item); the region ends when depth returns to the opening level.
+fn mark_test_regions(file: &mut LexedFile) {
+    let mut depth: i64 = 0;
+    let mut pending: Option<i64> = None;
+    let mut regions: Vec<i64> = Vec::new();
+    for line in &mut file.lines {
+        let code: Vec<char> = line.code.chars().collect();
+        let mut in_test = !regions.is_empty();
+        let mut k = 0usize;
+        while k < code.len() {
+            if token_at(&code, k, "#[cfg(test)]") {
+                pending = Some(depth);
+                k += "#[cfg(test)]".chars().count();
+                continue;
+            }
+            if token_at(&code, k, "mod tests") {
+                pending = Some(depth);
+                k += "mod tests".chars().count();
+                continue;
+            }
+            match code[k] {
+                '{' => {
+                    if pending == Some(depth) {
+                        regions.push(depth);
+                        pending = None;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if regions.last() == Some(&depth) {
+                        regions.pop();
+                    }
+                }
+                ';' => {
+                    if pending == Some(depth) {
+                        pending = None;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if !regions.is_empty() {
+            in_test = true;
+        }
+        line.in_test = in_test;
+    }
+}
+
+/// Extract every suppression pragma from the file's comment text.
+pub fn pragmas(file: &LexedFile) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for (lineno, line) in file.lines.iter().enumerate() {
+        let text = &line.comment;
+        let mut from = 0usize;
+        while let Some(rel) = text[from..].find("audit:") {
+            let after = &text[from + rel + "audit:".len()..];
+            let trimmed = after.trim_start();
+            let Some(rest) = trimmed.strip_prefix("allow(") else {
+                from += rel + "audit:".len();
+                continue;
+            };
+            let Some(close) = rest.find(')') else {
+                break;
+            };
+            let rule = rest[..close].trim().to_string();
+            let tail = rest[close + 1..].trim_start();
+            let reason_ok = tail
+                .strip_prefix("--")
+                .is_some_and(|r| !r.trim().is_empty());
+            out.push(Pragma {
+                line: lineno,
+                rule,
+                reason_ok,
+            });
+            from += rel + "audit:".len();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).lines.iter().map(|l| l.code.clone()).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let a = \"x.unwrap()\"; // panic!(\nlet b = 1; /* todo!() */ let c = 2;\n";
+        let code = code_of(src);
+        assert!(!code[0].contains("unwrap"), "{:?}", code[0]);
+        assert!(!code[0].contains("panic"), "{:?}", code[0]);
+        assert!(code[1].contains("let b = 1;"));
+        assert!(code[1].contains("let c = 2;"));
+        assert!(!code[1].contains("todo"));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let src = "let a = r#\"one \" two .unwrap()\"# + r\"x.expect(\" + b;\n";
+        let code = code_of(src);
+        assert!(!code[0].contains("unwrap"));
+        assert!(!code[0].contains("expect"));
+        assert!(code[0].contains("+ b;"), "{:?}", code[0]);
+        let src2 = "let a = br##\"nested \"# still inside panic!(\"##;\nlet x = 3;\n";
+        let code2 = code_of(src2);
+        assert!(!code2[0].contains("panic"));
+        assert!(code2[1].contains("let x = 3;"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // The escaped quote must not open a string state that swallows the
+        // rest of the line.
+        let src = "let q = '\\''; let s: &'static str = x; y.unwrap();\n";
+        let code = code_of(src);
+        assert!(code[0].contains(".unwrap()"), "{:?}", code[0]);
+        assert!(code[0].contains("'static"));
+        let src2 = "let c = 'a'; let b = b'\\n'; z.expect(\"m\");\n";
+        let code2 = code_of(src2);
+        assert!(code2[0].contains(".expect("));
+        assert!(!code2[0].contains('a'), "char content blanked: {:?}", code2[0]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a(); /* one /* two */ still comment .unwrap() */ b();\n";
+        let code = code_of(src);
+        assert!(code[0].contains("a();"));
+        assert!(code[0].contains("b();"));
+        assert!(!code[0].contains("unwrap"));
+    }
+
+    #[test]
+    fn escaped_backslash_does_not_extend_string() {
+        let src = "let p = \"tail\\\\\"; q.unwrap();\n";
+        let code = code_of(src);
+        assert!(code[0].contains(".unwrap()"), "{:?}", code[0]);
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let src = "let s = \"line one\nline .unwrap() two\"; f();\n";
+        let code = code_of(src);
+        assert!(!code[1].contains("unwrap"));
+        assert!(code[1].contains("f();"));
+    }
+
+    #[test]
+    fn identifier_r_is_not_a_raw_string() {
+        let src = "for x in iter { attr\"lit\"; }\n";
+        // `for` ends in r, `attr` ends in r: neither may open a raw string
+        // (the \"lit\" content is a plain string and gets blanked; the
+        // brace structure must survive).
+        let code = code_of(src);
+        assert!(code[0].contains('{') && code[0].contains('}'), "{:?}", code[0]);
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_and_mod_tests() {
+        let src = "fn live() { a(); }\n#[cfg(test)]\nmod tests {\n    fn t() { x(); }\n}\nfn live2() {}\n";
+        let f = lex(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[2].in_test, "mod tests opening line");
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test, "closing brace line");
+        assert!(!f.lines[5].in_test, "region ended");
+    }
+
+    #[test]
+    fn cfg_test_on_bodyless_item_does_not_leak() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { x(); }\n";
+        let f = lex(src);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn cfg_test_in_string_is_inert() {
+        let src = "let s = \"#[cfg(test)]\";\nfn live() { x(); }\n";
+        let f = lex(src);
+        assert!(!f.lines[1].in_test);
+    }
+
+    #[test]
+    fn pragma_parse_with_and_without_reason() {
+        let src = "// audit: allow(panic-path) -- invariant: checked above\nx();\n// audit: allow(raw-rng)\ny();\n";
+        let f = lex(src);
+        let p = pragmas(&f);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].rule, "panic-path");
+        assert!(p[0].reason_ok);
+        assert_eq!(p[1].rule, "raw-rng");
+        assert!(!p[1].reason_ok, "missing -- reason must be rejected");
+    }
+
+    #[test]
+    fn has_comment_tracks_block_spans() {
+        let src = "let a = 1; /* start\nmiddle\n*/ let b = 2;\nlet c = 3;\n";
+        let f = lex(src);
+        assert!(f.lines[0].has_comment);
+        assert!(f.lines[1].has_comment);
+        assert!(f.lines[2].has_comment);
+        assert!(!f.lines[3].has_comment);
+    }
+}

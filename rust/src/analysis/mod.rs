@@ -1,0 +1,402 @@
+//! `das audit` — in-tree static analysis proving the source-level
+//! invariants the chaos/equivalence gates lean on.
+//!
+//! The byte-identical-replay guarantee (chaos gate, PRs 6–8) silently rests
+//! on properties no test can see: panic-freedom in supervised paths,
+//! poison-safe locking under `catch_unwind`, no wall-clock or ambient-RNG
+//! state leaking into replayed decisions, justified atomic orderings in the
+//! lock-free snapshot layer, and checked narrowing in the `das-store-v1` /
+//! `das-ckpt-v1` codecs. This module enforces them mechanically on every
+//! commit: a [`lexer`] pass scrubs strings/comments and attributes test
+//! regions, a [`rules`] pass emits findings, and the `das audit` CLI verb
+//! exits nonzero on any finding.
+//!
+//! Suppression is per-site and must be justified:
+//!
+//! ```text
+//! // audit: allow(panic-path) -- pool refcount invariant: segment is live
+//! ```
+//!
+//! A pragma suppresses its named rule on the pragma's own line and the line
+//! directly below. A pragma without a `-- <reason>`, or naming an unknown
+//! rule, is itself a finding (rule `pragma`) and suppresses nothing —
+//! malformed exemptions may not silently widen. Pragma hygiene is checked
+//! in test code too.
+//!
+//! JSON output (`--json <path>`) uses the `das-audit-v1` schema: an object
+//! with `schema`, `root`, `files_scanned`, `suppressed`, `findings`
+//! (`rule`/`file`/`line`/`message`/`excerpt` per entry, sorted by file then
+//! line) and the `rules` registry, serialized deterministically via
+//! [`crate::util::json`].
+
+pub mod lexer;
+pub mod rules;
+
+use std::io;
+use std::path::Path;
+
+pub use rules::{Finding, RuleInfo, RULES};
+
+use crate::util::json::Json;
+
+/// Result of one audit run over a scan root.
+#[derive(Debug)]
+pub struct AuditReport {
+    /// Scan root as given (display form, `/`-separated members below it).
+    pub root: String,
+    pub files_scanned: usize,
+    /// Surviving findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a well-formed suppression pragma.
+    pub suppressed: usize,
+}
+
+/// Recursively collect `.rs` files under `dir`, as `/`-separated paths
+/// relative to the scan root, sorted — the walk order (and therefore the
+/// report) is deterministic regardless of directory-entry order.
+fn collect_rs_files(dir: &Path, prefix: &str, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let rel = if prefix.is_empty() { name.to_string() } else { format!("{prefix}/{name}") };
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over every `.rs` file under `root` and fold the findings
+/// into a deterministic [`AuditReport`].
+pub fn run_audit(root: &Path) -> io::Result<AuditReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, "", &mut files)?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for rel in &files {
+        let source = std::fs::read_to_string(root.join(rel))
+            .map_err(|e| io::Error::other(format!("{rel}: {e}")))?;
+        let raw: Vec<&str> = source.lines().collect();
+        let lexed = lexer::lex(&source);
+        let pragmas = lexer::pragmas(&lexed);
+        for f in rules::scan_file(rel, &lexed, &raw) {
+            // A well-formed pragma covers its own line and the next one;
+            // malformed pragmas deliberately cover nothing.
+            let hit = pragmas.iter().any(|p| {
+                p.reason_ok && p.rule == f.rule && (p.line + 1 == f.line || p.line + 2 == f.line)
+            });
+            if hit {
+                suppressed += 1;
+            } else {
+                findings.push(f);
+            }
+        }
+        for p in &pragmas {
+            let excerpt = raw.get(p.line).map_or(String::new(), |l| l.trim().to_string());
+            let known = RULES.iter().any(|r| r.name == p.rule && r.name != rules::PRAGMA);
+            let message = if !known {
+                Some(format!(
+                    "pragma names unknown rule `{}` — it suppresses nothing (known: {})",
+                    p.rule,
+                    RULES.iter().map(|r| r.name).collect::<Vec<_>>().join(", ")
+                ))
+            } else if !p.reason_ok {
+                Some(format!(
+                    "suppression pragma without a reason — write \
+                     `// audit: allow({}) -- <why>`",
+                    p.rule
+                ))
+            } else {
+                None
+            };
+            if let Some(message) = message {
+                findings.push(Finding {
+                    rule: rules::PRAGMA,
+                    file: rel.clone(),
+                    line: p.line + 1,
+                    message,
+                    excerpt,
+                });
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(AuditReport {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        findings,
+        suppressed,
+    })
+}
+
+impl AuditReport {
+    /// Human rendering: one `file:line: [rule] message` block per finding,
+    /// then a one-line verdict.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+            if !f.excerpt.is_empty() {
+                out.push_str(&format!("    > {}\n", f.excerpt));
+            }
+        }
+        if self.findings.is_empty() {
+            out.push_str(&format!(
+                "das audit: clean — {} files under {}, {} finding(s) suppressed by pragma\n",
+                self.files_scanned, self.root, self.suppressed
+            ));
+        } else {
+            out.push_str(&format!(
+                "das audit: {} finding(s) across {} files under {} ({} suppressed)\n",
+                self.findings.len(),
+                self.files_scanned,
+                self.root,
+                self.suppressed
+            ));
+        }
+        out
+    }
+
+    /// `das-audit-v1` JSON report (deterministic: BTreeMap-backed objects,
+    /// findings pre-sorted).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("das-audit-v1")),
+            ("root", Json::str(&self.root)),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("suppressed", Json::num(self.suppressed as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("rule", Json::str(f.rule)),
+                                ("file", Json::str(&f.file)),
+                                ("line", Json::num(f.line as f64)),
+                                ("message", Json::str(&f.message)),
+                                ("excerpt", Json::str(&f.excerpt)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "rules",
+                Json::Arr(
+                    RULES
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(r.name)),
+                                ("description", Json::str(r.description)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+
+    /// Write fixture files under a unique temp root and return it.
+    fn fixture(name: &str, files: &[(&str, &str)]) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let root =
+            std::env::temp_dir().join(format!("das-audit-{}-{name}-{n}", std::process::id()));
+        for (rel, src) in files {
+            let path = root.join(rel);
+            std::fs::create_dir_all(path.parent().expect("fixture paths have parents")).expect(
+                "create fixture dir",
+            );
+            std::fs::write(&path, src).expect("write fixture file");
+        }
+        root
+    }
+
+    fn audit(root: &PathBuf) -> AuditReport {
+        let report = run_audit(root).expect("fixture audit runs");
+        std::fs::remove_dir_all(root).ok();
+        report
+    }
+
+    fn count(report: &AuditReport, rule: &str) -> usize {
+        report.findings.iter().filter(|f| f.rule == rule).count()
+    }
+
+    #[test]
+    fn every_seeded_violation_fires_exactly_once() {
+        let root = fixture(
+            "seeded",
+            &[
+                ("rollout/engine.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n"),
+                (
+                    "util/cow.rs",
+                    "fn g(a: &std::sync::atomic::AtomicBool) { a.store(true, Ordering::SeqCst); }\n",
+                ),
+                ("model/sim.rs", "fn h() { let _t = std::time::Instant::now(); }\n"),
+                ("workload/mod.rs", "fn r() { let _rng = thread_rng(); }\n"),
+                ("store/wire.rs", "fn n(x: u64) -> u32 { x as u32 }\n"),
+                (
+                    "telemetry/mod.rs",
+                    "fn l(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n",
+                ),
+            ],
+        );
+        let report = audit(&root);
+        let expected = [
+            "panic-path",
+            "atomic-ordering",
+            "wall-clock-determinism",
+            "raw-rng",
+            "unchecked-narrowing",
+            "poisoned-lock",
+        ];
+        for rule in expected {
+            assert_eq!(count(&report, rule), 1, "rule {rule}: {}", report.render());
+        }
+        assert_eq!(report.findings.len(), 6, "{}", report.render());
+        assert_eq!(report.files_scanned, 6);
+    }
+
+    #[test]
+    fn strings_comments_and_test_regions_do_not_fire() {
+        let src = r##"
+fn live() {
+    let a = "x.unwrap() and Instant::now() in a string";
+    let b = r#"panic!("raw string") thread_rng()"#;
+    let _ = (a, b);
+}
+/// Doc comment: .unwrap() panic!( SystemTime thread_rng Ordering::SeqCst
+// line comment: x as u32 .lock().unwrap()
+#[cfg(test)]
+mod tests {
+    fn t(x: Option<u32>) {
+        x.unwrap();
+        let _t = std::time::Instant::now();
+        panic!("test code is exempt");
+    }
+}
+"##;
+        let root = fixture("exempt", &[("rollout/engine.rs", src)]);
+        let report = audit(&root);
+        assert!(report.findings.is_empty(), "{}", report.render());
+    }
+
+    #[test]
+    fn pragma_suppresses_own_line_and_next_line_only() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // audit: allow(panic-path) -- fixture: exercised invariant\n\
+                   x.unwrap()\n\
+                   }\n\
+                   fn g(y: Option<u32>) -> u32 {\n\
+                   y.unwrap() // audit: allow(panic-path) -- fixture: same line\n\
+                   }\n\
+                   fn far(z: Option<u32>) -> u32 {\n\
+                   // audit: allow(panic-path) -- fixture: too far away\n\
+                   let keep = 1;\n\
+                   z.unwrap() + keep\n\
+                   }\n";
+        let root = fixture("pragma", &[("store/mod.rs", src)]);
+        let report = audit(&root);
+        assert_eq!(count(&report, "panic-path"), 1, "{}", report.render());
+        assert_eq!(report.findings[0].line, 11, "only the out-of-range site survives");
+        assert_eq!(report.suppressed, 2);
+    }
+
+    #[test]
+    fn reasonless_pragma_is_a_violation_and_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // audit: allow(panic-path)\n\
+                   x.unwrap()\n\
+                   }\n";
+        let root = fixture("reasonless", &[("suffix/core.rs", src)]);
+        let report = audit(&root);
+        assert_eq!(count(&report, "pragma"), 1, "{}", report.render());
+        assert_eq!(count(&report, "panic-path"), 1, "malformed pragma must not suppress");
+        assert_eq!(report.suppressed, 0);
+    }
+
+    #[test]
+    fn unknown_rule_pragma_is_flagged() {
+        let src = "// audit: allow(made-up-rule) -- reason present but rule unknown\nfn f() {}\n";
+        let root = fixture("unknown", &[("drafter/mod.rs", src)]);
+        let report = audit(&root);
+        assert_eq!(count(&report, "pragma"), 1, "{}", report.render());
+        assert!(report.findings[0].message.contains("made-up-rule"));
+    }
+
+    #[test]
+    fn wrong_rule_pragma_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // audit: allow(raw-rng) -- names the wrong rule\n\
+                   x.unwrap()\n\
+                   }\n";
+        let root = fixture("wrongrule", &[("rollout/request.rs", src)]);
+        let report = audit(&root);
+        assert_eq!(count(&report, "panic-path"), 1, "{}", report.render());
+        assert_eq!(report.suppressed, 0);
+    }
+
+    #[test]
+    fn findings_are_sorted_and_walk_is_deterministic() {
+        let files: &[(&str, &str)] = &[
+            ("store/wire.rs", "fn a(x: u64) -> u32 { x as u32 }\nfn b(y: u64) -> u8 { y as u8 }\n"),
+            ("drafter/mod.rs", "fn c(x: Option<u32>) -> u32 { x.unwrap() }\n"),
+        ];
+        let root = fixture("sorted", files);
+        let report = audit(&root);
+        let keys: Vec<(String, usize)> =
+            report.findings.iter().map(|f| (f.file.clone(), f.line)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "{}", report.render());
+        assert_eq!(report.findings.len(), 3);
+    }
+
+    #[test]
+    fn json_report_round_trips_and_carries_the_registry() {
+        let root = fixture(
+            "json",
+            &[("rollout/engine.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n")],
+        );
+        let report = audit(&root);
+        let parsed = Json::parse(&report.to_json().to_string()).expect("report JSON parses");
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("das-audit-v1"));
+        assert_eq!(parsed.get("files_scanned").and_then(Json::as_usize), Some(1));
+        let findings = parsed.get("findings").and_then(Json::as_arr).expect("findings array");
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].get("rule").and_then(Json::as_str), Some("panic-path"));
+        assert_eq!(findings[0].get("line").and_then(Json::as_usize), Some(1));
+        let rules_arr = parsed.get("rules").and_then(Json::as_arr).expect("rules array");
+        assert_eq!(rules_arr.len(), RULES.len());
+    }
+
+    /// The keystone: the live tree must be audit-clean. Every in-tree
+    /// exemption is a reasoned pragma, so a regression anywhere in
+    /// `rust/src` fails this test (and the gating CI job) immediately.
+    #[test]
+    fn self_audit_live_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = run_audit(&root).expect("live-tree audit runs");
+        assert!(report.findings.is_empty(), "live tree has findings:\n{}", report.render());
+        assert!(report.files_scanned > 20, "walk saw the whole tree");
+    }
+}

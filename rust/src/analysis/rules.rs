@@ -1,0 +1,384 @@
+//! The `das audit` rule set — each rule mechanically enforces one of the
+//! source-level invariants the chaos/equivalence gates lean on (see module
+//! docs of [`super`] for the contract and the README rule table).
+//!
+//! Rules are lexical and run over the scrubbed per-line view produced by
+//! [`super::lexer`]: string/comment occurrences never fire, `#[cfg(test)]`
+//! / `mod tests` regions are exempt from every rule except `poisoned-lock`
+//! (a poisoned mutex in a multi-threaded test cascades into unrelated
+//! failures exactly like it would in production code).
+
+use super::lexer::LexedFile;
+
+/// One rule violation at a specific source line (1-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub excerpt: String,
+}
+
+/// Registry entry: name + the one-line contract it enforces.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub description: &'static str,
+}
+
+pub const PANIC_PATH: &str = "panic-path";
+pub const POISONED_LOCK: &str = "poisoned-lock";
+pub const WALL_CLOCK: &str = "wall-clock-determinism";
+pub const RAW_RNG: &str = "raw-rng";
+pub const ATOMIC_ORDERING: &str = "atomic-ordering";
+pub const UNCHECKED_NARROWING: &str = "unchecked-narrowing";
+/// Meta-rule: malformed suppression pragmas are themselves violations.
+pub const PRAGMA: &str = "pragma";
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: PANIC_PATH,
+        description: "no unwrap/expect/panic!/todo!/unimplemented! in rollout/, store/, \
+                      suffix/, drafter/ non-test code — supervised paths degrade, they \
+                      don't abort",
+    },
+    RuleInfo {
+        name: POISONED_LOCK,
+        description: ".lock() must recover from poisoning via \
+                      unwrap_or_else(|e| e.into_inner()), never .lock().unwrap() — a \
+                      panic under catch_unwind while holding a shared mutex poisons it \
+                      for every other worker (applies to test code too)",
+    },
+    RuleInfo {
+        name: WALL_CLOCK,
+        description: "no Instant::now/SystemTime outside rollout/parallel.rs deadline \
+                      code and util/bench.rs — replay determinism is load-bearing for \
+                      the chaos gate",
+    },
+    RuleInfo {
+        name: RAW_RNG,
+        description: "randomness only via util/rng — ambient entropy (thread_rng, \
+                      RandomState, getrandom) breaks byte-identical replay",
+    },
+    RuleInfo {
+        name: ATOMIC_ORDERING,
+        description: "atomic Ordering:: uses must sit in an allowlisted concurrency \
+                      file (util/cow.rs, rollout/faults.rs, rollout/parallel.rs) AND \
+                      carry a same-line-or-above justification comment",
+    },
+    RuleInfo {
+        name: UNCHECKED_NARROWING,
+        description: "no bare `as u8/u16/u32/usize` narrowing in the das-store-v1 / \
+                      das-ckpt-v1 codec files (store/wire.rs, store/mod.rs, \
+                      rollout/request.rs) — use try_from or the codec's checked helpers",
+    },
+    RuleInfo {
+        name: PRAGMA,
+        description: "suppression pragmas must carry a reason: \
+                      `// audit: allow(<rule>) -- <why>`",
+    },
+];
+
+/// Directories whose non-test code must be panic-free.
+const PANIC_DIRS: &[&str] = &["rollout/", "store/", "suffix/", "drafter/"];
+const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "todo!(", "unimplemented!("];
+
+/// Files allowed to read the wall clock (deadline stealing needs real
+/// elapsed time; the bench harness measures it by definition).
+const WALL_CLOCK_ALLOW: &[&str] = &["rollout/parallel.rs", "util/bench.rs"];
+const WALL_CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime"];
+
+const RNG_TOKENS: &[&str] = &["thread_rng", "rand::", "from_entropy", "getrandom", "RandomState"];
+const RNG_EXEMPT: &[&str] = &["util/rng.rs"];
+
+/// The audited lock-free/atomic layer; everything else routes through it.
+const ATOMIC_ALLOW: &[&str] = &["util/cow.rs", "rollout/faults.rs", "rollout/parallel.rs"];
+const ATOMIC_VARIANTS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+const NARROW_FILES: &[&str] = &["store/wire.rs", "store/mod.rs", "rollout/request.rs"];
+const NARROW_TYPES: &[&str] = &["u8", "u16", "u32", "usize"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of boundary-checked occurrences of `needle` in `code`: the
+/// char before the match and (when the needle ends in an identifier char)
+/// the char after must not extend an identifier, so `.expect(` never
+/// matches inside `.expect_str(` and `panic!(` never inside
+/// `dont_panic!(…)`-style names.
+fn token_offsets(code: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = code[from..].find(needle) {
+        let at = from + rel;
+        let before_ok = at == 0
+            || code[..at].chars().next_back().is_none_or(|c| !is_ident(c) && c != '.');
+        let last_ident = needle.chars().next_back().is_some_and(is_ident);
+        let after_ok =
+            !last_ident || code[at + needle.len()..].chars().next().is_none_or(|c| !is_ident(c));
+        // A leading-`.` needle anchors itself; only bare-word needles need
+        // the `.`-exclusion (Instant::now must not match Foo.Instant::now,
+        // which cannot occur anyway — but a `.`-prefixed token like
+        // `.unwrap()` legitimately follows an identifier).
+        let before_ok = before_ok || needle.starts_with('.');
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+fn in_list(rel: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| *p == rel)
+}
+
+fn under_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// Run every rule over one scanned file. `rel` is the path relative to the
+/// scan root, `/`-separated; `raw` holds the original source lines for
+/// finding excerpts. Suppression pragmas are applied by the caller.
+pub fn scan_file(rel: &str, lexed: &LexedFile, raw: &[&str]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let excerpt = |line0: usize| -> String {
+        raw.get(line0).map_or(String::new(), |l| l.trim().to_string())
+    };
+    let mut push = |rule: &'static str, line0: usize, message: String| {
+        out.push(Finding {
+            rule,
+            file: rel.to_string(),
+            line: line0 + 1,
+            message,
+            excerpt: excerpt(line0),
+        });
+    };
+
+    let panic_scope = under_dirs(rel, PANIC_DIRS);
+    let wall_allowed = in_list(rel, WALL_CLOCK_ALLOW);
+    let rng_exempt = in_list(rel, RNG_EXEMPT);
+    let atomic_allowed = in_list(rel, ATOMIC_ALLOW);
+    let narrow_scope = in_list(rel, NARROW_FILES);
+
+    for (line0, line) in lexed.lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if line.in_test {
+            continue; // poisoned-lock (cross-line) is handled below
+        }
+        if panic_scope {
+            for tok in PANIC_TOKENS {
+                for _ in token_offsets(code, tok) {
+                    push(
+                        PANIC_PATH,
+                        line0,
+                        format!("`{tok}` in supervised path code — return an error or \
+                                 degrade instead of aborting the worker"),
+                    );
+                }
+            }
+        }
+        if !wall_allowed {
+            for tok in WALL_CLOCK_TOKENS {
+                for _ in token_offsets(code, tok) {
+                    push(
+                        WALL_CLOCK,
+                        line0,
+                        format!("`{tok}` outside the deadline/bench allowlist — \
+                                 wall-clock state breaks byte-identical replay"),
+                    );
+                }
+            }
+        }
+        if !rng_exempt {
+            for tok in RNG_TOKENS {
+                for _ in token_offsets(code, tok) {
+                    push(
+                        RAW_RNG,
+                        line0,
+                        format!("`{tok}` — all randomness must flow through util/rng \
+                                 so seeds replay deterministically"),
+                    );
+                }
+            }
+        }
+        for variant in ATOMIC_VARIANTS {
+            let needle = format!("Ordering::{variant}");
+            for _ in token_offsets(code, &needle) {
+                if !atomic_allowed {
+                    push(
+                        ATOMIC_ORDERING,
+                        line0,
+                        format!("`{needle}` outside the audited concurrency layer \
+                                 ({}) — route through it or justify with a pragma",
+                                ATOMIC_ALLOW.join(", ")),
+                    );
+                } else {
+                    let justified = line.has_comment
+                        || line0 > 0 && lexed.lines[line0 - 1].has_comment;
+                    if !justified {
+                        push(
+                            ATOMIC_ORDERING,
+                            line0,
+                            format!("`{needle}` without a same-line-or-above \
+                                     justification comment"),
+                        );
+                    }
+                }
+            }
+        }
+        if narrow_scope {
+            for at in token_offsets(code, "as") {
+                let rest = code[at + 2..].trim_start();
+                let narrow = NARROW_TYPES.iter().find(|t| {
+                    rest.strip_prefix(**t)
+                        .is_some_and(|r| r.chars().next().is_none_or(|c| !is_ident(c)))
+                });
+                if let Some(t) = narrow {
+                    push(
+                        UNCHECKED_NARROWING,
+                        line0,
+                        format!("bare `as {t}` narrowing in codec code — use try_from \
+                                 or the wire codec's checked length helpers"),
+                    );
+                }
+            }
+        }
+    }
+
+    // poisoned-lock: cross-line chain scan, test code NOT exempt.
+    for line0 in 0..lexed.lines.len() {
+        let code = lexed.lines[line0].code.as_str();
+        for at in token_offsets(code, ".lock()") {
+            if chain_hits_unwrap(lexed, line0, at + ".lock()".len()) {
+                push(
+                    POISONED_LOCK,
+                    line0,
+                    "`.lock().unwrap()` propagates mutex poisoning — use \
+                     `.lock().unwrap_or_else(|e| e.into_inner())` (state is guarded \
+                     by the engine's catch_unwind recovery, not by poisoning)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Does the method chain continuing at (`line0`, byte `col`) next call
+/// `.unwrap()` or `.expect(`? Follows rustfmt-style wrapped chains across
+/// up to 3 continuation lines.
+fn chain_hits_unwrap(lexed: &LexedFile, line0: usize, col: usize) -> bool {
+    let mut line = line0;
+    let mut rest: &str = lexed.lines[line0].code.get(col..).unwrap_or("");
+    for _ in 0..4 {
+        let t = rest.trim_start();
+        if !t.is_empty() {
+            return t.starts_with(".unwrap()") || t.starts_with(".expect(");
+        }
+        line += 1;
+        match lexed.lines.get(line) {
+            Some(l) => rest = l.code.as_str(),
+            None => return false,
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn scan(rel: &str, src: &str) -> Vec<Finding> {
+        let raw: Vec<&str> = src.lines().collect();
+        scan_file(rel, &lex(src), &raw)
+    }
+
+    #[test]
+    fn token_boundaries_do_not_overmatch() {
+        // expect_str / unwrap_or_else / set_panic_hook must not fire.
+        let src = "r.expect_str(a, b); x.unwrap_or_else(f); set_panic_hook();\n";
+        assert!(scan("store/mod.rs", src).is_empty());
+        let hit = scan("store/mod.rs", "x.expect(\"m\");\n");
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].rule, PANIC_PATH);
+        assert_eq!(hit[0].line, 1);
+    }
+
+    #[test]
+    fn panic_path_scope_is_directory_limited() {
+        assert!(scan("figures/fig01.rs", "x.unwrap();\n").is_empty());
+        assert_eq!(scan("suffix/core.rs", "x.unwrap();\n").len(), 1);
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_atomic_ordering() {
+        let src = "match a.cmp(&b) { std::cmp::Ordering::Less => 1, _ => 2 };\n";
+        assert!(scan("model/sim.rs", src).is_empty());
+        let hits = scan("model/sim.rs", "x.store(1, Ordering::Relaxed);\n");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, ATOMIC_ORDERING);
+    }
+
+    #[test]
+    fn atomic_in_allowlisted_file_needs_a_comment() {
+        let bare = "x.store(1, Ordering::Relaxed);\n";
+        let hits = scan("util/cow.rs", bare);
+        assert_eq!(hits.len(), 1, "no justification comment");
+        let above = "// Relaxed: gauge only, no ordering dependency.\nx.store(1, Ordering::Relaxed);\n";
+        assert!(scan("util/cow.rs", above).is_empty());
+        let trailing = "x.store(1, Ordering::Relaxed); // publish-only counter\n";
+        assert!(scan("util/cow.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn narrowing_only_in_codec_files_and_only_narrow_types() {
+        assert_eq!(scan("store/wire.rs", "let n = x as u32;\n").len(), 1);
+        assert!(scan("store/wire.rs", "let n = x as u64;\n").is_empty(), "widening ok");
+        assert!(scan("store/wire.rs", "let n = u32::try_from(x);\n").is_empty());
+        assert!(scan("suffix/core.rs", "let n = x as u32;\n").is_empty(), "out of scope");
+        // `as usize` with an identifier continuation is a different token.
+        assert!(scan("store/wire.rs", "let n = x as usize_like;\n").is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_across_wrapped_chain() {
+        let src = "let g = self.cell\n    .lock()\n    .unwrap();\n";
+        let hits = scan("telemetry/mod.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, POISONED_LOCK);
+        assert_eq!(hits[0].line, 2, "reported at the .lock() line");
+        let ok = "let g = self.cell.lock().unwrap_or_else(|e| e.into_inner());\n";
+        assert!(scan("telemetry/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn poisoned_lock_fires_inside_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let g = m.lock().unwrap(); }\n}\n";
+        let hits = scan("drafter/mod.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, POISONED_LOCK);
+        // …while panic-path stays exempt in the same region:
+        let src2 = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(scan("drafter/mod.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allowlist() {
+        assert!(scan("util/bench.rs", "let t = Instant::now();\n").is_empty());
+        assert!(scan("rollout/parallel.rs", "let t = Instant::now();\n").is_empty());
+        let hits = scan("rollout/engine.rs", "let t = Instant::now();\n");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, WALL_CLOCK);
+        assert_eq!(scan("model/sim.rs", "let t = SystemTime::now();\n").len(), 1);
+    }
+
+    #[test]
+    fn raw_rng_tokens() {
+        assert_eq!(scan("workload/mod.rs", "let r = rand::thread_rng();\n").len(), 2);
+        assert!(scan("util/rng.rs", "fn thread_rng() {}\n").is_empty(), "exempt file");
+        assert!(scan("workload/mod.rs", "let r = util::rng::Rng::new(7);\n").is_empty());
+    }
+}

@@ -561,6 +561,9 @@ pub fn source_from_substrate_pooled(
         }),
         "tree" => Box::new(SuffixTree::new()),
         "array" => Box::new(SuffixArrayIndex::new()),
+        // Config validate() rejects unknown substrates before any engine spins up; reaching
+        // this arm is a coordinator bug worth a loud abort, not a run with the wrong index.
+        // audit: allow(panic-path) -- unreachable after config validation; abort surfaces the bug
         other => panic!("unknown substrate '{other}' (validate() should have caught this)"),
     }
 }
@@ -777,6 +780,9 @@ pub fn from_config(cfg: &crate::config::DasConfig) -> Box<dyn Drafter> {
         "das" => Box::new(SuffixDrafter::from_config(&cfg.spec)),
         "static" => Box::new(StaticNgramDrafter::new(4)),
         "none" => Box::new(NoneDrafter),
+        // Config validate() rejects unknown drafter names up front; an unknown name here
+        // means the validation layer itself broke, which must not be papered over.
+        // audit: allow(panic-path) -- unreachable after config validation; abort surfaces the bug
         other => panic!("unknown drafter '{other}' (validate() should have caught this)"),
     }
 }
@@ -921,7 +927,7 @@ mod tests {
                 scope.spawn(|| {
                     for _ in 0..400 {
                         let (gen, snap, want) = {
-                            let g = cell.lock().unwrap();
+                            let g = cell.lock().unwrap_or_else(|e| e.into_inner());
                             (g.0, g.1.clone(), g.2.clone())
                         };
                         let got = snap.draft_from(probe, 8, 3);
@@ -935,10 +941,35 @@ mod tests {
                 src.absorb(0, &[3, 4, 10 + (i % 7), 20 + (i % 5)]);
                 let snap = src.snapshot();
                 let want = src.draft_from(probe, 8, 3);
-                *cell.lock().unwrap() = (u64::from(i), snap, want);
+                *cell.lock().unwrap_or_else(|e| e.into_inner()) = (u64::from(i), snap, want);
             }
         });
         assert_eq!(src.index_stats().snapshot_publishes, 49);
+    }
+
+    #[test]
+    fn poisoned_publish_lock_still_serves_readers() {
+        // Regression for the `.lock().unwrap()` hazard the poisoned-lock
+        // audit rule now bans: a drafter panic under catch_unwind while
+        // holding a shared mutex poisons it; the into_inner idiom must keep
+        // every later reader working (supervised engines recover panicked
+        // workers, so a poisoned publish cell would otherwise take down the
+        // surviving ones).
+        use std::sync::Mutex;
+        let mut src = source_from_substrate("window", 4, 16);
+        src.absorb(0, &[3, 4, 5, 6]);
+        let want = src.draft_from(&[3, 4], 8, 3);
+        let cell = Mutex::new((src.snapshot(), want.clone()));
+        let panicked = std::panic::catch_unwind(|| {
+            let _held = cell.lock().unwrap_or_else(|e| e.into_inner());
+            panic!("drafter dies while holding the publish lock");
+        });
+        assert!(panicked.is_err());
+        assert!(cell.is_poisoned(), "the panic must actually poison the cell");
+        let g = cell.lock().unwrap_or_else(|e| e.into_inner());
+        let got = g.0.draft_from(&[3, 4], 8, 3);
+        assert_eq!(got.tokens, g.1.tokens, "post-poison read still serves the snapshot");
+        assert_eq!(got.tokens, want.tokens);
     }
 
     #[test]

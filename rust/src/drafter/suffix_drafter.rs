@@ -176,6 +176,7 @@ impl SuffixDrafter {
     }
 
     pub fn from_config(cfg: &SpecConfig) -> Self {
+        // audit: allow(panic-path) -- config validate() already parsed this scope; see validate()
         let scope = HistoryScope::parse(&cfg.scope).expect("validated scope");
         SuffixDrafter::configured(
             scope,
@@ -536,10 +537,9 @@ impl Drafter for SuffixDrafter {
                     let shard = self.new_shard();
                     self.shards.insert(rollout.problem, shard);
                 }
-                self.shards
-                    .get_mut(&rollout.problem)
-                    .expect("just inserted")
-                    .absorb(rollout.epoch, &rollout.tokens);
+                if let Some(shard) = self.shards.get_mut(&rollout.problem) {
+                    shard.absorb(rollout.epoch, &rollout.tokens);
+                }
             }
         }
         if let Some(router) = &mut self.router {

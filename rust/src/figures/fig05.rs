@@ -16,6 +16,7 @@ fn measure<F: FnMut()>(mut f: F, min_iters: usize) -> f64 {
     // Median-of-iters wall time in microseconds.
     let mut times = Vec::with_capacity(min_iters);
     for _ in 0..min_iters {
+        // audit: allow(wall-clock-determinism) -- figure-only microbenchmark; never feeds decode
         let t0 = Instant::now();
         f();
         times.push(t0.elapsed().as_secs_f64() * 1e6);

@@ -11,6 +11,11 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! reproduced figures.
 
+// The crate has zero `unsafe`; freeze that property (`das audit` and the
+// gating CI job keep the rest of the invariant surface honest).
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod config;
 pub mod cost;
 pub mod model;

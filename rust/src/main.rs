@@ -7,6 +7,9 @@
 //!   calibrate  fit the latency model on the real PJRT artifacts (Fig. 8)
 //!   config     print the resolved configuration for a preset/file
 //!   store      inspect/verify/compact a persistent history store
+//!   audit      static-analysis gate over rust/src (das-audit-v1 report)
+
+#![deny(unsafe_code)]
 
 use std::path::{Path, PathBuf};
 
@@ -32,6 +35,7 @@ fn main() {
         Some("calibrate") => cmd_calibrate(&argv[1..]),
         Some("config") => cmd_config(&argv[1..]),
         Some("store") => cmd_store(&argv[1..]),
+        Some("audit") => cmd_audit(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
             Ok(())
@@ -59,7 +63,8 @@ fn print_usage() {
            serve      [--preset name] [--steps N] (rollout-only, trace workload)\n\
            calibrate  [--reps N] (requires `make artifacts`)\n\
            config     [--preset name | --config file.json]\n\
-           store      <inspect|verify|compact> --dir <store-dir>\n\n\
+           store      <inspect|verify|compact> --dir <store-dir>\n\
+           audit      [--json report.json] [--paths rust/src] (static-analysis gate)\n\n\
          presets: {}",
         preset_names().join(", ")
     );
@@ -532,6 +537,41 @@ fn cmd_store(argv: &[String]) -> Result<()> {
         }
         _ => unreachable!(),
     }
+    Ok(())
+}
+
+/// `das audit`: run the in-tree static-analysis pass (see `src/analysis/`)
+/// and exit nonzero on any finding, so CI can gate on it.
+fn cmd_audit(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das audit", "static-analysis gate over the source tree")
+        .opt("json", "also write the das-audit-v1 JSON report to this path", None)
+        .opt("paths", "root directory to scan", None);
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    // Default scan root: works from the repo root and from rust/.
+    let root = match args.get("paths") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let from_repo_root = PathBuf::from("rust/src");
+            if from_repo_root.is_dir() {
+                from_repo_root
+            } else {
+                PathBuf::from("src")
+            }
+        }
+    };
+    anyhow::ensure!(root.is_dir(), "scan root {} is not a directory", root.display());
+    let report = das::analysis::run_audit(&root)?;
+    print!("{}", report.render());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(
+        report.findings.is_empty(),
+        "{} audit finding(s) — fix the site or add a reasoned \
+         `// audit: allow(<rule>) -- <why>` pragma",
+        report.findings.len()
+    );
     Ok(())
 }
 

@@ -160,8 +160,9 @@ fn absorb_pending(drafter: &mut dyn Drafter, rollouts: &[Rollout], absorbed: &mu
 
 impl RolloutEngine {
     pub fn new(cfg: &DasConfig, drafter: Box<dyn Drafter>) -> Self {
-        let budget_policy =
-            BudgetPolicy::parse(&cfg.spec.budget_policy).expect("validated budget policy");
+        #[allow(clippy::expect_used)]
+        // audit: allow(panic-path) -- config validate() already parsed this policy string
+        let budget_policy = BudgetPolicy::parse(&cfg.spec.budget_policy).expect("validated");
         let mut drafter = drafter;
         // Warm start: restore the snapshot and replay the WAL tail from a
         // READ-ONLY view first — a store this engine ends up refusing
@@ -283,24 +284,25 @@ impl RolloutEngine {
     pub fn roll_epoch(&mut self, epoch: Epoch) {
         self.epoch = epoch;
         self.drafter.roll_epoch(epoch);
-        if self.store.is_some() && self.last_roll_persisted != Some(epoch) {
-            self.last_roll_persisted = Some(epoch);
-            let result = if self.faults.store_fails(epoch) {
-                Err(StoreError::Io("injected write failure (fault plan)".into()))
-            } else if epoch % self.snapshot_every == 0 {
-                let payload = self.drafter.save_state();
-                self.store.as_mut().expect("checked").commit_snapshot(&payload)
-            } else {
-                self.store
-                    .as_mut()
-                    .expect("checked")
-                    .append(&WalRecord::RollEpoch(epoch))
-            };
-            if let Err(e) = result {
-                eprintln!("das-store: persist failed ({e}); disabling persistence");
-                self.store = None;
-                self.pending_store_failures += 1;
-            }
+        let Some(store) = self.store.as_mut() else {
+            return;
+        };
+        if self.last_roll_persisted == Some(epoch) {
+            return;
+        }
+        self.last_roll_persisted = Some(epoch);
+        let result = if self.faults.store_fails(epoch) {
+            Err(StoreError::Io("injected write failure (fault plan)".into()))
+        } else if epoch % self.snapshot_every == 0 {
+            let payload = self.drafter.save_state();
+            store.commit_snapshot(&payload)
+        } else {
+            store.append(&WalRecord::RollEpoch(epoch))
+        };
+        if let Err(e) = result {
+            eprintln!("das-store: persist failed ({e}); disabling persistence");
+            self.store = None;
+            self.pending_store_failures += 1;
         }
     }
 
@@ -477,6 +479,7 @@ impl RolloutEngine {
         step: u32,
         boost: f64,
     ) -> StepReport {
+        // audit: allow(wall-clock-determinism) -- gen_time gauge only; decode never reads it
         let wall_start = Instant::now();
         model.reset_clock();
         let fwd0 = model.forward_passes();
@@ -516,6 +519,8 @@ impl RolloutEngine {
                     || self
                         .preempt_latch
                         .as_ref()
+                        // One-shot consume of the supervisor's preempt latch.
+                        // audit: allow(atomic-ordering) -- Relaxed swap; publishes no data
                         .is_some_and(|l| l.swap(false, Ordering::Relaxed)));
             if preempted {
                 for req in batcher.take_unfinished() {
@@ -560,6 +565,7 @@ impl RolloutEngine {
                 // indexed before this round's drafts are computed.
                 absorb_pending(&mut *self.drafter, &rollouts, &mut absorbed);
             }
+            // audit: allow(wall-clock-determinism) -- draft-overhead gauge only, never replayed
             let draft_start = Instant::now();
             let mut drafts: Vec<Vec<TokenId>> = Vec::with_capacity(budgets.len());
             if let Some(snap) = snap {
@@ -610,6 +616,7 @@ impl RolloutEngine {
                                 // slicing/setup code around the guarded
                                 // draft call).
                                 if faults.should_poison_host(step) {
+                                    // audit: allow(panic-path) -- this panic IS the injected fault
                                     panic!("fault plan: poisoned draft host at step {step}");
                                 }
                                 chunk_specs
@@ -633,6 +640,7 @@ impl RolloutEngine {
                                         let attempt =
                                             catch_unwind(AssertUnwindSafe(|| {
                                                 if faults.should_poison_draft(step) {
+                                                    // audit: allow(panic-path) -- injected fault
                                                     panic!(
                                                         "fault plan: poisoned draft at step {step}"
                                                     );
@@ -709,6 +717,7 @@ impl RolloutEngine {
                         let faults = &self.faults;
                         let attempt = catch_unwind(AssertUnwindSafe(|| {
                             if faults.should_poison_draft(step) {
+                                // audit: allow(panic-path) -- this panic IS the injected fault
                                 panic!("fault plan: poisoned draft at step {step}");
                             }
                             drafter.draft(req.id, req.problem, req.context(), b).tokens

@@ -200,6 +200,8 @@ impl FaultPlan {
         for e in &self.entries {
             if let Fault::StoreFail { epoch: from } = e.fault {
                 if epoch >= from {
+                    // Relaxed: fired flags are independent monotonic marks,
+                    // read only for reporting — no cross-flag ordering.
                     e.fired.store(true, Ordering::Relaxed);
                     hit = true;
                 }
@@ -240,6 +242,8 @@ impl FaultPlan {
     pub fn unfired(&self) -> Vec<String> {
         self.entries
             .iter()
+            // Relaxed: reporting-only read; firing is already quiesced by
+            // the time a harness asks which directives never ran.
             .filter(|e| !e.fired.load(Ordering::Relaxed))
             .map(|e| e.fault.to_string())
             .collect()
@@ -248,6 +252,8 @@ impl FaultPlan {
     /// Atomically consume the first unfired entry matching `pred`.
     fn fire_first(&self, pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
         for e in &self.entries {
+            // Relaxed swap: the one-shot claim needs atomicity, not
+            // ordering — no other memory is published via the flag.
             if pred(&e.fault) && !e.fired.swap(true, Ordering::Relaxed) {
                 return Some(e.fault);
             }
@@ -259,12 +265,14 @@ impl FaultPlan {
     /// entries are checked (or expected): the chaos harness asserts on
     /// `unfired()` itself, and config validation only parses for syntax.
     pub fn disarm_drop_audit(&self) {
+        // Relaxed: advisory flag consumed once at drop time.
         self.drop_audit_disarmed.store(true, Ordering::Relaxed);
     }
 
     /// The warning the drop audit will print, if any — exposed so tests
     /// can exercise the audit without racing on captured stderr.
     pub fn drop_warning(&self) -> Option<String> {
+        // Relaxed: advisory flag, same-thread with the disarm in practice.
         if self.drop_audit_disarmed.load(Ordering::Relaxed) || self.entries.is_empty() {
             return None;
         }

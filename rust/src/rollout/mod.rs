@@ -1,5 +1,11 @@
 //! Rollout coordination: continuous batching + the speculative decode loop.
 
+// Clippy backstop for the audit's panic-path rule: rollout code is
+// supervised — panics are for injected faults only (each carries a
+// reasoned `audit: allow` pragma); everything else degrades. The deny
+// cascades into every child module, so new unwrap/expect sites fail lint.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod batcher;
 pub mod parallel;
 pub mod engine;

@@ -365,6 +365,7 @@ fn spawn_worker(
     let (report_tx, report_rx) = channel::<WorkerReport>();
     let preempt = Arc::new(AtomicBool::new(false));
     let latch = Arc::clone(&preempt);
+    #[allow(clippy::expect_used)]
     let thread = thread::Builder::new()
         .name(format!("dp-worker-{w}.{generation}"))
         .spawn(move || {
@@ -386,6 +387,7 @@ fn spawn_worker(
             // directory is safe to reopen.
             drop(engine);
         })
+        // audit: allow(panic-path) -- OS refused a thread at startup: unrecoverable, fail loud
         .expect("spawn rollout worker thread");
     WorkerSlot {
         cmd_tx,
@@ -415,6 +417,7 @@ fn worker_loop(
                     thread::sleep(Duration::from_millis(ms));
                 }
                 if faults.should_panic(w, step) {
+                    // audit: allow(panic-path) -- this panic IS the injected fault under test
                     panic!("fault plan: panic worker {w} at step {step}");
                 }
                 let report = engine.generate_step(model, &jobs, step);

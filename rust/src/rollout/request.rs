@@ -3,7 +3,7 @@
 //! workers at a verification-round boundary and resume bit-identically.
 
 use crate::spec::LengthClass;
-use crate::store::wire::{checksum, Reader, StoreError, Writer};
+use crate::store::wire::{checksum, len_u32, Reader, StoreError, Writer};
 use crate::tokens::{ProblemId, RequestId, TokenId};
 use crate::util::rng::Rng;
 
@@ -111,7 +111,7 @@ impl RolloutRequest {
             }
         }
         if committed > 0 {
-            self.commit_chunks.push(committed as u32);
+            self.commit_chunks.push(len_u32(committed));
         }
         committed
     }
@@ -231,7 +231,7 @@ impl RequestCheckpoint {
         body.u32(self.rounds);
         body.u64(self.proposed);
         body.u64(self.accepted);
-        body.u8(self.degraded as u8);
+        body.u8(u8::from(self.degraded));
         let body = body.into_bytes();
         let mut out = Writer::new();
         out.str(CKPT_MAGIC);

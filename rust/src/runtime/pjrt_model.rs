@@ -97,6 +97,7 @@ impl PjrtModel {
         let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
         inputs.push(&tok_buf);
         inputs.push(&qs_buf);
+        // audit: allow(wall-clock-determinism) -- real-hardware latency gauge; never replayed
         let t0 = Instant::now();
         let result = self.decode.execute_b(&inputs)?;
         let lit = result[0][0].to_literal_sync()?;
@@ -170,6 +171,7 @@ impl PjrtModel {
             // Warmup.
             let _ = exe.execute_b(&inputs)?[0][0].to_literal_sync()?;
             for _ in 0..reps.max(3) {
+                // audit: allow(wall-clock-determinism) -- calibrating the latency model itself
                 let t0 = Instant::now();
                 let _ = exe.execute_b(&inputs)?[0][0].to_literal_sync()?;
                 samples.push((b * s, t0.elapsed().as_secs_f64()));

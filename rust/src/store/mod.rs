@@ -90,6 +90,11 @@
 //! rule — unreadable or stale state means a cold predictor, never a
 //! failed run.
 
+// Clippy backstop for the audit's panic-path rule: the store is a
+// supervised path — it degrades (StoreError, persistence disabled), it
+// does not abort. Keep the deny module-wide so new call sites fail lint.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod wire;
 
 use std::fs::{File, OpenOptions};
@@ -98,7 +103,7 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::tokens::{Epoch, ProblemId, TokenId};
-pub use wire::{checksum, Reader, StoreError, Writer};
+pub use wire::{checksum, len_u32, Reader, StoreError, Writer};
 
 /// Snapshot file magic (the format version lives in the name).
 pub const SNAPSHOT_MAGIC: &[u8] = b"das-store-v1\n";
@@ -408,7 +413,7 @@ impl HistoryStore {
     /// tail (the caller truncates the log back to `pos`).
     fn parse_frame(bytes: &[u8], pos: usize) -> Result<(WalRecord, usize), StoreError> {
         let mut r = Reader::new(&bytes[pos..]);
-        let len = r.u32()? as usize;
+        let len = r.u32_len()?;
         let want = r.u64()?;
         if r.remaining() < len {
             return Err(StoreError::Truncated);
@@ -454,7 +459,7 @@ impl HistoryStore {
     pub fn append(&mut self, rec: &WalRecord) -> Result<(), StoreError> {
         let payload = rec.encode();
         let mut frame = Vec::with_capacity(12 + payload.len());
-        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&len_u32(payload.len()).to_le_bytes());
         frame.extend_from_slice(&checksum(&payload).to_le_bytes());
         frame.extend_from_slice(&payload);
         self.wal.write_all(&frame)?;
@@ -471,6 +476,7 @@ impl HistoryStore {
     /// WAL reset leaves a generation mismatch that the next open resolves
     /// by discarding the subsumed log.
     pub fn commit_snapshot(&mut self, payload: &[u8]) -> Result<(), StoreError> {
+        // audit: allow(wall-clock-determinism) -- persist-latency gauge only, never replayed
         let t0 = Instant::now();
         let next_gen = self.generation + 1;
         let tmp = self.dir.join(SNAPSHOT_TMP);

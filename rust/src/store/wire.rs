@@ -66,6 +66,16 @@ pub fn checksum(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Checked usize→u32 narrowing for wire length prefixes. Lengths beyond
+/// u32 cannot be encoded in the format at all, so exceeding the limit is a
+/// caller bug worth stopping at the write site — a wrapped prefix would
+/// instead surface later as checksum-valid-but-corrupt payload.
+pub fn len_u32(n: usize) -> u32 {
+    assert!(u32::try_from(n).is_ok(), "length {n} exceeds the u32 wire-format limit");
+    // audit: allow(unchecked-narrowing) -- this IS the checked helper; asserted directly above
+    n as u32
+}
+
 /// Append-only byte sink for one format section.
 #[derive(Debug, Default)]
 pub struct Writer {
@@ -99,13 +109,13 @@ impl Writer {
 
     /// UTF-8 string, u32 length prefix.
     pub fn str(&mut self, s: &str) {
-        self.u32(s.len() as u32);
+        self.u32(len_u32(s.len()));
         self.buf.extend_from_slice(s.as_bytes());
     }
 
     /// Token run, u32 length prefix.
     pub fn tokens(&mut self, toks: &[u32]) {
-        self.u32(toks.len() as u32);
+        self.u32(len_u32(toks.len()));
         for &t in toks {
             self.u32(t);
         }
@@ -184,6 +194,14 @@ impl<'a> Reader<'a> {
         usize::try_from(v).map_err(|_| StoreError::Corrupt(format!("usize overflow: {v}")))
     }
 
+    /// A u32 length prefix widened to usize, checked rather than cast —
+    /// 16-bit targets cannot hold every u32, and hostile input must come
+    /// back as [`StoreError::Corrupt`], never as a silent truncation.
+    pub fn u32_len(&mut self) -> Result<usize, StoreError> {
+        let v = self.u32()?;
+        usize::try_from(v).map_err(|_| StoreError::Corrupt(format!("length overflow: {v}")))
+    }
+
     /// A u64-encoded count that bounds a following repetition. Rejects
     /// counts that could not possibly fit in the remaining bytes (each
     /// element needs at least `min_elem_bytes`), so corrupt lengths fail
@@ -204,14 +222,14 @@ impl<'a> Reader<'a> {
     }
 
     pub fn str(&mut self) -> Result<String, StoreError> {
-        let n = self.u32()? as usize;
+        let n = self.u32_len()?;
         let b = self.take(n)?;
         String::from_utf8(b.to_vec())
             .map_err(|_| StoreError::Corrupt("non-UTF-8 string".into()))
     }
 
     pub fn tokens(&mut self) -> Result<Vec<u32>, StoreError> {
-        let n = self.u32()? as usize;
+        let n = self.u32_len()?;
         if n.saturating_mul(4) > self.remaining() {
             return Err(StoreError::Truncated);
         }

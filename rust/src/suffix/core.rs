@@ -414,6 +414,7 @@ impl SegmentPool {
     pub(crate) fn retain(&mut self, seg: u32) {
         let slot = self.slots[seg as usize]
             .as_mut()
+            // audit: allow(panic-path) -- refcount invariant; a dead segment here is a trie bug
             .expect("retain on a dead segment");
         slot.rc += 1;
     }
@@ -421,6 +422,7 @@ impl SegmentPool {
     pub(crate) fn release(&mut self, seg: u32) {
         let slot = self.slots[seg as usize]
             .as_mut()
+            // audit: allow(panic-path) -- refcount invariant; a dead segment here is a trie bug
             .expect("release on a dead segment");
         debug_assert!(slot.rc > 0, "segment over-released");
         slot.rc -= 1;
@@ -442,6 +444,7 @@ impl SegmentPool {
     fn kill(&mut self, seg: u32) {
         let slot = self.slots[seg as usize]
             .take()
+            // audit: allow(panic-path) -- refcount invariant; a dead segment here is a trie bug
             .expect("kill on a dead segment");
         let h = hash_tokens(&slot.data);
         if let Some(c) = self.by_hash.get_mut(&h) {
@@ -466,6 +469,7 @@ impl SegmentPool {
         }
         let slot = self.slots[r.seg as usize]
             .as_ref()
+            // audit: allow(panic-path) -- refcount invariant; a dead segment here is a trie bug
             .expect("slice of a dead segment");
         let a = r.start as usize;
         &slot.data[a..a + r.len as usize]
@@ -613,6 +617,7 @@ impl Labels for PoolSnapshot {
         }
         let slot = self.slots[r.seg as usize]
             .as_ref()
+            // audit: allow(panic-path) -- snapshots pin their Arcs; a dead slot here is a bug
             .expect("snapshot slice of a dead segment");
         let a = r.start as usize;
         &slot.data[a..a + r.len as usize]
@@ -3111,5 +3116,30 @@ mod tests {
             }
         });
         assert_eq!(cell.generation(), rolls.len() as u64);
+    }
+
+    #[test]
+    fn poisoned_pool_lock_still_serves_readers() {
+        // Regression: a panic while holding the pool mutex poisons it; the
+        // pool must keep serving (into_inner recovery in SharedPool::lock)
+        // instead of cascading the panic into every later trie operation.
+        let pool = SharedPool::new();
+        let seg = {
+            let mut pg = pool.lock();
+            let seg = pg.intern(&[7, 8, 9]);
+            pg.retain(seg);
+            seg
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = pool.lock();
+            panic!("injected panic while holding the pool lock");
+        }));
+        assert!(result.is_err(), "the injected panic must propagate");
+        assert!(pool.inner.is_poisoned(), "the mutex must actually be poisoned");
+        // Readers after the poisoning still see intact pool state.
+        let pg = pool.lock();
+        assert_eq!(pg.slice(SegRef { seg, start: 0, len: 3 }), &[7, 8, 9]);
+        drop(pg);
+        assert_eq!(pool.stats().segments, 1);
     }
 }

@@ -217,8 +217,9 @@ impl PrefixRouter {
                 .collect();
             let q = self.recent.entry(shard).or_default();
             if q.len() == self.max_gens_per_shard {
-                let oldest = q.pop_front().expect("nonempty at capacity");
-                Self::unregister_on(&mut self.trie, shard, &oldest);
+                if let Some(oldest) = q.pop_front() {
+                    Self::unregister_on(&mut self.trie, shard, &oldest);
+                }
             }
             q.push_back(prefix);
         }

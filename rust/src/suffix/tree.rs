@@ -325,7 +325,11 @@ impl SuffixTree {
         let mut res = Vec::new();
         while matched < pattern.len() {
             let tok = pattern[matched];
-            let child = *self.nodes[node].children.get(&tok).unwrap();
+            // walk() already matched the full pattern, so the child exists;
+            // bail with "no continuations" rather than panic if it doesn't.
+            let Some(&child) = self.nodes[node].children.get(&tok) else {
+                return Vec::new();
+            };
             let el = self.edge_len(child);
             if matched + el <= pattern.len() {
                 matched += el;

@@ -537,7 +537,11 @@ impl CountStore for EpochStore {
             Rows::Sparse { rows, entries } => {
                 let row = &mut rows[node];
                 match row.last().copied() {
-                    Some((e, _)) if e == epoch => row.last_mut().expect("nonempty").1 += 1,
+                    Some((e, _)) if e == epoch => {
+                        if let Some(last) = row.last_mut() {
+                            last.1 += 1;
+                        }
+                    }
                     Some((e, _)) if e < epoch => {
                         row.push((epoch, 1));
                         *entries += 1;

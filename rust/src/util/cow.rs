@@ -146,10 +146,13 @@ impl<T> SnapshotCell<T> {
     /// Current snapshot plus the generation it was published at.
     pub fn load_with_gen(&self) -> (Arc<T>, u64) {
         let slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        // Acquire pairs with the Release bump in `store`: the generation
+        // read here cannot be newer than the pointer read under the lock.
         (slot.clone(), self.generation.load(Ordering::Acquire))
     }
 
     pub fn generation(&self) -> u64 {
+        // Acquire pairs with the Release bump in `store` (monotone gauge).
         self.generation.load(Ordering::Acquire)
     }
 }
@@ -224,6 +227,23 @@ mod tests {
         cell.store(Arc::new(8));
         assert_eq!(*cell.load(), 8);
         assert_eq!(cell.generation(), 2);
+    }
+
+    #[test]
+    fn poisoned_slot_still_serves_store_and_load() {
+        // Regression: a panic while the publish lock is held poisons the
+        // mutex; store/load recover via into_inner instead of cascading.
+        let cell = SnapshotCell::new(Arc::new(1u32));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = cell.slot.lock().unwrap_or_else(|e| e.into_inner());
+            panic!("injected panic while holding the publish lock");
+        }));
+        assert!(result.is_err(), "the injected panic must propagate");
+        assert!(cell.slot.is_poisoned(), "the mutex must actually be poisoned");
+        assert_eq!(*cell.load(), 1);
+        assert_eq!(cell.store(Arc::new(2)), 1);
+        let (v, g) = cell.load_with_gen();
+        assert_eq!((*v, g), (2, 1));
     }
 
     /// Seeded interleaving test for the publish/swap path (the satellite's
