@@ -1,0 +1,154 @@
+//! Bench: remote drafting over the `das-draft-rpc-v1` loopback socket —
+//! the per-RPC cost the distributed draft service adds on top of the
+//! in-process snapshot walk.
+//!
+//! An in-process [`DraftServer`] binds an OS-chosen loopback port and a
+//! [`RemoteSession`] drives it exactly as `RemoteDraftSource` would. The
+//! single-RPC draft latency lands in `results` and IS gated by
+//! `bench_compare.py`; throughput comparisons (batched frame vs N single
+//! frames) and the draft-latency-vs-acceptance budget sweep are gauges —
+//! loopback scheduling jitter is machine-dependent and must not trip the
+//! regression gate.
+//!
+//! Flags: `--quick` (short windows, for CI), `--json [path]` / env
+//! `BENCH_JSON` (write machine-readable results, default
+//! `BENCH_remote_draft.json`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use das::config::DasConfig;
+use das::draftsvc::{DraftReq, DraftServer, RemoteSession, ShardKey};
+use das::util::bench::{black_box, Bencher};
+use das::util::rng::Rng;
+
+const PROBLEMS: u32 = 16;
+const ROLLOUT_LEN: usize = 96;
+
+/// Per-problem token bias so shards carry repeating continuations
+/// (drafts actually hit) instead of pure noise.
+fn tokens(problem: u32, rng: &mut Rng) -> Vec<u32> {
+    (0..ROLLOUT_LEN)
+        .map(|_| (problem * 7 + rng.below(48) as u32) % 512)
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let seed_rollouts = if quick { 8 } else { 24 };
+    let sweep_draws = if quick { 64usize } else { 512 };
+
+    let cfg = DasConfig::default();
+    let mut spec = cfg.spec.clone();
+    spec.drafter = "das".into();
+    spec.substrate = "window".into();
+    spec.scope = "problem".into();
+
+    let server = Arc::new(DraftServer::bind(&spec, None, "127.0.0.1:0").expect("bind loopback"));
+    let addr = server.local_addr();
+    let handle = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || server.run())
+    };
+    let session = RemoteSession::new(&addr, 2_000, 2, server.fingerprint());
+
+    // Seed warm history through the wire and keep query contexts around.
+    let mut rng = Rng::seed_from_u64(7);
+    let mut contexts: Vec<(u32, Vec<u32>)> = Vec::new();
+    for p in 0..PROBLEMS {
+        for _ in 0..seed_rollouts {
+            let toks = tokens(p, &mut rng);
+            if contexts.len() < 256 {
+                let s = rng.below(ROLLOUT_LEN - 8);
+                contexts.push((p, toks[s..s + 8].to_vec()));
+            }
+            session.absorb(ShardKey::Problem(p), 0, &toks);
+        }
+    }
+    session.roll_epoch(1);
+
+    // Single-RPC draft latency: the gated `results` entry — one context,
+    // one frame out, one frame back, snapshot walk server-side.
+    let mut i = 0usize;
+    b.bench("remote_draft_single_rpc", || {
+        let (p, ctx) = &contexts[i % contexts.len()];
+        i += 1;
+        // snapshot id 0 = the server's live published view.
+        black_box(session.draft_one(0, ShardKey::Problem(*p), ctx, 8, 16));
+    });
+
+    // Batched frame vs N single frames: same contexts, same answers
+    // (transport-only batching), so the delta is pure framing + syscall
+    // amortization. Contexts/sec for both shapes land as gauges.
+    for &batch in &[4usize, 16] {
+        let reqs: Vec<DraftReq> = (0..batch)
+            .map(|k| {
+                let (p, ctx) = &contexts[k % contexts.len()];
+                DraftReq {
+                    shard: ShardKey::Problem(*p),
+                    context: ctx.clone(),
+                    max_match: 8,
+                    budget: 16,
+                }
+            })
+            .collect();
+        let rounds = sweep_draws / batch.max(1) + 1;
+        let start = Instant::now();
+        for _ in 0..rounds {
+            black_box(session.draft_batch(0, reqs.clone()));
+        }
+        let batched_cps = (rounds * batch) as f64 / start.elapsed().as_secs_f64();
+        let start = Instant::now();
+        for _ in 0..rounds {
+            for req in &reqs {
+                black_box(session.draft_one(
+                    0,
+                    req.shard,
+                    &req.context,
+                    req.max_match,
+                    req.budget,
+                ));
+            }
+        }
+        let single_cps = (rounds * batch) as f64 / start.elapsed().as_secs_f64();
+        b.gauge(&format!("remote_draft_batched_contexts_per_sec_{batch}"), batched_cps);
+        b.gauge(&format!("remote_draft_single_contexts_per_sec_{batch}"), single_cps);
+        if single_cps > 0.0 {
+            b.gauge(
+                &format!("remote_draft_batch_speedup_{batch}"),
+                batched_cps / single_cps,
+            );
+        }
+    }
+
+    // Budget sweep: latency vs draft yield. Bigger budgets walk deeper
+    // server-side and ship longer bodies back — the paper's
+    // draft-length-vs-acceptance tradeoff, measured at the transport.
+    for &budget in &[4usize, 8, 16, 32] {
+        let start = Instant::now();
+        let mut drafted = 0u64;
+        for d in 0..sweep_draws {
+            let (p, ctx) = &contexts[d % contexts.len()];
+            let draft = session.draft_one(0, ShardKey::Problem(*p), ctx, 8, budget);
+            drafted += draft.tokens.len() as u64;
+        }
+        let secs = start.elapsed().as_secs_f64();
+        b.gauge(
+            &format!("remote_draft_rpc_latency_us_budget_{budget}"),
+            secs / sweep_draws as f64 * 1e6,
+        );
+        b.gauge(
+            &format!("remote_draft_tokens_per_rpc_budget_{budget}"),
+            drafted as f64 / sweep_draws as f64,
+        );
+    }
+
+    let stats = session.drain_stats();
+    assert_eq!(stats.degraded, 0, "bench ran against a healthy server");
+    b.gauge("remote_draft_total_round_trips", stats.round_trips as f64);
+
+    server.stop();
+    handle.join().expect("server thread");
+    b.finish("BENCH_remote_draft.json");
+}

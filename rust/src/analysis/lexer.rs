@@ -332,33 +332,35 @@ fn mark_test_regions(file: &mut LexedFile) {
 }
 
 /// Extract every suppression pragma from the file's comment text.
+///
+/// A pragma must LEAD its comment (`// audit: allow(rule) -- why`): prose
+/// that merely *mentions* the form — doc comments describing the syntax,
+/// rule tables — stays inert instead of registering as a live (and, under
+/// `unused-pragma`, stale) exemption.
 pub fn pragmas(file: &LexedFile) -> Vec<Pragma> {
     let mut out = Vec::new();
     for (lineno, line) in file.lines.iter().enumerate() {
-        let text = &line.comment;
-        let mut from = 0usize;
-        while let Some(rel) = text[from..].find("audit:") {
-            let after = &text[from + rel + "audit:".len()..];
-            let trimmed = after.trim_start();
-            let Some(rest) = trimmed.strip_prefix("allow(") else {
-                from += rel + "audit:".len();
-                continue;
-            };
-            let Some(close) = rest.find(')') else {
-                break;
-            };
-            let rule = rest[..close].trim().to_string();
-            let tail = rest[close + 1..].trim_start();
-            let reason_ok = tail
-                .strip_prefix("--")
-                .is_some_and(|r| !r.trim().is_empty());
-            out.push(Pragma {
-                line: lineno,
-                rule,
-                reason_ok,
-            });
-            from += rel + "audit:".len();
-        }
+        let text = line.comment.trim_start();
+        let Some(after) = text.strip_prefix("audit:") else {
+            continue;
+        };
+        let trimmed = after.trim_start();
+        let Some(rest) = trimmed.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let tail = rest[close + 1..].trim_start();
+        let reason_ok = tail
+            .strip_prefix("--")
+            .is_some_and(|r| !r.trim().is_empty());
+        out.push(Pragma {
+            line: lineno,
+            rule,
+            reason_ok,
+        });
     }
     out
 }
@@ -478,6 +480,20 @@ mod tests {
         assert!(p[0].reason_ok);
         assert_eq!(p[1].rule, "raw-rng");
         assert!(!p[1].reason_ok, "missing -- reason must be rejected");
+    }
+
+    #[test]
+    fn pragma_mentions_in_prose_are_inert() {
+        // Doc comments *describing* the pragma form must not register as
+        // live exemptions (they would all be stale under unused-pragma).
+        let src = "//! Suppress with `// audit: allow(panic-path) -- why`.\n\
+                   /// see: audit: allow(raw-rng) -- example\n\
+                   // audit: allow(panic-path) -- a real one leads its comment\n\
+                   x();\n";
+        let p = pragmas(&lex(src));
+        assert_eq!(p.len(), 1, "{p:?}");
+        assert_eq!(p[0].line, 2);
+        assert_eq!(p[0].rule, "panic-path");
     }
 
     #[test]

@@ -21,7 +21,16 @@
 //! directly below. A pragma without a `-- <reason>`, or naming an unknown
 //! rule, is itself a finding (rule `pragma`) and suppresses nothing —
 //! malformed exemptions may not silently widen. Pragma hygiene is checked
-//! in test code too.
+//! in test code too. A well-formed pragma that suppresses *nothing* is a
+//! finding as well (rule `unused-pragma`): exemptions may not outlive the
+//! code they excused, where they would silently cover the next regression
+//! on those lines. Pragmas must lead their comment — prose that merely
+//! mentions the form (like this module's docs) is inert.
+//!
+//! Serialization files (wire codecs, JSON/report emitters) additionally
+//! ban unordered hash-container iteration (rule `hashmap-order-leak`):
+//! HashMap/HashSet order would leak ambient hash-seed state into bytes the
+//! store/chaos gates compare for equality. Sort first or use a BTree.
 //!
 //! JSON output (`--json <path>`) uses the `das-audit-v1` schema: an object
 //! with `schema`, `root`, `files_scanned`, `suppressed`, `findings`
@@ -85,13 +94,17 @@ pub fn run_audit(root: &Path) -> io::Result<AuditReport> {
         let raw: Vec<&str> = source.lines().collect();
         let lexed = lexer::lex(&source);
         let pragmas = lexer::pragmas(&lexed);
+        // Per-pragma suppression tally — a well-formed pragma that ends the
+        // run with zero hits is stale (rule `unused-pragma` below).
+        let mut hits = vec![0usize; pragmas.len()];
         for f in rules::scan_file(rel, &lexed, &raw) {
             // A well-formed pragma covers its own line and the next one;
             // malformed pragmas deliberately cover nothing.
-            let hit = pragmas.iter().any(|p| {
+            let hit = pragmas.iter().position(|p| {
                 p.reason_ok && p.rule == f.rule && (p.line + 1 == f.line || p.line + 2 == f.line)
             });
-            if hit {
+            if let Some(i) = hit {
+                hits[i] += 1;
                 suppressed += 1;
             } else {
                 findings.push(f);
@@ -124,6 +137,55 @@ pub fn run_audit(root: &Path) -> io::Result<AuditReport> {
                     excerpt,
                 });
             }
+        }
+        // unused-pragma: a well-formed pragma naming a known rule that
+        // suppressed nothing this run is stale — the code it excused was
+        // fixed or moved, and a lingering exemption would silently cover
+        // the next regression on those lines. An `allow(unused-pragma)`
+        // pragma on the same or preceding line can excuse a deliberately
+        // kept exemption (e.g. one covering cfg-gated code the scan
+        // cannot see); a coverer that excuses something counts as used.
+        let mut used: Vec<bool> = hits.iter().map(|&h| h > 0).collect();
+        let mut stale: Vec<usize> = Vec::new();
+        for (i, p) in pragmas.iter().enumerate() {
+            let known = RULES.iter().any(|r| {
+                r.name == p.rule && r.name != rules::PRAGMA && r.name != rules::UNUSED_PRAGMA
+            });
+            if !p.reason_ok || !known || used[i] {
+                continue;
+            }
+            match pragmas.iter().position(|q| {
+                q.reason_ok
+                    && q.rule == rules::UNUSED_PRAGMA
+                    && (q.line == p.line || q.line + 1 == p.line)
+            }) {
+                Some(q) => {
+                    used[q] = true;
+                    suppressed += 1;
+                }
+                None => stale.push(i),
+            }
+        }
+        // Coverers that excused nothing are themselves stale.
+        for (i, p) in pragmas.iter().enumerate() {
+            if p.reason_ok && p.rule == rules::UNUSED_PRAGMA && !used[i] {
+                stale.push(i);
+            }
+        }
+        stale.sort_unstable();
+        for i in stale {
+            let p = &pragmas[i];
+            findings.push(Finding {
+                rule: rules::UNUSED_PRAGMA,
+                file: rel.clone(),
+                line: p.line + 1,
+                message: format!(
+                    "pragma `allow({})` suppressed nothing — the rule no longer \
+                     fires on its covered lines; delete the stale exemption",
+                    p.rule
+                ),
+                excerpt: raw.get(p.line).map_or(String::new(), |l| l.trim().to_string()),
+            });
         }
     }
     findings.sort_by(|a, b| {
@@ -258,6 +320,14 @@ mod tests {
                     "telemetry/mod.rs",
                     "fn l(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n",
                 ),
+                (
+                    "draftsvc/wire.rs",
+                    "fn w(m: &std::collections::HashMap<u32, u32>) { for k in m.keys() { emit(k); } }\n",
+                ),
+                (
+                    "model/mod.rs",
+                    "// audit: allow(panic-path) -- fixture: nothing here panics\nfn quiet() {}\n",
+                ),
             ],
         );
         let report = audit(&root);
@@ -268,12 +338,14 @@ mod tests {
             "raw-rng",
             "unchecked-narrowing",
             "poisoned-lock",
+            "hashmap-order-leak",
+            "unused-pragma",
         ];
         for rule in expected {
             assert_eq!(count(&report, rule), 1, "rule {rule}: {}", report.render());
         }
-        assert_eq!(report.findings.len(), 6, "{}", report.render());
-        assert_eq!(report.files_scanned, 6);
+        assert_eq!(report.findings.len(), 8, "{}", report.render());
+        assert_eq!(report.files_scanned, 8);
     }
 
     #[test]
@@ -317,7 +389,10 @@ mod tests {
         let root = fixture("pragma", &[("store/mod.rs", src)]);
         let report = audit(&root);
         assert_eq!(count(&report, "panic-path"), 1, "{}", report.render());
-        assert_eq!(report.findings[0].line, 11, "only the out-of-range site survives");
+        let survivor = report.findings.iter().find(|f| f.rule == "panic-path").unwrap();
+        assert_eq!(survivor.line, 11, "only the out-of-range site survives");
+        // The too-far pragma suppressed nothing — it is stale.
+        assert_eq!(count(&report, "unused-pragma"), 1, "{}", report.render());
         assert_eq!(report.suppressed, 2);
     }
 
@@ -352,7 +427,28 @@ mod tests {
         let root = fixture("wrongrule", &[("rollout/request.rs", src)]);
         let report = audit(&root);
         assert_eq!(count(&report, "panic-path"), 1, "{}", report.render());
+        assert_eq!(count(&report, "unused-pragma"), 1, "wrong-rule pragma is also stale");
         assert_eq!(report.suppressed, 0);
+    }
+
+    #[test]
+    fn unused_pragma_coverage_excuses_kept_exemptions() {
+        // A deliberately kept exemption (covers cfg-gated code the scan
+        // cannot see) is excused by allow(unused-pragma) on the line above.
+        let kept = "// audit: allow(unused-pragma) -- fixture: covers cfg-gated code\n\
+                    // audit: allow(panic-path) -- fixture: cfg(feature) unwrap below\n\
+                    fn quiet() {}\n";
+        let root = fixture("kept", &[("model/mod.rs", kept)]);
+        let report = audit(&root);
+        assert!(report.findings.is_empty(), "{}", report.render());
+        assert_eq!(report.suppressed, 1, "the covered exemption counts as suppressed");
+
+        // A coverer that excuses nothing is itself stale.
+        let lone = "// audit: allow(unused-pragma) -- fixture: excuses nothing\nfn lonely() {}\n";
+        let root = fixture("lone-coverer", &[("model/mod.rs", lone)]);
+        let report = audit(&root);
+        assert_eq!(count(&report, "unused-pragma"), 1, "{}", report.render());
+        assert_eq!(report.findings[0].line, 1);
     }
 
     #[test]

@@ -32,8 +32,12 @@ pub const WALL_CLOCK: &str = "wall-clock-determinism";
 pub const RAW_RNG: &str = "raw-rng";
 pub const ATOMIC_ORDERING: &str = "atomic-ordering";
 pub const UNCHECKED_NARROWING: &str = "unchecked-narrowing";
+pub const HASHMAP_ORDER: &str = "hashmap-order-leak";
 /// Meta-rule: malformed suppression pragmas are themselves violations.
 pub const PRAGMA: &str = "pragma";
+/// Meta-rule (enforced in [`super::run_audit`], not here): a well-formed
+/// pragma whose rule no longer fires on its covered lines is stale.
+pub const UNUSED_PRAGMA: &str = "unused-pragma";
 
 pub const RULES: &[RuleInfo] = &[
     RuleInfo {
@@ -73,14 +77,27 @@ pub const RULES: &[RuleInfo] = &[
                       rollout/request.rs) — use try_from or the codec's checked helpers",
     },
     RuleInfo {
+        name: HASHMAP_ORDER,
+        description: "no HashMap/HashSet iteration in serialization files \
+                      (wire codecs, JSON/report emitters) unless the result is \
+                      sorted in place or collected into a BTree — hash iteration \
+                      order would leak into bytes that must be deterministic",
+    },
+    RuleInfo {
         name: PRAGMA,
         description: "suppression pragmas must carry a reason: \
                       `// audit: allow(<rule>) -- <why>`",
     },
+    RuleInfo {
+        name: UNUSED_PRAGMA,
+        description: "a well-formed `// audit: allow(<rule>)` pragma whose rule \
+                      no longer fires on its covered lines is stale — delete it \
+                      so exemptions never outlive the code they excused",
+    },
 ];
 
 /// Directories whose non-test code must be panic-free.
-const PANIC_DIRS: &[&str] = &["rollout/", "store/", "suffix/", "drafter/"];
+const PANIC_DIRS: &[&str] = &["rollout/", "store/", "suffix/", "drafter/", "draftsvc/"];
 const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "todo!(", "unimplemented!("];
 
 /// Files allowed to read the wall clock (deadline stealing needs real
@@ -92,11 +109,29 @@ const RNG_TOKENS: &[&str] = &["thread_rng", "rand::", "from_entropy", "getrandom
 const RNG_EXEMPT: &[&str] = &["util/rng.rs"];
 
 /// The audited lock-free/atomic layer; everything else routes through it.
-const ATOMIC_ALLOW: &[&str] = &["util/cow.rs", "rollout/faults.rs", "rollout/parallel.rs"];
+const ATOMIC_ALLOW: &[&str] =
+    &["util/cow.rs", "rollout/faults.rs", "rollout/parallel.rs", "draftsvc/server.rs"];
 const ATOMIC_VARIANTS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
 
-const NARROW_FILES: &[&str] = &["store/wire.rs", "store/mod.rs", "rollout/request.rs"];
+const NARROW_FILES: &[&str] =
+    &["store/wire.rs", "store/mod.rs", "rollout/request.rs", "draftsvc/wire.rs"];
 const NARROW_TYPES: &[&str] = &["u8", "u16", "u32", "usize"];
+
+/// Files whose output bytes must be deterministic: wire codecs and the
+/// JSON/report emitters. Iterating a hash container here bakes ambient
+/// hash-seed order into frames, stores or reports.
+const ORDER_FILES: &[&str] = &[
+    "store/wire.rs",
+    "store/mod.rs",
+    "rollout/request.rs",
+    "draftsvc/wire.rs",
+    "draftsvc/server.rs",
+    "util/json.rs",
+    "telemetry/mod.rs",
+    "analysis/mod.rs",
+];
+const ORDER_ITER_METHODS: &[&str] =
+    &[".iter()", ".iter_mut()", ".keys()", ".values()", ".values_mut()", ".into_iter()", ".drain("];
 
 fn is_ident(c: char) -> bool {
     c.is_alphanumeric() || c == '_'
@@ -134,6 +169,48 @@ fn in_list(rel: &str, list: &[&str]) -> bool {
     list.iter().any(|p| *p == rel)
 }
 
+/// Collect identifiers a line declares with a HashMap/HashSet type:
+/// `name: HashMap<…>` / `name: &HashSet<…>` (fields, params, annotated
+/// lets) and `let name = HashMap::new()` / `HashSet::with_capacity(…)`.
+fn collect_map_idents(code: &str, out: &mut Vec<String>) {
+    let mut push = |ident: String| {
+        if !ident.is_empty()
+            && !ident.chars().next().is_some_and(|c| c.is_ascii_digit())
+            && !out.contains(&ident)
+        {
+            out.push(ident);
+        }
+    };
+    for ty in ["HashMap", "HashSet"] {
+        for at in token_offsets(code, ty) {
+            // `name: HashMap<…>` — walk back over a `std::collections::`
+            // path qualifier, then `&`/`&mut`, then the colon.
+            let mut before = code[..at].trim_end();
+            while let Some(b) = before.strip_suffix("::") {
+                let seg: usize =
+                    b.chars().rev().take_while(|c| is_ident(*c)).map(char::len_utf8).sum();
+                before = b[..b.len() - seg].trim_end();
+            }
+            before = before.strip_suffix("&mut").unwrap_or(before).trim_end();
+            before = before.strip_suffix('&').unwrap_or(before).trim_end();
+            if let Some(b) = before.strip_suffix(':') {
+                let b = b.trim_end();
+                let tail: String = b.chars().rev().take_while(|c| is_ident(*c)).collect();
+                push(tail.chars().rev().collect());
+            }
+        }
+        // `let name = HashMap::new()` — the inferred-type form.
+        if code.contains(&format!("{ty}::")) {
+            for at in token_offsets(code, "let") {
+                let rest = code[at + 3..].trim_start();
+                let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+                let ident: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+                push(ident);
+            }
+        }
+    }
+}
+
 fn under_dirs(rel: &str, dirs: &[&str]) -> bool {
     dirs.iter().any(|d| rel.starts_with(d))
 }
@@ -161,6 +238,7 @@ pub fn scan_file(rel: &str, lexed: &LexedFile, raw: &[&str]) -> Vec<Finding> {
     let rng_exempt = in_list(rel, RNG_EXEMPT);
     let atomic_allowed = in_list(rel, ATOMIC_ALLOW);
     let narrow_scope = in_list(rel, NARROW_FILES);
+    let order_scope = in_list(rel, ORDER_FILES);
 
     for (line0, line) in lexed.lines.iter().enumerate() {
         let code = line.code.as_str();
@@ -241,6 +319,56 @@ pub fn scan_file(rel: &str, lexed: &LexedFile, raw: &[&str]) -> Vec<Finding> {
                         line0,
                         format!("bare `as {t}` narrowing in codec code — use try_from \
                                  or the wire codec's checked length helpers"),
+                    );
+                }
+            }
+        }
+    }
+
+    // hashmap-order-leak: two passes — collect every ident the file
+    // declares with a hash-container type, then flag iteration over them.
+    // Sorting on the flagged or following line (`.sort…`) or collecting
+    // into a BTree container on the flagged line is the sanctioned
+    // ordered idiom and stays quiet.
+    if order_scope {
+        let mut idents: Vec<String> = Vec::new();
+        for line in &lexed.lines {
+            collect_map_idents(&line.code, &mut idents);
+        }
+        for (line0, line) in lexed.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = line.code.as_str();
+            let ordered_nearby = (line0..=line0 + 1).any(|l| {
+                lexed
+                    .lines
+                    .get(l)
+                    .is_some_and(|li| li.code.contains(".sort") || li.code.contains("BTree"))
+            });
+            if ordered_nearby {
+                continue;
+            }
+            for ident in &idents {
+                let method_hit = ORDER_ITER_METHODS
+                    .iter()
+                    .any(|m| !token_offsets(code, &format!("{ident}{m}")).is_empty());
+                let for_hit = [
+                    format!("in &mut {ident}"),
+                    format!("in &{ident}"),
+                    format!("in {ident}"),
+                ]
+                .iter()
+                .any(|p| !token_offsets(code, p).is_empty());
+                if method_hit || for_hit {
+                    push(
+                        HASHMAP_ORDER,
+                        line0,
+                        format!(
+                            "iteration over hash-ordered `{ident}` in a \
+                             serialization file — hash order leaks into emitted \
+                             bytes; sort first or use a BTree container"
+                        ),
                     );
                 }
             }
@@ -373,6 +501,57 @@ mod tests {
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].rule, WALL_CLOCK);
         assert_eq!(scan("model/sim.rs", "let t = SystemTime::now();\n").len(), 1);
+    }
+
+    #[test]
+    fn hashmap_iteration_in_serialization_files_is_flagged() {
+        let src = "use std::collections::HashMap;\n\
+                   fn emit(shards: &HashMap<u32, u32>, w: &mut Writer) {\n\
+                   for (k, v) in shards.iter() { w.u32(*k); }\n\
+                   }\n";
+        let hits = scan("draftsvc/wire.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, HASHMAP_ORDER);
+        assert_eq!(hits[0].line, 3);
+        // Out of scope: non-serialization code may iterate maps freely
+        // (order-insensitive folds are common and legitimate there).
+        assert!(scan("rollout/engine.rs", src).is_empty());
+        // Methods on untracked idents stay quiet.
+        assert!(scan("draftsvc/wire.rs", "fn f(v: &Vec<u32>) { v.iter().count(); }\n")
+            .is_empty());
+        // Path-qualified declarations are tracked too.
+        let qualified = "fn w(m: &std::collections::HashMap<u32, u32>) {\n\
+                         for k in m.keys() { emit(k); }\n\
+                         }\n";
+        let hits = scan("draftsvc/wire.rs", qualified);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn sorted_or_btree_hash_iteration_is_sanctioned() {
+        let src = "fn emit(shards: &HashMap<u32, u32>) {\n\
+                   let mut keys: Vec<_> = shards.keys().collect();\n\
+                   keys.sort();\n\
+                   for k in keys { w(k); }\n\
+                   }\n";
+        assert!(scan("store/mod.rs", src).is_empty(), "sort on the next line sanctions");
+        let btree =
+            "fn emit(m: &HashMap<u32, u32>) { let b: BTreeMap<_, _> = m.iter().collect(); }\n";
+        assert!(scan("store/mod.rs", btree).is_empty(), "BTree collect on the same line");
+    }
+
+    #[test]
+    fn inferred_let_hash_containers_are_tracked() {
+        let src = "fn f() {\n\
+                   let mut seen = HashSet::new();\n\
+                   for x in &seen { emit(x); }\n\
+                   let total: u32 = seen.drain().sum();\n\
+                   }\n";
+        let hits = scan("draftsvc/server.rs", src);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert!(hits.iter().all(|h| h.rule == HASHMAP_ORDER));
+        assert_eq!((hits[0].line, hits[1].line), (3, 4));
     }
 
     #[test]

@@ -69,9 +69,21 @@ pub struct SpecConfig {
     /// Retrieval substrate behind the suffix drafter's history shards:
     /// "window" (fused epoch-tagged arena trie — the production path),
     /// "tree" (online Ukkonen tree, unbounded history), "array"
-    /// (rebuild-per-insert suffix array — the Fig. 5 strawman). Every
-    /// substrate is driven through the `DraftSource` trait.
+    /// (rebuild-per-insert suffix array — the Fig. 5 strawman), "remote"
+    /// (shards served by a `das serve-drafts` daemon over the
+    /// das-draft-rpc-v1 protocol; requires `draft_addr`). Every substrate
+    /// is driven through the `DraftSource` trait.
     pub substrate: String,
+    /// `host:port` of the draft daemon for the "remote" substrate
+    /// (e.g. "127.0.0.1:7831"). Ignored by local substrates.
+    pub draft_addr: String,
+    /// Per-RPC connect/read/write timeout for the remote substrate, in
+    /// milliseconds. Expiry counts a timeout and triggers the retry
+    /// ladder; ladder exhaustion degrades that call to plain decoding.
+    pub draft_timeout_ms: usize,
+    /// Retries per remote RPC after the first attempt (bounded backoff
+    /// between attempts). 0 = single attempt.
+    pub draft_retries: usize,
     /// Sliding window size in epochs; 0 = unbounded ("window_all", Fig 7).
     pub window: usize,
     /// Budget policy: "length_aware" (the paper §4.2.3), "optimal" (Eq. 9
@@ -246,6 +258,9 @@ impl DasConfig {
         read_field!(j, self, "spec", "drafter", string, self.spec.drafter);
         read_field!(j, self, "spec", "scope", string, self.spec.scope);
         read_field!(j, self, "spec", "substrate", string, self.spec.substrate);
+        read_field!(j, self, "spec", "draft_addr", string, self.spec.draft_addr);
+        read_field!(j, self, "spec", "draft_timeout_ms", usize, self.spec.draft_timeout_ms);
+        read_field!(j, self, "spec", "draft_retries", usize, self.spec.draft_retries);
         read_field!(j, self, "spec", "window", usize, self.spec.window);
         read_field!(j, self, "spec", "budget_policy", string, self.spec.budget_policy);
         read_field!(j, self, "spec", "budget_short", usize, self.spec.budget_short);
@@ -341,11 +356,29 @@ impl DasConfig {
         ) {
             return e(format!("spec.scope invalid: '{}'", self.spec.scope));
         }
-        if !matches!(self.spec.substrate.as_str(), "window" | "tree" | "array") {
+        if !matches!(
+            self.spec.substrate.as_str(),
+            "window" | "tree" | "array" | "remote"
+        ) {
             return e(format!(
-                "spec.substrate must be window|tree|array, got '{}'",
+                "spec.substrate must be window|tree|array|remote, got '{}'",
                 self.spec.substrate
             ));
+        }
+        if self.spec.substrate == "remote" {
+            if self.spec.draft_addr.is_empty() {
+                return e("spec.substrate=remote requires spec.draft_addr (host:port)".into());
+            }
+            if !self.spec.store_dir.is_empty() {
+                return e(
+                    "spec.substrate=remote is incompatible with spec.store_dir: \
+                     the serve-drafts daemon owns the store"
+                        .into(),
+                );
+            }
+        }
+        if self.spec.draft_timeout_ms == 0 {
+            return e("spec.draft_timeout_ms must be >= 1".into());
         }
         if !matches!(
             self.spec.budget_policy.as_str(),
@@ -424,6 +457,9 @@ impl DasConfig {
                     ("drafter", Json::str(&self.spec.drafter)),
                     ("scope", Json::str(&self.spec.scope)),
                     ("substrate", Json::str(&self.spec.substrate)),
+                    ("draft_addr", Json::str(&self.spec.draft_addr)),
+                    ("draft_timeout_ms", Json::num(self.spec.draft_timeout_ms as f64)),
+                    ("draft_retries", Json::num(self.spec.draft_retries as f64)),
                     ("window", Json::num(self.spec.window as f64)),
                     ("budget_policy", Json::str(&self.spec.budget_policy)),
                     ("budget_short", Json::num(self.spec.budget_short as f64)),
@@ -544,6 +580,34 @@ mod tests {
         cfg.set("spec.substrate=array").unwrap();
         assert_eq!(cfg.spec.substrate, "array");
         assert!(cfg.set("spec.substrate=bogus").is_err());
+    }
+
+    #[test]
+    fn remote_substrate_parsed_and_validated() {
+        let cfg = DasConfig::from_json_text(
+            r#"{"spec": {"substrate": "remote", "draft_addr": "127.0.0.1:7831",
+                "draft_timeout_ms": 50, "draft_retries": 1}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.substrate, "remote");
+        assert_eq!(cfg.spec.draft_addr, "127.0.0.1:7831");
+        assert_eq!(cfg.spec.draft_timeout_ms, 50);
+        assert_eq!(cfg.spec.draft_retries, 1);
+
+        let mut cfg = DasConfig::default();
+        assert!(cfg.spec.draft_addr.is_empty(), "remote drafting is opt-in");
+        // Remote without an address is unusable.
+        cfg.spec.substrate = "remote".into();
+        assert!(cfg.validate().is_err(), "remote requires draft_addr");
+        cfg.spec.draft_addr = "127.0.0.1:7831".into();
+        cfg.validate().unwrap();
+        // The daemon owns the store; a client-side store dir is a
+        // configuration contradiction, not a merge.
+        cfg.spec.store_dir = "run1/store".into();
+        assert!(cfg.validate().is_err(), "remote client must not own a store");
+        cfg.spec.store_dir.clear();
+        assert!(cfg.set("spec.draft_timeout_ms=0").is_err(), "zero timeout rejected");
+        cfg.set("spec.draft_retries=0").unwrap(); // single attempt is legal
     }
 
     #[test]

@@ -35,6 +35,9 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 drafter: "das".into(),
                 scope: "problem".into(),
                 substrate: "window".into(),
+                draft_addr: String::new(),
+                draft_timeout_ms: 200,
+                draft_retries: 2,
                 window: 16,
                 budget_policy: "length_aware".into(),
                 budget_short: 0,
@@ -91,6 +94,9 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 drafter: "das".into(),
                 scope: "problem".into(),
                 substrate: "window".into(),
+                draft_addr: String::new(),
+                draft_timeout_ms: 200,
+                draft_retries: 2,
                 window: 16,
                 budget_policy: "length_aware".into(),
                 budget_short: 0,
@@ -145,6 +151,9 @@ pub fn preset(name: &str) -> Option<DasConfig> {
                 drafter: "das".into(),
                 scope: "problem".into(),
                 substrate: "window".into(),
+                draft_addr: String::new(),
+                draft_timeout_ms: 200,
+                draft_retries: 2,
                 window: 8,
                 budget_policy: "length_aware".into(),
                 budget_short: 0,

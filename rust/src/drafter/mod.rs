@@ -100,7 +100,7 @@ impl IndexStats {
 }
 
 /// A proposed draft block.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Draft {
     pub tokens: Vec<TokenId>,
     /// Empirical per-token confidence (drafter's own estimate; diagnostic).
@@ -149,6 +149,12 @@ pub enum DraftSnapshot {
         index: Arc<SuffixTrieSnapshot>,
         order: usize,
     },
+    /// Remote shard behind a `das serve-drafts` daemon: a pinned
+    /// server-published snapshot id plus the session to reach it. The
+    /// bytes live server-side; "lock-free" here means the publish-time
+    /// pinning contract holds (readers see the pinned server state), not
+    /// that no I/O happens.
+    Remote(Arc<crate::draftsvc::RemoteShardSnapshot>),
 }
 
 // The whole point of the snapshot path: it must be shareable across draft
@@ -210,6 +216,7 @@ impl DraftSnapshot {
                     match_len,
                 }
             }
+            DraftSnapshot::Remote(r) => r.draft(context, max_match, budget),
         }
     }
 
@@ -249,6 +256,9 @@ impl DraftSnapshot {
                     ..IndexStats::default()
                 }
             }
+            // The structure lives server-side; the client handle has no
+            // gauges of its own.
+            DraftSnapshot::Remote(_) => IndexStats::default(),
         }
     }
 }
@@ -666,6 +676,24 @@ impl DrafterSnapshot {
             DrafterSnapInner::Suffix(s) => s.draft(request, problem, context, budget),
         }
     }
+
+    /// Raw shard-level draft: query one history shard (`None` = the
+    /// global shard) with NO routing and NO minimum-match gating. This is
+    /// the draft service's read path — the serving side answers raw shard
+    /// content and the *client* drafter applies its own scope rules and
+    /// thresholds, so remote drafts stay bit-identical to local ones.
+    pub fn shard_draft(
+        &self,
+        shard: Option<ProblemId>,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> Draft {
+        match &self.inner {
+            DrafterSnapInner::Empty | DrafterSnapInner::Single(_) => Draft::empty(),
+            DrafterSnapInner::Suffix(s) => s.shard_draft(shard, context, max_match, budget),
+        }
+    }
 }
 
 /// Common interface for all drafters (the routing layer above
@@ -758,6 +786,19 @@ pub trait Drafter: Send {
     /// ([`crate::store::WalRecord::Register`]). Default: ignore (drafters
     /// without a prefix router).
     fn register_route(&mut self, _shard: u32, _tokens: &[TokenId]) {}
+
+    /// Drain the remote-drafting telemetry accumulated since the last
+    /// call (`substrate = "remote"` only). The engine stamps this onto
+    /// the step's `remote_draft_*` gauges. Default: `None` — this
+    /// drafter speaks no network.
+    fn remote_stats(&mut self) -> Option<crate::draftsvc::RemoteDraftStats> {
+        None
+    }
+
+    /// Chaos seam (`kill-draftsvc` fault directive): abruptly kill the
+    /// remote draft server this drafter talks to, proving the run
+    /// survives by degradation. Default: no-op.
+    fn kill_remote(&mut self) {}
 }
 
 /// The no-speculation baseline: always proposes nothing.

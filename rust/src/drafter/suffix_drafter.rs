@@ -38,6 +38,7 @@ use super::{
     DrafterSnapshot, IndexStats,
 };
 use crate::config::SpecConfig;
+use crate::draftsvc::{Fingerprint, RemoteDraftSource, RemoteDraftStats, RemoteSession, ShardKey};
 use crate::store::wire::{Reader, StoreError, Writer};
 use crate::suffix::{PrefixRouter, RouterSnapshot, SharedPool, SuffixTrieIndex};
 use crate::tokens::{Epoch, ProblemId, RequestId, Rollout, TokenId};
@@ -89,6 +90,11 @@ pub struct SuffixDrafter {
     router: Option<PrefixRouter>,
     /// Label-segment pool shared by every trie-backed shard + the router.
     pool: SharedPool,
+    /// `substrate = "remote"` only: the shared client session every shard
+    /// draws on. History shards become server-side views; request-local
+    /// indexes and the router stay client-side (they are per-process by
+    /// nature and die with their requests).
+    remote: Option<Arc<RemoteSession>>,
     window: usize,
     match_len: usize,
     /// Minimum context-suffix match depth before a history draft is trusted.
@@ -163,6 +169,7 @@ impl SuffixDrafter {
                 None
             },
             pool,
+            remote: None,
             window,
             match_len,
             min_match: 2.min(match_len),
@@ -176,6 +183,9 @@ impl SuffixDrafter {
     }
 
     pub fn from_config(cfg: &SpecConfig) -> Self {
+        if cfg.substrate == "remote" {
+            return SuffixDrafter::remote_from_config(cfg);
+        }
         // audit: allow(panic-path) -- config validate() already parsed this scope; see validate()
         let scope = HistoryScope::parse(&cfg.scope).expect("validated scope");
         SuffixDrafter::configured(
@@ -187,6 +197,61 @@ impl SuffixDrafter {
             cfg.prefix_router,
             cfg.router_capacity,
         )
+    }
+
+    /// The `substrate = "remote"` drafter: identical routing layer, but
+    /// history shards are [`RemoteDraftSource`] views onto one
+    /// `das serve-drafts` daemon at `spec.draft_addr`. The handshake
+    /// fingerprint pins the shard geometry, so the server's local shards
+    /// answer exactly what in-process shards would.
+    fn remote_from_config(cfg: &SpecConfig) -> Self {
+        // audit: allow(panic-path) -- config validate() already parsed this scope; see validate()
+        let scope = HistoryScope::parse(&cfg.scope).expect("validated scope");
+        let max_depth = cfg.match_len + cfg.budget_cap.max(8);
+        let session = Arc::new(RemoteSession::new(
+            &cfg.draft_addr,
+            cfg.draft_timeout_ms,
+            cfg.draft_retries,
+            Fingerprint {
+                window: cfg.window,
+                match_len: cfg.match_len,
+                max_depth,
+                scope: scope.as_str().to_string(),
+            },
+        ));
+        let pool = SharedPool::new();
+        SuffixDrafter {
+            scope,
+            substrate: "remote".to_string(),
+            shards: HashMap::new(),
+            global: Box::new(RemoteDraftSource::new(Arc::clone(&session), ShardKey::Global)),
+            request_local: HashMap::new(),
+            router: if cfg.prefix_router {
+                let cap = if cfg.router_capacity == 0 {
+                    usize::MAX
+                } else {
+                    cfg.router_capacity
+                };
+                Some(PrefixRouter::with_capacity_pooled(
+                    cfg.match_len.max(8),
+                    cap,
+                    pool.clone(),
+                ))
+            } else {
+                None
+            },
+            pool,
+            remote: Some(session),
+            window: cfg.window,
+            match_len: cfg.match_len,
+            min_match: 2.min(cfg.match_len),
+            max_depth,
+            epoch: 0,
+            local_hits: 0,
+            shard_hits: 0,
+            misses: 0,
+            snap: None,
+        }
     }
 
     pub fn scope(&self) -> HistoryScope {
@@ -208,8 +273,29 @@ impl SuffixDrafter {
         self.epoch
     }
 
-    fn new_shard(&self) -> Box<dyn DraftSource> {
-        source_from_substrate_pooled(&self.substrate, self.window, self.max_depth, Some(&self.pool))
+    /// Maximum context-suffix match depth per draft (`spec.match_len`).
+    pub fn match_len(&self) -> usize {
+        self.match_len
+    }
+
+    /// Index depth cap (`match_len + budget_cap.max(8)`).
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    fn new_shard(&self, problem: ProblemId) -> Box<dyn DraftSource> {
+        match &self.remote {
+            Some(session) => Box::new(RemoteDraftSource::new(
+                Arc::clone(session),
+                ShardKey::Problem(problem),
+            )),
+            None => source_from_substrate_pooled(
+                &self.substrate,
+                self.window,
+                self.max_depth,
+                Some(&self.pool),
+            ),
+        }
     }
 
     /// Total tokens currently indexed across history shards (diagnostics;
@@ -286,6 +372,7 @@ impl SuffixDrafter {
                 request_local: HashMap::new(),
                 router,
                 pool,
+                remote: None,
                 window,
                 match_len,
                 min_match: 2.min(match_len),
@@ -356,6 +443,27 @@ impl SuffixDrafterSnapshot {
             d
         } else {
             Draft::empty()
+        }
+    }
+
+    /// Raw shard read for the draft service: one shard (`None` = global),
+    /// no routing, no minimum-match gating — the CLIENT drafter applies
+    /// its own thresholds, which is what keeps remote drafts bit-identical
+    /// to in-process ones.
+    pub(super) fn shard_draft(
+        &self,
+        shard: Option<ProblemId>,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> Draft {
+        let source = match shard {
+            None => self.global.as_ref(),
+            Some(problem) => self.shards.get(&problem),
+        };
+        match source {
+            Some(s) => s.draft_from(context, max_match, budget),
+            None => Draft::empty(),
         }
     }
 
@@ -534,7 +642,7 @@ impl Drafter for SuffixDrafter {
             HistoryScope::GlobalRequest => self.global.absorb(rollout.epoch, &rollout.tokens),
             _ => {
                 if !self.shards.contains_key(&rollout.problem) {
-                    let shard = self.new_shard();
+                    let shard = self.new_shard(rollout.problem);
                     self.shards.insert(rollout.problem, shard);
                 }
                 if let Some(shard) = self.shards.get_mut(&rollout.problem) {
@@ -557,7 +665,10 @@ impl Drafter for SuffixDrafter {
     }
 
     fn persistent(&self) -> bool {
-        true
+        // Remote shards are views: the SERVER owns the history and its
+        // durability (store dir, WAL, snapshot commits). A client-side
+        // store would persist nothing but empty stubs.
+        self.remote.is_none()
     }
 
     /// The `das-store-v1` drafter payload: parameters, the shared segment
@@ -642,6 +753,21 @@ impl Drafter for SuffixDrafter {
         if let Some(router) = &mut self.router {
             self.snap = None;
             router.register(shard, tokens);
+        }
+        // Mirror the registration server-side so the daemon's persisted
+        // router state matches what this client routes on.
+        if let Some(session) = &self.remote {
+            session.register(shard, tokens);
+        }
+    }
+
+    fn remote_stats(&mut self) -> Option<RemoteDraftStats> {
+        self.remote.as_ref().map(|s| s.drain_stats())
+    }
+
+    fn kill_remote(&mut self) {
+        if let Some(session) = &self.remote {
+            session.send_die();
         }
     }
 

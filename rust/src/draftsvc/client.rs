@@ -1,0 +1,169 @@
+//! The `substrate = "remote"` client: a [`DraftSource`] whose index lives
+//! in a `das serve-drafts` daemon.
+//!
+//! Each shard of the client drafter (the global shard plus one per
+//! problem) is a [`RemoteDraftSource`] addressing the matching server
+//! shard over the shared [`RemoteSession`]. Drafting forwards the *raw*
+//! shard-level `draft_from` call — minimum-match gating, request-local
+//! indexes, and router redirects all stay client-side in
+//! `SuffixDrafter` — so for identical absorb/roll streams the remote
+//! substrate answers bit-identically to its in-process counterpart.
+//!
+//! `snapshot()` returns a snapshot-*shaped* handle
+//! ([`RemoteShardSnapshot`]): it pins a server-published snapshot id, so
+//! `spec.draft_threads` fan-out keeps its publish-time semantics (readers
+//! see the pinned server state, never a mid-mutation view), while the
+//! bytes stay on the server.
+
+use std::sync::Arc;
+
+use super::session::RemoteSession;
+use super::wire::ShardKey;
+use crate::drafter::{Draft, DraftSnapshot, DraftSource};
+use crate::store::wire::{Reader, StoreError, Writer};
+use crate::tokens::{Epoch, TokenId};
+
+/// One server shard seen through the [`DraftSource`] interface.
+#[derive(Debug)]
+pub struct RemoteDraftSource {
+    session: Arc<RemoteSession>,
+    shard: ShardKey,
+    /// Tokens forwarded to the server shard — the client-side stand-in
+    /// for `indexed_tokens` (the true count lives server-side; this
+    /// tracks what *this* client contributed, which is what the engine's
+    /// per-step index gauges want to see grow).
+    sent_tokens: usize,
+}
+
+impl RemoteDraftSource {
+    pub fn new(session: Arc<RemoteSession>, shard: ShardKey) -> RemoteDraftSource {
+        RemoteDraftSource {
+            session,
+            shard,
+            sent_tokens: 0,
+        }
+    }
+}
+
+impl DraftSource for RemoteDraftSource {
+    fn source_name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn draft_from(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        // Snapshot 0 is the server's live view. Failure inside the
+        // session surfaces as an empty draft — the engine then decodes
+        // plainly for this request, which is the degrade contract.
+        self.session
+            .draft_one(0, self.shard, context, max_match, budget)
+    }
+
+    fn snapshot(&mut self) -> DraftSnapshot {
+        // Pin a published server snapshot. If publishing fails the id
+        // degrades to 0 (live view) — still correct, merely unpinned.
+        let snapshot = self.session.publish();
+        DraftSnapshot::Remote(Arc::new(RemoteShardSnapshot {
+            session: Arc::clone(&self.session),
+            shard: self.shard,
+            snapshot,
+        }))
+    }
+
+    fn absorb(&mut self, epoch: Epoch, tokens: &[TokenId]) {
+        self.sent_tokens += tokens.len();
+        self.session.absorb(self.shard, epoch, tokens);
+    }
+
+    fn on_epoch(&mut self, epoch: Epoch) {
+        // The drafter fans on_epoch out per shard; the session dedups so
+        // the server rolls once per epoch.
+        self.session.roll_epoch(epoch);
+    }
+
+    fn indexed_tokens(&self) -> usize {
+        self.sent_tokens
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        // Remote shards are views, not state: the server owns the index
+        // and its durability (store dir, WAL, snapshots). Persist the
+        // stateless tag so a blob written with a remote shard loads as
+        // "nothing to restore".
+        w.str(self.source_name());
+        w.u8(0);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<(), StoreError> {
+        r.expect_str(self.source_name(), "source blob tag")?;
+        if r.u8()? != 0 {
+            return Err(StoreError::Corrupt("remote source with a payload".into()));
+        }
+        Ok(())
+    }
+}
+
+/// The snapshot-shaped handle a [`RemoteDraftSource`] publishes: a pinned
+/// server snapshot id plus the session to reach it. Shareable across the
+/// engine's draft threads (`DraftSnapshot` is `Send + Sync`; the session
+/// serializes the wire underneath).
+#[derive(Debug)]
+pub struct RemoteShardSnapshot {
+    session: Arc<RemoteSession>,
+    shard: ShardKey,
+    snapshot: u64,
+}
+
+impl RemoteShardSnapshot {
+    pub fn draft(&self, context: &[TokenId], max_match: usize, budget: usize) -> Draft {
+        self.session
+            .draft_one(self.snapshot, self.shard, context, max_match, budget)
+    }
+
+    /// The pinned server snapshot id (0 = live view fallback).
+    pub fn snapshot_id(&self) -> u64 {
+        self.snapshot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wire::Fingerprint;
+    use super::*;
+
+    fn session() -> Arc<RemoteSession> {
+        Arc::new(RemoteSession::new(
+            "127.0.0.1:1",
+            20,
+            0,
+            Fingerprint {
+                window: 16,
+                match_len: 8,
+                max_depth: 72,
+                scope: "problem".to_string(),
+            },
+        ))
+    }
+
+    #[test]
+    fn source_degrades_cleanly_with_no_server() {
+        let mut src = RemoteDraftSource::new(session(), ShardKey::Problem(3));
+        assert_eq!(src.source_name(), "remote");
+        assert!(src.draft_from(&[1, 2, 3], 8, 16).is_empty());
+        src.absorb(0, &[1, 2, 3, 4]);
+        assert_eq!(src.indexed_tokens(), 4);
+        let snap = src.snapshot();
+        assert!(snap.draft_from(&[1, 2], 8, 16).is_empty());
+    }
+
+    #[test]
+    fn state_blob_roundtrips_as_stateless() {
+        let src = RemoteDraftSource::new(session(), ShardKey::Global);
+        let mut w = Writer::new();
+        src.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let mut fresh = RemoteDraftSource::new(session(), ShardKey::Global);
+        fresh.load_state(&mut r).expect("stateless blob loads");
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,343 @@
+//! Distributed draft service: the drafter behind a socket.
+//!
+//! SpecRL-style deployments centralize the nonparametric drafter so
+//! history aggregates across a fleet of rollout workers instead of
+//! fragmenting per process. This module is that split for `das`:
+//!
+//! - [`wire`] — `das-draft-rpc-v1`, a length-prefixed, checksummed
+//!   binary protocol built from the `store/wire.rs` codec idioms
+//!   (`u32 len | u64 fnv1a | body`, every count checked pre-allocation).
+//! - [`server`] — the `das serve-drafts` daemon: one [`SuffixDrafter`]
+//!   + optional [`HistoryStore`] (WAL-first mutations, periodic
+//!   snapshot commits), drafts answered from published
+//!   [`DrafterSnapshot`]s so readers never block the single writer.
+//! - [`session`] — the client connection: timeouts, bounded retry with
+//!   deterministic backoff, reconnects, a fast-degrade breaker, and the
+//!   `remote_draft_*` telemetry the engine surfaces per step.
+//! - [`client`] — [`RemoteDraftSource`], the `DraftSource` whose shards
+//!   live server-side; selected via `spec.substrate = "remote"` +
+//!   `spec.draft_addr`. Engine and rollout layers are unchanged.
+//!
+//! Failure semantics: every remote fault — refused connect, timeout,
+//! mid-RPC server death, fingerprint drift — degrades the affected
+//! draft to empty, which the engine already treats as "decode plainly".
+//! At temperature 0 losslessness makes that a pure slowdown; outputs
+//! are bit-identical with a healthy server, a dead one, or no server
+//! at all (the `kill-draftsvc` chaos directive gates exactly this).
+//!
+//! [`SuffixDrafter`]: crate::drafter::SuffixDrafter
+//! [`HistoryStore`]: crate::store::HistoryStore
+//! [`DrafterSnapshot`]: crate::drafter::DrafterSnapshot
+
+pub mod client;
+pub mod server;
+pub mod session;
+pub mod wire;
+
+pub use client::{RemoteDraftSource, RemoteShardSnapshot};
+pub use server::DraftServer;
+pub use session::{RemoteDraftStats, RemoteSession};
+pub use wire::{DraftReq, Fingerprint, Msg, ShardKey, MAX_FRAME, PROTOCOL};
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::config::DasConfig;
+    use crate::drafter::{Drafter, SuffixDrafter};
+    use crate::model::sim::{SimModel, SimModelConfig};
+    use crate::rollout::{GenJob, RolloutEngine, StepReport};
+    use crate::tokens::Rollout;
+
+    fn cfg(substrate: &str) -> DasConfig {
+        let mut c = DasConfig::default();
+        c.model.vocab_size = 64;
+        c.workload.n_problems = 6;
+        c.workload.len_mu = 3.2;
+        c.workload.len_sigma = 0.4;
+        c.rollout.max_new_tokens = 128;
+        c.rollout.max_batch = 4;
+        c.rollout.temperature = 0.0; // greedy: the bit-identity regime
+        c.spec.drafter = "das".into();
+        c.spec.substrate = substrate.into();
+        c
+    }
+
+    fn jobs(n: usize, samples: usize) -> Vec<GenJob> {
+        (0..n)
+            .map(|p| GenJob {
+                problem: p as u32,
+                prompt: vec![p as u32 + 1, 7, 9],
+                samples,
+            })
+            .collect()
+    }
+
+    fn sorted_rollouts(rep: &StepReport) -> Vec<(u32, Vec<u32>)> {
+        let mut k: Vec<_> = rep
+            .rollouts
+            .iter()
+            .map(|r| (r.problem, r.tokens.clone()))
+            .collect();
+        k.sort();
+        k
+    }
+
+    /// Spawn a serve-drafts daemon for `client_cfg` on an OS-chosen
+    /// loopback port: same drafter geometry, local substrate, optional
+    /// store dir. Returns (server, join handle, addr).
+    fn spawn_server(
+        client_cfg: &DasConfig,
+        dir: Option<&std::path::Path>,
+    ) -> (Arc<DraftServer>, std::thread::JoinHandle<()>, String) {
+        let mut spec = client_cfg.spec.clone();
+        spec.substrate = "window".into();
+        spec.draft_addr = String::new();
+        let server = Arc::new(DraftServer::bind(&spec, dir, "127.0.0.1:0").expect("bind"));
+        let addr = server.local_addr();
+        let handle = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || server.run())
+        };
+        (server, handle, addr)
+    }
+
+    #[test]
+    fn remote_engine_outputs_bit_identical_to_window_over_loopback() {
+        // THE tentpole acceptance test: substrate="remote" over loopback
+        // produces greedy rollouts byte-identical to in-process "window",
+        // step for step, across epoch rolls — while actually speculating
+        // through the socket.
+        let c_ref = cfg("window");
+        let mut m1 = SimModel::new(SimModelConfig::from_das(&c_ref));
+        let mut e1 = RolloutEngine::new(&c_ref, crate::drafter::from_config(&c_ref));
+
+        let mut c_rem = cfg("remote");
+        let (server, handle, addr) = spawn_server(&c_rem, None);
+        c_rem.spec.draft_addr = addr;
+        let mut m2 = SimModel::new(SimModelConfig::from_das(&c_rem));
+        let mut e2 = RolloutEngine::new(&c_rem, crate::drafter::from_config(&c_rem));
+
+        let mut saw_traffic = false;
+        for step in 0..3u32 {
+            let r1 = e1.generate_step(&mut m1, &jobs(4, 2), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(4, 2), step);
+            assert_eq!(
+                sorted_rollouts(&r1),
+                sorted_rollouts(&r2),
+                "remote substrate broke losslessness at step {step}"
+            );
+            if r2.metrics.remote_round_trips > 0 {
+                saw_traffic = true;
+            }
+            assert_eq!(r2.metrics.remote_degraded, 0, "healthy server never degrades");
+            e1.roll_epoch(step + 1);
+            e2.roll_epoch(step + 1);
+        }
+        assert!(saw_traffic, "remote run must actually speculate over the wire");
+        server.stop();
+        handle.join().expect("server thread");
+    }
+
+    #[test]
+    fn mid_run_server_death_degrades_to_plain_decoding() {
+        // The chaos contract: kill-draftsvc mid-run must leave greedy
+        // outputs untouched (empty drafts = plain decoding) and surface
+        // the death in the remote_draft_* gauges.
+        let c_ref = cfg("window");
+        let mut m1 = SimModel::new(SimModelConfig::from_das(&c_ref));
+        let mut e1 = RolloutEngine::new(&c_ref, crate::drafter::from_config(&c_ref));
+
+        let mut c_rem = cfg("remote");
+        let (_server, handle, addr) = spawn_server(&c_rem, None);
+        c_rem.spec.draft_addr = addr;
+        c_rem.spec.draft_timeout_ms = 50;
+        c_rem.spec.draft_retries = 1;
+        c_rem.rollout.fault_plan = "kill-draftsvc step=1".into();
+        let mut m2 = SimModel::new(SimModelConfig::from_das(&c_rem));
+        let mut e2 = RolloutEngine::new(&c_rem, crate::drafter::from_config(&c_rem));
+
+        let mut degraded_total = 0u64;
+        for step in 0..3u32 {
+            let r1 = e1.generate_step(&mut m1, &jobs(3, 2), step);
+            let r2 = e2.generate_step(&mut m2, &jobs(3, 2), step);
+            assert_eq!(
+                sorted_rollouts(&r1),
+                sorted_rollouts(&r2),
+                "server death changed greedy outputs at step {step}"
+            );
+            degraded_total += r2.metrics.remote_degraded;
+        }
+        assert!(
+            degraded_total > 0,
+            "a killed server must show up as degraded remote drafts"
+        );
+        handle.join().expect("server thread exits after Die");
+    }
+
+    #[test]
+    fn remote_drafter_matches_local_substrate_draft_for_draft() {
+        // Drafter-level bit-identity: identical absorb/roll streams, then
+        // identical draft calls — the remote drafter (through a real
+        // socket) and the local window drafter must answer the same
+        // tokens, both on the serial path and through published
+        // snapshots.
+        let c = cfg("remote");
+        let (server, handle, addr) = spawn_server(&c, None);
+        let mut c_rem = c.clone();
+        c_rem.spec.draft_addr = addr;
+        let mut remote = SuffixDrafter::from_config(&c_rem.spec);
+        let mut c_loc = c.clone();
+        c_loc.spec.substrate = "window".into();
+        let mut local = SuffixDrafter::from_config(&c_loc.spec);
+
+        let runs: Vec<(u32, Vec<u32>)> = vec![
+            (1, vec![5, 6, 7, 8, 9, 6, 7, 8, 9, 10]),
+            (1, vec![5, 6, 7, 8, 9, 11]),
+            (2, vec![20, 21, 22, 23, 21, 22, 23, 24]),
+        ];
+        for (problem, tokens) in &runs {
+            let r = Rollout {
+                problem: *problem,
+                epoch: 0,
+                step: 0,
+                tokens: tokens.clone(),
+                reward: 0.0,
+            };
+            remote.observe_rollout(&r);
+            local.observe_rollout(&r);
+        }
+        remote.roll_epoch(1);
+        local.roll_epoch(1);
+
+        let contexts: Vec<(u32, Vec<u32>)> = vec![
+            (1, vec![5, 6, 7, 8]),
+            (1, vec![9, 6, 7]),
+            (2, vec![22, 23]),
+            (2, vec![1, 2, 3]), // miss on both sides
+            (3, vec![5, 6]),    // unknown problem on both sides
+        ];
+        for (i, (problem, ctx)) in contexts.iter().enumerate() {
+            let dr = remote.draft(100 + i as u64, *problem, ctx, 8);
+            let dl = local.draft(100 + i as u64, *problem, ctx, 8);
+            assert_eq!(dr.tokens, dl.tokens, "serial draft {i} diverged");
+            assert_eq!(dr.match_len, dl.match_len, "serial match_len {i} diverged");
+            let sr = remote.snapshot().expect("remote snapshot");
+            let sl = local.snapshot().expect("local snapshot");
+            let (dr2, _) = sr.draft(200 + i as u64, *problem, ctx, 8);
+            let (dl2, _) = sl.draft(200 + i as u64, *problem, ctx, 8);
+            assert_eq!(dr2.tokens, dl2.tokens, "snapshot draft {i} diverged");
+        }
+        let stats = remote.remote_stats().expect("remote drafter reports stats");
+        assert!(stats.round_trips > 0);
+        assert_eq!(stats.degraded, 0);
+        server.stop();
+        handle.join().expect("server thread");
+    }
+
+    #[test]
+    fn server_warm_starts_from_its_store() {
+        // Durability: absorb through the wire, roll an epoch (snapshot
+        // commit cadence 1), shut down gracefully, rebind on the same
+        // dir — the reborn server must answer the same drafts.
+        let dir = crate::store::test_dir("draftsvc-warm-start");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = cfg("remote");
+        c.spec.snapshot_every = 1;
+
+        let (server, handle, addr) = spawn_server(&c, Some(&dir));
+        c.spec.draft_addr = addr;
+        let mut drafter = SuffixDrafter::from_config(&c.spec);
+        drafter.observe_rollout(&Rollout {
+            problem: 4,
+            epoch: 0,
+            step: 0,
+            tokens: vec![30, 31, 32, 33, 31, 32, 33, 34],
+            reward: 0.0,
+        });
+        drafter.roll_epoch(1);
+        let before = drafter.draft(1, 4, &[30, 31, 32], 8);
+        assert!(!before.tokens.is_empty(), "live server drafts from history");
+        drafter.kill_remote(); // graceful path exercised below via rebind
+        server.stop();
+        handle.join().expect("server thread");
+        assert_eq!(server.store_failures(), 0);
+
+        let (server2, handle2, addr2) = spawn_server(&c, Some(&dir));
+        c.spec.draft_addr = addr2;
+        let mut drafter2 = SuffixDrafter::from_config(&c.spec);
+        let after = drafter2.draft(2, 4, &[30, 31, 32], 8);
+        assert_eq!(after.tokens, before.tokens, "warm-started server must agree");
+        server2.stop();
+        handle2.join().expect("server thread");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_drift_is_refused_and_marks_the_session_dead() {
+        // A client whose shard geometry differs must be refused at
+        // handshake — silently different drafts would break the
+        // remote ≡ local contract. The session goes permanently dead and
+        // every later call degrades immediately.
+        let c = cfg("remote");
+        let (server, handle, addr) = spawn_server(&c, None);
+        let session = Arc::new(RemoteSession::new(
+            &addr,
+            200,
+            0,
+            Fingerprint {
+                window: c.spec.window + 1, // drifted
+                match_len: c.spec.match_len,
+                max_depth: c.spec.match_len + c.spec.budget_cap.max(8),
+                scope: c.spec.scope.clone(),
+            },
+        ));
+        let d = session.draft_one(0, ShardKey::Problem(1), &[1, 2, 3], 8, 8);
+        assert!(d.is_empty());
+        assert!(session.is_dead(), "fingerprint drift is permanent");
+        let stats = session.drain_stats();
+        assert!(stats.degraded > 0);
+        server.stop();
+        handle.join().expect("server thread");
+    }
+
+    #[test]
+    fn batched_drafts_match_single_request_drafts() {
+        // One frame carrying N contexts must answer exactly what N
+        // single-request frames answer (batching is transport-only).
+        let c = cfg("remote");
+        let (server, handle, addr) = spawn_server(&c, None);
+        let session = Arc::new(RemoteSession::new(
+            &addr,
+            200,
+            2,
+            Fingerprint {
+                window: c.spec.window,
+                match_len: c.spec.match_len,
+                max_depth: c.spec.match_len + c.spec.budget_cap.max(8),
+                scope: c.spec.scope.clone(),
+            },
+        ));
+        session.absorb(ShardKey::Problem(9), 0, &[40, 41, 42, 43, 41, 42, 43, 44]);
+        let reqs: Vec<DraftReq> = (0..4)
+            .map(|i| DraftReq {
+                shard: ShardKey::Problem(9),
+                context: vec![40 + i, 41 + i],
+                max_match: 8,
+                budget: 8,
+            })
+            .collect();
+        let batched = session.draft_batch(0, reqs.clone());
+        assert_eq!(batched.len(), reqs.len());
+        for (req, want) in reqs.iter().zip(&batched) {
+            let one = session.draft_one(0, req.shard, &req.context, req.max_match, req.budget);
+            assert_eq!(one.tokens, want.tokens);
+            assert_eq!(one.match_len, want.match_len);
+        }
+        let stats = session.drain_stats();
+        assert!(stats.contexts >= 8, "4 batched + 4 single contexts counted");
+        server.stop();
+        handle.join().expect("server thread");
+    }
+}

@@ -1,0 +1,406 @@
+//! The `das serve-drafts` daemon: one [`SuffixDrafter`] + optional
+//! [`HistoryStore`] behind a TCP accept loop speaking `das-draft-rpc-v1`.
+//!
+//! Lifecycle: [`DraftServer::bind`] builds the drafter from the spec,
+//! warm-starts it from the store directory (snapshot restore + WAL tail
+//! replay, exactly the engine's recipe), opens the store for writing,
+//! and binds the listener. [`DraftServer::run`] accepts connections and
+//! spawns one handler thread per client — rollout workers hold their
+//! connection for the whole run, so a sequential accept loop would
+//! deadlock the fleet behind its first member.
+//!
+//! Single-writer rule: all mutations (`Absorb`/`RollEpoch`/`Register`)
+//! are WAL-appended first and then applied under the one state lock.
+//! Draft reads resolve a pinned published [`DrafterSnapshot`] `Arc`
+//! under the lock, then draft *outside* it — readers never block the
+//! writer beyond the pointer fetch, which is the PR 7 snapshot contract
+//! carried over the wire. Store failures are counted and logged but
+//! never stop serving: durability degrades, availability doesn't.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::wire::{read_frame, write_frame, DraftReq, Fingerprint, Msg, ShardKey, PROTOCOL};
+use crate::config::SpecConfig;
+use crate::drafter::{Draft, Drafter, DrafterSnapshot, SuffixDrafter};
+use crate::store::wire::StoreError;
+use crate::store::{replay_wal, HistoryStore, WalRecord};
+use crate::tokens::{Epoch, Rollout};
+
+/// Published snapshots kept addressable by id. Clients repin every
+/// mutation, so a short ring is plenty; an evicted id answers `Err` and
+/// the client falls back to the live view.
+const SNAPSHOT_RING: usize = 8;
+
+struct ServerState {
+    drafter: SuffixDrafter,
+    store: Option<HistoryStore>,
+    /// Published snapshots: (id, pinned view), newest at the back.
+    snapshots: VecDeque<(u64, Arc<DrafterSnapshot>)>,
+    next_snapshot: u64,
+    /// Commit a full store snapshot every this many epoch rolls.
+    snapshot_every: Epoch,
+    epochs_since_snapshot: Epoch,
+    store_failures: u64,
+}
+
+impl ServerState {
+    fn wal_append(&mut self, record: &WalRecord) {
+        if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.append(record) {
+                self.store_failures += 1;
+                eprintln!("das-draftsvc: WAL append failed ({e}); serving without that record");
+            }
+        }
+    }
+
+    /// Pin the drafter's current snapshot under a fresh id (or the
+    /// existing id when nothing mutated since the last publish — the
+    /// drafter-level cache hands back the same `Arc`).
+    fn publish(&mut self) -> Result<(u64, Epoch), StoreError> {
+        let epoch = self.drafter.epoch();
+        let Some(snap) = self.drafter.snapshot() else {
+            return Err(StoreError::Unsupported("server drafter cannot snapshot"));
+        };
+        if let Some((id, last)) = self.snapshots.back() {
+            if Arc::ptr_eq(last, &snap) {
+                return Ok((*id, epoch));
+            }
+        }
+        let id = self.next_snapshot;
+        self.next_snapshot += 1;
+        self.snapshots.push_back((id, snap));
+        while self.snapshots.len() > SNAPSHOT_RING {
+            self.snapshots.pop_front();
+        }
+        Ok((id, epoch))
+    }
+
+    /// Resolve a batch's snapshot id: 0 pins the live view now, anything
+    /// else must still be in the ring.
+    fn resolve(&mut self, id: u64) -> Result<Arc<DrafterSnapshot>, StoreError> {
+        if id == 0 {
+            return match self.drafter.snapshot() {
+                Some(s) => Ok(s),
+                None => Err(StoreError::Unsupported("server drafter cannot snapshot")),
+            };
+        }
+        self.snapshots
+            .iter()
+            .find(|(sid, _)| *sid == id)
+            .map(|(_, s)| Arc::clone(s))
+            .ok_or_else(|| StoreError::Corrupt(format!("unknown snapshot id {id}")))
+    }
+}
+
+/// The daemon: listener + shared state + stop latch.
+pub struct DraftServer {
+    listener: TcpListener,
+    state: Arc<Mutex<ServerState>>,
+    stop: Arc<AtomicBool>,
+}
+
+fn lock_state(state: &Arc<Mutex<ServerState>>) -> std::sync::MutexGuard<'_, ServerState> {
+    // A handler that panicked mid-mutation leaves applied-or-not state no
+    // worse than a client that died mid-stream; keep serving.
+    state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl DraftServer {
+    /// Build the drafter from `spec`, warm-start it from `dir` (when
+    /// given), and bind `addr`. The spec must name a *local* substrate —
+    /// a server whose own shards were remote would just be a loop.
+    pub fn bind(spec: &SpecConfig, dir: Option<&Path>, addr: &str) -> Result<DraftServer, StoreError> {
+        if spec.substrate == "remote" {
+            return Err(StoreError::Unsupported(
+                "serve-drafts needs a local substrate (window|tree|array), not 'remote'",
+            ));
+        }
+        let mut drafter = SuffixDrafter::from_config(spec);
+        // Warm start mirrors the engine: restore + replay from a read-only
+        // view first, open for writing only once the state was accepted,
+        // and degrade to serving without persistence on any store error.
+        let store = match dir {
+            None => None,
+            Some(dir) => match HistoryStore::peek(dir) {
+                Ok(view) => {
+                    let restored = match &view.snapshot {
+                        Some(snap) => match drafter.load_state(snap) {
+                            Ok(()) => true,
+                            Err(e) => {
+                                eprintln!(
+                                    "das-draftsvc: warm start from '{}' skipped ({e}); \
+                                     serving cold without persistence",
+                                    dir.display()
+                                );
+                                false
+                            }
+                        },
+                        None => true,
+                    };
+                    if restored {
+                        replay_wal(&mut drafter, &view.wal);
+                        match HistoryStore::open(dir) {
+                            Ok(store) => Some(store),
+                            Err(e) => {
+                                eprintln!(
+                                    "das-draftsvc: cannot open '{}' for writing ({e}); \
+                                     serving without persistence",
+                                    dir.display()
+                                );
+                                None
+                            }
+                        }
+                    } else {
+                        None
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "das-draftsvc: cannot read '{}' ({e}); serving without persistence",
+                        dir.display()
+                    );
+                    None
+                }
+            },
+        };
+        let listener = TcpListener::bind(addr)?;
+        let snapshot_every = (spec.snapshot_every.min(Epoch::MAX as usize) as Epoch).max(1);
+        Ok(DraftServer {
+            listener,
+            state: Arc::new(Mutex::new(ServerState {
+                drafter,
+                store,
+                snapshots: VecDeque::new(),
+                next_snapshot: 1,
+                snapshot_every,
+                epochs_since_snapshot: 0,
+                store_failures: 0,
+            })),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address ("127.0.0.1:PORT" after binding port 0).
+    pub fn local_addr(&self) -> String {
+        match self.listener.local_addr() {
+            Ok(a) => a.to_string(),
+            Err(_) => String::new(),
+        }
+    }
+
+    /// The fingerprint this server accepts (for logs / tests).
+    pub fn fingerprint(&self) -> Fingerprint {
+        let g = lock_state(&self.state);
+        Fingerprint {
+            window: g.drafter.window(),
+            match_len: g.drafter.match_len(),
+            max_depth: g.drafter.max_depth(),
+            scope: g.drafter.scope().as_str().to_string(),
+        }
+    }
+
+    /// WAL/snapshot commits that failed so far (durability degradations).
+    pub fn store_failures(&self) -> u64 {
+        lock_state(&self.state).store_failures
+    }
+
+    /// Accept loop: one handler thread per connection, until stopped by
+    /// a `Shutdown`/`Die` frame or [`DraftServer::stop`].
+    pub fn run(&self) {
+        for conn in self.listener.incoming() {
+            // SeqCst: the stop latch is a rare, cold flag — the simplest
+            // ordering keeps the accept loop trivially correct.
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let state = Arc::clone(&self.state);
+            let stop = Arc::clone(&self.stop);
+            let addr = self.local_addr();
+            std::thread::spawn(move || handle_conn(stream, &state, &stop, &addr));
+        }
+    }
+
+    /// Stop the accept loop from outside (tests, signal handlers).
+    pub fn stop(&self) {
+        // SeqCst: see run() — correctness over micro-cost on a cold path.
+        self.stop.store(true, Ordering::SeqCst);
+        wake_accept(&self.local_addr());
+    }
+}
+
+/// The accept loop only re-checks the stop latch when a connection
+/// lands; poke it with a throwaway dial so a stop takes effect now.
+fn wake_accept(addr: &str) {
+    if let Ok(stream) = TcpStream::connect(addr) {
+        drop(stream);
+    }
+}
+
+fn check_hello(state: &Arc<Mutex<ServerState>>, proto: &str, fp: &Fingerprint) -> Msg {
+    if proto != PROTOCOL {
+        return Msg::Err(format!("protocol '{proto}' not supported (server speaks {PROTOCOL})"));
+    }
+    let mut g = lock_state(state);
+    let want = Fingerprint {
+        window: g.drafter.window(),
+        match_len: g.drafter.match_len(),
+        max_depth: g.drafter.max_depth(),
+        scope: g.drafter.scope().as_str().to_string(),
+    };
+    if *fp != want {
+        return Msg::Err(format!(
+            "drafter fingerprint mismatch: client {fp:?} vs server {want:?} — \
+             remote drafts would not be bit-identical to local ones"
+        ));
+    }
+    Msg::HelloOk { epoch: g.drafter.epoch() }
+}
+
+fn apply_absorb(g: &mut ServerState, shard: ShardKey, epoch: Epoch, tokens: Vec<u32>) {
+    let problem = match shard {
+        ShardKey::Global => 0,
+        ShardKey::Problem(p) => p,
+    };
+    g.wal_append(&WalRecord::Absorb {
+        problem,
+        epoch,
+        tokens: tokens.clone(),
+    });
+    g.drafter.observe_rollout(&Rollout {
+        problem,
+        epoch,
+        step: 0,
+        tokens,
+        reward: 0.0,
+    });
+}
+
+fn apply_roll_epoch(g: &mut ServerState, epoch: Epoch) {
+    g.wal_append(&WalRecord::RollEpoch(epoch));
+    g.drafter.roll_epoch(epoch);
+    g.epochs_since_snapshot += 1;
+    if g.epochs_since_snapshot >= g.snapshot_every {
+        g.epochs_since_snapshot = 0;
+        let payload = g.drafter.save_state();
+        if let Some(store) = g.store.as_mut() {
+            if let Err(e) = store.commit_snapshot(&payload) {
+                g.store_failures += 1;
+                eprintln!("das-draftsvc: snapshot commit failed ({e}); WAL keeps accumulating");
+            }
+        }
+    }
+}
+
+fn run_batch(snap: &DrafterSnapshot, reqs: &[DraftReq]) -> Vec<Draft> {
+    reqs.iter()
+        .map(|req| {
+            let shard = match req.shard {
+                ShardKey::Global => None,
+                ShardKey::Problem(p) => Some(p),
+            };
+            snap.shard_draft(shard, &req.context, req.max_match, req.budget)
+        })
+        .collect()
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    state: &Arc<Mutex<ServerState>>,
+    stop: &Arc<AtomicBool>,
+    listen_addr: &str,
+) {
+    let _ = stream.set_nodelay(true);
+    let mut greeted = false;
+    loop {
+        // SeqCst: cold stop latch, simplest ordering (see run()).
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let msg = match read_frame(&mut stream) {
+            Ok(msg) => msg,
+            Err(StoreError::Io(_)) => return, // client hung up / died
+            Err(e) => {
+                // Corrupt frame: answer typed, then drop the connection —
+                // framing is lost, resync is the client's reconnect.
+                let _ = write_frame(&mut stream, &Msg::Err(format!("bad frame: {e}")));
+                return;
+            }
+        };
+        let reply = match msg {
+            Msg::Hello { proto, fp } => {
+                let reply = check_hello(state, &proto, &fp);
+                greeted = matches!(reply, Msg::HelloOk { .. });
+                reply
+            }
+            _ if !greeted => Msg::Err("handshake required before any other message".to_string()),
+            Msg::Absorb { shard, epoch, tokens } => {
+                let mut g = lock_state(state);
+                apply_absorb(&mut g, shard, epoch, tokens);
+                Msg::Ok
+            }
+            Msg::RollEpoch { epoch } => {
+                let mut g = lock_state(state);
+                apply_roll_epoch(&mut g, epoch);
+                Msg::Ok
+            }
+            Msg::Register { shard, tokens } => {
+                let mut g = lock_state(state);
+                g.wal_append(&WalRecord::Register {
+                    shard,
+                    tokens: tokens.clone(),
+                });
+                g.drafter.register_route(shard, &tokens);
+                Msg::Ok
+            }
+            Msg::Publish => {
+                let mut g = lock_state(state);
+                match g.publish() {
+                    Ok((snapshot, epoch)) => Msg::Published { snapshot, epoch },
+                    Err(e) => Msg::Err(e.to_string()),
+                }
+            }
+            Msg::DraftBatch { snapshot, reqs } => {
+                // Pin the Arc under the lock, draft outside it: concurrent
+                // batches read in parallel and never block a writer.
+                let pinned = {
+                    let mut g = lock_state(state);
+                    g.resolve(snapshot)
+                };
+                match pinned {
+                    Ok(snap) => Msg::Drafts {
+                        drafts: run_batch(&snap, &reqs),
+                    },
+                    Err(e) => Msg::Err(e.to_string()),
+                }
+            }
+            Msg::Shutdown => {
+                // SeqCst: cold stop latch (see run()).
+                stop.store(true, Ordering::SeqCst);
+                let _ = write_frame(&mut stream, &Msg::Ok);
+                wake_accept(listen_addr);
+                return;
+            }
+            Msg::Die => {
+                // Abrupt death for the chaos gate: no reply, no flush —
+                // the client sees a dead socket mid-RPC, exactly like a
+                // crashed daemon.
+                // SeqCst: cold stop latch (see run()).
+                stop.store(true, Ordering::SeqCst);
+                wake_accept(listen_addr);
+                return;
+            }
+            // Server-to-client shapes arriving here mean a confused peer.
+            Msg::HelloOk { .. } | Msg::Published { .. } | Msg::Drafts { .. } | Msg::Ok | Msg::Err(_) => {
+                Msg::Err("unexpected client frame".to_string())
+            }
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}

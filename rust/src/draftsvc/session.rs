@@ -1,0 +1,483 @@
+//! Client session: one shared TCP connection to a `das serve-drafts`
+//! daemon, with the full fault ladder in front of it.
+//!
+//! The ladder, in order: connect timeout → read timeout → bounded retry
+//! with deterministic backoff (`1 + spec.draft_retries` attempts, each on
+//! a fresh connection) → on exhaustion the call *degrades* — mutations
+//! are dropped, drafts come back empty, and the engine falls back to
+//! plain decoding exactly as it does for a poisoned local drafter. Three
+//! consecutive exhausted calls trip a fast-degrade breaker so a dead
+//! server costs one cheap check per call instead of a full retry ladder;
+//! any later success rearms the breaker. A fingerprint rejection at
+//! handshake (shard-geometry or protocol drift) is not transient and
+//! marks the session permanently dead.
+//!
+//! All connection state and every counter live behind one mutex: RPC
+//! traffic is serialized per session anyway (the engine's draft threads
+//! read published snapshots; only round-trips reach here), so there is
+//! nothing to win from lock-free counters and a single lock keeps the
+//! degrade bookkeeping trivially consistent. The per-call latency samples
+//! feed the `remote_draft_rpc_p50/p99` gauges, drained once per step.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::wire::{read_frame, write_frame, DraftReq, Fingerprint, Msg, ShardKey, PROTOCOL};
+use crate::drafter::Draft;
+use crate::store::wire::StoreError;
+use crate::tokens::{Epoch, TokenId};
+
+/// Consecutive exhausted RPCs before the fast-degrade breaker opens.
+const STRIKE_LIMIT: u32 = 3;
+/// Cap on buffered latency samples between drains (one step's worth of
+/// round-trips is far below this; the cap only bounds a pathological
+/// drain-free run).
+const MAX_LAT_SAMPLES: usize = 8192;
+
+/// One step's worth of remote-drafting telemetry, drained by the engine
+/// into the `remote_draft_*` gauges of `StepMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RemoteDraftStats {
+    /// Completed request/reply round-trips.
+    pub round_trips: u64,
+    /// Draft contexts carried inside those round-trips (batching ratio =
+    /// contexts / round-trips).
+    pub contexts: u64,
+    /// Read/connect timeouts observed (each consumes one retry attempt).
+    pub timeouts: u64,
+    /// Reconnect attempts after a broken or refused connection.
+    pub reconnects: u64,
+    /// Calls that exhausted the retry ladder and degraded.
+    pub degraded: u64,
+    /// Median round-trip latency in seconds (0 when no samples).
+    pub rpc_p50_s: f64,
+    /// p99 round-trip latency in seconds (0 when no samples).
+    pub rpc_p99_s: f64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    round_trips: u64,
+    contexts: u64,
+    timeouts: u64,
+    reconnects: u64,
+    degraded: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    stream: Option<TcpStream>,
+    /// Whether this session ever held a live connection — distinguishes
+    /// first dials from reconnects in the gauge family.
+    was_connected: bool,
+    /// Last epoch forwarded via `RollEpoch`; the drafter calls `on_epoch`
+    /// once per shard, the server rolls once per epoch.
+    last_epoch: Option<Epoch>,
+    /// Cached published snapshot id; invalidated by any mutation.
+    publish: Option<u64>,
+    /// Consecutive exhausted calls (fast-degrade breaker).
+    strikes: u32,
+    /// Permanently dead: the server rejected our handshake fingerprint.
+    dead: bool,
+    stats: Counters,
+    lat_us: Vec<u64>,
+}
+
+/// A shared client session; cheap to clone behind `Arc` across every
+/// shard-shaped [`super::RemoteDraftSource`] of one drafter.
+#[derive(Debug)]
+pub struct RemoteSession {
+    addr: String,
+    timeout: Duration,
+    retries: u32,
+    fp: Fingerprint,
+    inner: Mutex<Inner>,
+}
+
+impl RemoteSession {
+    /// Build a session. No I/O happens here — the first RPC dials.
+    pub fn new(addr: &str, timeout_ms: usize, retries: usize, fp: Fingerprint) -> RemoteSession {
+        RemoteSession {
+            addr: addr.to_string(),
+            timeout: Duration::from_millis(timeout_ms.max(1) as u64),
+            retries: retries.min(16) as u32,
+            fp,
+            inner: Mutex::new(Inner {
+                stream: None,
+                was_connected: false,
+                last_epoch: None,
+                publish: None,
+                strikes: 0,
+                dead: false,
+                stats: Counters::default(),
+                lat_us: Vec::new(),
+            }),
+        }
+    }
+
+    /// The configured daemon address (for logs and error messages).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A panic mid-RPC leaves at worst a stale stream, which the next
+        // call tears down and redials; the counters stay monotonic.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn resolve(&self) -> Result<SocketAddr, StoreError> {
+        self.addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| StoreError::Io(format!("draft_addr '{}' resolved to nothing", self.addr)))
+    }
+
+    /// Dial + handshake. On fingerprint rejection the session is marked
+    /// permanently dead by the caller (the error carries the detail).
+    fn dial(&self, g: &mut Inner) -> Result<(), StoreError> {
+        let sockaddr = self.resolve()?;
+        let mut stream = TcpStream::connect_timeout(&sockaddr, self.timeout)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        stream.set_nodelay(true)?;
+        write_frame(
+            &mut stream,
+            &Msg::Hello {
+                proto: PROTOCOL.to_string(),
+                fp: self.fp.clone(),
+            },
+        )?;
+        match read_frame(&mut stream)? {
+            Msg::HelloOk { .. } => {
+                g.stream = Some(stream);
+                g.was_connected = true;
+                Ok(())
+            }
+            Msg::Err(detail) => {
+                g.dead = true;
+                Err(StoreError::Mismatch(format!(
+                    "draft server at {} refused the handshake: {detail}",
+                    self.addr
+                )))
+            }
+            other => Err(StoreError::Corrupt(format!(
+                "unexpected handshake reply {other:?}"
+            ))),
+        }
+    }
+
+    fn is_timeout(err: &StoreError) -> bool {
+        // StoreError::Io carries the stringified io::Error; std's Display
+        // for WouldBlock/TimedOut is stable English. Only a gauge keys
+        // off this, never control flow.
+        match err {
+            StoreError::Io(s) => {
+                let s = s.to_ascii_lowercase();
+                s.contains("timed out") || s.contains("would block") || s.contains("temporarily unavailable")
+            }
+            _ => false,
+        }
+    }
+
+    /// One request/reply exchange with retry, reconnect, and degrade
+    /// accounting. Server-side `Err` replies surface as `Err` without
+    /// retry (the server understood and refused; retrying cannot help).
+    fn rpc(&self, g: &mut Inner, msg: &Msg) -> Result<Msg, StoreError> {
+        if g.dead {
+            g.stats.degraded += 1;
+            return Err(StoreError::Unsupported(
+                "remote draft session is permanently dead (handshake rejected)",
+            ));
+        }
+        if g.strikes >= STRIKE_LIMIT && g.stream.is_none() {
+            // Fast degrade: probe with a single dial so a revived server
+            // is eventually rediscovered, but a dead one costs one
+            // connect timeout per call instead of a full retry ladder.
+            g.stats.reconnects += 1;
+            if let Err(err) = self.dial(g) {
+                if Self::is_timeout(&err) {
+                    g.stats.timeouts += 1;
+                }
+                g.stats.degraded += 1;
+                return Err(err);
+            }
+        }
+        let attempts = 1 + self.retries;
+        let mut last = StoreError::Io("remote draft rpc never attempted".to_string());
+        for attempt in 0..attempts {
+            if g.stream.is_none() {
+                if g.was_connected || attempt > 0 {
+                    g.stats.reconnects += 1;
+                }
+                if let Err(err) = self.dial(g) {
+                    if g.dead {
+                        g.stats.degraded += 1;
+                        return Err(err);
+                    }
+                    if Self::is_timeout(&err) {
+                        g.stats.timeouts += 1;
+                    }
+                    last = err;
+                    self.backoff(attempt);
+                    continue;
+                }
+            }
+            let Some(stream) = g.stream.as_mut() else {
+                last = StoreError::Io("connection lost before send".to_string());
+                continue;
+            };
+            // audit: allow(wall-clock-determinism) -- RPC latency gauge only; never replayed or compared
+            let t0 = std::time::Instant::now();
+            let res = write_frame(stream, msg).and_then(|()| read_frame(stream));
+            match res {
+                Ok(Msg::Err(detail)) => {
+                    g.stats.round_trips += 1;
+                    g.strikes = 0;
+                    g.stats.degraded += 1;
+                    return Err(StoreError::Corrupt(format!(
+                        "draft server refused request: {detail}"
+                    )));
+                }
+                Ok(reply) => {
+                    g.stats.round_trips += 1;
+                    g.strikes = 0;
+                    if g.lat_us.len() < MAX_LAT_SAMPLES {
+                        let us = t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+                        g.lat_us.push(us);
+                    }
+                    return Ok(reply);
+                }
+                Err(err) => {
+                    if Self::is_timeout(&err) {
+                        g.stats.timeouts += 1;
+                    }
+                    g.stream = None;
+                    last = err;
+                    self.backoff(attempt);
+                }
+            }
+        }
+        g.strikes += 1;
+        g.stats.degraded += 1;
+        Err(last)
+    }
+
+    fn backoff(&self, attempt: u32) {
+        // Deterministic linear backoff, capped by the configured timeout
+        // so the worst-case ladder stays bounded by
+        // attempts * (timeout + backoff).
+        let step = Duration::from_millis(10 * u64::from(attempt) + 5);
+        std::thread::sleep(step.min(self.timeout));
+    }
+
+    /// Forward one absorbed rollout to the server shard. Failures degrade
+    /// silently: the server misses one history run, drafts stay correct
+    /// (losslessness never depends on drafter content).
+    pub fn absorb(&self, shard: ShardKey, epoch: Epoch, tokens: &[TokenId]) {
+        let mut g = self.lock();
+        g.publish = None;
+        let msg = Msg::Absorb {
+            shard,
+            epoch,
+            tokens: tokens.to_vec(),
+        };
+        let _ = self.rpc(&mut g, &msg);
+    }
+
+    /// Roll the server's epoch window. Deduplicated: the drafter fans
+    /// `on_epoch` out per shard, the server rolls once.
+    pub fn roll_epoch(&self, epoch: Epoch) {
+        let mut g = self.lock();
+        if g.last_epoch == Some(epoch) {
+            return;
+        }
+        g.publish = None;
+        if self.rpc(&mut g, &Msg::RollEpoch { epoch }).is_ok() {
+            g.last_epoch = Some(epoch);
+        }
+    }
+
+    /// Register a routed prefix → shard mapping on the server.
+    pub fn register(&self, shard: u32, tokens: &[TokenId]) {
+        let mut g = self.lock();
+        g.publish = None;
+        let msg = Msg::Register {
+            shard,
+            tokens: tokens.to_vec(),
+        };
+        let _ = self.rpc(&mut g, &msg);
+    }
+
+    /// Pin a published server snapshot and return its id. Cached until
+    /// the next mutation; 0 (the live view) on failure, which keeps
+    /// drafting correct and merely loosens the publish-time pinning.
+    pub fn publish(&self) -> u64 {
+        let mut g = self.lock();
+        if let Some(id) = g.publish {
+            return id;
+        }
+        match self.rpc(&mut g, &Msg::Publish) {
+            Ok(Msg::Published { snapshot, .. }) => {
+                g.publish = Some(snapshot);
+                snapshot
+            }
+            _ => 0,
+        }
+    }
+
+    /// Draft a batch of contexts in one round-trip. On any failure every
+    /// slot comes back [`Draft::empty`] — the degrade contract.
+    pub fn draft_batch(&self, snapshot: u64, reqs: Vec<DraftReq>) -> Vec<Draft> {
+        let n = reqs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut g = self.lock();
+        match self.rpc(&mut g, &Msg::DraftBatch { snapshot, reqs }) {
+            Ok(Msg::Drafts { drafts }) if drafts.len() == n => {
+                g.stats.contexts += n as u64;
+                drafts
+            }
+            _ => vec![Draft::empty(); n],
+        }
+    }
+
+    /// Draft a single context (the per-source path).
+    pub fn draft_one(
+        &self,
+        snapshot: u64,
+        shard: ShardKey,
+        context: &[TokenId],
+        max_match: usize,
+        budget: usize,
+    ) -> Draft {
+        let reqs = vec![DraftReq {
+            shard,
+            context: context.to_vec(),
+            max_match,
+            budget,
+        }];
+        self.draft_batch(snapshot, reqs)
+            .into_iter()
+            .next()
+            .unwrap_or_default()
+    }
+
+    /// Best-effort abrupt kill (chaos directive): tell the server to die
+    /// without replying, then drop our connection so the next call walks
+    /// the reconnect/degrade ladder for real.
+    pub fn send_die(&self) {
+        let mut g = self.lock();
+        if let Some(stream) = g.stream.as_mut() {
+            let _ = write_frame(stream, &Msg::Die);
+        }
+        g.stream = None;
+        g.publish = None;
+    }
+
+    /// Graceful server stop (waits for the `Ok` ack).
+    pub fn send_shutdown(&self) -> Result<(), StoreError> {
+        let mut g = self.lock();
+        match self.rpc(&mut g, &Msg::Shutdown) {
+            Ok(Msg::Ok) => Ok(()),
+            Ok(other) => Err(StoreError::Corrupt(format!(
+                "unexpected shutdown reply {other:?}"
+            ))),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// True once the handshake has been permanently rejected.
+    pub fn is_dead(&self) -> bool {
+        self.lock().dead
+    }
+
+    /// Drain the step's telemetry: counters reset to zero, latency
+    /// samples consumed into p50/p99.
+    pub fn drain_stats(&self) -> RemoteDraftStats {
+        let mut g = self.lock();
+        let c = std::mem::take(&mut g.stats);
+        let mut lat = std::mem::take(&mut g.lat_us);
+        lat.sort_unstable();
+        let quant = |q_num: usize, q_den: usize| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = (lat.len() * q_num / q_den).min(lat.len() - 1);
+            lat[idx] as f64 / 1e6
+        };
+        RemoteDraftStats {
+            round_trips: c.round_trips,
+            contexts: c.contexts,
+            timeouts: c.timeouts,
+            reconnects: c.reconnects,
+            degraded: c.degraded,
+            rpc_p50_s: quant(1, 2),
+            rpc_p99_s: quant(99, 100),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            window: 16,
+            match_len: 8,
+            max_depth: 72,
+            scope: "problem".to_string(),
+        }
+    }
+
+    #[test]
+    fn unreachable_server_degrades_to_empty_drafts_without_panicking() {
+        // Port 1 on loopback is essentially never listening; connect is
+        // refused immediately, so the ladder runs fast and deterministic.
+        let s = RemoteSession::new("127.0.0.1:1", 20, 1, fp());
+        let d = s.draft_one(0, ShardKey::Global, &[1, 2, 3], 8, 16);
+        assert!(d.is_empty());
+        s.absorb(ShardKey::Global, 0, &[1, 2, 3]);
+        s.roll_epoch(1);
+        assert_eq!(s.publish(), 0, "failed publish falls back to the live view");
+        let stats = s.drain_stats();
+        assert!(stats.degraded >= 4, "each failed call degrades: {stats:?}");
+        assert_eq!(stats.round_trips, 0);
+        assert_eq!(stats.contexts, 0);
+    }
+
+    #[test]
+    fn fast_degrade_breaker_opens_after_consecutive_failures() {
+        let s = RemoteSession::new("127.0.0.1:1", 20, 0, fp());
+        for _ in 0..(STRIKE_LIMIT + 2) {
+            let _ = s.draft_one(0, ShardKey::Global, &[1], 4, 8);
+        }
+        let g = s.lock();
+        assert!(g.strikes >= STRIKE_LIMIT, "breaker armed: {}", g.strikes);
+    }
+
+    #[test]
+    fn drain_stats_resets_counters() {
+        let s = RemoteSession::new("127.0.0.1:1", 20, 0, fp());
+        let _ = s.draft_one(0, ShardKey::Global, &[1], 4, 8);
+        let first = s.drain_stats();
+        assert!(first.degraded > 0);
+        let second = s.drain_stats();
+        assert_eq!(second, RemoteDraftStats::default());
+    }
+
+    #[test]
+    fn latency_quantiles_come_from_the_sorted_samples() {
+        let s = RemoteSession::new("127.0.0.1:1", 20, 0, fp());
+        {
+            let mut g = s.lock();
+            g.lat_us.extend([100u64, 200, 300, 400, 1000]);
+        }
+        let stats = s.drain_stats();
+        assert!((stats.rpc_p50_s - 300e-6).abs() < 1e-12, "{stats:?}");
+        assert!((stats.rpc_p99_s - 1000e-6).abs() < 1e-12, "{stats:?}");
+    }
+}

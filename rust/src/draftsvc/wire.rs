@@ -1,0 +1,538 @@
+//! `das-draft-rpc-v1` — the length-prefixed binary message codec of the
+//! distributed draft service.
+//!
+//! Frame layout on the wire (everything little-endian, mirroring the
+//! `das-store-v1` WAL frame):
+//!
+//! ```text
+//! [u32 body_len][u64 fnv1a(body)][body]
+//! ```
+//!
+//! The body is one message: a `u8` tag followed by tag-specific fields,
+//! encoded with the store codec ([`Writer`]/[`Reader`]), so every length
+//! is a checked prefix and every hostile count is rejected *before* any
+//! allocation sized by it. `body_len` itself is capped at [`MAX_FRAME`]
+//! for the same reason: a flipped high bit in the length prefix must come
+//! back as [`StoreError::Corrupt`], not as a 4 GiB allocation attempt.
+//!
+//! Message table (tag → payload → expected reply):
+//!
+//! | tag | message      | payload                                   | reply       |
+//! |-----|--------------|-------------------------------------------|-------------|
+//! | 1   | `Hello`      | proto string + drafter fingerprint        | `HelloOk`/`Err` |
+//! | 2   | `HelloOk`    | server epoch                              | —           |
+//! | 3   | `Absorb`     | shard key, epoch, token run               | `Ok`        |
+//! | 4   | `RollEpoch`  | epoch                                     | `Ok`        |
+//! | 5   | `Register`   | router shard id, token run                | `Ok`        |
+//! | 6   | `Publish`    | —                                         | `Published` |
+//! | 7   | `Published`  | snapshot id, epoch                        | —           |
+//! | 8   | `DraftBatch` | snapshot id (0 = live), N draft requests  | `Drafts`    |
+//! | 9   | `Drafts`     | N drafts (tokens, confidence, match_len)  | —           |
+//! | 10  | `Ok`         | —                                         | —           |
+//! | 11  | `Err`        | detail string                             | —           |
+//! | 12  | `Shutdown`   | — (graceful stop; server acks `Ok`)       | `Ok`        |
+//! | 13  | `Die`        | — (abrupt stop, no reply; chaos directive)| none        |
+//!
+//! A `DraftBatch` frame carries N contexts and its `Drafts` reply carries
+//! N drafts — one round-trip amortizes the framing and syscall cost across
+//! the whole batch (`benches/remote_draft.rs` measures the win).
+
+use crate::drafter::Draft;
+use crate::store::wire::{checksum, len_u32, Reader, StoreError, Writer};
+use crate::tokens::{Epoch, ProblemId, TokenId};
+
+/// Protocol identifier carried by `Hello`; a server speaking a different
+/// revision answers `Err` and the client degrades instead of misparsing.
+pub const PROTOCOL: &str = "das-draft-rpc-v1";
+
+/// Hard cap on one frame body. Anything larger is corrupt by definition
+/// (the largest legitimate frame is a draft batch of full-context
+/// requests, well under a mebibyte) and is rejected before allocation.
+pub const MAX_FRAME: usize = 1 << 24;
+
+/// Which server-side history shard a message addresses. The client's
+/// routing layer (scope rules, request-local indexes, the prefix router)
+/// stays client-side; the wire only ever names the storage shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardKey {
+    /// The single global shard (`global+request` scope).
+    Global,
+    /// The per-problem shard of `problem` / `problem+request` scopes.
+    Problem(ProblemId),
+}
+
+impl ShardKey {
+    fn encode(self, w: &mut Writer) {
+        match self {
+            ShardKey::Global => {
+                w.u8(0);
+                w.u32(0);
+            }
+            ShardKey::Problem(p) => {
+                w.u8(1);
+                w.u32(p);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<ShardKey, StoreError> {
+        let tag = r.u8()?;
+        let p = r.u32()?;
+        match tag {
+            0 => Ok(ShardKey::Global),
+            1 => Ok(ShardKey::Problem(p)),
+            t => Err(StoreError::Corrupt(format!("bad shard key tag {t}"))),
+        }
+    }
+}
+
+/// One draft request inside a `DraftBatch` frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DraftReq {
+    pub shard: ShardKey,
+    pub context: Vec<TokenId>,
+    pub max_match: usize,
+    pub budget: usize,
+}
+
+/// The drafter-shape fingerprint a client presents at handshake. The
+/// server refuses a client whose shard geometry differs from its own —
+/// a shard indexed under a different window or depth cap answers
+/// different drafts, and silent drift would break the remote ≡ local
+/// bit-identity contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub window: usize,
+    pub match_len: usize,
+    pub max_depth: usize,
+    pub scope: String,
+}
+
+/// One `das-draft-rpc-v1` message. See the module docs for the table.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello { proto: String, fp: Fingerprint },
+    HelloOk { epoch: Epoch },
+    Absorb { shard: ShardKey, epoch: Epoch, tokens: Vec<TokenId> },
+    RollEpoch { epoch: Epoch },
+    Register { shard: u32, tokens: Vec<TokenId> },
+    Publish,
+    Published { snapshot: u64, epoch: Epoch },
+    DraftBatch { snapshot: u64, reqs: Vec<DraftReq> },
+    Drafts { drafts: Vec<Draft> },
+    Ok,
+    Err(String),
+    Shutdown,
+    Die,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_OK: u8 = 2;
+const TAG_ABSORB: u8 = 3;
+const TAG_ROLL_EPOCH: u8 = 4;
+const TAG_REGISTER: u8 = 5;
+const TAG_PUBLISH: u8 = 6;
+const TAG_PUBLISHED: u8 = 7;
+const TAG_DRAFT_BATCH: u8 = 8;
+const TAG_DRAFTS: u8 = 9;
+const TAG_OK: u8 = 10;
+const TAG_ERR: u8 = 11;
+const TAG_SHUTDOWN: u8 = 12;
+const TAG_DIE: u8 = 13;
+
+/// Minimum encoded bytes of one `DraftReq` (shard 5 + empty token run 4 +
+/// two u64 fields) — the pre-allocation bound for the batch count.
+const MIN_REQ_BYTES: usize = 5 + 4 + 8 + 8;
+/// Minimum encoded bytes of one `Draft` (empty token run 4 + confidence
+/// count 8 + match_len 8).
+const MIN_DRAFT_BYTES: usize = 4 + 8 + 8;
+
+fn encode_draft(w: &mut Writer, d: &Draft) {
+    w.tokens(&d.tokens);
+    w.usize(d.confidence.len());
+    for &c in &d.confidence {
+        w.f64(f64::from(c));
+    }
+    w.usize(d.match_len);
+}
+
+fn decode_draft(r: &mut Reader<'_>) -> Result<Draft, StoreError> {
+    let tokens = r.tokens()?;
+    let n_conf = r.count(8)?;
+    let mut confidence = Vec::with_capacity(n_conf);
+    for _ in 0..n_conf {
+        confidence.push(r.f64()? as f32);
+    }
+    let match_len = r.usize()?;
+    Ok(Draft {
+        tokens,
+        confidence,
+        match_len,
+    })
+}
+
+impl Msg {
+    /// Serialize one message body (tag + fields, no frame header).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Msg::Hello { proto, fp } => {
+                w.u8(TAG_HELLO);
+                w.str(proto);
+                w.usize(fp.window);
+                w.usize(fp.match_len);
+                w.usize(fp.max_depth);
+                w.str(&fp.scope);
+            }
+            Msg::HelloOk { epoch } => {
+                w.u8(TAG_HELLO_OK);
+                w.u32(*epoch);
+            }
+            Msg::Absorb { shard, epoch, tokens } => {
+                w.u8(TAG_ABSORB);
+                shard.encode(&mut w);
+                w.u32(*epoch);
+                w.tokens(tokens);
+            }
+            Msg::RollEpoch { epoch } => {
+                w.u8(TAG_ROLL_EPOCH);
+                w.u32(*epoch);
+            }
+            Msg::Register { shard, tokens } => {
+                w.u8(TAG_REGISTER);
+                w.u32(*shard);
+                w.tokens(tokens);
+            }
+            Msg::Publish => w.u8(TAG_PUBLISH),
+            Msg::Published { snapshot, epoch } => {
+                w.u8(TAG_PUBLISHED);
+                w.u64(*snapshot);
+                w.u32(*epoch);
+            }
+            Msg::DraftBatch { snapshot, reqs } => {
+                w.u8(TAG_DRAFT_BATCH);
+                w.u64(*snapshot);
+                w.usize(reqs.len());
+                for req in reqs {
+                    req.shard.encode(&mut w);
+                    w.tokens(&req.context);
+                    w.usize(req.max_match);
+                    w.usize(req.budget);
+                }
+            }
+            Msg::Drafts { drafts } => {
+                w.u8(TAG_DRAFTS);
+                w.usize(drafts.len());
+                for d in drafts {
+                    encode_draft(&mut w, d);
+                }
+            }
+            Msg::Ok => w.u8(TAG_OK),
+            Msg::Err(detail) => {
+                w.u8(TAG_ERR);
+                w.str(detail);
+            }
+            Msg::Shutdown => w.u8(TAG_SHUTDOWN),
+            Msg::Die => w.u8(TAG_DIE),
+        }
+        w.into_bytes()
+    }
+
+    /// Parse one message body. Every malformation — truncation at any
+    /// byte, hostile counts, unknown tags, trailing bytes — is a typed
+    /// [`StoreError`], never a panic.
+    pub fn decode(body: &[u8]) -> Result<Msg, StoreError> {
+        let mut r = Reader::new(body);
+        let msg = match r.u8()? {
+            TAG_HELLO => Msg::Hello {
+                proto: r.str()?,
+                fp: Fingerprint {
+                    window: r.usize()?,
+                    match_len: r.usize()?,
+                    max_depth: r.usize()?,
+                    scope: r.str()?,
+                },
+            },
+            TAG_HELLO_OK => Msg::HelloOk { epoch: r.u32()? },
+            TAG_ABSORB => Msg::Absorb {
+                shard: ShardKey::decode(&mut r)?,
+                epoch: r.u32()?,
+                tokens: r.tokens()?,
+            },
+            TAG_ROLL_EPOCH => Msg::RollEpoch { epoch: r.u32()? },
+            TAG_REGISTER => Msg::Register {
+                shard: r.u32()?,
+                tokens: r.tokens()?,
+            },
+            TAG_PUBLISH => Msg::Publish,
+            TAG_PUBLISHED => Msg::Published {
+                snapshot: r.u64()?,
+                epoch: r.u32()?,
+            },
+            TAG_DRAFT_BATCH => {
+                let snapshot = r.u64()?;
+                let n = r.count(MIN_REQ_BYTES)?;
+                let mut reqs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    reqs.push(DraftReq {
+                        shard: ShardKey::decode(&mut r)?,
+                        context: r.tokens()?,
+                        max_match: r.usize()?,
+                        budget: r.usize()?,
+                    });
+                }
+                Msg::DraftBatch { snapshot, reqs }
+            }
+            TAG_DRAFTS => {
+                let n = r.count(MIN_DRAFT_BYTES)?;
+                let mut drafts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    drafts.push(decode_draft(&mut r)?);
+                }
+                Msg::Drafts { drafts }
+            }
+            TAG_OK => Msg::Ok,
+            TAG_ERR => Msg::Err(r.str()?),
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_DIE => Msg::Die,
+            t => return Err(StoreError::Corrupt(format!("unknown message tag {t}"))),
+        };
+        if !r.is_empty() {
+            return Err(StoreError::Corrupt(format!(
+                "trailing bytes after message ({} left)",
+                r.remaining()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+/// Write one framed message: length prefix, body checksum, body.
+pub fn write_frame(w: &mut impl std::io::Write, msg: &Msg) -> Result<(), StoreError> {
+    let body = msg.encode();
+    let mut frame = Vec::with_capacity(12 + body.len());
+    frame.extend_from_slice(&len_u32(body.len()).to_le_bytes());
+    frame.extend_from_slice(&checksum(&body).to_le_bytes());
+    frame.extend_from_slice(&body);
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message. The length cap is enforced before the body
+/// buffer is allocated, and the checksum before the body is parsed.
+pub fn read_frame(r: &mut impl std::io::Read) -> Result<Msg, StoreError> {
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head)?;
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    let want = u64::from_le_bytes([
+        head[4], head[5], head[6], head[7], head[8], head[9], head[10], head[11],
+    ]);
+    let len = usize::try_from(len)
+        .map_err(|_| StoreError::Corrupt(format!("frame length overflow: {len}")))?;
+    if len > MAX_FRAME {
+        return Err(StoreError::Corrupt(format!(
+            "frame length {len} exceeds the {MAX_FRAME}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    if checksum(&body) != want {
+        return Err(StoreError::Corrupt("frame checksum mismatch".into()));
+    }
+    Msg::decode(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_messages() -> Vec<Msg> {
+        vec![
+            Msg::Hello {
+                proto: PROTOCOL.to_string(),
+                fp: Fingerprint {
+                    window: 16,
+                    match_len: 8,
+                    max_depth: 72,
+                    scope: "problem".to_string(),
+                },
+            },
+            Msg::HelloOk { epoch: 3 },
+            Msg::Absorb {
+                shard: ShardKey::Problem(7),
+                epoch: 2,
+                tokens: vec![1, 2, 3, 4, 5],
+            },
+            Msg::Absorb {
+                shard: ShardKey::Global,
+                epoch: 0,
+                tokens: vec![],
+            },
+            Msg::RollEpoch { epoch: 9 },
+            Msg::Register {
+                shard: 42,
+                tokens: vec![5, 6, 7],
+            },
+            Msg::Publish,
+            Msg::Published { snapshot: 11, epoch: 4 },
+            Msg::DraftBatch {
+                snapshot: 11,
+                reqs: vec![
+                    DraftReq {
+                        shard: ShardKey::Problem(1),
+                        context: vec![10, 11, 12],
+                        max_match: 8,
+                        budget: 16,
+                    },
+                    DraftReq {
+                        shard: ShardKey::Global,
+                        context: vec![],
+                        max_match: 0,
+                        budget: 0,
+                    },
+                ],
+            },
+            Msg::Drafts {
+                drafts: vec![
+                    Draft {
+                        tokens: vec![13, 14],
+                        confidence: vec![0.5, 0.25],
+                        match_len: 3,
+                    },
+                    Draft::empty(),
+                ],
+            },
+            Msg::Ok,
+            Msg::Err("unknown snapshot".to_string()),
+            Msg::Shutdown,
+            Msg::Die,
+        ]
+    }
+
+    fn frame_bytes(msg: &Msg) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, msg).expect("vec write cannot fail");
+        out
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for msg in sample_messages() {
+            let body = msg.encode();
+            assert_eq!(Msg::decode(&body).expect("decode"), msg);
+            let frame = frame_bytes(&msg);
+            let got = read_frame(&mut &frame[..]).expect("framed roundtrip");
+            assert_eq!(got, msg, "framed roundtrip");
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_typed_error_never_a_panic() {
+        for msg in sample_messages() {
+            let body = msg.encode();
+            for cut in 0..body.len() {
+                assert!(
+                    Msg::decode(&body[..cut]).is_err(),
+                    "{msg:?}: body cut at {cut} must error"
+                );
+            }
+            let frame = frame_bytes(&msg);
+            for cut in 0..frame.len() {
+                assert!(
+                    read_frame(&mut &frame[..cut]).is_err(),
+                    "{msg:?}: frame cut at {cut} must error"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_bit_flips_never_decode_to_the_original() {
+        // Every bit of every sample frame: a flip must surface as a typed
+        // error (length/checksum/decode), never as the original message
+        // and never as a panic. The checksum covers the whole body, so
+        // body flips are always caught; header flips corrupt the length
+        // or the checksum itself.
+        for msg in sample_messages() {
+            let frame = frame_bytes(&msg);
+            for byte in 0..frame.len() {
+                for bit in 0..8 {
+                    let mut bad = frame.clone();
+                    bad[byte] ^= 1 << bit;
+                    match read_frame(&mut &bad[..]) {
+                        Err(_) => {}
+                        Ok(got) => {
+                            assert_ne!(got, msg, "flip {byte}.{bit} went unnoticed");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        for msg in sample_messages() {
+            let mut body = msg.encode();
+            body.push(0);
+            match Msg::decode(&body) {
+                Err(StoreError::Corrupt(d)) => {
+                    assert!(d.contains("trailing"), "{d}");
+                }
+                other => panic!("{msg:?}: expected Corrupt(trailing), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_rejected_before_allocation() {
+        // A frame header claiming a 4 GiB body must be refused from the
+        // 12 header bytes alone.
+        let mut head = Vec::new();
+        head.extend_from_slice(&u32::MAX.to_le_bytes());
+        head.extend_from_slice(&0u64.to_le_bytes());
+        match read_frame(&mut &head[..]) {
+            Err(StoreError::Corrupt(d)) => assert!(d.contains("cap"), "{d}"),
+            other => panic!("expected Corrupt(cap), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_interior_counts_are_rejected_before_allocation() {
+        // A DraftBatch body claiming u64::MAX requests in 8 spare bytes.
+        let mut w = Writer::new();
+        w.u8(8); // TAG_DRAFT_BATCH
+        w.u64(0);
+        w.u64(u64::MAX);
+        assert!(matches!(
+            Msg::decode(w.as_bytes()),
+            Err(StoreError::Truncated) | Err(StoreError::Corrupt(_))
+        ));
+        // Same for a Drafts body.
+        let mut w = Writer::new();
+        w.u8(9); // TAG_DRAFTS
+        w.u64(u64::MAX);
+        assert!(matches!(
+            Msg::decode(w.as_bytes()),
+            Err(StoreError::Truncated) | Err(StoreError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_tags_and_bad_shard_keys_are_corrupt() {
+        assert!(matches!(Msg::decode(&[200]), Err(StoreError::Corrupt(_))));
+        let mut w = Writer::new();
+        w.u8(3); // TAG_ABSORB
+        w.u8(9); // bad shard key tag
+        w.u32(0);
+        w.u32(0);
+        w.tokens(&[]);
+        assert!(matches!(Msg::decode(w.as_bytes()), Err(StoreError::Corrupt(_))));
+    }
+
+    #[test]
+    fn empty_body_is_truncated_not_a_panic() {
+        assert!(Msg::decode(&[]).is_err());
+    }
+}

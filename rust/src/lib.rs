@@ -28,6 +28,7 @@ pub mod workload;
 pub mod rl;
 pub mod figures;
 pub mod drafter;
+pub mod draftsvc;
 pub mod spec;
 pub mod store;
 pub mod suffix;

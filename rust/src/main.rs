@@ -4,6 +4,7 @@
 //!   figures    regenerate the paper's figures (CSV + printed tables)
 //!   train      run RL training (sim or pjrt backend) with a config
 //!   serve      rollout-only generation over a trace workload
+//!   serve-drafts  draft daemon: serve DraftSource RPCs (das-draft-rpc-v1)
 //!   calibrate  fit the latency model on the real PJRT artifacts (Fig. 8)
 //!   config     print the resolved configuration for a preset/file
 //!   store      inspect/verify/compact a persistent history store
@@ -32,6 +33,7 @@ fn main() {
         Some("figures") => cmd_figures(&argv[1..]),
         Some("train") => cmd_train(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("serve-drafts") => cmd_serve_drafts(&argv[1..]),
         Some("calibrate") => cmd_calibrate(&argv[1..]),
         Some("config") => cmd_config(&argv[1..]),
         Some("store") => cmd_store(&argv[1..]),
@@ -61,6 +63,8 @@ fn print_usage() {
            train      [--config file.json] [--preset name] [--set k=v] [--steps N] [--out results]\n\
                       [--fault-plan \"panic worker=1 step=2; ...\"] [--workers N]  (chaos harness)\n\
            serve      [--preset name] [--steps N] (rollout-only, trace workload)\n\
+           serve-drafts  [--dir store] [--addr host:port] [--preset name] [--set k=v]\n\
+                      (draft daemon for spec.substrate=remote clients)\n\
            calibrate  [--reps N] (requires `make artifacts`)\n\
            config     [--preset name | --config file.json]\n\
            store      <inspect|verify|compact> --dir <store-dir>\n\
@@ -304,6 +308,9 @@ fn run_chaos_harness(mut cfg: DasConfig, plan: &str, workers: usize) -> Result<(
             totals.store_failures += m.store_failures;
             totals.preemptions += m.preemptions;
             totals.resume_budget_boost = totals.resume_budget_boost.max(m.resume_budget_boost);
+            totals.remote_round_trips += m.remote_round_trips;
+            totals.remote_timeouts += m.remote_timeouts;
+            totals.remote_degraded += m.remote_degraded;
         }
         println!(
             "step {:>3}  {}  rollouts {:>4}  restarts {}  redispatched {}  steals {}  \
@@ -347,6 +354,28 @@ fn run_chaos_harness(mut cfg: DasConfig, plan: &str, workers: usize) -> Result<(
         "fault directives never fired (out-of-range worker/step/epoch?): {}",
         unfired.join("; ")
     );
+    if parsed.kill_draftsvc_count() > 0 {
+        // A fired kill-draftsvc directive must leave its footprint: remote
+        // calls degrading to plain decoding after the daemon died. (The
+        // output-equivalence check above already proved degradation was
+        // lossless.) Requires spec.substrate=remote — under a local
+        // substrate the directive fires but there is no daemon to lose.
+        anyhow::ensure!(
+            totals.remote_round_trips > 0 && totals.remote_degraded > 0,
+            "kill-draftsvc directive fired but left no remote footprint \
+             (round-trips {}, timeouts {}, degraded {} — is \
+             spec.substrate=remote with a live daemon at spec.draft_addr? \
+             a daemon that was never reachable degrades everything and \
+             proves nothing about the kill)",
+            totals.remote_round_trips,
+            totals.remote_timeouts,
+            totals.remote_degraded
+        );
+        println!(
+            "remote footprint: {} round-trips, {} timeouts, {} degraded calls",
+            totals.remote_round_trips, totals.remote_timeouts, totals.remote_degraded
+        );
+    }
     if parsed.preempt_count() > 0 {
         // A fired preempt directive must leave its full footprint: a frozen
         // chunk, migrated checkpoints, and the escalated-budget gauge.
@@ -400,6 +429,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "served {toks} tokens in {total:.3}s model-time ({:.0} tok/s)",
         toks as f64 / total.max(1e-9)
     );
+    Ok(())
+}
+
+/// `das serve-drafts`: run the draft daemon — one `SuffixDrafter` (plus an
+/// optional persistent store it warm-starts from and WAL-logs into) behind
+/// the das-draft-rpc-v1 wire protocol, serving `spec.substrate = "remote"`
+/// training runs. Blocks until a client sends `Shutdown`/`Die`.
+fn cmd_serve_drafts(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("das serve-drafts", "draft daemon (das-draft-rpc-v1)")
+        .opt("config", "JSON config file", None)
+        .opt("preset", "named preset", Some("math_rl"))
+        .opt("set", "single key=value override", None)
+        .opt("dir", "persistent store directory (warm start + WAL; omit for in-memory)", None)
+        .opt("addr", "listen address (use port 0 for an ephemeral port)", Some("127.0.0.1:7831"));
+    let args = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    let cfg = load_config(&args)?;
+    let dir = args.get("dir").map(Path::new);
+    let addr = args.get_or("addr", "127.0.0.1:7831");
+    let server = das::draftsvc::DraftServer::bind(&cfg.spec, dir, addr)?;
+    let fp = server.fingerprint();
+    println!(
+        "das serve-drafts: listening on {} ({}; window {}, match_len {}, \
+         max_depth {}, scope {}, store {})",
+        server.local_addr(),
+        das::draftsvc::PROTOCOL,
+        fp.window,
+        fp.match_len,
+        fp.max_depth,
+        fp.scope,
+        dir.map(|d| d.display().to_string()).unwrap_or_else(|| "none".into()),
+    );
+    server.run();
+    let failures = server.store_failures();
+    anyhow::ensure!(
+        failures == 0,
+        "serve-drafts stopped with {failures} store write failure(s) — \
+         run `das store verify --dir <dir>` before reusing the store"
+    );
+    println!("das serve-drafts: stopped cleanly");
     Ok(())
 }
 

@@ -481,6 +481,12 @@ impl RolloutEngine {
     ) -> StepReport {
         // audit: allow(wall-clock-determinism) -- gen_time gauge only; decode never reads it
         let wall_start = Instant::now();
+        // Chaos seam: a `kill-draftsvc step=S` directive murders the draft
+        // daemon before this step drafts anything, so the whole step
+        // exercises the timeout → retry → degrade ladder.
+        if self.faults.should_kill_draftsvc(step) {
+            self.drafter.kill_remote();
+        }
         model.reset_clock();
         let fwd0 = model.forward_passes();
         let mut metrics = StepMetrics::default();
@@ -817,6 +823,17 @@ impl RolloutEngine {
         // Surface store failures exactly once, including those from epoch
         // rolls between steps.
         metrics.store_failures = std::mem::take(&mut self.pending_store_failures);
+        // Remote draft service counters (drained per step; zero for local
+        // substrates, where `remote_stats` returns None).
+        if let Some(rs) = self.drafter.remote_stats() {
+            metrics.remote_round_trips = rs.round_trips;
+            metrics.remote_contexts = rs.contexts;
+            metrics.remote_timeouts = rs.timeouts;
+            metrics.remote_reconnects = rs.reconnects;
+            metrics.remote_degraded = rs.degraded;
+            metrics.remote_rpc_p50_s = rs.rpc_p50_s;
+            metrics.remote_rpc_p99_s = rs.rpc_p99_s;
+        }
         // All passes this engine saw belong to this step's rounds.
         debug_assert_eq!(model.forward_passes() - fwd0, metrics.rounds);
         StepReport {

@@ -17,10 +17,11 @@
 //! poison-draft step=5            # one drafter call panics at step 5
 //! preempt worker=0 step=1        # worker 0 freezes + migrates its in-flight chunk at step 1
 //! poison-host step=2             # one draft-reader HOST thread panics at step 2
+//! kill-draftsvc step=2           # the remote draft daemon dies before step 2 drafts
 //! ```
 //!
-//! `panic`, `delay`, `poison-draft`, `preempt` and `poison-host` are
-//! one-shot: a per-entry atomic flag
+//! `panic`, `delay`, `poison-draft`, `preempt`, `poison-host` and
+//! `kill-draftsvc` are one-shot: a per-entry atomic flag
 //! marks them fired, so a respawned worker sharing the plan (the pool hands
 //! every incarnation the same `Arc<FaultPlan>`) does not re-trigger the
 //! injection and panic-loop. `store-fail` is level-triggered — every store
@@ -49,6 +50,11 @@ enum Fault {
     /// per-request `catch_unwind`, so it exercises the thread-join
     /// degradation path rather than the per-request ladder.
     PoisonHost { step: u32 },
+    /// Kill the remote draft daemon (`das serve-drafts`) before `step`
+    /// drafts anything — the engine sends a `Die` frame, so the rest of
+    /// the run exercises the timeout → retry → degrade ladder. No-op
+    /// under local substrates (there is no daemon to kill).
+    KillDraftsvc { step: u32 },
 }
 
 impl fmt::Display for Fault {
@@ -64,6 +70,7 @@ impl fmt::Display for Fault {
                 write!(f, "preempt worker={worker} step={step}")
             }
             Fault::PoisonHost { step } => write!(f, "poison-host step={step}"),
+            Fault::KillDraftsvc { step } => write!(f, "kill-draftsvc step={step}"),
         }
     }
 }
@@ -149,10 +156,14 @@ impl FaultPlan {
                 "poison-host" => Fault::PoisonHost {
                     step: step_u32(take_key(&mut kv, "step", directive)?)?,
                 },
+                "kill-draftsvc" => Fault::KillDraftsvc {
+                    step: step_u32(take_key(&mut kv, "step", directive)?)?,
+                },
                 other => {
                     return Err(format!(
                         "unknown fault kind '{other}' (known: panic, delay, \
-                         store-fail, poison-draft, preempt, poison-host)"
+                         store-fail, poison-draft, preempt, poison-host, \
+                         kill-draftsvc)"
                     ))
                 }
             };
@@ -226,6 +237,23 @@ impl FaultPlan {
     pub fn should_poison_host(&self, step: u32) -> bool {
         self.fire_first(|f| matches!(f, Fault::PoisonHost { step: s } if *s == step))
             .is_some()
+    }
+
+    /// One-shot: true exactly once for a matching `kill-draftsvc`
+    /// directive.
+    pub fn should_kill_draftsvc(&self, step: u32) -> bool {
+        self.fire_first(|f| matches!(f, Fault::KillDraftsvc { step: s } if *s == step))
+            .is_some()
+    }
+
+    /// How many `kill-draftsvc` directives the plan carries (fired or
+    /// not) — the chaos harness uses this to decide whether it must
+    /// assert on the remote-degradation footprint.
+    pub fn kill_draftsvc_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e.fault, Fault::KillDraftsvc { .. }))
+            .count()
     }
 
     /// How many `preempt` directives the plan carries (fired or not) — the
@@ -319,12 +347,14 @@ mod tests {
         let p = FaultPlan::parse(
             "panic worker=1 step=3; delay worker=0 step=2 ms=40; \
              store-fail epoch=2; poison-draft step=5; \
-             preempt worker=0 step=1; poison-host step=2",
+             preempt worker=0 step=1; poison-host step=2; \
+             kill-draftsvc step=2",
         )
         .unwrap();
-        assert_eq!(p.len(), 6);
-        assert_eq!(p.unfired().len(), 6);
+        assert_eq!(p.len(), 7);
+        assert_eq!(p.unfired().len(), 7);
         assert_eq!(p.preempt_count(), 1);
+        assert_eq!(p.kill_draftsvc_count(), 1);
         p.disarm_drop_audit();
     }
 
@@ -396,6 +426,17 @@ mod tests {
         assert!(!p.should_poison_host(1));
         assert!(p.should_poison_host(2));
         assert!(!p.should_poison_host(2), "consumed");
+    }
+
+    #[test]
+    fn kill_draftsvc_fires_once() {
+        let p = FaultPlan::parse("kill-draftsvc step=2").unwrap();
+        assert_eq!(p.kill_draftsvc_count(), 1);
+        assert!(!p.should_kill_draftsvc(1), "wrong step");
+        assert!(p.should_kill_draftsvc(2));
+        assert!(!p.should_kill_draftsvc(2), "consumed — the daemon dies once");
+        assert_eq!(p.kill_draftsvc_count(), 1, "count is static, not fired-state");
+        assert!(p.unfired().is_empty());
     }
 
     #[test]

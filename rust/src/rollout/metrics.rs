@@ -92,6 +92,24 @@ pub struct StepMetrics {
     /// was as good as an oracle packing, higher = makespan left on the
     /// table by stragglers. 0 until the coordinator computes it.
     pub makespan_vs_oracle: f64,
+
+    // --- remote draft service (all zero unless spec.substrate = "remote") ---
+    /// RPC round-trips completed against the `das serve-drafts` daemon.
+    pub remote_round_trips: u64,
+    /// Draft contexts answered remotely (batched requests count each
+    /// context, so this / `remote_round_trips` is the realized batch size).
+    pub remote_contexts: u64,
+    /// Remote RPC attempts that hit the connect/read/write deadline.
+    pub remote_timeouts: u64,
+    /// Successful re-dials after a lost or failed connection.
+    pub remote_reconnects: u64,
+    /// Remote calls that exhausted the retry ladder (or hit a dead
+    /// session) and degraded to plain decoding.
+    pub remote_degraded: u64,
+    /// RPC latency quantiles over this step's round-trips, in seconds
+    /// (gauges; 0 until remote traffic happens).
+    pub remote_rpc_p50_s: f64,
+    pub remote_rpc_p99_s: f64,
 }
 
 impl StepMetrics {
@@ -172,6 +190,15 @@ impl StepMetrics {
         // Per-step gauges, not fleet totals: keep the worst observation.
         self.resume_budget_boost = self.resume_budget_boost.max(other.resume_budget_boost);
         self.makespan_vs_oracle = self.makespan_vs_oracle.max(other.makespan_vs_oracle);
+        self.remote_round_trips += other.remote_round_trips;
+        self.remote_contexts += other.remote_contexts;
+        self.remote_timeouts += other.remote_timeouts;
+        self.remote_reconnects += other.remote_reconnects;
+        self.remote_degraded += other.remote_degraded;
+        // Latency quantiles are per-session gauges; the merged view keeps
+        // the slowest session (the one gating step latency).
+        self.remote_rpc_p50_s = self.remote_rpc_p50_s.max(other.remote_rpc_p50_s);
+        self.remote_rpc_p99_s = self.remote_rpc_p99_s.max(other.remote_rpc_p99_s);
     }
 }
 
@@ -251,6 +278,38 @@ mod tests {
         assert_eq!(a.store_failures, 1);
         assert_eq!(a.preemptions, 3);
         assert_eq!(a.migrated_requests, 7);
+    }
+
+    #[test]
+    fn merge_combines_remote_draft_metrics() {
+        let mut a = StepMetrics {
+            remote_round_trips: 4,
+            remote_contexts: 16,
+            remote_timeouts: 1,
+            remote_reconnects: 1,
+            remote_degraded: 0,
+            remote_rpc_p50_s: 0.002,
+            remote_rpc_p99_s: 0.010,
+            ..Default::default()
+        };
+        let b = StepMetrics {
+            remote_round_trips: 2,
+            remote_contexts: 2,
+            remote_timeouts: 0,
+            remote_reconnects: 0,
+            remote_degraded: 3,
+            remote_rpc_p50_s: 0.001,
+            remote_rpc_p99_s: 0.030,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.remote_round_trips, 6);
+        assert_eq!(a.remote_contexts, 18);
+        assert_eq!(a.remote_timeouts, 1);
+        assert_eq!(a.remote_reconnects, 1);
+        assert_eq!(a.remote_degraded, 3);
+        assert!((a.remote_rpc_p50_s - 0.002).abs() < 1e-12, "slowest session wins");
+        assert!((a.remote_rpc_p99_s - 0.030).abs() < 1e-12);
     }
 
     #[test]
